@@ -1,0 +1,85 @@
+//! Hybrid inference across all three backends (requires `make artifacts`).
+//!
+//! ```bash
+//! cargo run --release --example hybrid_inference -- [n_images]
+//! ```
+//!
+//! Loads the trained hybrid network and the shared test set, classifies
+//! the same images on:
+//!   * the bit-exact rust reference model,
+//!   * the cycle-level simulator (also reporting device cycles),
+//!   * the PJRT runtime executing the AOT-compiled JAX/Pallas graph,
+//! and cross-checks that all three agree.
+
+use beanna::bf16::Matrix;
+use beanna::coordinator::Backend;
+use beanna::data::SynthMnist;
+use beanna::io::ArtifactPaths;
+use beanna::nn::Network;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let paths = ArtifactPaths::discover();
+    let test = SynthMnist::load(&paths.dataset())?;
+    let net = Network::load(&paths.weights("hybrid"))?;
+    let n = n.min(test.len()).min(16); // pjrt artifact is compiled at b=16
+    println!("classifying {n} test images on three backends…");
+
+    let mut images = Matrix::zeros(16, 784);
+    for i in 0..n {
+        images.row_mut(i).copy_from_slice(test.images.row(i));
+    }
+
+    let mut backends = vec![
+        ("ref", Backend::Reference { net: net.clone() }),
+        ("sim", Backend::simulator(net.clone())),
+        ("pjrt", Backend::pjrt(&paths, "hybrid", 16)?),
+    ];
+
+    let mut all_preds: Vec<(&str, Vec<usize>, Option<u64>, std::time::Duration)> = Vec::new();
+    for (name, backend) in backends.iter_mut() {
+        let t0 = std::time::Instant::now();
+        let out = backend.run_batch(&images)?;
+        let host = t0.elapsed();
+        let preds: Vec<usize> = (0..n)
+            .map(|r| beanna::nn::argmax(out.logits.row(r)))
+            .collect();
+        all_preds.push((name, preds, out.sim_cycles, host));
+    }
+
+    println!(
+        "\n{:<6} {:>10} {:>16} {:>14}",
+        "image", "label", "ref/sim/pjrt", "agree"
+    );
+    let mut correct = 0;
+    for i in 0..n {
+        let (r, s, p) = (all_preds[0].1[i], all_preds[1].1[i], all_preds[2].1[i]);
+        let agree = r == s && s == p;
+        if r == test.labels[i] {
+            correct += 1;
+        }
+        println!(
+            "{:<6} {:>10} {:>16} {:>14}",
+            i,
+            test.labels[i],
+            format!("{r}/{s}/{p}"),
+            if agree { "yes" } else { "MISMATCH" }
+        );
+        anyhow::ensure!(agree, "backends disagreed on image {i}");
+    }
+    println!("\nreference accuracy on these images: {correct}/{n}");
+    for (name, _, cycles, host) in &all_preds {
+        match cycles {
+            Some(c) => println!(
+                "{name}: host {host:?}, {c} device cycles → {:.1} inf/s @ 100 MHz",
+                n as f64 / (*c as f64 / beanna::CLOCK_HZ as f64)
+            ),
+            None => println!("{name}: host {host:?}"),
+        }
+    }
+    println!("\nall backends agree ✓");
+    Ok(())
+}

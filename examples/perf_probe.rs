@@ -1,0 +1,43 @@
+//! Scratch perf probe (see EXPERIMENTS.md §Perf). Measures the L3
+//! functional hot path and the PJRT artifact execution latency.
+use beanna::bf16::Matrix;
+use beanna::io::ArtifactPaths;
+use beanna::nn::{Network, NetworkConfig};
+use beanna::runtime::ModelRegistry;
+use beanna::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let a = Matrix::from_vec(256, 1024, rng.normal_vec(256 * 1024))?;
+    let w = Matrix::from_vec(1024, 1024, rng.normal_vec(1024 * 1024))?;
+    let t0 = std::time::Instant::now();
+    std::hint::black_box(a.matmul_bf16_blocked_t(&w, 16)?);
+    let dt = t0.elapsed();
+    println!(
+        "L3 bf16 blocked_t 256x1024x1024: {:?} ({:.2} GMAC/s)",
+        dt,
+        256.0 * 1024.0 * 1024.0 / dt.as_secs_f64() / 1e9
+    );
+    let net = Network::random(&NetworkConfig::beanna_fp(), 1);
+    let x = Matrix::from_vec(256, 784, rng.normal_vec(256 * 784))?;
+    let t0 = std::time::Instant::now();
+    std::hint::black_box(net.forward(&x)?);
+    println!("fp network fwd b256: {:?}", t0.elapsed());
+
+    // PJRT artifact latency (needs `make artifacts`).
+    let paths = ArtifactPaths::discover();
+    if paths.hlo("hybrid", 16).exists() {
+        let mut reg = ModelRegistry::new(paths)?;
+        for variant in ["hybrid", "fp"] {
+            let exe = reg.get(variant, 16)?;
+            let img = Matrix::zeros(16, 784);
+            exe.run(&img)?; // warm
+            let t0 = std::time::Instant::now();
+            for _ in 0..5 {
+                std::hint::black_box(exe.run(&img)?);
+            }
+            println!("pjrt {variant} b16: {:?}/batch", t0.elapsed() / 5);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: the whole stack in one file, no artifacts required.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! 1. Prints Fig. 1 (why bfloat16).
+//! 2. Generates a few synthetic-MNIST digits and shows one.
+//! 3. Builds the paper's hybrid network (random weights) and runs a
+//!    batch through the cycle-level BEANNA simulator — reporting
+//!    cycles, the §III-D phase breakdown, and inferences/second.
+//! 4. Shows the Table II hardware model.
+
+use beanna::bf16::format::render_fig1;
+use beanna::data::SynthMnist;
+use beanna::experiments;
+use beanna::nn::{Network, NetworkConfig};
+use beanna::sim::{Accelerator, AcceleratorConfig};
+
+fn main() -> anyhow::Result<()> {
+    println!("{}", render_fig1());
+
+    // -- a look at the data -------------------------------------------------
+    let data = SynthMnist::generate(64, 42);
+    println!(
+        "synthetic MNIST: {} images, first label = {}\n{}",
+        data.len(),
+        data.labels[0],
+        data.ascii_art(0)
+    );
+
+    // -- the hybrid network on the simulated device -------------------------
+    let net = Network::random(&NetworkConfig::beanna_hybrid(), 7);
+    let mut accel = Accelerator::new(AcceleratorConfig::default());
+    let report = accel.run_network(&net, data.images_f32(), data.len())?;
+    println!(
+        "BEANNA hybrid, batch {}: {} cycles  →  {:.1} inferences/s @ 100 MHz",
+        report.batch,
+        report.total_cycles,
+        report.inferences_per_sec(beanna::CLOCK_HZ)
+    );
+    println!("phase breakdown: {}", report.breakdown.summary());
+    for layer in &report.layers {
+        println!(
+            "  layer {}: {:?} mode, {} n-blocks × {} k-blocks, {} cycles",
+            layer.index,
+            layer.mode,
+            layer.schedule.n_blocks,
+            layer.schedule.k_blocks,
+            layer.timing.total()
+        );
+    }
+
+    // -- the hardware models --------------------------------------------------
+    println!("\n{}", experiments::table2());
+    println!("{}", experiments::peak_throughput_table()?);
+    println!("(train weights with `make artifacts` to unlock Table I accuracy,");
+    println!(" Fig. 2, and the PJRT runtime — see README.md)");
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Batched serving demo: the coordinator under open-loop load.
+//!
+//! ```bash
+//! cargo run --release --example serve_batch -- [requests] [max_batch]
+//! ```
+//!
+//! Starts the inference server on the reference backend (artifacts
+//! required for trained weights; falls back to random weights), issues
+//! requests from multiple client threads, and prints the batching
+//! behaviour and latency distribution — the systems-level view of the
+//! paper's batch-1 vs batch-256 comparison.
+
+use std::time::Duration;
+
+use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::data::SynthMnist;
+use beanna::experiments;
+use beanna::io::ArtifactPaths;
+
+fn main() -> anyhow::Result<()> {
+    let requests: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2048);
+    let max_batch: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(256);
+
+    let paths = ArtifactPaths::discover();
+    let (net, trained) = experiments::load_variant(&paths, "hybrid");
+    let test = SynthMnist::load(&paths.dataset())
+        .unwrap_or_else(|_| SynthMnist::generate(1024, 1));
+    println!(
+        "serving {requests} requests (max batch {max_batch}, weights: {})",
+        if trained { "trained" } else { "random" }
+    );
+
+    let server = Server::start(
+        Backend::Reference { net },
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: Duration::from_millis(2),
+            },
+        },
+    );
+
+    // Open-loop load: submit asynchronously in waves (deep queue → the
+    // batcher can actually fill batches), collect per wave.
+    let t0 = std::time::Instant::now();
+    let wave = (max_batch * 4).max(64);
+    let mut total = 0usize;
+    let mut correct = 0usize;
+    let mut batch_sizes: Vec<usize> = Vec::new();
+    while total < requests {
+        let count = wave.min(requests - total);
+        let rxs: Vec<_> = (0..count)
+            .map(|i| {
+                let idx = (total + i) % test.len();
+                (idx, server.submit(test.images.row(idx).to_vec()).unwrap())
+            })
+            .collect();
+        for (idx, rx) in rxs {
+            let resp = rx.recv()?;
+            if resp.prediction == test.labels[idx] {
+                correct += 1;
+            }
+            batch_sizes.push(resp.batch_size);
+        }
+        total += count;
+    }
+    println!(
+        "done in {:?}: {total} served, accuracy {:.2}%, max batch observed {}",
+        t0.elapsed(),
+        correct as f64 / total as f64 * 100.0,
+        batch_sizes.iter().max().unwrap()
+    );
+
+    let m = server.shutdown();
+    println!(
+        "batches {} (mean size {:.1})  host throughput {:.0} req/s",
+        m.batches, m.mean_batch, m.throughput_rps
+    );
+    if let Some(q) = m.queue_us {
+        println!(
+            "queue µs: median {:.0}  p95 {:.0}  max {:.0}",
+            q.median, q.p95, q.max
+        );
+    }
+    if let Some(c) = m.compute_us {
+        println!(
+            "compute µs/batch: median {:.0}  p95 {:.0}",
+            c.median, c.p95
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,160 @@
+//! End-to-end reproduction driver (DESIGN.md §4): exercises every layer
+//! of the stack on the real (synthetic-MNIST) workload and regenerates
+//! the paper's headline numbers in one run.
+//!
+//! ```bash
+//! make artifacts               # data → JAX training → AOT HLO
+//! cargo run --release --example train_eval_e2e
+//! ```
+//!
+//! Pipeline exercised here:
+//!   artifacts (python-trained weights + AOT HLO)
+//!     → rust weight/dataset loading (io::bwt)
+//!     → full test-set accuracy via the bit-exact functional model
+//!     → cycle-level simulator timing at batch 1 / 256 (Table I)
+//!     → PJRT runtime cross-check (logits vs the rust reference)
+//!     → coordinator serving pass (batching metrics)
+//!     → Tables I–III + Fig. 2 summary, written to
+//!       artifacts/e2e_report.json
+//!
+//! Run time is dominated by the full-test-set functional evaluation.
+
+use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::data::SynthMnist;
+use beanna::experiments;
+use beanna::io::ArtifactPaths;
+use beanna::nn::{accuracy, Network};
+use beanna::report::JsonValue;
+use beanna::runtime::ModelRegistry;
+
+fn main() -> anyhow::Result<()> {
+    let t_start = std::time::Instant::now();
+    let paths = ArtifactPaths::discover();
+    let eval_limit: usize = std::env::var("BEANNA_EVAL_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(2048);
+
+    // ---- 1. artifacts -----------------------------------------------------
+    println!("[1/6] loading artifacts from {}", paths.root.display());
+    let test = SynthMnist::load(&paths.dataset())?;
+    let fp = Network::load(&paths.weights("fp"))?;
+    let hybrid = Network::load(&paths.weights("hybrid"))?;
+    println!(
+        "  test set {} images; fp {} B weights, hybrid {} B weights",
+        test.len(),
+        fp.weight_bytes(),
+        hybrid.weight_bytes()
+    );
+
+    // ---- 2. functional accuracy (bit-exact with the simulator) -----------
+    println!("[2/6] evaluating accuracy on {eval_limit} images…");
+    let subset = test.take(eval_limit);
+    let fp_acc = accuracy(&fp.forward(subset.images_f32())?, &subset.labels);
+    let hy_acc = accuracy(&hybrid.forward(subset.images_f32())?, &subset.labels);
+    println!(
+        "  fp {:.2}%  hybrid {:.2}%  gap {:.2}% (paper: 98.19 / 97.96 / 0.23)",
+        fp_acc * 100.0,
+        hy_acc * 100.0,
+        (fp_acc - hy_acc) * 100.0
+    );
+
+    // ---- 3. device timing (Table I) ---------------------------------------
+    println!("[3/6] simulating device timing…");
+    let fp_row = experiments::table1::measure_variant(&fp, false, &test, 1)?;
+    let hy_row = experiments::table1::measure_variant(&hybrid, false, &test, 1)?;
+    println!(
+        "  fp   b1 {:>8.2} inf/s   b256 {:>9.2} inf/s",
+        fp_row.ips_b1, fp_row.ips_b256
+    );
+    println!(
+        "  hyb  b1 {:>8.2} inf/s   b256 {:>9.2} inf/s  (speedup {:.2}× / {:.2}×)",
+        hy_row.ips_b1,
+        hy_row.ips_b256,
+        hy_row.ips_b1 / fp_row.ips_b1,
+        hy_row.ips_b256 / fp_row.ips_b256
+    );
+
+    // ---- 4. PJRT cross-check ----------------------------------------------
+    println!("[4/6] PJRT runtime cross-check…");
+    let mut registry = ModelRegistry::new(paths.clone())?;
+    let exe = registry.get("hybrid", 16)?;
+    let mut images = beanna::bf16::Matrix::zeros(16, 784);
+    for i in 0..16 {
+        images.row_mut(i).copy_from_slice(test.images.row(i));
+    }
+    let pjrt_logits = exe.run(&images)?;
+    let ref_logits = hybrid.forward(&images)?;
+    let max_diff = pjrt_logits.max_abs_diff(&ref_logits);
+    let agree = (0..16)
+        .filter(|&r| {
+            beanna::nn::argmax(pjrt_logits.row(r)) == beanna::nn::argmax(ref_logits.row(r))
+        })
+        .count();
+    println!("  16/16 logit max |Δ| = {max_diff:.3e}, prediction agreement {agree}/16");
+    anyhow::ensure!(agree == 16, "PJRT disagreed with the reference model");
+
+    // ---- 5. serving pass ---------------------------------------------------
+    println!("[5/6] coordinator serving pass…");
+    let server = Server::start(
+        Backend::Reference {
+            net: hybrid.clone(),
+        },
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 256,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+        },
+    );
+    let n_serve = 512.min(test.len());
+    let rxs: Vec<_> = (0..n_serve)
+        .map(|i| server.submit(test.images.row(i).to_vec()).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv()?;
+    }
+    let metrics = server.shutdown();
+    println!(
+        "  {} requests in {} batches (mean {:.1}), host {:.0} req/s",
+        metrics.requests, metrics.batches, metrics.mean_batch, metrics.throughput_rps
+    );
+
+    // ---- 6. paper tables ----------------------------------------------------
+    println!("[6/6] paper tables\n");
+    let (t1, rows) = experiments::table1(&paths, eval_limit)?;
+    println!("{t1}");
+    println!("{}", experiments::table2());
+    println!(
+        "{}",
+        experiments::table3(rows[0].ips_b256, rows[1].ips_b256)
+    );
+    if let Ok((fig2, _)) = experiments::fig2_summary(&paths) {
+        println!("{fig2}");
+    }
+    println!("{}", experiments::peak_throughput_table()?);
+
+    // Machine-readable record for EXPERIMENTS.md.
+    let json = JsonValue::obj(vec![
+        ("eval_images", JsonValue::n(eval_limit as f64)),
+        ("fp_accuracy", JsonValue::n(fp_acc)),
+        ("hybrid_accuracy", JsonValue::n(hy_acc)),
+        ("fp_ips_b1", JsonValue::n(fp_row.ips_b1)),
+        ("fp_ips_b256", JsonValue::n(fp_row.ips_b256)),
+        ("hybrid_ips_b1", JsonValue::n(hy_row.ips_b1)),
+        ("hybrid_ips_b256", JsonValue::n(hy_row.ips_b256)),
+        ("pjrt_logit_max_diff", JsonValue::n(max_diff as f64)),
+        (
+            "serving_mean_batch",
+            JsonValue::n(metrics.mean_batch),
+        ),
+        (
+            "wall_seconds",
+            JsonValue::n(t_start.elapsed().as_secs_f64()),
+        ),
+    ]);
+    let out = paths.root.join("e2e_report.json");
+    json.save(&out)?;
+    println!("wrote {} ({:?} total)", out.display(), t_start.elapsed());
+    Ok(())
+}

@@ -1,0 +1,2 @@
+"""BEANNA build-time Python: Layer-1 Pallas kernels, the Layer-2 JAX
+model, training, and AOT export. Never imported at inference time."""

@@ -1,0 +1,107 @@
+"""AOT export: lower the inference graphs to HLO **text** for the rust
+PJRT runtime.
+
+The interchange format is HLO text, not a serialized HloModuleProto:
+jax ≥ 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (normally via `make artifacts`):
+
+    python -m compile.aot --batches 1,16,256
+
+Reads  artifacts/weights_{fp,hybrid}.bwt  (written by compile.train)
+Writes artifacts/model_{variant}_b{batch}.hlo.txt
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .bwt import TensorFile
+from .data import ARTIFACTS
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # The weights are baked into the graph as constants; the default
+    # printer elides large literals as `{...}`, which would destroy them
+    # in the text round-trip.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def load_folded(variant: str):
+    """Read folded weights exported by compile.train back into the
+    forward_inference parameter structure."""
+    path = os.path.join(ARTIFACTS, f"weights_{variant}.bwt")
+    if not os.path.exists(path):
+        raise FileNotFoundError(f"{path} missing — run `make train` first")
+    tf = TensorFile.load(path)
+    sizes = tuple(int(s) for s in tf.get("meta/sizes").to_f32())
+    binary = tuple(bool(b) for b in tf.get("meta/precisions").to_f32())
+    cfg = model.NetConfig(sizes, binary)
+    folded = []
+    for i in range(cfg.n_layers):
+        layer = {"w": tf.get(f"layer{i}/weight").to_f32()}
+        if f"layer{i}/bn_scale" in tf.tensors:
+            layer["scale"] = tf.get(f"layer{i}/bn_scale").to_f32()
+            layer["shift"] = tf.get(f"layer{i}/bn_shift").to_f32()
+        folded.append(layer)
+    return cfg, folded
+
+
+def export(
+    variant: str, batch: int, use_pallas: bool = True, fused: bool = False
+) -> str:
+    """Lower one (variant, batch) graph; returns the output path."""
+    cfg, folded = load_folded(variant)
+    fn = model.make_inference_fn(
+        cfg, folded, use_pallas=use_pallas, fused_epilogue=fused
+    )
+    spec = jax.ShapeDtypeStruct((batch, cfg.sizes[0]), np.float32)
+    lowered = jax.jit(fn).lower(spec)
+    text = to_hlo_text(lowered)
+    out_path = os.path.join(ARTIFACTS, f"model_{variant}_b{batch}.hlo.txt")
+    with open(out_path, "w") as f:
+        f.write(text)
+    print(f"wrote {out_path} ({len(text)} chars)")
+    return out_path
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batches", default="1,16,256")
+    ap.add_argument("--variants", default="fp,hybrid")
+    ap.add_argument(
+        "--no-pallas",
+        action="store_true",
+        help="lower the pure-jnp reference graph instead of the kernels",
+    )
+    ap.add_argument(
+        "--fused",
+        action="store_true",
+        help="fuse the BN/hardtanh epilogue into the bf16 kernel",
+    )
+    args = ap.parse_args()
+    for variant in args.variants.split(","):
+        for batch in (int(b) for b in args.batches.split(",")):
+            export(
+                variant,
+                batch,
+                use_pallas=not args.no_pallas,
+                fused=args.fused,
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+"""`.bwt` named-tensor container — Python twin of `rust/src/io/bwt.rs`.
+
+Format (little-endian throughout):
+
+    magic   : 4 bytes  b"BWT1"
+    count   : u32      number of tensors
+    per tensor:
+      name_len : u16, name bytes (utf-8)
+      dtype    : u8   (0 = f32, 1 = bf16 raw u16, 2 = packed bits u8,
+                       3 = i32, 4 = u8)
+      ndim     : u8, dims: ndim x u32
+      data_len : u64, raw bytes
+
+Tensors are written sorted by name so the bytes are deterministic and
+byte-identical with the rust writer.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+DTYPE_F32 = 0
+DTYPE_BF16 = 1
+DTYPE_BITS = 2
+DTYPE_I32 = 3
+DTYPE_U8 = 4
+
+_NP_DTYPES = {
+    DTYPE_F32: np.dtype("<f4"),
+    DTYPE_BF16: np.dtype("<u2"),
+    DTYPE_BITS: np.dtype("<u1"),
+    DTYPE_I32: np.dtype("<i4"),
+    DTYPE_U8: np.dtype("<u1"),
+}
+
+
+@dataclass
+class Tensor:
+    """One stored tensor: dtype tag, logical shape, raw bytes."""
+
+    dtype: int
+    shape: tuple[int, ...]
+    data: bytes
+
+    @staticmethod
+    def from_f32(arr) -> "Tensor":
+        arr = np.ascontiguousarray(arr, dtype="<f4")
+        return Tensor(DTYPE_F32, tuple(arr.shape), arr.tobytes())
+
+    def to_f32(self) -> np.ndarray:
+        if self.dtype == DTYPE_F32:
+            return np.frombuffer(self.data, dtype="<f4").reshape(self.shape).copy()
+        if self.dtype == DTYPE_I32:
+            return (
+                np.frombuffer(self.data, dtype="<i4")
+                .reshape(self.shape)
+                .astype(np.float32)
+            )
+        if self.dtype == DTYPE_U8:
+            return (
+                np.frombuffer(self.data, dtype="<u1")
+                .reshape(self.shape)
+                .astype(np.float32)
+            )
+        raise ValueError(f"to_f32 unsupported for dtype {self.dtype}")
+
+
+class TensorFile:
+    """Ordered name → Tensor mapping with (de)serialization."""
+
+    def __init__(self) -> None:
+        self.tensors: dict[str, Tensor] = {}
+
+    def insert(self, name: str, t: Tensor) -> None:
+        self.tensors[name] = t
+
+    def insert_f32(self, name: str, arr) -> None:
+        self.insert(name, Tensor.from_f32(arr))
+
+    def get(self, name: str) -> Tensor:
+        if name not in self.tensors:
+            raise KeyError(f"tensor '{name}' not in file")
+        return self.tensors[name]
+
+    def to_bytes(self) -> bytes:
+        out = bytearray(b"BWT1")
+        items = sorted(self.tensors.items())
+        out += struct.pack("<I", len(items))
+        for name, t in items:
+            nb = name.encode("utf-8")
+            out += struct.pack("<H", len(nb))
+            out += nb
+            out += struct.pack("<BB", t.dtype, len(t.shape))
+            for d in t.shape:
+                out += struct.pack("<I", d)
+            out += struct.pack("<Q", len(t.data))
+            out += t.data
+        return bytes(out)
+
+    @staticmethod
+    def from_bytes(buf: bytes) -> "TensorFile":
+        if buf[:4] != b"BWT1":
+            raise ValueError(f"bad magic {buf[:4]!r}")
+        pos = 4
+        (count,) = struct.unpack_from("<I", buf, pos)
+        pos += 4
+        tf = TensorFile()
+        for _ in range(count):
+            (name_len,) = struct.unpack_from("<H", buf, pos)
+            pos += 2
+            name = buf[pos : pos + name_len].decode("utf-8")
+            pos += name_len
+            dtype, ndim = struct.unpack_from("<BB", buf, pos)
+            pos += 2
+            shape = struct.unpack_from(f"<{ndim}I", buf, pos)
+            pos += 4 * ndim
+            (data_len,) = struct.unpack_from("<Q", buf, pos)
+            pos += 8
+            data = bytes(buf[pos : pos + data_len])
+            if len(data) != data_len:
+                raise ValueError("truncated .bwt")
+            pos += data_len
+            tf.insert(name, Tensor(dtype, tuple(int(s) for s in shape), data))
+        return tf
+
+    def save(self, path) -> None:
+        with open(path, "wb") as f:
+            f.write(self.to_bytes())
+
+    @staticmethod
+    def load(path) -> "TensorFile":
+        with open(path, "rb") as f:
+            return TensorFile.from_bytes(f.read())

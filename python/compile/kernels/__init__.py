@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels: the BEANNA datapaths as TPU-style kernels.
+
+All kernels run with ``interpret=True`` -- the CPU PJRT plugin cannot
+execute real Mosaic custom-calls, and interpret-mode lowers to plain HLO
+that both the JAX tests and the rust runtime execute (see
+DESIGN.md section Hardware-Adaptation).
+"""
+
+from .bf16_matmul import bf16_matmul
+from .binary_matmul import binary_matmul, pack_sign_bits
+
+__all__ = ["bf16_matmul", "binary_matmul", "pack_sign_bits"]

@@ -1,0 +1,79 @@
+"""High-precision-mode matmul kernel (§III-C, bfloat16 datapath).
+
+Hardware ↔ kernel mapping (DESIGN.md §Hardware-Adaptation):
+
+* the 16×16 weight-stationary systolic block ↔ a BlockSpec tile pair
+  streamed through the MXU-shaped ``jnp.dot`` with bf16 operands and an
+  f32 ``preferred_element_type`` (the PE's f32 partial-sum chain);
+* the psum-accumulator BRAM summing k-blocks ↔ the revisited output
+  block accumulated across the k grid dimension;
+* DMA controllers staging HBM→BRAM tiles ↔ the BlockSpec index maps
+  (the HBM↔VMEM schedule).
+
+Tile sizes default to the paper's 16 but are swept by the python tests
+and the EXPERIMENTS.md §Perf log (128 is the VMEM/MXU sweet spot for a
+real TPU; the HLO the rust runtime loads is tiled at the value chosen at
+export time).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, o_ref, *, n_k_blocks: int):
+    """One (i, j, k) grid step: o[i,j] (+)= x[i,k] · w[k,j] in bf16."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.bfloat16)
+    w = w_ref[...].astype(jnp.bfloat16)
+    # The PE datapath: bf16 multiply, f32 accumulate.
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    del n_k_blocks  # (kept for signature symmetry / future masking)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def bf16_matmul(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    block_m: int = 16,
+    block_n: int = 16,
+    block_k: int = 16,
+) -> jax.Array:
+    """``x (M×K) · w (K×N)`` in the BEANNA high-precision datapath.
+
+    Operands are rounded to bfloat16 (they live in BRAM as bf16); partial
+    sums accumulate in f32 per 16-deep systolic column, k-blocks summed by
+    the accumulator BRAM.
+
+    Shapes must tile evenly by the block sizes (the exporter pads the
+    paper's 784/1024/10 dims to multiples of 16 and slices the result).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shapes ({m},{k})·({k},{n}) must tile by "
+        f"({block_m},{block_n},{block_k})"
+    )
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k_blocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT executes plain HLO, not Mosaic
+    )(x, w)

@@ -1,0 +1,106 @@
+"""Binary-mode matmul kernel (§III-C binary datapath, eq. 1).
+
+The hardware packs 16 sign bits per PE lane and computes XNOR +
+popcount; host-side we pack 32 sign bits per int32 word (the natural
+vector lane) and compute
+
+    out[b, n] = K - 2 * popcount(a_bits[b] XOR w_bits[n])
+
+which is exactly eq. 1. The kernel is VPU-shaped (bitwise ops + integer
+adds), not MXU-shaped — on a real TPU this is the right mapping because
+the MXU has no 1-bit mode; the XNOR-popcount folds onto the vector unit
+(DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def pack_sign_bits(x: jax.Array) -> jax.Array:
+    """Pack the sign bits of ``x (…, K)`` into int32 words ``(…, K/32)``.
+
+    Bit = 1 ⇔ the value is **negative** (−1 in ±1 encoding), matching
+    `rust/src/binary/BitVector`. K must be a multiple of 32 (the paper's
+    binary layers have K = 1024).
+    """
+    *lead, k = x.shape
+    assert k % 32 == 0, f"K={k} must be a multiple of 32"
+    bits = (x < 0).astype(jnp.uint32).reshape(*lead, k // 32, 32)
+    weights = (jnp.uint32(1) << jnp.arange(32, dtype=jnp.uint32)).reshape(
+        *([1] * (len(lead) + 1)), 32
+    )
+    return (bits * weights).sum(axis=-1).astype(jnp.int32)
+
+
+def _kernel(a_ref, w_ref, o_ref, *, k_bits: int):
+    """One (i, j, k) grid step over packed words.
+
+    a: (bm, bkw) int32 packed activations; w: (bn, bkw) packed weights
+    (weights stored N×K like the DMA layout). Accumulates the
+    disagreement popcount; the final step converts to eq. 1 counts.
+    """
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # (bm, bkw)
+    w = w_ref[...]  # (bn, bkw)
+    x = jnp.bitwise_xor(a[:, None, :], w[None, :, :])  # (bm, bn, bkw)
+    pc = jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+    o_ref[...] += pc
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _finish():
+        # s = K − 2·disagreements (eq. 1).
+        o_ref[...] = k_bits - 2 * o_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_kw"))
+def binary_matmul(
+    a_bits: jax.Array,
+    w_bits: jax.Array,
+    *,
+    k_bits: int | None = None,
+    block_m: int = 16,
+    block_n: int = 16,
+    block_kw: int | None = None,
+) -> jax.Array:
+    """XNOR-popcount matmul over packed sign bits.
+
+    ``a_bits (M × KW) int32`` activations × ``w_bits (N × KW) int32``
+    weights (both packed along K with :func:`pack_sign_bits`) → integer
+    counts ``(M × N) int32`` in ``[-K, K]`` where ``K = 32·KW``.
+    """
+    m, kw = a_bits.shape
+    n, kw2 = w_bits.shape
+    assert kw == kw2, f"packed inner dims {kw} != {kw2}"
+    if k_bits is None:
+        k_bits = kw * 32
+    if block_kw is None:
+        # Largest power-of-two word-block dividing KW, capped at 32.
+        block_kw = 1
+        while block_kw < 32 and kw % (block_kw * 2) == 0:
+            block_kw *= 2
+    assert m % block_m == 0 and n % block_n == 0 and kw % block_kw == 0, (
+        f"shapes ({m},{kw})·({n},{kw}) must tile by "
+        f"({block_m},{block_n},{block_kw})"
+    )
+    grid = (m // block_m, n // block_n, kw // block_kw)
+    return pl.pallas_call(
+        functools.partial(_kernel, k_bits=k_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_kw), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_n, block_kw), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,  # CPU-PJRT executes plain HLO, not Mosaic
+    )(a_bits, w_bits)

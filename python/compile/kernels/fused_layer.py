@@ -1,0 +1,84 @@
+"""Fused hybrid-layer kernel: systolic matmul with the activation/
+normalization epilogue fused into the final k-step (§III-D step 9 done
+on-chip instead of as a separate pass).
+
+On the FPGA the epilogue units sit on DMA controller 2's drain path; on
+a TPU the equivalent is fusing the per-feature affine + hardtanh + bf16
+round into the same kernel invocation so the psums never round-trip
+through HBM — the textbook Pallas epilogue-fusion pattern.
+
+`aot.py --fused` selects this kernel for bf16 layers; the default export
+keeps matmul and epilogue separate (matching the paper's dataflow
+stages 7–9 one-to-one) — both lower to the same logits (pytest asserts
+equality to the two-step reference within one bf16 ulp).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, w_ref, scale_ref, shift_ref, o_ref, *, activation: bool):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.bfloat16)
+    w = w_ref[...].astype(jnp.bfloat16)
+    o_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _epilogue():
+        y = o_ref[...] * scale_ref[...] + shift_ref[...]
+        if activation:
+            y = jnp.clip(y, -1.0, 1.0)
+        # Activations BRAM stores bf16.
+        o_ref[...] = y.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def fused_bf16_layer(
+    x: jax.Array,
+    w: jax.Array,
+    scale: jax.Array,
+    shift: jax.Array,
+    *,
+    activation: bool = True,
+    block_m: int = 16,
+    block_n: int = 16,
+    block_k: int = 16,
+) -> jax.Array:
+    """`bf16(hardtanh?(scale · (x·w) + shift))` in one kernel.
+
+    `x (M×K)`, `w (K×N)`, `scale`/`shift` broadcast per output feature
+    (`N`,). Shapes must tile by the block sizes (same contract as
+    `bf16_matmul`).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and scale.shape == (n,) and shift.shape == (n,)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+    scale2d = jnp.broadcast_to(scale[None, :], (1, n))
+    shift2d = jnp.broadcast_to(shift[None, :], (1, n))
+    return pl.pallas_call(
+        functools.partial(_kernel, activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+            pl.BlockSpec((1, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,  # CPU-PJRT executes plain HLO, not Mosaic
+    )(x, w, scale2d, shift2d)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness contract.
+
+These are deliberately written in the most obvious way possible; the
+pytest suite asserts the kernels match them (exactly for the binary
+kernel, to bf16-accumulation tolerance for the bf16 kernel).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bf16_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x·w with bf16 operands and f32 accumulation (the PE datapath)."""
+    return jnp.dot(
+        x.astype(jnp.bfloat16),
+        w.astype(jnp.bfloat16),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def binary_matmul_ref(a: jax.Array, w_t: jax.Array) -> jax.Array:
+    """±1 inner products: ``a (M×K)`` · ``w_t (N×K)ᵀ`` over sign values.
+
+    Operands are arbitrary floats; only their signs matter
+    (sign(0) := +1, matching the training convention).
+    """
+    sa = jnp.where(a < 0, -1.0, 1.0)
+    sw = jnp.where(w_t < 0, -1.0, 1.0)
+    return jnp.dot(sa, sw.T).astype(jnp.int32)
+
+
+def hardtanh(x: jax.Array) -> jax.Array:
+    """eq. 3."""
+    return jnp.clip(x, -1.0, 1.0)
+
+
+def layer_epilogue_ref(
+    psums: jax.Array, scale: jax.Array, shift: jax.Array, activation: bool
+) -> jax.Array:
+    """The activation/normalization unit: folded BN affine, optional
+    hardtanh, rounded to bf16 (activations BRAM stores bf16)."""
+    y = psums * scale + shift
+    if activation:
+        y = hardtanh(y)
+    return y.astype(jnp.bfloat16).astype(jnp.float32)

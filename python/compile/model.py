@@ -1,0 +1,323 @@
+"""Layer-2 JAX model: the paper's 784-1024-1024-1024-10 network.
+
+Two faces of the same network:
+
+* :func:`forward_inference` — the deployment graph that `aot.py` lowers
+  to HLO for the rust runtime. Calls the Layer-1 Pallas kernels
+  (bf16 systolic matmul / XNOR-popcount), applies the folded-BN epilogue,
+  and mirrors the rust reference model's numerics.
+* :func:`forward_train` / :func:`loss_fn` — the differentiable training
+  graph with straight-through-estimator binarization (eq. 2, Courbariaux
+  & Bengio), live batch-norm statistics, and hardtanh activations.
+
+Parameter pytree layout (per layer i):
+    w        : (out, in) float32 latent weights
+    gamma/beta and running mean/var for hidden layers' batch-norm.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import bf16_matmul, binary_matmul, pack_sign_bits
+from .kernels.ref import hardtanh
+
+# The paper's topology and the hybrid precision assignment (§III-A).
+SIZES = (784, 1024, 1024, 1024, 10)
+HYBRID_BINARY = (False, True, True, False)
+FP_BINARY = (False, False, False, False)
+BN_EPS = 1e-5
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """Variant selector."""
+
+    sizes: tuple[int, ...] = SIZES
+    binary: tuple[bool, ...] = HYBRID_BINARY
+
+    @staticmethod
+    def hybrid() -> "NetConfig":
+        return NetConfig(SIZES, HYBRID_BINARY)
+
+    @staticmethod
+    def fp() -> "NetConfig":
+        return NetConfig(SIZES, FP_BINARY)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.sizes) - 1
+
+
+def init_params(cfg: NetConfig, seed: int) -> list[dict]:
+    """He-initialised latent weights + identity batch-norm."""
+    rng = np.random.default_rng(seed)
+    params = []
+    for i in range(cfg.n_layers):
+        fan_in, fan_out = cfg.sizes[i], cfg.sizes[i + 1]
+        w = rng.standard_normal((fan_out, fan_in)).astype(np.float32) * np.sqrt(
+            2.0 / fan_in
+        )
+        layer = {"w": jnp.asarray(w)}
+        if i < cfg.n_layers - 1:  # hidden layers carry BN
+            layer["gamma"] = jnp.ones((fan_out,), jnp.float32)
+            layer["beta"] = jnp.zeros((fan_out,), jnp.float32)
+        params.append(layer)
+    return params
+
+
+def init_bn_state(cfg: NetConfig) -> list[dict]:
+    """Running BN statistics (not differentiated)."""
+    state = []
+    for i in range(cfg.n_layers - 1):
+        n = cfg.sizes[i + 1]
+        state.append(
+            {
+                "mean": jnp.zeros((n,), jnp.float32),
+                "var": jnp.ones((n,), jnp.float32),
+            }
+        )
+    return state
+
+
+# ---------------------------------------------------------------------------
+# Training graph
+# ---------------------------------------------------------------------------
+
+
+def ste_sign(x: jax.Array) -> jax.Array:
+    """Binarize to ±1 with the straight-through estimator (eq. 2):
+    forward sign(x), backward identity clipped to |x| ≤ 1."""
+    clipped = jnp.clip(x, -1.0, 1.0)
+    return clipped + jax.lax.stop_gradient(jnp.where(x < 0, -1.0, 1.0) - clipped)
+
+
+def forward_train(
+    cfg: NetConfig,
+    params: list[dict],
+    bn_state: list[dict],
+    x: jax.Array,
+    *,
+    train: bool,
+    momentum: float = 0.9,
+):
+    """Training-mode forward pass.
+
+    Returns (logits, new_bn_state). Binary layers binarize their latent
+    weights and incoming activations with the STE; hidden layers apply
+    BN → hardtanh (see DESIGN.md §5 on the epilogue ordering).
+    """
+    h = x
+    new_state = []
+    for i in range(cfg.n_layers):
+        w = params[i]["w"]
+        if cfg.binary[i]:
+            wb = ste_sign(w)
+            hb = ste_sign(h)
+            z = hb @ wb.T
+        else:
+            z = h @ w.T
+        if i < cfg.n_layers - 1:
+            if train:
+                mean = z.mean(axis=0)
+                var = z.var(axis=0)
+                run = bn_state[i]
+                new_state.append(
+                    {
+                        "mean": momentum * run["mean"] + (1 - momentum) * mean,
+                        "var": momentum * run["var"] + (1 - momentum) * var,
+                    }
+                )
+            else:
+                mean, var = bn_state[i]["mean"], bn_state[i]["var"]
+                new_state.append(bn_state[i])
+            zn = (z - mean) / jnp.sqrt(var + BN_EPS)
+            zn = zn * params[i]["gamma"] + params[i]["beta"]
+            h = hardtanh(zn)
+        else:
+            h = z
+    return h, new_state
+
+
+def loss_fn(cfg, params, bn_state, x, y, *, train=True):
+    """Mean softmax cross-entropy; returns (loss, new_bn_state)."""
+    logits, new_state = forward_train(cfg, params, bn_state, x, train=train)
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    return loss, new_state
+
+
+def clip_latent_weights(cfg: NetConfig, params: list[dict]) -> list[dict]:
+    """Courbariaux's weight clipping: keep binary layers' latent weights
+    in [-1, 1] so they cannot grow without affecting sign(w)."""
+    out = []
+    for i, layer in enumerate(params):
+        layer = dict(layer)
+        if cfg.binary[i]:
+            layer["w"] = jnp.clip(layer["w"], -1.0, 1.0)
+        out.append(layer)
+    return out
+
+
+def accuracy(cfg, params, bn_state, x, y) -> float:
+    logits, _ = forward_train(cfg, params, bn_state, x, train=False)
+    return float((jnp.argmax(logits, axis=1) == y).mean())
+
+
+# ---------------------------------------------------------------------------
+# Inference graph (what aot.py exports)
+# ---------------------------------------------------------------------------
+
+
+def fold_bn(params: list[dict], bn_state: list[dict], cfg: NetConfig):
+    """Fold BN to per-feature (scale, shift) for deployment."""
+    folded = []
+    for i in range(cfg.n_layers):
+        layer = {"w": np.asarray(params[i]["w"])}
+        if i < cfg.n_layers - 1:
+            gamma = np.asarray(params[i]["gamma"])
+            beta = np.asarray(params[i]["beta"])
+            mean = np.asarray(bn_state[i]["mean"])
+            var = np.asarray(bn_state[i]["var"])
+            scale = gamma / np.sqrt(var + BN_EPS)
+            layer["scale"] = scale.astype(np.float32)
+            layer["shift"] = (beta - mean * scale).astype(np.float32)
+        folded.append(layer)
+    return folded
+
+
+def _tile(size: int, base: int, preferred: int) -> int:
+    """Pick a tile for a dimension of `size`: the `preferred` (MXU-shaped)
+    tile when the padded dim would divide by it, else the `base` tile the
+    paper's 16×16 array uses."""
+    if size >= preferred:
+        return preferred
+    # Small dims: round the whole dim up to one base-multiple tile.
+    return ((size + base - 1) // base) * base
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def forward_inference(
+    cfg: NetConfig,
+    folded: list[dict],
+    images: jax.Array,
+    *,
+    use_pallas: bool = True,
+    fused_epilogue: bool = False,
+) -> jax.Array:
+    """Deployment forward pass over folded parameters.
+
+    bf16 layers run on the Pallas systolic-matmul kernel; binary layers
+    pack sign bits and run on the XNOR-popcount kernel. The epilogue
+    (BN affine → hardtanh → bf16 rounding) mirrors the hardware's
+    activation/normalization units. Weights are closed over as constants
+    so the exported HLO is self-contained.
+    """
+    h = images
+    n = cfg.n_layers
+    for i in range(n):
+        w = jnp.asarray(folded[i]["w"])  # (out, in)
+        if cfg.binary[i]:
+            a_bits = pack_sign_bits(h)
+            w_bits = pack_sign_bits(w)
+            if use_pallas:
+                # Pad the batch dim to the tile size; padded rows are
+                # all-(+1) activations and are sliced off below.
+                m0 = a_bits.shape[0]
+                bm = _tile(m0, 16, 64)
+                bn = _tile(w_bits.shape[0], 16, 64)
+                ap = _pad_to(a_bits, 0, bm)
+                z = binary_matmul(ap, w_bits, block_m=bm, block_n=bn)[
+                    :m0
+                ].astype(jnp.float32)
+            else:
+                from .kernels.ref import binary_matmul_ref
+
+                z = binary_matmul_ref(h, w).astype(jnp.float32)
+        else:
+            # Pad M/K/N to tile multiples; slice the result back. Tiles
+            # prefer the MXU-native 128 where the dims allow (fits VMEM
+            # with headroom: 128KB/tile — see EXPERIMENTS.md §Perf L1),
+            # falling back to the paper's 16 for small batches.
+            m0, k0 = h.shape
+            n0 = w.shape[0]
+            if use_pallas:
+                bm = _tile(m0, 16, 128)
+                bk = _tile(k0, 16, 128)
+                bn = _tile(n0, 16, 128)
+                hp = _pad_to(_pad_to(h, 0, bm), 1, bk)
+                wp = _pad_to(_pad_to(w.T, 0, bk), 1, bn)
+                if fused_epilogue and i < n - 1:
+                    # Epilogue fused into the kernel's last k-step
+                    # (kernels/fused_layer.py); padded output features get
+                    # identity scale/zero shift and are sliced off.
+                    from .kernels.fused_layer import fused_bf16_layer
+
+                    n_pad = wp.shape[1]
+                    scale = jnp.ones((n_pad,), jnp.float32)
+                    scale = scale.at[:n0].set(jnp.asarray(folded[i]["scale"]))
+                    shift = jnp.zeros((n_pad,), jnp.float32)
+                    shift = shift.at[:n0].set(jnp.asarray(folded[i]["shift"]))
+                    h = fused_bf16_layer(
+                        hp,
+                        wp,
+                        scale,
+                        shift,
+                        activation=True,
+                        block_m=bm,
+                        block_n=bn,
+                        block_k=bk,
+                    )[:m0, :n0]
+                    continue
+                z = bf16_matmul(hp, wp, block_m=bm, block_n=bn, block_k=bk)[
+                    :m0, :n0
+                ]
+            else:
+                from .kernels.ref import bf16_matmul_ref
+
+                z = bf16_matmul_ref(h, w.T)
+        if i < n - 1:
+            z = z * jnp.asarray(folded[i]["scale"]) + jnp.asarray(folded[i]["shift"])
+            z = hardtanh(z)
+        # Activations BRAM stores bf16.
+        h = z.astype(jnp.bfloat16).astype(jnp.float32)
+    return h
+
+
+def make_inference_fn(
+    cfg: NetConfig,
+    folded: list[dict],
+    *,
+    use_pallas: bool = True,
+    fused_epilogue: bool = False,
+):
+    """Return `images -> (logits,)` with weights captured as constants
+    (the aot.py contract: 1-tuple output, single f32 input)."""
+
+    @functools.partial(jax.jit)
+    def fn(images):
+        return (
+            forward_inference(
+                cfg,
+                folded,
+                images,
+                use_pallas=use_pallas,
+                fused_epilogue=fused_epilogue,
+            ),
+        )
+
+    return fn

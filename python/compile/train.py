@@ -1,0 +1,167 @@
+"""Training driver (§III-A): train the fp-only and hybrid networks on
+synthetic MNIST, emit the Fig. 2 accuracy curves and the deployed
+weights.
+
+Usage (normally via `make artifacts`):
+
+    python -m compile.train --variant hybrid --epochs 30
+    python -m compile.train --variant fp --epochs 30
+
+Outputs under artifacts/:
+    weights_{variant}.bwt   — folded inference weights (rust-compatible)
+    fig2_{variant}.csv      — epoch, train_acc, test_acc
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as data_mod
+from . import model
+from .bwt import TensorFile, Tensor
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_update(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def train_variant(
+    variant: str,
+    epochs: int,
+    batch_size: int,
+    lr: float,
+    seed: int,
+    limit_train: int | None = None,
+):
+    cfg = model.NetConfig.hybrid() if variant == "hybrid" else model.NetConfig.fp()
+    train_x, train_y = data_mod.load_split("train")
+    test_x, test_y = data_mod.load_split("test")
+    if limit_train:
+        train_x, train_y = train_x[:limit_train], train_y[:limit_train]
+
+    params = model.init_params(cfg, seed)
+    bn_state = model.init_bn_state(cfg)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step(params, bn_state, opt, x, y):
+        (loss, new_bn), grads = jax.value_and_grad(
+            lambda p: model.loss_fn(cfg, p, bn_state, x, y, train=True),
+            has_aux=True,
+        )(params)
+        params, opt = adam_update(params, grads, opt, lr=lr)
+        params = model.clip_latent_weights(cfg, params)
+        return params, new_bn, opt, loss
+
+    @jax.jit
+    def eval_logits(params, bn_state, x):
+        logits, _ = model.forward_train(cfg, params, bn_state, x, train=False)
+        return logits
+
+    def eval_acc(x, y, chunk=1024):
+        correct = 0
+        for s in range(0, len(y), chunk):
+            logits = eval_logits(params, bn_state, x[s : s + chunk])
+            correct += int((jnp.argmax(logits, 1) == y[s : s + chunk]).sum())
+        return correct / len(y)
+
+    curve = []
+    t0 = time.time()
+    for epoch in range(1, epochs + 1):
+        losses = []
+        for bx, by in data_mod.batches(train_x, train_y, batch_size, seed + epoch):
+            params, bn_state, opt, loss = step(params, bn_state, opt, bx, by)
+            losses.append(float(loss))
+        train_acc = eval_acc(train_x[:5000], train_y[:5000])
+        test_acc = eval_acc(test_x, test_y)
+        curve.append((epoch, train_acc, test_acc))
+        print(
+            f"[{variant}] epoch {epoch:3d}/{epochs}  loss {np.mean(losses):.4f}  "
+            f"train {train_acc * 100:.2f}%  test {test_acc * 100:.2f}%  "
+            f"({time.time() - t0:.0f}s)",
+            flush=True,
+        )
+
+    return cfg, params, bn_state, curve
+
+
+def export_weights(cfg, params, bn_state, path: str):
+    """Write the folded inference weights in the rust `.bwt` layout
+    (`Network::from_tensor_file` contract)."""
+    folded = model.fold_bn(params, bn_state, cfg)
+    tf = TensorFile()
+    for i, layer in enumerate(folded):
+        w = layer["w"]
+        if cfg.binary[i]:
+            # Deploy the *binarized* weights (what the hardware stores).
+            w = np.where(w < 0, -1.0, 1.0).astype(np.float32)
+        tf.insert_f32(f"layer{i}/weight", w)
+        if "scale" in layer:
+            tf.insert_f32(f"layer{i}/bn_scale", layer["scale"])
+            tf.insert_f32(f"layer{i}/bn_shift", layer["shift"])
+    tf.insert_f32(
+        "meta/precisions", np.asarray([1.0 if b else 0.0 for b in cfg.binary])
+    )
+    tf.insert_f32("meta/sizes", np.asarray(cfg.sizes, dtype=np.float32))
+    tf.save(path)
+    print(f"wrote {path}")
+    return folded
+
+
+def export_curve(curve, path: str):
+    with open(path, "w") as f:
+        f.write("epoch,train_acc,test_acc\n")
+        for epoch, tr, te in curve:
+            f.write(f"{epoch},{tr:.6f},{te:.6f}\n")
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--variant", choices=["fp", "hybrid"], required=True)
+    ap.add_argument("--epochs", type=int, default=int(os.environ.get("BEANNA_EPOCHS", 30)))
+    ap.add_argument("--batch-size", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--limit-train", type=int, default=None)
+    args = ap.parse_args()
+
+    cfg, params, bn_state, curve = train_variant(
+        args.variant, args.epochs, args.batch_size, args.lr, args.seed, args.limit_train
+    )
+    os.makedirs(data_mod.ARTIFACTS, exist_ok=True)
+    export_weights(
+        cfg,
+        params,
+        bn_state,
+        os.path.join(data_mod.ARTIFACTS, f"weights_{args.variant}.bwt"),
+    )
+    export_curve(
+        curve, os.path.join(data_mod.ARTIFACTS, f"fig2_{args.variant}.csv")
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""`.bwt` container tests, including the cross-language golden bytes that
+pin the format shared with `rust/src/io/bwt.rs`."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.bwt import TensorFile, Tensor, DTYPE_F32
+
+
+class TestRoundtrip:
+    def test_simple(self):
+        tf = TensorFile()
+        tf.insert_f32("w", np.arange(6, dtype=np.float32).reshape(2, 3))
+        back = TensorFile.from_bytes(tf.to_bytes())
+        assert (back.get("w").to_f32() == tf.get("w").to_f32()).all()
+        assert back.get("w").shape == (2, 3)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 4),
+        rows=st.integers(1, 8),
+        cols=st.integers(1, 8),
+        seed=st.integers(0, 100),
+    )
+    def test_arbitrary(self, n, rows, cols, seed):
+        rng = np.random.default_rng(seed)
+        tf = TensorFile()
+        for i in range(n):
+            tf.insert_f32(f"t{i}", rng.standard_normal((rows, cols)).astype(np.float32))
+        back = TensorFile.from_bytes(tf.to_bytes())
+        for i in range(n):
+            assert (back.get(f"t{i}").to_f32() == tf.get(f"t{i}").to_f32()).all()
+
+    def test_deterministic_bytes(self):
+        a, b = TensorFile(), TensorFile()
+        # Insertion order differs; bytes must not (sorted writer).
+        a.insert_f32("x", np.ones(3, np.float32))
+        a.insert_f32("y", np.zeros(2, np.float32))
+        b.insert_f32("y", np.zeros(2, np.float32))
+        b.insert_f32("x", np.ones(3, np.float32))
+        assert a.to_bytes() == b.to_bytes()
+
+
+class TestGoldenBytes:
+    """Byte-level format pin: must match rust's writer exactly."""
+
+    def test_header_layout(self):
+        tf = TensorFile()
+        tf.insert("a", Tensor(DTYPE_F32, (2,), np.asarray([1.0, 2.0], "<f4").tobytes()))
+        raw = tf.to_bytes()
+        assert raw[:4] == b"BWT1"
+        assert raw[4:8] == (1).to_bytes(4, "little")  # count
+        assert raw[8:10] == (1).to_bytes(2, "little")  # name len
+        assert raw[10:11] == b"a"
+        assert raw[11] == DTYPE_F32
+        assert raw[12] == 1  # ndim
+        assert raw[13:17] == (2).to_bytes(4, "little")  # dim 0
+        assert raw[17:25] == (8).to_bytes(8, "little")  # data len
+        assert raw[25:33] == np.asarray([1.0, 2.0], "<f4").tobytes()
+
+    def test_rejects_bad_magic(self):
+        with pytest.raises(ValueError):
+            TensorFile.from_bytes(b"NOPE" + b"\x00" * 8)
+
+    def test_rejects_truncation(self):
+        tf = TensorFile()
+        tf.insert_f32("x", np.ones(10, np.float32))
+        raw = tf.to_bytes()
+        with pytest.raises(ValueError):
+            TensorFile.from_bytes(raw[:-3])
+
+    def test_missing_name_raises(self):
+        with pytest.raises(KeyError):
+            TensorFile().get("nope")

@@ -1,0 +1,216 @@
+"""Layer-1 kernel correctness: Pallas vs pure-jnp oracles.
+
+The hypothesis sweeps are the core contract: any tile-aligned shape and
+any input distribution must match ref.py (bitwise for the binary kernel,
+within one accumulation ULP pattern for bf16).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bf16_matmul, binary_matmul, pack_sign_bits
+from compile.kernels.ref import (
+    bf16_matmul_ref,
+    binary_matmul_ref,
+    hardtanh,
+    layer_epilogue_ref,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, scale=1.0):
+    return (RNG.standard_normal(shape) * scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# bf16 systolic matmul kernel
+# ---------------------------------------------------------------------------
+
+
+class TestBf16Matmul:
+    def test_small_exact_values(self):
+        # Values exactly representable in bf16 → kernel must be exact.
+        x = np.array([[1.0, 2.0], [3.0, 4.0]], np.float32)
+        x16 = np.zeros((16, 16), np.float32)
+        x16[:2, :2] = x
+        w16 = np.eye(16, dtype=np.float32) * 0.5
+        out = np.asarray(bf16_matmul(x16, w16))
+        assert out[0, 0] == 0.5 and out[1, 1] == 2.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 4),
+        n=st.integers(1, 4),
+        k=st.integers(1, 6),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_matches_reference_tiled_shapes(self, m, n, k, scale):
+        x = rand((16 * m, 16 * k), scale)
+        w = rand((16 * k, 16 * n), scale)
+        out = np.asarray(bf16_matmul(x, w))
+        ref = np.asarray(bf16_matmul_ref(x, w))
+        # Accumulation order differs (k-blocked vs monolithic dot);
+        # bound by k * bf16 ulp of the products.
+        bound = 16 * k * 2 ** -7 * (scale * 4) ** 2 + 1e-5
+        assert np.abs(out - ref).max() <= bound
+
+    @settings(max_examples=10, deadline=None)
+    @given(block=st.sampled_from([16, 32, 64]))
+    def test_block_size_invariance(self, block):
+        # Different tilings change rounding order only inside the f32
+        # accumulator — results stay within one product ulp per k step.
+        x = rand((64, 128))
+        w = rand((128, 64))
+        base = np.asarray(bf16_matmul(x, w, block_m=16, block_n=16, block_k=16))
+        other = np.asarray(
+            bf16_matmul(x, w, block_m=block, block_n=block, block_k=block)
+        )
+        assert np.abs(base - other).max() < 128 * 2 ** -7
+
+    def test_rejects_untiled_shapes(self):
+        with pytest.raises(AssertionError):
+            bf16_matmul(rand((15, 16)), rand((16, 16)))
+        with pytest.raises(AssertionError):
+            bf16_matmul(rand((16, 17)), rand((17, 16)))
+
+    def test_bf16_rounding_visible(self):
+        # 1 + 2^-9 is below bf16 resolution → behaves as exactly 1.0.
+        x = np.full((16, 16), 1.0 + 2.0 ** -9, np.float32)
+        w = np.eye(16, dtype=np.float32)
+        out = np.asarray(bf16_matmul(x, w))
+        assert np.allclose(out, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# binary XNOR-popcount kernel
+# ---------------------------------------------------------------------------
+
+
+class TestBinaryMatmul:
+    def test_known_values(self):
+        # 32-bit K: a row of all +1 vs weights all +1 → +32.
+        a = np.ones((16, 32), np.float32)
+        w = np.ones((16, 32), np.float32)
+        out = np.asarray(
+            binary_matmul(pack_sign_bits(a), pack_sign_bits(w), block_kw=1)
+        )
+        assert (out == 32).all()
+        # all -1 weights → −32.
+        out = np.asarray(
+            binary_matmul(pack_sign_bits(a), pack_sign_bits(-w), block_kw=1)
+        )
+        assert (out == -32).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 3),
+        n=st.integers(1, 3),
+        kw=st.sampled_from([1, 2, 4]),
+    )
+    def test_matches_reference_exactly(self, m, n, kw):
+        a = rand((16 * m, 32 * kw))
+        w = rand((16 * n, 32 * kw))
+        out = np.asarray(
+            binary_matmul(pack_sign_bits(a), pack_sign_bits(w), block_kw=1)
+        )
+        ref = np.asarray(binary_matmul_ref(a, w))
+        assert (out == ref).all(), "binary kernel must be bit-exact"
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_magnitude_invariance(self, seed):
+        # Only signs may matter.
+        r = np.random.default_rng(seed)
+        signs = np.where(r.random((16, 64)) < 0.5, -1.0, 1.0).astype(np.float32)
+        scaled = signs * r.uniform(0.01, 100.0, signs.shape).astype(np.float32)
+        w = rand((16, 64))
+        a1 = np.asarray(binary_matmul(pack_sign_bits(signs), pack_sign_bits(w)))
+        a2 = np.asarray(binary_matmul(pack_sign_bits(scaled), pack_sign_bits(w)))
+        assert (a1 == a2).all()
+
+    def test_counts_bounded_and_parity(self):
+        a = rand((32, 128))
+        w = rand((32, 128))
+        out = np.asarray(binary_matmul(pack_sign_bits(a), pack_sign_bits(w)))
+        assert (np.abs(out) <= 128).all()
+        assert ((out - 128) % 2 == 0).all()
+
+
+class TestPackSignBits:
+    def test_bit_layout_lsb_first(self):
+        x = np.ones((1, 32), np.float32)
+        x[0, 0] = -1.0  # lane 0 → bit 0
+        x[0, 31] = -1.0  # lane 31 → bit 31
+        packed = np.asarray(pack_sign_bits(x))
+        assert packed.shape == (1, 1)
+        assert np.uint32(packed[0, 0]) == np.uint32((1 << 0) | (1 << 31))
+
+    def test_zero_is_positive(self):
+        x = np.zeros((1, 32), np.float32)
+        assert np.asarray(pack_sign_bits(x))[0, 0] == 0
+
+    def test_rejects_unaligned_k(self):
+        with pytest.raises(AssertionError):
+            pack_sign_bits(np.zeros((1, 33), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# epilogue reference
+# ---------------------------------------------------------------------------
+
+
+class TestFusedLayer:
+    def test_matches_two_step_reference_exactly(self):
+        from compile.kernels.fused_layer import fused_bf16_layer
+
+        x = rand((32, 64))
+        w = rand((64, 32))
+        scale = rand((32,))
+        shift = rand((32,))
+        for activation in (True, False):
+            fused = np.asarray(
+                fused_bf16_layer(x, w, scale, shift, activation=activation)
+            )
+            ref = np.asarray(
+                layer_epilogue_ref(
+                    bf16_matmul_ref(x, w),
+                    jnp.asarray(scale),
+                    jnp.asarray(shift),
+                    activation,
+                )
+            )
+            # Same k-monolithic accumulation inside one tile here (k=64,
+            # block_k=16 → blocked); allow one-ulp drift vs the
+            # monolithic reference.
+            assert np.abs(fused - ref).max() < 64 * 2 ** -7
+
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.integers(1, 3), n=st.integers(1, 3), k=st.integers(1, 4))
+    def test_activation_bounds(self, m, n, k):
+        from compile.kernels.fused_layer import fused_bf16_layer
+
+        x = rand((16 * m, 16 * k), 2.0)
+        w = rand((16 * k, 16 * n), 2.0)
+        scale = rand((16 * n,))
+        shift = rand((16 * n,))
+        out = np.asarray(fused_bf16_layer(x, w, scale, shift, activation=True))
+        assert (out >= -1.0).all() and (out <= 1.0).all()
+
+
+class TestEpilogue:
+    def test_hardtanh_eq3(self):
+        x = jnp.array([-5.0, -1.0, 0.3, 1.0, 9.0])
+        assert np.allclose(hardtanh(x), [-1.0, -1.0, 0.3, 1.0, 1.0])
+
+    def test_epilogue_order_bn_then_hardtanh(self):
+        psum = jnp.array([[3.0]])
+        out = layer_epilogue_ref(psum, jnp.array([0.5]), jnp.array([0.25]), True)
+        assert float(out[0, 0]) == 1.0  # bn → 1.75, hardtanh → 1.0
+
+    def test_epilogue_rounds_to_bf16(self):
+        psum = jnp.array([[1.0 + 2.0 ** -9]])
+        out = layer_epilogue_ref(psum, jnp.array([1.0]), jnp.array([0.0]), False)
+        assert float(out[0, 0]) == 1.0

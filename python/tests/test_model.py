@@ -1,0 +1,129 @@
+"""Layer-2 model tests: STE gradients, BN folding, training step, and
+inference-graph consistency."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.model import NetConfig
+
+RNG = np.random.default_rng(1)
+
+
+def tiny_cfg(binary=(False, True, False)):
+    return NetConfig(sizes=(32, 64, 64, 10), binary=binary)
+
+
+class TestSteSign:
+    def test_forward_is_sign(self):
+        x = jnp.array([-2.0, -0.5, 0.0, 0.5, 2.0])
+        y = model.ste_sign(x)
+        assert np.allclose(y, [-1.0, -1.0, 1.0, 1.0, 1.0])
+
+    def test_gradient_is_clipped_identity(self):
+        # d/dx ste_sign(x) = 1 for |x| < 1, 0 outside (eq. 2's STE).
+        g = jax.grad(lambda x: model.ste_sign(x).sum())(
+            jnp.array([-2.0, -0.5, 0.5, 2.0])
+        )
+        assert np.allclose(g, [0.0, 1.0, 1.0, 0.0])
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 1000))
+    def test_outputs_always_pm_one(self, seed):
+        x = jnp.asarray(np.random.default_rng(seed).standard_normal(64) * 10)
+        y = np.asarray(model.ste_sign(x))
+        assert set(np.unique(y)).issubset({-1.0, 1.0})
+
+
+class TestBatchNormFold:
+    def test_fold_matches_training_bn_at_eval(self):
+        cfg = tiny_cfg()
+        params = model.init_params(cfg, 0)
+        bn = model.init_bn_state(cfg)
+        # Perturb BN state to non-trivial values.
+        bn[0]["mean"] = jnp.asarray(RNG.standard_normal(64).astype(np.float32))
+        bn[0]["var"] = jnp.asarray(
+            np.abs(RNG.standard_normal(64)).astype(np.float32) + 0.5
+        )
+        params[0]["gamma"] = jnp.asarray(
+            RNG.standard_normal(64).astype(np.float32)
+        )
+        folded = model.fold_bn(params, bn, cfg)
+        z = RNG.standard_normal((8, 64)).astype(np.float32)
+        manual = (z - np.asarray(bn[0]["mean"])) / np.sqrt(
+            np.asarray(bn[0]["var"]) + model.BN_EPS
+        ) * np.asarray(params[0]["gamma"]) + np.asarray(params[0]["beta"])
+        via_fold = z * folded[0]["scale"] + folded[0]["shift"]
+        assert np.abs(manual - via_fold).max() < 1e-4
+
+
+class TestTrainingStep:
+    def test_loss_decreases_on_tiny_problem(self):
+        cfg = tiny_cfg()
+        params = model.init_params(cfg, 0)
+        bn = model.init_bn_state(cfg)
+        x = jnp.asarray(RNG.standard_normal((64, 32)).astype(np.float32))
+        y = jnp.asarray(RNG.integers(0, 10, 64).astype(np.int32))
+
+        def loss_of(p, b):
+            return model.loss_fn(cfg, p, b, x, y, train=True)
+
+        (l0, bn), grads = jax.value_and_grad(loss_of, has_aux=True)(params, bn)
+        # Plain SGD steps.
+        for _ in range(30):
+            (l, bn), grads = jax.value_and_grad(loss_of, has_aux=True)(params, bn)
+            params = jax.tree.map(lambda p, g: p - 0.05 * g, params, grads)
+            params = model.clip_latent_weights(cfg, params)
+        (l1, _), _ = jax.value_and_grad(loss_of, has_aux=True)(params, bn)
+        assert l1 < l0, f"loss did not decrease: {l0} -> {l1}"
+
+    def test_clip_keeps_binary_latents_bounded(self):
+        cfg = tiny_cfg()
+        params = model.init_params(cfg, 0)
+        params[1]["w"] = params[1]["w"] * 100.0
+        params = model.clip_latent_weights(cfg, params)
+        assert float(jnp.abs(params[1]["w"]).max()) <= 1.0
+        # Non-binary layers untouched.
+        assert float(jnp.abs(params[0]["w"]).max()) <= 10.0
+
+
+class TestInferenceGraph:
+    def test_matches_training_eval_predictions(self):
+        # The deployed (folded, kernelized) graph must predict the same
+        # classes as the training-mode eval graph.
+        cfg = tiny_cfg(binary=(False, True, False))
+        # Use paper-compatible sizes for kernel tiling.
+        cfg = NetConfig(sizes=(784, 64, 64, 10), binary=(False, True, False))
+        params = model.init_params(cfg, 3)
+        bn = model.init_bn_state(cfg)
+        x = jnp.asarray(RNG.random((16, 784)).astype(np.float32))
+        train_logits, _ = model.forward_train(cfg, params, bn, x, train=False)
+        folded = model.fold_bn(params, bn, cfg)
+        # Binarize deployed binary weights like the exporter does.
+        for i in range(cfg.n_layers):
+            if cfg.binary[i]:
+                folded[i]["w"] = np.where(folded[i]["w"] < 0, -1.0, 1.0).astype(
+                    np.float32
+                )
+        infer_logits = model.forward_inference(cfg, folded, x, use_pallas=True)
+        # bf16 rounding in the deployed graph allows small logit drift;
+        # the argmax must agree on a comfortable majority.
+        agree = (
+            (jnp.argmax(train_logits, 1) == jnp.argmax(infer_logits, 1))
+            .mean()
+            .item()
+        )
+        assert agree >= 0.9, f"prediction agreement only {agree}"
+
+    def test_pallas_and_ref_paths_agree(self):
+        cfg = NetConfig(sizes=(784, 64, 64, 10), binary=(False, True, False))
+        params = model.init_params(cfg, 4)
+        bn = model.init_bn_state(cfg)
+        folded = model.fold_bn(params, bn, cfg)
+        x = jnp.asarray(RNG.random((8, 784)).astype(np.float32))
+        a = model.forward_inference(cfg, folded, x, use_pallas=True)
+        b = model.forward_inference(cfg, folded, x, use_pallas=False)
+        assert np.abs(np.asarray(a) - np.asarray(b)).max() < 0.1
+        assert (np.argmax(a, 1) == np.argmax(b, 1)).mean() >= 0.9

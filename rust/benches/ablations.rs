@@ -1,0 +1,171 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!   1. systolic array dimension (8 / 16 / 32) — throughput vs resources
+//!   2. overlap flags (double-buffered weight streaming & psum drain)
+//!   3. binary packing width (1–16 MACs per PE in binary mode)
+//!   4. batcher policy (max batch / deadline) under the reference backend
+//!   5. bf16 rounding mode (round-to-nearest-even vs truncation) effect
+//!      on accuracy
+
+use std::time::Duration;
+
+use beanna::bf16::{Matrix, BF16};
+use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::data::SynthMnist;
+use beanna::io::ArtifactPaths;
+use beanna::model::ResourceModel;
+use beanna::nn::{accuracy, Network, NetworkConfig};
+use beanna::sim::{Accelerator, AcceleratorConfig};
+use beanna::CLOCK_HZ;
+
+fn main() {
+    let hybrid = NetworkConfig::beanna_hybrid();
+
+    // ---- 1. array dimension sweep ------------------------------------------
+    println!("== ablation 1: systolic array dimension (hybrid, batch 256) ==");
+    println!(
+        "{:>5} {:>12} {:>12} {:>10} {:>8}",
+        "dim", "cycles", "inf/s", "LUTs", "DSPs"
+    );
+    for dim in [8usize, 16, 32] {
+        // dim > 16 exceeds the 16-bit PE lane mask in the RT engine; the
+        // transaction engine models it fine.
+        let cfg = AcceleratorConfig::default().with_array_dim(dim);
+        let net = Network::random(&hybrid, 1);
+        let mut accel = Accelerator::new(cfg);
+        let run = accel
+            .run_network(&net, &Matrix::zeros(256, 784), 256)
+            .unwrap();
+        let res = ResourceModel {
+            dim,
+            has_binary: true,
+        }
+        .report();
+        println!(
+            "{dim:>5} {:>12} {:>12.1} {:>10} {:>8}",
+            run.total_cycles,
+            run.inferences_per_sec(CLOCK_HZ),
+            res.luts(),
+            res.dsps()
+        );
+    }
+
+    // ---- 2. overlap flags ----------------------------------------------------
+    println!("\n== ablation 2: dataflow overlap (hybrid) ==");
+    println!(
+        "{:>22} {:>14} {:>14}",
+        "config", "b1 cycles", "b256 cycles"
+    );
+    for (name, stream, drain) in [
+        ("both overlapped", true, true),
+        ("no weight prefetch", false, true),
+        ("no drain overlap", true, false),
+        ("fully serial", false, false),
+    ] {
+        let mut cfg = AcceleratorConfig::default();
+        cfg.overlap_weight_stream = stream;
+        cfg.overlap_drain = drain;
+        let net = Network::random(&hybrid, 1);
+        let mut cycles = [0u64; 2];
+        for (i, batch) in [1usize, 256].iter().enumerate() {
+            let mut accel = Accelerator::new(cfg.clone());
+            cycles[i] = accel
+                .run_network(&net, &Matrix::zeros(*batch, 784), *batch)
+                .unwrap()
+                .total_cycles;
+        }
+        println!("{name:>22} {:>14} {:>14}", cycles[0], cycles[1]);
+    }
+
+    // ---- 3. binary packing width ----------------------------------------------
+    println!("\n== ablation 3: binary MACs per PE (batch 256, hybrid) ==");
+    println!("{:>6} {:>12} {:>12} {:>10}", "pack", "cycles", "inf/s", "speedup");
+    let mut base_ips = 0.0;
+    for pack in [1usize, 2, 4, 8, 16] {
+        let mut cfg = AcceleratorConfig::default();
+        cfg.binary_pack = pack;
+        let net = Network::random(&hybrid, 1);
+        let mut accel = Accelerator::new(cfg);
+        let run = accel
+            .run_network(&net, &Matrix::zeros(256, 784), 256)
+            .unwrap();
+        let ips = run.inferences_per_sec(CLOCK_HZ);
+        if pack == 1 {
+            base_ips = ips;
+        }
+        println!(
+            "{pack:>6} {:>12} {:>12.1} {:>9.2}x",
+            run.total_cycles,
+            ips,
+            ips / base_ips
+        );
+    }
+
+    // ---- 4. batcher policy ---------------------------------------------------
+    println!("\n== ablation 4: batcher policy (reference backend, 1024 reqs) ==");
+    let paths = ArtifactPaths::discover();
+    let test =
+        SynthMnist::load(&paths.dataset()).unwrap_or_else(|_| SynthMnist::generate(512, 3));
+    let net = Network::load(&paths.weights("hybrid"))
+        .unwrap_or_else(|_| Network::random(&hybrid, 1));
+    println!(
+        "{:>10} {:>12} {:>10} {:>12} {:>14}",
+        "max_batch", "wait_ms", "batches", "mean_batch", "host req/s"
+    );
+    for (max_batch, wait_ms) in [(1usize, 0u64), (16, 1), (64, 2), (256, 4)] {
+        let server = Server::start(
+            Backend::Reference { net: net.clone() },
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_millis(wait_ms),
+                },
+            },
+        );
+        let n = 1024.min(test.len());
+        let rxs: Vec<_> = (0..n)
+            .map(|i| server.submit(test.images.row(i).to_vec()).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let m = server.shutdown();
+        println!(
+            "{max_batch:>10} {wait_ms:>12} {:>10} {:>12.1} {:>14.0}",
+            m.batches, m.mean_batch, m.throughput_rps
+        );
+    }
+
+    // ---- 5. rounding mode ------------------------------------------------------
+    println!("\n== ablation 5: bf16 rounding (RNE vs truncate), fp variant ==");
+    match (
+        Network::load(&paths.weights("fp")),
+        SynthMnist::load(&paths.dataset()),
+    ) {
+        (Ok(net), Ok(test)) => {
+            let subset = test.take(512);
+            let rne_acc = accuracy(
+                &net.forward(subset.images_f32()).unwrap(),
+                &subset.labels,
+            );
+            // Truncating quantization of all weights (cheaper hardware).
+            let mut trunc = net.clone();
+            for layer in &mut trunc.layers {
+                layer
+                    .weights
+                    .map_inplace(|w| BF16::from_f32_truncate(w).to_f32());
+            }
+            let trunc_acc = accuracy(
+                &trunc.forward(subset.images_f32()).unwrap(),
+                &subset.labels,
+            );
+            println!(
+                "round-to-nearest-even {:.2}%  vs  truncate {:.2}%  (Δ {:+.2}%)",
+                rne_acc * 100.0,
+                trunc_acc * 100.0,
+                (trunc_acc - rne_acc) * 100.0
+            );
+        }
+        _ => println!("(needs `make artifacts` for trained weights — skipped)"),
+    }
+}

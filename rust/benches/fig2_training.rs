@@ -1,0 +1,54 @@
+//! Bench: regenerate Fig. 2 ("Network training accuracy progression").
+//!
+//! The curves themselves are produced by `make train` (JAX, build-time);
+//! this target renders the figure data as a CSV series + summary table —
+//! the same series the paper plots — and cross-checks the rust
+//! functional model's accuracy against the final training-side numbers.
+
+use beanna::data::SynthMnist;
+use beanna::experiments;
+use beanna::io::ArtifactPaths;
+use beanna::nn::{accuracy, Network};
+
+fn main() {
+    let paths = ArtifactPaths::discover();
+    let (table, curves) = match experiments::fig2_summary(&paths) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("fig2 curves unavailable ({e}); run `make train` first");
+            std::process::exit(0); // bench target degrades gracefully
+        }
+    };
+    println!("{table}");
+
+    println!("epoch,fp_test_acc,hybrid_test_acc");
+    let (fp, hy) = (&curves[0], &curves[1]);
+    for i in 0..fp.points.len().max(hy.points.len()) {
+        let f = fp.points.get(i).map(|p| p.2).unwrap_or(f64::NAN);
+        let h = hy.points.get(i).map(|p| p.2).unwrap_or(f64::NAN);
+        println!("{},{f:.4},{h:.4}", i + 1);
+    }
+
+    // Cross-check: the deployed (folded, bf16/binary) weights evaluated
+    // by the rust functional model should track the training-side test
+    // accuracy closely (quantization costs at most a few tenths).
+    if let (Ok(test), Ok(fp_net), Ok(hy_net)) = (
+        SynthMnist::load(&paths.dataset()),
+        Network::load(&paths.weights("fp")),
+        Network::load(&paths.weights("hybrid")),
+    ) {
+        let subset = test.take(experiments::eval_limit());
+        for (name, net, curve) in [("fp", &fp_net, fp), ("hybrid", &hy_net, hy)] {
+            let acc = accuracy(
+                &net.forward(subset.images_f32()).unwrap(),
+                &subset.labels,
+            );
+            println!(
+                "deployed {name}: rust-eval {:.2}% vs training-side {:.2}% (Δ {:.2}%)",
+                acc * 100.0,
+                curve.final_test_acc() * 100.0,
+                (acc - curve.final_test_acc()).abs() * 100.0
+            );
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Bench: the §I peak-throughput claims (52.8 / 820 GOps/s) plus a
+//! sustained-throughput sweep over batch size — showing where the
+//! systolic array's fill/drain and weight-load overheads put the
+//! efficiency crossover.
+
+use beanna::experiments::{self, peak::sustained_gops};
+use beanna::sim::Mode;
+use beanna::util::bench::{BenchConfig, Harness};
+
+fn main() {
+    println!("{}", experiments::peak_throughput_table().unwrap());
+
+    println!("sustained GOps/s vs batch (1024×1024 layer):");
+    println!("{:>8} {:>14} {:>14} {:>10}", "batch", "bf16", "binary", "bin/bf16");
+    for batch in [1usize, 4, 16, 64, 256, 512, 1024] {
+        match (
+            sustained_gops(Mode::Bf16, batch),
+            sustained_gops(Mode::Binary, batch),
+        ) {
+            (Ok(fp), Ok(bin)) => {
+                println!("{batch:>8} {fp:>14.2} {bin:>14.2} {:>9.1}x", bin / fp)
+            }
+            // Batches beyond the double-buffered activations BRAM are a
+            // real device limit — report it like the hardware would.
+            (Err(e), _) | (_, Err(e)) => println!("{batch:>8}  {e}"),
+        }
+    }
+
+    Harness::header("host cost of the sustained-throughput measurement");
+    let mut h = Harness::new(BenchConfig::default());
+    h.bench("sustained/bf16/b64", || {
+        sustained_gops(Mode::Bf16, 64).unwrap()
+    });
+    h.bench("sustained/binary/b64", || {
+        sustained_gops(Mode::Binary, 64).unwrap()
+    });
+    h.finish();
+}

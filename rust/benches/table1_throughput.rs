@@ -1,0 +1,41 @@
+//! Bench: regenerate Table I ("Performance and Speed").
+//!
+//! The paper numbers come from the simulator's cycle model (printed as
+//! the table); the host-side timings below measure how fast the
+//! transaction engine itself simulates each configuration.
+
+use beanna::bf16::Matrix;
+use beanna::experiments;
+use beanna::io::ArtifactPaths;
+use beanna::nn::{Network, NetworkConfig};
+use beanna::sim::{Accelerator, AcceleratorConfig};
+use beanna::util::bench::{BenchConfig, Harness};
+
+fn main() {
+    let paths = ArtifactPaths::discover();
+    let (table, rows) = experiments::table1(&paths, experiments::eval_limit()).unwrap();
+    println!("{table}");
+    for row in &rows {
+        println!(
+            "{:>7}: b1 {:>10} cycles   b256 {:>10} cycles",
+            row.variant, row.cycles_b1, row.cycles_b256
+        );
+    }
+
+    Harness::header("host-side simulator throughput (transaction engine)");
+    let mut h = Harness::new(BenchConfig::default());
+    for (name, cfg) in [
+        ("fp", NetworkConfig::beanna_fp()),
+        ("hybrid", NetworkConfig::beanna_hybrid()),
+    ] {
+        let net = Network::random(&cfg, 1);
+        for batch in [1usize, 16] {
+            let x = Matrix::zeros(batch, 784);
+            h.bench(&format!("sim/{name}/batch{batch}"), || {
+                let mut accel = Accelerator::new(AcceleratorConfig::default());
+                accel.run_network(&net, &x, batch).unwrap().total_cycles
+            });
+        }
+    }
+    h.finish();
+}

@@ -1,0 +1,34 @@
+//! Bench: regenerate Table II ("Memory and Hardware Utilization") and
+//! time the analytic models (they sit on the coordinator's reporting
+//! path, so they should be effectively free).
+
+use beanna::experiments;
+use beanna::model::{MemoryModel, ResourceModel};
+use beanna::nn::NetworkConfig;
+use beanna::util::bench::{bb, BenchConfig, Harness};
+
+fn main() {
+    println!("{}", experiments::table2());
+
+    // Per-layer memory breakdown (extension beyond the paper's total).
+    for (name, cfg) in [
+        ("fp", NetworkConfig::beanna_fp()),
+        ("hybrid", NetworkConfig::beanna_hybrid()),
+    ] {
+        let m = MemoryModel::of(&cfg);
+        println!(
+            "{name}: per-layer bytes {:?} (bf16 {} + binary {})",
+            m.per_layer, m.bf16_bytes, m.binary_bytes
+        );
+    }
+
+    Harness::header("model evaluation cost");
+    let mut h = Harness::new(BenchConfig::default());
+    h.bench("resource_model/beanna", || {
+        bb(ResourceModel::beanna().report().luts())
+    });
+    h.bench("memory_model/hybrid", || {
+        bb(MemoryModel::of(&NetworkConfig::beanna_hybrid()).total_bytes())
+    });
+    h.finish();
+}

@@ -1,0 +1,50 @@
+//! Bench: regenerate Table III ("Power Consumption, batch 256").
+//!
+//! Uses the simulator's batch-256 throughputs for the energy rows (the
+//! paper divides measured power by measured throughput), then prints the
+//! activity-scaled extension for both batch sizes.
+
+use beanna::bf16::Matrix;
+use beanna::experiments;
+use beanna::io::ArtifactPaths;
+use beanna::model::PowerModel;
+use beanna::nn::{Network, NetworkConfig};
+use beanna::sim::{Accelerator, AcceleratorConfig};
+
+fn main() {
+    let paths = ArtifactPaths::discover();
+    let (_, rows) = experiments::table1(&paths, 1).unwrap();
+    println!(
+        "{}",
+        experiments::table3(rows[0].ips_b256, rows[1].ips_b256)
+    );
+
+    // Extension (not a paper row): activity-scaled dynamic power.
+    println!("activity-scaled dynamic power (extension, §Power in DESIGN.md):");
+    for (name, cfg, model) in [
+        (
+            "fp    ",
+            NetworkConfig::beanna_fp(),
+            PowerModel::floating_point_only(),
+        ),
+        (
+            "hybrid",
+            NetworkConfig::beanna_hybrid(),
+            PowerModel::beanna(),
+        ),
+    ] {
+        let net = Network::random(&cfg, 1);
+        for batch in [1usize, 256] {
+            let mut accel = Accelerator::new(AcceleratorConfig::default());
+            let run = accel
+                .run_network(&net, &Matrix::zeros(batch, 784), batch)
+                .unwrap();
+            let p = model.activity_scaled(&run);
+            println!(
+                "  {name} batch {batch:>3}: dynamic {:.3} W (vectorless ceiling {:.3} W)",
+                p.dynamic_w,
+                model.vectorless().dynamic_w
+            );
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Floating-point format descriptions — the data behind Fig. 1
+//! ("Bfloat16 vs IEEE standard data types").
+//!
+//! The `beanna fig1` subcommand and `examples/quickstart.rs` render this
+//! as an ASCII diagram matching the paper's figure.
+
+/// Description of a sign/exponent/mantissa floating-point format.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FloatFormat {
+    /// Format name as in Fig. 1.
+    pub name: &'static str,
+    /// Total storage bits.
+    pub bits: u32,
+    /// Exponent field width.
+    pub exponent_bits: u32,
+    /// Explicit mantissa (fraction) field width.
+    pub mantissa_bits: u32,
+}
+
+impl FloatFormat {
+    /// IEEE-754 binary32.
+    pub const FP32: FloatFormat = FloatFormat {
+        name: "fp32",
+        bits: 32,
+        exponent_bits: 8,
+        mantissa_bits: 23,
+    };
+    /// IEEE-754 binary16.
+    pub const FP16: FloatFormat = FloatFormat {
+        name: "fp16",
+        bits: 16,
+        exponent_bits: 5,
+        mantissa_bits: 10,
+    };
+    /// Google Brain bfloat16 (§II-C).
+    pub const BF16: FloatFormat = FloatFormat {
+        name: "bfloat16",
+        bits: 16,
+        exponent_bits: 8,
+        mantissa_bits: 7,
+    };
+
+    /// All formats shown in Fig. 1.
+    pub const FIG1: [FloatFormat; 3] = [Self::FP32, Self::FP16, Self::BF16];
+
+    /// Exponent bias `2^(e-1) - 1`.
+    pub fn bias(&self) -> i32 {
+        (1 << (self.exponent_bits - 1)) - 1
+    }
+
+    /// Largest finite value.
+    pub fn max_finite(&self) -> f64 {
+        let max_exp = self.bias(); // all-ones exponent is inf/nan
+        let mantissa_max = 2.0 - 2f64.powi(-(self.mantissa_bits as i32));
+        mantissa_max * 2f64.powi(max_exp)
+    }
+
+    /// Smallest positive normal value.
+    pub fn min_normal(&self) -> f64 {
+        2f64.powi(1 - self.bias())
+    }
+
+    /// Decimal digits of precision, `(m+1) * log10(2)`.
+    pub fn decimal_digits(&self) -> f64 {
+        (self.mantissa_bits + 1) as f64 * 2f64.log10()
+    }
+
+    /// The §II-C hardware argument: multiplier area scales quadratically
+    /// with the significand width (m+1 including the hidden bit). Returns
+    /// the area of this format's multiplier relative to fp32's.
+    pub fn relative_multiplier_area(&self) -> f64 {
+        let w = (self.mantissa_bits + 1) as f64;
+        let w32 = (FloatFormat::FP32.mantissa_bits + 1) as f64;
+        (w * w) / (w32 * w32)
+    }
+
+    /// Render the bit layout as an ASCII field diagram, e.g.
+    /// `[S|EEEEEEEE|MMMMMMM]`.
+    pub fn ascii_layout(&self) -> String {
+        let mut s = String::from("[S|");
+        for _ in 0..self.exponent_bits {
+            s.push('E');
+        }
+        s.push('|');
+        for _ in 0..self.mantissa_bits {
+            s.push('M');
+        }
+        s.push(']');
+        s
+    }
+}
+
+/// Render Fig. 1 as a text table + layout diagrams.
+pub fn render_fig1() -> String {
+    let mut out = String::new();
+    out.push_str("Fig. 1 — bfloat16 vs IEEE standard data types\n\n");
+    out.push_str(&format!(
+        "{:<10} {:>5} {:>4} {:>4} {:>12} {:>12} {:>7} {:>9}\n",
+        "format", "bits", "exp", "man", "max", "min-normal", "digits", "mul-area"
+    ));
+    for f in FloatFormat::FIG1.iter() {
+        out.push_str(&format!(
+            "{:<10} {:>5} {:>4} {:>4} {:>12.4e} {:>12.4e} {:>7.2} {:>8.1}%\n",
+            f.name,
+            f.bits,
+            f.exponent_bits,
+            f.mantissa_bits,
+            f.max_finite(),
+            f.min_normal(),
+            f.decimal_digits(),
+            f.relative_multiplier_area() * 100.0,
+        ));
+    }
+    out.push('\n');
+    for f in FloatFormat::FIG1.iter() {
+        out.push_str(&format!("{:<10} {}\n", f.name, f.ascii_layout()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_widths_sum() {
+        for f in FloatFormat::FIG1.iter() {
+            assert_eq!(1 + f.exponent_bits + f.mantissa_bits, f.bits, "{}", f.name);
+        }
+    }
+
+    #[test]
+    fn biases() {
+        assert_eq!(FloatFormat::FP32.bias(), 127);
+        assert_eq!(FloatFormat::FP16.bias(), 15);
+        assert_eq!(FloatFormat::BF16.bias(), 127);
+    }
+
+    #[test]
+    fn ranges_match_ieee() {
+        // fp32 max ≈ 3.4028e38, fp16 max = 65504, bf16 max ≈ 3.3895e38.
+        assert!((FloatFormat::FP32.max_finite() - 3.4028234e38).abs() < 1e31);
+        assert!((FloatFormat::FP16.max_finite() - 65504.0).abs() < 1e-6);
+        assert!((FloatFormat::BF16.max_finite() - 3.3895314e38).abs() < 1e31);
+        // bf16 shares fp32's dynamic range (§II-C's key point).
+        assert_eq!(
+            FloatFormat::BF16.min_normal(),
+            FloatFormat::FP32.min_normal()
+        );
+    }
+
+    #[test]
+    fn bf16_multiplier_smaller_than_fp16() {
+        // The quadratic-area argument: bf16's 8-bit significand multiplier
+        // is smaller than fp16's 11-bit one.
+        assert!(
+            FloatFormat::BF16.relative_multiplier_area()
+                < FloatFormat::FP16.relative_multiplier_area()
+        );
+    }
+
+    #[test]
+    fn ascii_layout_widths() {
+        assert_eq!(FloatFormat::BF16.ascii_layout(), "[S|EEEEEEEE|MMMMMMM]");
+        assert_eq!(
+            FloatFormat::FP16.ascii_layout().len() as u32,
+            FloatFormat::FP16.bits + 4 // 2 brackets + 2 separators + S,
+                                       // minus the implicit sign bit = +4
+        );
+    }
+
+    #[test]
+    fn fig1_renders() {
+        let s = render_fig1();
+        assert!(s.contains("bfloat16"));
+        assert!(s.contains("fp32"));
+        assert!(s.contains("[S|EEEEEEEE|MMMMMMM]"));
+    }
+}

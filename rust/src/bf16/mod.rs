@@ -1,0 +1,330 @@
+//! Software bfloat16 (Brain Floating Point) arithmetic.
+//!
+//! The paper (§II-C) picks bfloat16 — 1 sign bit, 8 exponent bits,
+//! 7 mantissa bits — as BEANNA's high-precision datatype because it keeps
+//! fp32's dynamic range with a quadratically smaller hardware multiplier.
+//!
+//! This module is the bit-exact model of the PE's bfloat16 datapath:
+//!
+//! * [`BF16`] — storage type: the upper 16 bits of an IEEE-754 binary32.
+//! * Conversions round-to-nearest-even (the behaviour of TPU/ZynqMP-style
+//!   hardware converters and of XLA's `convert f32->bf16`).
+//! * The PE multiply-add ([`mac_bf16`]) multiplies two BF16 operands
+//!   exactly (a 8×8-bit significand product fits f32 with room to spare)
+//!   and accumulates in f32 — matching both the DSP48-based FPGA datapath
+//!   and the `preferred_element_type=f32` JAX kernels, so the simulator,
+//!   the rust reference model, and the PJRT artifacts agree.
+//!
+//! [`format`] additionally models Fig. 1 (bfloat16 vs IEEE data types)
+//! for the `fig1` report.
+
+pub mod format;
+pub mod tensor;
+
+pub use tensor::Matrix;
+
+/// A bfloat16 value, stored as its raw 16-bit pattern.
+///
+/// Bit layout (Fig. 1): `s eeeeeeee mmmmmmm` — sign, 8 exponent bits
+/// (bias 127), 7 explicit mantissa bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BF16(pub u16);
+
+impl BF16 {
+    /// Positive zero.
+    pub const ZERO: BF16 = BF16(0);
+    /// One.
+    pub const ONE: BF16 = BF16(0x3F80);
+    /// Negative one.
+    pub const NEG_ONE: BF16 = BF16(0xBF80);
+
+    /// Convert from f32 with round-to-nearest-even.
+    ///
+    /// This is the standard hardware algorithm: add `0x7FFF + lsb` to the
+    /// 32-bit pattern and truncate. NaNs are quieted to a canonical NaN so
+    /// a payload never rounds to infinity.
+    #[inline]
+    pub fn from_f32(x: f32) -> Self {
+        let bits = x.to_bits();
+        if x.is_nan() {
+            // Canonical quiet NaN with the sign preserved.
+            return BF16(((bits >> 16) as u16 & 0x8000) | 0x7FC0);
+        }
+        let lsb = (bits >> 16) & 1;
+        let rounded = bits.wrapping_add(0x7FFF + lsb);
+        BF16((rounded >> 16) as u16)
+    }
+
+    /// Truncating conversion (no rounding). Provided for the ablation
+    /// bench comparing round-to-nearest-even against the cheaper
+    /// truncation hardware some designs use.
+    #[inline]
+    pub fn from_f32_truncate(x: f32) -> Self {
+        BF16((x.to_bits() >> 16) as u16)
+    }
+
+    /// Widen to f32 (exact: every bf16 is representable in f32).
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        f32::from_bits((self.0 as u32) << 16)
+    }
+
+    /// Raw bit pattern.
+    #[inline]
+    pub fn to_bits(self) -> u16 {
+        self.0
+    }
+
+    /// Construct from a raw bit pattern.
+    #[inline]
+    pub fn from_bits(bits: u16) -> Self {
+        BF16(bits)
+    }
+
+    /// Sign bit set?
+    #[inline]
+    pub fn is_sign_negative(self) -> bool {
+        self.0 & 0x8000 != 0
+    }
+
+    /// Is NaN (all-ones exponent, nonzero mantissa)?
+    #[inline]
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7F80) == 0x7F80 && (self.0 & 0x007F) != 0
+    }
+
+    /// Is ±infinity?
+    #[inline]
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7F80
+    }
+
+    /// The sign in {-1.0, +1.0} (used by the binarizer; sign(0) := +1,
+    /// matching the training-side convention `where(x >= 0, 1, -1)`).
+    #[inline]
+    pub fn binarize(self) -> f32 {
+        if self.is_sign_negative() && (self.0 & 0x7FFF) != 0 {
+            -1.0
+        } else {
+            1.0
+        }
+    }
+
+    /// Multiply two bf16 values exactly and round the result to bf16.
+    /// The exact product of two 8-bit significands needs ≤16 significand
+    /// bits, so computing it in f32 (24-bit significand) is exact; the
+    /// only rounding is the final f32→bf16 step — exactly one rounding,
+    /// like the hardware multiplier.
+    #[inline]
+    pub fn mul(self, rhs: BF16) -> BF16 {
+        BF16::from_f32(self.to_f32() * rhs.to_f32())
+    }
+
+    /// Add two bf16 values with a single rounding (exact in f64, then
+    /// round twice f64→f32→bf16 — safe here because any f64 sum of two
+    /// bf16s is exactly representable in f32's 24-bit significand when
+    /// the exponent difference ≤ 16, and otherwise rounds identically).
+    #[inline]
+    pub fn add(self, rhs: BF16) -> BF16 {
+        BF16::from_f32(self.to_f32() + rhs.to_f32())
+    }
+}
+
+impl From<f32> for BF16 {
+    fn from(x: f32) -> Self {
+        BF16::from_f32(x)
+    }
+}
+
+impl From<BF16> for f32 {
+    fn from(x: BF16) -> f32 {
+        x.to_f32()
+    }
+}
+
+impl std::fmt::Display for BF16 {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.to_f32())
+    }
+}
+
+/// The PE high-precision datapath (Fig. 5): one multiply-add.
+///
+/// `psum + a*w` where `a`, `w` are bf16 and the partial-sum chain is f32.
+/// The product of two bf16s is exact in f32, and the accumulate is a
+/// single f32 addition — this mirrors accumulating in a wider fixed
+/// register as FPGA/TPU MACs do, and matches the JAX kernels
+/// (`preferred_element_type=jnp.float32`).
+#[inline]
+pub fn mac_bf16(psum: f32, a: BF16, w: BF16) -> f32 {
+    psum + a.to_f32() * w.to_f32()
+}
+
+/// Round an f32 slice to bf16-resolution f32s (quantize-dequantize).
+/// Used when staging activations/weights into the simulated BRAMs.
+pub fn quantize_slice(xs: &[f32]) -> Vec<f32> {
+    xs.iter().map(|&x| BF16::from_f32(x).to_f32()).collect()
+}
+
+/// Dot product in the PE datapath numerics: bf16 inputs, f32 accumulate.
+pub fn dot_bf16(a: &[f32], w: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), w.len());
+    let mut acc = 0.0f32;
+    for (&x, &y) in a.iter().zip(w.iter()) {
+        acc = mac_bf16(acc, BF16::from_f32(x), BF16::from_f32(y));
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn roundtrip_exact_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, -0.5, 2.0, 256.0, -1024.0] {
+            assert_eq!(BF16::from_f32(x).to_f32(), x, "{x} should be exact");
+        }
+    }
+
+    #[test]
+    fn constants() {
+        assert_eq!(BF16::ZERO.to_f32(), 0.0);
+        assert_eq!(BF16::ONE.to_f32(), 1.0);
+        assert_eq!(BF16::NEG_ONE.to_f32(), -1.0);
+    }
+
+    #[test]
+    fn round_to_nearest_even_ties() {
+        // 1.0 + 2^-8 is exactly halfway between bf16(1.0) and the next
+        // representable value 1.0078125; ties-to-even keeps 1.0.
+        let halfway = 1.0 + 2f32.powi(-8);
+        assert_eq!(BF16::from_f32(halfway).to_f32(), 1.0);
+        // Slightly above the tie rounds up.
+        let above = 1.0 + 2f32.powi(-8) + 2f32.powi(-16);
+        assert_eq!(BF16::from_f32(above).to_f32(), 1.0078125);
+        // Odd mantissa tie rounds up to even: 1.0078125 + 2^-8 / ... the
+        // value halfway between 1.0078125 (mantissa 0000001) and 1.015625
+        // (mantissa 0000010) must round to the even mantissa (0000010).
+        let halfway_odd = 1.0078125 + 2f32.powi(-8);
+        assert_eq!(BF16::from_f32(halfway_odd).to_f32(), 1.015625);
+    }
+
+    #[test]
+    fn nan_quieting_and_infinity() {
+        assert!(BF16::from_f32(f32::NAN).is_nan());
+        assert!(BF16::from_f32(f32::INFINITY).is_infinite());
+        assert!(BF16::from_f32(f32::NEG_INFINITY).is_infinite());
+        assert!(BF16::from_f32(f32::NEG_INFINITY).is_sign_negative());
+        // Large-but-finite f32 (above bf16 max ≈ 3.39e38) overflows to
+        // bf16 infinity under round-to-nearest.
+        assert!(BF16::from_f32(3.4e38).is_infinite());
+    }
+
+    #[test]
+    fn truncate_vs_round() {
+        // A value whose lower 16 bits are >= half ULP rounds up but
+        // truncates down.
+        let x = f32::from_bits(0x3F80_8000); // 1.0 + tie exactly
+        assert_eq!(BF16::from_f32_truncate(x).to_bits(), 0x3F80);
+        assert_eq!(BF16::from_f32(x).to_bits(), 0x3F80); // tie-to-even
+        let y = f32::from_bits(0x3F80_8001); // just above the tie
+        assert_eq!(BF16::from_f32_truncate(y).to_bits(), 0x3F80);
+        assert_eq!(BF16::from_f32(y).to_bits(), 0x3F81);
+    }
+
+    #[test]
+    fn binarize_sign_convention() {
+        assert_eq!(BF16::from_f32(0.3).binarize(), 1.0);
+        assert_eq!(BF16::from_f32(-0.3).binarize(), -1.0);
+        assert_eq!(BF16::from_f32(0.0).binarize(), 1.0);
+        assert_eq!(BF16::from_f32(-0.0).binarize(), 1.0); // -0 counts as +1
+    }
+
+    #[test]
+    fn mul_single_rounding() {
+        // 1.0078125 * 1.0078125 = 1.01568604... -> nearest bf16 1.015625.
+        let a = BF16::from_f32(1.0078125);
+        let p = a.mul(a);
+        assert_eq!(p.to_f32(), 1.015625);
+    }
+
+    #[test]
+    fn prop_roundtrip_error_bound() {
+        // |x - bf16(x)| <= 2^-8 * |x| for normal-range values.
+        check("bf16 relative rounding error", 2000, |g: &mut Gen| {
+            let x = g.f32_in(-1e30, 1e30);
+            if x == 0.0 || !x.is_finite() {
+                return Ok(());
+            }
+            let r = BF16::from_f32(x).to_f32();
+            let rel = ((r - x) / x).abs();
+            if rel <= 2f32.powi(-8) {
+                Ok(())
+            } else {
+                Err(format!("x={x} r={r} rel={rel}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_rounding_is_monotone() {
+        check("bf16 rounding monotone", 2000, |g: &mut Gen| {
+            let a = g.nasty_f32();
+            let b = g.nasty_f32();
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            let (rl, rh) = (BF16::from_f32(lo).to_f32(), BF16::from_f32(hi).to_f32());
+            if rl <= rh {
+                Ok(())
+            } else {
+                Err(format!("lo={lo} hi={hi} rl={rl} rh={rh}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_round_is_nearest() {
+        // The rounded value must be at least as close as the neighbours.
+        check("bf16 round-to-nearest", 2000, |g: &mut Gen| {
+            let x = g.f32_in(-1e20, 1e20);
+            let r = BF16::from_f32(x);
+            let up = BF16::from_bits(r.to_bits().wrapping_add(1));
+            let down = BF16::from_bits(r.to_bits().wrapping_sub(1));
+            let d = (r.to_f32() - x).abs();
+            for n in [up, down] {
+                if n.is_nan() || n.is_infinite() {
+                    continue;
+                }
+                // Same-sign neighbours only (bit-adjacent across 0 jumps sign).
+                if (n.to_f32() - x).abs() + 1e-38 < d
+                    && n.is_sign_negative() == r.is_sign_negative()
+                {
+                    return Err(format!(
+                        "x={x}: rounded to {} but neighbour {} is closer",
+                        r.to_f32(),
+                        n.to_f32()
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn dot_matches_scalar_path() {
+        let a = vec![0.5, -1.25, 3.0, 0.125];
+        let w = vec![2.0, 4.0, -0.5, 8.0];
+        let d = dot_bf16(&a, &w);
+        let expect = 0.5 * 2.0 + (-1.25) * 4.0 + 3.0 * (-0.5) + 0.125 * 8.0;
+        assert_eq!(d, expect); // all values bf16-exact
+    }
+
+    #[test]
+    fn quantize_slice_idempotent() {
+        let xs: Vec<f32> = vec![0.1, 0.2, 0.3, -7.7, 123.456];
+        let q1 = quantize_slice(&xs);
+        let q2 = quantize_slice(&q1);
+        assert_eq!(q1, q2);
+    }
+}

@@ -1,0 +1,444 @@
+//! A minimal row-major f32 matrix used across the reference model, the
+//! simulator, and the data pipeline.
+//!
+//! Values are stored as f32; bf16 semantics are applied explicitly at the
+//! datapath boundaries (see [`crate::bf16::quantize_slice`] and
+//! [`Matrix::matmul_bf16`]), mirroring how the hardware stores bf16 in
+//! BRAM but accumulates in wider registers.
+
+use anyhow::{ensure, Result};
+
+use super::{mac_bf16, BF16};
+
+/// Dense row-major matrix of f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    /// Row-major data, `rows * cols` elements.
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Build from data; checks the element count.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        ensure!(
+            data.len() == rows * cols,
+            "matrix {}x{} needs {} elements, got {}",
+            rows,
+            cols,
+            rows * cols,
+            data.len()
+        );
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// Plain f32 matmul `self(R×K) · rhs(K×C)`; the highest-precision
+    /// reference used by tests.
+    pub fn matmul_f32(&self, rhs: &Matrix) -> Result<Matrix> {
+        ensure!(
+            self.cols == rhs.rows,
+            "matmul dim mismatch: {}x{} · {}x{}",
+            self.rows,
+            self.cols,
+            rhs.rows,
+            rhs.cols
+        );
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        // K-inner loop over rhs rows keeps accesses sequential.
+        for r in 0..self.rows {
+            let a_row = self.row(r);
+            let out_row = &mut out.data[r * rhs.cols..(r + 1) * rhs.cols];
+            for (k, &a) in a_row.iter().enumerate() {
+                let b_row = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
+                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
+                    *o += a * b;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Matmul in the PE's bf16 datapath numerics: both operands rounded to
+    /// bf16, products exact, accumulation in f32 in k-order — bit-exact
+    /// with the systolic simulator's high-precision mode.
+    pub fn matmul_bf16(&self, rhs: &Matrix) -> Result<Matrix> {
+        ensure!(
+            self.cols == rhs.rows,
+            "matmul dim mismatch: {}x{} · {}x{}",
+            self.rows,
+            self.cols,
+            rhs.rows,
+            rhs.cols
+        );
+        // Pre-quantize both operands once.
+        let a_q: Vec<BF16> = self.data.iter().map(|&x| BF16::from_f32(x)).collect();
+        let b_q: Vec<BF16> = rhs.data.iter().map(|&x| BF16::from_f32(x)).collect();
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        for r in 0..self.rows {
+            for c in 0..rhs.cols {
+                let mut acc = 0.0f32;
+                for k in 0..self.cols {
+                    acc = mac_bf16(acc, a_q[r * self.cols + k], b_q[k * rhs.cols + c]);
+                }
+                out.data[r * rhs.cols + c] = acc;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Matmul in the **hardware's** bf16 numerics: like
+    /// [`Self::matmul_bf16`] but accumulating in k-blocks of `k_block`
+    /// (the systolic array computes a block partial sum internally, then
+    /// the psum accumulator BRAM adds block sums — f32 addition is not
+    /// associative, so the grouping is part of the numeric contract).
+    /// This is bit-exact with the cycle-level simulator at
+    /// `k_block = ARRAY_DIM`.
+    pub fn matmul_bf16_blocked(&self, rhs: &Matrix, k_block: usize) -> Result<Matrix> {
+        ensure!(
+            self.cols == rhs.rows,
+            "matmul dim mismatch: {}x{} · {}x{}",
+            self.rows,
+            self.cols,
+            rhs.rows,
+            rhs.cols
+        );
+        ensure!(k_block > 0, "k_block must be positive");
+        let a_q: Vec<BF16> = self.data.iter().map(|&x| BF16::from_f32(x)).collect();
+        let b_q: Vec<BF16> = rhs.data.iter().map(|&x| BF16::from_f32(x)).collect();
+        let mut out = Matrix::zeros(self.rows, rhs.cols);
+        for r in 0..self.rows {
+            for c in 0..rhs.cols {
+                let mut acc = 0.0f32; // psum accumulator BRAM
+                let mut k0 = 0;
+                while k0 < self.cols {
+                    let k1 = (k0 + k_block).min(self.cols);
+                    let mut block = 0.0f32; // in-array column accumulation
+                    for k in k0..k1 {
+                        block = mac_bf16(block, a_q[r * self.cols + k], b_q[k * rhs.cols + c]);
+                    }
+                    acc += block;
+                    k0 = k1;
+                }
+                out.data[r * rhs.cols + c] = acc;
+            }
+        }
+        Ok(out)
+    }
+
+    /// `self (B×K) · wᵀ` where `w` is stored `N×K` (the hardware's
+    /// weight layout: one output neuron per row), in the identical
+    /// blocked-accumulation numerics as [`Self::matmul_bf16_blocked`] —
+    /// bit-exact with it (asserted by tests) but walking **both**
+    /// operands contiguously, which is ~10× faster on large layers.
+    /// This is the L3 functional hot path (see EXPERIMENTS.md §Perf).
+    pub fn matmul_bf16_blocked_t(&self, w_nk: &Matrix, k_block: usize) -> Result<Matrix> {
+        ensure!(
+            self.cols == w_nk.cols,
+            "matmul_t dim mismatch: {}x{} · ({}x{})ᵀ",
+            self.rows,
+            self.cols,
+            w_nk.rows,
+            w_nk.cols
+        );
+        ensure!(k_block > 0, "k_block must be positive");
+        let k = self.cols;
+        // Quantize once. (Weights loaded from BRAM are already bf16-
+        // representable, so this is usually the identity.)
+        let quant = |xs: &[f32]| -> Vec<f32> {
+            xs.iter().map(|&x| BF16::from_f32(x).to_f32()).collect()
+        };
+        let a_q = quant(&self.data);
+        let w_q = quant(&w_nk.data);
+        let n = w_nk.rows;
+        let mut out = Matrix::zeros(self.rows, n);
+        // Each output's accumulation order is fixed by the hardware
+        // contract (sequential within a k-block, block sums added in
+        // order), which serializes the FP adds per output. Recover ILP
+        // by advancing FOUR independent output columns per k-pass: four
+        // independent add chains saturate the FMA ports, and `a_row`
+        // loads amortize 4×. Per-output order is untouched → bit-exact
+        // with the scalar form (asserted by tests).
+        // Additionally tile over 4 batch rows so each streamed weight row
+        // serves 4 outputs (W traffic ÷4 — this kernel is memory-bound
+        // on large layers; see EXPERIMENTS.md §Perf iteration log).
+        let mut r = 0;
+        while r < self.rows {
+            let r_tile = (self.rows - r).min(4);
+            let mut c = 0;
+            while c + 4 <= n {
+                let w0 = &w_q[c * k..(c + 1) * k];
+                let w1 = &w_q[(c + 1) * k..(c + 2) * k];
+                let w2 = &w_q[(c + 2) * k..(c + 3) * k];
+                let w3 = &w_q[(c + 3) * k..(c + 4) * k];
+                for rr in r..r + r_tile {
+                    let a_row = &a_q[rr * k..(rr + 1) * k];
+                    let (mut acc0, mut acc1, mut acc2, mut acc3) =
+                        (0f32, 0f32, 0f32, 0f32);
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let k1 = (k0 + k_block).min(k);
+                        let (mut b0, mut b1, mut b2, mut b3) =
+                            (0f32, 0f32, 0f32, 0f32);
+                        for kk in k0..k1 {
+                            let a = a_row[kk];
+                            b0 += a * w0[kk];
+                            b1 += a * w1[kk];
+                            b2 += a * w2[kk];
+                            b3 += a * w3[kk];
+                        }
+                        acc0 += b0;
+                        acc1 += b1;
+                        acc2 += b2;
+                        acc3 += b3;
+                        k0 = k1;
+                    }
+                    let out_row = &mut out.data[rr * n..(rr + 1) * n];
+                    out_row[c] = acc0;
+                    out_row[c + 1] = acc1;
+                    out_row[c + 2] = acc2;
+                    out_row[c + 3] = acc3;
+                }
+                c += 4;
+            }
+            // Ragged tail columns.
+            while c < n {
+                let w_row = &w_q[c * k..(c + 1) * k];
+                for rr in r..r + r_tile {
+                    let a_row = &a_q[rr * k..(rr + 1) * k];
+                    let mut acc = 0.0f32;
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let k1 = (k0 + k_block).min(k);
+                        let mut block = 0.0f32;
+                        for kk in k0..k1 {
+                            block += a_row[kk] * w_row[kk];
+                        }
+                        acc += block;
+                        k0 = k1;
+                    }
+                    out.data[rr * n + c] = acc;
+                }
+                c += 1;
+            }
+            r += r_tile;
+        }
+        Ok(out)
+    }
+
+    /// Max absolute elementwise difference (∞-norm of the difference).
+    pub fn max_abs_diff(&self, other: &Matrix) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// In-place elementwise map.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn mat(rows: usize, cols: usize, xs: &[f32]) -> Matrix {
+        Matrix::from_vec(rows, cols, xs.to_vec()).unwrap()
+    }
+
+    #[test]
+    fn matmul_small_known() {
+        let a = mat(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = mat(2, 2, &[1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul_f32(&b).unwrap();
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_shape_mismatch_errors() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        assert!(a.matmul_f32(&b).is_err());
+        assert!(a.matmul_bf16(&b).is_err());
+    }
+
+    #[test]
+    fn from_vec_validates_len() {
+        assert!(Matrix::from_vec(2, 2, vec![0.0; 3]).is_err());
+        assert!(Matrix::from_vec(2, 2, vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = mat(2, 3, &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose().transpose(), a);
+        assert_eq!(a.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn bf16_matmul_exact_on_representable_inputs() {
+        // Powers of two and small integers are bf16-exact, and k=2 sums
+        // stay exact in f32 accumulate.
+        let a = mat(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let b = mat(2, 2, &[0.5, -1.0, 2.0, 8.0]);
+        let c_bf = a.matmul_bf16(&b).unwrap();
+        let c_f = a.matmul_f32(&b).unwrap();
+        assert_eq!(c_bf, c_f);
+    }
+
+    #[test]
+    fn prop_bf16_matmul_close_to_f32() {
+        check("bf16 matmul relative error", 60, |g: &mut Gen| {
+            let (m, k) = g.dims(12);
+            let n = g.usize_in(1..12);
+            let a = Matrix::from_vec(
+                m,
+                k,
+                (0..m * k).map(|_| g.f32_in(-2.0, 2.0)).collect(),
+            )
+            .unwrap();
+            let b = Matrix::from_vec(
+                k,
+                n,
+                (0..k * n).map(|_| g.f32_in(-2.0, 2.0)).collect(),
+            )
+            .unwrap();
+            let exact = a.matmul_f32(&b).unwrap();
+            let approx = a.matmul_bf16(&b).unwrap();
+            // Each product has ≤ 2^-8 relative input rounding twice over;
+            // bound the output loosely by k * 2^-7 * max|a||b|.
+            let bound = k as f32 * 2f32.powi(-7) * 4.0 + 1e-5;
+            let diff = exact.max_abs_diff(&approx);
+            if diff <= bound {
+                Ok(())
+            } else {
+                Err(format!("diff {diff} > bound {bound} (m{m} k{k} n{n})"))
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_matmul_matches_unblocked_when_block_covers_k() {
+        let mut g = Gen::new(17);
+        let a = Matrix::from_vec(3, 7, (0..21).map(|_| g.f32_in(-2.0, 2.0)).collect()).unwrap();
+        let b = Matrix::from_vec(7, 4, (0..28).map(|_| g.f32_in(-2.0, 2.0)).collect()).unwrap();
+        // k_block >= K degenerates to sequential accumulation.
+        assert_eq!(
+            a.matmul_bf16_blocked(&b, 7).unwrap(),
+            a.matmul_bf16(&b).unwrap()
+        );
+        assert_eq!(
+            a.matmul_bf16_blocked(&b, 100).unwrap(),
+            a.matmul_bf16(&b).unwrap()
+        );
+    }
+
+    #[test]
+    fn prop_blocked_matmul_close_to_exact() {
+        check("blocked bf16 matmul error", 40, |g: &mut Gen| {
+            let (m, k) = g.dims(20);
+            let n = g.usize_in(1..8);
+            let kb = g.usize_in(1..8);
+            let a =
+                Matrix::from_vec(m, k, (0..m * k).map(|_| g.f32_in(-2.0, 2.0)).collect()).unwrap();
+            let b =
+                Matrix::from_vec(k, n, (0..k * n).map(|_| g.f32_in(-2.0, 2.0)).collect()).unwrap();
+            let exact = a.matmul_f32(&b).unwrap();
+            let blocked = a.matmul_bf16_blocked(&b, kb).unwrap();
+            let bound = k as f32 * 2f32.powi(-7) * 4.0 + 1e-5;
+            let diff = exact.max_abs_diff(&blocked);
+            if diff <= bound {
+                Ok(())
+            } else {
+                Err(format!("diff {diff} > {bound}"))
+            }
+        });
+    }
+
+    #[test]
+    fn blocked_t_bit_exact_with_blocked() {
+        let mut g = Gen::new(23);
+        for _ in 0..20 {
+            let (b, k) = g.dims(40);
+            let n = g.usize_in(1..20);
+            let kb = g.usize_in(1..20);
+            let a =
+                Matrix::from_vec(b, k, (0..b * k).map(|_| g.f32_in(-3.0, 3.0)).collect()).unwrap();
+            let w_nk =
+                Matrix::from_vec(n, k, (0..n * k).map(|_| g.f32_in(-3.0, 3.0)).collect()).unwrap();
+            let fast = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
+            let slow = a.matmul_bf16_blocked(&w_nk.transpose(), kb).unwrap();
+            assert_eq!(fast, slow, "b={b} k={k} n={n} kb={kb}");
+        }
+    }
+
+    #[test]
+    fn blocked_t_shape_mismatch_errors() {
+        let a = Matrix::zeros(2, 5);
+        let w = Matrix::zeros(3, 4);
+        assert!(a.matmul_bf16_blocked_t(&w, 16).is_err());
+    }
+
+    #[test]
+    fn map_inplace_applies() {
+        let mut a = mat(1, 3, &[-2.0, 0.5, 2.0]);
+        a.map_inplace(|x| x.clamp(-1.0, 1.0));
+        assert_eq!(a.data, vec![-1.0, 0.5, 1.0]);
+    }
+}

@@ -1,0 +1,138 @@
+//! Bit-packed ±1 matrices and the binary matmul used by the reference
+//! model and the coordinator's fast functional path.
+
+use anyhow::{ensure, Result};
+
+use super::BitVector;
+use crate::bf16::Matrix;
+
+/// A matrix with ±1 entries, stored as one packed [`BitVector`] per row.
+///
+/// For an activations·weightsᵀ product both operands are packed along the
+/// K (inner) dimension, so the weight matrix is stored **transposed**
+/// relative to the float layout (out_features rows of in_features bits) —
+/// the same layout DMA controller 1 streams into the systolic array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitMatrix {
+    /// Number of rows.
+    pub rows: usize,
+    /// Logical bits per row.
+    pub cols: usize,
+    /// One packed row per matrix row.
+    pub row_bits: Vec<BitVector>,
+}
+
+impl BitMatrix {
+    /// Binarize a float matrix row-wise (bit = 1 ⇔ value < 0).
+    pub fn from_matrix(m: &Matrix) -> Self {
+        let row_bits = (0..m.rows).map(|r| BitVector::from_f32(m.row(r))).collect();
+        Self {
+            rows: m.rows,
+            cols: m.cols,
+            row_bits,
+        }
+    }
+
+    /// Expand to a float matrix of ±1 values.
+    pub fn to_matrix(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for (r, bits) in self.row_bits.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(&bits.to_f32());
+        }
+        out
+    }
+
+    /// Row accessor.
+    pub fn row(&self, r: usize) -> &BitVector {
+        &self.row_bits[r]
+    }
+
+    /// Binary matmul: `self (B×K, activations) · rhsᵀ (N×K, weights)`
+    /// → integer counts `B×N`. Each output element is an XNOR-popcount
+    /// inner product (eq. 1); results are exact integers in `[-K, K]`.
+    pub fn matmul_t(&self, weights_t: &BitMatrix) -> Result<Matrix> {
+        ensure!(
+            self.cols == weights_t.cols,
+            "binary matmul K mismatch: {} vs {}",
+            self.cols,
+            weights_t.cols
+        );
+        let mut out = Matrix::zeros(self.rows, weights_t.rows);
+        for r in 0..self.rows {
+            let a = &self.row_bits[r];
+            let out_row = out.row_mut(r);
+            for (c, w) in weights_t.row_bits.iter().enumerate() {
+                out_row[c] = a.dot(w) as f32;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Total packed storage in bytes (1 bit per element, rows padded to
+    /// whole bytes — the Table II memory accounting).
+    pub fn packed_bytes(&self) -> usize {
+        self.row_bits.iter().map(|r| r.packed_bytes()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn sign_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, g.signs(rows * cols)).unwrap()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, -1.0, 1.0, -1.0, -1.0, 1.0]).unwrap();
+        let bm = BitMatrix::from_matrix(&m);
+        assert_eq!(bm.to_matrix(), m);
+    }
+
+    #[test]
+    fn matmul_t_small_known() {
+        // activations 1×2 [+1,-1]; weights_t 2×2 rows w0=[+1,+1], w1=[-1,+1]
+        let a = BitMatrix::from_matrix(&Matrix::from_vec(1, 2, vec![1.0, -1.0]).unwrap());
+        let w =
+            BitMatrix::from_matrix(&Matrix::from_vec(2, 2, vec![1.0, 1.0, -1.0, 1.0]).unwrap());
+        let out = a.matmul_t(&w).unwrap();
+        // a·w0 = 1-1 = 0 ; a·w1 = -1-1 = -2
+        assert_eq!(out.data, vec![0.0, -2.0]);
+    }
+
+    #[test]
+    fn matmul_k_mismatch_errors() {
+        let a = BitMatrix::from_matrix(&Matrix::zeros(1, 4));
+        let w = BitMatrix::from_matrix(&Matrix::zeros(2, 5));
+        assert!(a.matmul_t(&w).is_err());
+    }
+
+    #[test]
+    fn prop_matmul_matches_float_reference() {
+        check("bit matmul == ±1 float matmul", 80, |g: &mut Gen| {
+            let b = g.usize_in(1..6);
+            let k = g.usize_in(1..100);
+            let n = g.usize_in(1..8);
+            let acts = sign_matrix(g, b, k);
+            let w_t = sign_matrix(g, n, k);
+            let fast = BitMatrix::from_matrix(&acts)
+                .matmul_t(&BitMatrix::from_matrix(&w_t))
+                .unwrap();
+            let slow = acts.matmul_f32(&w_t.transpose()).unwrap();
+            if fast.max_abs_diff(&slow) == 0.0 {
+                Ok(())
+            } else {
+                Err(format!("mismatch at b={b} k={k} n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn packed_bytes_paper_layer() {
+        // One 1024×1024 binary layer = 1024*1024/8 = 131,072 bytes.
+        let w = BitMatrix::from_matrix(&Matrix::zeros(1024, 1024));
+        assert_eq!(w.packed_bytes(), 131_072);
+    }
+}

@@ -1,0 +1,220 @@
+//! Binarized datapath: packed ±1 vectors and XNOR-popcount inner products.
+//!
+//! §II-A of the paper: with weights and activations constrained to
+//! {-1, +1}, a multiply is an XNOR of sign bits and an inner product is an
+//! XNOR + popcount (eq. 1):
+//!
+//! ```text
+//! s = N - 2 * popcount(sign_bits(W) XOR sign_bits(I))
+//! ```
+//!
+//! (XNOR counts agreements; XOR counts disagreements; `agreements -
+//! disagreements = N - 2*disagreements`.)
+//!
+//! Encoding: bit = 1 represents **-1**, bit = 0 represents **+1** (the
+//! IEEE sign bit of the source float), packed LSB-first into `u64` words
+//! host-side. The hardware packs 16 bits per PE lane ([`crate::BINARY_PACK`]);
+//! the 64-bit host packing is a pure performance choice — [`BitVector::dot`]
+//! is bit-exact with the 16-bit-lane hardware model in [`crate::sim`].
+
+pub mod matrix;
+
+pub use matrix::BitMatrix;
+
+/// A packed vector of N sign bits representing values in {-1, +1}.
+///
+/// Trailing bits beyond `len` in the last word are kept **zero** (= +1
+/// padding); all operations preserve this invariant so popcounts over
+/// whole words stay correct.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVector {
+    /// Number of logical elements.
+    pub len: usize,
+    /// Packed words, LSB-first; `ceil(len/64)` entries.
+    pub words: Vec<u64>,
+}
+
+impl BitVector {
+    /// All-(+1) vector (all bits zero).
+    pub fn ones(len: usize) -> Self {
+        Self {
+            len,
+            words: vec![0u64; len.div_ceil(64)],
+        }
+    }
+
+    /// Binarize a float slice: bit = sign bit, i.e. `x < 0 || x == -0.0`
+    /// maps to -1 … except that **-0.0 maps to +1** to match the training
+    /// convention `where(x >= 0, +1, -1)`. NaN maps by its payload sign
+    /// (hardware never sees NaN; upstream hardtanh clamps).
+    pub fn from_f32(xs: &[f32]) -> Self {
+        let mut v = Self::ones(xs.len());
+        for (i, &x) in xs.iter().enumerate() {
+            if x < 0.0 {
+                v.set(i, true);
+            }
+        }
+        v
+    }
+
+    /// Expand back to floats in {-1.0, +1.0}.
+    pub fn to_f32(&self) -> Vec<f32> {
+        (0..self.len)
+            .map(|i| if self.get(i) { -1.0 } else { 1.0 })
+            .collect()
+    }
+
+    /// Bit accessor: true ⇔ the element is -1.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Set element `i` to -1 (`true`) or +1 (`false`).
+    #[inline]
+    pub fn set(&mut self, i: usize, neg: bool) {
+        debug_assert!(i < self.len);
+        let (w, b) = (i / 64, i % 64);
+        if neg {
+            self.words[w] |= 1 << b;
+        } else {
+            self.words[w] &= !(1 << b);
+        }
+    }
+
+    /// XNOR-popcount inner product with `other` (eq. 1):
+    /// `Σ aᵢ·bᵢ` over ±1 values, computed as `N - 2·popcount(a XOR b)`.
+    ///
+    /// Zero-padding in the tail words cancels: padding bits are 0 in both
+    /// vectors, so they XOR to 0 and contribute nothing to the popcount —
+    /// but note the result then counts them as *agreements*; we subtract
+    /// them out by using `len`, not the padded width.
+    #[inline]
+    pub fn dot(&self, other: &BitVector) -> i32 {
+        assert_eq!(self.len, other.len, "binary dot length mismatch");
+        let mut disagreements = 0u32;
+        for (a, b) in self.words.iter().zip(other.words.iter()) {
+            disagreements += (a ^ b).count_ones();
+        }
+        self.len as i32 - 2 * disagreements as i32
+    }
+
+    /// Number of -1 elements.
+    pub fn count_neg(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Storage size in bytes when packed at 1 bit/weight (the Table II
+    /// memory model rounds layers to whole bytes).
+    pub fn packed_bytes(&self) -> usize {
+        self.len.div_ceil(8)
+    }
+}
+
+/// Scalar reference for the binary inner product: ±1 multiply-add over
+/// floats. Used by tests as the oracle for [`BitVector::dot`].
+pub fn dot_reference(a: &[f32], b: &[f32]) -> i32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b.iter())
+        .map(|(&x, &y)| {
+            let sx = if x < 0.0 { -1i32 } else { 1 };
+            let sy = if y < 0.0 { -1i32 } else { 1 };
+            sx * sy
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn from_to_roundtrip() {
+        let xs = vec![1.0, -2.0, 0.0, -0.0, 3.5, -0.001];
+        let v = BitVector::from_f32(&xs);
+        assert_eq!(v.to_f32(), vec![1.0, -1.0, 1.0, 1.0, 1.0, -1.0]);
+    }
+
+    #[test]
+    fn dot_known_values() {
+        // a = [+1,+1,-1,-1], b = [+1,-1,+1,-1] → 1 -1 -1 +1 = 0
+        let a = BitVector::from_f32(&[1.0, 1.0, -1.0, -1.0]);
+        let b = BitVector::from_f32(&[1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(a.dot(&b), 0);
+        // identical vectors → N
+        assert_eq!(a.dot(&a), 4);
+        // opposite vectors → -N
+        let na = BitVector::from_f32(&[-1.0, -1.0, 1.0, 1.0]);
+        assert_eq!(a.dot(&na), -4);
+    }
+
+    #[test]
+    fn dot_crosses_word_boundaries() {
+        // len 130 spans 3 words; all -1 vs all +1.
+        let neg = BitVector::from_f32(&vec![-1.0; 130]);
+        let pos = BitVector::ones(130);
+        assert_eq!(neg.dot(&pos), -130);
+        assert_eq!(neg.dot(&neg), 130);
+        assert_eq!(pos.dot(&pos), 130);
+    }
+
+    #[test]
+    fn padding_invariant_preserved() {
+        let mut v = BitVector::from_f32(&vec![-1.0; 70]);
+        // Tail bits of word 1 (indices 70..128) must be zero.
+        assert_eq!(v.words[1] >> 6, 0);
+        v.set(69, false);
+        v.set(69, true);
+        assert_eq!(v.words[1] >> 6, 0);
+    }
+
+    #[test]
+    fn packed_bytes_rounds_up() {
+        assert_eq!(BitVector::ones(8).packed_bytes(), 1);
+        assert_eq!(BitVector::ones(9).packed_bytes(), 2);
+        assert_eq!(BitVector::ones(1024).packed_bytes(), 128);
+    }
+
+    #[test]
+    fn prop_dot_matches_reference() {
+        check("xnor-popcount dot == ±1 reference", 300, |g: &mut Gen| {
+            let n = g.usize_in(1..300);
+            let a: Vec<f32> = g.signs(n);
+            let b: Vec<f32> = g.signs(n);
+            let fast = BitVector::from_f32(&a).dot(&BitVector::from_f32(&b));
+            let slow = dot_reference(&a, &b);
+            if fast == slow {
+                Ok(())
+            } else {
+                Err(format!("n={n}: fast {fast} != ref {slow}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_dot_bounds_and_parity() {
+        // |dot| <= N and dot ≡ N (mod 2).
+        check("binary dot bounds/parity", 300, |g: &mut Gen| {
+            let n = g.usize_in(1..200);
+            let a = BitVector::from_f32(&g.signs(n));
+            let b = BitVector::from_f32(&g.signs(n));
+            let d = a.dot(&b);
+            if d.abs() > n as i32 {
+                return Err(format!("|{d}| > {n}"));
+            }
+            if (d - n as i32) % 2 != 0 {
+                return Err(format!("{d} parity mismatch with N={n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn count_neg_matches() {
+        let v = BitVector::from_f32(&[-1.0, 1.0, -1.0, -1.0, 1.0]);
+        assert_eq!(v.count_neg(), 3);
+    }
+}

@@ -1,0 +1,207 @@
+//! Execution backends behind the serving queue.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::bf16::Matrix;
+use crate::data::IMG_PIXELS;
+use crate::nn::Network;
+use crate::runtime::HloExecutable;
+use crate::sim::{Accelerator, AcceleratorConfig};
+
+/// A PJRT executable bundled with its **own private** client.
+///
+/// The `xla` crate's handles use `Rc` internally, so they are not `Send`.
+/// This wrapper owns the client *and* every executable compiled from it,
+/// so the entire `Rc` graph moves between threads as one unit and is only
+/// ever touched by its current owner — which makes the manual `Send`
+/// sound. Construct it on any thread, then hand it to the server's
+/// worker; never clone pieces out of it.
+pub struct PjrtUnit {
+    // Field order matters: `exe` must drop before `client`.
+    exe: HloExecutable,
+    _client: xla::PjRtClient,
+}
+
+// SAFETY: see type docs — the full ownership graph moves together and is
+// accessed from exactly one thread at a time.
+unsafe impl Send for PjrtUnit {}
+
+impl PjrtUnit {
+    /// Create a fresh client and compile the artifact at `path` with the
+    /// given `batch × features` input shape.
+    pub fn load(path: &Path, input_shape: (usize, usize)) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        let exe = HloExecutable::load(&client, path, input_shape)?;
+        Ok(Self {
+            exe,
+            _client: client,
+        })
+    }
+}
+
+/// Output of one backend batch execution.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Logits, `batch × classes`.
+    pub logits: Matrix,
+    /// Simulated device cycles (simulator backend only).
+    pub sim_cycles: Option<u64>,
+}
+
+/// Where batches actually execute.
+pub enum Backend {
+    /// Cycle-level BEANNA simulator (timing + numerics).
+    Simulator {
+        /// The simulated device.
+        accel: Box<Accelerator>,
+        /// Weights executed on it.
+        net: Network,
+    },
+    /// Pure-rust reference model (fast functional path).
+    Reference {
+        /// Weights.
+        net: Network,
+    },
+    /// PJRT executable built from the AOT artifacts (fixed batch shape;
+    /// smaller batches are zero-padded and sliced).
+    Pjrt {
+        /// Compiled artifact with its private client.
+        unit: PjrtUnit,
+    },
+}
+
+impl Backend {
+    /// Simulator backend with the default device configuration.
+    pub fn simulator(net: Network) -> Self {
+        Backend::Simulator {
+            accel: Box::new(Accelerator::new(AcceleratorConfig::default())),
+            net,
+        }
+    }
+
+    /// PJRT backend from an AOT artifact (`variant` = "hybrid"/"fp").
+    pub fn pjrt(paths: &crate::io::ArtifactPaths, variant: &str, batch: usize) -> Result<Self> {
+        let unit = PjrtUnit::load(&paths.hlo(variant, batch), (batch, IMG_PIXELS))?;
+        Ok(Backend::Pjrt { unit })
+    }
+
+    /// Human-readable tag for metrics/logs.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Backend::Simulator { .. } => "sim",
+            Backend::Reference { .. } => "ref",
+            Backend::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// Largest batch this backend accepts in one call (PJRT executables
+    /// are shape-specialized).
+    pub fn max_batch(&self) -> Option<usize> {
+        match self {
+            Backend::Pjrt { unit } => Some(unit.exe.input_shape.0),
+            _ => None,
+        }
+    }
+
+    /// Run one batch of images (`batch × 784`).
+    pub fn run_batch(&mut self, images: &Matrix) -> Result<BatchOutput> {
+        match self {
+            Backend::Simulator { accel, net } => {
+                // Command the device through its AXI-Lite front door,
+                // exactly as driver software would (§III-D step 1).
+                let mut axi = crate::sim::AxiRegisterFile::new();
+                let report = accel.run_via_axi(&mut axi, net, images)?;
+                debug_assert_eq!(axi.status(), crate::sim::axi::Status::Done);
+                Ok(BatchOutput {
+                    logits: report.outputs,
+                    sim_cycles: Some(report.total_cycles),
+                })
+            }
+            Backend::Reference { net } => Ok(BatchOutput {
+                logits: net.forward(images)?,
+                sim_cycles: None,
+            }),
+            Backend::Pjrt { unit } => {
+                let exe = &unit.exe;
+                let (fixed_batch, feat) = exe.input_shape;
+                ensure!(
+                    images.cols == feat,
+                    "pjrt backend expects {feat} features, got {}",
+                    images.cols
+                );
+                ensure!(
+                    images.rows <= fixed_batch,
+                    "batch {} exceeds compiled shape {fixed_batch}",
+                    images.rows
+                );
+                let logits = if images.rows == fixed_batch {
+                    exe.run(images)?
+                } else {
+                    // Zero-pad to the compiled batch, slice the result.
+                    let mut padded = Matrix::zeros(fixed_batch, feat);
+                    for r in 0..images.rows {
+                        padded.row_mut(r).copy_from_slice(images.row(r));
+                    }
+                    let full = exe.run(&padded)?;
+                    let mut out = Matrix::zeros(images.rows, full.cols);
+                    for r in 0..images.rows {
+                        out.row_mut(r).copy_from_slice(full.row(r));
+                    }
+                    out
+                };
+                Ok(BatchOutput {
+                    logits,
+                    sim_cycles: None,
+                })
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{NetworkConfig, Precision};
+
+    fn tiny_net() -> Network {
+        Network::random(
+            &NetworkConfig {
+                sizes: vec![784, 32, 10],
+                precisions: vec![Precision::Bf16, Precision::Binary],
+            },
+            3,
+        )
+    }
+
+    #[test]
+    fn sim_and_reference_agree() {
+        let net = tiny_net();
+        let mut sim = Backend::simulator(net.clone());
+        let mut rf = Backend::Reference { net };
+        let x = Matrix::from_vec(
+            4,
+            784,
+            crate::util::rng::Xoshiro256::seed_from_u64(9)
+                .normal_vec(4 * 784)
+                .iter()
+                .map(|v| v.abs().min(1.0))
+                .collect(),
+        )
+        .unwrap();
+        let a = sim.run_batch(&x).unwrap();
+        let b = rf.run_batch(&x).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert!(a.sim_cycles.unwrap() > 0);
+        assert!(b.sim_cycles.is_none());
+        assert_eq!(sim.tag(), "sim");
+        assert_eq!(rf.tag(), "ref");
+    }
+
+    #[test]
+    fn reference_rejects_bad_width() {
+        let mut rf = Backend::Reference { net: tiny_net() };
+        assert!(rf.run_batch(&Matrix::zeros(1, 100)).is_err());
+    }
+}

@@ -1,0 +1,131 @@
+//! Dynamic batching policy: close a batch at `max_batch` requests or
+//! when the oldest queued request has waited `max_wait`, whichever is
+//! first.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use super::request::InferenceRequest;
+
+/// Batch-closing policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Maximum rows per batch (the paper evaluates 1 and 256).
+    pub max_batch: usize,
+    /// Maximum time the first request in a batch may wait.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self {
+            max_batch: 256,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+impl BatchPolicy {
+    /// Single-request batches (the paper's batch-1 configuration).
+    pub fn unbatched() -> Self {
+        Self {
+            max_batch: 1,
+            max_wait: Duration::ZERO,
+        }
+    }
+
+    /// Pull the next batch from `rx`. Blocks for the first request;
+    /// returns `None` when the channel is closed and drained.
+    pub fn next_batch(&self, rx: &Receiver<InferenceRequest>) -> Option<Vec<InferenceRequest>> {
+        let first = rx.recv().ok()?;
+        let deadline = Instant::now() + self.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                // Deadline passed: take anything already queued, without
+                // blocking, then close.
+                match rx.try_recv() {
+                    Ok(req) => batch.push(req),
+                    Err(_) => break,
+                }
+                continue;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    fn req(id: u64) -> InferenceRequest {
+        let (tx, _rx) = channel();
+        // Keep _rx alive by leaking: tests only inspect ids.
+        std::mem::forget(_rx);
+        InferenceRequest {
+            id,
+            image: vec![],
+            resp_tx: tx,
+            enqueued_at: Instant::now(),
+        }
+    }
+
+    #[test]
+    fn fills_to_max_batch_when_queue_is_deep() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let p = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+        };
+        let b1 = p.next_batch(&rx).unwrap();
+        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        let b2 = p.next_batch(&rx).unwrap();
+        assert_eq!(b2.len(), 4);
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(req(0)).unwrap();
+        let p = BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(10),
+        };
+        let t0 = Instant::now();
+        let b = p.next_batch(&rx).unwrap();
+        assert_eq!(b.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn unbatched_returns_singletons_immediately() {
+        let (tx, rx) = channel();
+        tx.send(req(1)).unwrap();
+        tx.send(req(2)).unwrap();
+        let p = BatchPolicy::unbatched();
+        assert_eq!(p.next_batch(&rx).unwrap().len(), 1);
+        assert_eq!(p.next_batch(&rx).unwrap().len(), 1);
+    }
+
+    #[test]
+    fn closed_channel_yields_none_after_drain() {
+        let (tx, rx) = channel();
+        tx.send(req(5)).unwrap();
+        drop(tx);
+        let p = BatchPolicy::default();
+        assert_eq!(p.next_batch(&rx).unwrap().len(), 1);
+        assert!(p.next_batch(&rx).is_none());
+    }
+}

@@ -1,0 +1,146 @@
+//! Serving metrics: counters + latency distribution, lock-protected and
+//! snapshot-able.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Internal accumulating state.
+#[derive(Debug, Default)]
+struct State {
+    requests: u64,
+    batches: u64,
+    batch_rows_sum: u64,
+    queue_us: Vec<f64>,
+    compute_us: Vec<f64>,
+    sim_cycles: u64,
+    started: Option<std::time::Instant>,
+    finished: Option<std::time::Instant>,
+}
+
+/// Thread-safe metrics registry owned by the server.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    state: Mutex<State>,
+    /// Lock-free mirror of the served-request count, for hot-path
+    /// consumers (the router's least-outstanding policy).
+    requests_fast: std::sync::atomic::AtomicU64,
+}
+
+/// Immutable view of the metrics at a point in time.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Requests served.
+    pub requests: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Mean rows per batch.
+    pub mean_batch: f64,
+    /// Queue-latency summary (µs), if any requests were served.
+    pub queue_us: Option<crate::util::stats::Summary>,
+    /// Compute-latency summary (µs per batch).
+    pub compute_us: Option<crate::util::stats::Summary>,
+    /// Total simulated device cycles (simulator backend).
+    pub sim_cycles: u64,
+    /// Wall-clock span from first to last batch.
+    pub wall: Duration,
+    /// Requests per wall-clock second.
+    pub throughput_rps: f64,
+}
+
+impl Metrics {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one executed batch.
+    pub fn record_batch(
+        &self,
+        rows: usize,
+        queue_us: &[u64],
+        compute_us: u64,
+        sim_cycles: Option<u64>,
+    ) {
+        let mut s = self.state.lock().unwrap();
+        let now = std::time::Instant::now();
+        s.started.get_or_insert(now);
+        s.finished = Some(now);
+        s.requests += rows as u64;
+        s.batches += 1;
+        s.batch_rows_sum += rows as u64;
+        s.queue_us.extend(queue_us.iter().map(|&q| q as f64));
+        s.compute_us.push(compute_us as f64);
+        s.sim_cycles += sim_cycles.unwrap_or(0);
+        self.requests_fast
+            .fetch_add(rows as u64, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Served-request count without taking the lock.
+    pub fn requests_fast(&self) -> u64 {
+        self.requests_fast.load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Snapshot the current totals.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let s = self.state.lock().unwrap();
+        let wall = match (s.started, s.finished) {
+            (Some(a), Some(b)) => b.duration_since(a),
+            _ => Duration::ZERO,
+        };
+        let throughput = if wall.as_secs_f64() > 0.0 {
+            s.requests as f64 / wall.as_secs_f64()
+        } else {
+            0.0
+        };
+        MetricsSnapshot {
+            requests: s.requests,
+            batches: s.batches,
+            mean_batch: if s.batches > 0 {
+                s.batch_rows_sum as f64 / s.batches as f64
+            } else {
+                0.0
+            },
+            queue_us: if s.queue_us.is_empty() {
+                None
+            } else {
+                Some(crate::util::stats::Summary::of(&s.queue_us))
+            },
+            compute_us: if s.compute_us.is_empty() {
+                None
+            } else {
+                Some(crate::util::stats::Summary::of(&s.compute_us))
+            },
+            sim_cycles: s.sim_cycles,
+            wall,
+            throughput_rps: throughput,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        m.record_batch(4, &[10, 20, 30, 40], 500, Some(1000));
+        m.record_batch(2, &[5, 5], 300, Some(500));
+        let s = m.snapshot();
+        assert_eq!(s.requests, 6);
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 3.0).abs() < 1e-12);
+        assert_eq!(s.sim_cycles, 1500);
+        let q = s.queue_us.unwrap();
+        assert_eq!(q.n, 6);
+        assert_eq!(q.max, 40.0);
+    }
+
+    #[test]
+    fn empty_snapshot_is_safe() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.requests, 0);
+        assert!(s.queue_us.is_none());
+        assert_eq!(s.throughput_rps, 0.0);
+    }
+}

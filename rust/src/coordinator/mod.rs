@@ -1,0 +1,33 @@
+//! Inference coordinator: the serving layer around the accelerator.
+//!
+//! The paper's device is commanded over AXI-Lite by "software or a
+//! external hardware controller" (§III-D step 1); this module is that
+//! controller, built like a miniature serving stack:
+//!
+//! * [`request`] — request/response types.
+//! * [`batcher`] — dynamic batching: collect requests up to a maximum
+//!   batch (the paper evaluates 1 and 256) or a deadline, whichever
+//!   comes first.
+//! * [`backend`] — the execution target: the cycle-level simulator, the
+//!   PJRT runtime running the AOT artifacts, or the pure-rust reference
+//!   model. All three produce logits; the simulator also reports cycles.
+//! * [`server`] — a worker thread that owns the backend, drains the
+//!   queue through the batcher, and records [`metrics`].
+//!
+//! Everything is `std::thread` + channels — no async runtime in the
+//! vendored crate set, and a single-device coordinator does not need
+//! one.
+
+pub mod backend;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use backend::Backend;
+pub use batcher::BatchPolicy;
+pub use metrics::MetricsSnapshot;
+pub use request::{InferenceRequest, InferenceResponse};
+pub use router::{RoutePolicy, Router};
+pub use server::{Server, ServerConfig};

@@ -1,0 +1,67 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// One inference request: a flattened 28×28 image.
+#[derive(Debug)]
+pub struct InferenceRequest {
+    /// Caller-assigned id, echoed in the response.
+    pub id: u64,
+    /// Flattened image, 784 f32 pixels in [0, 1].
+    pub image: Vec<f32>,
+    /// Channel the response is delivered on.
+    pub resp_tx: Sender<InferenceResponse>,
+    /// Enqueue timestamp (set by the server on submit).
+    pub enqueued_at: Instant,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    /// Echoed request id.
+    pub id: u64,
+    /// Raw logits (10 classes).
+    pub logits: Vec<f32>,
+    /// argmax class.
+    pub prediction: usize,
+    /// Microseconds spent queued before the batch closed.
+    pub queue_us: u64,
+    /// Microseconds of backend compute for the whole batch.
+    pub compute_us: u64,
+    /// Rows in the batch this request was served in.
+    pub batch_size: usize,
+    /// Simulated device cycles for the batch (simulator backend only).
+    pub sim_cycles: Option<u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn request_response_plumbing() {
+        let (tx, rx) = channel();
+        let req = InferenceRequest {
+            id: 7,
+            image: vec![0.0; 784],
+            resp_tx: tx,
+            enqueued_at: Instant::now(),
+        };
+        req.resp_tx
+            .send(InferenceResponse {
+                id: req.id,
+                logits: vec![0.0; 10],
+                prediction: 3,
+                queue_us: 5,
+                compute_us: 10,
+                batch_size: 1,
+                sim_cycles: None,
+            })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.prediction, 3);
+    }
+}

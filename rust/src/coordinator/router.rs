@@ -1,0 +1,233 @@
+//! Multi-device request router: fan a request stream across several
+//! accelerator workers (the natural scale-out of the paper's device —
+//! one BEANNA per FPGA/SLR, one serving queue per device).
+//!
+//! Policies:
+//! * [`RoutePolicy::RoundRobin`] — stateless rotation.
+//! * [`RoutePolicy::LeastOutstanding`] — join-the-shortest-queue on
+//!   (submitted − served), the standard router heuristic for
+//!   heterogeneous workers (cf. vLLM's router).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::InferenceResponse;
+use super::server::{Server, ServerConfig};
+use super::Backend;
+
+/// Worker-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Rotate through workers.
+    RoundRobin,
+    /// Pick the worker with the fewest outstanding requests.
+    LeastOutstanding,
+}
+
+struct Worker {
+    server: Server,
+    submitted: AtomicU64,
+    metrics: Arc<Metrics>,
+}
+
+impl Worker {
+    fn outstanding(&self) -> u64 {
+        self.submitted
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.metrics.requests_fast())
+    }
+}
+
+/// The router: owns one [`Server`] per backend.
+pub struct Router {
+    workers: Vec<Worker>,
+    policy: RoutePolicy,
+    next: AtomicU64,
+}
+
+impl Router {
+    /// Start one server per backend, all with the same serving config.
+    pub fn start(
+        backends: Vec<Backend>,
+        config: ServerConfig,
+        policy: RoutePolicy,
+    ) -> Result<Self> {
+        ensure!(!backends.is_empty(), "router needs at least one backend");
+        let workers = backends
+            .into_iter()
+            .map(|b| {
+                let server = Server::start(b, config);
+                let metrics = server.metrics_handle();
+                Worker {
+                    server,
+                    submitted: AtomicU64::new(0),
+                    metrics,
+                }
+            })
+            .collect();
+        Ok(Self {
+            workers,
+            policy,
+            next: AtomicU64::new(0),
+        })
+    }
+
+    /// Number of workers.
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Pick a worker index under the configured policy.
+    fn pick(&self) -> usize {
+        match self.policy {
+            RoutePolicy::RoundRobin => {
+                (self.next.fetch_add(1, Ordering::Relaxed) as usize) % self.workers.len()
+            }
+            RoutePolicy::LeastOutstanding => self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, w)| w.outstanding())
+                .map(|(i, _)| i)
+                .unwrap(),
+        }
+    }
+
+    /// Submit a request; returns (worker index, response receiver).
+    pub fn submit(&self, image: Vec<f32>) -> Result<(usize, Receiver<InferenceResponse>)> {
+        let i = self.pick();
+        let rx = self.workers[i].server.submit(image)?;
+        self.workers[i].submitted.fetch_add(1, Ordering::Relaxed);
+        Ok((i, rx))
+    }
+
+    /// Submit and wait.
+    pub fn infer(&self, image: Vec<f32>) -> Result<InferenceResponse> {
+        let (_, rx) = self.submit(image)?;
+        let resp = rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))?;
+        ensure!(!resp.logits.is_empty(), "backend failed");
+        Ok(resp)
+    }
+
+    /// Per-worker outstanding counts (diagnostics).
+    pub fn outstanding(&self) -> Vec<u64> {
+        self.workers.iter().map(|w| w.outstanding()).collect()
+    }
+
+    /// Stop all workers, returning their final metrics.
+    pub fn shutdown(self) -> Vec<MetricsSnapshot> {
+        self.workers
+            .into_iter()
+            .map(|w| w.server.shutdown())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatchPolicy;
+    use crate::nn::{Network, NetworkConfig, Precision};
+    use std::time::Duration;
+
+    fn net(seed: u64) -> Network {
+        Network::random(
+            &NetworkConfig {
+                sizes: vec![784, 16, 10],
+                precisions: vec![Precision::Bf16, Precision::Bf16],
+            },
+            seed,
+        )
+    }
+
+    fn config() -> ServerConfig {
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+            },
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_evenly() {
+        let router = Router::start(
+            vec![
+                Backend::Reference { net: net(1) },
+                Backend::Reference { net: net(1) },
+                Backend::Reference { net: net(1) },
+            ],
+            config(),
+            RoutePolicy::RoundRobin,
+        )
+        .unwrap();
+        let mut counts = [0usize; 3];
+        let rxs: Vec<_> = (0..30)
+            .map(|_| {
+                let (i, rx) = router.submit(vec![0.1; 784]).unwrap();
+                counts[i] += 1;
+                rx
+            })
+            .collect();
+        for rx in rxs {
+            assert!(!rx.recv().unwrap().logits.is_empty());
+        }
+        assert_eq!(counts, [10, 10, 10]);
+        let metrics = router.shutdown();
+        assert_eq!(metrics.iter().map(|m| m.requests).sum::<u64>(), 30);
+    }
+
+    #[test]
+    fn least_outstanding_avoids_loaded_worker() {
+        let router = Router::start(
+            vec![
+                Backend::Reference { net: net(1) },
+                Backend::Reference { net: net(2) },
+            ],
+            config(),
+            RoutePolicy::LeastOutstanding,
+        )
+        .unwrap();
+        // Submit a burst without receiving; JSQ must not send everything
+        // to one worker.
+        let rxs: Vec<_> = (0..40)
+            .map(|_| router.submit(vec![0.2; 784]).unwrap())
+            .collect();
+        let mut counts = [0usize; 2];
+        for (i, _) in &rxs {
+            counts[*i] += 1;
+        }
+        assert!(counts[0] >= 10 && counts[1] >= 10, "{counts:?}");
+        for (_, rx) in rxs {
+            rx.recv().unwrap();
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn all_workers_produce_identical_results_for_same_weights() {
+        let router = Router::start(
+            vec![
+                Backend::Reference { net: net(7) },
+                Backend::simulator(net(7)),
+            ],
+            config(),
+            RoutePolicy::RoundRobin,
+        )
+        .unwrap();
+        // Same image through both workers (round-robin alternates).
+        let a = router.infer(vec![0.3; 784]).unwrap();
+        let b = router.infer(vec![0.3; 784]).unwrap();
+        assert_eq!(a.prediction, b.prediction);
+        router.shutdown();
+    }
+
+    #[test]
+    fn empty_router_rejected() {
+        assert!(Router::start(vec![], config(), RoutePolicy::RoundRobin).is_err());
+    }
+}

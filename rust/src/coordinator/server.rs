@@ -1,0 +1,251 @@
+//! The serving loop: a worker thread owning the backend, fed through the
+//! dynamic batcher.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::backend::Backend;
+use super::batcher::BatchPolicy;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{InferenceRequest, InferenceResponse};
+use crate::bf16::Matrix;
+use crate::nn::metrics::argmax;
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Batching policy.
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            policy: BatchPolicy::default(),
+        }
+    }
+}
+
+/// A running inference server.
+pub struct Server {
+    tx: Option<Sender<InferenceRequest>>,
+    handle: Option<JoinHandle<()>>,
+    metrics: Arc<Metrics>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+impl Server {
+    /// Start the worker thread with a backend.
+    pub fn start(mut backend: Backend, config: ServerConfig) -> Self {
+        let (tx, rx) = channel::<InferenceRequest>();
+        let metrics = Arc::new(Metrics::new());
+        let metrics_worker = Arc::clone(&metrics);
+        // PJRT backends cap the batch at their compiled shape.
+        let mut policy = config.policy;
+        if let Some(cap) = backend.max_batch() {
+            policy.max_batch = policy.max_batch.min(cap);
+        }
+        let handle = std::thread::spawn(move || {
+            while let Some(batch) = policy.next_batch(&rx) {
+                let closed_at = Instant::now();
+                let rows = batch.len();
+                let width = batch[0].image.len();
+                let mut images = Matrix::zeros(rows, width);
+                for (r, req) in batch.iter().enumerate() {
+                    images.row_mut(r).copy_from_slice(&req.image);
+                }
+                let t0 = Instant::now();
+                let out = match backend.run_batch(&images) {
+                    Ok(out) => out,
+                    Err(e) => {
+                        // Deliver an error marker: empty logits. Callers
+                        // treat logits.is_empty() as failure.
+                        eprintln!("backend error: {e:#}");
+                        for req in batch {
+                            let _ = req.resp_tx.send(InferenceResponse {
+                                id: req.id,
+                                logits: vec![],
+                                prediction: usize::MAX,
+                                queue_us: 0,
+                                compute_us: 0,
+                                batch_size: rows,
+                                sim_cycles: None,
+                            });
+                        }
+                        continue;
+                    }
+                };
+                let compute_us = t0.elapsed().as_micros() as u64;
+                let queue_us: Vec<u64> = batch
+                    .iter()
+                    .map(|r| closed_at.duration_since(r.enqueued_at).as_micros() as u64)
+                    .collect();
+                metrics_worker.record_batch(rows, &queue_us, compute_us, out.sim_cycles);
+                for (r, req) in batch.into_iter().enumerate() {
+                    let logits = out.logits.row(r).to_vec();
+                    let _ = req.resp_tx.send(InferenceResponse {
+                        id: req.id,
+                        prediction: argmax(&logits),
+                        logits,
+                        queue_us: queue_us[r],
+                        compute_us,
+                        batch_size: rows,
+                        sim_cycles: out.sim_cycles,
+                    });
+                }
+            }
+        });
+        Self {
+            tx: Some(tx),
+            handle: Some(handle),
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    /// Submit asynchronously; the response arrives on the returned
+    /// receiver.
+    pub fn submit(&self, image: Vec<f32>) -> Result<std::sync::mpsc::Receiver<InferenceResponse>> {
+        let (resp_tx, resp_rx) = channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("server stopped"))?
+            .send(InferenceRequest {
+                id,
+                image,
+                resp_tx,
+                enqueued_at: Instant::now(),
+            })
+            .map_err(|_| anyhow!("server thread gone"))?;
+        Ok(resp_rx)
+    }
+
+    /// Submit and wait (convenience).
+    pub fn infer(&self, image: Vec<f32>) -> Result<InferenceResponse> {
+        let rx = self.submit(image)?;
+        let resp = rx.recv().map_err(|_| anyhow!("response channel closed"))?;
+        if resp.logits.is_empty() {
+            return Err(anyhow!("backend failed for request {}", resp.id));
+        }
+        Ok(resp)
+    }
+
+    /// Live metrics handle.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Shared handle to the live metrics registry (used by the router's
+    /// load-aware policies without snapshot locking).
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Stop the server, returning the final metrics.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.tx.take(); // close the queue; worker drains and exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{Network, NetworkConfig, Precision};
+    use std::time::Duration;
+
+    fn tiny_backend() -> Backend {
+        Backend::Reference {
+            net: Network::random(
+                &NetworkConfig {
+                    sizes: vec![784, 16, 10],
+                    precisions: vec![Precision::Bf16, Precision::Bf16],
+                },
+                1,
+            ),
+        }
+    }
+
+    #[test]
+    fn serves_single_requests() {
+        let server = Server::start(tiny_backend(), ServerConfig::default());
+        let resp = server.infer(vec![0.5; 784]).unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.prediction < 10);
+        let m = server.shutdown();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.batches, 1);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let server = Server::start(
+            tiny_backend(),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(30),
+                },
+            },
+        );
+        let rxs: Vec<_> = (0..8)
+            .map(|i| server.submit(vec![i as f32 / 8.0; 784]).unwrap())
+            .collect();
+        let resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        assert!(resps.iter().all(|r| r.logits.len() == 10));
+        // At least some requests must have shared a batch.
+        let max_batch_seen = resps.iter().map(|r| r.batch_size).max().unwrap();
+        assert!(max_batch_seen >= 2, "no batching happened");
+        let m = server.shutdown();
+        assert_eq!(m.requests, 8);
+        assert!(m.batches < 8);
+    }
+
+    #[test]
+    fn deterministic_predictions_match_reference() {
+        let net = Network::random(
+            &NetworkConfig {
+                sizes: vec![784, 16, 10],
+                precisions: vec![Precision::Bf16, Precision::Bf16],
+            },
+            1,
+        );
+        let image = vec![0.25; 784];
+        let direct = net
+            .predict(&Matrix::from_vec(1, 784, image.clone()).unwrap())
+            .unwrap()[0];
+        let server = Server::start(Backend::Reference { net }, ServerConfig::default());
+        let resp = server.infer(image).unwrap();
+        assert_eq!(resp.prediction, direct);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains() {
+        let server = Server::start(tiny_backend(), ServerConfig::default());
+        let rx = server.submit(vec![0.0; 784]).unwrap();
+        let m = server.shutdown();
+        // The queued request is served before the worker exits.
+        assert_eq!(m.requests, 1);
+        assert!(rx.recv().is_ok());
+    }
+}

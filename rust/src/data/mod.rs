@@ -1,0 +1,240 @@
+//! Synthetic-MNIST data substrate.
+//!
+//! The paper evaluates on MNIST; this environment has no network access,
+//! so per DESIGN.md §5 we substitute a **procedural synthetic MNIST**:
+//! 28×28 grayscale digit images rendered from per-class stroke-glyph
+//! templates with random affine jitter (translation, rotation, scale),
+//! stroke-thickness variation, and pixel noise. The task is a learnable
+//! 10-class image classification problem at MNIST's exact tensor shapes,
+//! so every code path the paper exercises (network capacity, binarization
+//! accuracy gap, timing, memory) is exercised identically.
+//!
+//! Generation is deterministic from a seed. The canonical datasets used
+//! by the experiments are produced once by `beanna gen-data` (invoked
+//! from `make artifacts`) and shared by the Python trainer and the rust
+//! evaluation, so both sides see the same distribution.
+
+pub mod glyphs;
+pub mod render;
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::bf16::Matrix;
+use crate::io::{Tensor, TensorFile};
+use crate::util::rng::Xoshiro256;
+
+/// Image side length (MNIST-compatible).
+pub const IMG_SIDE: usize = 28;
+/// Flattened image size = 784 = the paper's input layer width.
+pub const IMG_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+/// Number of classes.
+pub const NUM_CLASSES: usize = 10;
+
+/// An in-memory labelled image set.
+#[derive(Debug, Clone)]
+pub struct SynthMnist {
+    /// `n × 784` images, pixel values in `[0, 1]`.
+    pub images: Matrix,
+    /// `n` labels in `0..10`.
+    pub labels: Vec<usize>,
+}
+
+impl SynthMnist {
+    /// Generate `n` images with balanced classes, deterministic in `seed`.
+    pub fn generate(n: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut images = Matrix::zeros(n, IMG_PIXELS);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            // Balanced round-robin class assignment, shuffled order via
+            // the per-image jitter; keeps class counts within ±1.
+            let class = i % NUM_CLASSES;
+            let img = render::render_digit(class, &mut rng);
+            images.row_mut(i).copy_from_slice(&img);
+            labels.push(class);
+        }
+        // Shuffle rows so batches are class-mixed.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut shuffled = Matrix::zeros(n, IMG_PIXELS);
+        let mut shuffled_labels = vec![0usize; n];
+        for (dst, &src) in order.iter().enumerate() {
+            shuffled.row_mut(dst).copy_from_slice(images.row(src));
+            shuffled_labels[dst] = labels[src];
+        }
+        Self {
+            images: shuffled,
+            labels: shuffled_labels,
+        }
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Borrow the images matrix (n × 784).
+    pub fn images_f32(&self) -> &Matrix {
+        &self.images
+    }
+
+    /// Split off the first `n` examples as a new set.
+    pub fn take(&self, n: usize) -> Self {
+        let n = n.min(self.len());
+        let mut images = Matrix::zeros(n, IMG_PIXELS);
+        for i in 0..n {
+            images.row_mut(i).copy_from_slice(self.images.row(i));
+        }
+        Self {
+            images,
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+
+    /// Serialize as a `.bwt` file (`images` f32 n×784, `labels` i32 n).
+    pub fn to_tensor_file(&self) -> TensorFile {
+        let mut tf = TensorFile::new();
+        tf.insert(
+            "images",
+            Tensor::from_f32(&[self.len(), IMG_PIXELS], &self.images.data).unwrap(),
+        );
+        let labels_f: Vec<f32> = self.labels.iter().map(|&l| l as f32).collect();
+        tf.insert(
+            "labels",
+            Tensor::from_f32(&[self.len()], &labels_f).unwrap(),
+        );
+        tf
+    }
+
+    /// Load from a `.bwt` file written by [`Self::to_tensor_file`].
+    pub fn from_tensor_file(tf: &TensorFile) -> Result<Self> {
+        let images = tf.get("images")?.to_matrix()?;
+        ensure!(
+            images.cols == IMG_PIXELS,
+            "images must be n×{IMG_PIXELS}, got n×{}",
+            images.cols
+        );
+        let labels: Vec<usize> = tf
+            .get("labels")?
+            .to_f32_vec()?
+            .into_iter()
+            .map(|x| x as usize)
+            .collect();
+        ensure!(
+            labels.len() == images.rows,
+            "label count {} != image count {}",
+            labels.len(),
+            images.rows
+        );
+        ensure!(
+            labels.iter().all(|&l| l < NUM_CLASSES),
+            "label out of range"
+        );
+        Ok(Self { images, labels })
+    }
+
+    /// Save to disk.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_tensor_file().save(path)
+    }
+
+    /// Load from disk.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_tensor_file(&TensorFile::load(path)?)
+    }
+
+    /// Render example `i` as ASCII art (for the quickstart example).
+    pub fn ascii_art(&self, i: usize) -> String {
+        let row = self.images.row(i);
+        let ramp = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+        let mut s = String::with_capacity(IMG_SIDE * (IMG_SIDE + 1));
+        for y in 0..IMG_SIDE {
+            for x in 0..IMG_SIDE {
+                let v = row[y * IMG_SIDE + x].clamp(0.0, 1.0);
+                let idx = ((v * (ramp.len() - 1) as f32).round()) as usize;
+                s.push(ramp[idx]);
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_shapes_and_determinism() {
+        let a = SynthMnist::generate(50, 9);
+        let b = SynthMnist::generate(50, 9);
+        let c = SynthMnist::generate(50, 10);
+        assert_eq!(a.len(), 50);
+        assert_eq!(a.images.cols, 784);
+        assert_eq!(a.images.data, b.images.data);
+        assert_eq!(a.labels, b.labels);
+        assert_ne!(a.images.data, c.images.data);
+    }
+
+    #[test]
+    fn pixels_in_unit_range() {
+        let d = SynthMnist::generate(40, 3);
+        assert!(d
+            .images
+            .data
+            .iter()
+            .all(|&p| (0.0..=1.0).contains(&p)));
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let d = SynthMnist::generate(100, 4);
+        let mut counts = [0usize; 10];
+        for &l in &d.labels {
+            counts[l] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn images_nontrivial_and_distinct_across_classes() {
+        let d = SynthMnist::generate(20, 5);
+        // Every image has ink.
+        for i in 0..d.len() {
+            let ink: f32 = d.images.row(i).iter().sum();
+            assert!(ink > 10.0, "image {i} nearly blank (ink {ink})");
+        }
+    }
+
+    #[test]
+    fn tensor_file_roundtrip() {
+        let d = SynthMnist::generate(12, 6);
+        let back = SynthMnist::from_tensor_file(&d.to_tensor_file()).unwrap();
+        assert_eq!(back.labels, d.labels);
+        assert_eq!(back.images.data, d.images.data);
+    }
+
+    #[test]
+    fn take_subset() {
+        let d = SynthMnist::generate(30, 7);
+        let t = d.take(10);
+        assert_eq!(t.len(), 10);
+        assert_eq!(t.labels[..], d.labels[..10]);
+        assert_eq!(t.images.row(3), d.images.row(3));
+    }
+
+    #[test]
+    fn ascii_art_renders() {
+        let d = SynthMnist::generate(1, 8);
+        let art = d.ascii_art(0);
+        assert_eq!(art.lines().count(), 28);
+        assert!(art.contains(|c: char| c != ' ' && c != '\n'));
+    }
+}

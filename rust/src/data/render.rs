@@ -1,0 +1,171 @@
+//! Rasterizer: glyph strokes → jittered 28×28 grayscale images.
+//!
+//! Pipeline per image:
+//! 1. Pick a glyph variant for the class.
+//! 2. Sample an affine jitter: rotation (±12°), anisotropic scale
+//!    (0.8–1.1), translation (±2.5 px), shear (±0.15).
+//! 3. Stamp each stroke as a sequence of soft (Gaussian-falloff) dots
+//!    with a jittered stroke radius — an anti-aliased "ink" model.
+//! 4. Add background noise and clamp to [0, 1].
+
+use super::glyphs;
+use super::{IMG_PIXELS, IMG_SIDE};
+use crate::util::rng::Xoshiro256;
+
+/// Render one digit image; `rng` drives all jitter.
+pub fn render_digit(class: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+    let variants = glyphs::variants(class);
+    let glyph = variants[rng.below(variants.len())];
+
+    // Affine jitter parameters.
+    let theta = rng.uniform(-0.21, 0.21); // ±12°
+    let (sin_t, cos_t) = (theta.sin(), theta.cos());
+    let scale_x = rng.uniform(0.80, 1.10);
+    let scale_y = rng.uniform(0.80, 1.10);
+    let shear = rng.uniform(-0.15, 0.15);
+    let dx = rng.uniform(-2.5, 2.5);
+    let dy = rng.uniform(-2.5, 2.5);
+    let radius = rng.uniform(0.85, 1.45); // stroke half-width in px
+    let ink = rng.uniform(0.85, 1.0); // peak intensity
+
+    // Glyph unit square maps into a 20×20 box centered in the 28×28
+    // frame (like MNIST's centered digits), then jitters.
+    let box_size = 20.0;
+    let margin = (IMG_SIDE as f32 - box_size) / 2.0;
+    let center = IMG_SIDE as f32 / 2.0;
+
+    let transform = |(ux, uy): (f32, f32)| -> (f32, f32) {
+        // Unit coords → centered box coords.
+        let x0 = margin + ux * box_size - center;
+        let y0 = margin + uy * box_size - center;
+        // Shear, scale, rotate, translate.
+        let xs = (x0 + shear * y0) * scale_x;
+        let ys = y0 * scale_y;
+        let xr = xs * cos_t - ys * sin_t;
+        let yr = xs * sin_t + ys * cos_t;
+        (xr + center + dx, yr + center + dy)
+    };
+
+    let mut img = vec![0.0f32; IMG_PIXELS];
+    for stroke in glyph {
+        let pts: Vec<(f32, f32)> = stroke.iter().map(|&p| transform(p)).collect();
+        for seg in pts.windows(2) {
+            stamp_segment(&mut img, seg[0], seg[1], radius, ink);
+        }
+    }
+
+    // Background noise + clamp.
+    for p in img.iter_mut() {
+        let noise = rng.uniform(0.0, 0.06);
+        *p = (*p + noise).clamp(0.0, 1.0);
+    }
+    img
+}
+
+/// Stamp an anti-aliased line segment by marching soft dots along it.
+fn stamp_segment(img: &mut [f32], a: (f32, f32), b: (f32, f32), radius: f32, ink: f32) {
+    let len = ((b.0 - a.0).powi(2) + (b.1 - a.1).powi(2)).sqrt();
+    // Half-pixel steps along the segment guarantee continuous coverage.
+    let steps = (len * 2.0).ceil().max(1.0) as usize;
+    for s in 0..=steps {
+        let t = s as f32 / steps as f32;
+        let cx = a.0 + (b.0 - a.0) * t;
+        let cy = a.1 + (b.1 - a.1) * t;
+        stamp_dot(img, cx, cy, radius, ink);
+    }
+}
+
+/// Additive Gaussian-falloff dot, saturating at `ink`.
+fn stamp_dot(img: &mut [f32], cx: f32, cy: f32, radius: f32, ink: f32) {
+    let r_px = (radius * 2.5).ceil() as i32;
+    let x0 = (cx.floor() as i32 - r_px).max(0);
+    let x1 = (cx.floor() as i32 + r_px).min(IMG_SIDE as i32 - 1);
+    let y0 = (cy.floor() as i32 - r_px).max(0);
+    let y1 = (cy.floor() as i32 + r_px).min(IMG_SIDE as i32 - 1);
+    let inv_2r2 = 1.0 / (2.0 * radius * radius);
+    for y in y0..=y1 {
+        for x in x0..=x1 {
+            let d2 = (x as f32 - cx).powi(2) + (y as f32 - cy).powi(2);
+            let v = ink * (-d2 * inv_2r2).exp();
+            let idx = y as usize * IMG_SIDE + x as usize;
+            img[idx] = (img[idx] + v).min(ink).max(img[idx]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_classes_with_ink_in_range() {
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        for class in 0..10 {
+            let img = render_digit(class, &mut rng);
+            assert_eq!(img.len(), IMG_PIXELS);
+            assert!(img.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            let ink: f32 = img.iter().sum();
+            assert!(ink > 10.0, "class {class} too faint: {ink}");
+            assert!(ink < 500.0, "class {class} too dense: {ink}");
+        }
+    }
+
+    #[test]
+    fn jitter_varies_images() {
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let a = render_digit(3, &mut rng);
+        let b = render_digit(3, &mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn classes_differ_more_than_jitter() {
+        // Mean intra-class L2 distance should be smaller than mean
+        // inter-class distance — a weak separability sanity check.
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let per_class: Vec<Vec<Vec<f32>>> = (0..10)
+            .map(|c| (0..6).map(|_| render_digit(c, &mut rng)).collect())
+            .collect();
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter()
+                .zip(b.iter())
+                .map(|(x, y)| (x - y).powi(2))
+                .sum::<f32>()
+                .sqrt()
+        };
+        let mut intra = 0.0;
+        let mut intra_n = 0;
+        let mut inter = 0.0;
+        let mut inter_n = 0;
+        for c in 0..10 {
+            for i in 0..6 {
+                for j in (i + 1)..6 {
+                    intra += dist(&per_class[c][i], &per_class[c][j]);
+                    intra_n += 1;
+                }
+            }
+            for c2 in (c + 1)..10 {
+                for i in 0..6 {
+                    inter += dist(&per_class[c][i], &per_class[c2][i]);
+                    inter_n += 1;
+                }
+            }
+        }
+        let intra_mean = intra / intra_n as f32;
+        let inter_mean = inter / inter_n as f32;
+        assert!(
+            inter_mean > intra_mean * 1.1,
+            "classes not separable: intra {intra_mean} vs inter {inter_mean}"
+        );
+    }
+
+    #[test]
+    fn dot_saturates_at_ink() {
+        let mut img = vec![0.0f32; IMG_PIXELS];
+        for _ in 0..50 {
+            stamp_dot(&mut img, 14.0, 14.0, 1.0, 0.9);
+        }
+        assert!(img.iter().all(|&p| p <= 0.9 + 1e-6));
+        assert!(img[14 * IMG_SIDE + 14] > 0.89);
+    }
+}

@@ -1,0 +1,133 @@
+//! Fig. 2 — "Network training accuracy progression": summarize the
+//! training curves emitted by `python -m compile.train`.
+
+use anyhow::{Context, Result};
+
+use crate::io::ArtifactPaths;
+use crate::report::Table;
+
+/// One parsed training curve.
+#[derive(Debug, Clone)]
+pub struct Curve {
+    /// Variant tag.
+    pub variant: String,
+    /// (epoch, train_acc, test_acc) per epoch.
+    pub points: Vec<(u32, f64, f64)>,
+}
+
+impl Curve {
+    /// Final test accuracy.
+    pub fn final_test_acc(&self) -> f64 {
+        self.points.last().map(|p| p.2).unwrap_or(0.0)
+    }
+
+    /// First epoch reaching within 0.5% of the final accuracy (the
+    /// "asymptote" the paper describes around epoch 50).
+    pub fn plateau_epoch(&self) -> u32 {
+        let target = self.final_test_acc() - 0.005;
+        self.points
+            .iter()
+            .find(|p| p.2 >= target)
+            .map(|p| p.0)
+            .unwrap_or(0)
+    }
+}
+
+/// Parse a fig2 CSV (`epoch,train_acc,test_acc`).
+pub fn parse_curve(path: &std::path::Path, variant: &str) -> Result<Curve> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {} — run `make train` first", path.display()))?;
+    let mut points = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 || line.trim().is_empty() {
+            continue; // header
+        }
+        let mut cols = line.split(',');
+        let epoch: u32 = cols.next().context("epoch col")?.trim().parse()?;
+        let train: f64 = cols.next().context("train col")?.trim().parse()?;
+        let test: f64 = cols.next().context("test col")?.trim().parse()?;
+        points.push((epoch, train, test));
+    }
+    anyhow::ensure!(!points.is_empty(), "no data rows in {}", path.display());
+    Ok(Curve {
+        variant: variant.to_string(),
+        points,
+    })
+}
+
+/// Build the Fig. 2 summary table (and echo the curves as CSV rows).
+pub fn fig2_summary(paths: &ArtifactPaths) -> Result<(Table, Vec<Curve>)> {
+    let fp = parse_curve(&paths.fig2_csv("fp"), "fp")?;
+    let hy = parse_curve(&paths.fig2_csv("hybrid"), "hybrid")?;
+    let gap = (fp.final_test_acc() - hy.final_test_acc()) * 100.0;
+    let mut t = Table::new(
+        "FIG. 2 — TRAINING ACCURACY PROGRESSION (measured | paper)",
+        &["Floating Point Only", "Hybrid (BEANNA)"],
+    );
+    t.row(
+        "Final test accuracy",
+        &[
+            format!("{:.2}% | 98.19%", fp.final_test_acc() * 100.0),
+            format!("{:.2}% | 97.96%", hy.final_test_acc() * 100.0),
+        ],
+    );
+    t.row(
+        "Accuracy gap (fp - hybrid)",
+        &[format!("{gap:.2}% | 0.23%"), String::new()],
+    );
+    t.row(
+        "Plateau epoch (within 0.5%)",
+        &[
+            format!("{}", fp.plateau_epoch()),
+            format!("{}", hy.plateau_epoch()),
+        ],
+    );
+    t.row_disp(
+        "Epochs trained",
+        &[fp.points.len(), hy.points.len()],
+    );
+    Ok((t, vec![fp, hy]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_csv(dir: &std::path::Path, name: &str, rows: &[(u32, f64, f64)]) {
+        let mut s = String::from("epoch,train_acc,test_acc\n");
+        for (e, tr, te) in rows {
+            s.push_str(&format!("{e},{tr},{te}\n"));
+        }
+        std::fs::write(dir.join(name), s).unwrap();
+    }
+
+    #[test]
+    fn parses_and_summarizes() {
+        let dir = std::env::temp_dir().join("beanna_fig2_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_csv(
+            &dir,
+            "fig2_fp.csv",
+            &[(1, 0.90, 0.91), (2, 0.97, 0.975), (3, 0.99, 0.981)],
+        );
+        write_csv(
+            &dir,
+            "fig2_hybrid.csv",
+            &[(1, 0.85, 0.88), (2, 0.96, 0.972), (3, 0.985, 0.979)],
+        );
+        let paths = ArtifactPaths::new(&dir);
+        let (table, curves) = fig2_summary(&paths).unwrap();
+        let s = table.render();
+        assert!(s.contains("98.10% | 98.19%"));
+        assert!((curves[0].final_test_acc() - 0.981).abs() < 1e-9);
+        assert_eq!(curves[1].plateau_epoch(), 3); // first ≥ 0.979−0.005
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_curves_hint_at_make() {
+        let paths = ArtifactPaths::new("/tmp/no_such_beanna_dir");
+        let err = fig2_summary(&paths).unwrap_err().to_string();
+        assert!(err.contains("make train"), "{err}");
+    }
+}

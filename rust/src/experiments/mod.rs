@@ -1,0 +1,43 @@
+//! Experiment drivers: one function per paper table/figure, shared by
+//! the `beanna` CLI and the `cargo bench` targets so both always report
+//! the same numbers.
+
+pub mod fig2;
+pub mod peak;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+pub use fig2::fig2_summary;
+pub use peak::peak_throughput_table;
+pub use table1::{table1, Table1Row};
+pub use table2::table2;
+pub use table3::table3;
+
+use crate::io::ArtifactPaths;
+use crate::nn::{Network, NetworkConfig};
+
+/// Load a trained variant from artifacts, or fall back to deterministic
+/// random weights (accuracy rows are then meaningless and marked).
+pub fn load_variant(paths: &ArtifactPaths, variant: &str) -> (Network, bool) {
+    match Network::load(&paths.weights(variant)) {
+        Ok(net) => (net, true),
+        Err(_) => {
+            let cfg = if variant == "hybrid" {
+                NetworkConfig::beanna_hybrid()
+            } else {
+                NetworkConfig::beanna_fp()
+            };
+            (Network::random(&cfg, 0xBEA77A), false)
+        }
+    }
+}
+
+/// Evaluation-set size cap (keeps CLI runs snappy; override with
+/// `BEANNA_EVAL_LIMIT`).
+pub fn eval_limit() -> usize {
+    std::env::var("BEANNA_EVAL_LIMIT")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1024)
+}

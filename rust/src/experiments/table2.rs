@@ -1,0 +1,68 @@
+//! Table II — "Memory and Hardware Utilization".
+
+use crate::model::{MemoryModel, ResourceModel};
+use crate::nn::NetworkConfig;
+use crate::report::Table;
+
+/// Build Table II from the resource and memory models, with the paper's
+/// values alongside.
+pub fn table2() -> Table {
+    let fp_res = ResourceModel::floating_point_only().report();
+    let be_res = ResourceModel::beanna().report();
+    let fp_mem = MemoryModel::of(&NetworkConfig::beanna_fp());
+    let be_mem = MemoryModel::of(&NetworkConfig::beanna_hybrid());
+
+    let mut t = Table::new(
+        "TABLE II — MEMORY AND HARDWARE UTILIZATION (model | paper)",
+        &["Floating Point Only", "BEANNA"],
+    );
+    t.row(
+        "LUTs",
+        &[
+            format!("{} | 89,838", fp_res.luts()),
+            format!("{} | 102,297", be_res.luts()),
+        ],
+    );
+    t.row(
+        "FFs",
+        &[
+            format!("{} | 25,636", fp_res.ffs()),
+            format!("{} | 25,615", be_res.ffs()),
+        ],
+    );
+    t.row(
+        "BRAMs",
+        &[
+            format!("{} | 71.5", fp_res.bram36()),
+            format!("{} | 71.5", be_res.bram36()),
+        ],
+    );
+    t.row(
+        "DSP Slices",
+        &[
+            format!("{} | 256", fp_res.dsps()),
+            format!("{} | 256", be_res.dsps()),
+        ],
+    );
+    t.row(
+        "Memory Usage (bytes)",
+        &[
+            format!("{} | 5,820,416", fp_mem.total_bytes()),
+            format!("{} | 1,888,256", be_mem.total_bytes()),
+        ],
+    );
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table2_renders_calibrated_values() {
+        let s = super::table2().render();
+        assert!(s.contains("89838 | 89,838"));
+        assert!(s.contains("102297 | 102,297"));
+        assert!(s.contains("5820416 | 5,820,416"));
+        assert!(s.contains("1888256 | 1,888,256"));
+        assert!(s.contains("71.5 | 71.5"));
+    }
+}

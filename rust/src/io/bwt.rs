@@ -1,0 +1,387 @@
+//! `.bwt` named-tensor container (format documented in [`crate::io`]).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::bf16::Matrix;
+use crate::binary::{BitMatrix, BitVector};
+
+/// Element type of a stored tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    /// 32-bit IEEE float.
+    F32 = 0,
+    /// Raw bfloat16 bit patterns (u16).
+    BF16 = 1,
+    /// Packed sign bits, 1 bit per element, row-padded to bytes.
+    Bits = 2,
+    /// 32-bit signed integer.
+    I32 = 3,
+    /// Unsigned byte.
+    U8 = 4,
+}
+
+impl DType {
+    fn from_u8(v: u8) -> Result<Self> {
+        Ok(match v {
+            0 => DType::F32,
+            1 => DType::BF16,
+            2 => DType::Bits,
+            3 => DType::I32,
+            4 => DType::U8,
+            _ => bail!("unknown dtype tag {v}"),
+        })
+    }
+}
+
+/// One stored tensor: dtype, shape, raw little-endian bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    /// Element type.
+    pub dtype: DType,
+    /// Shape (row-major).
+    pub shape: Vec<usize>,
+    /// Raw data bytes, little-endian.
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    /// Element count implied by the shape.
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Build an f32 tensor from values.
+    pub fn from_f32(shape: &[usize], values: &[f32]) -> Result<Self> {
+        ensure!(
+            shape.iter().product::<usize>() == values.len(),
+            "shape/value mismatch"
+        );
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Ok(Self {
+            dtype: DType::F32,
+            shape: shape.to_vec(),
+            data,
+        })
+    }
+
+    /// Decode as a flat f32 vector (F32 and BF16 widen; I32/U8 convert).
+    pub fn to_f32_vec(&self) -> Result<Vec<f32>> {
+        let n = self.elements();
+        match self.dtype {
+            DType::F32 => {
+                ensure!(self.data.len() == n * 4, "f32 payload size");
+                Ok(self
+                    .data
+                    .chunks_exact(4)
+                    .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                    .collect())
+            }
+            DType::BF16 => {
+                ensure!(self.data.len() == n * 2, "bf16 payload size");
+                Ok(self
+                    .data
+                    .chunks_exact(2)
+                    .map(|b| {
+                        crate::bf16::BF16::from_bits(u16::from_le_bytes([b[0], b[1]])).to_f32()
+                    })
+                    .collect())
+            }
+            DType::I32 => {
+                ensure!(self.data.len() == n * 4, "i32 payload size");
+                Ok(self
+                    .data
+                    .chunks_exact(4)
+                    .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f32)
+                    .collect())
+            }
+            DType::U8 => {
+                ensure!(self.data.len() == n, "u8 payload size");
+                Ok(self.data.iter().map(|&b| b as f32).collect())
+            }
+            DType::Bits => {
+                let m = self.to_bit_matrix()?;
+                Ok(m.to_matrix().data)
+            }
+        }
+    }
+
+    /// Decode as a 2-D [`Matrix`]. 1-D tensors become a single row.
+    pub fn to_matrix(&self) -> Result<Matrix> {
+        let (rows, cols) = match self.shape.len() {
+            1 => (1, self.shape[0]),
+            2 => (self.shape[0], self.shape[1]),
+            d => bail!("to_matrix needs 1-D/2-D, got {d}-D"),
+        };
+        Matrix::from_vec(rows, cols, self.to_f32_vec()?)
+    }
+
+    /// Decode a packed-bits tensor as a [`BitMatrix`].
+    pub fn to_bit_matrix(&self) -> Result<BitMatrix> {
+        ensure!(self.dtype == DType::Bits, "tensor is not packed bits");
+        let (rows, cols) = match self.shape.len() {
+            1 => (1, self.shape[0]),
+            2 => (self.shape[0], self.shape[1]),
+            d => bail!("to_bit_matrix needs 1-D/2-D, got {d}-D"),
+        };
+        let row_bytes = cols.div_ceil(8);
+        ensure!(
+            self.data.len() == rows * row_bytes,
+            "bits payload: expected {} bytes, got {}",
+            rows * row_bytes,
+            self.data.len()
+        );
+        let mut row_bits = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let bytes = &self.data[r * row_bytes..(r + 1) * row_bytes];
+            let mut v = BitVector::ones(cols);
+            for c in 0..cols {
+                if (bytes[c / 8] >> (c % 8)) & 1 == 1 {
+                    v.set(c, true);
+                }
+            }
+            row_bits.push(v);
+        }
+        Ok(BitMatrix {
+            rows,
+            cols,
+            row_bits,
+        })
+    }
+
+    /// Encode a [`BitMatrix`] as a packed-bits tensor.
+    pub fn from_bit_matrix(m: &BitMatrix) -> Self {
+        let row_bytes = m.cols.div_ceil(8);
+        let mut data = vec![0u8; m.rows * row_bytes];
+        for (r, bits) in m.row_bits.iter().enumerate() {
+            for c in 0..m.cols {
+                if bits.get(c) {
+                    data[r * row_bytes + c / 8] |= 1 << (c % 8);
+                }
+            }
+        }
+        Self {
+            dtype: DType::Bits,
+            shape: vec![m.rows, m.cols],
+            data,
+        }
+    }
+}
+
+/// An ordered collection of named tensors — the on-disk `.bwt` unit.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TensorFile {
+    /// Name → tensor, sorted for deterministic output.
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl TensorFile {
+    /// Empty container.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (replacing any same-named tensor).
+    pub fn insert(&mut self, name: &str, t: Tensor) {
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    /// Fetch by name.
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("tensor '{name}' not in file"))
+    }
+
+    /// Serialize to bytes.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(b"BWT1");
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.push(t.dtype as u8);
+            out.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            out.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+            out.extend_from_slice(&t.data);
+        }
+        out
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut r = Cursor { buf: bytes, pos: 0 };
+        let magic = r.take(4)?;
+        ensure!(magic == b"BWT1", "bad magic {:?}", &magic);
+        let count = r.u32()?;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let name_len = r.u16()? as usize;
+            let name = String::from_utf8(r.take(name_len)?.to_vec())
+                .context("tensor name not utf-8")?;
+            let dtype = DType::from_u8(r.u8()?)?;
+            let ndim = r.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let data_len = r.u64()? as usize;
+            let data = r.take(data_len)?.to_vec();
+            tensors.insert(name, Tensor { dtype, shape, data });
+        }
+        Ok(Self { tensors })
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Read from a file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut bytes = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?
+            .read_to_end(&mut bytes)?;
+        Self::from_bytes(&bytes).with_context(|| format!("parse {}", path.display()))
+    }
+}
+
+/// Bounds-checked byte cursor for parsing.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            self.pos + n <= self.buf.len(),
+            "truncated .bwt: need {} bytes at offset {}, have {}",
+            n,
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes(b.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn roundtrip_f32() {
+        let mut tf = TensorFile::new();
+        tf.insert(
+            "w0",
+            Tensor::from_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap(),
+        );
+        let back = TensorFile::from_bytes(&tf.to_bytes()).unwrap();
+        assert_eq!(back, tf);
+        let m = back.get("w0").unwrap().to_matrix().unwrap();
+        assert_eq!(m.get(1, 2), 6.0);
+    }
+
+    #[test]
+    fn roundtrip_bits() {
+        let m = Matrix::from_vec(2, 10, crate::util::rng::Xoshiro256::seed_from_u64(3).normal_vec(20))
+            .unwrap();
+        let bm = BitMatrix::from_matrix(&m);
+        let t = Tensor::from_bit_matrix(&bm);
+        let mut tf = TensorFile::new();
+        tf.insert("b", t);
+        let back = TensorFile::from_bytes(&tf.to_bytes()).unwrap();
+        assert_eq!(back.get("b").unwrap().to_bit_matrix().unwrap(), bm);
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        assert!(TensorFile::from_bytes(b"NOPE\x00\x00\x00\x00").is_err());
+        let tf = {
+            let mut tf = TensorFile::new();
+            tf.insert("x", Tensor::from_f32(&[4], &[1.0; 4]).unwrap());
+            tf
+        };
+        let bytes = tf.to_bytes();
+        for cut in [3, 8, 12, bytes.len() - 1] {
+            assert!(
+                TensorFile::from_bytes(&bytes[..cut]).is_err(),
+                "cut at {cut} should fail"
+            );
+        }
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let tf = TensorFile::new();
+        assert!(tf.get("nope").is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary() {
+        check(".bwt roundtrip", 60, |g: &mut Gen| {
+            let mut tf = TensorFile::new();
+            let n_tensors = g.usize_in(1..5);
+            for i in 0..n_tensors {
+                let (r, c) = g.dims(16);
+                let vals: Vec<f32> = (0..r * c).map(|_| g.f32_in(-10.0, 10.0)).collect();
+                tf.insert(
+                    &format!("t{i}"),
+                    Tensor::from_f32(&[r, c], &vals).unwrap(),
+                );
+            }
+            let back = TensorFile::from_bytes(&tf.to_bytes())
+                .map_err(|e| format!("parse failed: {e}"))?;
+            if back == tf {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        });
+    }
+
+    #[test]
+    fn file_save_load() {
+        let dir = std::env::temp_dir().join("beanna_test_bwt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bwt");
+        let mut tf = TensorFile::new();
+        tf.insert("a", Tensor::from_f32(&[3], &[9.0, 8.0, 7.0]).unwrap());
+        tf.save(&path).unwrap();
+        let back = TensorFile::load(&path).unwrap();
+        assert_eq!(back, tf);
+        std::fs::remove_file(&path).ok();
+    }
+}

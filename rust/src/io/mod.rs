@@ -1,0 +1,27 @@
+//! Artifact I/O: the `.bwt` ("BEANNA weights/tensors") interchange format
+//! and artifact path resolution.
+//!
+//! `.bwt` is a tiny named-tensor container written by `python/compile/`
+//! (training, data generation) and read by the rust runtime — the crate
+//! set has no serde/npy, so we define the format explicitly:
+//!
+//! ```text
+//! magic   : 4 bytes  "BWT1"
+//! count   : u32 LE   number of tensors
+//! per tensor:
+//!   name_len : u16 LE, name bytes (utf-8)
+//!   dtype    : u8   (0 = f32, 1 = bf16 raw u16, 2 = packed bits u8,
+//!                    3 = i32, 4 = u8)
+//!   ndim     : u8, dims: ndim × u32 LE
+//!   data_len : u64 LE, raw little-endian data bytes
+//! ```
+//!
+//! All multi-byte values are little-endian. Packed-bit tensors (dtype 2)
+//! store `ceil(last_dim/8)` bytes per leading-index row, LSB-first,
+//! bit = 1 ⇔ −1 (matching [`crate::binary::BitVector`]).
+
+pub mod bwt;
+pub mod paths;
+
+pub use bwt::{DType, Tensor, TensorFile};
+pub use paths::ArtifactPaths;

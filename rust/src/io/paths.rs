@@ -1,0 +1,108 @@
+//! Artifact path resolution.
+//!
+//! All build-time outputs live under `artifacts/` (produced by
+//! `make artifacts`): HLO text modules per model variant and batch size,
+//! trained weights, and the Fig. 2 training curves.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Result};
+
+/// Resolved artifact directory with typed accessors for each artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    /// Root artifacts directory.
+    pub root: PathBuf,
+}
+
+impl ArtifactPaths {
+    /// Use an explicit root.
+    pub fn new(root: impl Into<PathBuf>) -> Self {
+        Self { root: root.into() }
+    }
+
+    /// Locate `artifacts/` relative to the current directory or the
+    /// `BEANNA_ARTIFACTS` environment variable.
+    pub fn discover() -> Self {
+        if let Ok(p) = std::env::var("BEANNA_ARTIFACTS") {
+            return Self::new(p);
+        }
+        // Walk up from the CWD so examples/tests work from any subdir.
+        let mut dir = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+        loop {
+            let cand = dir.join("artifacts");
+            if cand.is_dir() {
+                return Self::new(cand);
+            }
+            if !dir.pop() {
+                return Self::new("artifacts");
+            }
+        }
+    }
+
+    /// HLO text module for a model variant (`"hybrid"` / `"fp"`) at a
+    /// given batch size.
+    pub fn hlo(&self, variant: &str, batch: usize) -> PathBuf {
+        self.root.join(format!("model_{variant}_b{batch}.hlo.txt"))
+    }
+
+    /// Trained weights for a variant.
+    pub fn weights(&self, variant: &str) -> PathBuf {
+        self.root.join(format!("weights_{variant}.bwt"))
+    }
+
+    /// Synthetic-MNIST evaluation set (shared by both variants).
+    pub fn dataset(&self) -> PathBuf {
+        self.root.join("synth_mnist_test.bwt")
+    }
+
+    /// Fig. 2 training-curve CSV for a variant.
+    pub fn fig2_csv(&self, variant: &str) -> PathBuf {
+        self.root.join(format!("fig2_{variant}.csv"))
+    }
+
+    /// Check a path exists, with a helpful make hint.
+    pub fn require(path: &Path) -> Result<&Path> {
+        ensure!(
+            path.exists(),
+            "artifact {} missing — run `make artifacts` first",
+            path.display()
+        );
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_shapes() {
+        let p = ArtifactPaths::new("/tmp/a");
+        assert_eq!(
+            p.hlo("hybrid", 256),
+            PathBuf::from("/tmp/a/model_hybrid_b256.hlo.txt")
+        );
+        assert_eq!(p.weights("fp"), PathBuf::from("/tmp/a/weights_fp.bwt"));
+        assert_eq!(
+            p.fig2_csv("hybrid"),
+            PathBuf::from("/tmp/a/fig2_hybrid.csv")
+        );
+    }
+
+    #[test]
+    fn require_reports_missing() {
+        let err = ArtifactPaths::require(Path::new("/definitely/not/here.bwt"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("make artifacts"));
+    }
+
+    #[test]
+    fn env_override() {
+        std::env::set_var("BEANNA_ARTIFACTS", "/tmp/custom_artifacts");
+        let p = ArtifactPaths::discover();
+        assert_eq!(p.root, PathBuf::from("/tmp/custom_artifacts"));
+        std::env::remove_var("BEANNA_ARTIFACTS");
+    }
+}

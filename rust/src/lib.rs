@@ -1,0 +1,46 @@
+//! # BEANNA — Binary-Enabled Architecture for Neural Network Acceleration
+//!
+//! A full-system reproduction of *BEANNA: A Binary-Enabled Architecture for
+//! Neural Network Acceleration* (Terrill & Chu, UCLA, 2021) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 1/2 (build-time Python)** — Pallas kernels for the bfloat16
+//!   and XNOR-popcount matmul datapaths, a JAX hybrid-MLP model, training,
+//!   and AOT lowering to HLO text (see `python/compile/`).
+//! * **Layer 3 (this crate)** — the paper's hardware, reproduced as a
+//!   cycle-level simulator ([`sim`]), analytic FPGA resource/power/memory
+//!   models ([`model`]), a PJRT runtime that executes the AOT artifacts
+//!   ([`runtime`]), and an inference coordinator with dynamic batching
+//!   ([`coordinator`]).
+//!
+//! The crate is self-contained after `make artifacts`: Python never runs
+//! on the request path.
+
+pub mod bf16;
+pub mod binary;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod io;
+pub mod model;
+pub mod nn;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// The paper's clock frequency: 100 MHz (§I, Table I).
+pub const CLOCK_HZ: u64 = 100_000_000;
+
+/// Systolic array dimension N for the N×N array (§III-C: 16×16).
+pub const ARRAY_DIM: usize = 16;
+
+/// Binary packing factor: each PE computes 16 binary MACs per cycle
+/// (§I: "effectively act as a 256x16 systolic array").
+pub const BINARY_PACK: usize = 16;
+
+/// The paper's network layer sizes (§III-A): 784-1024-1024-1024-10.
+pub const PAPER_LAYERS: [usize; 5] = [784, 1024, 1024, 1024, 10];

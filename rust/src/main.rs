@@ -1,0 +1,346 @@
+//! `beanna` — leader CLI for the BEANNA reproduction.
+//!
+//! Subcommands map one-to-one to the paper's artifacts plus operational
+//! tools:
+//!
+//! ```text
+//! beanna gen-data   generate the synthetic-MNIST train/test sets
+//! beanna fig1       bfloat16 vs IEEE formats (Fig. 1)
+//! beanna fig2       training-curve summary (Fig. 2, needs `make train`)
+//! beanna table1     performance & speed (Table I)
+//! beanna table2     memory & hardware utilization (Table II)
+//! beanna table3     power consumption (Table III)
+//! beanna peak       §I peak-throughput figures
+//! beanna infer      classify one test image (sim | ref | pjrt backend)
+//! beanna serve      run the batching server over the test set
+//! beanna selftest   cross-check xact vs cycle-exact engines
+//! ```
+
+use anyhow::{bail, Result};
+
+use beanna::bf16::format::render_fig1;
+use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::data::SynthMnist;
+use beanna::experiments;
+use beanna::io::ArtifactPaths;
+use beanna::nn::{Network, NetworkConfig};
+use beanna::sim::{Accelerator, AcceleratorConfig};
+use beanna::util::args::ArgSpec;
+
+fn main() {
+    let mut args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!("usage: beanna <command> [options]\n\n{}", COMMANDS);
+        std::process::exit(2);
+    }
+    let cmd = args.remove(0);
+    let result = match cmd.as_str() {
+        "gen-data" => cmd_gen_data(args),
+        "fig1" => cmd_fig1(),
+        "fig2" => cmd_fig2(),
+        "table1" => cmd_table1(args),
+        "table2" => cmd_table2(),
+        "table3" => cmd_table3(args),
+        "peak" => cmd_peak(),
+        "infer" => cmd_infer(args),
+        "serve" => cmd_serve(args),
+        "trace" => cmd_trace(args),
+        "selftest" => cmd_selftest(),
+        "help" | "--help" | "-h" => {
+            println!("usage: beanna <command> [options]\n\n{COMMANDS}");
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n\n{COMMANDS}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const COMMANDS: &str = "commands:
+  gen-data   generate synthetic-MNIST train/test .bwt files
+  fig1       print Fig. 1 (bfloat16 vs IEEE data types)
+  fig2       print the Fig. 2 training summary (needs `make train`)
+  table1     print Table I (performance & speed)
+  table2     print Table II (memory & hardware utilization)
+  table3     print Table III (power consumption, batch 256)
+  peak       print the §I peak-throughput figures
+  infer      classify a test image (--backend sim|ref|pjrt)
+  serve      run the batching server over the test set
+  trace      dump a per-phase execution trace (CSV + chrome://tracing)
+  selftest   cross-check the two simulator engines";
+
+fn cmd_gen_data(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("beanna gen-data", "generate synthetic-MNIST datasets")
+        .opt("train", "20000", "training examples")
+        .opt("test", "4000", "test examples")
+        .opt("seed", "7", "generator seed")
+        .opt("out", "", "output directory (default: discovered artifacts/)");
+    let p = spec.parse_from(args)?;
+    let out = match p.get("out") {
+        Some("") | None => ArtifactPaths::discover().root,
+        Some(dir) => dir.into(),
+    };
+    std::fs::create_dir_all(&out)?;
+    let seed = p.get_u64("seed")?;
+    let train = SynthMnist::generate(p.get_usize("train")?, seed);
+    let test = SynthMnist::generate(p.get_usize("test")?, seed.wrapping_add(0x5EED));
+    let train_path = out.join("synth_mnist_train.bwt");
+    let test_path = out.join("synth_mnist_test.bwt");
+    train.save(&train_path)?;
+    test.save(&test_path)?;
+    println!(
+        "wrote {} ({} images) and {} ({} images)",
+        train_path.display(),
+        train.len(),
+        test_path.display(),
+        test.len()
+    );
+    Ok(())
+}
+
+fn cmd_fig1() -> Result<()> {
+    print!("{}", render_fig1());
+    Ok(())
+}
+
+fn cmd_fig2() -> Result<()> {
+    let (table, _) = experiments::fig2_summary(&ArtifactPaths::discover())?;
+    print!("{table}");
+    Ok(())
+}
+
+fn cmd_table1(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("beanna table1", "Table I")
+        .opt("eval-limit", "1024", "test images for the accuracy rows");
+    let p = spec.parse_from(args)?;
+    let (table, _) =
+        experiments::table1(&ArtifactPaths::discover(), p.get_usize("eval-limit")?)?;
+    print!("{table}");
+    Ok(())
+}
+
+fn cmd_table2() -> Result<()> {
+    print!("{}", experiments::table2());
+    Ok(())
+}
+
+fn cmd_table3(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("beanna table3", "Table III")
+        .flag("paper-throughput", "use the paper's batch-256 throughputs");
+    let p = spec.parse_from(args)?;
+    let (fp_ips, hy_ips) = if p.flag("paper-throughput") {
+        (6928.08, 20337.60)
+    } else {
+        // Measure batch-256 throughput with the simulator (Table I path;
+        // eval-limit 1 skips the accuracy pass).
+        let (_, rows) = experiments::table1(&ArtifactPaths::discover(), 1)?;
+        (rows[0].ips_b256, rows[1].ips_b256)
+    };
+    print!("{}", experiments::table3(fp_ips, hy_ips));
+    Ok(())
+}
+
+fn cmd_peak() -> Result<()> {
+    print!("{}", experiments::peak_throughput_table()?);
+    Ok(())
+}
+
+fn cmd_infer(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("beanna infer", "classify one test image")
+        .opt("backend", "sim", "sim | ref | pjrt")
+        .opt("variant", "hybrid", "hybrid | fp")
+        .opt("index", "0", "test-set image index")
+        .flag("show", "print the image as ASCII art");
+    let p = spec.parse_from(args)?;
+    let paths = ArtifactPaths::discover();
+    let test = SynthMnist::load(&paths.dataset())?;
+    let idx = p.get_usize("index")?;
+    anyhow::ensure!(
+        idx < test.len(),
+        "index {idx} >= test set size {}",
+        test.len()
+    );
+    if p.flag("show") {
+        println!("{}", test.ascii_art(idx));
+    }
+    let variant = p.get("variant").unwrap().to_string();
+    let backend = match p.get("backend").unwrap() {
+        "sim" => Backend::simulator(Network::load(&paths.weights(&variant))?),
+        "ref" => Backend::Reference {
+            net: Network::load(&paths.weights(&variant))?,
+        },
+        "pjrt" => Backend::pjrt(&paths, &variant, 1)?,
+        other => bail!("unknown backend '{other}'"),
+    };
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+        },
+    );
+    let resp = server.infer(test.images.row(idx).to_vec())?;
+    println!(
+        "label {}  predicted {}  (batch {}, compute {} µs{})",
+        test.labels[idx],
+        resp.prediction,
+        resp.batch_size,
+        resp.compute_us,
+        match resp.sim_cycles {
+            Some(c) => format!(", {c} device cycles"),
+            None => String::new(),
+        }
+    );
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_serve(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("beanna serve", "serve the test set through the batcher")
+        .opt("backend", "ref", "sim | ref | pjrt")
+        .opt("variant", "hybrid", "hybrid | fp")
+        .opt("requests", "512", "number of requests to issue")
+        .opt("max-batch", "256", "batcher max batch")
+        .opt("max-wait-ms", "2", "batcher deadline (ms)")
+        .opt("workers", "1", "number of devices behind the router")
+        .opt("route", "jsq", "routing policy: rr | jsq");
+    let p = spec.parse_from(args)?;
+    let paths = ArtifactPaths::discover();
+    let test = SynthMnist::load(&paths.dataset())?;
+    let variant = p.get("variant").unwrap().to_string();
+    let max_batch = p.get_usize("max-batch")?;
+    let workers = p.get_usize("workers")?.max(1);
+    let make_backend = |_i: usize| -> Result<Backend> {
+        Ok(match p.get("backend").unwrap() {
+            "sim" => Backend::simulator(Network::load(&paths.weights(&variant))?),
+            "ref" => Backend::Reference {
+                net: Network::load(&paths.weights(&variant))?,
+            },
+            "pjrt" => Backend::pjrt(&paths, &variant, max_batch)?,
+            other => bail!("unknown backend '{other}'"),
+        })
+    };
+    let backends: Vec<Backend> = (0..workers)
+        .map(make_backend)
+        .collect::<Result<_>>()?;
+    let policy = match p.get("route").unwrap() {
+        "rr" => beanna::coordinator::RoutePolicy::RoundRobin,
+        "jsq" => beanna::coordinator::RoutePolicy::LeastOutstanding,
+        other => bail!("unknown routing policy '{other}'"),
+    };
+    let router = beanna::coordinator::Router::start(
+        backends,
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch,
+                max_wait: std::time::Duration::from_millis(p.get_u64("max-wait-ms")?),
+            },
+        },
+        policy,
+    )?;
+    let n = p.get_usize("requests")?.min(test.len());
+    let rxs: Vec<_> = (0..n)
+        .map(|i| router.submit(test.images.row(i).to_vec()).unwrap().1)
+        .collect();
+    let mut correct = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        if resp.prediction == test.labels[i] {
+            correct += 1;
+        }
+    }
+    let metrics = router.shutdown();
+    let total_requests: u64 = metrics.iter().map(|m| m.requests).sum();
+    let total_batches: u64 = metrics.iter().map(|m| m.batches).sum();
+    println!(
+        "served {} requests in {} batches over {} worker(s)",
+        total_requests, total_batches, workers
+    );
+    println!(
+        "accuracy {:.2}%",
+        correct as f64 / n as f64 * 100.0
+    );
+    for (i, m) in metrics.iter().enumerate() {
+        print!(
+            "  worker {i}: {} reqs, {} batches (mean {:.1}), {:.0} req/s",
+            m.requests, m.batches, m.mean_batch, m.throughput_rps
+        );
+        if let Some(q) = &m.queue_us {
+            print!(", queue µs p50 {:.0} p95 {:.0}", q.median, q.p95);
+        }
+        if m.sim_cycles > 0 {
+            print!(
+                ", {} device cycles → {:.1} inf/s @100 MHz",
+                m.sim_cycles,
+                m.requests as f64 / (m.sim_cycles as f64 / beanna::CLOCK_HZ as f64)
+            );
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_trace(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("beanna trace", "dump a per-phase execution trace")
+        .opt("variant", "hybrid", "hybrid | fp")
+        .opt("batch", "16", "batch size")
+        .opt("out", "beanna_run", "output basename (.csv / .trace.json)");
+    let p = spec.parse_from(args)?;
+    let variant = p.get("variant").unwrap().to_string();
+    let batch = p.get_usize("batch")?;
+    let (net, trained) =
+        beanna::experiments::load_variant(&ArtifactPaths::discover(), &variant);
+    if !trained {
+        eprintln!("note: no trained weights found, tracing with random weights");
+    }
+    let mut accel = Accelerator::new(AcceleratorConfig::default());
+    let run = accel.run_network(
+        &net,
+        &beanna::bf16::Matrix::zeros(batch, net.config.sizes[0]),
+        batch,
+    )?;
+    let trace = beanna::sim::Trace::from_run(&run);
+    let base = std::path::PathBuf::from(p.get("out").unwrap());
+    trace.save(&base)?;
+    println!(
+        "{} events over {} cycles → {}.csv and {}.trace.json (open in chrome://tracing)",
+        trace.events.len(),
+        trace.total_cycles(),
+        base.display(),
+        base.display()
+    );
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    use beanna::bf16::Matrix;
+    use beanna::nn::Precision;
+    println!("cross-checking transaction vs cycle-exact engines…");
+    let cfg = NetworkConfig {
+        sizes: vec![40, 48, 48, 10],
+        precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+    };
+    let net = Network::random(&cfg, 99);
+    let x = Matrix::from_vec(
+        6,
+        40,
+        beanna::util::rng::Xoshiro256::seed_from_u64(1).normal_vec(240),
+    )?;
+    let mut xact = Accelerator::new(AcceleratorConfig::default());
+    let mut rt = Accelerator::new(AcceleratorConfig::cycle_exact());
+    let a = xact.run_network(&net, &x, 6)?;
+    let b = rt.run_network(&net, &x, 6)?;
+    anyhow::ensure!(a.outputs == b.outputs, "outputs diverged");
+    anyhow::ensure!(a.total_cycles == b.total_cycles, "cycles diverged");
+    anyhow::ensure!(a.outputs == net.forward(&x)?, "reference diverged");
+    println!(
+        "OK: engines bit-exact ({} cycles, {} layers)",
+        a.total_cycles,
+        a.layers.len()
+    );
+    Ok(())
+}

@@ -1,0 +1,113 @@
+//! Off-chip memory footprint model — the "Memory Usage" row of Table II.
+//!
+//! The paper's numbers are pure weight storage: bf16 weights at
+//! 2 bytes/element, binary weights at 1 bit/element (rows padded to whole
+//! bytes). For the paper's topology this gives exactly:
+//!
+//! * Floating Point Only: `(784·1024 + 1024·1024·2 + 1024·10) · 2 =
+//!   5,820,416` bytes.
+//! * BEANNA hybrid: `(784·1024 + 1024·10) · 2 + 2·1024·1024/8 =
+//!   1,888,256` bytes.
+
+use crate::nn::{NetworkConfig, Precision};
+
+/// Byte-level breakdown of a network's off-chip memory footprint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MemoryModel {
+    /// Per-layer weight bytes.
+    pub per_layer: Vec<usize>,
+    /// bf16 weight bytes total.
+    pub bf16_bytes: usize,
+    /// Binary weight bytes total.
+    pub binary_bytes: usize,
+}
+
+impl MemoryModel {
+    /// Compute the footprint of a network configuration.
+    pub fn of(config: &NetworkConfig) -> Self {
+        let mut per_layer = Vec::with_capacity(config.num_layers());
+        let mut bf16_bytes = 0;
+        let mut binary_bytes = 0;
+        for (w, p) in config.sizes.windows(2).zip(config.precisions.iter()) {
+            let (k, n) = (w[0], w[1]);
+            let bytes = match p {
+                Precision::Bf16 => k * n * 2,
+                // Each neuron's k weight bits padded to whole bytes.
+                Precision::Binary => n * k.div_ceil(8),
+            };
+            per_layer.push(bytes);
+            match p {
+                Precision::Bf16 => bf16_bytes += bytes,
+                Precision::Binary => binary_bytes += bytes,
+            }
+        }
+        Self {
+            per_layer,
+            bf16_bytes,
+            binary_bytes,
+        }
+    }
+
+    /// Total off-chip bytes (the Table II row).
+    pub fn total_bytes(&self) -> usize {
+        self.bf16_bytes + self.binary_bytes
+    }
+
+    /// Activation working-set bytes at a given batch (not part of the
+    /// paper's Table II, but reported by the ablation benches).
+    pub fn activation_bytes(config: &NetworkConfig, batch: usize) -> usize {
+        config.sizes.iter().map(|&s| s * batch * 2).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::NetworkConfig;
+
+    #[test]
+    fn table2_memory_row_exact() {
+        assert_eq!(
+            MemoryModel::of(&NetworkConfig::beanna_fp()).total_bytes(),
+            5_820_416
+        );
+        assert_eq!(
+            MemoryModel::of(&NetworkConfig::beanna_hybrid()).total_bytes(),
+            1_888_256
+        );
+    }
+
+    #[test]
+    fn paper_ratio_is_3x() {
+        let fp = MemoryModel::of(&NetworkConfig::beanna_fp()).total_bytes() as f64;
+        let hy = MemoryModel::of(&NetworkConfig::beanna_hybrid()).total_bytes() as f64;
+        let ratio = fp / hy;
+        // §IV: "3x less off-chip memory".
+        assert!((3.0..3.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn breakdown_sums() {
+        let m = MemoryModel::of(&NetworkConfig::beanna_hybrid());
+        assert_eq!(m.per_layer.iter().sum::<usize>(), m.total_bytes());
+        assert_eq!(m.binary_bytes, 2 * 1024 * 1024 / 8);
+        assert_eq!(m.bf16_bytes, (784 * 1024 + 1024 * 10) * 2);
+    }
+
+    #[test]
+    fn odd_widths_round_to_bytes() {
+        let cfg = NetworkConfig {
+            sizes: vec![9, 3],
+            precisions: vec![crate::nn::Precision::Binary],
+        };
+        // 9 bits → 2 bytes per neuron row, 3 neurons.
+        assert_eq!(MemoryModel::of(&cfg).total_bytes(), 6);
+    }
+
+    #[test]
+    fn activation_working_set() {
+        let cfg = NetworkConfig::beanna_fp();
+        assert_eq!(MemoryModel::activation_bytes(&cfg, 1), 1024 * 2);
+        assert_eq!(MemoryModel::activation_bytes(&cfg, 256), 1024 * 256 * 2);
+    }
+}

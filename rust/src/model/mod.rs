@@ -1,0 +1,23 @@
+//! Analytic FPGA models: the Table II / Table III side of the evaluation.
+//!
+//! The paper reports Vivado synthesis/implementation results on a Zynq
+//! UltraScale+ ZCU106; we have no FPGA toolchain, so per DESIGN.md §5
+//! these are **calibrated analytic models**:
+//!
+//! * [`resources`] — LUT/FF/BRAM/DSP estimates built from per-module
+//!   cost terms (PE datapaths, DMA engines, control, BRAM interfaces),
+//!   with coefficients derived from the paper's own Table II deltas.
+//! * [`power`] — a Vivado-XPE-style model: constant static power plus
+//!   dynamic terms scaled by the activity counters the simulator
+//!   produces.
+//! * [`memory`] — exact off-chip memory footprints (these reproduce
+//!   Table II's byte counts exactly — they are analytic in the paper
+//!   too).
+
+pub mod memory;
+pub mod power;
+pub mod resources;
+
+pub use memory::MemoryModel;
+pub use power::{PowerModel, PowerReport};
+pub use resources::{ResourceModel, ResourceReport};

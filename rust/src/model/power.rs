@@ -1,0 +1,198 @@
+//! Power model — Table III ("Power Consumption, batch 256").
+//!
+//! The paper used the Vivado Power Estimator (XPE) post-implementation
+//! with random input data — i.e. a largely **vectorless, design-static**
+//! estimate: the dynamic power is set by what hardware is present and
+//! clocking, not by fine-grained data activity. That is why Table III
+//! shows nearly identical dynamic power for both designs (1.535 W vs
+//! 1.550 W) with BEANNA's +0.015 W coming from the extra binary hardware.
+//!
+//! We reproduce that methodology as [`PowerModel::vectorless`]: per-module
+//! dynamic terms calibrated so the fp-only design sums to 1.535 W and the
+//! binary add-on contributes +0.015 W. Static power is the ZCU106 device
+//! constant 0.600 W.
+//!
+//! As an extension (used by the ablation bench, clearly labelled — not a
+//! Table III claim), [`PowerModel::activity_scaled`] modulates the
+//! datapath terms by the simulator's measured utilization.
+
+use super::resources::ResourceModel;
+use crate::sim::RunReport;
+
+/// Calibrated per-module dynamic power terms (watts), 100 MHz, ZCU106.
+const P_STATIC: f64 = 0.600;
+const P_CLOCK_TREE: f64 = 0.3024;
+const P_PE_BF16_EACH: f64 = 0.0036; // 256 PEs → 0.9216 W
+const P_PE_BINARY_EACH: f64 = 58.59e-6; // 256 PEs → 0.0150 W
+const P_BRAM_EACH: f64 = 0.002; // 71.5 BRAM36 → 0.1430 W
+const P_DMA_AXI: f64 = 0.1200;
+const P_EPILOGUE: f64 = 0.0480;
+
+/// Power model for one design point.
+#[derive(Debug, Clone, Copy)]
+pub struct PowerModel {
+    /// Design being modelled.
+    pub design: ResourceModel,
+}
+
+/// A power estimate, split per Table III's rows.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PowerReport {
+    /// Device static power (W).
+    pub static_w: f64,
+    /// Dynamic power (W).
+    pub dynamic_w: f64,
+}
+
+impl PowerReport {
+    /// Total power (W) — Table III row 1.
+    pub fn total_w(&self) -> f64 {
+        self.static_w + self.dynamic_w
+    }
+
+    /// Energy per inference (J) at `inferences_per_sec` — Table III row 4.
+    pub fn energy_per_inference_j(&self, inferences_per_sec: f64) -> f64 {
+        assert!(inferences_per_sec > 0.0);
+        self.total_w() / inferences_per_sec
+    }
+}
+
+impl PowerModel {
+    /// Model for the fp-only baseline.
+    pub fn floating_point_only() -> Self {
+        Self {
+            design: ResourceModel::floating_point_only(),
+        }
+    }
+
+    /// Model for BEANNA.
+    pub fn beanna() -> Self {
+        Self {
+            design: ResourceModel::beanna(),
+        }
+    }
+
+    /// Number of PEs in the design.
+    fn pes(&self) -> f64 {
+        (self.design.dim * self.design.dim) as f64
+    }
+
+    /// XPE-style vectorless estimate (the paper's Table III methodology).
+    pub fn vectorless(&self) -> PowerReport {
+        let bram36 = self.design.report().bram36();
+        let mut dynamic = P_CLOCK_TREE
+            + self.pes() * P_PE_BF16_EACH
+            + bram36 * P_BRAM_EACH
+            + P_DMA_AXI
+            + P_EPILOGUE;
+        if self.design.has_binary {
+            dynamic += self.pes() * P_PE_BINARY_EACH;
+        }
+        PowerReport {
+            static_w: P_STATIC,
+            dynamic_w: dynamic,
+        }
+    }
+
+    /// Activity-scaled extension: the datapath terms (PE array, BRAM,
+    /// DMA) scale with measured utilization from a simulator run; clock
+    /// tree and control remain design-static. Labelled an extension in
+    /// EXPERIMENTS.md — Table III itself uses [`Self::vectorless`].
+    pub fn activity_scaled(&self, run: &RunReport) -> PowerReport {
+        let pe_cycles = run.total_cycles as f64 * self.pes();
+        let util_bf16 = run.activity.bf16_macs as f64 / pe_cycles;
+        let util_bin = run.activity.binary_macs as f64 / pe_cycles;
+        // Idle units still see clock toggle: floor at 30% of full-rate
+        // dynamic power (typical clock-gated datapath residual).
+        let idle_floor = 0.3;
+        let eff = |util: f64| idle_floor + (1.0 - idle_floor) * util.min(1.0);
+        let bram36 = self.design.report().bram36();
+        // BRAM/DMA activity relative to a fully-streaming design.
+        let stream_util = (run.activity.offchip_bytes as f64
+            / (run.total_cycles as f64 * 8.0))
+            .min(1.0);
+        let mut dynamic = P_CLOCK_TREE
+            + self.pes() * P_PE_BF16_EACH * eff(util_bf16)
+            + bram36 * P_BRAM_EACH * eff(stream_util)
+            + P_DMA_AXI * eff(stream_util)
+            + P_EPILOGUE;
+        if self.design.has_binary {
+            dynamic += self.pes() * P_PE_BINARY_EACH * eff(util_bin);
+        }
+        PowerReport {
+            static_w: P_STATIC,
+            dynamic_w: dynamic,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_fp_calibration() {
+        let p = PowerModel::floating_point_only().vectorless();
+        assert!((p.static_w - 0.600).abs() < 1e-12);
+        assert!(
+            (p.dynamic_w - 1.535).abs() < 5e-4,
+            "dynamic {} != 1.535",
+            p.dynamic_w
+        );
+        assert!((p.total_w() - 2.135).abs() < 5e-4);
+    }
+
+    #[test]
+    fn table3_beanna_calibration() {
+        let p = PowerModel::beanna().vectorless();
+        assert!(
+            (p.dynamic_w - 1.550).abs() < 5e-4,
+            "dynamic {} != 1.550",
+            p.dynamic_w
+        );
+        assert!((p.total_w() - 2.150).abs() < 5e-4);
+    }
+
+    #[test]
+    fn table3_energy_rows_with_paper_throughputs() {
+        // With the paper's own throughputs the model reproduces the
+        // energy rows exactly (they are power/throughput identities).
+        let fp = PowerModel::floating_point_only()
+            .vectorless()
+            .energy_per_inference_j(6928.08);
+        let be = PowerModel::beanna()
+            .vectorless()
+            .energy_per_inference_j(20337.60);
+        assert!((fp * 1e3 - 0.3082).abs() < 5e-4, "fp {} mJ", fp * 1e3);
+        assert!((be * 1e3 - 0.1057).abs() < 5e-4, "beanna {} mJ", be * 1e3);
+    }
+
+    #[test]
+    fn energy_ratio_about_3x() {
+        let fp = PowerModel::floating_point_only()
+            .vectorless()
+            .energy_per_inference_j(6928.08);
+        let be = PowerModel::beanna()
+            .vectorless()
+            .energy_per_inference_j(20337.60);
+        let ratio = fp / be;
+        assert!((2.7..3.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn activity_scaled_below_vectorless_for_idle_runs() {
+        use crate::bf16::Matrix;
+        use crate::nn::{Network, NetworkConfig};
+        use crate::sim::{Accelerator, AcceleratorConfig};
+        // A batch-1 run has low PE utilization → activity-scaled power
+        // must be below the vectorless ceiling.
+        let net = Network::random(&NetworkConfig::beanna_hybrid(), 1);
+        let mut accel = Accelerator::new(AcceleratorConfig::default());
+        let run = accel.run_network(&net, &Matrix::zeros(1, 784), 1).unwrap();
+        let model = PowerModel::beanna();
+        let scaled = model.activity_scaled(&run);
+        let ceiling = model.vectorless();
+        assert!(scaled.dynamic_w < ceiling.dynamic_w);
+        assert!(scaled.dynamic_w > 0.3 * ceiling.dynamic_w);
+    }
+}

@@ -1,0 +1,238 @@
+//! FPGA resource model — the LUT/FF/BRAM/DSP rows of Table II.
+//!
+//! Structure: per-module cost terms whose coefficients are **calibrated
+//! against the paper's own Table II** (two implemented design points:
+//! "Floating Point Only" and BEANNA on a ZCU106 at 100 MHz). The model
+//! then *extrapolates* structurally for the ablation benches (array-size
+//! sweeps): PE-array terms scale with `dim²`, buffer terms with the
+//! array width.
+//!
+//! Calibration identities (checked by tests):
+//!
+//! * `DSP = dim²` — one DSP48 per PE's bfloat16 multiplier (Table II:
+//!   256 for both designs; the binary unit uses no DSPs).
+//! * `LUT_fp = base(25,838) + dim²·250 = 89,838`.
+//! * `LUT_beanna = LUT_fp + dim²·48 + 171 = 102,297` — the paper's
+//!   "very small increase in LUT usage" for the 16-lane XNOR +
+//!   popcount-add + result mux per PE.
+//! * `FF ≈ base(9,252) + dim²·64 = 25,636`. The paper reports 25,615
+//!   (21 fewer, −0.08%) for BEANNA — place-and-route noise, which an
+//!   analytic model deliberately does not chase; we report the model
+//!   value for both designs and surface the paper numbers alongside.
+//! * `BRAM36 = 71.5` for both designs: activations 32 + weights 24 +
+//!   psum accumulators 8 + DMA/control FIFOs 7.5.
+
+/// Inputs to the resource model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceModel {
+    /// Systolic array dimension.
+    pub dim: usize,
+    /// Whether the binary datapath (BEANNA) is present.
+    pub has_binary: bool,
+}
+
+/// One module's contribution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceTerm {
+    /// Module name.
+    pub module: &'static str,
+    /// LUT count.
+    pub luts: u64,
+    /// Flip-flop count.
+    pub ffs: u64,
+    /// BRAM36 equivalents (halves allowed: RAMB18 = 0.5).
+    pub bram36: f64,
+    /// DSP slices.
+    pub dsps: u64,
+}
+
+/// Full resource report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceReport {
+    /// Per-module breakdown.
+    pub terms: Vec<ResourceTerm>,
+}
+
+// Calibrated coefficients (see module docs).
+const LUT_BASE_CONTROL: u64 = 5_838; // control FSM + AXI-Lite regs
+const LUT_BASE_DMA: u64 = 9_000; // 3 DMA engines + AXI interconnect
+const LUT_BASE_EPILOGUE: u64 = 7_000; // 16-lane activation/norm units
+const LUT_BASE_GLUE: u64 = 4_000; // BRAM interfaces, muxing
+const LUT_PER_PE_BF16: u64 = 250; // bf16 multiply-add glue around DSP
+const LUT_PER_PE_BINARY: u64 = 48; // 16-lane XNOR + popcount-add
+const LUT_BINARY_MUX: u64 = 171; // mode mux / tie-off logic
+const FF_BASE: u64 = 9_252;
+const FF_PER_PE: u64 = 64; // act/psum/weight pipeline registers
+
+impl ResourceModel {
+    /// The paper's "Floating Point Only" baseline accelerator.
+    pub fn floating_point_only() -> Self {
+        Self {
+            dim: crate::ARRAY_DIM,
+            has_binary: false,
+        }
+    }
+
+    /// The BEANNA design.
+    pub fn beanna() -> Self {
+        Self {
+            dim: crate::ARRAY_DIM,
+            has_binary: true,
+        }
+    }
+
+    /// Evaluate the model.
+    pub fn report(&self) -> ResourceReport {
+        let pes = (self.dim * self.dim) as u64;
+        let scale = self.dim as f64 / crate::ARRAY_DIM as f64;
+        let mut terms = vec![
+            ResourceTerm {
+                module: "control + AXI-Lite",
+                luts: LUT_BASE_CONTROL,
+                ffs: FF_BASE / 3,
+                bram36: 1.5,
+                dsps: 0,
+            },
+            ResourceTerm {
+                module: "DMA engines (0,1,2)",
+                luts: LUT_BASE_DMA,
+                ffs: FF_BASE / 3,
+                bram36: 6.0, // FIFOs
+                dsps: 0,
+            },
+            ResourceTerm {
+                module: "activation/norm units",
+                luts: (LUT_BASE_EPILOGUE as f64 * scale) as u64,
+                ffs: FF_BASE / 3,
+                bram36: 0.0,
+                dsps: 0,
+            },
+            ResourceTerm {
+                module: "BRAM interfaces",
+                luts: (LUT_BASE_GLUE as f64 * scale) as u64,
+                ffs: 0,
+                bram36: 0.0,
+                dsps: 0,
+            },
+            ResourceTerm {
+                module: "activations BRAM",
+                luts: 0,
+                ffs: 0,
+                bram36: 32.0 * scale,
+                dsps: 0,
+            },
+            ResourceTerm {
+                module: "weights BRAM",
+                luts: 0,
+                ffs: 0,
+                bram36: 24.0 * scale * scale,
+                dsps: 0,
+            },
+            ResourceTerm {
+                module: "psum accumulators",
+                luts: 0,
+                ffs: 0,
+                bram36: 8.0 * scale,
+                dsps: 0,
+            },
+            ResourceTerm {
+                module: "PE array (bf16 datapath)",
+                luts: pes * LUT_PER_PE_BF16,
+                ffs: pes * FF_PER_PE,
+                bram36: 0.0,
+                dsps: pes,
+            },
+        ];
+        if self.has_binary {
+            terms.push(ResourceTerm {
+                module: "PE array (binary datapath)",
+                luts: pes * LUT_PER_PE_BINARY + LUT_BINARY_MUX,
+                ffs: 0,
+                bram36: 0.0,
+                dsps: 0,
+            });
+        }
+        ResourceReport { terms }
+    }
+}
+
+impl ResourceReport {
+    /// Total LUTs.
+    pub fn luts(&self) -> u64 {
+        self.terms.iter().map(|t| t.luts).sum()
+    }
+
+    /// Total flip-flops.
+    pub fn ffs(&self) -> u64 {
+        self.terms.iter().map(|t| t.ffs).sum()
+    }
+
+    /// Total BRAM36 equivalents.
+    pub fn bram36(&self) -> f64 {
+        self.terms.iter().map(|t| t.bram36).sum()
+    }
+
+    /// Total DSP slices.
+    pub fn dsps(&self) -> u64 {
+        self.terms.iter().map(|t| t.dsps).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_fp_only_calibration() {
+        let r = ResourceModel::floating_point_only().report();
+        assert_eq!(r.luts(), 89_838);
+        assert_eq!(r.ffs(), 25_636);
+        assert_eq!(r.dsps(), 256);
+        assert!((r.bram36() - 71.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table2_beanna_calibration() {
+        let r = ResourceModel::beanna().report();
+        assert_eq!(r.luts(), 102_297);
+        assert_eq!(r.dsps(), 256);
+        assert!((r.bram36() - 71.5).abs() < 1e-9);
+        // FF model value (paper's 25,615 differs by P&R noise −0.08%).
+        assert_eq!(r.ffs(), 25_636);
+    }
+
+    #[test]
+    fn binary_addon_is_small() {
+        // §IV: "only a very small increase in LUT usage".
+        let fp = ResourceModel::floating_point_only().report().luts();
+        let be = ResourceModel::beanna().report().luts();
+        let increase = (be - fp) as f64 / fp as f64;
+        assert!(increase < 0.15, "binary addon {increase:.2}% too large");
+        assert!(increase > 0.10);
+    }
+
+    #[test]
+    fn ablation_scaling_monotone() {
+        let small = ResourceModel {
+            dim: 8,
+            has_binary: true,
+        }
+        .report();
+        let big = ResourceModel {
+            dim: 32,
+            has_binary: true,
+        }
+        .report();
+        assert!(small.luts() < big.luts());
+        assert!(small.dsps() < big.dsps());
+        assert_eq!(big.dsps(), 1024);
+        assert!(small.bram36() < big.bram36());
+    }
+
+    #[test]
+    fn breakdown_is_complete() {
+        let r = ResourceModel::beanna().report();
+        assert_eq!(r.terms.len(), 9);
+        assert!(r.terms.iter().any(|t| t.module.contains("binary")));
+    }
+}

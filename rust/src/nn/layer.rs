@@ -1,0 +1,306 @@
+//! Dense layer with bfloat16 or binary datapath, batch-norm epilogue.
+
+use anyhow::{ensure, Result};
+
+use super::hardtanh;
+use crate::bf16::{BF16, Matrix};
+use crate::binary::BitMatrix;
+
+/// Datapath precision of a layer — the systolic array mode (§III-C) used
+/// to execute it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// bfloat16 weights and activations ("high precision mode").
+    Bf16,
+    /// ±1 weights and activations, XNOR-popcount datapath ("binary mode").
+    Binary,
+}
+
+impl Precision {
+    /// Weight storage bits per element (Table II memory model).
+    pub fn weight_bits(self) -> usize {
+        match self {
+            Precision::Bf16 => 16,
+            Precision::Binary => 1,
+        }
+    }
+
+    /// Short tag for reports.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Precision::Bf16 => "bf16",
+            Precision::Binary => "bin",
+        }
+    }
+}
+
+/// Inference-time batch normalization, folded to per-feature
+/// `scale·x + shift` (γ/√(σ²+ε) and β − γμ/√(σ²+ε) are folded offline by
+/// the exporter).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BatchNorm {
+    /// Per-feature multiplier.
+    pub scale: Vec<f32>,
+    /// Per-feature offset.
+    pub shift: Vec<f32>,
+}
+
+impl BatchNorm {
+    /// Identity normalization over `n` features.
+    pub fn identity(n: usize) -> Self {
+        Self {
+            scale: vec![1.0; n],
+            shift: vec![0.0; n],
+        }
+    }
+
+    /// Fold training-form parameters (γ, β, μ, σ²) into scale/shift.
+    pub fn fold(gamma: &[f32], beta: &[f32], mean: &[f32], var: &[f32], eps: f32) -> Self {
+        let scale: Vec<f32> = gamma
+            .iter()
+            .zip(var.iter())
+            .map(|(&g, &v)| g / (v + eps).sqrt())
+            .collect();
+        let shift: Vec<f32> = beta
+            .iter()
+            .zip(mean.iter().zip(scale.iter()))
+            .map(|(&b, (&m, &s))| b - m * s)
+            .collect();
+        Self { scale, shift }
+    }
+}
+
+/// One fully-connected layer.
+///
+/// Weights are stored **out_features × in_features** (each row is one
+/// output neuron's weights) — the layout DMA controller 1 streams into
+/// the array. Binary layers additionally hold the packed form.
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    /// Float weights, `out × in`. For binary layers these are the ±1
+    /// expansion of `bits` (kept for the float reference path).
+    pub weights: Matrix,
+    /// Packed sign bits for binary layers.
+    pub bits: Option<BitMatrix>,
+    /// Datapath mode.
+    pub precision: Precision,
+    /// Folded batch-norm; `None` on the final (logit) layer.
+    pub bn: Option<BatchNorm>,
+    /// Apply hardtanh after BN (true for hidden layers).
+    pub activation: bool,
+}
+
+impl DenseLayer {
+    /// Input feature count.
+    pub fn in_features(&self) -> usize {
+        self.weights.cols
+    }
+
+    /// Output feature count.
+    pub fn out_features(&self) -> usize {
+        self.weights.rows
+    }
+
+    /// Construct a bf16 layer. Weights are quantize-dequantized to bf16
+    /// resolution immediately (they live in BRAM as bf16).
+    pub fn bf16(mut weights: Matrix, bn: Option<BatchNorm>, activation: bool) -> Self {
+        weights.map_inplace(|w| BF16::from_f32(w).to_f32());
+        Self {
+            weights,
+            bits: None,
+            precision: Precision::Bf16,
+            bn,
+            activation,
+        }
+    }
+
+    /// Construct a binary layer from float weights (binarized by sign).
+    pub fn binary(weights: &Matrix, bn: Option<BatchNorm>, activation: bool) -> Self {
+        let bits = BitMatrix::from_matrix(weights);
+        Self {
+            weights: bits.to_matrix(),
+            bits: Some(bits),
+            precision: Precision::Binary,
+            bn,
+            activation,
+        }
+    }
+
+    /// The elementwise epilogue applied by the activation/normalization
+    /// units (§III-D step 9): BN affine, optional hardtanh, round to bf16
+    /// (activations BRAM stores bf16).
+    #[inline]
+    pub fn epilogue(&self, feature: usize, psum: f32) -> f32 {
+        let mut y = psum;
+        if let Some(bn) = &self.bn {
+            y = bn.scale[feature] * y + bn.shift[feature];
+        }
+        if self.activation {
+            y = hardtanh(y);
+        }
+        BF16::from_f32(y).to_f32()
+    }
+
+    /// Reference forward pass: `x (B×in)` → `B×out`, in the exact PE
+    /// datapath numerics (bf16 MACs with f32 accumulation, or
+    /// XNOR-popcount counts), then the epilogue.
+    pub fn forward(&self, x: &Matrix) -> Result<Matrix> {
+        ensure!(
+            x.cols == self.in_features(),
+            "layer expects {} features, got {}",
+            self.in_features(),
+            x.cols
+        );
+        let mut pre = match self.precision {
+            Precision::Bf16 => {
+                // x · Wᵀ in the hardware's bf16 numerics: k-blocked
+                // accumulation matching the 16-wide systolic columns
+                // (bit-exact with the simulator). Weights are already in
+                // the N×K hardware layout, so the row-contiguous kernel
+                // applies directly (EXPERIMENTS.md §Perf).
+                x.matmul_bf16_blocked_t(&self.weights, crate::ARRAY_DIM)?
+            }
+            Precision::Binary => {
+                // Binarize incoming activations, XNOR-popcount against
+                // packed weights (already N×K layout for matmul_t).
+                let xb = BitMatrix::from_matrix(x);
+                xb.matmul_t(self.bits.as_ref().expect("binary layer has bits"))?
+            }
+        };
+        for r in 0..pre.rows {
+            for c in 0..pre.cols {
+                let v = self.epilogue(c, pre.get(r, c));
+                pre.set(r, c, v);
+            }
+        }
+        Ok(pre)
+    }
+
+    /// Weight storage bytes (Table II model): bf16 = 2 B/weight, binary =
+    /// 1 bit/weight.
+    pub fn weight_bytes(&self) -> usize {
+        match self.precision {
+            Precision::Bf16 => self.weights.rows * self.weights.cols * 2,
+            Precision::Binary => (self.weights.rows * self.weights.cols).div_ceil(8),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn bn_fold_matches_definition() {
+        let bn = BatchNorm::fold(&[2.0], &[1.0], &[3.0], &[4.0], 0.0);
+        // scale = 2/2 = 1, shift = 1 - 3*1 = -2
+        assert_eq!(bn.scale, vec![1.0]);
+        assert_eq!(bn.shift, vec![-2.0]);
+    }
+
+    #[test]
+    fn bf16_layer_forward_known() {
+        // 2 inputs, 2 outputs, identity bn, no activation.
+        let w = Matrix::from_vec(2, 2, vec![1.0, 2.0, -1.0, 0.5]).unwrap();
+        let layer = DenseLayer::bf16(w, None, false);
+        let x = Matrix::from_vec(1, 2, vec![2.0, 4.0]).unwrap();
+        let y = layer.forward(&x).unwrap();
+        // y0 = 2*1+4*2 = 10; y1 = -2+2 = 0
+        assert_eq!(y.data, vec![10.0, 0.0]);
+    }
+
+    #[test]
+    fn binary_layer_forward_counts() {
+        // weights row0 = [+1,+1,+1,+1] row1 = [-1,-1,-1,-1]
+        let w = Matrix::from_vec(2, 4, vec![1.0, 1.0, 1.0, 1.0, -1.0, -1.0, -1.0, -1.0])
+            .unwrap();
+        let layer = DenseLayer::binary(&w, None, false);
+        let x = Matrix::from_vec(1, 4, vec![0.5, -0.5, 0.7, 0.9]).unwrap(); // signs + - + +
+        let y = layer.forward(&x).unwrap();
+        // row0: +1-1+1+1 = 2 ; row1: -2
+        assert_eq!(y.data, vec![2.0, -2.0]);
+    }
+
+    #[test]
+    fn epilogue_order_bn_then_hardtanh() {
+        let w = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
+        let bn = BatchNorm {
+            scale: vec![0.5],
+            shift: vec![0.25],
+        };
+        let layer = DenseLayer::bf16(w, Some(bn), true);
+        // psum = 3 → bn: 1.75 → hardtanh: 1.0
+        let y = layer
+            .forward(&Matrix::from_vec(1, 1, vec![3.0]).unwrap())
+            .unwrap();
+        assert_eq!(y.data, vec![1.0]);
+        // psum = 1 → bn: 0.75 → hardtanh: 0.75
+        let y = layer
+            .forward(&Matrix::from_vec(1, 1, vec![1.0]).unwrap())
+            .unwrap();
+        assert_eq!(y.data, vec![0.75]);
+    }
+
+    #[test]
+    fn shape_mismatch_errors() {
+        let layer = DenseLayer::bf16(Matrix::zeros(3, 4), None, false);
+        assert!(layer.forward(&Matrix::zeros(1, 5)).is_err());
+        assert_eq!(layer.in_features(), 4);
+        assert_eq!(layer.out_features(), 3);
+    }
+
+    #[test]
+    fn weight_bytes_model() {
+        let bf = DenseLayer::bf16(Matrix::zeros(1024, 784), None, true);
+        assert_eq!(bf.weight_bytes(), 1024 * 784 * 2);
+        let bin = DenseLayer::binary(&Matrix::zeros(1024, 1024), None, true);
+        assert_eq!(bin.weight_bytes(), 1024 * 1024 / 8);
+    }
+
+    #[test]
+    fn prop_binary_layer_ignores_magnitude() {
+        // Binary layers must depend only on input signs.
+        check("binary layer sign-invariance", 50, |g: &mut Gen| {
+            let k = g.usize_in(1..64);
+            let w = Matrix::from_vec(4, k, g.signs(4 * k)).unwrap();
+            let layer = DenseLayer::binary(&w, None, false);
+            let signs: Vec<f32> = g.signs(k);
+            let scaled: Vec<f32> = signs
+                .iter()
+                .map(|&s| s * g.f32_in(0.001, 100.0))
+                .collect();
+            let y1 = layer
+                .forward(&Matrix::from_vec(1, k, signs).unwrap())
+                .unwrap();
+            let y2 = layer
+                .forward(&Matrix::from_vec(1, k, scaled).unwrap())
+                .unwrap();
+            if y1.max_abs_diff(&y2) == 0.0 {
+                Ok(())
+            } else {
+                Err("magnitude leaked into binary layer".into())
+            }
+        });
+    }
+
+    #[test]
+    fn prop_epilogue_output_in_hardtanh_range() {
+        check("activated epilogue bounded", 100, |g: &mut Gen| {
+            let layer = DenseLayer::bf16(
+                Matrix::zeros(1, 1),
+                Some(BatchNorm {
+                    scale: vec![g.f32_in(-3.0, 3.0)],
+                    shift: vec![g.f32_in(-3.0, 3.0)],
+                }),
+                true,
+            );
+            let y = layer.epilogue(0, g.f32_in(-1e4, 1e4));
+            if (-1.0..=1.0).contains(&y) {
+                Ok(())
+            } else {
+                Err(format!("epilogue escaped range: {y}"))
+            }
+        });
+    }
+}

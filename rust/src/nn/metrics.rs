@@ -1,0 +1,114 @@
+//! Classification metrics used by the Table I / Fig. 2 evaluations.
+
+use crate::bf16::Matrix;
+
+/// Index of the maximum element (first on ties).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > best_v {
+            best_v = x;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Fraction of rows whose argmax matches the label.
+pub fn accuracy(logits: &Matrix, labels: &[usize]) -> f64 {
+    assert_eq!(logits.rows, labels.len());
+    if labels.is_empty() {
+        return 0.0;
+    }
+    let correct = labels
+        .iter()
+        .enumerate()
+        .filter(|(r, &y)| argmax(logits.row(*r)) == y)
+        .count();
+    correct as f64 / labels.len() as f64
+}
+
+/// `classes × classes` confusion matrix; `[true][predicted]` counts.
+pub fn confusion_matrix(logits: &Matrix, labels: &[usize], classes: usize) -> Vec<Vec<u32>> {
+    assert_eq!(logits.rows, labels.len());
+    let mut m = vec![vec![0u32; classes]; classes];
+    for (r, &y) in labels.iter().enumerate() {
+        let p = argmax(logits.row(r));
+        if y < classes && p < classes {
+            m[y][p] += 1;
+        }
+    }
+    m
+}
+
+/// Mean cross-entropy of softmax(logits) against integer labels
+/// (numerically stabilized). Used by the training-curve comparisons.
+pub fn cross_entropy(logits: &Matrix, labels: &[usize]) -> f64 {
+    assert_eq!(logits.rows, labels.len());
+    let mut total = 0.0f64;
+    for (r, &y) in labels.iter().enumerate() {
+        let row = logits.row(r);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let log_sum: f64 = row
+            .iter()
+            .map(|&x| ((x - m) as f64).exp())
+            .sum::<f64>()
+            .ln();
+        total += log_sum - (row[y] - m) as f64;
+    }
+    total / labels.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits(rows: &[&[f32]]) -> Matrix {
+        let cols = rows[0].len();
+        Matrix::from_vec(
+            rows.len(),
+            cols,
+            rows.iter().flat_map(|r| r.iter().copied()).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn argmax_basic_and_ties() {
+        assert_eq!(argmax(&[1.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0, 1.0]), 0); // first wins ties
+        assert_eq!(argmax(&[-3.0, -1.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn accuracy_counts() {
+        let l = logits(&[&[1.0, 0.0], &[0.0, 1.0], &[1.0, 0.0]]);
+        assert!((accuracy(&l, &[0, 1, 1]) - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(accuracy(&l, &[0, 1, 0]), 1.0);
+    }
+
+    #[test]
+    fn confusion_diagonal_when_perfect() {
+        let l = logits(&[&[9.0, 0.0, 0.0], &[0.0, 9.0, 0.0], &[0.0, 0.0, 9.0]]);
+        let cm = confusion_matrix(&l, &[0, 1, 2], 3);
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(cm[i][j], u32::from(i == j));
+            }
+        }
+    }
+
+    #[test]
+    fn cross_entropy_uniform_is_log_n() {
+        let l = logits(&[&[0.0, 0.0, 0.0, 0.0]]);
+        assert!((cross_entropy(&l, &[2]) - (4.0f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_entropy_confident_correct_near_zero() {
+        let l = logits(&[&[100.0, 0.0]]);
+        assert!(cross_entropy(&l, &[0]) < 1e-6);
+        assert!(cross_entropy(&l, &[1]) > 50.0);
+    }
+}

@@ -1,0 +1,52 @@
+//! Network definition and golden functional model.
+//!
+//! Implements the paper's workload (§III-A): a fully-connected
+//! 784-1024-1024-1024-10 network, in two variants:
+//!
+//! * **fp** — every layer in bfloat16 ("Floating Point Only" baseline).
+//! * **hybrid** — bfloat16 outer layers, binary (±1 weights *and*
+//!   activations) hidden-to-hidden layers — the BEANNA configuration.
+//!
+//! ### Layer epilogue ordering
+//!
+//! The paper's text says "a hardtanh activation function was applied,
+//! followed by a batch normalization layer", but with binary layers whose
+//! pre-activations are integer counts in `[-K, K]`, hardtanh-before-BN
+//! saturates every unit and the network cannot train. The BinaryNet paper
+//! the authors cite (Courbariaux & Bengio 2016, their ref. [9]) uses
+//! matmul → batch-norm → hardtanh/binarize, which is what their PyTorch
+//! implementation must do to reach 97.96%; we implement that ordering and
+//! record the deviation in DESIGN.md §5.
+//!
+//! At inference, batch-norm folds to a per-feature affine `scale·x +
+//! shift`; the layer epilogue is `bf16(hardtanh(scale·psum + shift))`,
+//! applied by the hardware's "activation and normalization units"
+//! (§III-D step 9). The final layer emits raw bf16 logits.
+
+pub mod layer;
+pub mod metrics;
+pub mod network;
+
+pub use layer::{BatchNorm, DenseLayer, Precision};
+pub use metrics::{accuracy, argmax, confusion_matrix, cross_entropy};
+pub use network::{Network, NetworkConfig};
+
+/// hardtanh (eq. 3): clamp to [-1, 1].
+#[inline]
+pub fn hardtanh(x: f32) -> f32 {
+    x.clamp(-1.0, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hardtanh_eq3() {
+        assert_eq!(hardtanh(-2.0), -1.0);
+        assert_eq!(hardtanh(-1.0), -1.0);
+        assert_eq!(hardtanh(0.25), 0.25);
+        assert_eq!(hardtanh(1.0), 1.0);
+        assert_eq!(hardtanh(7.0), 1.0);
+    }
+}

@@ -1,0 +1,400 @@
+//! Multi-layer network: configuration, initialization, serialization,
+//! and the end-to-end reference forward pass.
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use super::layer::{BatchNorm, DenseLayer, Precision};
+use crate::bf16::Matrix;
+use crate::io::{Tensor, TensorFile};
+use crate::util::rng::Xoshiro256;
+use crate::PAPER_LAYERS;
+
+/// Declarative network configuration: layer sizes + per-matmul precision.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetworkConfig {
+    /// Neuron counts per stage; `sizes.len() - 1` weight matrices.
+    pub sizes: Vec<usize>,
+    /// Precision of each weight matrix (`sizes.len() - 1` entries).
+    pub precisions: Vec<Precision>,
+}
+
+impl NetworkConfig {
+    /// The paper's hybrid BEANNA network (§III-A): bfloat16 outer layers,
+    /// binary hidden-to-hidden layers.
+    pub fn beanna_hybrid() -> Self {
+        Self {
+            sizes: PAPER_LAYERS.to_vec(),
+            precisions: vec![
+                Precision::Bf16,
+                Precision::Binary,
+                Precision::Binary,
+                Precision::Bf16,
+            ],
+        }
+    }
+
+    /// The paper's "Floating Point Only" baseline: all layers bfloat16.
+    pub fn beanna_fp() -> Self {
+        Self {
+            sizes: PAPER_LAYERS.to_vec(),
+            precisions: vec![Precision::Bf16; 4],
+        }
+    }
+
+    /// Custom topology with uniform precision (used by tests/ablations).
+    pub fn uniform(sizes: &[usize], precision: Precision) -> Self {
+        assert!(sizes.len() >= 2);
+        Self {
+            sizes: sizes.to_vec(),
+            precisions: vec![precision; sizes.len() - 1],
+        }
+    }
+
+    /// Number of weight matrices.
+    pub fn num_layers(&self) -> usize {
+        self.precisions.len()
+    }
+
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.sizes.len() >= 2, "need at least input+output sizes");
+        ensure!(
+            self.precisions.len() == self.sizes.len() - 1,
+            "precisions ({}) must be sizes-1 ({})",
+            self.precisions.len(),
+            self.sizes.len() - 1
+        );
+        ensure!(
+            self.sizes.iter().all(|&s| s > 0),
+            "layer sizes must be positive"
+        );
+        Ok(())
+    }
+
+    /// Total multiply-accumulate operations for one inference.
+    pub fn macs(&self) -> usize {
+        self.sizes.windows(2).map(|w| w[0] * w[1]).sum()
+    }
+
+    /// Weight storage bytes under the Table II model.
+    pub fn weight_bytes(&self) -> usize {
+        self.sizes
+            .windows(2)
+            .zip(self.precisions.iter())
+            .map(|(w, p)| (w[0] * w[1] * p.weight_bits()).div_ceil(8))
+            .sum()
+    }
+
+    /// Variant tag used in artifact names ("hybrid" / "fp" / "custom").
+    pub fn variant_tag(&self) -> &'static str {
+        if *self == Self::beanna_hybrid() {
+            "hybrid"
+        } else if *self == Self::beanna_fp() {
+            "fp"
+        } else {
+            "custom"
+        }
+    }
+}
+
+/// A concrete network: configuration + per-layer weights.
+#[derive(Debug, Clone)]
+pub struct Network {
+    /// Configuration this network was built from.
+    pub config: NetworkConfig,
+    /// Layers in forward order.
+    pub layers: Vec<DenseLayer>,
+}
+
+impl Network {
+    /// Random network (He-style init scaled for hardtanh), identity BN on
+    /// hidden layers. Deterministic from `seed`.
+    pub fn random(config: &NetworkConfig, seed: u64) -> Self {
+        config.validate().expect("invalid config");
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let n = config.num_layers();
+        let mut layers = Vec::with_capacity(n);
+        for i in 0..n {
+            let (fan_in, fan_out) = (config.sizes[i], config.sizes[i + 1]);
+            let std = (2.0 / fan_in as f32).sqrt();
+            let data: Vec<f32> = rng
+                .normal_vec(fan_in * fan_out)
+                .into_iter()
+                .map(|x| x * std)
+                .collect();
+            let w = Matrix::from_vec(fan_out, fan_in, data).unwrap();
+            let last = i == n - 1;
+            let bn = if last {
+                None
+            } else {
+                Some(BatchNorm::identity(fan_out))
+            };
+            let layer = match config.precisions[i] {
+                Precision::Bf16 => DenseLayer::bf16(w, bn, !last),
+                Precision::Binary => DenseLayer::binary(&w, bn, !last),
+            };
+            layers.push(layer);
+        }
+        Self {
+            config: config.clone(),
+            layers,
+        }
+    }
+
+    /// Full forward pass: `x (B×in)` → logits `(B×out)`.
+    pub fn forward(&self, x: &Matrix) -> Result<Matrix> {
+        let mut h = x.clone();
+        for layer in &self.layers {
+            h = layer.forward(&h)?;
+        }
+        Ok(h)
+    }
+
+    /// Predicted class per row.
+    pub fn predict(&self, x: &Matrix) -> Result<Vec<usize>> {
+        let logits = self.forward(x)?;
+        Ok((0..logits.rows)
+            .map(|r| super::metrics::argmax(logits.row(r)))
+            .collect())
+    }
+
+    /// Total weight storage bytes (Table II model).
+    pub fn weight_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weight_bytes()).sum()
+    }
+
+    /// Serialize to a [`TensorFile`] using the exporter's naming scheme:
+    /// `layer{i}/weight` (f32, out×in), `layer{i}/bn_scale`,
+    /// `layer{i}/bn_shift`, plus `meta/precisions` (0 = bf16, 1 = binary)
+    /// and `meta/sizes`.
+    pub fn to_tensor_file(&self) -> TensorFile {
+        let mut tf = TensorFile::new();
+        for (i, layer) in self.layers.iter().enumerate() {
+            tf.insert(
+                &format!("layer{i}/weight"),
+                Tensor::from_f32(
+                    &[layer.weights.rows, layer.weights.cols],
+                    &layer.weights.data,
+                )
+                .unwrap(),
+            );
+            if let Some(bn) = &layer.bn {
+                tf.insert(
+                    &format!("layer{i}/bn_scale"),
+                    Tensor::from_f32(&[bn.scale.len()], &bn.scale).unwrap(),
+                );
+                tf.insert(
+                    &format!("layer{i}/bn_shift"),
+                    Tensor::from_f32(&[bn.shift.len()], &bn.shift).unwrap(),
+                );
+            }
+        }
+        let prec: Vec<f32> = self
+            .config
+            .precisions
+            .iter()
+            .map(|p| match p {
+                Precision::Bf16 => 0.0,
+                Precision::Binary => 1.0,
+            })
+            .collect();
+        tf.insert(
+            "meta/precisions",
+            Tensor::from_f32(&[prec.len()], &prec).unwrap(),
+        );
+        let sizes: Vec<f32> = self.config.sizes.iter().map(|&s| s as f32).collect();
+        tf.insert(
+            "meta/sizes",
+            Tensor::from_f32(&[sizes.len()], &sizes).unwrap(),
+        );
+        tf
+    }
+
+    /// Load from a [`TensorFile`] (inverse of [`Self::to_tensor_file`]).
+    pub fn from_tensor_file(tf: &TensorFile) -> Result<Self> {
+        let sizes: Vec<usize> = tf
+            .get("meta/sizes")?
+            .to_f32_vec()?
+            .into_iter()
+            .map(|x| x as usize)
+            .collect();
+        let precisions: Vec<Precision> = tf
+            .get("meta/precisions")?
+            .to_f32_vec()?
+            .into_iter()
+            .map(|x| {
+                if x == 0.0 {
+                    Precision::Bf16
+                } else {
+                    Precision::Binary
+                }
+            })
+            .collect();
+        let config = NetworkConfig { sizes, precisions };
+        config.validate()?;
+        let n = config.num_layers();
+        let mut layers = Vec::with_capacity(n);
+        for i in 0..n {
+            let w = tf
+                .get(&format!("layer{i}/weight"))?
+                .to_matrix()
+                .with_context(|| format!("layer{i}/weight"))?;
+            ensure!(
+                w.rows == config.sizes[i + 1] && w.cols == config.sizes[i],
+                "layer{i} weight shape {}x{} != config {}x{}",
+                w.rows,
+                w.cols,
+                config.sizes[i + 1],
+                config.sizes[i]
+            );
+            let last = i == n - 1;
+            let bn = match (
+                tf.tensors.get(&format!("layer{i}/bn_scale")),
+                tf.tensors.get(&format!("layer{i}/bn_shift")),
+            ) {
+                (Some(s), Some(b)) => Some(BatchNorm {
+                    scale: s.to_f32_vec()?,
+                    shift: b.to_f32_vec()?,
+                }),
+                _ => None,
+            };
+            if let Some(bn) = &bn {
+                ensure!(
+                    bn.scale.len() == w.rows && bn.shift.len() == w.rows,
+                    "layer{i} bn length mismatch"
+                );
+            }
+            let layer = match config.precisions[i] {
+                Precision::Bf16 => DenseLayer::bf16(w, bn, !last),
+                Precision::Binary => DenseLayer::binary(&w, bn, !last),
+            };
+            layers.push(layer);
+        }
+        Ok(Self { config, layers })
+    }
+
+    /// Load from a `.bwt` file.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_tensor_file(&TensorFile::load(path)?)
+    }
+
+    /// Save to a `.bwt` file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_tensor_file().save(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs() {
+        let hybrid = NetworkConfig::beanna_hybrid();
+        let fp = NetworkConfig::beanna_fp();
+        hybrid.validate().unwrap();
+        fp.validate().unwrap();
+        assert_eq!(hybrid.num_layers(), 4);
+        // Total MACs: 784*1024 + 1024*1024*2 + 1024*10 = 2,910,208.
+        assert_eq!(fp.macs(), 2_910_208);
+        assert_eq!(hybrid.macs(), fp.macs());
+        // Table II memory rows (weights only; see model::memory for the
+        // full off-chip accounting).
+        assert_eq!(fp.weight_bytes(), 5_820_416);
+        assert_eq!(hybrid.weight_bytes(), 1_888_256);
+        assert_eq!(hybrid.variant_tag(), "hybrid");
+        assert_eq!(fp.variant_tag(), "fp");
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(NetworkConfig {
+            sizes: vec![10],
+            precisions: vec![],
+        }
+        .validate()
+        .is_err());
+        assert!(NetworkConfig {
+            sizes: vec![10, 5],
+            precisions: vec![],
+        }
+        .validate()
+        .is_err());
+        assert!(NetworkConfig {
+            sizes: vec![10, 0],
+            precisions: vec![Precision::Bf16],
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn random_network_forward_shapes() {
+        let cfg = NetworkConfig::uniform(&[12, 8, 5], Precision::Bf16);
+        let net = Network::random(&cfg, 1);
+        let x = Matrix::zeros(3, 12);
+        let y = net.forward(&x).unwrap();
+        assert_eq!((y.rows, y.cols), (3, 5));
+        let preds = net.predict(&x).unwrap();
+        assert_eq!(preds.len(), 3);
+        assert!(preds.iter().all(|&p| p < 5));
+    }
+
+    #[test]
+    fn random_is_deterministic() {
+        let cfg = NetworkConfig::beanna_hybrid();
+        let a = Network::random(&cfg, 7);
+        let b = Network::random(&cfg, 7);
+        assert_eq!(a.layers[0].weights, b.layers[0].weights);
+        assert_eq!(a.layers[1].weights, b.layers[1].weights);
+    }
+
+    #[test]
+    fn tensor_file_roundtrip() {
+        let cfg = NetworkConfig {
+            sizes: vec![6, 9, 4],
+            precisions: vec![Precision::Bf16, Precision::Binary],
+        };
+        let net = Network::random(&cfg, 3);
+        let tf = net.to_tensor_file();
+        let back = Network::from_tensor_file(&tf).unwrap();
+        assert_eq!(back.config, cfg);
+        // Forward results must match exactly.
+        let x = Matrix::from_vec(
+            2,
+            6,
+            Xoshiro256::seed_from_u64(11).normal_vec(12),
+        )
+        .unwrap();
+        assert_eq!(
+            net.forward(&x).unwrap(),
+            back.forward(&x).unwrap()
+        );
+    }
+
+    #[test]
+    fn hybrid_binary_layers_are_sign_only() {
+        let net = Network::random(&NetworkConfig::beanna_hybrid(), 5);
+        assert!(net.layers[1].bits.is_some());
+        assert!(net.layers[2].bits.is_some());
+        assert!(net.layers[0].bits.is_none());
+        assert!(net
+            .layers[1]
+            .weights
+            .data
+            .iter()
+            .all(|&w| w == 1.0 || w == -1.0));
+    }
+
+    #[test]
+    fn final_layer_has_no_bn_or_activation() {
+        let net = Network::random(&NetworkConfig::beanna_fp(), 5);
+        let last = net.layers.last().unwrap();
+        assert!(last.bn.is_none());
+        assert!(!last.activation);
+        assert!(net.layers[0].bn.is_some());
+        assert!(net.layers[0].activation);
+    }
+}

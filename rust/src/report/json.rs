@@ -1,0 +1,146 @@
+//! Minimal JSON value + serializer (no serde in the vendored crate set).
+//!
+//! Only what the reports need: objects, arrays, strings, numbers, bools.
+//! Output is deterministic (object keys keep insertion order).
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null`
+    Null,
+    /// Boolean.
+    Bool(bool),
+    /// Any finite number (serialized via shortest-ish f64 formatting).
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<JsonValue>),
+    /// Object with insertion-ordered keys.
+    Obj(Vec<(String, JsonValue)>),
+}
+
+impl JsonValue {
+    /// Build an object from pairs.
+    pub fn obj(pairs: Vec<(&str, JsonValue)>) -> Self {
+        JsonValue::Obj(
+            pairs
+                .into_iter()
+                .map(|(k, v)| (k.to_string(), v))
+                .collect(),
+        )
+    }
+
+    /// Convenience string constructor.
+    pub fn s(v: impl Into<String>) -> Self {
+        JsonValue::Str(v.into())
+    }
+
+    /// Convenience number constructor.
+    pub fn n(v: impl Into<f64>) -> Self {
+        JsonValue::Num(v.into())
+    }
+
+    /// Serialize to a compact JSON string.
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            JsonValue::Null => out.push_str("null"),
+            JsonValue::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            JsonValue::Num(x) => {
+                if !x.is_finite() {
+                    out.push_str("null"); // JSON has no NaN/Inf
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
+                    out.push_str(&format!("{}", *x as i64));
+                } else {
+                    out.push_str(&format!("{x}"));
+                }
+            }
+            JsonValue::Str(s) => {
+                out.push('"');
+                for ch in s.chars() {
+                    match ch {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\r' => out.push_str("\\r"),
+                        '\t' => out.push_str("\\t"),
+                        c if (c as u32) < 0x20 => {
+                            out.push_str(&format!("\\u{:04x}", c as u32))
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            JsonValue::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            JsonValue::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    JsonValue::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serializes_nested() {
+        let v = JsonValue::obj(vec![
+            ("name", JsonValue::s("beanna")),
+            ("dsps", JsonValue::n(256.0)),
+            ("ok", JsonValue::Bool(true)),
+            (
+                "tags",
+                JsonValue::Arr(vec![JsonValue::s("fpga"), JsonValue::Null]),
+            ),
+        ]);
+        assert_eq!(
+            v.to_string(),
+            r#"{"name":"beanna","dsps":256,"ok":true,"tags":["fpga",null]}"#
+        );
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let v = JsonValue::s("a\"b\\c\nd");
+        assert_eq!(v.to_string(), r#""a\"b\\c\nd""#);
+    }
+
+    #[test]
+    fn numbers() {
+        assert_eq!(JsonValue::n(1.5).to_string(), "1.5");
+        assert_eq!(JsonValue::n(3.0).to_string(), "3");
+        assert_eq!(JsonValue::Num(f64::NAN).to_string(), "null");
+    }
+}

@@ -1,0 +1,42 @@
+//! Report formatting: paper-style tables, CSV, and JSON writers (the
+//! crate set has no serde, so the writers are explicit).
+
+pub mod json;
+pub mod table;
+
+pub use json::JsonValue;
+pub use table::Table;
+
+/// Write a CSV file from a header and rows.
+pub fn write_csv(
+    path: &std::path::Path,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("beanna_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        super::write_csv(
+            &p,
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(s, "a,b\n1,2\n3,4\n");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,0 +1,117 @@
+//! Fixed-width text tables in the style of the paper's Tables I–III.
+
+/// A simple left-labelled comparison table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    /// New table with a title and column headers (the first, label
+    /// column is implicit).
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Add a row: label + one cell per column.
+    pub fn row(&mut self, label: &str, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.columns.len(),
+            "row '{label}' has {} cells for {} columns",
+            cells.len(),
+            self.columns.len()
+        );
+        self.rows.push((label.to_string(), cells.to_vec()));
+        self
+    }
+
+    /// Convenience: row from display values.
+    pub fn row_disp<T: std::fmt::Display>(&mut self, label: &str, cells: &[T]) -> &mut Self {
+        let cells: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(label, &cells)
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once("Parameter".len()))
+            .max()
+            .unwrap_or(8)
+            + 2;
+        let col_ws: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows
+                    .iter()
+                    .map(|(_, cells)| cells[i].len())
+                    .chain(std::iter::once(c.len()))
+                    .max()
+                    .unwrap()
+                    + 2
+            })
+            .collect();
+        let total_w = label_w + col_ws.iter().sum::<usize>();
+        let mut s = String::new();
+        s.push_str(&format!("{}\n", self.title));
+        s.push_str(&"=".repeat(total_w.max(self.title.len())));
+        s.push('\n');
+        s.push_str(&format!("{:<label_w$}", "Parameter"));
+        for (c, w) in self.columns.iter().zip(&col_ws) {
+            s.push_str(&format!("{c:>w$}"));
+        }
+        s.push('\n');
+        s.push_str(&"-".repeat(total_w.max(self.title.len())));
+        s.push('\n');
+        for (label, cells) in &self.rows {
+            s.push_str(&format!("{label:<label_w$}"));
+            for (c, w) in cells.iter().zip(&col_ws) {
+                s.push_str(&format!("{c:>w$}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for Table {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("TABLE X", &["Floating Point Only", "BEANNA"]);
+        t.row("Accuracy", &["98.19%".to_string(), "97.96%".to_string()]);
+        t.row_disp("DSPs", &[256, 256]);
+        let s = t.render();
+        assert!(s.contains("TABLE X"));
+        assert!(s.contains("98.19%"));
+        assert!(s.contains("BEANNA"));
+        // Rows align: all lines after header have same width trend.
+        assert!(s.lines().count() >= 6);
+    }
+
+    #[test]
+    #[should_panic(expected = "has 1 cells for 2 columns")]
+    fn wrong_arity_panics() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row("x", &["only-one".to_string()]);
+    }
+}

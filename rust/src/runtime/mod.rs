@@ -1,0 +1,19 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the rust end of the three-layer architecture's compile path:
+//! `python/compile/aot.py` lowers the JAX model (whose hot-spots are the
+//! Pallas kernels of `python/compile/kernels/`) to **HLO text**, and this
+//! module loads it with `HloModuleProto::from_text_file`, compiles it on
+//! the PJRT CPU client, and executes it with concrete batches. Python
+//! never runs at inference time.
+//!
+//! HLO *text* (not a serialized `HloModuleProto`) is the interchange
+//! format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the
+//! `xla` crate's XLA (xla_extension 0.5.1) rejects; the text parser
+//! reassigns ids and round-trips cleanly (see /opt/xla-example/README).
+
+pub mod executor;
+pub mod registry;
+
+pub use executor::HloExecutable;
+pub use registry::ModelRegistry;

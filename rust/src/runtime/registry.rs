@@ -1,0 +1,68 @@
+//! Executable registry: one compiled artifact per (variant, batch),
+//! loaded lazily and cached for the process lifetime.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use super::executor::HloExecutable;
+use crate::data::IMG_PIXELS;
+use crate::io::ArtifactPaths;
+
+/// Lazily-loading cache of compiled model executables.
+pub struct ModelRegistry {
+    client: xla::PjRtClient,
+    paths: ArtifactPaths,
+    cache: HashMap<(String, usize), HloExecutable>,
+}
+
+impl ModelRegistry {
+    /// Create a registry over an artifact directory.
+    pub fn new(paths: ArtifactPaths) -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu()?,
+            paths,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Registry over the discovered `artifacts/` directory.
+    pub fn discover() -> Result<Self> {
+        Self::new(ArtifactPaths::discover())
+    }
+
+    /// Fetch (compiling on first use) the executable for a model variant
+    /// (`"hybrid"` / `"fp"`) at a fixed batch size.
+    pub fn get(&mut self, variant: &str, batch: usize) -> Result<&HloExecutable> {
+        let key = (variant.to_string(), batch);
+        if !self.cache.contains_key(&key) {
+            let path = self.paths.hlo(variant, batch);
+            let exe = HloExecutable::load(&self.client, &path, (batch, IMG_PIXELS))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(&key).unwrap())
+    }
+
+    /// Batch sizes with artifacts on disk for `variant`, by probing the
+    /// standard set exported by `make artifacts`.
+    pub fn available_batches(&self, variant: &str) -> Vec<usize> {
+        [1usize, 16, 256]
+            .into_iter()
+            .filter(|&b| self.paths.hlo(variant, b).exists())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn missing_artifacts_fail_lazily_with_hint() {
+        let mut reg =
+            ModelRegistry::new(ArtifactPaths::new("/tmp/definitely_missing_beanna")).unwrap();
+        assert!(reg.available_batches("hybrid").is_empty());
+        let err = reg.get("hybrid", 1).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

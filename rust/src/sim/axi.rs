@@ -1,0 +1,328 @@
+//! AXI4-Lite control interface model (§III-B: "The control module …
+//! utilizes an Advanced eXtensible Interface(AXI4)-Lite interface to
+//! communicate with software or a external hardware controller").
+//!
+//! Models the register file a driver would program before launching an
+//! inference (§III-D step 1): layer descriptors (dimensions, mode,
+//! weight base address), batch size, DMA base addresses, and the
+//! start/status handshake. The coordinator encodes a [`crate::nn::Network`]
+//! run into register writes; the control FSM decodes them back — round-
+//! tripping through this model is how the simulator's front door stays
+//! honest to the hardware programming model.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::nn::{Network, Precision};
+
+/// Register address map (word-addressed, 32-bit registers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u32)]
+pub enum Reg {
+    /// Control/start: write 1 to launch; self-clears on completion.
+    Ctrl = 0x00,
+    /// Status: 0 idle, 1 busy, 2 done, 3 error.
+    Status = 0x01,
+    /// Batch size.
+    Batch = 0x02,
+    /// Number of layers.
+    NumLayers = 0x03,
+    /// Input activations DRAM base address.
+    InputBase = 0x04,
+    /// Output DRAM base address.
+    OutputBase = 0x05,
+    /// Start of the layer-descriptor table (4 words per layer).
+    LayerTable = 0x10,
+}
+
+/// Words per layer descriptor in the table:
+/// `[in_features, out_features, flags, weight_base]`.
+pub const LAYER_DESC_WORDS: u32 = 4;
+
+/// Flag bits in a layer descriptor.
+pub mod flags {
+    /// Layer executes in binary mode (bit 0).
+    pub const BINARY: u32 = 1 << 0;
+    /// Apply hardtanh activation (bit 1).
+    pub const ACTIVATION: u32 = 1 << 1;
+    /// Apply folded batch-norm (bit 2).
+    pub const BATCHNORM: u32 = 1 << 2;
+}
+
+/// Device status codes surfaced in [`Reg::Status`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Ready for a command.
+    Idle = 0,
+    /// Inference in flight.
+    Busy = 1,
+    /// Results available.
+    Done = 2,
+    /// Bad programming (decode error).
+    Error = 3,
+}
+
+/// One decoded layer descriptor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerDesc {
+    /// Input feature count.
+    pub in_features: usize,
+    /// Output feature count.
+    pub out_features: usize,
+    /// Binary mode?
+    pub binary: bool,
+    /// hardtanh?
+    pub activation: bool,
+    /// Folded batch-norm?
+    pub batchnorm: bool,
+    /// Weight base address in off-chip memory.
+    pub weight_base: u32,
+}
+
+/// A fully decoded inference command.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct InferenceCommand {
+    /// Batch size.
+    pub batch: usize,
+    /// Input DRAM base.
+    pub input_base: u32,
+    /// Output DRAM base.
+    pub output_base: u32,
+    /// Layer programme.
+    pub layers: Vec<LayerDesc>,
+}
+
+/// The AXI-Lite register file.
+#[derive(Debug, Clone)]
+pub struct AxiRegisterFile {
+    regs: Vec<u32>,
+    /// Count of AXI write transactions (control-path activity).
+    pub writes: u64,
+    /// Count of AXI read transactions.
+    pub reads: u64,
+}
+
+impl Default for AxiRegisterFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AxiRegisterFile {
+    /// Register file sized for up to 32 layers.
+    pub fn new() -> Self {
+        Self {
+            regs: vec![0; (Reg::LayerTable as usize) + 32 * LAYER_DESC_WORDS as usize],
+            writes: 0,
+            reads: 0,
+        }
+    }
+
+    /// AXI write (word address).
+    pub fn write(&mut self, addr: u32, value: u32) -> Result<()> {
+        ensure!(
+            (addr as usize) < self.regs.len(),
+            "AXI write to unmapped address {addr:#x}"
+        );
+        self.writes += 1;
+        self.regs[addr as usize] = value;
+        Ok(())
+    }
+
+    /// AXI read (word address).
+    pub fn read(&mut self, addr: u32) -> Result<u32> {
+        ensure!(
+            (addr as usize) < self.regs.len(),
+            "AXI read from unmapped address {addr:#x}"
+        );
+        self.reads += 1;
+        Ok(self.regs[addr as usize])
+    }
+
+    /// Current status register value.
+    pub fn status(&self) -> Status {
+        match self.regs[Reg::Status as usize] {
+            0 => Status::Idle,
+            1 => Status::Busy,
+            2 => Status::Done,
+            _ => Status::Error,
+        }
+    }
+
+    /// Set the status register (device side).
+    pub fn set_status(&mut self, s: Status) {
+        self.regs[Reg::Status as usize] = s as u32;
+    }
+
+    /// Driver-side helper: program a network run into the register file
+    /// (the §III-D step 1 sequence). Weight base addresses are assigned
+    /// contiguously from `weight_base` in layer order.
+    pub fn program_network(
+        &mut self,
+        net: &Network,
+        batch: usize,
+        input_base: u32,
+        output_base: u32,
+        weight_base: u32,
+    ) -> Result<()> {
+        ensure!(
+            net.layers.len() <= 32,
+            "register file supports ≤ 32 layers"
+        );
+        self.write(Reg::Batch as u32, batch as u32)?;
+        self.write(Reg::NumLayers as u32, net.layers.len() as u32)?;
+        self.write(Reg::InputBase as u32, input_base)?;
+        self.write(Reg::OutputBase as u32, output_base)?;
+        let mut wbase = weight_base;
+        for (i, layer) in net.layers.iter().enumerate() {
+            let base = Reg::LayerTable as u32 + i as u32 * LAYER_DESC_WORDS;
+            let mut f = 0u32;
+            if layer.precision == Precision::Binary {
+                f |= flags::BINARY;
+            }
+            if layer.activation {
+                f |= flags::ACTIVATION;
+            }
+            if layer.bn.is_some() {
+                f |= flags::BATCHNORM;
+            }
+            self.write(base, layer.in_features() as u32)?;
+            self.write(base + 1, layer.out_features() as u32)?;
+            self.write(base + 2, f)?;
+            self.write(base + 3, wbase)?;
+            wbase += layer.weight_bytes() as u32;
+        }
+        Ok(())
+    }
+
+    /// Device-side helper: decode the programmed command (what the
+    /// control FSM latches when `Ctrl` is written).
+    pub fn decode_command(&mut self) -> Result<InferenceCommand> {
+        let batch = self.read(Reg::Batch as u32)? as usize;
+        let n = self.read(Reg::NumLayers as u32)? as usize;
+        if batch == 0 {
+            self.set_status(Status::Error);
+            bail!("batch must be positive");
+        }
+        if n == 0 || n > 32 {
+            self.set_status(Status::Error);
+            bail!("layer count {n} out of range");
+        }
+        let input_base = self.read(Reg::InputBase as u32)?;
+        let output_base = self.read(Reg::OutputBase as u32)?;
+        let mut layers = Vec::with_capacity(n);
+        let mut prev_out: Option<usize> = None;
+        for i in 0..n {
+            let base = Reg::LayerTable as u32 + i as u32 * LAYER_DESC_WORDS;
+            let in_features = self.read(base)? as usize;
+            let out_features = self.read(base + 1)? as usize;
+            let f = self.read(base + 2)?;
+            let weight_base = self.read(base + 3)?;
+            if in_features == 0 || out_features == 0 {
+                self.set_status(Status::Error);
+                bail!("layer {i}: zero dimension");
+            }
+            if let Some(prev) = prev_out {
+                if prev != in_features {
+                    self.set_status(Status::Error);
+                    bail!(
+                        "layer {i}: input {in_features} != previous output {prev}"
+                    );
+                }
+            }
+            prev_out = Some(out_features);
+            layers.push(LayerDesc {
+                in_features,
+                out_features,
+                binary: f & flags::BINARY != 0,
+                activation: f & flags::ACTIVATION != 0,
+                batchnorm: f & flags::BATCHNORM != 0,
+                weight_base,
+            });
+        }
+        Ok(InferenceCommand {
+            batch,
+            input_base,
+            output_base,
+            layers,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::NetworkConfig;
+
+    #[test]
+    fn program_decode_roundtrip_hybrid() {
+        let net = Network::random(&NetworkConfig::beanna_hybrid(), 1);
+        let mut axi = AxiRegisterFile::new();
+        axi.program_network(&net, 256, 0x1000_0000, 0x2000_0000, 0x3000_0000)
+            .unwrap();
+        let cmd = axi.decode_command().unwrap();
+        assert_eq!(cmd.batch, 256);
+        assert_eq!(cmd.layers.len(), 4);
+        assert_eq!(cmd.layers[0].in_features, 784);
+        assert!(!cmd.layers[0].binary && cmd.layers[1].binary && cmd.layers[2].binary);
+        assert!(!cmd.layers[3].binary);
+        // Hidden layers: BN + activation; final layer: neither.
+        assert!(cmd.layers[0].batchnorm && cmd.layers[0].activation);
+        assert!(!cmd.layers[3].batchnorm && !cmd.layers[3].activation);
+        // Weight bases are contiguous in layer order.
+        assert_eq!(cmd.layers[0].weight_base, 0x3000_0000);
+        assert_eq!(
+            cmd.layers[1].weight_base,
+            0x3000_0000 + (784 * 1024 * 2) as u32
+        );
+        // Whole programme fits Table II's memory budget.
+        let last = cmd.layers.last().unwrap();
+        assert_eq!(
+            (last.weight_base - 0x3000_0000) as usize + 1024 * 10 * 2,
+            1_888_256
+        );
+    }
+
+    #[test]
+    fn decode_rejects_inconsistent_programme() {
+        let net = Network::random(&NetworkConfig::beanna_fp(), 1);
+        let mut axi = AxiRegisterFile::new();
+        axi.program_network(&net, 1, 0, 0, 0).unwrap();
+        // Corrupt layer 2's input width.
+        let base = Reg::LayerTable as u32 + 2 * LAYER_DESC_WORDS;
+        axi.write(base, 999).unwrap();
+        assert!(axi.decode_command().is_err());
+        assert_eq!(axi.status(), Status::Error);
+    }
+
+    #[test]
+    fn decode_rejects_zero_batch_and_empty() {
+        let mut axi = AxiRegisterFile::new();
+        assert!(axi.decode_command().is_err()); // batch 0 / layers 0
+    }
+
+    #[test]
+    fn unmapped_addresses_rejected() {
+        let mut axi = AxiRegisterFile::new();
+        assert!(axi.write(0xFFFF, 1).is_err());
+        assert!(axi.read(0xFFFF).is_err());
+    }
+
+    #[test]
+    fn status_handshake() {
+        let mut axi = AxiRegisterFile::new();
+        assert_eq!(axi.status(), Status::Idle);
+        axi.set_status(Status::Busy);
+        assert_eq!(axi.status(), Status::Busy);
+        axi.set_status(Status::Done);
+        assert_eq!(axi.status(), Status::Done);
+    }
+
+    #[test]
+    fn transaction_counters() {
+        let net = Network::random(&NetworkConfig::beanna_hybrid(), 1);
+        let mut axi = AxiRegisterFile::new();
+        axi.program_network(&net, 1, 0, 0, 0).unwrap();
+        // 4 globals + 4 layers × 4 words.
+        assert_eq!(axi.writes, 4 + 16);
+    }
+}

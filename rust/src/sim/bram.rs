@@ -1,0 +1,117 @@
+//! Block-RAM models (§III-B): capacity-checked byte stores with access
+//! counters for the power model.
+//!
+//! Three instances exist in the device (Fig. 3): the activations BRAM,
+//! the weights BRAM, and the partial-sum accumulator BRAMs at the bottom
+//! of the array. We model contents as plain byte buffers (the functional
+//! values live in the engines; the BRAM model enforces *capacity* and
+//! counts *traffic*, which is what timing and power need).
+
+use anyhow::{ensure, Result};
+
+/// One BRAM bank group.
+#[derive(Debug, Clone)]
+pub struct Bram {
+    /// Human-readable name for error messages ("activations", …).
+    pub name: &'static str,
+    /// Capacity in bytes.
+    pub capacity: usize,
+    /// Currently allocated bytes (high-water tracked separately).
+    pub used: usize,
+    /// High-water mark of `used`.
+    pub peak: usize,
+    /// Total bytes read over the run.
+    pub bytes_read: u64,
+    /// Total bytes written over the run.
+    pub bytes_written: u64,
+}
+
+impl Bram {
+    /// New empty BRAM of `capacity` bytes.
+    pub fn new(name: &'static str, capacity: usize) -> Self {
+        Self {
+            name,
+            capacity,
+            used: 0,
+            peak: 0,
+            bytes_read: 0,
+            bytes_written: 0,
+        }
+    }
+
+    /// Allocate `bytes` (a staged buffer: weights block, layer I/O, …).
+    /// Fails if the working set exceeds capacity — the same failure a
+    /// misconfigured FPGA build would hit.
+    pub fn alloc(&mut self, bytes: usize) -> Result<()> {
+        ensure!(
+            self.used + bytes <= self.capacity,
+            "{} BRAM overflow: {} + {} > {} bytes",
+            self.name,
+            self.used,
+            bytes,
+            self.capacity
+        );
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    /// Release `bytes` previously allocated.
+    pub fn free(&mut self, bytes: usize) {
+        debug_assert!(bytes <= self.used, "{} BRAM double-free", self.name);
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    /// Record a read of `bytes`.
+    pub fn read(&mut self, bytes: usize) {
+        self.bytes_read += bytes as u64;
+    }
+
+    /// Record a write of `bytes`.
+    pub fn write(&mut self, bytes: usize) {
+        self.bytes_written += bytes as u64;
+    }
+
+    /// Reset traffic counters (capacity state preserved).
+    pub fn reset_counters(&mut self) {
+        self.bytes_read = 0;
+        self.bytes_written = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_and_peak() {
+        let mut b = Bram::new("test", 100);
+        b.alloc(60).unwrap();
+        b.alloc(30).unwrap();
+        assert_eq!(b.used, 90);
+        b.free(50);
+        assert_eq!(b.used, 40);
+        b.alloc(10).unwrap();
+        assert_eq!(b.peak, 90);
+    }
+
+    #[test]
+    fn overflow_rejected() {
+        let mut b = Bram::new("w", 100);
+        b.alloc(80).unwrap();
+        let err = b.alloc(21).unwrap_err().to_string();
+        assert!(err.contains("w BRAM overflow"), "{err}");
+    }
+
+    #[test]
+    fn traffic_counters() {
+        let mut b = Bram::new("a", 10);
+        b.read(4);
+        b.read(4);
+        b.write(2);
+        assert_eq!(b.bytes_read, 8);
+        assert_eq!(b.bytes_written, 2);
+        b.reset_counters();
+        assert_eq!(b.bytes_read, 0);
+    }
+}

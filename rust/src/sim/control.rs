@@ -1,0 +1,285 @@
+//! Control module (§III-B top of Fig. 3): the AXI-Lite-commanded FSM
+//! that sequences the §III-D dataflow, expressed as a per-layer
+//! **schedule** plus an **overlap timing model**.
+//!
+//! For a layer of `K` input features × `N` output neurons at batch `B`:
+//!
+//! * The output dimension is processed in `⌈N/dim⌉` **n-blocks** of 16
+//!   neurons (one column group of the array).
+//! * The input dimension is processed in `⌈K/k_cov⌉` **k-blocks**, where
+//!   `k_cov` = 16 in bf16 mode or 256 in binary mode (16 packed lanes per
+//!   PE — the "256×16 effective array" of §I).
+//! * Per (n-block, k-block): DMA1 loads the weight block (dim cycles,
+//!   step 4), then the batch streams through (closed-form
+//!   `B + 2·dim − 2` cycles, steps 6–7), accumulating into the psum
+//!   BRAMs (step 7).
+//! * Per n-block: DMA0 streams that block's weights from off-chip
+//!   (step 3) — overlapped with the *previous* n-block's compute when
+//!   `overlap_weight_stream` (double-buffered weights BRAM); DMA2 drains
+//!   psums through the activation/normalization units (step 9, `B`
+//!   cycles at 16 lanes/cycle) — overlapped with the *next* n-block's
+//!   compute when `overlap_drain` (double-buffered accumulators).
+
+use super::config::AcceleratorConfig;
+use super::pe::Mode;
+use super::systolic::SystolicArray;
+
+/// Static block decomposition of one layer on the array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerSchedule {
+    /// Array dimension.
+    pub dim: usize,
+    /// Execution mode.
+    pub mode: Mode,
+    /// Batch rows streamed per block pass.
+    pub batch: usize,
+    /// Input features.
+    pub k: usize,
+    /// Output neurons.
+    pub n: usize,
+    /// Input features covered per k-block (dim or dim·pack).
+    pub k_cov: usize,
+    /// Number of k-blocks.
+    pub k_blocks: usize,
+    /// Number of n-blocks.
+    pub n_blocks: usize,
+    /// Weight bits per element (16 or 1).
+    pub weight_bits: usize,
+}
+
+impl LayerSchedule {
+    /// Build the schedule for a layer.
+    pub fn new(cfg: &AcceleratorConfig, mode: Mode, batch: usize, k: usize, n: usize) -> Self {
+        let k_cov = match mode {
+            Mode::Bf16 => cfg.array_dim,
+            Mode::Binary => cfg.array_dim * cfg.binary_pack,
+        };
+        Self {
+            dim: cfg.array_dim,
+            mode,
+            batch,
+            k,
+            n,
+            k_cov,
+            k_blocks: k.div_ceil(k_cov),
+            n_blocks: n.div_ceil(cfg.array_dim),
+            weight_bits: match mode {
+                Mode::Bf16 => 16,
+                Mode::Binary => 1,
+            },
+        }
+    }
+
+    /// DMA1 weight-load cycles per block (one PE row per cycle).
+    pub fn wload_cycles(&self) -> u64 {
+        self.dim as u64
+    }
+
+    /// Stream cycles per block pass (closed form, verified against the
+    /// RT engine).
+    pub fn stream_cycles(&self) -> u64 {
+        SystolicArray::stream_cycles_closed_form(self.dim, self.batch)
+    }
+
+    /// Compute cycles for one n-block: all its k-blocks.
+    pub fn nblock_compute_cycles(&self) -> u64 {
+        self.k_blocks as u64 * (self.wload_cycles() + self.stream_cycles())
+    }
+
+    /// Off-chip weight bytes for n-block `i` (partial final block has
+    /// fewer neurons; bits rounded up to whole bytes per neuron row).
+    pub fn nblock_weight_bytes(&self, i: usize) -> usize {
+        let neurons = if i + 1 == self.n_blocks && self.n % self.dim != 0 {
+            self.n % self.dim
+        } else {
+            self.dim
+        };
+        neurons * (self.k * self.weight_bits).div_ceil(8)
+    }
+
+    /// Total off-chip weight bytes for the layer.
+    pub fn layer_weight_bytes(&self) -> usize {
+        (0..self.n_blocks).map(|i| self.nblock_weight_bytes(i)).sum()
+    }
+
+    /// DMA2 drain cycles per n-block: `B` rows × 16 lanes at 16
+    /// lanes/cycle.
+    pub fn drain_cycles(&self) -> u64 {
+        self.batch as u64
+    }
+
+    /// Total MACs actually performed by the array for this layer
+    /// (includes padded lanes — the hardware clocks them regardless),
+    /// for the activity/power model.
+    pub fn array_macs(&self) -> u64 {
+        let per_block = (self.batch * self.dim * self.dim) as u64;
+        let blocks = (self.k_blocks * self.n_blocks) as u64;
+        match self.mode {
+            Mode::Bf16 => per_block * blocks,
+            // Binary MACs counted per 16-lane PE cycle.
+            Mode::Binary => per_block * blocks,
+        }
+    }
+}
+
+/// Timing for one layer under the overlap model. Returns the phase
+/// breakdown (all cycles attributed per §III-D phase).
+pub fn layer_timing(cfg: &AcceleratorConfig, s: &LayerSchedule) -> super::TimingBreakdown {
+    let mut t = super::TimingBreakdown {
+        control: cfg.layer_overhead_cycles,
+        ..Default::default()
+    };
+    let compute_per_nblock = s.nblock_compute_cycles();
+    // Split (wload vs stream) attribution inside an n-block.
+    let wload_per_nblock = s.k_blocks as u64 * s.wload_cycles();
+    let stream_per_nblock = compute_per_nblock - wload_per_nblock;
+
+    for i in 0..s.n_blocks {
+        let stream_bytes = s.nblock_weight_bytes(i);
+        let stream_cycles = (stream_bytes as u64).div_ceil(cfg.dma_bytes_per_cycle as u64);
+        // Off-chip weight streaming: block 0 is fully exposed; later
+        // blocks hide behind the previous block's compute.
+        let exposed = if i == 0 || !cfg.overlap_weight_stream {
+            stream_cycles
+        } else {
+            stream_cycles.saturating_sub(compute_per_nblock)
+        };
+        t.weight_stream += exposed;
+        t.weight_load += wload_per_nblock;
+        t.compute += stream_per_nblock;
+        // Psum drain: hidden behind the next n-block's compute except on
+        // the last n-block (or when overlap is disabled).
+        let drain = s.drain_cycles();
+        let drain_exposed = if i + 1 == s.n_blocks || !cfg.overlap_drain {
+            drain
+        } else {
+            drain.saturating_sub(compute_per_nblock)
+        };
+        t.drain += drain_exposed;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AcceleratorConfig {
+        AcceleratorConfig::default()
+    }
+
+    #[test]
+    fn schedule_paper_layer_shapes() {
+        // L2: 1024→1024 bf16 at batch 256.
+        let s = LayerSchedule::new(&cfg(), Mode::Bf16, 256, 1024, 1024);
+        assert_eq!(s.k_blocks, 64);
+        assert_eq!(s.n_blocks, 64);
+        assert_eq!(s.stream_cycles(), 256 + 32 - 2);
+        assert_eq!(s.wload_cycles(), 16);
+        // Same layer in binary mode: k-coverage ×16.
+        let sb = LayerSchedule::new(&cfg(), Mode::Binary, 256, 1024, 1024);
+        assert_eq!(sb.k_blocks, 4);
+        assert_eq!(sb.n_blocks, 64);
+    }
+
+    #[test]
+    fn partial_blocks_round_up() {
+        // L1: 784→1024: 784/16 = 49 exactly; L4: 1024→10: 1 n-block.
+        let s1 = LayerSchedule::new(&cfg(), Mode::Bf16, 1, 784, 1024);
+        assert_eq!(s1.k_blocks, 49);
+        let s4 = LayerSchedule::new(&cfg(), Mode::Bf16, 1, 1024, 10);
+        assert_eq!(s4.n_blocks, 1);
+        // Partial n-block counts only the real neurons' weights.
+        assert_eq!(s4.nblock_weight_bytes(0), 10 * 1024 * 2);
+        // Binary 1000→1000: ⌈1000/256⌉ = 4 k-blocks.
+        let sb = LayerSchedule::new(&cfg(), Mode::Binary, 1, 1000, 1000);
+        assert_eq!(sb.k_blocks, 4);
+        assert_eq!(sb.n_blocks, 63);
+        // Row bits round to whole bytes: 1000 bits → 125 bytes/neuron.
+        assert_eq!(sb.nblock_weight_bytes(0), 16 * 125);
+        assert_eq!(sb.nblock_weight_bytes(62), (1000 - 62 * 16) * 125);
+    }
+
+    #[test]
+    fn layer_weight_bytes_match_table2_model() {
+        // Full fp network weight bytes = 5,820,416 (Table II).
+        let layers = [(784usize, 1024usize), (1024, 1024), (1024, 1024), (1024, 10)];
+        let total: usize = layers
+            .iter()
+            .map(|&(k, n)| LayerSchedule::new(&cfg(), Mode::Bf16, 1, k, n).layer_weight_bytes())
+            .sum();
+        assert_eq!(total, 5_820_416);
+        // Hybrid: binary hidden layers → 1,888,256.
+        let hybrid = LayerSchedule::new(&cfg(), Mode::Bf16, 1, 784, 1024).layer_weight_bytes()
+            + LayerSchedule::new(&cfg(), Mode::Binary, 1, 1024, 1024).layer_weight_bytes() * 2
+            + LayerSchedule::new(&cfg(), Mode::Bf16, 1, 1024, 10).layer_weight_bytes();
+        assert_eq!(hybrid, 1_888_256);
+    }
+
+    #[test]
+    fn batch1_fp_layer_is_stream_bound() {
+        // At batch 1, off-chip weight streaming dominates (the Table I
+        // batch-1 bottleneck).
+        let c = cfg();
+        let s = LayerSchedule::new(&c, Mode::Bf16, 1, 1024, 1024);
+        let t = layer_timing(&c, &s);
+        // Wall-clock ≈ weight bytes / bus width (stream-bound pipeline):
+        // per n-block, exposed-stream + compute = max(stream, compute) =
+        // stream when streaming dominates.
+        let stream_bound = (s.layer_weight_bytes() as u64) / c.dma_bytes_per_cycle as u64;
+        assert!(t.total() >= stream_bound, "{}", t.summary());
+        assert!(
+            t.total() < stream_bound + stream_bound / 50,
+            "batch-1 should be within 2% of the streaming bound: {}",
+            t.summary()
+        );
+        assert!(t.weight_stream > 0);
+    }
+
+    #[test]
+    fn batch256_fp_layer_is_compute_bound() {
+        let c = cfg();
+        let s = LayerSchedule::new(&c, Mode::Bf16, 256, 1024, 1024);
+        let t = layer_timing(&c, &s);
+        assert!(
+            t.compute > t.weight_stream * 4,
+            "batch-256 must be compute bound: {}",
+            t.summary()
+        );
+    }
+
+    #[test]
+    fn overlap_flags_increase_time_when_disabled() {
+        let mut c = cfg();
+        let s = LayerSchedule::new(&c, Mode::Bf16, 256, 1024, 1024);
+        let t_overlap = layer_timing(&c, &s).total();
+        c.overlap_weight_stream = false;
+        c.overlap_drain = false;
+        let t_serial = layer_timing(&c, &s).total();
+        assert!(t_serial > t_overlap);
+        // Serial adds the full weight-stream and drain time.
+        let stream_total: u64 = (0..s.n_blocks)
+            .map(|i| (s.nblock_weight_bytes(i) as u64).div_ceil(c.dma_bytes_per_cycle as u64))
+            .sum();
+        assert_eq!(
+            t_serial,
+            t_overlap - exposed_first_block(&c, &s) - s.drain_cycles() + stream_total
+                + s.n_blocks as u64 * s.drain_cycles()
+        );
+    }
+
+    /// First-block exposed stream cycles under the overlapped model.
+    fn exposed_first_block(c: &AcceleratorConfig, s: &LayerSchedule) -> u64 {
+        (s.nblock_weight_bytes(0) as u64).div_ceil(c.dma_bytes_per_cycle as u64)
+    }
+
+    #[test]
+    fn binary_layer_much_faster_at_high_batch() {
+        let c = cfg();
+        let bf = layer_timing(&c, &LayerSchedule::new(&c, Mode::Bf16, 256, 1024, 1024));
+        let bin = layer_timing(&c, &LayerSchedule::new(&c, Mode::Binary, 256, 1024, 1024));
+        let speedup = bf.total() as f64 / bin.total() as f64;
+        // 16× k-coverage minus fixed overheads → speedup well above 8×.
+        assert!(speedup > 8.0, "binary speedup only {speedup:.2}×");
+    }
+}

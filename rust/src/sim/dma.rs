@@ -1,0 +1,80 @@
+//! DMA controller models (§III-B, Fig. 3).
+//!
+//! Three controllers with fixed roles:
+//!
+//! * **DMA0** — off-chip ⇄ on-chip: stages input activations and streams
+//!   layer weights from DRAM; writes final results back. Bandwidth-bound
+//!   at `dma_bytes_per_cycle` (64-bit AXI @ 100 MHz → 8 B/cycle).
+//! * **DMA1** — weights BRAM → systolic array: one PE row per cycle.
+//! * **DMA2** — psum accumulators → activation/normalization units →
+//!   activations BRAM: 16 lanes per cycle.
+//!
+//! Each transfer returns its cycle cost; the control FSM decides what
+//! overlaps with what (per the configuration's overlap flags).
+
+/// Transfer accounting for one DMA controller.
+#[derive(Debug, Clone, Default)]
+pub struct DmaController {
+    /// Total bytes moved.
+    pub bytes: u64,
+    /// Total busy cycles.
+    pub busy_cycles: u64,
+    /// Number of transfer commands issued.
+    pub transfers: u64,
+}
+
+impl DmaController {
+    /// New idle controller.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Issue a transfer of `bytes` at `bytes_per_cycle` bandwidth,
+    /// returning the cycle cost (ceil).
+    pub fn transfer(&mut self, bytes: usize, bytes_per_cycle: usize) -> u64 {
+        assert!(bytes_per_cycle > 0);
+        let cycles = (bytes as u64).div_ceil(bytes_per_cycle as u64);
+        self.bytes += bytes as u64;
+        self.busy_cycles += cycles;
+        self.transfers += 1;
+        cycles
+    }
+
+    /// Issue a transfer measured in beats (rows/lanes per cycle), e.g.
+    /// DMA1 moving one weight row per cycle. Returns the cycle cost.
+    pub fn transfer_beats(&mut self, beats: u64, bytes_per_beat: usize) -> u64 {
+        self.bytes += beats * bytes_per_beat as u64;
+        self.busy_cycles += beats;
+        self.transfers += 1;
+        beats
+    }
+
+    /// Reset counters.
+    pub fn reset(&mut self) {
+        *self = Self::default();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_rounds_up() {
+        let mut d = DmaController::new();
+        assert_eq!(d.transfer(16, 8), 2);
+        assert_eq!(d.transfer(17, 8), 3);
+        assert_eq!(d.bytes, 33);
+        assert_eq!(d.busy_cycles, 5);
+        assert_eq!(d.transfers, 2);
+    }
+
+    #[test]
+    fn beats_counted() {
+        let mut d = DmaController::new();
+        assert_eq!(d.transfer_beats(16, 32), 16);
+        assert_eq!(d.bytes, 512);
+        d.reset();
+        assert_eq!(d.busy_cycles, 0);
+    }
+}

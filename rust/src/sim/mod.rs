@@ -1,0 +1,43 @@
+//! Cycle-level simulator of the BEANNA accelerator (§III-B/C/D).
+//!
+//! The paper's device is an FPGA design; per DESIGN.md §5 we reproduce it
+//! as a simulator with two interchangeable engines:
+//!
+//! * [`systolic`] — a **cycle-exact register-transfer engine**: a real
+//!   16×16 grid of [`pe::ProcessingElement`]s with explicit activation /
+//!   partial-sum pipeline registers, stepped one clock at a time. This is
+//!   the ground truth for both numerics and block latency.
+//! * [`xact`] — a **transaction-level engine** that computes each 16×16
+//!   block functionally and accounts cycles with the closed-form schedule
+//!   derived from the RT engine. Verified equivalent (same outputs, same
+//!   cycle counts) by tests in both modules; used as the fast path by the
+//!   benches and the coordinator.
+//!
+//! Around the array sit the §III-B subsystems: [`bram`] (activations,
+//! weights, partial-sum accumulators), [`dma`] (the three DMA
+//! controllers), and [`control`] (the AXI-Lite command FSM that sequences
+//! the 11-step dataflow of §III-D). [`accel`] composes them into the
+//! top-level [`Accelerator`]; [`timing`] converts cycle counts into the
+//! Table I metrics.
+//!
+//! Every subsystem keeps activity counters (MACs by mode, BRAM accesses,
+//! DMA bytes) consumed by the power model ([`crate::model::power`]).
+
+pub mod accel;
+pub mod axi;
+pub mod bram;
+pub mod config;
+pub mod control;
+pub mod dma;
+pub mod pe;
+pub mod systolic;
+pub mod timing;
+pub mod trace;
+pub mod xact;
+
+pub use accel::{Accelerator, LayerReport, RunReport};
+pub use axi::AxiRegisterFile;
+pub use config::{AcceleratorConfig, Engine};
+pub use pe::Mode;
+pub use timing::TimingBreakdown;
+pub use trace::Trace;

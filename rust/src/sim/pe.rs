@@ -1,0 +1,225 @@
+//! Processing element (Fig. 5): dual-mode multiply-add.
+//!
+//! Each PE holds a stationary weight (one bfloat16 value, or one 16-bit
+//! packed binary word) and, per cycle, consumes an activation from its
+//! left neighbour and a partial sum from above, emitting the activation
+//! right and the updated partial sum down.
+//!
+//! * **High-precision mode**: `psum_out = psum_in + act · weight` with
+//!   bf16 operands and f32 partial sums ([`crate::bf16::mac_bf16`]).
+//! * **Binary mode**: the activation and weight registers are 16-bit
+//!   packed sign vectors; the multiplier is an elementwise XNOR and the
+//!   adder a popcount-accumulate: `psum_out = psum_in + 16 − 2·popcount
+//!   (act ⊕ weight)` — eq. 1 restricted to the PE's 16 lanes. Partial
+//!   sums are integers carried in i32.
+//!
+//! As in Fig. 5, a mode signal muxes the result and "ties off the inputs
+//! of the unused computation unit" — modeled here by only clocking
+//! activity counters for the active unit.
+
+use crate::bf16::{mac_bf16, BF16};
+
+/// Array operating mode (§III-D step 5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// bfloat16 high-precision mode.
+    Bf16,
+    /// XNOR-popcount binary mode.
+    Binary,
+}
+
+/// Value travelling on the activation (horizontal) wires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ActBus {
+    /// No valid data this cycle (pipeline bubble).
+    Idle,
+    /// bf16 activation.
+    Bf16(BF16),
+    /// 16 packed binary activations (bit = 1 ⇔ −1).
+    Packed(u16),
+}
+
+/// Value travelling on the partial-sum (vertical) wires.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PsumBus {
+    /// No valid data this cycle.
+    Idle,
+    /// f32 partial sum (high-precision mode).
+    F32(f32),
+    /// Integer partial sum (binary mode).
+    I32(i32),
+}
+
+/// Per-PE activity counters for the power model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PeActivity {
+    /// Cycles the bf16 unit computed.
+    pub bf16_macs: u64,
+    /// Cycles the binary unit computed (16 binary MACs each).
+    pub binary_macs: u64,
+    /// Cycles spent idle (bubbles).
+    pub idle_cycles: u64,
+}
+
+/// One processing element.
+#[derive(Debug, Clone)]
+pub struct ProcessingElement {
+    /// Stationary bf16 weight (high-precision mode).
+    pub weight_bf16: BF16,
+    /// Stationary packed binary weight word (binary mode).
+    pub weight_bits: u16,
+    /// Activity counters.
+    pub activity: PeActivity,
+}
+
+impl Default for ProcessingElement {
+    fn default() -> Self {
+        Self {
+            weight_bf16: BF16::ZERO,
+            weight_bits: 0,
+            activity: PeActivity::default(),
+        }
+    }
+}
+
+impl ProcessingElement {
+    /// Load the high-precision weight register.
+    pub fn load_weight_bf16(&mut self, w: BF16) {
+        self.weight_bf16 = w;
+    }
+
+    /// Load the packed binary weight register.
+    pub fn load_weight_bits(&mut self, w: u16) {
+        self.weight_bits = w;
+    }
+
+    /// One compute cycle: combine the incoming activation and partial sum
+    /// according to `mode`. Returns the outgoing partial sum; the caller
+    /// (the array) moves the activation register right.
+    ///
+    /// Mode/operand mismatches (e.g. a packed activation in bf16 mode)
+    /// are hardware bugs — they panic in the simulator.
+    pub fn cycle(&mut self, mode: Mode, act: ActBus, psum: PsumBus) -> PsumBus {
+        match (mode, act) {
+            (_, ActBus::Idle) => {
+                self.activity.idle_cycles += 1;
+                // A bubble propagates: psum passes through unchanged.
+                psum
+            }
+            (Mode::Bf16, ActBus::Bf16(a)) => {
+                let acc_in = match psum {
+                    PsumBus::F32(p) => p,
+                    PsumBus::Idle => 0.0,
+                    PsumBus::I32(_) => panic!("i32 psum on bf16 datapath"),
+                };
+                self.activity.bf16_macs += 1;
+                PsumBus::F32(mac_bf16(acc_in, a, self.weight_bf16))
+            }
+            (Mode::Binary, ActBus::Packed(a)) => {
+                let acc_in = match psum {
+                    PsumBus::I32(p) => p,
+                    PsumBus::Idle => 0,
+                    PsumBus::F32(_) => panic!("f32 psum on binary datapath"),
+                };
+                self.activity.binary_macs += 1;
+                // eq. 1 over this PE's 16 lanes: agreements − disagreements.
+                let disagreements = (a ^ self.weight_bits).count_ones() as i32;
+                PsumBus::I32(acc_in + 16 - 2 * disagreements)
+            }
+            (Mode::Bf16, ActBus::Packed(_)) => panic!("packed activation in bf16 mode"),
+            (Mode::Binary, ActBus::Bf16(_)) => panic!("bf16 activation in binary mode"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    #[test]
+    fn bf16_mac_matches_reference() {
+        let mut pe = ProcessingElement::default();
+        pe.load_weight_bf16(BF16::from_f32(0.5));
+        let out = pe.cycle(
+            Mode::Bf16,
+            ActBus::Bf16(BF16::from_f32(4.0)),
+            PsumBus::F32(1.0),
+        );
+        assert_eq!(out, PsumBus::F32(3.0));
+        assert_eq!(pe.activity.bf16_macs, 1);
+    }
+
+    #[test]
+    fn binary_mac_counts_agreements() {
+        let mut pe = ProcessingElement::default();
+        pe.load_weight_bits(0b1111_0000_1111_0000);
+        // act identical to weight → all 16 agree → +16.
+        let out = pe.cycle(
+            Mode::Binary,
+            ActBus::Packed(0b1111_0000_1111_0000),
+            PsumBus::I32(10),
+        );
+        assert_eq!(out, PsumBus::I32(26));
+        // act complement → all disagree → −16.
+        let out = pe.cycle(
+            Mode::Binary,
+            ActBus::Packed(!0b1111_0000_1111_0000),
+            PsumBus::I32(0),
+        );
+        assert_eq!(out, PsumBus::I32(-16));
+        assert_eq!(pe.activity.binary_macs, 2);
+    }
+
+    #[test]
+    fn idle_bubble_passes_psum_through() {
+        let mut pe = ProcessingElement::default();
+        let out = pe.cycle(Mode::Bf16, ActBus::Idle, PsumBus::F32(7.5));
+        assert_eq!(out, PsumBus::F32(7.5));
+        assert_eq!(pe.activity.idle_cycles, 1);
+        assert_eq!(pe.activity.bf16_macs, 0);
+    }
+
+    #[test]
+    fn idle_psum_treated_as_zero() {
+        let mut pe = ProcessingElement::default();
+        pe.load_weight_bf16(BF16::ONE);
+        let out = pe.cycle(Mode::Bf16, ActBus::Bf16(BF16::from_f32(3.0)), PsumBus::Idle);
+        assert_eq!(out, PsumBus::F32(3.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "binary mode")]
+    fn mode_mismatch_panics() {
+        let mut pe = ProcessingElement::default();
+        pe.cycle(Mode::Binary, ActBus::Bf16(BF16::ONE), PsumBus::Idle);
+    }
+
+    #[test]
+    fn prop_binary_pe_matches_bitvector_dot() {
+        use crate::binary::BitVector;
+        check("PE binary lane == BitVector dot", 200, |g: &mut Gen| {
+            let a_bits = (g.rng().next_u64() & 0xFFFF) as u16;
+            let w_bits = (g.rng().next_u64() & 0xFFFF) as u16;
+            let mut pe = ProcessingElement::default();
+            pe.load_weight_bits(w_bits);
+            let out = pe.cycle(Mode::Binary, ActBus::Packed(a_bits), PsumBus::I32(0));
+            // Reference via BitVector over the same 16 lanes.
+            let to_vec = |bits: u16| -> BitVector {
+                let mut v = BitVector::ones(16);
+                for i in 0..16 {
+                    if (bits >> i) & 1 == 1 {
+                        v.set(i, true);
+                    }
+                }
+                v
+            };
+            let expect = to_vec(a_bits).dot(&to_vec(w_bits));
+            if out == PsumBus::I32(expect) {
+                Ok(())
+            } else {
+                Err(format!("a={a_bits:#06x} w={w_bits:#06x}: {out:?} != {expect}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,425 @@
+//! Cycle-exact register-transfer model of the 16×16 systolic array
+//! (§III-C, Fig. 4).
+//!
+//! Weight-stationary dataflow: PE(r, c) holds the weight connecting input
+//! feature group `r` (one bf16 value, or 16 packed binary lanes) to
+//! output neuron `c`. Activations enter on the left, one array row per
+//! input-feature group, with batch row `b` entering row `r` at cycle
+//! `b + r` (the "staggered by one column" skew of §III-C). Partial sums
+//! flow down; column `c` delivers the finished block psum for batch row
+//! `b` into the accumulator BRAM at cycle `b + 2·dim − 1`.
+//!
+//! The engine literally steps a grid of [`ProcessingElement`]s with
+//! explicit activation/psum pipeline registers; [`StreamOutcome::cycles`]
+//! is *measured* by stepping until the array drains, and the
+//! transaction engine's closed form (`B + 2·dim − 2` latch cycles after
+//! the first) is asserted equal to it in tests.
+
+use anyhow::{ensure, Result};
+
+use super::pe::{ActBus, Mode, PeActivity, ProcessingElement, PsumBus};
+use crate::bf16::{BF16, Matrix};
+
+/// Result of streaming one activation block through the array.
+#[derive(Debug, Clone)]
+pub struct StreamOutcome {
+    /// Per-(batch-row, column) block partial sums, `B × dim`, in f32
+    /// (binary-mode integer counts are exactly representable).
+    pub psums: Matrix,
+    /// Cycles stepped from first injection to full drain.
+    pub cycles: u64,
+}
+
+/// The systolic array with its pipeline registers.
+#[derive(Debug, Clone)]
+pub struct SystolicArray {
+    /// Array dimension (16 in the paper).
+    pub dim: usize,
+    mode: Mode,
+    pes: Vec<ProcessingElement>,
+    /// Per-row lane masks for binary mode (partial final k-group).
+    lane_masks: Vec<u16>,
+    /// Horizontal activation registers (output of each PE to its right
+    /// neighbour).
+    act_regs: Vec<ActBus>,
+    /// Vertical psum registers (output of each PE downward).
+    psum_regs: Vec<PsumBus>,
+}
+
+impl SystolicArray {
+    /// New array of `dim × dim` PEs in bf16 mode.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0 && dim <= 16, "PE lane masks are 16-bit; dim ≤ 16");
+        Self {
+            dim,
+            mode: Mode::Bf16,
+            pes: vec![ProcessingElement::default(); dim * dim],
+            lane_masks: vec![0xFFFF; dim],
+            act_regs: vec![ActBus::Idle; dim * dim],
+            psum_regs: vec![PsumBus::Idle; dim * dim],
+        }
+    }
+
+    /// Current mode.
+    pub fn mode(&self) -> Mode {
+        self.mode
+    }
+
+    /// §III-D step 5: set the operation mode for the next layer.
+    pub fn set_mode(&mut self, mode: Mode) {
+        self.mode = mode;
+    }
+
+    #[inline]
+    fn idx(&self, r: usize, c: usize) -> usize {
+        r * self.dim + c
+    }
+
+    /// Load a bf16 weight block `w[k][n]` (dim×dim; zero-pad partial
+    /// blocks before calling). Returns DMA1 cycles: one row per cycle.
+    pub fn load_weights_bf16(&mut self, w: &Matrix) -> Result<u64> {
+        ensure!(
+            w.rows == self.dim && w.cols == self.dim,
+            "weight block must be {0}×{0}",
+            self.dim
+        );
+        for r in 0..self.dim {
+            for c in 0..self.dim {
+                let i = self.idx(r, c);
+                self.pes[i].load_weight_bf16(BF16::from_f32(w.get(r, c)));
+            }
+        }
+        Ok(self.dim as u64)
+    }
+
+    /// Load a binary weight block: `w_bits[k_group][n]` packed 16-lane
+    /// words with a per-k-group lane mask (all-ones except a partial
+    /// final group). Returns DMA1 cycles (one row per cycle).
+    pub fn load_weights_binary(&mut self, w_bits: &[Vec<u16>], masks: &[u16]) -> Result<u64> {
+        ensure!(
+            w_bits.len() == self.dim && masks.len() == self.dim,
+            "need {} weight rows/masks",
+            self.dim
+        );
+        for (r, row) in w_bits.iter().enumerate() {
+            ensure!(row.len() == self.dim, "weight row {r} must have dim words");
+            for (c, &bits) in row.iter().enumerate() {
+                let i = self.idx(r, c);
+                self.pes[i].load_weight_bits(bits);
+            }
+            self.lane_masks[r] = masks[r];
+        }
+        Ok(self.dim as u64)
+    }
+
+    /// Stream a bf16 activation block `acts[b][k]` (B × dim, zero-pad
+    /// partial k) through the array; returns psums and measured cycles.
+    pub fn stream_bf16(&mut self, acts: &Matrix) -> Result<StreamOutcome> {
+        ensure!(self.mode == Mode::Bf16, "array not in bf16 mode");
+        ensure!(acts.cols == self.dim, "activation block must be B×dim");
+        let feed = |b: usize, r: usize| ActBus::Bf16(BF16::from_f32(acts.get(b, r)));
+        self.stream(acts.rows, feed)
+    }
+
+    /// Stream a binary activation block `acts_bits[b][k_group]` (B rows ×
+    /// dim packed words). Pad lanes must be zero-bits in both activations
+    /// and weights (the lane mask excludes them from the count).
+    pub fn stream_binary(&mut self, acts_bits: &[Vec<u16>]) -> Result<StreamOutcome> {
+        ensure!(self.mode == Mode::Binary, "array not in binary mode");
+        for (b, row) in acts_bits.iter().enumerate() {
+            ensure!(row.len() == self.dim, "act row {b} must have dim words");
+        }
+        let feed = |b: usize, r: usize| ActBus::Packed(acts_bits[b][r]);
+        self.stream(acts_bits.len(), feed)
+    }
+
+    /// Core stepping loop, generic over the activation feeder.
+    fn stream(
+        &mut self,
+        batch: usize,
+        feed: impl Fn(usize, usize) -> ActBus,
+    ) -> Result<StreamOutcome> {
+        let dim = self.dim;
+        let mut psums = Matrix::zeros(batch, dim);
+        // Per-column count of outputs collected so far (outputs emerge in
+        // batch order from each column's bottom).
+        let mut collected = vec![0usize; dim];
+        let mut cycle: u64 = 0;
+        // An upper bound on drain time; the loop exits as soon as all
+        // outputs are collected.
+        let max_cycles = (batch + 2 * dim + 4) as u64;
+        let mut new_acts = vec![ActBus::Idle; dim * dim];
+        let mut new_psums = vec![PsumBus::Idle; dim * dim];
+
+        while collected.iter().any(|&c| c < batch) {
+            ensure!(cycle < max_cycles, "systolic array failed to drain");
+            // Inputs this cycle come from the *previous* cycle's
+            // registers; compute all PE outputs into fresh buffers.
+            for r in 0..dim {
+                for c in 0..dim {
+                    // Activation input: left neighbour's register, or the
+                    // feeder at the left edge (batch b enters row r at
+                    // cycle b + r).
+                    let act_in = if c == 0 {
+                        let t = cycle as i64 - r as i64;
+                        if t >= 0 && (t as usize) < batch {
+                            feed(t as usize, r)
+                        } else {
+                            ActBus::Idle
+                        }
+                    } else {
+                        self.act_regs[self.idx(r, c - 1)]
+                    };
+                    // Psum input: above neighbour's register (Idle = 0 at
+                    // the top edge).
+                    let psum_in = if r == 0 {
+                        PsumBus::Idle
+                    } else {
+                        self.psum_regs[self.idx(r - 1, c)]
+                    };
+                    // Binary mode applies this row's lane mask.
+                    let i = self.idx(r, c);
+                    let out = match (self.mode, act_in) {
+                        (Mode::Binary, ActBus::Packed(a)) => {
+                            let masked_a = a & self.lane_masks[r];
+                            // Mask weight lanes too: agreements counted
+                            // over enabled lanes only.
+                            let w = self.pes[i].weight_bits & self.lane_masks[r];
+                            let acc = match psum_in {
+                                PsumBus::I32(p) => p,
+                                PsumBus::Idle => 0,
+                                PsumBus::F32(_) => unreachable!("f32 psum in binary mode"),
+                            };
+                            self.pes[i].activity.binary_macs += 1;
+                            let lanes = self.lane_masks[r].count_ones() as i32;
+                            let dis = (masked_a ^ w).count_ones() as i32;
+                            PsumBus::I32(acc + lanes - 2 * dis)
+                        }
+                        _ => self.pes[i].cycle(self.mode, act_in, psum_in),
+                    };
+                    new_psums[i] = out;
+                    new_acts[i] = act_in;
+                }
+            }
+            std::mem::swap(&mut self.act_regs, &mut new_acts);
+            std::mem::swap(&mut self.psum_regs, &mut new_psums);
+            cycle += 1;
+
+            // Collect valid outputs at each column's bottom register.
+            for c in 0..dim {
+                match self.psum_regs[self.idx(dim - 1, c)] {
+                    PsumBus::F32(v) if collected[c] < batch => {
+                        psums.set(collected[c], c, v);
+                        collected[c] += 1;
+                    }
+                    PsumBus::I32(v) if collected[c] < batch => {
+                        psums.set(collected[c], c, v as f32);
+                        collected[c] += 1;
+                    }
+                    _ => {}
+                }
+            }
+            // Clear bottom registers so an output is not collected twice
+            // (models the accumulator BRAM latch-on-valid handshake).
+            for c in 0..dim {
+                let i = self.idx(dim - 1, c);
+                self.psum_regs[i] = PsumBus::Idle;
+            }
+        }
+
+        Ok(StreamOutcome { psums, cycles: cycle })
+    }
+
+    /// Closed-form stream cycle count (asserted equal to the measured
+    /// stepping count in tests; used by the transaction engine).
+    pub fn stream_cycles_closed_form(dim: usize, batch: usize) -> u64 {
+        // Batch row b's column-c psum is latched into the bottom register
+        // at the end of cycle b + (dim−1) + c and collected the following
+        // cycle; the last output (b = B−1, c = dim−1) is therefore
+        // collected when the cycle counter reaches B + 2·dim − 2.
+        (batch + 2 * dim - 2) as u64
+    }
+
+    /// Aggregate activity over all PEs.
+    pub fn activity(&self) -> PeActivity {
+        let mut total = PeActivity::default();
+        for pe in &self.pes {
+            total.bf16_macs += pe.activity.bf16_macs;
+            total.binary_macs += pe.activity.binary_macs;
+            total.idle_cycles += pe.activity.idle_cycles;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Xoshiro256;
+
+    /// Reference: psum block = acts (B×dim) · w (dim×dim) in bf16 MACs,
+    /// k ascending.
+    fn reference_block(acts: &Matrix, w: &Matrix) -> Matrix {
+        acts.matmul_bf16(w).unwrap()
+    }
+
+    #[test]
+    fn bf16_block_matches_reference_and_closed_form() {
+        let dim = 4;
+        let batch = 7;
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let w = Matrix::from_vec(dim, dim, rng.normal_vec(dim * dim)).unwrap();
+        let acts = Matrix::from_vec(batch, dim, rng.normal_vec(batch * dim)).unwrap();
+        let mut arr = SystolicArray::new(dim);
+        arr.set_mode(Mode::Bf16);
+        assert_eq!(arr.load_weights_bf16(&w).unwrap(), dim as u64);
+        let out = arr.stream_bf16(&acts).unwrap();
+        let expect = reference_block(&acts, &w);
+        assert_eq!(out.psums, expect, "systolic psums must be bit-exact");
+        assert_eq!(
+            out.cycles,
+            SystolicArray::stream_cycles_closed_form(dim, batch)
+        );
+    }
+
+    #[test]
+    fn full_16x16_block_bit_exact() {
+        let dim = 16;
+        let batch = 5;
+        let mut rng = Xoshiro256::seed_from_u64(2);
+        let w = Matrix::from_vec(dim, dim, rng.normal_vec(dim * dim)).unwrap();
+        let acts = Matrix::from_vec(batch, dim, rng.normal_vec(batch * dim)).unwrap();
+        let mut arr = SystolicArray::new(dim);
+        arr.load_weights_bf16(&w).unwrap();
+        let out = arr.stream_bf16(&acts).unwrap();
+        assert_eq!(out.psums, reference_block(&acts, &w));
+        assert_eq!(out.cycles, (batch + 2 * dim - 2) as u64);
+    }
+
+    #[test]
+    fn binary_block_matches_bitvector_reference() {
+        use crate::binary::BitVector;
+        let dim = 3; // 3 k-groups of 16 → K = 48
+        let batch = 4;
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        let k_total = dim * 16;
+        // Random ±1 activations and weights.
+        let acts: Vec<Vec<f32>> = (0..batch)
+            .map(|_| (0..k_total).map(|_| rng.sign()).collect())
+            .collect();
+        let weights: Vec<Vec<f32>> = (0..dim) // n (column) index — dim columns
+            .map(|_| (0..k_total).map(|_| rng.sign()).collect())
+            .collect();
+        // Pack into per-k-group 16-bit words.
+        let pack = |v: &[f32], group: usize| -> u16 {
+            let mut bits = 0u16;
+            for lane in 0..16 {
+                if v[group * 16 + lane] < 0.0 {
+                    bits |= 1 << lane;
+                }
+            }
+            bits
+        };
+        let acts_bits: Vec<Vec<u16>> = acts
+            .iter()
+            .map(|a| (0..dim).map(|g| pack(a, g)).collect())
+            .collect();
+        // w_bits[k_group][n]
+        let w_bits: Vec<Vec<u16>> = (0..dim)
+            .map(|g| (0..dim).map(|n| pack(&weights[n], g)).collect())
+            .collect();
+        let masks = vec![0xFFFFu16; dim];
+
+        let mut arr = SystolicArray::new(dim);
+        arr.set_mode(Mode::Binary);
+        arr.load_weights_binary(&w_bits, &masks).unwrap();
+        let out = arr.stream_binary(&acts_bits).unwrap();
+
+        for b in 0..batch {
+            for n in 0..dim {
+                let expect = BitVector::from_f32(&acts[b]).dot(&BitVector::from_f32(&weights[n]));
+                assert_eq!(out.psums.get(b, n), expect as f32, "b={b} n={n}");
+            }
+        }
+        assert_eq!(
+            out.cycles,
+            SystolicArray::stream_cycles_closed_form(dim, batch)
+        );
+    }
+
+    #[test]
+    fn binary_lane_mask_excludes_padding() {
+        let dim = 2;
+        // k-group 1 has only 5 valid lanes.
+        let masks = vec![0xFFFF, 0x001F];
+        let w_bits = vec![vec![0u16, 0xFFFF], vec![0u16, 0x0015]];
+        let mut arr = SystolicArray::new(dim);
+        arr.set_mode(Mode::Binary);
+        arr.load_weights_binary(&w_bits, &masks).unwrap();
+        // Single batch row: acts all +1 (bits 0).
+        let out = arr.stream_binary(&[vec![0u16, 0u16]]).unwrap();
+        // Column 0: group0 w=0: +16 agree; group1 w=0 masked 5 lanes: +5 → 21.
+        assert_eq!(out.psums.get(0, 0), 21.0);
+        // Column 1: group0 w=0xFFFF: −16; group1 w=0x0015 & 0x1F = 3 neg
+        // lanes of 5: agreements 2 − disagreements 3 = −1 → −17.
+        assert_eq!(out.psums.get(0, 1), -17.0);
+    }
+
+    #[test]
+    fn mode_mismatch_rejected() {
+        let mut arr = SystolicArray::new(2);
+        arr.set_mode(Mode::Binary);
+        assert!(arr.stream_bf16(&Matrix::zeros(1, 2)).is_err());
+        arr.set_mode(Mode::Bf16);
+        assert!(arr.stream_binary(&[vec![0, 0]]).is_err());
+    }
+
+    #[test]
+    fn activity_counts_accumulate() {
+        let dim = 2;
+        let mut arr = SystolicArray::new(dim);
+        arr.load_weights_bf16(&Matrix::zeros(dim, dim)).unwrap();
+        arr.stream_bf16(&Matrix::zeros(3, dim)).unwrap();
+        let act = arr.activity();
+        // Each of B=3 batch rows visits all 4 PEs once.
+        assert_eq!(act.bf16_macs, 12);
+        assert_eq!(act.binary_macs, 0);
+        assert!(act.idle_cycles > 0); // fill/drain bubbles
+    }
+
+    #[test]
+    fn prop_systolic_equals_reference_random_shapes() {
+        check("systolic RT == bf16 reference", 25, |g: &mut Gen| {
+            let dim = g.usize_in(1..9);
+            let batch = g.usize_in(1..12);
+            let w = Matrix::from_vec(
+                dim,
+                dim,
+                (0..dim * dim).map(|_| g.f32_in(-2.0, 2.0)).collect(),
+            )
+            .unwrap();
+            let acts = Matrix::from_vec(
+                batch,
+                dim,
+                (0..batch * dim).map(|_| g.f32_in(-2.0, 2.0)).collect(),
+            )
+            .unwrap();
+            let mut arr = SystolicArray::new(dim);
+            arr.load_weights_bf16(&w).unwrap();
+            let out = arr.stream_bf16(&acts).map_err(|e| e.to_string())?;
+            let expect = acts.matmul_bf16(&w).unwrap();
+            if out.psums == expect
+                && out.cycles == SystolicArray::stream_cycles_closed_form(dim, batch)
+            {
+                Ok(())
+            } else {
+                Err(format!(
+                    "dim={dim} batch={batch}: psums or cycles diverged (got {} cy, want {})",
+                    out.cycles,
+                    SystolicArray::stream_cycles_closed_form(dim, batch)
+                ))
+            }
+        });
+    }
+}

@@ -1,0 +1,130 @@
+//! Cycle accounting and conversion to the Table I metrics.
+
+use crate::CLOCK_HZ;
+
+/// Cycle breakdown of one accelerator run, by dataflow phase (§III-D).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TimingBreakdown {
+    /// Step 2: DMA0 staging input activations from off-chip.
+    pub input_stage: u64,
+    /// Step 3: DMA0 streaming weights from off-chip (non-overlapped part).
+    pub weight_stream: u64,
+    /// Step 4: DMA1 loading weight blocks into the array.
+    pub weight_load: u64,
+    /// Steps 6–7: activations streaming through the array (incl. skew).
+    pub compute: u64,
+    /// Step 9: DMA2 draining psums through activation/norm units
+    /// (non-overlapped part).
+    pub drain: u64,
+    /// Step 11: DMA0 writing results off-chip.
+    pub output_stage: u64,
+    /// Control FSM / AXI command overhead.
+    pub control: u64,
+}
+
+impl TimingBreakdown {
+    /// Total cycles.
+    pub fn total(&self) -> u64 {
+        self.input_stage
+            + self.weight_stream
+            + self.weight_load
+            + self.compute
+            + self.drain
+            + self.output_stage
+            + self.control
+    }
+
+    /// Elementwise sum.
+    pub fn add(&mut self, other: &TimingBreakdown) {
+        self.input_stage += other.input_stage;
+        self.weight_stream += other.weight_stream;
+        self.weight_load += other.weight_load;
+        self.compute += other.compute;
+        self.drain += other.drain;
+        self.output_stage += other.output_stage;
+        self.control += other.control;
+    }
+
+    /// Render a one-line percentage summary.
+    pub fn summary(&self) -> String {
+        let t = self.total().max(1) as f64;
+        format!(
+            "total {} cy (in {:.1}% | wstream {:.1}% | wload {:.1}% | compute {:.1}% | drain {:.1}% | out {:.1}% | ctl {:.1}%)",
+            self.total(),
+            self.input_stage as f64 / t * 100.0,
+            self.weight_stream as f64 / t * 100.0,
+            self.weight_load as f64 / t * 100.0,
+            self.compute as f64 / t * 100.0,
+            self.drain as f64 / t * 100.0,
+            self.output_stage as f64 / t * 100.0,
+            self.control as f64 / t * 100.0,
+        )
+    }
+}
+
+/// Convert cycles to seconds at `clock_hz`.
+pub fn cycles_to_seconds(cycles: u64, clock_hz: u64) -> f64 {
+    cycles as f64 / clock_hz as f64
+}
+
+/// Inferences per second for `batch` inferences taking `cycles`.
+pub fn inferences_per_sec(cycles: u64, batch: usize, clock_hz: u64) -> f64 {
+    if cycles == 0 {
+        return 0.0;
+    }
+    batch as f64 / cycles_to_seconds(cycles, clock_hz)
+}
+
+/// Energy in joules given average power over a cycle span.
+pub fn energy_joules(cycles: u64, power_watts: f64, clock_hz: u64) -> f64 {
+    cycles_to_seconds(cycles, clock_hz) * power_watts
+}
+
+/// Default-clock helper used throughout the benches.
+pub fn default_inferences_per_sec(cycles: u64, batch: usize) -> f64 {
+    inferences_per_sec(cycles, batch, CLOCK_HZ)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_and_add() {
+        let mut a = TimingBreakdown {
+            input_stage: 1,
+            weight_stream: 2,
+            weight_load: 3,
+            compute: 4,
+            drain: 5,
+            output_stage: 6,
+            control: 7,
+        };
+        assert_eq!(a.total(), 28);
+        let b = a;
+        a.add(&b);
+        assert_eq!(a.total(), 56);
+    }
+
+    #[test]
+    fn conversions() {
+        // 100 MHz, 1M cycles = 10 ms.
+        assert!((cycles_to_seconds(1_000_000, 100_000_000) - 0.01).abs() < 1e-12);
+        // 256 inferences in 1M cycles @ 100MHz → 25,600 inf/s.
+        assert!((inferences_per_sec(1_000_000, 256, 100_000_000) - 25_600.0).abs() < 1e-6);
+        // 2 W over 10 ms = 20 mJ.
+        assert!((energy_joules(1_000_000, 2.0, 100_000_000) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_renders() {
+        let t = TimingBreakdown {
+            compute: 90,
+            weight_load: 10,
+            ..Default::default()
+        };
+        let s = t.summary();
+        assert!(s.contains("total 100 cy"));
+        assert!(s.contains("compute 90.0%"));
+    }
+}

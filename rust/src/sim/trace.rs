@@ -1,0 +1,197 @@
+//! Execution tracing: a per-phase event timeline of an accelerator run,
+//! exportable as CSV (plot-ready) or a Chrome `trace_event` JSON that
+//! loads in `chrome://tracing` / Perfetto.
+//!
+//! The trace is reconstructed from a [`RunReport`]'s per-layer schedules
+//! and the §III-D phase model — the same data the timing model is built
+//! from — so it is exactly consistent with the reported cycle counts.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::accel::RunReport;
+use crate::report::JsonValue;
+
+/// One traced interval, in device cycles.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Track name ("dma0", "array", "dma2", "control").
+    pub track: &'static str,
+    /// Event label (e.g. "L1 weight_stream").
+    pub label: String,
+    /// Start cycle.
+    pub start: u64,
+    /// Duration in cycles.
+    pub dur: u64,
+}
+
+/// A whole-run trace.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    /// Events in start order.
+    pub events: Vec<TraceEvent>,
+}
+
+impl Trace {
+    /// Build the phase timeline from a run report. Phases within a layer
+    /// are laid out in §III-D order; overlapped work (hidden weight
+    /// streaming / psum drain) is shown on its own DMA track for the
+    /// *exposed* portion only, which is what the timing model charges.
+    pub fn from_run(run: &RunReport) -> Self {
+        let mut events = Vec::new();
+        let mut cursor: u64 = run.breakdown.input_stage;
+        if run.breakdown.input_stage > 0 {
+            events.push(TraceEvent {
+                track: "dma0",
+                label: "input_stage".into(),
+                start: 0,
+                dur: run.breakdown.input_stage,
+            });
+        }
+        for layer in &run.layers {
+            let t = &layer.timing;
+            let mut at = cursor;
+            for (track, label, dur) in [
+                ("control", "control", t.control),
+                ("dma0", "weight_stream", t.weight_stream),
+                ("dma1", "weight_load", t.weight_load),
+                ("array", "compute", t.compute),
+                ("dma2", "drain", t.drain),
+            ] {
+                if dur > 0 {
+                    events.push(TraceEvent {
+                        track,
+                        label: format!("L{} {label}", layer.index),
+                        start: at,
+                        dur,
+                    });
+                    at += dur;
+                }
+            }
+            cursor = at;
+        }
+        if run.breakdown.output_stage > 0 {
+            events.push(TraceEvent {
+                track: "dma0",
+                label: "output_stage".into(),
+                start: cursor,
+                dur: run.breakdown.output_stage,
+            });
+        }
+        Self { events }
+    }
+
+    /// Total traced cycles (must equal the run's total).
+    pub fn total_cycles(&self) -> u64 {
+        self.events
+            .iter()
+            .map(|e| e.start + e.dur)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// CSV rows: `track,label,start_cycle,duration_cycles`.
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("track,label,start_cycle,duration_cycles\n");
+        for e in &self.events {
+            s.push_str(&format!("{},{},{},{}\n", e.track, e.label, e.start, e.dur));
+        }
+        s
+    }
+
+    /// Chrome `trace_event` JSON (1 cycle = 1 µs so Perfetto's zoom is
+    /// usable at 100 MHz scales).
+    pub fn to_chrome_json(&self) -> JsonValue {
+        let events: Vec<JsonValue> = self
+            .events
+            .iter()
+            .map(|e| {
+                JsonValue::obj(vec![
+                    ("name", JsonValue::s(e.label.clone())),
+                    ("cat", JsonValue::s(e.track)),
+                    ("ph", JsonValue::s("X")),
+                    ("ts", JsonValue::n(e.start as f64)),
+                    ("dur", JsonValue::n(e.dur as f64)),
+                    ("pid", JsonValue::n(1.0)),
+                    (
+                        "tid",
+                        JsonValue::n(match e.track {
+                            "control" => 0.0,
+                            "dma0" => 1.0,
+                            "dma1" => 2.0,
+                            "array" => 3.0,
+                            _ => 4.0,
+                        }),
+                    ),
+                ])
+            })
+            .collect();
+        JsonValue::obj(vec![("traceEvents", JsonValue::Arr(events))])
+    }
+
+    /// Write both formats next to each other.
+    pub fn save(&self, base: &Path) -> Result<()> {
+        std::fs::write(base.with_extension("csv"), self.to_csv())?;
+        self.to_chrome_json()
+            .save(&base.with_extension("trace.json"))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bf16::Matrix;
+    use crate::nn::{Network, NetworkConfig, Precision};
+    use crate::sim::{Accelerator, AcceleratorConfig};
+
+    fn run() -> RunReport {
+        let net = Network::random(
+            &NetworkConfig {
+                sizes: vec![20, 24, 6],
+                precisions: vec![Precision::Bf16, Precision::Binary],
+            },
+            1,
+        );
+        let mut a = Accelerator::new(AcceleratorConfig::default());
+        a.run_network(&net, &Matrix::zeros(3, 20), 3).unwrap()
+    }
+
+    #[test]
+    fn trace_is_consistent_with_cycle_totals() {
+        let r = run();
+        let t = Trace::from_run(&r);
+        assert_eq!(t.total_cycles(), r.total_cycles);
+        // One event per nonzero phase per layer + staging.
+        assert!(t.events.len() >= 2 + 2 * 3);
+        // Events are non-overlapping in the serialized layout.
+        let mut sorted = t.events.clone();
+        sorted.sort_by_key(|e| e.start);
+        for pair in sorted.windows(2) {
+            assert!(pair[0].start + pair[0].dur <= pair[1].start + pair[1].dur);
+        }
+    }
+
+    #[test]
+    fn csv_and_json_render() {
+        let t = Trace::from_run(&run());
+        let csv = t.to_csv();
+        assert!(csv.starts_with("track,label,start_cycle"));
+        assert!(csv.contains("L0 compute"));
+        let json = t.to_chrome_json().to_string();
+        assert!(json.contains("traceEvents"));
+        assert!(json.contains("\"ph\":\"X\""));
+    }
+
+    #[test]
+    fn save_writes_both_files() {
+        let dir = std::env::temp_dir().join("beanna_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("run");
+        Trace::from_run(&run()).save(&base).unwrap();
+        assert!(base.with_extension("csv").exists());
+        assert!(base.with_extension("trace.json").exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,67 @@
+//! Transaction-level engine: functional layer computation in the exact
+//! hardware numerics, with cycle accounting from the closed-form schedule
+//! (verified equivalent to the RT engine by `accel` tests).
+//!
+//! The functional contract (see `bf16::Matrix::matmul_bf16_blocked`):
+//! bf16 layers accumulate k in blocks of `array_dim` (in-array column
+//! accumulation) with block sums added by the psum accumulator BRAM;
+//! binary layers produce exact integer XNOR-popcount counts.
+
+use anyhow::Result;
+
+use crate::bf16::Matrix;
+use crate::binary::BitMatrix;
+use crate::nn::{DenseLayer, Precision};
+
+/// Compute a layer's pre-epilogue partial sums in hardware numerics.
+///
+/// `k_block` is the array dimension (in-array accumulation depth for
+/// bf16 mode; irrelevant for binary mode where integer addition is
+/// associative).
+pub fn layer_psums(layer: &DenseLayer, input: &Matrix, k_block: usize) -> Result<Matrix> {
+    match layer.precision {
+        Precision::Bf16 => input.matmul_bf16_blocked_t(&layer.weights, k_block),
+        Precision::Binary => {
+            let xb = BitMatrix::from_matrix(input);
+            xb.matmul_t(layer.bits.as_ref().expect("binary layer has packed bits"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::BatchNorm;
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn bf16_psums_match_nn_reference_at_dim16() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        let w = Matrix::from_vec(8, 40, rng.normal_vec(8 * 40)).unwrap();
+        let layer = DenseLayer::bf16(w, Some(BatchNorm::identity(8)), true);
+        let x = Matrix::from_vec(3, 40, rng.normal_vec(120)).unwrap();
+        let psums = layer_psums(&layer, &x, crate::ARRAY_DIM).unwrap();
+        // nn's forward = psums + epilogue; recompute epilogue here.
+        let mut expect = psums.clone();
+        for r in 0..expect.rows {
+            for c in 0..expect.cols {
+                let v = layer.epilogue(c, expect.get(r, c));
+                expect.set(r, c, v);
+            }
+        }
+        assert_eq!(layer.forward(&x).unwrap(), expect);
+    }
+
+    #[test]
+    fn binary_psums_are_exact_counts() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        let w = Matrix::from_vec(6, 33, (0..198).map(|_| rng.sign()).collect()).unwrap();
+        let layer = DenseLayer::binary(&w, None, false);
+        let x = Matrix::from_vec(2, 33, (0..66).map(|_| rng.sign()).collect()).unwrap();
+        let psums = layer_psums(&layer, &x, 16).unwrap();
+        for v in &psums.data {
+            assert_eq!(v.fract(), 0.0);
+            assert!(v.abs() <= 33.0);
+        }
+    }
+}

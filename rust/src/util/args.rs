@@ -1,0 +1,263 @@
+//! Minimal declarative CLI argument parser (the vendored crate set has no
+//! `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! typed accessors with defaults, and auto-generated `--help` text.
+//!
+//! ```
+//! use beanna::util::args::ArgSpec;
+//! let spec = ArgSpec::new("demo", "demo tool")
+//!     .flag("verbose", "print more")
+//!     .opt("batch", "256", "batch size");
+//! let parsed = spec
+//!     .parse_from(vec!["--batch".into(), "64".into(), "--verbose".into()])
+//!     .unwrap();
+//! assert!(parsed.flag("verbose"));
+//! assert_eq!(parsed.get_usize("batch").unwrap(), 64);
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Decl {
+    name: String,
+    default: Option<String>,
+    help: String,
+    is_flag: bool,
+}
+
+/// Declarative specification of a command's arguments.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    command: String,
+    about: String,
+    decls: Vec<Decl>,
+}
+
+impl ArgSpec {
+    /// New spec for `command` with a one-line description.
+    pub fn new(command: &str, about: &str) -> Self {
+        Self {
+            command: command.to_string(),
+            about: about.to_string(),
+            decls: Vec::new(),
+        }
+    }
+
+    /// Declare a boolean `--name` flag (default false).
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.decls.push(Decl {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Declare a `--name <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.decls.push(Decl {
+            name: name.to_string(),
+            default: Some(default.to_string()),
+            help: help.to_string(),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Declare a required `--name <value>` option (no default).
+    pub fn req(mut self, name: &str, help: &str) -> Self {
+        self.decls.push(Decl {
+            name: name.to_string(),
+            default: None,
+            help: help.to_string(),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Render `--help` text.
+    pub fn help_text(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.command, self.about);
+        for d in &self.decls {
+            let left = if d.is_flag {
+                format!("  --{}", d.name)
+            } else if let Some(def) = &d.default {
+                format!("  --{} <v> (default {})", d.name, def)
+            } else {
+                format!("  --{} <v> (required)", d.name)
+            };
+            s.push_str(&format!("{left:<40} {}\n", d.help));
+        }
+        s
+    }
+
+    /// Parse a token list (not including argv[0]).
+    pub fn parse_from(&self, tokens: Vec<String>) -> Result<Parsed> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut flags: BTreeMap<String, bool> = BTreeMap::new();
+        let mut positional = Vec::new();
+        for d in &self.decls {
+            if d.is_flag {
+                flags.insert(d.name.clone(), false);
+            } else if let Some(def) = &d.default {
+                values.insert(d.name.clone(), def.clone());
+            }
+        }
+
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if tok == "--help" || tok == "-h" {
+                bail!("{}", self.help_text());
+            }
+            if let Some(stripped) = tok.strip_prefix("--") {
+                let (name, inline_val) = match stripped.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let decl = self
+                    .decls
+                    .iter()
+                    .find(|d| d.name == name)
+                    .ok_or_else(|| anyhow!("unknown option --{name}\n{}", self.help_text()))?;
+                if decl.is_flag {
+                    if inline_val.is_some() {
+                        bail!("flag --{name} takes no value");
+                    }
+                    flags.insert(name, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("option --{name} needs a value"))?,
+                    };
+                    values.insert(name, val);
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+
+        // Required options must be present.
+        for d in &self.decls {
+            if !d.is_flag && d.default.is_none() && !values.contains_key(&d.name) {
+                bail!("missing required option --{}\n{}", d.name, self.help_text());
+            }
+        }
+
+        Ok(Parsed {
+            values,
+            flags,
+            positional,
+        })
+    }
+}
+
+/// Parsed argument values with typed accessors.
+#[derive(Debug, Clone)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    /// Positional (non-option) arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    /// Flag value (false when undeclared).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    /// Raw string value.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Value parsed as usize.
+    pub fn get_usize(&self, name: &str) -> Result<usize> {
+        self.values
+            .get(name)
+            .ok_or_else(|| anyhow!("option --{name} not set"))?
+            .parse()
+            .with_context(|| format!("--{name} must be an unsigned integer"))
+    }
+
+    /// Value parsed as u64.
+    pub fn get_u64(&self, name: &str) -> Result<u64> {
+        self.values
+            .get(name)
+            .ok_or_else(|| anyhow!("option --{name} not set"))?
+            .parse()
+            .with_context(|| format!("--{name} must be an unsigned integer"))
+    }
+
+    /// Value parsed as f64.
+    pub fn get_f64(&self, name: &str) -> Result<f64> {
+        self.values
+            .get(name)
+            .ok_or_else(|| anyhow!("option --{name} not set"))?
+            .parse()
+            .with_context(|| format!("--{name} must be a number"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("t", "test")
+            .flag("verbose", "v")
+            .opt("batch", "256", "b")
+            .req("model", "m")
+    }
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_defaults_and_required() {
+        let p = spec().parse_from(v(&["--model", "hybrid"])).unwrap();
+        assert_eq!(p.get_usize("batch").unwrap(), 256);
+        assert_eq!(p.get("model"), Some("hybrid"));
+        assert!(!p.flag("verbose"));
+    }
+
+    #[test]
+    fn parses_equals_form_and_flags() {
+        let p = spec()
+            .parse_from(v(&["--batch=32", "--verbose", "--model=fp", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get_usize("batch").unwrap(), 32);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.positional, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn rejects_unknown_and_missing() {
+        assert!(spec().parse_from(v(&["--nope", "--model", "x"])).is_err());
+        assert!(spec().parse_from(v(&[])).is_err()); // model required
+        assert!(spec().parse_from(v(&["--model"])).is_err()); // needs value
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(spec()
+            .parse_from(v(&["--verbose=yes", "--model", "x"]))
+            .is_err());
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = spec().help_text();
+        assert!(h.contains("--batch"));
+        assert!(h.contains("--model"));
+        assert!(h.contains("required"));
+    }
+}

@@ -1,0 +1,218 @@
+//! Criterion-style micro/macro-benchmark harness (the vendored crate set
+//! has no `criterion`; `cargo bench` targets use this with
+//! `harness = false`).
+//!
+//! Measurement protocol, modeled on criterion's:
+//! 1. **Warmup** — run the closure repeatedly for `warmup` wall time.
+//! 2. **Calibration** — choose an inner iteration count so one sample
+//!    takes ≈ `target_sample_time`.
+//! 3. **Sampling** — collect `samples` timed samples, each of the inner
+//!    iteration count, and report robust statistics per iteration.
+//!
+//! Results are printed in a fixed-width table and optionally appended to a
+//! CSV file for the EXPERIMENTS.md logs.
+
+use std::hint::black_box;
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Re-export so bench targets only import from this module.
+pub use std::hint::black_box as bb;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    /// Wall-clock warmup budget.
+    pub warmup: Duration,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Target duration of one sample (inner loop auto-sized to hit this).
+    pub target_sample_time: Duration,
+    /// Optional CSV path to append `name,mean_ns,median_ns,p05,p95,n`.
+    pub csv_path: Option<String>,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Modest defaults: end-to-end simulator benches are heavyweight.
+        Self {
+            warmup: Duration::from_millis(300),
+            samples: 12,
+            target_sample_time: Duration::from_millis(120),
+            csv_path: None,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Fast settings for CI/self-test runs.
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            samples: 5,
+            target_sample_time: Duration::from_millis(30),
+            csv_path: None,
+        }
+    }
+}
+
+/// One benchmark's result, in nanoseconds per iteration.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Per-iteration timing statistics (ns).
+    pub ns: Summary,
+    /// Inner iterations per sample used.
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    /// Mean throughput in iterations/second.
+    pub fn iters_per_sec(&self) -> f64 {
+        1e9 / self.ns.mean
+    }
+}
+
+/// The harness. Create one per bench binary, call [`Harness::bench`]
+/// repeatedly, then [`Harness::finish`].
+pub struct Harness {
+    config: BenchConfig,
+    results: Vec<BenchResult>,
+}
+
+impl Harness {
+    /// New harness. Honors `BEANNA_BENCH_QUICK=1` for CI-speed runs.
+    pub fn new(mut config: BenchConfig) -> Self {
+        if std::env::var("BEANNA_BENCH_QUICK").as_deref() == Ok("1") {
+            let csv = config.csv_path.take();
+            config = BenchConfig::quick();
+            config.csv_path = csv;
+        }
+        Self {
+            config,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run one benchmark: `f` is the measured closure; its return value is
+    /// black-boxed so the optimizer cannot elide the work.
+    pub fn bench<T, F: FnMut() -> T>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + crude single-iteration estimate.
+        let warmup_start = Instant::now();
+        let mut warmup_iters: u64 = 0;
+        while warmup_start.elapsed() < self.config.warmup {
+            black_box(f());
+            warmup_iters += 1;
+        }
+        let est_ns = (warmup_start.elapsed().as_nanos() as f64 / warmup_iters as f64).max(1.0);
+
+        // Size the inner loop for the target sample time.
+        let iters =
+            ((self.config.target_sample_time.as_nanos() as f64 / est_ns).ceil() as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                black_box(f());
+            }
+            samples_ns.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+
+        let result = BenchResult {
+            name: name.to_string(),
+            ns: Summary::of(&samples_ns),
+            iters_per_sample: iters,
+        };
+        self.report_line(&result);
+        self.results.push(result.clone());
+        result
+    }
+
+    fn report_line(&self, r: &BenchResult) {
+        println!(
+            "{:<44} {:>14} {:>14} {:>14}  (cv {:>5.1}%, {} iters/sample)",
+            r.name,
+            fmt_ns(r.ns.mean),
+            fmt_ns(r.ns.median),
+            fmt_ns(r.ns.p95),
+            r.ns.cv() * 100.0,
+            r.iters_per_sample,
+        );
+        if let Some(path) = &self.config.csv_path {
+            if let Ok(mut fh) = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+            {
+                let _ = writeln!(
+                    fh,
+                    "{},{:.1},{:.1},{:.1},{:.1},{}",
+                    r.name, r.ns.mean, r.ns.median, r.ns.p05, r.ns.p95, r.ns.n
+                );
+            }
+        }
+    }
+
+    /// Print the header line for the results table.
+    pub fn header(title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>14} {:>14} {:>14}",
+            "benchmark", "mean", "median", "p95"
+        );
+    }
+
+    /// Consume the harness, returning all results.
+    pub fn finish(self) -> Vec<BenchResult> {
+        self.results
+    }
+}
+
+/// Human-format nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut h = Harness::new(BenchConfig {
+            warmup: Duration::from_millis(5),
+            samples: 3,
+            target_sample_time: Duration::from_millis(2),
+            csv_path: None,
+        });
+        let r = h.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..100 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.ns.mean > 0.0);
+        assert_eq!(h.finish().len(), 1);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2e9).contains(" s"));
+    }
+}

@@ -1,0 +1,19 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment vendors only a minimal crate set (no `rand`,
+//! `clap`, `criterion`, `proptest`, or `serde`), so this module provides
+//! small, well-tested in-tree replacements:
+//!
+//! * [`rng`] — SplitMix64 / xoshiro256** PRNGs with normal/uniform helpers.
+//! * [`args`] — a tiny declarative CLI argument parser.
+//! * [`bench`] — a criterion-style measurement harness (warmup, iters,
+//!   robust statistics).
+//! * [`prop`] — a miniature property-based testing framework with
+//!   shrinking-free counterexample reporting.
+//! * [`stats`] — summary statistics shared by `bench` and the reports.
+
+pub mod args;
+pub mod bench;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,160 @@
+//! Miniature property-based testing framework (the vendored crate set has
+//! no `proptest`/`quickcheck`).
+//!
+//! A property is a closure from a [`Gen`] (seeded random source with shape
+//! helpers) to `Result<(), String>`. [`check`] runs it over many seeds and
+//! reports the first failing seed + message, so failures are reproducible
+//! by construction:
+//!
+//! ```
+//! use beanna::util::prop::{check, Gen};
+//! check("reverse twice is identity", 200, |g: &mut Gen| {
+//!     let xs = g.vec_f32(0..64, -10.0, 10.0);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     if xs == ys { Ok(()) } else { Err(format!("mismatch: {xs:?}")) }
+//! });
+//! ```
+
+use std::ops::Range;
+
+use super::rng::Xoshiro256;
+
+/// Random value source handed to properties; wraps the PRNG with
+/// shape-generation helpers tuned for this crate's domains.
+pub struct Gen {
+    rng: Xoshiro256,
+    /// The seed of this case (printed on failure).
+    pub seed: u64,
+}
+
+impl Gen {
+    /// New generator for a given case seed.
+    pub fn new(seed: u64) -> Self {
+        Self {
+            rng: Xoshiro256::seed_from_u64(seed),
+            seed,
+        }
+    }
+
+    /// Direct access to the underlying PRNG.
+    pub fn rng(&mut self) -> &mut Xoshiro256 {
+        &mut self.rng
+    }
+
+    /// usize in `range` (half-open).
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        assert!(range.end > range.start);
+        range.start + self.rng.below(range.end - range.start)
+    }
+
+    /// f32 uniform in `[lo, hi)`.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Random bool.
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Vector of f32 with random length in `len` and values in `[lo, hi)`.
+    pub fn vec_f32(&mut self, len: Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.rng.uniform(lo, hi)).collect()
+    }
+
+    /// Vector of ±1.0 signs of length `n`.
+    pub fn signs(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.sign()).collect()
+    }
+
+    /// A "nasty" f32: mixes ordinary values with zeros, subnormal-ish,
+    /// huge, and exact-power-of-two values to probe rounding edges.
+    /// (Never NaN/Inf — the hardware datapath flushes those upstream.)
+    pub fn nasty_f32(&mut self) -> f32 {
+        match self.rng.below(8) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => self.rng.uniform(-1e-30, 1e-30),
+            3 => self.rng.uniform(-3e30, 3e30),
+            4 => (2.0f32).powi(self.rng.below(60) as i32 - 30),
+            5 => -(2.0f32).powi(self.rng.below(60) as i32 - 30),
+            _ => self.rng.uniform(-100.0, 100.0),
+        }
+    }
+
+    /// Matrix dims (rows, cols) bounded for fast property runs.
+    pub fn dims(&mut self, max: usize) -> (usize, usize) {
+        (self.usize_in(1..max + 1), self.usize_in(1..max + 1))
+    }
+}
+
+/// Run `cases` random cases of `property`. Panics with the failing seed
+/// and message on the first failure. Base seed can be pinned via
+/// `BEANNA_PROP_SEED` for replaying a failure.
+pub fn check<F>(name: &str, cases: u64, mut property: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base: u64 = std::env::var("BEANNA_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xBEA77A);
+    for i in 0..cases {
+        let seed = base.wrapping_add(i).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut gen = Gen::new(seed);
+        if let Err(msg) = property(&mut gen) {
+            panic!(
+                "property '{name}' failed on case {i} (seed {seed:#x}):\n  {msg}\n\
+                 replay with BEANNA_PROP_SEED={base} (case index {i})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum commutative", 100, |g| {
+            let a = g.f32_in(-5.0, 5.0);
+            let b = g.f32_in(-5.0, 5.0);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("f32 add not commutative?!".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1);
+        for _ in 0..1000 {
+            let k = g.usize_in(3..9);
+            assert!((3..9).contains(&k));
+            let x = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&x));
+            let (r, c) = g.dims(20);
+            assert!(r >= 1 && r <= 20 && c >= 1 && c <= 20);
+        }
+    }
+
+    #[test]
+    fn signs_are_pm_one() {
+        let mut g = Gen::new(2);
+        let v = g.signs(256);
+        assert!(v.iter().all(|&x| x == 1.0 || x == -1.0));
+        assert!(v.iter().any(|&x| x == 1.0) && v.iter().any(|&x| x == -1.0));
+    }
+}

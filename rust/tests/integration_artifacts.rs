@@ -1,0 +1,147 @@
+//! Integration over the build-time artifacts: trained weights, the
+//! shared dataset, Fig. 2 curves, and the PJRT runtime executing the
+//! AOT-compiled JAX/Pallas graphs.
+//!
+//! These tests require `make artifacts`; without it they fail with the
+//! standard "run make artifacts" hint (`make test` runs artifacts
+//! first, so CI always has them).
+
+use beanna::bf16::Matrix;
+use beanna::data::SynthMnist;
+use beanna::experiments;
+use beanna::io::ArtifactPaths;
+use beanna::nn::{accuracy, Network};
+use beanna::runtime::ModelRegistry;
+
+fn paths() -> ArtifactPaths {
+    ArtifactPaths::discover()
+}
+
+fn artifacts_present() -> bool {
+    paths().weights("hybrid").exists() && paths().dataset().exists()
+}
+
+/// Trained weights load and hit high accuracy on the shared test set,
+/// with the fp–hybrid gap small (the paper's 0.23% claim shape).
+#[test]
+fn trained_networks_accuracy_and_gap() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let p = paths();
+    let test = SynthMnist::load(&p.dataset()).unwrap();
+    let subset = test.take(768);
+    let fp = Network::load(&p.weights("fp")).unwrap();
+    let hy = Network::load(&p.weights("hybrid")).unwrap();
+    let fp_acc = accuracy(&fp.forward(subset.images_f32()).unwrap(), &subset.labels);
+    let hy_acc = accuracy(&hy.forward(subset.images_f32()).unwrap(), &subset.labels);
+    assert!(fp_acc > 0.95, "fp accuracy {fp_acc}");
+    assert!(hy_acc > 0.95, "hybrid accuracy {hy_acc}");
+    assert!(
+        (fp_acc - hy_acc).abs() < 0.02,
+        "accuracy gap {:.3} too large",
+        fp_acc - hy_acc
+    );
+    // Hybrid really is binary inside.
+    assert!(hy.layers[1].bits.is_some() && hy.layers[2].bits.is_some());
+    // Table II memory contract on the loaded networks.
+    assert_eq!(fp.weight_bytes(), 5_820_416);
+    assert_eq!(hy.weight_bytes(), 1_888_256);
+}
+
+/// The PJRT runtime (AOT HLO with Pallas kernels) agrees with the rust
+/// reference model on logits.
+#[test]
+fn pjrt_matches_reference_model() {
+    if !artifacts_present() || !paths().hlo("hybrid", 16).exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let p = paths();
+    let test = SynthMnist::load(&p.dataset()).unwrap();
+    let mut registry = ModelRegistry::new(p.clone()).unwrap();
+    for variant in ["hybrid", "fp"] {
+        if !p.hlo(variant, 16).exists() {
+            continue;
+        }
+        let net = Network::load(&p.weights(variant)).unwrap();
+        let exe = registry.get(variant, 16).unwrap();
+        let mut images = Matrix::zeros(16, 784);
+        for i in 0..16 {
+            images.row_mut(i).copy_from_slice(test.images.row(i));
+        }
+        let pjrt = exe.run(&images).unwrap();
+        let reference = net.forward(&images).unwrap();
+        assert_eq!((pjrt.rows, pjrt.cols), (16, 10));
+        let diff = pjrt.max_abs_diff(&reference);
+        // bf16-datapath tolerance; in practice this is ~0 (bit-exact).
+        assert!(diff < 0.05, "{variant}: PJRT vs reference |Δ|max = {diff}");
+        for r in 0..16 {
+            assert_eq!(
+                beanna::nn::argmax(pjrt.row(r)),
+                beanna::nn::argmax(reference.row(r)),
+                "{variant}: prediction mismatch on row {r}"
+            );
+        }
+    }
+}
+
+/// The simulator's functional output matches the reference on real
+/// trained weights and real data (not just random nets).
+#[test]
+fn simulator_bit_exact_on_trained_weights() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let p = paths();
+    let test = SynthMnist::load(&p.dataset()).unwrap();
+    let net = Network::load(&p.weights("hybrid")).unwrap();
+    let mut images = Matrix::zeros(8, 784);
+    for i in 0..8 {
+        images.row_mut(i).copy_from_slice(test.images.row(i));
+    }
+    let mut accel =
+        beanna::sim::Accelerator::new(beanna::sim::AcceleratorConfig::default());
+    let run = accel.run_network(&net, &images, 8).unwrap();
+    assert_eq!(run.outputs, net.forward(&images).unwrap());
+}
+
+/// Fig. 2 curves parse and show the paper's shape: fast early progress,
+/// plateau, small final gap.
+#[test]
+fn fig2_curves_have_paper_shape() {
+    if !paths().fig2_csv("fp").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (_, curves) = experiments::fig2_summary(&paths()).unwrap();
+    for c in &curves {
+        assert!(c.points.len() >= 5, "{}: too few epochs", c.variant);
+        let final_acc = c.final_test_acc();
+        assert!(final_acc > 0.95, "{}: final acc {final_acc}", c.variant);
+        // Plateau before the end (the paper sees it around half-way).
+        assert!(c.plateau_epoch() as usize <= c.points.len());
+    }
+    let gap = curves[0].final_test_acc() - curves[1].final_test_acc();
+    assert!(gap.abs() < 0.02, "fp-hybrid gap {gap}");
+}
+
+/// Full Table I against the paper's bands, with trained accuracy rows.
+#[test]
+fn table1_reproduces_paper_bands() {
+    if !artifacts_present() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let (_, rows) = experiments::table1(&paths(), 512).unwrap();
+    let (fp, hy) = (&rows[0], &rows[1]);
+    assert!(fp.accuracy.unwrap() > 0.95);
+    assert!(hy.accuracy.unwrap() > 0.95);
+    // ±10% of the paper's throughputs, ~3× speedups.
+    assert!((fp.ips_b1 - 138.42).abs() / 138.42 < 0.10);
+    assert!((hy.ips_b256 - 20337.6).abs() / 20337.6 < 0.10);
+    let speedup = hy.ips_b256 / fp.ips_b256;
+    assert!((2.5..3.6).contains(&speedup));
+}

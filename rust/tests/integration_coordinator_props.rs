@@ -1,0 +1,176 @@
+//! Property-based tests on coordinator invariants (routing, batching,
+//! state), using the in-tree `util::prop` framework.
+
+use std::sync::mpsc::channel;
+use std::time::{Duration, Instant};
+
+use beanna::coordinator::batcher::BatchPolicy;
+use beanna::coordinator::request::InferenceRequest;
+use beanna::coordinator::{Backend, RoutePolicy, Router, Server, ServerConfig};
+use beanna::nn::{Network, NetworkConfig, Precision};
+use beanna::util::prop::{check, Gen};
+
+fn req(id: u64) -> InferenceRequest {
+    let (tx, rx) = channel();
+    std::mem::forget(rx);
+    InferenceRequest {
+        id,
+        image: vec![],
+        resp_tx: tx,
+        enqueued_at: Instant::now(),
+    }
+}
+
+fn tiny_net(seed: u64) -> Network {
+    Network::random(
+        &NetworkConfig {
+            sizes: vec![784, 16, 10],
+            precisions: vec![Precision::Bf16, Precision::Bf16],
+        },
+        seed,
+    )
+}
+
+/// Batching invariants: every request appears in exactly one batch, in
+/// FIFO order, and no batch exceeds max_batch.
+#[test]
+fn prop_batcher_partitions_fifo() {
+    check("batcher partitions the queue FIFO", 50, |g: &mut Gen| {
+        let n = g.usize_in(1..60);
+        let max_batch = g.usize_in(1..10);
+        let (tx, rx) = channel();
+        for i in 0..n as u64 {
+            tx.send(req(i)).unwrap();
+        }
+        drop(tx);
+        let policy = BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(1),
+        };
+        let mut seen = Vec::new();
+        while let Some(batch) = policy.next_batch(&rx) {
+            if batch.len() > max_batch {
+                return Err(format!(
+                    "batch of {} exceeds max {max_batch}",
+                    batch.len()
+                ));
+            }
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        let expect: Vec<u64> = (0..n as u64).collect();
+        if seen == expect {
+            Ok(())
+        } else {
+            Err(format!("order/partition broken: {seen:?}"))
+        }
+    });
+}
+
+/// Server invariant: N submissions → exactly N responses, each echoing
+/// its request id, regardless of batch policy.
+#[test]
+fn prop_server_conserves_requests() {
+    let net = tiny_net(1);
+    check("server answers every id exactly once", 8, |g: &mut Gen| {
+        let n = g.usize_in(1..40);
+        let max_batch = g.usize_in(1..16);
+        let server = Server::start(
+            Backend::Reference { net: net.clone() },
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_millis(g.usize_in(0..3) as u64),
+                },
+            },
+        );
+        let rxs: Vec<_> = (0..n)
+            .map(|_| server.submit(vec![0.5; 784]).unwrap())
+            .collect();
+        let mut ids: Vec<u64> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().id)
+            .collect();
+        ids.sort();
+        let metrics = server.shutdown();
+        if ids != (0..n as u64).collect::<Vec<_>>() {
+            return Err(format!("ids wrong: {ids:?}"));
+        }
+        if metrics.requests != n as u64 {
+            return Err(format!(
+                "metrics counted {} of {n}",
+                metrics.requests
+            ));
+        }
+        Ok(())
+    });
+}
+
+/// Router invariant: every submission lands on exactly one worker; the
+/// per-worker served totals sum to the submission count; round-robin
+/// differs from a single hot worker by at most 1.
+#[test]
+fn prop_router_conserves_and_balances() {
+    let net = tiny_net(2);
+    check("router conserves requests", 6, |g: &mut Gen| {
+        let workers = g.usize_in(1..5);
+        let n = g.usize_in(1..50);
+        let policy = if g.bool() {
+            RoutePolicy::RoundRobin
+        } else {
+            RoutePolicy::LeastOutstanding
+        };
+        let router = Router::start(
+            (0..workers)
+                .map(|_| Backend::Reference { net: net.clone() })
+                .collect(),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: Duration::from_millis(1),
+                },
+            },
+            policy,
+        )
+        .unwrap();
+        let rxs: Vec<_> = (0..n)
+            .map(|_| router.submit(vec![0.25; 784]).unwrap())
+            .collect();
+        let mut per_worker = vec![0u64; workers];
+        for (i, rx) in rxs {
+            per_worker[i] += 1;
+            rx.recv().map_err(|e| e.to_string())?;
+        }
+        let metrics = router.shutdown();
+        let served: u64 = metrics.iter().map(|m| m.requests).sum();
+        if served != n as u64 {
+            return Err(format!("served {served} of {n}"));
+        }
+        if policy == RoutePolicy::RoundRobin {
+            let max = *per_worker.iter().max().unwrap();
+            let min = *per_worker.iter().min().unwrap();
+            if max - min > 1 {
+                return Err(format!("round-robin imbalance: {per_worker:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// State invariant: a server survives a failing backend (bad input
+/// width) and keeps serving subsequent well-formed requests.
+#[test]
+fn server_recovers_from_backend_errors() {
+    let server = Server::start(
+        Backend::Reference { net: tiny_net(3) },
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+        },
+    );
+    // Malformed request (wrong width) → backend error → error response.
+    let bad = server.infer(vec![0.1; 10]);
+    assert!(bad.is_err(), "malformed request must fail");
+    // The worker thread must still be alive and serving.
+    let good = server.infer(vec![0.1; 784]).unwrap();
+    assert_eq!(good.logits.len(), 10);
+    server.shutdown();
+}

@@ -1,0 +1,140 @@
+//! Integration: the coordinator serving stack end-to-end over every
+//! backend kind (simulator + reference here; PJRT covered in
+//! integration_artifacts.rs to keep this file artifact-free).
+
+use std::time::Duration;
+
+use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::data::SynthMnist;
+use beanna::nn::{Network, NetworkConfig, Precision};
+
+fn small_net() -> Network {
+    Network::random(
+        &NetworkConfig {
+            sizes: vec![784, 64, 64, 10],
+            precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+        },
+        5,
+    )
+}
+
+/// Server over the simulator backend: responses carry device cycles and
+/// predictions equal the reference model's.
+#[test]
+fn simulator_backend_serves_with_cycles() {
+    let net = small_net();
+    let data = SynthMnist::generate(12, 8);
+    let direct = net.predict(data.images_f32()).unwrap();
+    let server = Server::start(
+        Backend::simulator(net),
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(20),
+            },
+        },
+    );
+    let rxs: Vec<_> = (0..data.len())
+        .map(|i| server.submit(data.images.row(i).to_vec()).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.prediction, direct[i], "request {i}");
+        assert!(resp.sim_cycles.unwrap() > 0);
+        assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+    }
+    let m = server.shutdown();
+    assert_eq!(m.requests, 12);
+    assert!(m.sim_cycles > 0);
+}
+
+/// Batching improves simulated device throughput: serving N requests in
+/// one batch costs far fewer device cycles than N singleton batches
+/// (the paper's batch-1 vs batch-256 point, at serving level).
+#[test]
+fn batching_reduces_device_cycles() {
+    let net = small_net();
+    let data = SynthMnist::generate(16, 9);
+    let run = |max_batch: usize| -> u64 {
+        let server = Server::start(
+            Backend::simulator(net.clone()),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_millis(50),
+                },
+            },
+        );
+        let rxs: Vec<_> = (0..data.len())
+            .map(|i| server.submit(data.images.row(i).to_vec()).unwrap())
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        server.shutdown().sim_cycles
+    };
+    let unbatched = run(1);
+    let batched = run(16);
+    assert!(
+        batched * 3 < unbatched,
+        "batched {batched} cycles vs unbatched {unbatched}"
+    );
+}
+
+/// Many concurrent submitters: all requests answered exactly once, no
+/// deadlocks, metrics consistent.
+#[test]
+fn concurrent_clients_all_served() {
+    let server = std::sync::Arc::new(Server::start(
+        Backend::Reference { net: small_net() },
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 32,
+                max_wait: Duration::from_millis(2),
+            },
+        },
+    ));
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let server = std::sync::Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..25 {
+                let resp = server.infer(vec![(t * i) as f32 % 1.0; 784]).unwrap();
+                assert_eq!(resp.logits.len(), 10);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let m = std::sync::Arc::try_unwrap(server)
+        .ok()
+        .expect("all clients done")
+        .shutdown();
+    assert_eq!(m.requests, 200);
+    assert!(m.batches <= 200);
+    assert!(m.mean_batch >= 1.0);
+}
+
+/// Queue latency respects the deadline policy under light load.
+#[test]
+fn deadline_bounds_queue_latency() {
+    let server = Server::start(
+        Backend::Reference { net: small_net() },
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 1024, // never fills
+                max_wait: Duration::from_millis(5),
+            },
+        },
+    );
+    let resp = server.infer(vec![0.1; 784]).unwrap();
+    // One request alone must be released by the deadline, not held
+    // indefinitely: generous bound for CI jitter.
+    assert!(
+        resp.queue_us < 500_000,
+        "queue latency {}µs way over deadline",
+        resp.queue_us
+    );
+    server.shutdown();
+}

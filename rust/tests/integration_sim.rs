@@ -1,0 +1,136 @@
+//! Integration: simulator engines × reference model on paper-shaped
+//! networks (no artifacts required).
+
+use beanna::bf16::Matrix;
+use beanna::nn::{Network, NetworkConfig, Precision};
+use beanna::sim::{Accelerator, AcceleratorConfig, Engine};
+use beanna::util::rng::Xoshiro256;
+
+fn inputs(batch: usize, width: usize, seed: u64) -> Matrix {
+    Matrix::from_vec(
+        batch,
+        width,
+        Xoshiro256::seed_from_u64(seed)
+            .normal_vec(batch * width)
+            .into_iter()
+            .map(|x| (x.abs() % 1.0)) // pixel-like range
+            .collect(),
+    )
+    .unwrap()
+}
+
+/// Every engine and the functional model agree bit-exactly, across a
+/// grid of topologies that exercise partial blocks in both dims and both
+/// precisions.
+#[test]
+fn engines_and_reference_agree_across_topologies() {
+    let topologies: Vec<NetworkConfig> = vec![
+        NetworkConfig {
+            sizes: vec![784, 32, 10],
+            precisions: vec![Precision::Bf16, Precision::Bf16],
+        },
+        NetworkConfig {
+            sizes: vec![784, 64, 64, 10],
+            precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+        },
+        NetworkConfig {
+            // Awkward sizes: partial n-blocks and partial binary k-groups.
+            sizes: vec![50, 70, 70, 7],
+            precisions: vec![Precision::Bf16, Precision::Binary, Precision::Binary],
+        },
+        NetworkConfig {
+            sizes: vec![30, 17, 5],
+            precisions: vec![Precision::Binary, Precision::Binary],
+        },
+    ];
+    for (i, cfg) in topologies.iter().enumerate() {
+        let net = Network::random(cfg, 100 + i as u64);
+        let x = inputs(5, cfg.sizes[0], i as u64);
+        let expect = net.forward(&x).unwrap();
+        let mut xact = Accelerator::new(AcceleratorConfig::default());
+        let mut rt = Accelerator::new(AcceleratorConfig::cycle_exact());
+        let rx = xact.run_network(&net, &x, 5).unwrap();
+        let rr = rt.run_network(&net, &x, 5).unwrap();
+        assert_eq!(rx.outputs, expect, "xact vs reference, topology {i}");
+        assert_eq!(rr.outputs, expect, "RT vs reference, topology {i}");
+        assert_eq!(
+            rx.total_cycles, rr.total_cycles,
+            "cycle models diverged, topology {i}"
+        );
+        assert_eq!(rx.breakdown, rr.breakdown, "phase split, topology {i}");
+    }
+}
+
+/// The paper's headline Table I shape: ~3× hybrid speedup at both batch
+/// sizes, and binary layers dominate the saving.
+#[test]
+fn paper_speedup_shape_holds() {
+    let fp = Network::random(&NetworkConfig::beanna_fp(), 1);
+    let hy = Network::random(&NetworkConfig::beanna_hybrid(), 1);
+    for batch in [1usize, 256] {
+        let x = Matrix::zeros(batch, 784);
+        let mut a = Accelerator::new(AcceleratorConfig::default());
+        let mut b = Accelerator::new(AcceleratorConfig::default());
+        let fp_cycles = a.run_network(&fp, &x, batch).unwrap().total_cycles;
+        let hy_cycles = b.run_network(&hy, &x, batch).unwrap().total_cycles;
+        let speedup = fp_cycles as f64 / hy_cycles as f64;
+        assert!(
+            (2.5..3.6).contains(&speedup),
+            "batch {batch}: speedup {speedup:.2} out of the paper's band"
+        );
+    }
+}
+
+/// Batch-1 runs are weight-streaming bound; batch-256 runs are compute
+/// bound (the §IV analysis).
+#[test]
+fn bottleneck_shifts_with_batch() {
+    let net = Network::random(&NetworkConfig::beanna_fp(), 2);
+    let mut accel = Accelerator::new(AcceleratorConfig::default());
+    let b1 = accel.run_network(&net, &Matrix::zeros(1, 784), 1).unwrap();
+    let b256 = accel
+        .run_network(&net, &Matrix::zeros(256, 784), 256)
+        .unwrap();
+    // Batch 1: exposed weight streaming is a major fraction.
+    assert!(b1.breakdown.weight_stream * 4 > b1.breakdown.compute);
+    // Batch 256: compute dominates everything else combined.
+    let other = b256.total_cycles - b256.breakdown.compute;
+    assert!(b256.breakdown.compute > 4 * other);
+}
+
+/// Determinism: identical runs produce identical reports.
+#[test]
+fn simulator_is_deterministic() {
+    let net = Network::random(&NetworkConfig::beanna_hybrid(), 3);
+    let x = inputs(3, 784, 9);
+    let run = |_: ()| {
+        let mut a = Accelerator::new(AcceleratorConfig::default());
+        a.run_network(&net, &x, 3).unwrap()
+    };
+    let (r1, r2) = (run(()), run(()));
+    assert_eq!(r1.outputs, r2.outputs);
+    assert_eq!(r1.total_cycles, r2.total_cycles);
+    assert_eq!(r1.activity, r2.activity);
+}
+
+/// Sub-16 batch with every engine (systolic fill/drain edge cases).
+#[test]
+fn tiny_batches_bit_exact() {
+    let cfg = NetworkConfig {
+        sizes: vec![20, 24, 6],
+        precisions: vec![Precision::Bf16, Precision::Binary],
+    };
+    let net = Network::random(&cfg, 4);
+    for batch in [1usize, 2, 3] {
+        let x = inputs(batch, 20, batch as u64);
+        let expect = net.forward(&x).unwrap();
+        for engine in [Engine::Transaction, Engine::CycleExact] {
+            let mut a = Accelerator::new(AcceleratorConfig {
+                engine,
+                ..AcceleratorConfig::default()
+            });
+            let r = a.run_network(&net, &x, batch).unwrap();
+            assert_eq!(r.outputs, expect, "batch {batch}, {engine:?}");
+        }
+    }
+}
