@@ -1,43 +1,144 @@
-//! Scratch perf probe (see EXPERIMENTS.md §Perf). Measures the L3
-//! functional hot path and the PJRT artifact execution latency.
+//! Perf probe for the parallel tiled execution engine (see EXPERIMENTS.md
+//! §Perf): measures the L3 functional hot paths — the bf16 blocked-ᵀ
+//! matmul and the XNOR-popcount binary matmul — on the paper's 1024×1024
+//! layer, scalar vs parallel, asserts the outputs bit-identical, and
+//! writes a machine-readable `BENCH_hot_paths.json`.
+//!
+//! ```bash
+//! cargo run --release --example perf_probe
+//! BEANNA_WORKERS=4 cargo run --release --example perf_probe   # pin workers
+//! ```
 use beanna::bf16::Matrix;
-use beanna::io::ArtifactPaths;
+use beanna::binary::BitMatrix;
 use beanna::nn::{Network, NetworkConfig};
-use beanna::runtime::ModelRegistry;
+use beanna::report::JsonValue;
+use beanna::util::par::Parallelism;
 use beanna::util::rng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
-    let mut rng = Xoshiro256::seed_from_u64(1);
-    let a = Matrix::from_vec(256, 1024, rng.normal_vec(256 * 1024))?;
-    let w = Matrix::from_vec(1024, 1024, rng.normal_vec(1024 * 1024))?;
-    let t0 = std::time::Instant::now();
-    std::hint::black_box(a.matmul_bf16_blocked_t(&w, 16)?);
-    let dt = t0.elapsed();
-    println!(
-        "L3 bf16 blocked_t 256x1024x1024: {:?} ({:.2} GMAC/s)",
-        dt,
-        256.0 * 1024.0 * 1024.0 / dt.as_secs_f64() / 1e9
-    );
-    let net = Network::random(&NetworkConfig::beanna_fp(), 1);
-    let x = Matrix::from_vec(256, 784, rng.normal_vec(256 * 784))?;
-    let t0 = std::time::Instant::now();
-    std::hint::black_box(net.forward(&x)?);
-    println!("fp network fwd b256: {:?}", t0.elapsed());
-
-    // PJRT artifact latency (needs `make artifacts`).
-    let paths = ArtifactPaths::discover();
-    if paths.hlo("hybrid", 16).exists() {
-        let mut reg = ModelRegistry::new(paths)?;
-        for variant in ["hybrid", "fp"] {
-            let exe = reg.get(variant, 16)?;
-            let img = Matrix::zeros(16, 784);
-            exe.run(&img)?; // warm
-            let t0 = std::time::Instant::now();
-            for _ in 0..5 {
-                std::hint::black_box(exe.run(&img)?);
-            }
-            println!("pjrt {variant} b16: {:?}/batch", t0.elapsed() / 5);
-        }
+/// Best-of-`reps` wall time for `f`, with one untimed warmup call.
+fn time_best<T>(reps: usize, mut f: impl FnMut() -> T) -> (f64, T) {
+    let mut out = f(); // warmup (also the value we return)
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        out = std::hint::black_box(f());
+        best = best.min(t0.elapsed().as_secs_f64());
     }
+    (best, out)
+}
+
+fn gops(ops: f64, secs: f64) -> f64 {
+    ops / secs / 1e9
+}
+
+fn main() -> anyhow::Result<()> {
+    const B: usize = 256;
+    const K: usize = 1024;
+    const N: usize = 1024;
+    // 1 MAC = 2 ops (multiply + accumulate), the paper's GOps convention.
+    let ops = 2.0 * (B * K * N) as f64;
+    // Honor the crate-wide quick-run knob (CI uses it).
+    let reps = if std::env::var("BEANNA_BENCH_QUICK").as_deref() == Ok("1") {
+        1
+    } else {
+        3
+    };
+
+    let serial = Parallelism::serial();
+    let auto = Parallelism::auto();
+    let workers = auto.max_workers();
+    println!("perf probe: {B}×{K} · ({N}×{K})ᵀ paper layer, {workers} worker(s) available\n");
+
+    let mut rng = Xoshiro256::seed_from_u64(1);
+    let a = Matrix::from_vec(B, K, rng.normal_vec(B * K))?;
+    let w = Matrix::from_vec(N, K, rng.normal_vec(N * K))?;
+
+    // ---- bf16 blocked-ᵀ hot path ------------------------------------------
+    let (t_scalar, out_scalar) = time_best(reps, || a.matmul_bf16_blocked_t(&w, 16).unwrap());
+    let (t_par, out_par) = time_best(reps, || a.matmul_bf16_blocked_t_par(&w, 16, auto).unwrap());
+    assert_eq!(out_scalar, out_par, "bf16 parallel kernel diverged from scalar");
+    let (bf16_scalar, bf16_par) = (gops(ops, t_scalar), gops(ops, t_par));
+    println!("bf16  scalar   {bf16_scalar:>8.2} GOps/s  ({:.1} ms)", t_scalar * 1e3);
+    println!(
+        "bf16  parallel {bf16_par:>8.2} GOps/s  ({:.1} ms)  speedup {:.2}×  [bit-exact ✓]",
+        t_par * 1e3,
+        bf16_par / bf16_scalar
+    );
+
+    // ---- binary XNOR-popcount hot path ------------------------------------
+    let acts = BitMatrix::from_matrix(&Matrix::from_vec(
+        B,
+        K,
+        rng.normal_vec(B * K).iter().map(|v| v.signum()).collect(),
+    )?);
+    let wbits = BitMatrix::from_matrix(&Matrix::from_vec(
+        N,
+        K,
+        rng.normal_vec(N * K).iter().map(|v| v.signum()).collect(),
+    )?);
+    // Seed-era baseline: one packed dot per output, single thread.
+    let (t_naive, out_naive) = time_best(reps, || {
+        let mut out = Matrix::zeros(B, N);
+        for r in 0..B {
+            let row = acts.row(r);
+            let out_row = out.row_mut(r);
+            for c in 0..N {
+                out_row[c] = row.dot(wbits.row(c)) as f32;
+            }
+        }
+        out
+    });
+    let (t_tiled, out_tiled) = time_best(reps, || acts.matmul_t(&wbits).unwrap());
+    let (t_bpar, out_bpar) = time_best(reps, || acts.matmul_t_par(&wbits, auto).unwrap());
+    assert_eq!(out_naive, out_tiled, "binary tiled kernel diverged from scalar dot");
+    assert_eq!(out_naive, out_bpar, "binary parallel kernel diverged from scalar dot");
+    let (bin_naive, bin_tiled, bin_par) =
+        (gops(ops, t_naive), gops(ops, t_tiled), gops(ops, t_bpar));
+    println!("bin   naive    {bin_naive:>8.2} GOps/s  ({:.2} ms)", t_naive * 1e3);
+    println!(
+        "bin   tiled    {bin_tiled:>8.2} GOps/s  ({:.2} ms)  speedup {:.2}×",
+        t_tiled * 1e3,
+        bin_tiled / bin_naive
+    );
+    println!(
+        "bin   parallel {bin_par:>8.2} GOps/s  ({:.2} ms)  speedup {:.2}×  [bit-exact ✓]",
+        t_bpar * 1e3,
+        bin_par / bin_naive
+    );
+
+    // ---- end-to-end network forward ---------------------------------------
+    let net = Network::random(&NetworkConfig::beanna_hybrid(), 1);
+    let x = Matrix::from_vec(B, 784, rng.normal_vec(B * 784))?;
+    let net_ops = 2.0 * (B * net.config.macs()) as f64;
+    let (t_net_s, logits_s) = time_best(reps, || net.forward_with(&x, serial).unwrap());
+    let (t_net_p, logits_p) = time_best(reps, || net.forward_with(&x, auto).unwrap());
+    assert_eq!(logits_s, logits_p, "network forward diverged under parallelism");
+    println!(
+        "\nhybrid fwd b{B}: serial {:.1} ms, parallel {:.1} ms ({:.2}×, {:.2} GOps/s) [bit-exact ✓]",
+        t_net_s * 1e3,
+        t_net_p * 1e3,
+        t_net_s / t_net_p,
+        gops(net_ops, t_net_p)
+    );
+
+    // ---- machine-readable record ------------------------------------------
+    let json = JsonValue::obj(vec![
+        ("shape", JsonValue::s(format!("{B}x{K}x{N}"))),
+        ("workers", JsonValue::n(workers as f64)),
+        ("bf16_scalar_gops", JsonValue::n(bf16_scalar)),
+        ("bf16_parallel_gops", JsonValue::n(bf16_par)),
+        ("bf16_speedup", JsonValue::n(bf16_par / bf16_scalar)),
+        ("binary_naive_gops", JsonValue::n(bin_naive)),
+        ("binary_tiled_gops", JsonValue::n(bin_tiled)),
+        ("binary_parallel_gops", JsonValue::n(bin_par)),
+        ("binary_speedup_vs_naive", JsonValue::n(bin_par / bin_naive)),
+        ("network_serial_ms", JsonValue::n(t_net_s * 1e3)),
+        ("network_parallel_ms", JsonValue::n(t_net_p * 1e3)),
+        ("network_speedup", JsonValue::n(t_net_s / t_net_p)),
+        ("bit_exact", JsonValue::Bool(true)),
+    ]);
+    let out_path = std::path::Path::new("BENCH_hot_paths.json");
+    json.save(out_path)?;
+    println!("wrote {}", out_path.display());
     Ok(())
 }

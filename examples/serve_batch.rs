@@ -43,6 +43,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch,
                 max_wait: Duration::from_millis(2),
             },
+            ..Default::default()
         },
     );
 

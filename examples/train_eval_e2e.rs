@@ -105,6 +105,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch: 256,
                 max_wait: std::time::Duration::from_millis(2),
             },
+            ..Default::default()
         },
     );
     let n_serve = 512.min(test.len());

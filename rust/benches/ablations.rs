@@ -120,6 +120,7 @@ fn main() {
                     max_batch,
                     max_wait: Duration::from_millis(wait_ms),
                 },
+                ..Default::default()
             },
         );
         let n = 1024.min(test.len());

@@ -1,11 +1,16 @@
 //! Bench: the §I peak-throughput claims (52.8 / 820 GOps/s) plus a
 //! sustained-throughput sweep over batch size — showing where the
 //! systolic array's fill/drain and weight-load overheads put the
-//! efficiency crossover.
+//! efficiency crossover — and a host-side scalar-vs-parallel comparison
+//! of the functional hot paths on the paper's 1024×1024 layer.
 
+use beanna::bf16::Matrix;
+use beanna::binary::BitMatrix;
 use beanna::experiments::{self, peak::sustained_gops};
 use beanna::sim::Mode;
 use beanna::util::bench::{BenchConfig, Harness};
+use beanna::util::par::Parallelism;
+use beanna::util::rng::Xoshiro256;
 
 fn main() {
     println!("{}", experiments::peak_throughput_table().unwrap());
@@ -25,6 +30,61 @@ fn main() {
             (Err(e), _) | (_, Err(e)) => println!("{batch:>8}  {e}"),
         }
     }
+
+    // ---- host hot paths: scalar vs parallel engine ------------------------
+    const B: usize = 256;
+    const K: usize = 1024;
+    const N: usize = 1024;
+    let ops = 2.0 * (B * K * N) as f64; // 1 MAC = 2 ops
+    let serial = Parallelism::serial();
+    let auto = Parallelism::auto();
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    let a = Matrix::from_vec(B, K, rng.normal_vec(B * K)).unwrap();
+    let w = Matrix::from_vec(N, K, rng.normal_vec(N * K)).unwrap();
+    let acts = BitMatrix::from_matrix(
+        &Matrix::from_vec(B, K, rng.normal_vec(B * K).iter().map(|v| v.signum()).collect())
+            .unwrap(),
+    );
+    let wbits = BitMatrix::from_matrix(
+        &Matrix::from_vec(N, K, rng.normal_vec(N * K).iter().map(|v| v.signum()).collect())
+            .unwrap(),
+    );
+
+    Harness::header(&format!(
+        "host hot paths, {B}×{K}·({N}×{K})ᵀ ({} worker(s) available)",
+        auto.max_workers()
+    ));
+    let mut h = Harness::new(BenchConfig::default());
+    let r = h.bench("hot/bf16_blocked_t/scalar", || {
+        a.matmul_bf16_blocked_t_par(&w, 16, serial).unwrap()
+    });
+    let bf16_scalar_gops = ops / r.ns.mean;
+    let r = h.bench("hot/bf16_blocked_t/parallel", || {
+        a.matmul_bf16_blocked_t_par(&w, 16, auto).unwrap()
+    });
+    let bf16_par_gops = ops / r.ns.mean;
+    let r = h.bench("hot/binary_matmul_t/scalar", || {
+        acts.matmul_t_par(&wbits, serial).unwrap()
+    });
+    let bin_scalar_gops = ops / r.ns.mean;
+    let r = h.bench("hot/binary_matmul_t/parallel", || {
+        acts.matmul_t_par(&wbits, auto).unwrap()
+    });
+    let bin_par_gops = ops / r.ns.mean;
+    h.finish();
+    println!(
+        "bf16   scalar {bf16_scalar_gops:>7.2} GOps/s → parallel {bf16_par_gops:>7.2} GOps/s ({:.2}×)",
+        bf16_par_gops / bf16_scalar_gops
+    );
+    println!(
+        "binary scalar {bin_scalar_gops:>7.2} GOps/s → parallel {bin_par_gops:>7.2} GOps/s ({:.2}×)",
+        bin_par_gops / bin_scalar_gops
+    );
+    println!(
+        "(bit-exactness of the parallel engine is asserted by \
+         tests/integration_par_kernels.rs and examples/perf_probe.rs, \
+         which also emits BENCH_hot_paths.json)"
+    );
 
     Harness::header("host cost of the sustained-throughput measurement");
     let mut h = Harness::new(BenchConfig::default());

@@ -6,9 +6,12 @@
 //! [`Matrix::matmul_bf16`]), mirroring how the hardware stores bf16 in
 //! BRAM but accumulates in wider registers.
 
+use std::ops::Range;
+
 use anyhow::{ensure, Result};
 
 use super::{mac_bf16, BF16};
+use crate::util::par::{par_tiles, Parallelism};
 
 /// Dense row-major matrix of f32.
 #[derive(Debug, Clone, PartialEq)]
@@ -82,8 +85,16 @@ impl Matrix {
     }
 
     /// Plain f32 matmul `self(R×K) · rhs(K×C)`; the highest-precision
-    /// reference used by tests.
+    /// reference used by tests. Single-threaded; see
+    /// [`Self::matmul_f32_par`] for the multi-core form.
     pub fn matmul_f32(&self, rhs: &Matrix) -> Result<Matrix> {
+        self.matmul_f32_par(rhs, Parallelism::serial())
+    }
+
+    /// [`Self::matmul_f32`] fanned out over up to `par` worker threads.
+    /// Each output element keeps the serial kernel's k-order
+    /// accumulation, so the result is bit-identical to the serial call.
+    pub fn matmul_f32_par(&self, rhs: &Matrix, par: Parallelism) -> Result<Matrix> {
         ensure!(
             self.cols == rhs.rows,
             "matmul dim mismatch: {}x{} · {}x{}",
@@ -92,18 +103,12 @@ impl Matrix {
             rhs.rows,
             rhs.cols
         );
-        let mut out = Matrix::zeros(self.rows, rhs.cols);
-        // K-inner loop over rhs rows keeps accesses sequential.
-        for r in 0..self.rows {
-            let a_row = self.row(r);
-            let out_row = &mut out.data[r * rhs.cols..(r + 1) * rhs.cols];
-            for (k, &a) in a_row.iter().enumerate() {
-                let b_row = &rhs.data[k * rhs.cols..(k + 1) * rhs.cols];
-                for (o, &b) in out_row.iter_mut().zip(b_row.iter()) {
-                    *o += a * b;
-                }
-            }
-        }
+        let (k, n) = (self.cols, rhs.cols);
+        let mut out = Matrix::zeros(self.rows, n);
+        let workers = par.workers_for(self.rows * k * n);
+        par_tiles(workers, self.rows, n, &mut out.data, |rr, cc, tile| {
+            f32_tile(&self.data, &rhs.data, k, n, rr, cc, tile)
+        });
         Ok(out)
     }
 
@@ -141,8 +146,22 @@ impl Matrix {
     /// the psum accumulator BRAM adds block sums — f32 addition is not
     /// associative, so the grouping is part of the numeric contract).
     /// This is bit-exact with the cycle-level simulator at
-    /// `k_block = ARRAY_DIM`.
+    /// `k_block = ARRAY_DIM`. Single-threaded; see
+    /// [`Self::matmul_bf16_blocked_par`].
     pub fn matmul_bf16_blocked(&self, rhs: &Matrix, k_block: usize) -> Result<Matrix> {
+        self.matmul_bf16_blocked_par(rhs, k_block, Parallelism::serial())
+    }
+
+    /// [`Self::matmul_bf16_blocked`] fanned out over up to `par` worker
+    /// threads. The k-blocked accumulation order of every output element
+    /// is unchanged, so results are bit-identical to the serial kernel
+    /// (and the simulator).
+    pub fn matmul_bf16_blocked_par(
+        &self,
+        rhs: &Matrix,
+        k_block: usize,
+        par: Parallelism,
+    ) -> Result<Matrix> {
         ensure!(
             self.cols == rhs.rows,
             "matmul dim mismatch: {}x{} · {}x{}",
@@ -154,23 +173,12 @@ impl Matrix {
         ensure!(k_block > 0, "k_block must be positive");
         let a_q: Vec<BF16> = self.data.iter().map(|&x| BF16::from_f32(x)).collect();
         let b_q: Vec<BF16> = rhs.data.iter().map(|&x| BF16::from_f32(x)).collect();
-        let mut out = Matrix::zeros(self.rows, rhs.cols);
-        for r in 0..self.rows {
-            for c in 0..rhs.cols {
-                let mut acc = 0.0f32; // psum accumulator BRAM
-                let mut k0 = 0;
-                while k0 < self.cols {
-                    let k1 = (k0 + k_block).min(self.cols);
-                    let mut block = 0.0f32; // in-array column accumulation
-                    for k in k0..k1 {
-                        block = mac_bf16(block, a_q[r * self.cols + k], b_q[k * rhs.cols + c]);
-                    }
-                    acc += block;
-                    k0 = k1;
-                }
-                out.data[r * rhs.cols + c] = acc;
-            }
-        }
+        let (k, n) = (self.cols, rhs.cols);
+        let mut out = Matrix::zeros(self.rows, n);
+        let workers = par.workers_for(self.rows * k * n);
+        par_tiles(workers, self.rows, n, &mut out.data, |rr, cc, tile| {
+            bf16_blocked_tile(&a_q, &b_q, k, n, k_block, rr, cc, tile)
+        });
         Ok(out)
     }
 
@@ -180,7 +188,22 @@ impl Matrix {
     /// bit-exact with it (asserted by tests) but walking **both**
     /// operands contiguously, which is ~10× faster on large layers.
     /// This is the L3 functional hot path (see EXPERIMENTS.md §Perf).
+    /// Single-threaded; see [`Self::matmul_bf16_blocked_t_par`].
     pub fn matmul_bf16_blocked_t(&self, w_nk: &Matrix, k_block: usize) -> Result<Matrix> {
+        self.matmul_bf16_blocked_t_par(w_nk, k_block, Parallelism::serial())
+    }
+
+    /// [`Self::matmul_bf16_blocked_t`] fanned out over up to `par`
+    /// worker threads: batch rows are split into per-worker bands (or,
+    /// for small batches, output-column bands — so even a batch-1
+    /// request uses every core). Per-output accumulation order is
+    /// untouched → bit-exact with the serial kernel (asserted by tests).
+    pub fn matmul_bf16_blocked_t_par(
+        &self,
+        w_nk: &Matrix,
+        k_block: usize,
+        par: Parallelism,
+    ) -> Result<Matrix> {
         ensure!(
             self.cols == w_nk.cols,
             "matmul_t dim mismatch: {}x{} · ({}x{})ᵀ",
@@ -200,77 +223,10 @@ impl Matrix {
         let w_q = quant(&w_nk.data);
         let n = w_nk.rows;
         let mut out = Matrix::zeros(self.rows, n);
-        // Each output's accumulation order is fixed by the hardware
-        // contract (sequential within a k-block, block sums added in
-        // order), which serializes the FP adds per output. Recover ILP
-        // by advancing FOUR independent output columns per k-pass: four
-        // independent add chains saturate the FMA ports, and `a_row`
-        // loads amortize 4×. Per-output order is untouched → bit-exact
-        // with the scalar form (asserted by tests).
-        // Additionally tile over 4 batch rows so each streamed weight row
-        // serves 4 outputs (W traffic ÷4 — this kernel is memory-bound
-        // on large layers; see EXPERIMENTS.md §Perf iteration log).
-        let mut r = 0;
-        while r < self.rows {
-            let r_tile = (self.rows - r).min(4);
-            let mut c = 0;
-            while c + 4 <= n {
-                let w0 = &w_q[c * k..(c + 1) * k];
-                let w1 = &w_q[(c + 1) * k..(c + 2) * k];
-                let w2 = &w_q[(c + 2) * k..(c + 3) * k];
-                let w3 = &w_q[(c + 3) * k..(c + 4) * k];
-                for rr in r..r + r_tile {
-                    let a_row = &a_q[rr * k..(rr + 1) * k];
-                    let (mut acc0, mut acc1, mut acc2, mut acc3) =
-                        (0f32, 0f32, 0f32, 0f32);
-                    let mut k0 = 0;
-                    while k0 < k {
-                        let k1 = (k0 + k_block).min(k);
-                        let (mut b0, mut b1, mut b2, mut b3) =
-                            (0f32, 0f32, 0f32, 0f32);
-                        for kk in k0..k1 {
-                            let a = a_row[kk];
-                            b0 += a * w0[kk];
-                            b1 += a * w1[kk];
-                            b2 += a * w2[kk];
-                            b3 += a * w3[kk];
-                        }
-                        acc0 += b0;
-                        acc1 += b1;
-                        acc2 += b2;
-                        acc3 += b3;
-                        k0 = k1;
-                    }
-                    let out_row = &mut out.data[rr * n..(rr + 1) * n];
-                    out_row[c] = acc0;
-                    out_row[c + 1] = acc1;
-                    out_row[c + 2] = acc2;
-                    out_row[c + 3] = acc3;
-                }
-                c += 4;
-            }
-            // Ragged tail columns.
-            while c < n {
-                let w_row = &w_q[c * k..(c + 1) * k];
-                for rr in r..r + r_tile {
-                    let a_row = &a_q[rr * k..(rr + 1) * k];
-                    let mut acc = 0.0f32;
-                    let mut k0 = 0;
-                    while k0 < k {
-                        let k1 = (k0 + k_block).min(k);
-                        let mut block = 0.0f32;
-                        for kk in k0..k1 {
-                            block += a_row[kk] * w_row[kk];
-                        }
-                        acc += block;
-                        k0 = k1;
-                    }
-                    out.data[rr * n + c] = acc;
-                }
-                c += 1;
-            }
-            r += r_tile;
-        }
+        let workers = par.workers_for(self.rows * k * n);
+        par_tiles(workers, self.rows, n, &mut out.data, |rr, cc, tile| {
+            blocked_t_tile(&a_q, &w_q, k, k_block, rr, cc, tile)
+        });
         Ok(out)
     }
 
@@ -290,6 +246,148 @@ impl Matrix {
         for v in &mut self.data {
             *v = f(*v);
         }
+    }
+}
+
+/// Tile kernel for [`Matrix::matmul_f32_par`]: fill `tile`
+/// (`rows.len() × cols.len()`, pre-zeroed) with `a · b` restricted to the
+/// given output ranges. K-inner loop keeps `b` accesses sequential; the
+/// per-element k-order matches the full-range serial kernel exactly.
+fn f32_tile(
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    let tw = cols.len();
+    for (ti, r) in rows.clone().enumerate() {
+        let a_row = &a[r * k..(r + 1) * k];
+        let t_row = &mut tile[ti * tw..(ti + 1) * tw];
+        for (kk, &av) in a_row.iter().enumerate() {
+            let b_row = &b[kk * n + cols.start..kk * n + cols.end];
+            for (o, &bv) in t_row.iter_mut().zip(b_row.iter()) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// Tile kernel for [`Matrix::matmul_bf16_blocked_par`]: the k-blocked
+/// psum accumulation (sequential within a block, block sums added in
+/// order) restricted to an output tile.
+fn bf16_blocked_tile(
+    a_q: &[BF16],
+    b_q: &[BF16],
+    k: usize,
+    n: usize,
+    k_block: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    let tw = cols.len();
+    for (ti, r) in rows.clone().enumerate() {
+        for (tj, c) in cols.clone().enumerate() {
+            let mut acc = 0.0f32; // psum accumulator BRAM
+            let mut k0 = 0;
+            while k0 < k {
+                let k1 = (k0 + k_block).min(k);
+                let mut block = 0.0f32; // in-array column accumulation
+                for kk in k0..k1 {
+                    block = mac_bf16(block, a_q[r * k + kk], b_q[kk * n + c]);
+                }
+                acc += block;
+                k0 = k1;
+            }
+            tile[ti * tw + tj] = acc;
+        }
+    }
+}
+
+/// Tile kernel for [`Matrix::matmul_bf16_blocked_t_par`].
+///
+/// Each output's accumulation order is fixed by the hardware contract
+/// (sequential within a k-block, block sums added in order), which
+/// serializes the FP adds per output. Recover ILP by advancing FOUR
+/// independent output columns per k-pass: four independent add chains
+/// saturate the FMA ports, and `a_row` loads amortize 4×. Additionally
+/// tile over 4 batch rows so each streamed weight row serves 4 outputs
+/// (W traffic ÷4 — this kernel is memory-bound on large layers; see
+/// EXPERIMENTS.md §Perf iteration log). Per-output order is untouched →
+/// bit-exact with the scalar r,c-loop form (asserted by tests),
+/// regardless of where the tile's column range starts.
+fn blocked_t_tile(
+    a_q: &[f32],
+    w_q: &[f32],
+    k: usize,
+    k_block: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    let tw = cols.len();
+    let mut r = rows.start;
+    while r < rows.end {
+        let r_tile = (rows.end - r).min(4);
+        let mut c = cols.start;
+        while c + 4 <= cols.end {
+            let w0 = &w_q[c * k..(c + 1) * k];
+            let w1 = &w_q[(c + 1) * k..(c + 2) * k];
+            let w2 = &w_q[(c + 2) * k..(c + 3) * k];
+            let w3 = &w_q[(c + 3) * k..(c + 4) * k];
+            for rr in r..r + r_tile {
+                let a_row = &a_q[rr * k..(rr + 1) * k];
+                let (mut acc0, mut acc1, mut acc2, mut acc3) = (0f32, 0f32, 0f32, 0f32);
+                let mut k0 = 0;
+                while k0 < k {
+                    let k1 = (k0 + k_block).min(k);
+                    let (mut b0, mut b1, mut b2, mut b3) = (0f32, 0f32, 0f32, 0f32);
+                    for kk in k0..k1 {
+                        let a = a_row[kk];
+                        b0 += a * w0[kk];
+                        b1 += a * w1[kk];
+                        b2 += a * w2[kk];
+                        b3 += a * w3[kk];
+                    }
+                    acc0 += b0;
+                    acc1 += b1;
+                    acc2 += b2;
+                    acc3 += b3;
+                    k0 = k1;
+                }
+                let t_row = &mut tile[(rr - rows.start) * tw..(rr - rows.start + 1) * tw];
+                let tc = c - cols.start;
+                t_row[tc] = acc0;
+                t_row[tc + 1] = acc1;
+                t_row[tc + 2] = acc2;
+                t_row[tc + 3] = acc3;
+            }
+            c += 4;
+        }
+        // Ragged tail columns.
+        while c < cols.end {
+            let w_row = &w_q[c * k..(c + 1) * k];
+            for rr in r..r + r_tile {
+                let a_row = &a_q[rr * k..(rr + 1) * k];
+                let mut acc = 0.0f32;
+                let mut k0 = 0;
+                while k0 < k {
+                    let k1 = (k0 + k_block).min(k);
+                    let mut block = 0.0f32;
+                    for kk in k0..k1 {
+                        block += a_row[kk] * w_row[kk];
+                    }
+                    acc += block;
+                    k0 = k1;
+                }
+                tile[(rr - rows.start) * tw + (c - cols.start)] = acc;
+            }
+            c += 1;
+        }
+        r += r_tile;
     }
 }
 
@@ -440,5 +538,69 @@ mod tests {
         let mut a = mat(1, 3, &[-2.0, 0.5, 2.0]);
         a.map_inplace(|x| x.clamp(-1.0, 1.0));
         assert_eq!(a.data, vec![-1.0, 0.5, 1.0]);
+    }
+
+    /// Run a tile kernel through `par_tiles` with a forced worker count
+    /// (bypassing the work-size heuristic) and return the output.
+    fn run_forced(
+        workers: usize,
+        rows: usize,
+        cols: usize,
+        kernel: impl Fn(
+                std::ops::Range<usize>,
+                std::ops::Range<usize>,
+                &mut [f32],
+            ) + Sync,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; rows * cols];
+        crate::util::par::par_tiles(workers, rows, cols, &mut out, kernel);
+        out
+    }
+
+    #[test]
+    fn parallel_kernels_bit_exact_with_serial() {
+        // Shapes chosen to hit both the row-band and column-band splits
+        // plus ragged tails; random-shape coverage lives in
+        // tests/integration_par_kernels.rs.
+        let mut g = Gen::new(31);
+        for (b, k, n) in [(9usize, 33usize, 17usize), (2, 40, 23), (1, 65, 9)] {
+            let a = Matrix::from_vec(b, k, (0..b * k).map(|_| g.f32_in(-3.0, 3.0)).collect())
+                .unwrap();
+            let rhs =
+                Matrix::from_vec(k, n, (0..k * n).map(|_| g.f32_in(-3.0, 3.0)).collect()).unwrap();
+            let w_nk =
+                Matrix::from_vec(n, k, (0..n * k).map(|_| g.f32_in(-3.0, 3.0)).collect()).unwrap();
+            let a_q: Vec<BF16> = a.data.iter().map(|&x| BF16::from_f32(x)).collect();
+            let b_q: Vec<BF16> = rhs.data.iter().map(|&x| BF16::from_f32(x)).collect();
+            let a_f: Vec<f32> = a.data.iter().map(|&x| BF16::from_f32(x).to_f32()).collect();
+            let w_f: Vec<f32> = w_nk
+                .data
+                .iter()
+                .map(|&x| BF16::from_f32(x).to_f32())
+                .collect();
+            for workers in [2usize, 5] {
+                assert_eq!(
+                    a.matmul_f32(&rhs).unwrap().data,
+                    run_forced(workers, b, n, |rr, cc, t| f32_tile(
+                        &a.data, &rhs.data, k, n, rr, cc, t
+                    )),
+                    "f32 b={b} k={k} n={n} w={workers}"
+                );
+                assert_eq!(
+                    a.matmul_bf16_blocked(&rhs, 16).unwrap().data,
+                    run_forced(workers, b, n, |rr, cc, t| bf16_blocked_tile(
+                        &a_q, &b_q, k, n, 16, rr, cc, t
+                    )),
+                    "blocked b={b} k={k} n={n} w={workers}"
+                );
+                assert_eq!(
+                    a.matmul_bf16_blocked_t(&w_nk, 16).unwrap().data,
+                    run_forced(workers, b, n, |rr, cc, t| blocked_t_tile(
+                        &a_f, &w_f, k, 16, rr, cc, t
+                    )),
+                    "blocked_t b={b} k={k} n={n} w={workers}"
+                );
+            }
+        }
     }
 }

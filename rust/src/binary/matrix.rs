@@ -1,10 +1,13 @@
 //! Bit-packed ±1 matrices and the binary matmul used by the reference
 //! model and the coordinator's fast functional path.
 
+use std::ops::Range;
+
 use anyhow::{ensure, Result};
 
 use super::BitVector;
 use crate::bf16::Matrix;
+use crate::util::par::{par_tiles, Parallelism};
 
 /// A matrix with ±1 entries, stored as one packed [`BitVector`] per row.
 ///
@@ -33,11 +36,12 @@ impl BitMatrix {
         }
     }
 
-    /// Expand to a float matrix of ±1 values.
+    /// Expand to a float matrix of ±1 values. Writes each row directly
+    /// into the output (no per-row `Vec` allocation).
     pub fn to_matrix(&self) -> Matrix {
         let mut out = Matrix::zeros(self.rows, self.cols);
         for (r, bits) in self.row_bits.iter().enumerate() {
-            out.row_mut(r).copy_from_slice(&bits.to_f32());
+            bits.expand_into(out.row_mut(r));
         }
         out
     }
@@ -50,21 +54,42 @@ impl BitMatrix {
     /// Binary matmul: `self (B×K, activations) · rhsᵀ (N×K, weights)`
     /// → integer counts `B×N`. Each output element is an XNOR-popcount
     /// inner product (eq. 1); results are exact integers in `[-K, K]`.
+    /// Single-threaded; see [`Self::matmul_t_par`].
     pub fn matmul_t(&self, weights_t: &BitMatrix) -> Result<Matrix> {
+        self.matmul_t_par(weights_t, Parallelism::serial())
+    }
+
+    /// [`Self::matmul_t`] with register-blocked tiling, fanned out over
+    /// up to `par` worker threads.
+    ///
+    /// The tile kernel processes FOUR weight rows per pass over an
+    /// activation row (TCBNN-style layout/parallelism co-design): each
+    /// packed activation word is loaded once and XOR-popcounted against
+    /// four weight words into four independent accumulators, quartering
+    /// activation-word traffic and filling the popcount ports. Results
+    /// are exact integers, so any tiling is bit-identical to the scalar
+    /// per-output [`BitVector::dot`] loop (asserted by tests).
+    pub fn matmul_t_par(&self, weights_t: &BitMatrix, par: Parallelism) -> Result<Matrix> {
         ensure!(
             self.cols == weights_t.cols,
             "binary matmul K mismatch: {} vs {}",
             self.cols,
             weights_t.cols
         );
-        let mut out = Matrix::zeros(self.rows, weights_t.rows);
-        for r in 0..self.rows {
-            let a = &self.row_bits[r];
-            let out_row = out.row_mut(r);
-            for (c, w) in weights_t.row_bits.iter().enumerate() {
-                out_row[c] = a.dot(w) as f32;
-            }
-        }
+        let n = weights_t.rows;
+        let words = self.cols.div_ceil(64).max(1);
+        let mut out = Matrix::zeros(self.rows, n);
+        let workers = par.workers_for(self.rows * n * words);
+        par_tiles(workers, self.rows, n, &mut out.data, |rr, cc, tile| {
+            bin_tile(
+                &self.row_bits,
+                &weights_t.row_bits,
+                self.cols,
+                rr,
+                cc,
+                tile,
+            )
+        });
         Ok(out)
     }
 
@@ -72,6 +97,56 @@ impl BitMatrix {
     /// whole bytes — the Table II memory accounting).
     pub fn packed_bytes(&self) -> usize {
         self.row_bits.iter().map(|r| r.packed_bytes()).sum()
+    }
+}
+
+/// Tile kernel for [`BitMatrix::matmul_t_par`]: XNOR-popcount counts for
+/// activation rows `rows` × weight rows `cols`, written into the
+/// row-major `rows.len() × cols.len()` tile.
+///
+/// Register blocking: four weight rows are walked per activation-word
+/// pass (four disagreement accumulators), so each activation word is
+/// loaded once per four outputs. The `s = K - 2·popcount(a XOR w)`
+/// arithmetic is exact in integers — identical to [`BitVector::dot`] per
+/// output.
+fn bin_tile(
+    acts: &[BitVector],
+    weights: &[BitVector],
+    len: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    let tw = cols.len();
+    let k = len as i32;
+    for (ti, r) in rows.clone().enumerate() {
+        let a = acts[r].words.as_slice();
+        let t_row = &mut tile[ti * tw..(ti + 1) * tw];
+        let mut c = cols.start;
+        while c + 4 <= cols.end {
+            let w0 = &weights[c].words[..a.len()];
+            let w1 = &weights[c + 1].words[..a.len()];
+            let w2 = &weights[c + 2].words[..a.len()];
+            let w3 = &weights[c + 3].words[..a.len()];
+            let (mut d0, mut d1, mut d2, mut d3) = (0u32, 0u32, 0u32, 0u32);
+            for (i, &aw) in a.iter().enumerate() {
+                d0 += (aw ^ w0[i]).count_ones();
+                d1 += (aw ^ w1[i]).count_ones();
+                d2 += (aw ^ w2[i]).count_ones();
+                d3 += (aw ^ w3[i]).count_ones();
+            }
+            let tc = c - cols.start;
+            t_row[tc] = (k - 2 * d0 as i32) as f32;
+            t_row[tc + 1] = (k - 2 * d1 as i32) as f32;
+            t_row[tc + 2] = (k - 2 * d2 as i32) as f32;
+            t_row[tc + 3] = (k - 2 * d3 as i32) as f32;
+            c += 4;
+        }
+        // Ragged tail weight rows.
+        while c < cols.end {
+            t_row[c - cols.start] = acts[r].dot(&weights[c]) as f32;
+            c += 1;
+        }
     }
 }
 
@@ -134,5 +209,35 @@ mod tests {
         // One 1024×1024 binary layer = 1024*1024/8 = 131,072 bytes.
         let w = BitMatrix::from_matrix(&Matrix::zeros(1024, 1024));
         assert_eq!(w.packed_bytes(), 131_072);
+    }
+
+    #[test]
+    fn prop_tiled_kernel_matches_scalar_dot_under_any_split() {
+        // The 4-weight-row register tiling and every par_tiles split
+        // shape must reproduce the per-output dot() loop exactly.
+        check("bin_tile == scalar dot", 60, |g: &mut Gen| {
+            let b = g.usize_in(1..6);
+            let k = g.usize_in(1..150);
+            let n = g.usize_in(1..12);
+            let acts = BitMatrix::from_matrix(&sign_matrix(g, b, k));
+            let w_t = BitMatrix::from_matrix(&sign_matrix(g, n, k));
+            // Scalar oracle: one dot per output.
+            let mut oracle = Matrix::zeros(b, n);
+            for r in 0..b {
+                for c in 0..n {
+                    oracle.set(r, c, acts.row(r).dot(w_t.row(c)) as f32);
+                }
+            }
+            for workers in [1usize, 2, 5] {
+                let mut out = vec![0.0f32; b * n];
+                crate::util::par::par_tiles(workers, b, n, &mut out, |rr, cc, tile| {
+                    bin_tile(&acts.row_bits, &w_t.row_bits, k, rr, cc, tile)
+                });
+                if out != oracle.data {
+                    return Err(format!("mismatch b={b} k={k} n={n} workers={workers}"));
+                }
+            }
+            Ok(())
+        });
     }
 }

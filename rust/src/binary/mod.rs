@@ -47,21 +47,42 @@ impl BitVector {
     /// maps to -1 … except that **-0.0 maps to +1** to match the training
     /// convention `where(x >= 0, +1, -1)`. NaN maps by its payload sign
     /// (hardware never sees NaN; upstream hardtanh clamps).
+    ///
+    /// Packs a whole `u64` word per 64-float chunk (no per-bit
+    /// read-modify-write of the words vector) — this runs on every
+    /// activation row of every binary layer, so it is itself a hot path.
     pub fn from_f32(xs: &[f32]) -> Self {
-        let mut v = Self::ones(xs.len());
-        for (i, &x) in xs.iter().enumerate() {
-            if x < 0.0 {
-                v.set(i, true);
+        let mut words = Vec::with_capacity(xs.len().div_ceil(64));
+        for chunk in xs.chunks(64) {
+            let mut w = 0u64;
+            for (b, &x) in chunk.iter().enumerate() {
+                w |= u64::from(x < 0.0) << b;
             }
+            words.push(w);
         }
-        v
+        Self {
+            len: xs.len(),
+            words,
+        }
     }
 
     /// Expand back to floats in {-1.0, +1.0}.
     pub fn to_f32(&self) -> Vec<f32> {
-        (0..self.len)
-            .map(|i| if self.get(i) { -1.0 } else { 1.0 })
-            .collect()
+        let mut out = vec![0.0f32; self.len];
+        self.expand_into(&mut out);
+        out
+    }
+
+    /// Expand into a caller-provided slice of exactly `len` floats —
+    /// the allocation-free form of [`Self::to_f32`] used by
+    /// [`BitMatrix::to_matrix`].
+    pub fn expand_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len, "expand_into length mismatch");
+        for (chunk, &w) in out.chunks_mut(64).zip(self.words.iter()) {
+            for (b, o) in chunk.iter_mut().enumerate() {
+                *o = if (w >> b) & 1 == 1 { -1.0 } else { 1.0 };
+            }
+        }
     }
 
     /// Bit accessor: true ⇔ the element is -1.
@@ -216,5 +237,36 @@ mod tests {
     fn count_neg_matches() {
         let v = BitVector::from_f32(&[-1.0, 1.0, -1.0, -1.0, 1.0]);
         assert_eq!(v.count_neg(), 3);
+    }
+
+    #[test]
+    fn prop_word_packing_matches_per_bit_oracle() {
+        // The word-at-a-time packer must agree bit-for-bit with the
+        // obvious per-bit set() loop, including tail-word zeroing.
+        check("from_f32 word packing == per-bit", 200, |g: &mut Gen| {
+            let n = g.usize_in(1..200);
+            let xs: Vec<f32> = (0..n).map(|_| g.nasty_f32()).collect();
+            let fast = BitVector::from_f32(&xs);
+            let mut slow = BitVector::ones(xs.len());
+            for (i, &x) in xs.iter().enumerate() {
+                if x < 0.0 {
+                    slow.set(i, true);
+                }
+            }
+            if fast == slow {
+                Ok(())
+            } else {
+                Err(format!("packing mismatch at n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn expand_into_matches_to_f32() {
+        let xs = vec![1.0, -2.0, 0.0, -0.0, 3.5, -0.001, -7.0];
+        let v = BitVector::from_f32(&xs);
+        let mut out = vec![0.0f32; xs.len()];
+        v.expand_into(&mut out);
+        assert_eq!(out, v.to_f32());
     }
 }

@@ -1,14 +1,20 @@
 //! Execution backends behind the serving queue.
 
+#[cfg(feature = "pjrt")]
 use std::path::Path;
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::ensure;
 
 use crate::bf16::Matrix;
+#[cfg(feature = "pjrt")]
 use crate::data::IMG_PIXELS;
 use crate::nn::Network;
+#[cfg(feature = "pjrt")]
 use crate::runtime::HloExecutable;
 use crate::sim::{Accelerator, AcceleratorConfig};
+use crate::util::par::Parallelism;
 
 /// A PJRT executable bundled with its **own private** client.
 ///
@@ -18,6 +24,7 @@ use crate::sim::{Accelerator, AcceleratorConfig};
 /// ever touched by its current owner — which makes the manual `Send`
 /// sound. Construct it on any thread, then hand it to the server's
 /// worker; never clone pieces out of it.
+#[cfg(feature = "pjrt")]
 pub struct PjrtUnit {
     // Field order matters: `exe` must drop before `client`.
     exe: HloExecutable,
@@ -26,8 +33,10 @@ pub struct PjrtUnit {
 
 // SAFETY: see type docs — the full ownership graph moves together and is
 // accessed from exactly one thread at a time.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for PjrtUnit {}
 
+#[cfg(feature = "pjrt")]
 impl PjrtUnit {
     /// Create a fresh client and compile the artifact at `path` with the
     /// given `batch × features` input shape.
@@ -66,6 +75,7 @@ pub enum Backend {
     },
     /// PJRT executable built from the AOT artifacts (fixed batch shape;
     /// smaller batches are zero-padded and sliced).
+    #[cfg(feature = "pjrt")]
     Pjrt {
         /// Compiled artifact with its private client.
         unit: PjrtUnit,
@@ -82,6 +92,7 @@ impl Backend {
     }
 
     /// PJRT backend from an AOT artifact (`variant` = "hybrid"/"fp").
+    #[cfg(feature = "pjrt")]
     pub fn pjrt(paths: &crate::io::ArtifactPaths, variant: &str, batch: usize) -> Result<Self> {
         let unit = PjrtUnit::load(&paths.hlo(variant, batch), (batch, IMG_PIXELS))?;
         Ok(Backend::Pjrt { unit })
@@ -92,6 +103,7 @@ impl Backend {
         match self {
             Backend::Simulator { .. } => "sim",
             Backend::Reference { .. } => "ref",
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt { .. } => "pjrt",
         }
     }
@@ -99,14 +111,24 @@ impl Backend {
     /// Largest batch this backend accepts in one call (PJRT executables
     /// are shape-specialized).
     pub fn max_batch(&self) -> Option<usize> {
-        match self {
-            Backend::Pjrt { unit } => Some(unit.exe.input_shape.0),
-            _ => None,
+        #[cfg(feature = "pjrt")]
+        if let Backend::Pjrt { unit } = self {
+            return Some(unit.exe.input_shape.0);
         }
+        None
     }
 
-    /// Run one batch of images (`batch × 784`).
+    /// Run one batch of images (`batch × 784`) with the default
+    /// (auto-sized) kernel parallelism.
     pub fn run_batch(&mut self, images: &Matrix) -> Result<BatchOutput> {
+        self.run_batch_with(images, Parallelism::default())
+    }
+
+    /// Run one batch with an explicit kernel-parallelism budget. Only
+    /// the functional reference backend fans out (the simulator models
+    /// one device and PJRT manages its own threads); logits are
+    /// bit-identical at any worker count.
+    pub fn run_batch_with(&mut self, images: &Matrix, par: Parallelism) -> Result<BatchOutput> {
         match self {
             Backend::Simulator { accel, net } => {
                 // Command the device through its AXI-Lite front door,
@@ -120,9 +142,10 @@ impl Backend {
                 })
             }
             Backend::Reference { net } => Ok(BatchOutput {
-                logits: net.forward(images)?,
+                logits: net.forward_with(images, par)?,
                 sim_cycles: None,
             }),
+            #[cfg(feature = "pjrt")]
             Backend::Pjrt { unit } => {
                 let exe = &unit.exe;
                 let (fixed_batch, feat) = exe.input_shape;

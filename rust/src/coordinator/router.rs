@@ -150,6 +150,7 @@ mod tests {
                 max_batch: 8,
                 max_wait: Duration::from_millis(1),
             },
+            ..Default::default()
         }
     }
 

@@ -14,18 +14,25 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{InferenceRequest, InferenceResponse};
 use crate::bf16::Matrix;
 use crate::nn::metrics::argmax;
+use crate::util::par::Parallelism;
 
 /// Server configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
     /// Batching policy.
     pub policy: BatchPolicy,
+    /// Kernel-parallelism budget handed to the backend for every batch
+    /// (auto-sized to the host by default). A dynamic batch closed by
+    /// the batcher fans its matmuls out across this many cores; logits
+    /// are bit-identical at any worker count.
+    pub parallelism: Parallelism,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
         Self {
             policy: BatchPolicy::default(),
+            parallelism: Parallelism::default(),
         }
     }
 }
@@ -49,6 +56,7 @@ impl Server {
         if let Some(cap) = backend.max_batch() {
             policy.max_batch = policy.max_batch.min(cap);
         }
+        let parallelism = config.parallelism;
         let handle = std::thread::spawn(move || {
             while let Some(batch) = policy.next_batch(&rx) {
                 let closed_at = Instant::now();
@@ -59,7 +67,7 @@ impl Server {
                     images.row_mut(r).copy_from_slice(&req.image);
                 }
                 let t0 = Instant::now();
-                let out = match backend.run_batch(&images) {
+                let out = match backend.run_batch_with(&images, parallelism) {
                     Ok(out) => out,
                     Err(e) => {
                         // Deliver an error marker: empty logits. Callers
@@ -205,6 +213,7 @@ mod tests {
                     max_batch: 8,
                     max_wait: Duration::from_millis(30),
                 },
+                ..Default::default()
             },
         );
         let rxs: Vec<_> = (0..8)

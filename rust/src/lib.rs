@@ -10,8 +10,13 @@
 //! * **Layer 3 (this crate)** — the paper's hardware, reproduced as a
 //!   cycle-level simulator ([`sim`]), analytic FPGA resource/power/memory
 //!   models ([`model`]), a PJRT runtime that executes the AOT artifacts
-//!   ([`runtime`]), and an inference coordinator with dynamic batching
-//!   ([`coordinator`]).
+//!   (`runtime`, behind the off-by-default `pjrt` feature — it needs the
+//!   non-vendored `xla` crate), and an inference coordinator with dynamic
+//!   batching ([`coordinator`]).
+//!
+//! The functional hot paths (bf16 and XNOR-popcount matmuls) execute on
+//! a parallel, cache-tiled engine ([`util::par`]) that is bit-identical
+//! to the scalar kernels and the systolic simulator at any worker count.
 //!
 //! The crate is self-contained after `make artifacts`: Python never runs
 //! on the request path.
@@ -25,6 +30,7 @@ pub mod io;
 pub mod model;
 pub mod nn;
 pub mod report;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod util;

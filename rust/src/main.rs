@@ -174,13 +174,17 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
         "ref" => Backend::Reference {
             net: Network::load(&paths.weights(&variant))?,
         },
+        #[cfg(feature = "pjrt")]
         "pjrt" => Backend::pjrt(&paths, &variant, 1)?,
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!("this build has no PJRT support (rebuild with --features pjrt)"),
         other => bail!("unknown backend '{other}'"),
     };
     let server = Server::start(
         backend,
         ServerConfig {
             policy: BatchPolicy::unbatched(),
+            ..Default::default()
         },
     );
     let resp = server.infer(test.images.row(idx).to_vec())?;
@@ -207,7 +211,12 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("max-batch", "256", "batcher max batch")
         .opt("max-wait-ms", "2", "batcher deadline (ms)")
         .opt("workers", "1", "number of devices behind the router")
-        .opt("route", "jsq", "routing policy: rr | jsq");
+        .opt("route", "jsq", "routing policy: rr | jsq")
+        .opt(
+            "kernel-workers",
+            "0",
+            "matmul threads per batch (0 = all cores)",
+        );
     let p = spec.parse_from(args)?;
     let paths = ArtifactPaths::discover();
     let test = SynthMnist::load(&paths.dataset())?;
@@ -220,7 +229,10 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             "ref" => Backend::Reference {
                 net: Network::load(&paths.weights(&variant))?,
             },
+            #[cfg(feature = "pjrt")]
             "pjrt" => Backend::pjrt(&paths, &variant, max_batch)?,
+            #[cfg(not(feature = "pjrt"))]
+            "pjrt" => bail!("this build has no PJRT support (rebuild with --features pjrt)"),
             other => bail!("unknown backend '{other}'"),
         })
     };
@@ -232,6 +244,10 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         "jsq" => beanna::coordinator::RoutePolicy::LeastOutstanding,
         other => bail!("unknown routing policy '{other}'"),
     };
+    let parallelism = match p.get_usize("kernel-workers")? {
+        0 => beanna::coordinator::Parallelism::auto(),
+        n => beanna::coordinator::Parallelism::fixed(n),
+    };
     let router = beanna::coordinator::Router::start(
         backends,
         ServerConfig {
@@ -239,6 +255,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                 max_batch,
                 max_wait: std::time::Duration::from_millis(p.get_u64("max-wait-ms")?),
             },
+            parallelism,
         },
         policy,
     )?;

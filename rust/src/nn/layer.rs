@@ -5,6 +5,7 @@ use anyhow::{ensure, Result};
 use super::hardtanh;
 use crate::bf16::{BF16, Matrix};
 use crate::binary::BitMatrix;
+use crate::util::par::Parallelism;
 
 /// Datapath precision of a layer — the systolic array mode (§III-C) used
 /// to execute it.
@@ -143,8 +144,17 @@ impl DenseLayer {
 
     /// Reference forward pass: `x (B×in)` → `B×out`, in the exact PE
     /// datapath numerics (bf16 MACs with f32 accumulation, or
-    /// XNOR-popcount counts), then the epilogue.
+    /// XNOR-popcount counts), then the epilogue. Fans out across host
+    /// cores by default; results are bit-identical at any worker count.
     pub fn forward(&self, x: &Matrix) -> Result<Matrix> {
+        self.forward_with(x, Parallelism::default())
+    }
+
+    /// [`Self::forward`] with an explicit [`Parallelism`] budget
+    /// (`Parallelism::serial()` reproduces the scalar kernels exactly —
+    /// and any other setting is bit-identical to that, by the kernel
+    /// contract).
+    pub fn forward_with(&self, x: &Matrix, par: Parallelism) -> Result<Matrix> {
         ensure!(
             x.cols == self.in_features(),
             "layer expects {} features, got {}",
@@ -158,13 +168,13 @@ impl DenseLayer {
                 // (bit-exact with the simulator). Weights are already in
                 // the N×K hardware layout, so the row-contiguous kernel
                 // applies directly (EXPERIMENTS.md §Perf).
-                x.matmul_bf16_blocked_t(&self.weights, crate::ARRAY_DIM)?
+                x.matmul_bf16_blocked_t_par(&self.weights, crate::ARRAY_DIM, par)?
             }
             Precision::Binary => {
                 // Binarize incoming activations, XNOR-popcount against
                 // packed weights (already N×K layout for matmul_t).
                 let xb = BitMatrix::from_matrix(x);
-                xb.matmul_t(self.bits.as_ref().expect("binary layer has bits"))?
+                xb.matmul_t_par(self.bits.as_ref().expect("binary layer has bits"), par)?
             }
         };
         for r in 0..pre.rows {

@@ -143,11 +143,22 @@ impl Network {
         }
     }
 
-    /// Full forward pass: `x (B×in)` → logits `(B×out)`.
+    /// Full forward pass: `x (B×in)` → logits `(B×out)`. Fans out
+    /// across host cores by default; bit-identical at any worker count.
     pub fn forward(&self, x: &Matrix) -> Result<Matrix> {
+        self.forward_with(x, crate::util::par::Parallelism::default())
+    }
+
+    /// [`Self::forward`] with an explicit parallelism budget, plumbed
+    /// through every layer's matmul kernel.
+    pub fn forward_with(
+        &self,
+        x: &Matrix,
+        par: crate::util::par::Parallelism,
+    ) -> Result<Matrix> {
         let mut h = x.clone();
         for layer in &self.layers {
-            h = layer.forward(&h)?;
+            h = layer.forward_with(&h, par)?;
         }
         Ok(h)
     }

@@ -11,9 +11,12 @@
 //! * [`prop`] — a miniature property-based testing framework with
 //!   shrinking-free counterexample reporting.
 //! * [`stats`] — summary statistics shared by `bench` and the reports.
+//! * [`par`] — scoped-thread tiling for the matmul hot paths (no
+//!   `rayon`), with a work-size-aware worker heuristic.
 
 pub mod args;
 pub mod bench;
+pub mod par;
 pub mod prop;
 pub mod rng;
 pub mod stats;

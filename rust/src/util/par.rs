@@ -1,0 +1,227 @@
+//! Scoped-thread parallel execution for the dense/binary matmul kernels.
+//!
+//! The vendored crate set has no `rayon`, so this module provides the
+//! one primitive the hot paths need: partition a row-major output matrix
+//! into disjoint tiles and run a tile kernel on `std::thread::scope`
+//! workers. Two split shapes are used:
+//!
+//! * **Row bands** (batch ≥ workers): each worker gets a contiguous band
+//!   of output rows and writes it in place — zero copies.
+//! * **Column bands** (small batch, wide output): each worker computes
+//!   all rows of a column range into a private scratch tile; the caller
+//!   thread scatters the tiles after the join. This is what lets a
+//!   batch-1 request still fan out across cores.
+//!
+//! **Bit-exactness contract:** the tile kernel receives `(row_range,
+//! col_range, tile)` and must compute each output element exactly as the
+//! serial kernel would — the partition only changes *which thread*
+//! computes an element, never the per-element accumulation order. Every
+//! parallel kernel in this crate is asserted bit-identical to its serial
+//! counterpart by `tests/integration_par_kernels.rs`.
+
+use std::ops::Range;
+
+/// How many worker threads the kernels may use.
+///
+/// `Parallelism` is a *cap*, resolved lazily against the host: the
+/// actual worker count for one kernel invocation also scales with the
+/// amount of work (see [`Parallelism::workers_for`]) so tiny matmuls
+/// never pay thread-spawn overhead.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Parallelism {
+    /// Maximum worker threads; `0` = resolve from the host
+    /// (`BEANNA_WORKERS` env var, else `available_parallelism`).
+    max_workers: usize,
+}
+
+impl Parallelism {
+    /// Single-threaded execution (the scalar reference behaviour).
+    pub fn serial() -> Self {
+        Self { max_workers: 1 }
+    }
+
+    /// Exactly `n` workers at most (`n` is clamped to ≥ 1).
+    pub fn fixed(n: usize) -> Self {
+        Self {
+            max_workers: n.max(1),
+        }
+    }
+
+    /// Resolve from the host at call time: the `BEANNA_WORKERS` env var
+    /// if set, else `std::thread::available_parallelism`.
+    pub fn auto() -> Self {
+        Self { max_workers: 0 }
+    }
+
+    /// The resolved worker cap for this configuration.
+    pub fn max_workers(&self) -> usize {
+        if self.max_workers > 0 {
+            return self.max_workers;
+        }
+        if let Ok(s) = std::env::var("BEANNA_WORKERS") {
+            if let Ok(n) = s.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    }
+
+    /// Worker count for a kernel doing `ops` scalar inner-loop steps
+    /// (MACs for the float kernels, packed-word XOR-popcounts for the
+    /// binary kernel). Each worker must have at least
+    /// [`MIN_OPS_PER_WORKER`] steps, so small problems stay serial.
+    pub fn workers_for(&self, ops: usize) -> usize {
+        (ops / MIN_OPS_PER_WORKER).clamp(1, self.max_workers())
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Self::auto()
+    }
+}
+
+/// Minimum inner-loop steps per worker before spawning pays off
+/// (~tens of microseconds of work against ~tens of microseconds of
+/// spawn+join).
+pub const MIN_OPS_PER_WORKER: usize = 32 * 1024;
+
+/// Run `kernel` over the `rows × cols` row-major output `out`, split
+/// across up to `workers` scoped threads.
+///
+/// `kernel(row_range, col_range, tile)` must fill `tile` — a row-major
+/// `row_range.len() × col_range.len()` buffer (pre-zeroed) — with the
+/// output sub-matrix for those ranges, computing each element exactly as
+/// it would for the full `0..rows, 0..cols` call.
+///
+/// With `workers <= 1` (or an output too small to split) the kernel is
+/// invoked once on the calling thread with the full range — this is the
+/// serial path and the behavioural reference.
+pub fn par_tiles<K>(workers: usize, rows: usize, cols: usize, out: &mut [f32], kernel: K)
+where
+    K: Fn(Range<usize>, Range<usize>, &mut [f32]) + Sync,
+{
+    assert_eq!(out.len(), rows * cols, "output buffer size mismatch");
+    let workers = workers.max(1).min(rows.max(1) * cols.max(1));
+    if workers == 1 || rows == 0 || cols == 0 {
+        kernel(0..rows, 0..cols, out);
+        return;
+    }
+    if rows >= workers {
+        // Row bands, written in place.
+        let band_rows = rows.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (i, band) in out.chunks_mut(band_rows * cols).enumerate() {
+                let r0 = i * band_rows;
+                let range = r0..r0 + band.len() / cols;
+                let k = &kernel;
+                s.spawn(move || k(range, 0..cols, band));
+            }
+        });
+    } else if cols >= workers {
+        // Column bands through private scratch tiles.
+        let band_cols = cols.div_ceil(workers);
+        let mut bands: Vec<(Range<usize>, Vec<f32>)> = (0..cols.div_ceil(band_cols))
+            .map(|i| {
+                let c0 = i * band_cols;
+                let c1 = (c0 + band_cols).min(cols);
+                (c0..c1, vec![0.0f32; rows * (c1 - c0)])
+            })
+            .collect();
+        std::thread::scope(|s| {
+            for (range, tile) in bands.iter_mut() {
+                let range = range.clone();
+                let tile = tile.as_mut_slice();
+                let k = &kernel;
+                s.spawn(move || k(0..rows, range, tile));
+            }
+        });
+        for (range, tile) in &bands {
+            let w = range.len();
+            for r in 0..rows {
+                out[r * cols + range.start..r * cols + range.end]
+                    .copy_from_slice(&tile[r * w..(r + 1) * w]);
+            }
+        }
+    } else {
+        // Output too small to split usefully.
+        kernel(0..rows, 0..cols, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A deterministic per-element function so any partition must
+    /// reproduce the serial result exactly.
+    fn fill(rows: Range<usize>, cols: Range<usize>, tile: &mut [f32]) {
+        let w = cols.len();
+        for (ti, r) in rows.clone().enumerate() {
+            for (tj, c) in cols.clone().enumerate() {
+                tile[ti * w + tj] = (r * 1000 + c) as f32;
+            }
+        }
+    }
+
+    fn reference(rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0.0; rows * cols];
+        fill(0..rows, 0..cols, &mut out);
+        out
+    }
+
+    #[test]
+    fn serial_path_covers_everything() {
+        let (rows, cols) = (7, 5);
+        let mut out = vec![0.0; rows * cols];
+        par_tiles(1, rows, cols, &mut out, fill);
+        assert_eq!(out, reference(rows, cols));
+    }
+
+    #[test]
+    fn row_split_matches_serial() {
+        for rows in [4usize, 7, 8, 9, 32] {
+            let cols = 5;
+            let mut out = vec![0.0; rows * cols];
+            par_tiles(4, rows, cols, &mut out, fill);
+            assert_eq!(out, reference(rows, cols), "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn col_split_matches_serial() {
+        // rows < workers forces the column-band path.
+        for cols in [8usize, 9, 17, 64] {
+            let rows = 2;
+            let mut out = vec![0.0; rows * cols];
+            par_tiles(8, rows, cols, &mut out, fill);
+            assert_eq!(out, reference(rows, cols), "cols={cols}");
+        }
+    }
+
+    #[test]
+    fn tiny_outputs_fall_back_to_serial() {
+        let mut out = vec![0.0; 4];
+        par_tiles(16, 2, 2, &mut out, fill);
+        assert_eq!(out, reference(2, 2));
+        let mut empty: Vec<f32> = vec![];
+        par_tiles(4, 0, 3, &mut empty, fill);
+    }
+
+    #[test]
+    fn parallelism_heuristics() {
+        assert_eq!(Parallelism::serial().max_workers(), 1);
+        assert_eq!(Parallelism::fixed(3).max_workers(), 3);
+        assert_eq!(Parallelism::fixed(0).max_workers(), 1);
+        assert!(Parallelism::auto().max_workers() >= 1);
+        // Small work stays serial; big work scales to the cap.
+        let p = Parallelism::fixed(8);
+        assert_eq!(p.workers_for(100), 1);
+        assert_eq!(p.workers_for(MIN_OPS_PER_WORKER * 3), 3);
+        assert_eq!(p.workers_for(usize::MAX / 2), 8);
+    }
+}

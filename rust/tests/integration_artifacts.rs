@@ -11,6 +11,7 @@ use beanna::data::SynthMnist;
 use beanna::experiments;
 use beanna::io::ArtifactPaths;
 use beanna::nn::{accuracy, Network};
+#[cfg(feature = "pjrt")]
 use beanna::runtime::ModelRegistry;
 
 fn paths() -> ArtifactPaths {
@@ -51,7 +52,9 @@ fn trained_networks_accuracy_and_gap() {
 }
 
 /// The PJRT runtime (AOT HLO with Pallas kernels) agrees with the rust
-/// reference model on logits.
+/// reference model on logits. (Needs the `pjrt` feature — the runtime
+/// depends on the non-vendored `xla` crate.)
+#[cfg(feature = "pjrt")]
 #[test]
 fn pjrt_matches_reference_model() {
     if !artifacts_present() || !paths().hlo("hybrid", 16).exists() {

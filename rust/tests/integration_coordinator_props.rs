@@ -81,6 +81,7 @@ fn prop_server_conserves_requests() {
                     max_batch,
                     max_wait: Duration::from_millis(g.usize_in(0..3) as u64),
                 },
+                ..Default::default()
             },
         );
         let rxs: Vec<_> = (0..n)
@@ -128,6 +129,7 @@ fn prop_router_conserves_and_balances() {
                     max_batch: 8,
                     max_wait: Duration::from_millis(1),
                 },
+                ..Default::default()
             },
             policy,
         )
@@ -164,6 +166,7 @@ fn server_recovers_from_backend_errors() {
         Backend::Reference { net: tiny_net(3) },
         ServerConfig {
             policy: BatchPolicy::unbatched(),
+            ..Default::default()
         },
     );
     // Malformed request (wrong width) → backend error → error response.

@@ -1,0 +1,152 @@
+//! Kernel-equivalence suite for the parallel tiled execution engine:
+//! every parallel kernel must be **bit-identical** to its scalar
+//! counterpart across shapes (including ragged tails smaller than a
+//! tile) and worker counts 1, 2, and `available_parallelism`.
+//!
+//! This is the enforcement of the engine's core contract: parallelism
+//! changes *which thread* computes an output element, never the
+//! element's accumulation order.
+
+use beanna::bf16::Matrix;
+use beanna::binary::BitMatrix;
+use beanna::nn::{Network, NetworkConfig};
+use beanna::util::par::Parallelism;
+use beanna::util::prop::{check, Gen};
+
+/// Worker configurations under test: serial, a forced small count, and
+/// everything the host offers.
+fn configs() -> [Parallelism; 4] {
+    [
+        Parallelism::serial(),
+        Parallelism::fixed(2),
+        Parallelism::fixed(3),
+        Parallelism::auto(),
+    ]
+}
+
+/// Shapes big enough to clear the spawn heuristic (so splits really
+/// happen) while still hitting ragged row/column tails: row-band splits
+/// (b ≥ workers), column-band splits (b < workers), and odd dims that
+/// don't divide any tile size.
+const SPLIT_SHAPES: [(usize, usize, usize); 4] = [
+    (1, 300, 250),  // batch-1 → column bands
+    (2, 300, 123),  // tiny batch, ragged n
+    (7, 333, 61),   // odd everything
+    (33, 128, 17),  // row bands with a ragged last band
+];
+
+fn rand_matrix(g: &mut Gen, rows: usize, cols: usize, lo: f32, hi: f32) -> Matrix {
+    Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| g.f32_in(lo, hi)).collect()).unwrap()
+}
+
+#[test]
+fn blocked_t_parallel_bit_exact_on_split_shapes() {
+    let mut g = Gen::new(0xB16);
+    for &(b, k, n) in &SPLIT_SHAPES {
+        let a = rand_matrix(&mut g, b, k, -3.0, 3.0);
+        let w_nk = rand_matrix(&mut g, n, k, -3.0, 3.0);
+        for kb in [1usize, 5, 16, 1000] {
+            let serial = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
+            // Cross-check against the independent scalar r,c-loop form.
+            let rc_form = a.matmul_bf16_blocked(&w_nk.transpose(), kb).unwrap();
+            assert_eq!(serial, rc_form, "b={b} k={k} n={n} kb={kb}");
+            for par in configs() {
+                let fast = a.matmul_bf16_blocked_t_par(&w_nk, kb, par).unwrap();
+                assert_eq!(serial, fast, "b={b} k={k} n={n} kb={kb} par={par:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_parallel_bit_exact_on_split_shapes() {
+    let mut g = Gen::new(0xB17);
+    for &(b, k, n) in &SPLIT_SHAPES {
+        let a = rand_matrix(&mut g, b, k, -2.0, 2.0);
+        let rhs = rand_matrix(&mut g, k, n, -2.0, 2.0);
+        let serial = a.matmul_bf16_blocked(&rhs, 16).unwrap();
+        for par in configs() {
+            let fast = a.matmul_bf16_blocked_par(&rhs, 16, par).unwrap();
+            assert_eq!(serial, fast, "b={b} k={k} n={n} par={par:?}");
+        }
+    }
+}
+
+#[test]
+fn f32_parallel_bit_exact_on_split_shapes() {
+    let mut g = Gen::new(0xB18);
+    for &(b, k, n) in &SPLIT_SHAPES {
+        let a = rand_matrix(&mut g, b, k, -2.0, 2.0);
+        let rhs = rand_matrix(&mut g, k, n, -2.0, 2.0);
+        let serial = a.matmul_f32(&rhs).unwrap();
+        for par in configs() {
+            let fast = a.matmul_f32_par(&rhs, par).unwrap();
+            assert_eq!(serial, fast, "b={b} k={k} n={n} par={par:?}");
+        }
+    }
+}
+
+#[test]
+fn binary_parallel_bit_exact_on_split_shapes() {
+    let mut g = Gen::new(0xB19);
+    for &(b, k, n) in &SPLIT_SHAPES {
+        let acts = BitMatrix::from_matrix(&Matrix::from_vec(b, k, g.signs(b * k)).unwrap());
+        let w_t = BitMatrix::from_matrix(&Matrix::from_vec(n, k, g.signs(n * k)).unwrap());
+        // Independent scalar oracle: one dot() per output.
+        let mut oracle = Matrix::zeros(b, n);
+        for r in 0..b {
+            for c in 0..n {
+                oracle.set(r, c, acts.row(r).dot(w_t.row(c)) as f32);
+            }
+        }
+        for par in configs() {
+            let fast = acts.matmul_t_par(&w_t, par).unwrap();
+            assert_eq!(oracle, fast, "b={b} k={k} n={n} par={par:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_kernels_bit_exact_on_random_ragged_shapes() {
+    // Random small shapes — many below the spawn threshold (exercising
+    // the serial fallback), some above; all must agree exactly.
+    check("parallel kernels == scalar, random shapes", 25, |g: &mut Gen| {
+        let b = g.usize_in(1..10);
+        let k = g.usize_in(1..200);
+        let n = g.usize_in(1..40);
+        let kb = g.usize_in(1..24);
+        let a = rand_matrix(g, b, k, -3.0, 3.0);
+        let w_nk = rand_matrix(g, n, k, -3.0, 3.0);
+        let serial_t = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
+        let acts = BitMatrix::from_matrix(&Matrix::from_vec(b, k, g.signs(b * k)).unwrap());
+        let w_bits = BitMatrix::from_matrix(&Matrix::from_vec(n, k, g.signs(n * k)).unwrap());
+        let serial_bin = acts.matmul_t(&w_bits).unwrap();
+        for par in configs() {
+            if a.matmul_bf16_blocked_t_par(&w_nk, kb, par).unwrap() != serial_t {
+                return Err(format!("blocked_t diverged: b={b} k={k} n={n} kb={kb}"));
+            }
+            if acts.matmul_t_par(&w_bits, par).unwrap() != serial_bin {
+                return Err(format!("binary diverged: b={b} k={k} n={n}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn network_forward_bit_exact_at_any_parallelism() {
+    // The paper's hybrid network is large enough that every layer's
+    // matmul clears the spawn threshold even at batch 1.
+    let net = Network::random(&NetworkConfig::beanna_hybrid(), 42);
+    let mut g = Gen::new(0xF0);
+    for batch in [1usize, 5] {
+        let x = rand_matrix(&mut g, batch, 784, -1.0, 1.0);
+        let serial = net.forward_with(&x, Parallelism::serial()).unwrap();
+        for par in configs() {
+            let fast = net.forward_with(&x, par).unwrap();
+            assert_eq!(serial, fast, "batch={batch} par={par:?}");
+        }
+        // The default entry point fans out and must also agree.
+        assert_eq!(serial, net.forward(&x).unwrap(), "batch={batch} default");
+    }
+}

@@ -32,6 +32,7 @@ fn simulator_backend_serves_with_cycles() {
                 max_batch: 4,
                 max_wait: Duration::from_millis(20),
             },
+            ..Default::default()
         },
     );
     let rxs: Vec<_> = (0..data.len())
@@ -63,6 +64,7 @@ fn batching_reduces_device_cycles() {
                     max_batch,
                     max_wait: Duration::from_millis(50),
                 },
+                ..Default::default()
             },
         );
         let rxs: Vec<_> = (0..data.len())
@@ -92,6 +94,7 @@ fn concurrent_clients_all_served() {
                 max_batch: 32,
                 max_wait: Duration::from_millis(2),
             },
+            ..Default::default()
         },
     ));
     let mut handles = Vec::new();
@@ -126,6 +129,7 @@ fn deadline_bounds_queue_latency() {
                 max_batch: 1024, // never fills
                 max_wait: Duration::from_millis(5),
             },
+            ..Default::default()
         },
     );
     let resp = server.infer(vec![0.1; 784]).unwrap();
