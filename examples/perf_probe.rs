@@ -1,18 +1,21 @@
-//! Perf probe for the parallel tiled execution engine (see EXPERIMENTS.md
+//! Perf probe for the parallel execution engine (see EXPERIMENTS.md
 //! §Perf): measures the L3 functional hot paths — the bf16 blocked-ᵀ
-//! matmul and the XNOR-popcount binary matmul — on the paper's 1024×1024
-//! layer, scalar vs parallel, asserts the outputs bit-identical, and
-//! writes a machine-readable `BENCH_hot_paths.json`.
+//! matmul (plain and `PackedWeights` panels) and the XNOR-popcount
+//! binary matmul — on the paper's 1024×1024 layer, scalar vs parallel,
+//! plus the **persistent-pool vs spawn-per-call** dispatch comparison on
+//! the end-to-end hybrid forward at serving batch sizes 1/8/64. Asserts
+//! every variant bit-identical and writes a machine-readable
+//! `BENCH_hot_paths.json`.
 //!
 //! ```bash
 //! cargo run --release --example perf_probe
 //! BEANNA_WORKERS=4 cargo run --release --example perf_probe   # pin workers
 //! ```
-use beanna::bf16::Matrix;
+use beanna::bf16::{Matrix, PackedWeights};
 use beanna::binary::BitMatrix;
 use beanna::nn::{Network, NetworkConfig};
 use beanna::report::JsonValue;
-use beanna::util::par::Parallelism;
+use beanna::util::par::{Dispatch, Parallelism};
 use beanna::util::rng::Xoshiro256;
 
 /// Best-of-`reps` wall time for `f`, with one untimed warmup call.
@@ -38,15 +41,14 @@ fn main() -> anyhow::Result<()> {
     // 1 MAC = 2 ops (multiply + accumulate), the paper's GOps convention.
     let ops = 2.0 * (B * K * N) as f64;
     // Honor the crate-wide quick-run knob (CI uses it).
-    let reps = if std::env::var("BEANNA_BENCH_QUICK").as_deref() == Ok("1") {
-        1
-    } else {
-        3
-    };
+    let quick = std::env::var("BEANNA_BENCH_QUICK").as_deref() == Ok("1");
+    let reps = if quick { 1 } else { 3 };
 
     let serial = Parallelism::serial();
     let auto = Parallelism::auto();
+    let spawn = Parallelism::auto().with_dispatch(Dispatch::Spawn);
     let workers = auto.max_workers();
+    auto.warm_pool(); // serving-path lifecycle: pool built once, up front
     println!("perf probe: {B}×{K} · ({N}×{K})ᵀ paper layer, {workers} worker(s) available\n");
 
     let mut rng = Xoshiro256::seed_from_u64(1);
@@ -54,15 +56,26 @@ fn main() -> anyhow::Result<()> {
     let w = Matrix::from_vec(N, K, rng.normal_vec(N * K))?;
 
     // ---- bf16 blocked-ᵀ hot path ------------------------------------------
+    let pw = PackedWeights::pack(&w);
     let (t_scalar, out_scalar) = time_best(reps, || a.matmul_bf16_blocked_t(&w, 16).unwrap());
     let (t_par, out_par) = time_best(reps, || a.matmul_bf16_blocked_t_par(&w, 16, auto).unwrap());
+    let (t_packed, out_packed) = time_best(reps, || {
+        a.matmul_bf16_blocked_t_packed_par(&pw, 16, auto).unwrap()
+    });
     assert_eq!(out_scalar, out_par, "bf16 parallel kernel diverged from scalar");
-    let (bf16_scalar, bf16_par) = (gops(ops, t_scalar), gops(ops, t_par));
+    assert_eq!(out_scalar, out_packed, "bf16 packed kernel diverged from scalar");
+    let (bf16_scalar, bf16_par, bf16_packed) =
+        (gops(ops, t_scalar), gops(ops, t_par), gops(ops, t_packed));
     println!("bf16  scalar   {bf16_scalar:>8.2} GOps/s  ({:.1} ms)", t_scalar * 1e3);
     println!(
         "bf16  parallel {bf16_par:>8.2} GOps/s  ({:.1} ms)  speedup {:.2}×  [bit-exact ✓]",
         t_par * 1e3,
         bf16_par / bf16_scalar
+    );
+    println!(
+        "bf16  packed   {bf16_packed:>8.2} GOps/s  ({:.1} ms)  speedup {:.2}×  [bit-exact ✓]",
+        t_packed * 1e3,
+        bf16_packed / bf16_scalar
     );
 
     // ---- binary XNOR-popcount hot path ------------------------------------
@@ -121,22 +134,64 @@ fn main() -> anyhow::Result<()> {
         gops(net_ops, t_net_p)
     );
 
+    // ---- pool vs spawn-per-call at serving batch sizes --------------------
+    // The coordinator's real traffic shape: small dynamic batches, one
+    // forward per batch. Spawn-per-call pays thread creation every
+    // batch; the persistent pool pays a queue push. Outputs must be
+    // bit-identical either way.
+    println!("\npool vs spawn-per-call dispatch (hybrid forward):");
+    println!(
+        "{:>8} {:>12} {:>12} {:>9}",
+        "batch", "spawn ms", "pool ms", "pool ×"
+    );
+    let mut pool_entries: Vec<(String, JsonValue)> = Vec::new();
+    for &batch in &[1usize, 8, 64] {
+        let xb = Matrix::from_vec(batch, 784, rng.normal_vec(batch * 784))?;
+        // Small batches are fast — take more reps for a stable best-of.
+        let reps_b = if quick { 2 } else { (256 / batch).clamp(4, 64) };
+        let (t_spawn, y_spawn) = time_best(reps_b, || net.forward_with(&xb, spawn).unwrap());
+        let (t_pool, y_pool) = time_best(reps_b, || net.forward_with(&xb, auto).unwrap());
+        assert_eq!(y_spawn, y_pool, "dispatch strategies diverged at batch {batch}");
+        println!(
+            "{batch:>8} {:>12.3} {:>12.3} {:>8.2}x",
+            t_spawn * 1e3,
+            t_pool * 1e3,
+            t_spawn / t_pool
+        );
+        pool_entries.push((format!("spawn_b{batch}_ms"), JsonValue::n(t_spawn * 1e3)));
+        pool_entries.push((format!("pool_b{batch}_ms"), JsonValue::n(t_pool * 1e3)));
+        pool_entries.push((
+            format!("pool_speedup_b{batch}"),
+            JsonValue::n(t_spawn / t_pool),
+        ));
+    }
+
     // ---- machine-readable record ------------------------------------------
-    let json = JsonValue::obj(vec![
-        ("shape", JsonValue::s(format!("{B}x{K}x{N}"))),
-        ("workers", JsonValue::n(workers as f64)),
-        ("bf16_scalar_gops", JsonValue::n(bf16_scalar)),
-        ("bf16_parallel_gops", JsonValue::n(bf16_par)),
-        ("bf16_speedup", JsonValue::n(bf16_par / bf16_scalar)),
-        ("binary_naive_gops", JsonValue::n(bin_naive)),
-        ("binary_tiled_gops", JsonValue::n(bin_tiled)),
-        ("binary_parallel_gops", JsonValue::n(bin_par)),
-        ("binary_speedup_vs_naive", JsonValue::n(bin_par / bin_naive)),
-        ("network_serial_ms", JsonValue::n(t_net_s * 1e3)),
-        ("network_parallel_ms", JsonValue::n(t_net_p * 1e3)),
-        ("network_speedup", JsonValue::n(t_net_s / t_net_p)),
-        ("bit_exact", JsonValue::Bool(true)),
-    ]);
+    let mut fields: Vec<(String, JsonValue)> = vec![
+        ("shape".into(), JsonValue::s(format!("{B}x{K}x{N}"))),
+        ("workers".into(), JsonValue::n(workers as f64)),
+        ("bf16_scalar_gops".into(), JsonValue::n(bf16_scalar)),
+        ("bf16_parallel_gops".into(), JsonValue::n(bf16_par)),
+        ("bf16_packed_gops".into(), JsonValue::n(bf16_packed)),
+        ("bf16_speedup".into(), JsonValue::n(bf16_par / bf16_scalar)),
+        (
+            "bf16_packed_speedup".into(),
+            JsonValue::n(bf16_packed / bf16_scalar),
+        ),
+        ("binary_naive_gops".into(), JsonValue::n(bin_naive)),
+        ("binary_tiled_gops".into(), JsonValue::n(bin_tiled)),
+        ("binary_parallel_gops".into(), JsonValue::n(bin_par)),
+        (
+            "binary_speedup_vs_naive".into(),
+            JsonValue::n(bin_par / bin_naive),
+        ),
+        ("network_serial_ms".into(), JsonValue::n(t_net_s * 1e3)),
+        ("network_parallel_ms".into(), JsonValue::n(t_net_p * 1e3)),
+        ("network_speedup".into(), JsonValue::n(t_net_s / t_net_p)),
+        ("bit_exact".into(), JsonValue::Bool(true)),
+    ];
+    fields.extend(pool_entries);
+    let json = JsonValue::Obj(fields);
     let out_path = std::path::Path::new("BENCH_hot_paths.json");
     json.save(out_path)?;
     println!("wrote {}", out_path.display());

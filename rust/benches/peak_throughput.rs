@@ -4,12 +4,13 @@
 //! efficiency crossover — and a host-side scalar-vs-parallel comparison
 //! of the functional hot paths on the paper's 1024×1024 layer.
 
-use beanna::bf16::Matrix;
+use beanna::bf16::{Matrix, PackedWeights};
 use beanna::binary::BitMatrix;
 use beanna::experiments::{self, peak::sustained_gops};
+use beanna::nn::{Network, NetworkConfig};
 use beanna::sim::Mode;
 use beanna::util::bench::{BenchConfig, Harness};
-use beanna::util::par::Parallelism;
+use beanna::util::par::{Dispatch, Parallelism};
 use beanna::util::rng::Xoshiro256;
 
 fn main() {
@@ -63,6 +64,11 @@ fn main() {
         a.matmul_bf16_blocked_t_par(&w, 16, auto).unwrap()
     });
     let bf16_par_gops = ops / r.ns.mean;
+    let pw = PackedWeights::pack(&w);
+    let r = h.bench("hot/bf16_blocked_t/packed", || {
+        a.matmul_bf16_blocked_t_packed_par(&pw, 16, auto).unwrap()
+    });
+    let bf16_packed_gops = ops / r.ns.mean;
     let r = h.bench("hot/binary_matmul_t/scalar", || {
         acts.matmul_t_par(&wbits, serial).unwrap()
     });
@@ -73,8 +79,9 @@ fn main() {
     let bin_par_gops = ops / r.ns.mean;
     h.finish();
     println!(
-        "bf16   scalar {bf16_scalar_gops:>7.2} GOps/s → parallel {bf16_par_gops:>7.2} GOps/s ({:.2}×)",
-        bf16_par_gops / bf16_scalar_gops
+        "bf16   scalar {bf16_scalar_gops:>7.2} GOps/s → parallel {bf16_par_gops:>7.2} GOps/s ({:.2}×) → packed {bf16_packed_gops:>7.2} GOps/s ({:.2}×)",
+        bf16_par_gops / bf16_scalar_gops,
+        bf16_packed_gops / bf16_scalar_gops
     );
     println!(
         "binary scalar {bin_scalar_gops:>7.2} GOps/s → parallel {bin_par_gops:>7.2} GOps/s ({:.2}×)",
@@ -85,6 +92,32 @@ fn main() {
          tests/integration_par_kernels.rs and examples/perf_probe.rs, \
          which also emits BENCH_hot_paths.json)"
     );
+
+    // ---- dispatch: persistent pool vs spawn-per-call ----------------------
+    // The serving-relevant overhead comparison: one hybrid forward per
+    // dynamic batch, at coordinator-realistic batch sizes.
+    Harness::header("dispatch overhead: persistent pool vs spawn-per-call");
+    let auto_pool = Parallelism::auto();
+    let spawn = Parallelism::auto().with_dispatch(Dispatch::Spawn);
+    auto_pool.warm_pool();
+    let net = Network::random(&NetworkConfig::beanna_hybrid(), 1);
+    let mut h = Harness::new(BenchConfig::default());
+    for &batch in &[1usize, 8, 64] {
+        let x = Matrix::from_vec(batch, 784, rng.normal_vec(batch * 784)).unwrap();
+        let rs = h.bench(&format!("dispatch/spawn/b{batch}"), || {
+            net.forward_with(&x, spawn).unwrap()
+        });
+        let rp = h.bench(&format!("dispatch/pool/b{batch}"), || {
+            net.forward_with(&x, auto_pool).unwrap()
+        });
+        println!(
+            "  b{batch:<4} spawn {:>9.1} µs → pool {:>9.1} µs ({:.2}×)",
+            rs.ns.mean / 1e3,
+            rp.ns.mean / 1e3,
+            rs.ns.mean / rp.ns.mean
+        );
+    }
+    h.finish();
 
     Harness::header("host cost of the sustained-throughput measurement");
     let mut h = Harness::new(BenchConfig::default());

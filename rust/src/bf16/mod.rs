@@ -19,8 +19,10 @@
 //! for the `fig1` report.
 
 pub mod format;
+pub mod packed;
 pub mod tensor;
 
+pub use packed::PackedWeights;
 pub use tensor::Matrix;
 
 /// A bfloat16 value, stored as its raw 16-bit pattern.

@@ -1,0 +1,299 @@
+//! Layer-resident interleaved weight panels for the bf16 ᵀ-kernel.
+//!
+//! The blocked-ᵀ tile kernel advances FOUR output columns per pass over
+//! an activation row (four independent add chains — see
+//! `tensor::blocked_t_tile`). With the plain `N×K` row-major weight
+//! matrix those four chains read four rows **a full row apart**, so each
+//! k-step touches four cache lines. [`PackedWeights`] interleaves each
+//! group of four output neurons' weights as `[k][4]` panels:
+//!
+//! ```text
+//!   row-major N×K:        w[c][k]                (4 strided streams)
+//!   packed panel p=c/4:   panel[k*4 + (c%4)]     (1 contiguous stream)
+//!
+//!   panel memory:  k=0: w0 w1 w2 w3 | k=1: w0 w1 w2 w3 | ...
+//! ```
+//!
+//! so the quad inner loop reads one contiguous 16-byte lane per k-step —
+//! the layout the autovectorizer wants for a 4-wide FMA (the same
+//! layout-over-compute argument TCBNN/BinArray make for binary layers).
+//! The `N % 4` remainder rows are kept row-major and handled by the
+//! scalar column path.
+//!
+//! Packing quantizes to bf16 once at construction ([`PackedWeights`] is
+//! built when a `DenseLayer` is, and lives as long as the layer), so the
+//! per-call weight quantization pass of the unpacked kernel disappears
+//! from the serving hot path. Per-output accumulation order is identical
+//! to `matmul_bf16_blocked_t` — the packed kernel is bit-exact with it
+//! (asserted by `tests/integration_par_kernels.rs`).
+
+use std::ops::Range;
+
+use anyhow::{ensure, Result};
+
+use super::{Matrix, BF16};
+use crate::util::par::{par_tiles_with, Parallelism};
+
+/// Weights for `x · Wᵀ`, pre-quantized to bf16 and interleaved in
+/// 4-column panels (see module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedWeights {
+    /// Output features (rows of the `N×K` source).
+    pub n: usize,
+    /// Input features (columns of the `N×K` source).
+    pub k: usize,
+    /// Full panels: `n_full/4` panels of `k×4` interleaved weights;
+    /// element `(c, kk)` for `c < n_full` lives at
+    /// `(c/4)*4*k + kk*4 + c%4`.
+    panels: Vec<f32>,
+    /// Remainder rows (`n % 4`), row-major `(n - n_full) × k`.
+    tail: Vec<f32>,
+}
+
+impl PackedWeights {
+    /// Pack an `N×K` weight matrix (one output neuron per row — the
+    /// hardware layout), rounding every weight to bf16 resolution once.
+    pub fn pack(w_nk: &Matrix) -> Self {
+        let (n, k) = (w_nk.rows, w_nk.cols);
+        let n_full = n - n % 4;
+        let mut panels = vec![0.0f32; n_full * k];
+        for p in 0..n_full / 4 {
+            let base = p * 4 * k;
+            for j in 0..4 {
+                let row = w_nk.row(p * 4 + j);
+                for (kk, &x) in row.iter().enumerate() {
+                    panels[base + kk * 4 + j] = BF16::from_f32(x).to_f32();
+                }
+            }
+        }
+        let mut tail = Vec::with_capacity((n - n_full) * k);
+        for r in n_full..n {
+            tail.extend(w_nk.row(r).iter().map(|&x| BF16::from_f32(x).to_f32()));
+        }
+        Self { n, k, panels, tail }
+    }
+
+    /// Number of columns covered by full 4-wide panels.
+    #[inline]
+    fn n_full(&self) -> usize {
+        self.n - self.n % 4
+    }
+
+    /// Resident bytes of the packed form (f32 host storage).
+    pub fn resident_bytes(&self) -> usize {
+        (self.panels.len() + self.tail.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+impl Matrix {
+    /// [`Matrix::matmul_bf16_blocked_t_par`] against layer-resident
+    /// [`PackedWeights`]: identical numerics (bit-exact, asserted by
+    /// tests), but the four add chains of the quad kernel read one
+    /// contiguous `[k][4]` panel stream instead of four strided rows,
+    /// and the weights are already bf16 so only the activations are
+    /// quantized per call.
+    pub fn matmul_bf16_blocked_t_packed_par(
+        &self,
+        w: &PackedWeights,
+        k_block: usize,
+        par: Parallelism,
+    ) -> Result<Matrix> {
+        ensure!(
+            self.cols == w.k,
+            "matmul_t dim mismatch: {}x{} · ({}x{})ᵀ",
+            self.rows,
+            self.cols,
+            w.n,
+            w.k
+        );
+        ensure!(k_block > 0, "k_block must be positive");
+        let k = self.cols;
+        let a_q: Vec<f32> = self
+            .data
+            .iter()
+            .map(|&x| BF16::from_f32(x).to_f32())
+            .collect();
+        let n = w.n;
+        let mut out = Matrix::zeros(self.rows, n);
+        let workers = par.workers_for(self.rows * k * n);
+        par_tiles_with(
+            par.dispatch(),
+            workers,
+            self.rows,
+            n,
+            &mut out.data,
+            |rr, cc, tile| packed_t_tile(&a_q, w, k_block, rr, cc, tile),
+        );
+        Ok(out)
+    }
+}
+
+/// Tile kernel for [`Matrix::matmul_bf16_blocked_t_packed_par`].
+///
+/// Column ranges produced by the tiler may start or end mid-panel; those
+/// edge columns (and the `N % 4` tail rows) take a scalar path that walks
+/// the same k-blocked accumulation order, so every output element is
+/// computed identically regardless of how the tiler split the columns.
+pub(super) fn packed_t_tile(
+    a_q: &[f32],
+    w: &PackedWeights,
+    k_block: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    let k = w.k;
+    let tw = cols.len();
+    let n_full = w.n_full();
+    let mut r = rows.start;
+    while r < rows.end {
+        // Tile over up to 4 batch rows so each panel stream serves 4
+        // outputs' worth of rows (same W-traffic argument as the
+        // unpacked kernel).
+        let r_tile = (rows.end - r).min(4);
+        let mut c = cols.start;
+        while c < cols.end {
+            if c % 4 == 0 && c + 4 <= cols.end && c + 4 <= n_full {
+                // Aligned quad: one contiguous [k][4] panel.
+                let panel = &w.panels[(c / 4) * 4 * k..(c / 4 + 1) * 4 * k];
+                for rr in r..r + r_tile {
+                    let a_row = &a_q[rr * k..(rr + 1) * k];
+                    let (mut acc0, mut acc1, mut acc2, mut acc3) = (0f32, 0f32, 0f32, 0f32);
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let k1 = (k0 + k_block).min(k);
+                        let (mut b0, mut b1, mut b2, mut b3) = (0f32, 0f32, 0f32, 0f32);
+                        for kk in k0..k1 {
+                            let a = a_row[kk];
+                            let lane = &panel[kk * 4..kk * 4 + 4];
+                            b0 += a * lane[0];
+                            b1 += a * lane[1];
+                            b2 += a * lane[2];
+                            b3 += a * lane[3];
+                        }
+                        acc0 += b0;
+                        acc1 += b1;
+                        acc2 += b2;
+                        acc3 += b3;
+                        k0 = k1;
+                    }
+                    let t_row = &mut tile[(rr - rows.start) * tw..(rr - rows.start + 1) * tw];
+                    let tc = c - cols.start;
+                    t_row[tc] = acc0;
+                    t_row[tc + 1] = acc1;
+                    t_row[tc + 2] = acc2;
+                    t_row[tc + 3] = acc3;
+                }
+                c += 4;
+            } else {
+                // Scalar column: strided panel lane (tile-edge columns)
+                // or a row-major tail row. Same k-blocked order.
+                for rr in r..r + r_tile {
+                    let a_row = &a_q[rr * k..(rr + 1) * k];
+                    let mut acc = 0.0f32;
+                    let mut k0 = 0;
+                    while k0 < k {
+                        let k1 = (k0 + k_block).min(k);
+                        let mut block = 0.0f32;
+                        if c < n_full {
+                            let panel = &w.panels[(c / 4) * 4 * k..(c / 4 + 1) * 4 * k];
+                            let j = c % 4;
+                            for kk in k0..k1 {
+                                block += a_row[kk] * panel[kk * 4 + j];
+                            }
+                        } else {
+                            let w_row = &w.tail[(c - n_full) * k..(c - n_full + 1) * k];
+                            for kk in k0..k1 {
+                                block += a_row[kk] * w_row[kk];
+                            }
+                        }
+                        acc += block;
+                        k0 = k1;
+                    }
+                    tile[(rr - rows.start) * tw + (c - cols.start)] = acc;
+                }
+                c += 1;
+            }
+        }
+        r += r_tile;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{check, Gen};
+
+    fn rand_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| g.f32_in(-3.0, 3.0)).collect())
+            .unwrap()
+    }
+
+    #[test]
+    fn packed_matmul_bit_exact_with_unpacked_known_shapes() {
+        let mut g = Gen::new(41);
+        // n spanning every n % 4 residue, incl. n < 4 (tail-only).
+        for (b, k, n) in [(3usize, 33usize, 16usize), (5, 40, 17), (2, 19, 6), (1, 50, 3)] {
+            let a = rand_matrix(&mut g, b, k);
+            let w_nk = rand_matrix(&mut g, n, k);
+            let pw = PackedWeights::pack(&w_nk);
+            for kb in [1usize, 5, 16, 100] {
+                let unpacked = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
+                let packed = a
+                    .matmul_bf16_blocked_t_packed_par(&pw, kb, Parallelism::serial())
+                    .unwrap();
+                assert_eq!(unpacked, packed, "b={b} k={k} n={n} kb={kb}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_packed_tile_exact_under_any_column_split() {
+        // Arbitrary (incl. unaligned) column ranges must reproduce the
+        // serial kernel exactly — this is what the tiler can produce.
+        check("packed tile == unpacked under splits", 40, |g: &mut Gen| {
+            let b = g.usize_in(1..6);
+            let k = g.usize_in(1..80);
+            let n = g.usize_in(1..24);
+            let kb = g.usize_in(1..12);
+            let a = rand_matrix(g, b, k);
+            let w_nk = rand_matrix(g, n, k);
+            let pw = PackedWeights::pack(&w_nk);
+            let want = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
+            for workers in [2usize, 3, 7] {
+                let mut out = vec![0.0f32; b * n];
+                let a_q: Vec<f32> = a.data.iter().map(|&x| BF16::from_f32(x).to_f32()).collect();
+                crate::util::par::par_tiles(workers, b, n, &mut out, |rr, cc, tile| {
+                    packed_t_tile(&a_q, &pw, kb, rr, cc, tile)
+                });
+                if out != want.data {
+                    return Err(format!("mismatch b={b} k={k} n={n} kb={kb} w={workers}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pack_quantizes_to_bf16_once() {
+        // A weight that is not bf16-representable must be rounded at
+        // pack time, matching what the unpacked kernel does per call.
+        let w = Matrix::from_vec(1, 1, vec![1.0 + 2f32.powi(-9)]).unwrap();
+        let pw = PackedWeights::pack(&w);
+        let a = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
+        let y = a
+            .matmul_bf16_blocked_t_packed_par(&pw, 16, Parallelism::serial())
+            .unwrap();
+        assert_eq!(y.data, vec![BF16::from_f32(1.0 + 2f32.powi(-9)).to_f32()]);
+    }
+
+    #[test]
+    fn packed_shape_mismatch_errors() {
+        let a = Matrix::zeros(2, 5);
+        let pw = PackedWeights::pack(&Matrix::zeros(3, 4));
+        assert!(a
+            .matmul_bf16_blocked_t_packed_par(&pw, 16, Parallelism::serial())
+            .is_err());
+        assert_eq!(pw.resident_bytes(), 3 * 4 * 4);
+    }
+}

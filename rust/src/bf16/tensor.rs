@@ -11,7 +11,7 @@ use std::ops::Range;
 use anyhow::{ensure, Result};
 
 use super::{mac_bf16, BF16};
-use crate::util::par::{par_tiles, Parallelism};
+use crate::util::par::{par_tiles_with, Parallelism};
 
 /// Dense row-major matrix of f32.
 #[derive(Debug, Clone, PartialEq)]
@@ -106,9 +106,14 @@ impl Matrix {
         let (k, n) = (self.cols, rhs.cols);
         let mut out = Matrix::zeros(self.rows, n);
         let workers = par.workers_for(self.rows * k * n);
-        par_tiles(workers, self.rows, n, &mut out.data, |rr, cc, tile| {
-            f32_tile(&self.data, &rhs.data, k, n, rr, cc, tile)
-        });
+        par_tiles_with(
+            par.dispatch(),
+            workers,
+            self.rows,
+            n,
+            &mut out.data,
+            |rr, cc, tile| f32_tile(&self.data, &rhs.data, k, n, rr, cc, tile),
+        );
         Ok(out)
     }
 
@@ -176,9 +181,14 @@ impl Matrix {
         let (k, n) = (self.cols, rhs.cols);
         let mut out = Matrix::zeros(self.rows, n);
         let workers = par.workers_for(self.rows * k * n);
-        par_tiles(workers, self.rows, n, &mut out.data, |rr, cc, tile| {
-            bf16_blocked_tile(&a_q, &b_q, k, n, k_block, rr, cc, tile)
-        });
+        par_tiles_with(
+            par.dispatch(),
+            workers,
+            self.rows,
+            n,
+            &mut out.data,
+            |rr, cc, tile| bf16_blocked_tile(&a_q, &b_q, k, n, k_block, rr, cc, tile),
+        );
         Ok(out)
     }
 
@@ -224,9 +234,14 @@ impl Matrix {
         let n = w_nk.rows;
         let mut out = Matrix::zeros(self.rows, n);
         let workers = par.workers_for(self.rows * k * n);
-        par_tiles(workers, self.rows, n, &mut out.data, |rr, cc, tile| {
-            blocked_t_tile(&a_q, &w_q, k, k_block, rr, cc, tile)
-        });
+        par_tiles_with(
+            par.dispatch(),
+            workers,
+            self.rows,
+            n,
+            &mut out.data,
+            |rr, cc, tile| blocked_t_tile(&a_q, &w_q, k, k_block, rr, cc, tile),
+        );
         Ok(out)
     }
 

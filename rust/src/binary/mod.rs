@@ -66,6 +66,25 @@ impl BitVector {
         }
     }
 
+    /// Pack `len` sign bits produced by `bit(i)` (true ⇔ -1), a whole
+    /// word at a time — the generalized form of [`Self::from_f32`],
+    /// used to fold a layer epilogue directly into the sign decision
+    /// without materializing the float row first.
+    pub fn from_fn(len: usize, mut bit: impl FnMut(usize) -> bool) -> Self {
+        let mut words = Vec::with_capacity(len.div_ceil(64));
+        let mut i = 0;
+        while i < len {
+            let n = (len - i).min(64);
+            let mut w = 0u64;
+            for b in 0..n {
+                w |= u64::from(bit(i + b)) << b;
+            }
+            words.push(w);
+            i += n;
+        }
+        Self { len, words }
+    }
+
     /// Expand back to floats in {-1.0, +1.0}.
     pub fn to_f32(&self) -> Vec<f32> {
         let mut out = vec![0.0f32; self.len];
@@ -257,6 +276,22 @@ mod tests {
                 Ok(())
             } else {
                 Err(format!("packing mismatch at n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_from_fn_matches_from_f32() {
+        // The predicate packer must agree with the float packer (and
+        // keep the tail-word zero invariant) for every length.
+        check("from_fn == from_f32", 150, |g: &mut Gen| {
+            let n = g.usize_in(1..200);
+            let xs: Vec<f32> = (0..n).map(|_| g.nasty_f32()).collect();
+            let by_fn = BitVector::from_fn(n, |i| xs[i] < 0.0);
+            if by_fn == BitVector::from_f32(&xs) {
+                Ok(())
+            } else {
+                Err(format!("from_fn diverged at n={n}"))
             }
         });
     }

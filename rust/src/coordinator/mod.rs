@@ -32,6 +32,7 @@ pub use request::{InferenceRequest, InferenceResponse};
 pub use router::{RoutePolicy, Router};
 pub use server::{Server, ServerConfig};
 
-// The kernel-parallelism budget carried by [`ServerConfig`]; re-exported
-// so serving callers don't need to reach into `util::par`.
-pub use crate::util::par::Parallelism;
+// The kernel-parallelism budget carried by [`ServerConfig`] (and its
+// dispatch-strategy knob); re-exported so serving callers don't need to
+// reach into `util::par`.
+pub use crate::util::par::{Dispatch, Parallelism};

@@ -24,7 +24,10 @@ pub struct ServerConfig {
     /// Kernel-parallelism budget handed to the backend for every batch
     /// (auto-sized to the host by default). A dynamic batch closed by
     /// the batcher fans its matmuls out across this many cores; logits
-    /// are bit-identical at any worker count.
+    /// are bit-identical at any worker count. The budget dispatches to
+    /// the process-wide persistent worker pool, which [`Server::start`]
+    /// constructs eagerly — so no request, not even the first, pays
+    /// thread-spawn cost.
     pub parallelism: Parallelism,
 }
 
@@ -46,8 +49,11 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start the worker thread with a backend.
+    /// Start the worker thread with a backend. Also warms the
+    /// process-wide kernel worker pool (a no-op for serial budgets and
+    /// on every call after the first), so batch dispatch never spawns.
     pub fn start(mut backend: Backend, config: ServerConfig) -> Self {
+        config.parallelism.warm_pool();
         let (tx, rx) = channel::<InferenceRequest>();
         let metrics = Arc::new(Metrics::new());
         let metrics_worker = Arc::clone(&metrics);

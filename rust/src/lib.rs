@@ -15,8 +15,11 @@
 //!   batching ([`coordinator`]).
 //!
 //! The functional hot paths (bf16 and XNOR-popcount matmuls) execute on
-//! a parallel, cache-tiled engine ([`util::par`]) that is bit-identical
-//! to the scalar kernels and the systolic simulator at any worker count.
+//! a parallel, cache-tiled engine ([`util::par`]) dispatching to a
+//! persistent worker pool ([`util::pool`]), with layer-resident packed
+//! weight panels ([`bf16::PackedWeights`]) and packed activation
+//! streaming through binary layer runs — all bit-identical to the
+//! scalar kernels and the systolic simulator at any worker count.
 //!
 //! The crate is self-contained after `make artifacts`: Python never runs
 //! on the request path.

@@ -3,8 +3,8 @@
 use anyhow::{ensure, Result};
 
 use super::hardtanh;
-use crate::bf16::{BF16, Matrix};
-use crate::binary::BitMatrix;
+use crate::bf16::{Matrix, PackedWeights, BF16};
+use crate::binary::{BitMatrix, BitVector};
 use crate::util::par::Parallelism;
 
 /// Datapath precision of a layer — the systolic array mode (§III-C) used
@@ -79,8 +79,16 @@ impl BatchNorm {
 #[derive(Debug, Clone)]
 pub struct DenseLayer {
     /// Float weights, `out × in`. For binary layers these are the ±1
-    /// expansion of `bits` (kept for the float reference path).
+    /// expansion of `bits` (kept for the float reference path). Do not
+    /// mutate in place — the layer-resident packed forms (`packed`,
+    /// `bits`) are derived at construction; rebuild the layer through
+    /// [`DenseLayer::bf16`] / [`DenseLayer::binary`] to change weights.
     pub weights: Matrix,
+    /// Layer-resident interleaved `[k][4]` weight panels for bf16
+    /// layers — built once at construction so the serving hot path
+    /// never re-packs (or re-quantizes) weights per call. Private so it
+    /// cannot desync from `weights`.
+    packed: Option<PackedWeights>,
     /// Packed sign bits for binary layers.
     pub bits: Option<BitMatrix>,
     /// Datapath mode.
@@ -106,8 +114,10 @@ impl DenseLayer {
     /// resolution immediately (they live in BRAM as bf16).
     pub fn bf16(mut weights: Matrix, bn: Option<BatchNorm>, activation: bool) -> Self {
         weights.map_inplace(|w| BF16::from_f32(w).to_f32());
+        let packed = PackedWeights::pack(&weights);
         Self {
             weights,
+            packed: Some(packed),
             bits: None,
             precision: Precision::Bf16,
             bn,
@@ -120,6 +130,7 @@ impl DenseLayer {
         let bits = BitMatrix::from_matrix(weights);
         Self {
             weights: bits.to_matrix(),
+            packed: None,
             bits: Some(bits),
             precision: Precision::Binary,
             bn,
@@ -166,24 +177,111 @@ impl DenseLayer {
                 // x · Wᵀ in the hardware's bf16 numerics: k-blocked
                 // accumulation matching the 16-wide systolic columns
                 // (bit-exact with the simulator). Weights are already in
-                // the N×K hardware layout, so the row-contiguous kernel
-                // applies directly (EXPERIMENTS.md §Perf).
-                x.matmul_bf16_blocked_t_par(&self.weights, crate::ARRAY_DIM, par)?
+                // the N×K hardware layout; bf16 layers carry the
+                // layer-resident interleaved panels, so the packed
+                // kernel applies directly (EXPERIMENTS.md §Perf).
+                match &self.packed {
+                    Some(pw) => x.matmul_bf16_blocked_t_packed_par(pw, crate::ARRAY_DIM, par)?,
+                    None => x.matmul_bf16_blocked_t_par(&self.weights, crate::ARRAY_DIM, par)?,
+                }
             }
             Precision::Binary => {
-                // Binarize incoming activations, XNOR-popcount against
-                // packed weights (already N×K layout for matmul_t).
-                let xb = BitMatrix::from_matrix(x);
+                // Binarize incoming activations (row bands in parallel
+                // for wide batches), XNOR-popcount against packed
+                // weights (already N×K layout for matmul_t).
+                let xb = BitMatrix::from_matrix_par(x, par);
                 xb.matmul_t_par(self.bits.as_ref().expect("binary layer has bits"), par)?
             }
         };
-        for r in 0..pre.rows {
-            for c in 0..pre.cols {
-                let v = self.epilogue(c, pre.get(r, c));
-                pre.set(r, c, v);
-            }
-        }
+        self.apply_epilogue(&mut pre, par);
         Ok(pre)
+    }
+
+    /// Binary-layer forward on **already packed** activations: the
+    /// XNOR-popcount matmul plus the float epilogue, skipping the
+    /// per-layer expand→re-pack round trip of [`Self::forward_with`].
+    /// Identical output to `forward_with(xb.to_matrix(), par)` for ±1
+    /// inputs (asserted by tests).
+    pub fn forward_packed_with(&self, xb: &BitMatrix, par: Parallelism) -> Result<Matrix> {
+        ensure!(
+            self.precision == Precision::Binary,
+            "forward_packed_with needs a binary layer"
+        );
+        ensure!(
+            xb.cols == self.in_features(),
+            "layer expects {} features, got {}",
+            self.in_features(),
+            xb.cols
+        );
+        let mut pre = xb.matmul_t_par(self.bits.as_ref().expect("binary layer has bits"), par)?;
+        self.apply_epilogue(&mut pre, par);
+        Ok(pre)
+    }
+
+    /// Binary-layer forward that feeds **another binary layer**: the
+    /// epilogue is folded into the packed sign decision, so the output
+    /// activations are produced directly as a [`BitMatrix`] — no float
+    /// expansion is ever materialized between consecutive binary layers.
+    ///
+    /// Bit-exact with the float path by construction: the next layer
+    /// would pack `bit = epilogue(c, count) < 0.0`, which is exactly the
+    /// bit computed here ([`crate::binary::BitVector::from_f32`]'s sign
+    /// rule applied to the epilogue output, including the bf16 rounding
+    /// and the `-0.0 → +1` convention).
+    pub fn forward_packed_to_bits_with(
+        &self,
+        xb: &BitMatrix,
+        par: Parallelism,
+    ) -> Result<BitMatrix> {
+        ensure!(
+            self.precision == Precision::Binary,
+            "forward_packed_to_bits_with needs a binary layer"
+        );
+        ensure!(
+            xb.cols == self.in_features(),
+            "layer expects {} features, got {}",
+            self.in_features(),
+            xb.cols
+        );
+        let pre = xb.matmul_t_par(self.bits.as_ref().expect("binary layer has bits"), par)?;
+        let n = pre.cols;
+        // The fold is elementwise — band it like activation packing.
+        let workers = par.workers_for(pre.rows * n / 4);
+        let row_bits = crate::util::pool::par_row_bands(par.dispatch(), workers, pre.rows, |band| {
+            band.map(|r| {
+                let row = pre.row(r);
+                BitVector::from_fn(n, |c| self.epilogue(c, row[c]) < 0.0)
+            })
+            .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        Ok(BitMatrix {
+            rows: pre.rows,
+            cols: n,
+            row_bits,
+        })
+    }
+
+    /// Apply [`Self::epilogue`] to every element of `m`, fanning out
+    /// over row bands for wide outputs (elementwise → any split is
+    /// identical to the serial loop).
+    fn apply_epilogue(&self, m: &mut Matrix, par: Parallelism) {
+        let n = m.cols;
+        if n == 0 || m.rows == 0 {
+            return;
+        }
+        // Epilogue steps are cheap relative to MACs; scale down so only
+        // genuinely wide outputs fan out.
+        let workers = par.workers_for(m.rows * n / 4);
+        crate::util::pool::par_row_chunks_mut(par.dispatch(), workers, n, &mut m.data, |_, band| {
+            for row in band.chunks_mut(n) {
+                for (c, v) in row.iter_mut().enumerate() {
+                    *v = self.epilogue(c, *v);
+                }
+            }
+        });
     }
 
     /// Weight storage bytes (Table II model): bf16 = 2 B/weight, binary =
@@ -292,6 +390,52 @@ mod tests {
                 Err("magnitude leaked into binary layer".into())
             }
         });
+    }
+
+    #[test]
+    fn prop_packed_binary_forward_matches_float_path() {
+        // forward_packed_with == forward_with on the expanded input, and
+        // forward_packed_to_bits_with == packing the float output — the
+        // epilogue-folded sign decision must agree bit for bit.
+        check("packed binary forward == float path", 40, |g: &mut Gen| {
+            let k = g.usize_in(1..80);
+            let n = g.usize_in(1..40);
+            let b = g.usize_in(1..5);
+            let w = Matrix::from_vec(n, k, g.signs(n * k)).unwrap();
+            let bn = BatchNorm {
+                scale: (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect(),
+                shift: (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect(),
+            };
+            let layer = DenseLayer::binary(&w, Some(bn), true);
+            let x = Matrix::from_vec(b, k, g.signs(b * k)).unwrap();
+            let xb = BitMatrix::from_matrix(&x);
+            let par = Parallelism::serial();
+            let float_out = layer.forward_with(&x, par).unwrap();
+            let packed_out = layer.forward_packed_with(&xb, par).unwrap();
+            if float_out != packed_out {
+                return Err(format!("packed float output diverged (b={b} k={k} n={n})"));
+            }
+            let bits = layer.forward_packed_to_bits_with(&xb, par).unwrap();
+            if bits != BitMatrix::from_matrix(&float_out) {
+                return Err(format!("folded sign bits diverged (b={b} k={k} n={n})"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_forwards_reject_bf16_layers() {
+        let layer = DenseLayer::bf16(Matrix::zeros(3, 4), None, false);
+        let xb = BitMatrix::from_matrix(&Matrix::zeros(1, 4));
+        assert!(layer.forward_packed_with(&xb, Parallelism::serial()).is_err());
+        assert!(layer
+            .forward_packed_to_bits_with(&xb, Parallelism::serial())
+            .is_err());
+        // bf16 layers carry the layer-resident panels; binary ones don't.
+        assert!(layer.packed.is_some());
+        assert!(DenseLayer::binary(&Matrix::zeros(2, 2), None, false)
+            .packed
+            .is_none());
     }
 
     #[test]

@@ -151,14 +151,40 @@ impl Network {
 
     /// [`Self::forward`] with an explicit parallelism budget, plumbed
     /// through every layer's matmul kernel.
+    ///
+    /// Runs of **consecutive binary layers** execute on packed
+    /// activations end to end: the input is binarized once at the first
+    /// layer of the run, each inner layer folds its epilogue into the
+    /// packed sign decision ([`DenseLayer::forward_packed_to_bits_with`]),
+    /// and only the last layer of the run expands back to floats. This
+    /// is bit-identical to the naive layer-by-layer pass (asserted by
+    /// `tests/integration_par_kernels.rs`) — the float intermediates it
+    /// skips would have been binarized by sign anyway.
     pub fn forward_with(
         &self,
         x: &Matrix,
         par: crate::util::par::Parallelism,
     ) -> Result<Matrix> {
+        use crate::binary::BitMatrix;
+        let is_bin = |i: usize| self.layers[i].precision == Precision::Binary;
+        let n = self.layers.len();
         let mut h = x.clone();
-        for layer in &self.layers {
-            h = layer.forward_with(&h, par)?;
+        let mut i = 0;
+        while i < n {
+            if is_bin(i) && i + 1 < n && is_bin(i + 1) {
+                // Binary run: pack once, stay packed between layers.
+                let mut xb = BitMatrix::from_matrix_par(&h, par);
+                while i + 1 < n && is_bin(i + 1) {
+                    xb = self.layers[i].forward_packed_to_bits_with(&xb, par)?;
+                    i += 1;
+                }
+                // Last layer of the run feeds a bf16 layer (or the
+                // output): expand to floats through the normal epilogue.
+                h = self.layers[i].forward_packed_with(&xb, par)?;
+            } else {
+                h = self.layers[i].forward_with(&h, par)?;
+            }
+            i += 1;
         }
         Ok(h)
     }

@@ -11,12 +11,16 @@
 //! * [`prop`] — a miniature property-based testing framework with
 //!   shrinking-free counterexample reporting.
 //! * [`stats`] — summary statistics shared by `bench` and the reports.
-//! * [`par`] — scoped-thread tiling for the matmul hot paths (no
-//!   `rayon`), with a work-size-aware worker heuristic.
+//! * [`par`] — output tiling for the matmul hot paths (no `rayon`),
+//!   with a work-size-aware worker heuristic.
+//! * [`pool`] — the persistent worker pool the tiles dispatch to
+//!   (parked threads, panic-safe join; spawn-per-call kept as a
+//!   benchmark baseline).
 
 pub mod args;
 pub mod bench;
 pub mod par;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,9 +1,9 @@
-//! Scoped-thread parallel execution for the dense/binary matmul kernels.
+//! Parallel execution config + tiling for the dense/binary matmul kernels.
 //!
 //! The vendored crate set has no `rayon`, so this module provides the
 //! one primitive the hot paths need: partition a row-major output matrix
-//! into disjoint tiles and run a tile kernel on `std::thread::scope`
-//! workers. Two split shapes are used:
+//! into disjoint tiles and run a tile kernel on worker threads. Two
+//! split shapes are used:
 //!
 //! * **Row bands** (batch ≥ workers): each worker gets a contiguous band
 //!   of output rows and writes it in place — zero copies.
@@ -12,45 +12,87 @@
 //!   thread scatters the tiles after the join. This is what lets a
 //!   batch-1 request still fan out across cores.
 //!
+//! Since PR 2 the workers are not spawned per call: tiles are dispatched
+//! to the persistent process-wide [`crate::util::pool::WorkerPool`]
+//! ([`Dispatch::Pool`], the default). The PR 1 spawn-per-call scoped
+//! threads are kept as [`Dispatch::Spawn`] so the probes can measure the
+//! pool against them.
+//!
 //! **Bit-exactness contract:** the tile kernel receives `(row_range,
 //! col_range, tile)` and must compute each output element exactly as the
-//! serial kernel would — the partition only changes *which thread*
-//! computes an element, never the per-element accumulation order. Every
-//! parallel kernel in this crate is asserted bit-identical to its serial
-//! counterpart by `tests/integration_par_kernels.rs`.
+//! serial kernel would — the partition (and the dispatch strategy) only
+//! changes *which thread* computes an element, never the per-element
+//! accumulation order. Every parallel kernel in this crate is asserted
+//! bit-identical to its serial counterpart by
+//! `tests/integration_par_kernels.rs`.
 
 use std::ops::Range;
+
+use super::pool::run_scoped;
+
+/// How tile jobs reach their worker threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Dispatch {
+    /// The persistent process-wide worker pool (amortized spawn cost;
+    /// the serving default).
+    #[default]
+    Pool,
+    /// `std::thread::scope` spawn-per-call — the PR 1 engine, kept as
+    /// the benchmark baseline for the pool.
+    Spawn,
+}
 
 /// How many worker threads the kernels may use.
 ///
 /// `Parallelism` is a *cap*, resolved lazily against the host: the
 /// actual worker count for one kernel invocation also scales with the
 /// amount of work (see [`Parallelism::workers_for`]) so tiny matmuls
-/// never pay thread-spawn overhead.
+/// never pay dispatch overhead.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Parallelism {
     /// Maximum worker threads; `0` = resolve from the host
     /// (`BEANNA_WORKERS` env var, else `available_parallelism`).
     max_workers: usize,
+    /// Worker dispatch strategy (pool by default).
+    dispatch: Dispatch,
 }
 
 impl Parallelism {
     /// Single-threaded execution (the scalar reference behaviour).
     pub fn serial() -> Self {
-        Self { max_workers: 1 }
+        Self {
+            max_workers: 1,
+            dispatch: Dispatch::Pool,
+        }
     }
 
-    /// Exactly `n` workers at most (`n` is clamped to ≥ 1).
+    /// Exactly `n` workers at most (`n` is clamped to ≥ 1, so
+    /// `fixed(0)` is a synonym for [`Parallelism::serial`]).
     pub fn fixed(n: usize) -> Self {
         Self {
             max_workers: n.max(1),
+            dispatch: Dispatch::Pool,
         }
     }
 
     /// Resolve from the host at call time: the `BEANNA_WORKERS` env var
     /// if set, else `std::thread::available_parallelism`.
     pub fn auto() -> Self {
-        Self { max_workers: 0 }
+        Self {
+            max_workers: 0,
+            dispatch: Dispatch::Pool,
+        }
+    }
+
+    /// Same budget, different dispatch strategy (benchmarking hook).
+    pub fn with_dispatch(mut self, dispatch: Dispatch) -> Self {
+        self.dispatch = dispatch;
+        self
+    }
+
+    /// The dispatch strategy tile jobs will use.
+    pub fn dispatch(&self) -> Dispatch {
+        self.dispatch
     }
 
     /// The resolved worker cap for this configuration.
@@ -58,12 +100,22 @@ impl Parallelism {
         if self.max_workers > 0 {
             return self.max_workers;
         }
-        if let Ok(s) = std::env::var("BEANNA_WORKERS") {
-            if let Ok(n) = s.trim().parse::<usize>() {
-                if n > 0 {
-                    return n;
-                }
+        let raw = std::env::var("BEANNA_WORKERS").ok();
+        let parsed = parse_workers_env(raw.as_deref());
+        match parsed {
+            Some(Ok(n)) => return n,
+            Some(Err(())) => {
+                // Warn exactly once per process, then behave as auto.
+                static WARN: std::sync::Once = std::sync::Once::new();
+                WARN.call_once(|| {
+                    eprintln!(
+                        "warning: malformed BEANNA_WORKERS={:?} (want a positive integer); \
+                         falling back to auto",
+                        raw.unwrap_or_default()
+                    );
+                });
             }
+            None => {}
         }
         std::thread::available_parallelism()
             .map(|n| n.get())
@@ -77,6 +129,14 @@ impl Parallelism {
     pub fn workers_for(&self, ops: usize) -> usize {
         (ops / MIN_OPS_PER_WORKER).clamp(1, self.max_workers())
     }
+
+    /// Eagerly construct (and size to this budget) the process-wide
+    /// worker pool this budget will dispatch to, so the first request
+    /// of a serving session pays neither thread creation nor pool
+    /// growth. No-op for serial budgets and for [`Dispatch::Spawn`].
+    pub fn warm_pool(&self) {
+        let _ = crate::util::pool::clamp_to_pool(self.dispatch, self.max_workers());
+    }
 }
 
 impl Default for Parallelism {
@@ -85,13 +145,31 @@ impl Default for Parallelism {
     }
 }
 
-/// Minimum inner-loop steps per worker before spawning pays off
-/// (~tens of microseconds of work against ~tens of microseconds of
-/// spawn+join).
+/// Interpret a raw `BEANNA_WORKERS` value: `None` = unset,
+/// `Some(Ok(n))` = a usable positive count, `Some(Err(()))` = malformed
+/// (non-numeric, or zero) — callers fall back to auto with a warning.
+pub fn parse_workers_env(raw: Option<&str>) -> Option<Result<usize, ()>> {
+    let s = raw?;
+    Some(match s.trim().parse::<usize>() {
+        Ok(n) if n > 0 => Ok(n),
+        _ => Err(()),
+    })
+}
+
+/// Minimum inner-loop steps per worker before fanning out pays off
+/// (~tens of microseconds of work against the dispatch overhead).
 pub const MIN_OPS_PER_WORKER: usize = 32 * 1024;
 
+/// [`par_tiles_with`] on the default pool dispatch.
+pub fn par_tiles<K>(workers: usize, rows: usize, cols: usize, out: &mut [f32], kernel: K)
+where
+    K: Fn(Range<usize>, Range<usize>, &mut [f32]) + Sync,
+{
+    par_tiles_with(Dispatch::Pool, workers, rows, cols, out, kernel)
+}
+
 /// Run `kernel` over the `rows × cols` row-major output `out`, split
-/// across up to `workers` scoped threads.
+/// across up to `workers` tile jobs on the chosen [`Dispatch`].
 ///
 /// `kernel(row_range, col_range, tile)` must fill `tile` — a row-major
 /// `row_range.len() × col_range.len()` buffer (pre-zeroed) — with the
@@ -100,9 +178,15 @@ pub const MIN_OPS_PER_WORKER: usize = 32 * 1024;
 ///
 /// With `workers <= 1` (or an output too small to split) the kernel is
 /// invoked once on the calling thread with the full range — this is the
-/// serial path and the behavioural reference.
-pub fn par_tiles<K>(workers: usize, rows: usize, cols: usize, out: &mut [f32], kernel: K)
-where
+/// serial path and the behavioural reference; it never touches the pool.
+pub fn par_tiles_with<K>(
+    dispatch: Dispatch,
+    workers: usize,
+    rows: usize,
+    cols: usize,
+    out: &mut [f32],
+    kernel: K,
+) where
     K: Fn(Range<usize>, Range<usize>, &mut [f32]) + Sync,
 {
     assert_eq!(out.len(), rows * cols, "output buffer size mismatch");
@@ -111,16 +195,14 @@ where
         kernel(0..rows, 0..cols, out);
         return;
     }
+    // Grow the pool to an explicitly larger budget and never split
+    // finer than the dispatch can actually run concurrently.
+    let workers = super::pool::clamp_to_pool(dispatch, workers);
     if rows >= workers {
         // Row bands, written in place.
-        let band_rows = rows.div_ceil(workers);
-        std::thread::scope(|s| {
-            for (i, band) in out.chunks_mut(band_rows * cols).enumerate() {
-                let r0 = i * band_rows;
-                let range = r0..r0 + band.len() / cols;
-                let k = &kernel;
-                s.spawn(move || k(range, 0..cols, band));
-            }
+        let kernel = &kernel;
+        super::pool::par_row_chunks_mut(dispatch, workers, cols, out, |r0, band| {
+            kernel(r0..r0 + band.len() / cols, 0..cols, band)
         });
     } else if cols >= workers {
         // Column bands through private scratch tiles.
@@ -132,14 +214,19 @@ where
                 (c0..c1, vec![0.0f32; rows * (c1 - c0)])
             })
             .collect();
-        std::thread::scope(|s| {
-            for (range, tile) in bands.iter_mut() {
-                let range = range.clone();
-                let tile = tile.as_mut_slice();
-                let k = &kernel;
-                s.spawn(move || k(0..rows, range, tile));
-            }
-        });
+        {
+            let kernel = &kernel;
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = bands
+                .iter_mut()
+                .map(|(range, tile)| {
+                    let range = range.clone();
+                    let tile = tile.as_mut_slice();
+                    Box::new(move || kernel(0..rows, range, tile))
+                        as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            run_scoped(dispatch, jobs);
+        }
         for (range, tile) in &bands {
             let w = range.len();
             for r in 0..rows {
@@ -183,23 +270,27 @@ mod tests {
     }
 
     #[test]
-    fn row_split_matches_serial() {
-        for rows in [4usize, 7, 8, 9, 32] {
-            let cols = 5;
-            let mut out = vec![0.0; rows * cols];
-            par_tiles(4, rows, cols, &mut out, fill);
-            assert_eq!(out, reference(rows, cols), "rows={rows}");
+    fn row_split_matches_serial_on_both_dispatches() {
+        for dispatch in [Dispatch::Pool, Dispatch::Spawn] {
+            for rows in [4usize, 7, 8, 9, 32] {
+                let cols = 5;
+                let mut out = vec![0.0; rows * cols];
+                par_tiles_with(dispatch, 4, rows, cols, &mut out, fill);
+                assert_eq!(out, reference(rows, cols), "rows={rows} {dispatch:?}");
+            }
         }
     }
 
     #[test]
-    fn col_split_matches_serial() {
+    fn col_split_matches_serial_on_both_dispatches() {
         // rows < workers forces the column-band path.
-        for cols in [8usize, 9, 17, 64] {
-            let rows = 2;
-            let mut out = vec![0.0; rows * cols];
-            par_tiles(8, rows, cols, &mut out, fill);
-            assert_eq!(out, reference(rows, cols), "cols={cols}");
+        for dispatch in [Dispatch::Pool, Dispatch::Spawn] {
+            for cols in [8usize, 9, 17, 64] {
+                let rows = 2;
+                let mut out = vec![0.0; rows * cols];
+                par_tiles_with(dispatch, 8, rows, cols, &mut out, fill);
+                assert_eq!(out, reference(rows, cols), "cols={cols} {dispatch:?}");
+            }
         }
     }
 
@@ -216,12 +307,32 @@ mod tests {
     fn parallelism_heuristics() {
         assert_eq!(Parallelism::serial().max_workers(), 1);
         assert_eq!(Parallelism::fixed(3).max_workers(), 3);
+        // fixed(0) clamps to 1 — the serial budget, never a panic.
         assert_eq!(Parallelism::fixed(0).max_workers(), 1);
+        assert_eq!(Parallelism::fixed(0), Parallelism::serial());
         assert!(Parallelism::auto().max_workers() >= 1);
         // Small work stays serial; big work scales to the cap.
         let p = Parallelism::fixed(8);
         assert_eq!(p.workers_for(100), 1);
         assert_eq!(p.workers_for(MIN_OPS_PER_WORKER * 3), 3);
         assert_eq!(p.workers_for(usize::MAX / 2), 8);
+        // Dispatch is carried by the budget and defaults to the pool.
+        assert_eq!(p.dispatch(), Dispatch::Pool);
+        assert_eq!(p.with_dispatch(Dispatch::Spawn).dispatch(), Dispatch::Spawn);
+    }
+
+    #[test]
+    fn workers_env_parsing() {
+        // Unset: defer to available_parallelism.
+        assert_eq!(parse_workers_env(None), None);
+        // Well-formed values (whitespace tolerated).
+        assert_eq!(parse_workers_env(Some("4")), Some(Ok(4)));
+        assert_eq!(parse_workers_env(Some(" 16 ")), Some(Ok(16)));
+        // Malformed values fall back to auto (with a warning) rather
+        // than being silently ignored or panicking.
+        assert_eq!(parse_workers_env(Some("0")), Some(Err(())));
+        assert_eq!(parse_workers_env(Some("-3")), Some(Err(())));
+        assert_eq!(parse_workers_env(Some("lots")), Some(Err(())));
+        assert_eq!(parse_workers_env(Some("")), Some(Err(())));
     }
 }

@@ -1,0 +1,524 @@
+//! Persistent worker pool for the matmul hot paths.
+//!
+//! PR 1's engine spawned and joined OS threads via `std::thread::scope`
+//! on **every** kernel call. That is correct and simple, but a
+//! heavy-traffic coordinator serving small batches pays the
+//! spawn+join cost (tens of microseconds) per request — comparable to
+//! the matmul itself at batch 1. This module amortizes it: a process-wide
+//! [`WorkerPool`] of parked threads is created once (lazily, sized by
+//! [`Parallelism::auto`]) and every subsequent tile dispatch is a
+//! queue push + wakeup instead of a `clone(2)`.
+//!
+//! Design notes:
+//!
+//! * **Scoped semantics without `'static` jobs.** [`WorkerPool::run_jobs`]
+//!   blocks until every submitted job has finished, so jobs may borrow
+//!   from the caller's stack. Internally the borrow lifetime is erased
+//!   (see the `SAFETY` comment) — the blocking join is what makes that
+//!   sound, exactly like `std::thread::scope`.
+//! * **Panic-safe join.** A panicking job never takes down a pool
+//!   thread: the worker catches the unwind, records the payload, keeps
+//!   serving, and the panic is resumed on the *dispatching* thread after
+//!   all jobs in the group finish — same observable behaviour as a
+//!   panicking `std::thread::scope` child.
+//! * **The caller helps.** While waiting, the dispatching thread drains
+//!   the queue itself, so a dispatch of `w` jobs reaches concurrency `w`
+//!   even when the pool is briefly oversubscribed, and a pool of `P`
+//!   threads never idles the calling core.
+//! * **Nested dispatch runs inline.** A job that itself calls
+//!   `run_jobs` (e.g. a kernel composed of parallel stages) executes the
+//!   inner jobs on its own thread — no deadlock, no queue recursion.
+//!
+//! The serial path of [`crate::util::par::par_tiles_with`] never touches
+//! the pool, so bit-exactness of the scalar reference is preserved by
+//! construction; the pool only changes *which thread* runs a tile.
+
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+use super::par::{Dispatch, Parallelism};
+
+/// A lifetime-erased job plus the completion group it belongs to.
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Shared job queue: pending `(job, group)` pairs + shutdown flag.
+struct Queue {
+    jobs: Mutex<QueueState>,
+    /// Signalled when a job is pushed or shutdown begins.
+    available: Condvar,
+}
+
+struct QueueState {
+    pending: VecDeque<(Task, Arc<Group>)>,
+    shutdown: bool,
+}
+
+/// Completion tracking for one `run_jobs` call.
+struct Group {
+    state: Mutex<GroupState>,
+    /// Signalled when the last job of the group finishes.
+    done: Condvar,
+}
+
+struct GroupState {
+    remaining: usize,
+    /// First panic payload observed in this group, if any.
+    panic: Option<Box<dyn std::any::Any + Send>>,
+}
+
+thread_local! {
+    /// True on pool worker threads — used to run nested dispatch inline.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Hard ceiling on pool growth — a guard against pathological budgets,
+/// far above any sane kernel fan-out.
+const MAX_POOL_THREADS: usize = 256;
+
+/// A persistent pool of parked worker threads (see module docs).
+pub struct WorkerPool {
+    queue: Arc<Queue>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    threads: AtomicUsize,
+}
+
+impl WorkerPool {
+    /// Create a pool with `threads` parked workers (clamped to ≥ 1).
+    pub fn new(threads: usize) -> Self {
+        let queue = Arc::new(Queue {
+            jobs: Mutex::new(QueueState {
+                pending: VecDeque::new(),
+                shutdown: false,
+            }),
+            available: Condvar::new(),
+        });
+        let pool = Self {
+            queue,
+            handles: Mutex::new(Vec::new()),
+            threads: AtomicUsize::new(0),
+        };
+        pool.ensure_threads(threads.max(1));
+        pool
+    }
+
+    /// Number of worker threads in this pool.
+    pub fn threads(&self) -> usize {
+        self.threads.load(Ordering::Acquire)
+    }
+
+    /// Grow the pool to at least `n` worker threads (capped at a hard
+    /// ceiling). The global pool starts at the auto-sized host budget;
+    /// an explicitly larger `Parallelism::fixed(n)` / `--kernel-workers`
+    /// request grows it on first use so the configured fan-out is
+    /// honored rather than silently capped. Growth is one-time and
+    /// monotonic; shrinking never happens (idle workers just park).
+    pub fn ensure_threads(&self, n: usize) {
+        let n = n.min(MAX_POOL_THREADS);
+        if n <= self.threads() {
+            return;
+        }
+        let mut handles = self.handles.lock().unwrap();
+        let cur = handles.len();
+        for i in cur..n {
+            let q = Arc::clone(&self.queue);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("beanna-pool-{i}"))
+                    .spawn(move || worker_loop(&q))
+                    .expect("spawn pool worker"),
+            );
+        }
+        if n > cur {
+            self.threads.store(n, Ordering::Release);
+        }
+    }
+
+    /// The process-wide pool, created on first use and sized by
+    /// [`Parallelism::auto`] (honors `BEANNA_WORKERS`). Never torn down —
+    /// its threads park between dispatches and cost nothing while idle.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| WorkerPool::new(Parallelism::auto().max_workers()))
+    }
+
+    /// Run every job to completion, borrowing from the caller's scope.
+    ///
+    /// Blocks until all jobs have finished (the scoped-thread contract).
+    /// If any job panicked, the first panic is resumed here — after the
+    /// whole group has completed, so no job is left running with dangling
+    /// borrows.
+    pub fn run_jobs<'scope>(&self, mut jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        match jobs.len() {
+            0 => return,
+            // A single job has nothing to overlap with — run it here.
+            1 => {
+                (jobs.pop().expect("len checked"))();
+                return;
+            }
+            _ => {}
+        }
+        // Nested dispatch from inside a pool job: run inline. The outer
+        // group's accounting already covers this thread, and queueing
+        // could deadlock if every worker did it.
+        if IN_POOL_WORKER.with(|f| f.get()) {
+            for job in jobs {
+                job();
+            }
+            return;
+        }
+        let group = Arc::new(Group {
+            state: Mutex::new(GroupState {
+                remaining: jobs.len(),
+                panic: None,
+            }),
+            done: Condvar::new(),
+        });
+        {
+            let mut q = self.queue.jobs.lock().unwrap();
+            for job in jobs {
+                // SAFETY: this function does not return (or unwind) until
+                // `group.remaining == 0`, i.e. until every job has run to
+                // completion — so every borrow captured by the job
+                // outlives its execution, exactly as with
+                // `std::thread::scope`. The 'static lifetime is a lie the
+                // queue needs; the blocking join below makes it sound.
+                let job: Task = unsafe {
+                    std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(job)
+                };
+                q.pending.push_back((job, Arc::clone(&group)));
+            }
+            self.queue.available.notify_all();
+        }
+        // Help drain the queue while waiting, then park on the group.
+        // Stop helping the moment our own group completes — otherwise a
+        // finished dispatcher could be held hostage by an arbitrary
+        // backlog of other dispatchers' jobs (request tail latency).
+        loop {
+            if group.state.lock().unwrap().remaining == 0 {
+                break;
+            }
+            let popped = self.queue.jobs.lock().unwrap().pending.pop_front();
+            match popped {
+                Some((job, g)) => run_one(job, &g),
+                None => break,
+            }
+        }
+        let mut st = group.state.lock().unwrap();
+        while st.remaining > 0 {
+            st = group.done.wait(st).unwrap();
+        }
+        if let Some(payload) = st.panic.take() {
+            drop(st);
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.queue.jobs.lock().unwrap();
+            q.shutdown = true;
+            self.queue.available.notify_all();
+        }
+        for h in self.handles.get_mut().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Worker thread body: pop jobs until shutdown; drain the queue before
+/// honouring shutdown so a dropped pool still completes accepted work.
+fn worker_loop(q: &Queue) {
+    IN_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let job = {
+            let mut guard = q.jobs.lock().unwrap();
+            loop {
+                if let Some(j) = guard.pending.pop_front() {
+                    break Some(j);
+                }
+                if guard.shutdown {
+                    break None;
+                }
+                guard = q.available.wait(guard).unwrap();
+            }
+        };
+        match job {
+            Some((job, group)) => run_one(job, &group),
+            None => return,
+        }
+    }
+}
+
+/// Execute one job, panic-safely, and retire it from its group.
+fn run_one(job: Task, group: &Group) {
+    let result = catch_unwind(AssertUnwindSafe(job));
+    let mut st = group.state.lock().unwrap();
+    st.remaining -= 1;
+    if let Err(payload) = result {
+        if st.panic.is_none() {
+            st.panic = Some(payload);
+        }
+    }
+    if st.remaining == 0 {
+        group.done.notify_all();
+    }
+}
+
+/// Run a batch of scoped jobs with the chosen dispatch strategy:
+/// the persistent [`WorkerPool`] (default) or spawn-per-call scoped
+/// threads (the PR 1 baseline, kept for benchmarking the pool against).
+pub fn run_scoped<'scope>(dispatch: Dispatch, jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+    match dispatch {
+        Dispatch::Pool => WorkerPool::global().run_jobs(jobs),
+        Dispatch::Spawn => {
+            std::thread::scope(|s| {
+                for job in jobs {
+                    s.spawn(job);
+                }
+            });
+        }
+    }
+}
+
+/// Reconcile a requested fan-out with what [`Dispatch::Pool`] can run
+/// concurrently: the global pool **grows** to an explicitly larger
+/// budget (so `--kernel-workers 8` on a 2-core host is honored, as the
+/// PR 1 spawn engine did), then the request is capped at pool threads
+/// plus the helping dispatcher — which only bites at the hard growth
+/// ceiling. [`Dispatch::Spawn`] passes through unchanged.
+pub fn clamp_to_pool(dispatch: Dispatch, workers: usize) -> usize {
+    match dispatch {
+        Dispatch::Pool if workers > 1 => {
+            let pool = WorkerPool::global();
+            pool.ensure_threads(workers);
+            workers.min(pool.threads() + 1)
+        }
+        _ => workers,
+    }
+}
+
+/// Split `0..rows` into up to `workers` contiguous bands, run `f` on
+/// each band (fanned out per `dispatch` when `workers > 1`), and return
+/// the per-band results **in row order**. The single-band call on the
+/// caller's thread is the serial reference; banding only changes which
+/// thread computes a row, so any elementwise `f` is trivially
+/// bit-identical across worker counts.
+pub fn par_row_bands<T, F>(dispatch: Dispatch, workers: usize, rows: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(std::ops::Range<usize>) -> T + Sync,
+{
+    if rows == 0 {
+        return Vec::new();
+    }
+    let workers = clamp_to_pool(dispatch, workers.max(1).min(rows));
+    if workers <= 1 {
+        return vec![f(0..rows)];
+    }
+    let band = rows.div_ceil(workers);
+    let mut out: Vec<Option<T>> = (0..rows.div_ceil(band)).map(|_| None).collect();
+    {
+        let f = &f;
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| {
+                let r0 = i * band;
+                let r1 = ((i + 1) * band).min(rows);
+                Box::new(move || *slot = Some(f(r0..r1))) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(dispatch, jobs);
+    }
+    out.into_iter().map(|t| t.expect("band executed")).collect()
+}
+
+/// In-place companion to [`par_row_bands`]: split the row-major `data`
+/// (`rows × row_len`) into up to `workers` contiguous row bands and run
+/// `f(first_row, band)` on each, writing in place. Serves both the
+/// tiler's row-band path and the layer epilogue, so the banding math
+/// lives in exactly one place.
+pub fn par_row_chunks_mut<F>(
+    dispatch: Dispatch,
+    workers: usize,
+    row_len: usize,
+    data: &mut [f32],
+    f: F,
+) where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    if row_len == 0 || data.is_empty() {
+        return;
+    }
+    debug_assert_eq!(data.len() % row_len, 0, "data is not whole rows");
+    let rows = data.len() / row_len;
+    let workers = clamp_to_pool(dispatch, workers.max(1).min(rows));
+    if workers <= 1 {
+        f(0, data);
+        return;
+    }
+    let band = rows.div_ceil(workers);
+    let f = &f;
+    let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = data
+        .chunks_mut(band * row_len)
+        .enumerate()
+        .map(|(i, chunk)| Box::new(move || f(i * band, chunk)) as Box<dyn FnOnce() + Send + '_>)
+        .collect();
+    run_scoped(dispatch, jobs);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Band-fill through a private pool must cover every element exactly
+    /// once, and the pool must be reusable across dispatches.
+    #[test]
+    fn pool_runs_scoped_jobs_and_is_reusable() {
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.threads(), 3);
+        for round in 0..5u32 {
+            let mut out = vec![0u32; 64];
+            {
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                    .chunks_mut(16)
+                    .enumerate()
+                    .map(|(i, chunk)| {
+                        Box::new(move || {
+                            for (j, v) in chunk.iter_mut().enumerate() {
+                                *v = round + (i * 16 + j) as u32;
+                            }
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_jobs(jobs);
+            }
+            let want: Vec<u32> = (0..64).map(|j| round + j).collect();
+            assert_eq!(out, want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn single_and_empty_dispatches_run_inline() {
+        let pool = WorkerPool::new(2);
+        pool.run_jobs(Vec::new());
+        let mut hit = false;
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> =
+                vec![Box::new(|| hit = true) as Box<dyn FnOnce() + Send + '_>];
+            pool.run_jobs(jobs);
+        }
+        assert!(hit);
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = vec![
+                Box::new(|| {}) as Box<dyn FnOnce() + Send + '_>,
+                Box::new(|| panic!("tile kernel exploded")) as Box<dyn FnOnce() + Send + '_>,
+            ];
+            pool.run_jobs(jobs);
+        }));
+        assert!(caught.is_err(), "panic must reach the dispatcher");
+        // The pool must still serve jobs after a panic.
+        let mut ok = [false, false];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = ok
+                .iter_mut()
+                .map(|slot| Box::new(move || *slot = true) as Box<dyn FnOnce() + Send + '_>)
+                .collect();
+            pool.run_jobs(jobs);
+        }
+        assert_eq!(ok, [true, true]);
+    }
+
+    #[test]
+    fn nested_dispatch_runs_inline_without_deadlock() {
+        let pool = WorkerPool::new(1); // one worker forces the inline path
+        let mut results = vec![0usize; 4];
+        {
+            let inner: &std::sync::Mutex<&mut [usize]> =
+                &std::sync::Mutex::new(results.as_mut_slice());
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                .map(|outer| {
+                    Box::new(move || {
+                        // A job dispatching its own jobs must not wait on
+                        // the (busy) single worker.
+                        let sub: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                            .map(|j| {
+                                Box::new(move || {
+                                    inner.lock().unwrap()[outer * 2 + j] = outer * 2 + j + 1;
+                                })
+                                    as Box<dyn FnOnce() + Send + '_>
+                            })
+                            .collect();
+                        WorkerPool::global().run_jobs(sub);
+                    }) as Box<dyn FnOnce() + Send + '_>
+                })
+                .collect();
+            pool.run_jobs(jobs);
+        }
+        assert_eq!(results, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn par_row_bands_covers_rows_in_order_on_both_dispatches() {
+        for dispatch in [Dispatch::Pool, Dispatch::Spawn] {
+            for rows in [0usize, 1, 5, 7, 16] {
+                for workers in [1usize, 2, 3, 16] {
+                    let bands =
+                        par_row_bands(dispatch, workers, rows, |r| r.collect::<Vec<usize>>());
+                    let flat: Vec<usize> = bands.into_iter().flatten().collect();
+                    let want: Vec<usize> = (0..rows).collect();
+                    assert_eq!(flat, want, "rows={rows} workers={workers} {dispatch:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_grows_to_explicit_budgets_and_never_shrinks() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        pool.ensure_threads(3);
+        assert_eq!(pool.threads(), 3);
+        pool.ensure_threads(2); // never shrinks
+        assert_eq!(pool.threads(), 3);
+        // The grown workers must actually serve jobs.
+        let mut out = vec![0u8; 6];
+        {
+            let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+                .chunks_mut(2)
+                .map(|c| Box::new(move || c.fill(1)) as Box<dyn FnOnce() + Send + '_>)
+                .collect();
+            pool.run_jobs(jobs);
+        }
+        assert_eq!(out, vec![1; 6]);
+    }
+
+    #[test]
+    fn clamp_honors_explicit_pool_budgets_and_spawn() {
+        // Spawn dispatch is never capped by the pool.
+        assert_eq!(clamp_to_pool(Dispatch::Spawn, 64), 64);
+        assert_eq!(clamp_to_pool(Dispatch::Pool, 1), 1);
+        // Pool dispatch grows the global pool to the request, so an
+        // explicit small budget comes back unchanged.
+        assert_eq!(clamp_to_pool(Dispatch::Pool, 3), 3);
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = WorkerPool::global() as *const WorkerPool;
+        let b = WorkerPool::global() as *const WorkerPool;
+        assert_eq!(a, b);
+        assert!(WorkerPool::global().threads() >= 1);
+    }
+}

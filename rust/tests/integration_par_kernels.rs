@@ -7,19 +7,21 @@
 //! changes *which thread* computes an output element, never the
 //! element's accumulation order.
 
-use beanna::bf16::Matrix;
+use beanna::bf16::{Matrix, PackedWeights};
 use beanna::binary::BitMatrix;
 use beanna::nn::{Network, NetworkConfig};
-use beanna::util::par::Parallelism;
+use beanna::util::par::{Dispatch, Parallelism};
 use beanna::util::prop::{check, Gen};
 
-/// Worker configurations under test: serial, a forced small count, and
+/// Worker configurations under test: serial, forced small counts on
+/// both dispatch strategies (persistent pool and spawn-per-call), and
 /// everything the host offers.
-fn configs() -> [Parallelism; 4] {
+fn configs() -> [Parallelism; 5] {
     [
         Parallelism::serial(),
         Parallelism::fixed(2),
         Parallelism::fixed(3),
+        Parallelism::fixed(3).with_dispatch(Dispatch::Spawn),
         Parallelism::auto(),
     ]
 }
@@ -134,6 +136,39 @@ fn prop_parallel_kernels_bit_exact_on_random_ragged_shapes() {
 }
 
 #[test]
+fn packed_weights_bit_exact_on_split_shapes() {
+    // The layer-resident [k][4] panel kernel must match the unpacked
+    // blocked-ᵀ kernel bit for bit — across every n % 4 residue, ragged
+    // k-block sizes, and both dispatch strategies (tile boundaries fall
+    // mid-panel in the column-band splits).
+    let mut g = Gen::new(0xB20);
+    for &(b, k, n) in &SPLIT_SHAPES {
+        let a = rand_matrix(&mut g, b, k, -3.0, 3.0);
+        let w_nk = rand_matrix(&mut g, n, k, -3.0, 3.0);
+        let pw = PackedWeights::pack(&w_nk);
+        for kb in [1usize, 5, 16, 1000] {
+            let serial = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
+            for par in configs() {
+                let fast = a.matmul_bf16_blocked_t_packed_par(&pw, kb, par).unwrap();
+                assert_eq!(serial, fast, "b={b} k={k} n={n} kb={kb} par={par:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn from_matrix_par_bit_exact_on_split_shapes() {
+    let mut g = Gen::new(0xB21);
+    for &(b, k, _) in &SPLIT_SHAPES {
+        let m = rand_matrix(&mut g, b.max(64), k, -2.0, 2.0);
+        let serial = BitMatrix::from_matrix(&m);
+        for par in configs() {
+            assert_eq!(serial, BitMatrix::from_matrix_par(&m, par), "par={par:?}");
+        }
+    }
+}
+
+#[test]
 fn network_forward_bit_exact_at_any_parallelism() {
     // The paper's hybrid network is large enough that every layer's
     // matmul clears the spawn threshold even at batch 1.
@@ -148,5 +183,95 @@ fn network_forward_bit_exact_at_any_parallelism() {
         }
         // The default entry point fans out and must also agree.
         assert_eq!(serial, net.forward(&x).unwrap(), "batch={batch} default");
+    }
+}
+
+#[test]
+fn binary_stack_streaming_matches_layerwise_float_path() {
+    // Network::forward_with streams a BitMatrix through consecutive
+    // binary layers (pack once, epilogue folded into the sign
+    // decision). It must be bit-identical to running every layer
+    // through the naive float-in/float-out DenseLayer::forward_with —
+    // including on a 3-deep binary run and a binary final layer.
+    let mut g = Gen::new(0xB22);
+    for sizes in [vec![48usize, 64, 64, 64, 10], vec![32, 64, 64], vec![20, 64, 64, 64]] {
+        let precisions: Vec<_> = (0..sizes.len() - 1)
+            .map(|i| {
+                if i == 0 && sizes.len() > 3 {
+                    beanna::nn::Precision::Bf16
+                } else {
+                    beanna::nn::Precision::Binary
+                }
+            })
+            .collect();
+        let net = Network::random(
+            &NetworkConfig {
+                sizes: sizes.clone(),
+                precisions,
+            },
+            9,
+        );
+        for batch in [1usize, 7] {
+            let x = rand_matrix(&mut g, batch, sizes[0], -1.0, 1.0);
+            // Naive reference: one float forward per layer.
+            let mut want = x.clone();
+            for layer in &net.layers {
+                want = layer.forward_with(&want, Parallelism::serial()).unwrap();
+            }
+            for par in configs() {
+                let got = net.forward_with(&x, par).unwrap();
+                assert_eq!(want, got, "sizes={sizes:?} batch={batch} par={par:?}");
+            }
+        }
+    }
+}
+
+/// Current thread count of this process (Linux); `None` elsewhere.
+fn thread_count() -> Option<usize> {
+    std::fs::read_to_string("/proc/self/status")
+        .ok()?
+        .lines()
+        .find(|l| l.starts_with("Threads:"))?
+        .split_whitespace()
+        .nth(1)?
+        .parse()
+        .ok()
+}
+
+#[test]
+fn pool_reuse_identical_results_and_no_thread_leak() {
+    // Two (and fifty) consecutive forwards on the one process-wide pool
+    // must give identical results, and the pool must not grow: with
+    // spawn-per-call every forward creates threads; with the pool the
+    // process thread count stays flat after warmup.
+    let net = Network::random(&NetworkConfig::beanna_hybrid(), 7);
+    let mut g = Gen::new(0xB23);
+    let x = rand_matrix(&mut g, 2, 784, -1.0, 1.0);
+    let pool = Parallelism::auto();
+    pool.warm_pool();
+    let first = net.forward_with(&x, pool).unwrap();
+    let second = net.forward_with(&x, pool).unwrap();
+    assert_eq!(first, second, "pool reuse changed the result");
+    let baseline = thread_count();
+    let mut peak = 0usize;
+    for i in 0..50 {
+        let again = net.forward_with(&x, pool).unwrap();
+        assert_eq!(first, again, "forward {i} diverged on the reused pool");
+        if let Some(t) = thread_count() {
+            peak = peak.max(t);
+        }
+    }
+    if let (Some(base), true) = (baseline, peak > 0) {
+        // A spawn-per-forward leak would add ≥ 1 thread per iteration
+        // (≥ 50 over the loop). Concurrent tests in this binary spawn
+        // transient Dispatch::Spawn threads, so scale the noise margin
+        // with the host's test-thread count — but keep it below the
+        // ≥ 50 growth a real leak would show.
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let margin = (16 + 4 * cores).min(48);
+        assert!(
+            peak <= base + margin,
+            "thread count grew from {base} to {peak} across 50 pooled forwards"
+        );
     }
 }
