@@ -12,7 +12,7 @@
 //! and cross-checks that all three agree.
 
 use beanna::bf16::Matrix;
-use beanna::coordinator::Backend;
+use beanna::coordinator::{self, ExecutionBackend, ReferenceBackend, SimulatorBackend};
 use beanna::data::SynthMnist;
 use beanna::io::ArtifactPaths;
 use beanna::nn::Network;
@@ -33,10 +33,10 @@ fn main() -> anyhow::Result<()> {
         images.row_mut(i).copy_from_slice(test.images.row(i));
     }
 
-    let mut backends = vec![
-        ("ref", Backend::Reference { net: net.clone() }),
-        ("sim", Backend::simulator(net.clone())),
-        ("pjrt", Backend::pjrt(&paths, "hybrid", 16)?),
+    let mut backends: Vec<(&str, Box<dyn ExecutionBackend>)> = vec![
+        ("ref", ReferenceBackend::boxed(net.clone())),
+        ("sim", SimulatorBackend::boxed(net.clone())),
+        ("pjrt", coordinator::pjrt(&paths, "hybrid", 16)?),
     ];
 
     let mut all_preds: Vec<(&str, Vec<usize>, Option<u64>, std::time::Duration)> = Vec::new();

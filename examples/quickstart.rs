@@ -9,12 +9,14 @@
 //! 3. Builds the paper's hybrid network (random weights) and runs a
 //!    batch through the cycle-level BEANNA simulator — reporting
 //!    cycles, the §III-D phase breakdown, and inferences/second.
-//! 4. Shows the Table II hardware model.
+//! 4. Serves two differently-shaped models behind one `Engine`.
+//! 5. Shows the Table II hardware model.
 
 use beanna::bf16::format::render_fig1;
+use beanna::coordinator::{Engine, SimulatorBackend};
 use beanna::data::SynthMnist;
 use beanna::experiments;
-use beanna::nn::{Network, NetworkConfig};
+use beanna::nn::{Network, NetworkConfig, Precision};
 use beanna::sim::{Accelerator, AcceleratorConfig};
 
 fn main() -> anyhow::Result<()> {
@@ -50,6 +52,28 @@ fn main() -> anyhow::Result<()> {
             layer.timing.total()
         );
     }
+
+    // -- multi-model serving through the Engine -------------------------------
+    // Two named models with different shapes behind one submit surface:
+    // the paper's 784→10 hybrid on the simulator, a 32→4 auxiliary
+    // model on the fast reference backend (the builder default).
+    let aux = Network::random(&NetworkConfig::uniform(&[32, 16, 4], Precision::Bf16), 9);
+    let engine = Engine::builder()
+        .model("mnist", net.clone())
+        .backend(|net, _i| Ok(SimulatorBackend::boxed(net.clone())))
+        .model("aux", aux)
+        .build()?;
+    let a = engine.infer("mnist", data.images.row(0).to_vec())?;
+    let b = engine.infer("aux", vec![0.5; 32])?;
+    println!(
+        "engine: mnist → class {} ({} device cycles), aux → class {} of {} (typed errors: {})",
+        a.prediction,
+        a.sim_cycles.unwrap_or(0),
+        b.prediction,
+        b.logits.len(),
+        engine.submit("aux", vec![0.0; 784]).unwrap_err()
+    );
+    engine.shutdown();
 
     // -- the hardware models --------------------------------------------------
     println!("\n{}", experiments::table2());

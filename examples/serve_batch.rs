@@ -1,21 +1,23 @@
-//! Batched serving demo: the coordinator under open-loop load.
+//! Batched serving demo: the multi-model `Engine` under open-loop load.
 //!
 //! ```bash
-//! cargo run --release --example serve_batch -- [requests] [max_batch]
+//! cargo run --release --example serve_batch -- [requests] [max_batch] [replicas]
 //! ```
 //!
-//! Starts the inference server on the reference backend (artifacts
-//! required for trained weights; falls back to random weights), issues
-//! requests from multiple client threads, and prints the batching
-//! behaviour and latency distribution — the systems-level view of the
-//! paper's batch-1 vs batch-256 comparison.
+//! Builds an [`Engine`] serving **two differently-shaped named models**
+//! — the paper's 784→10 hybrid network (artifacts required for trained
+//! weights; falls back to random) and a small 64→4 auxiliary model —
+//! issues open-loop traffic to both through the one submit surface,
+//! and prints the batching behaviour and latency distribution — the
+//! systems-level view of the paper's batch-1 vs batch-256 comparison.
 
 use std::time::Duration;
 
-use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::coordinator::{BatchPolicy, Engine, RoutePolicy, ServeError};
 use beanna::data::SynthMnist;
 use beanna::experiments;
 use beanna::io::ArtifactPaths;
+use beanna::nn::{Network, NetworkConfig, Precision};
 
 fn main() -> anyhow::Result<()> {
     let requests: usize = std::env::args()
@@ -26,29 +28,46 @@ fn main() -> anyhow::Result<()> {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(256);
+    let replicas: usize = std::env::args()
+        .nth(3)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
 
     let paths = ArtifactPaths::discover();
     let (net, trained) = experiments::load_variant(&paths, "hybrid");
+    let aux = Network::random(&NetworkConfig::uniform(&[64, 32, 4], Precision::Bf16), 11);
     let test = SynthMnist::load(&paths.dataset())
         .unwrap_or_else(|_| SynthMnist::generate(1024, 1));
     println!(
-        "serving {requests} requests (max batch {max_batch}, weights: {})",
+        "serving {requests} requests (max batch {max_batch}, {replicas} replica(s)/model, \
+         mnist weights: {})",
         if trained { "trained" } else { "random" }
     );
 
-    let server = Server::start(
-        Backend::Reference { net },
-        ServerConfig {
-            policy: BatchPolicy {
-                max_batch,
-                max_wait: Duration::from_millis(2),
-            },
-            ..Default::default()
-        },
-    );
+    let engine = Engine::builder()
+        .model("mnist", net)
+        .replicas(replicas)
+        .model("aux", aux)
+        .replicas(replicas)
+        .batch_policy(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(2),
+        })
+        .route_policy(RoutePolicy::LeastOutstanding)
+        .build()?;
+
+    // A mis-shaped request is a typed error at submit — it never
+    // reaches (let alone kills) a worker thread.
+    match engine.submit("mnist", vec![0.0; 64]) {
+        Err(ServeError::WidthMismatch { expected, got }) => {
+            println!("width guard: mnist wants {expected} features, rejected {got} ✓")
+        }
+        other => anyhow::bail!("expected a typed width error, got {other:?}"),
+    }
 
     // Open-loop load: submit asynchronously in waves (deep queue → the
-    // batcher can actually fill batches), collect per wave.
+    // batcher can actually fill batches), collect per wave. One in
+    // eight requests goes to the small auxiliary model.
     let t0 = std::time::Instant::now();
     let wave = (max_batch * 4).max(64);
     let mut total = 0usize;
@@ -59,41 +78,49 @@ fn main() -> anyhow::Result<()> {
         let rxs: Vec<_> = (0..count)
             .map(|i| {
                 let idx = (total + i) % test.len();
-                (idx, server.submit(test.images.row(idx).to_vec()).unwrap())
+                if (total + i) % 8 == 7 {
+                    let feats: Vec<f32> = test.images.row(idx)[..64].to_vec();
+                    (None, engine.submit("aux", feats).unwrap())
+                } else {
+                    let feats = test.images.row(idx).to_vec();
+                    (Some(idx), engine.submit("mnist", feats).unwrap())
+                }
             })
             .collect();
         for (idx, rx) in rxs {
-            let resp = rx.recv()?;
-            if resp.prediction == test.labels[idx] {
-                correct += 1;
+            let resp = rx.recv()??;
+            if let Some(idx) = idx {
+                if resp.prediction == test.labels[idx] {
+                    correct += 1;
+                }
+                batch_sizes.push(resp.batch_size);
             }
-            batch_sizes.push(resp.batch_size);
         }
         total += count;
     }
     println!(
-        "done in {:?}: {total} served, accuracy {:.2}%, max batch observed {}",
+        "done in {:?}: {total} served, mnist accuracy {:.2}%, max batch observed {}",
         t0.elapsed(),
-        correct as f64 / total as f64 * 100.0,
+        correct as f64 / (total - total / 8) as f64 * 100.0,
         batch_sizes.iter().max().unwrap()
     );
 
-    let m = server.shutdown();
-    println!(
-        "batches {} (mean size {:.1})  host throughput {:.0} req/s",
-        m.batches, m.mean_batch, m.throughput_rps
-    );
-    if let Some(q) = m.queue_us {
-        println!(
-            "queue µs: median {:.0}  p95 {:.0}  max {:.0}",
-            q.median, q.p95, q.max
-        );
-    }
-    if let Some(c) = m.compute_us {
-        println!(
-            "compute µs/batch: median {:.0}  p95 {:.0}",
-            c.median, c.p95
-        );
+    for (model, group) in engine.shutdown() {
+        for (i, m) in group.iter().enumerate() {
+            println!(
+                "{model}/replica{i}: {} reqs in {} batches (mean size {:.1})  host {:.0} req/s",
+                m.requests, m.batches, m.mean_batch, m.throughput_rps
+            );
+            if let Some(q) = &m.queue_us {
+                println!(
+                    "  queue µs: median {:.0}  p95 {:.0}  max {:.0}",
+                    q.median, q.p95, q.max
+                );
+            }
+            if let Some(c) = &m.compute_us {
+                println!("  compute µs/batch: median {:.0}  p95 {:.0}", c.median, c.p95);
+            }
+        }
     }
     Ok(())
 }

@@ -19,7 +19,7 @@
 //!
 //! Run time is dominated by the full-test-set functional evaluation.
 
-use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::coordinator::{BatchPolicy, ReferenceBackend, Server, ServerConfig};
 use beanna::data::SynthMnist;
 use beanna::experiments;
 use beanna::io::ArtifactPaths;
@@ -97,9 +97,7 @@ fn main() -> anyhow::Result<()> {
     // ---- 5. serving pass ---------------------------------------------------
     println!("[5/6] coordinator serving pass…");
     let server = Server::start(
-        Backend::Reference {
-            net: hybrid.clone(),
-        },
+        ReferenceBackend::boxed(hybrid.clone()),
         ServerConfig {
             policy: BatchPolicy {
                 max_batch: 256,
@@ -107,13 +105,13 @@ fn main() -> anyhow::Result<()> {
             },
             ..Default::default()
         },
-    );
+    )?;
     let n_serve = 512.min(test.len());
     let rxs: Vec<_> = (0..n_serve)
         .map(|i| server.submit(test.images.row(i).to_vec()).unwrap())
         .collect();
     for rx in rxs {
-        rx.recv()?;
+        rx.recv()??;
     }
     let metrics = server.shutdown();
     println!(

@@ -10,7 +10,7 @@
 use std::time::Duration;
 
 use beanna::bf16::{Matrix, BF16};
-use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::coordinator::{BatchPolicy, ReferenceBackend, Server, ServerConfig};
 use beanna::data::SynthMnist;
 use beanna::io::ArtifactPaths;
 use beanna::model::ResourceModel;
@@ -114,7 +114,7 @@ fn main() {
     );
     for (max_batch, wait_ms) in [(1usize, 0u64), (16, 1), (64, 2), (256, 4)] {
         let server = Server::start(
-            Backend::Reference { net: net.clone() },
+            ReferenceBackend::boxed(net.clone()),
             ServerConfig {
                 policy: BatchPolicy {
                     max_batch,
@@ -122,13 +122,14 @@ fn main() {
                 },
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let n = 1024.min(test.len());
         let rxs: Vec<_> = (0..n)
             .map(|i| server.submit(test.images.row(i).to_vec()).unwrap())
             .collect();
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         let m = server.shutdown();
         println!(

@@ -1,54 +1,29 @@
 //! Execution backends behind the serving queue.
-
-#[cfg(feature = "pjrt")]
-use std::path::Path;
+//!
+//! The serving stack is **open**: anything that can run a batch of
+//! feature rows implements [`ExecutionBackend`] and plugs into
+//! [`Server`](super::server::Server), [`Router`](super::router::Router),
+//! and [`Engine`](super::engine::Engine) as a `Box<dyn ExecutionBackend>`
+//! — no crate enum to edit, no feature flag in the public API. The
+//! crate ships three implementations:
+//!
+//! * [`ReferenceBackend`] — the pure-rust functional model (fast host
+//!   path; fans kernels out under a [`Parallelism`] budget).
+//! * [`SimulatorBackend`] — the cycle-level BEANNA simulator (numerics
+//!   *and* device timing; reports `sim_cycles`).
+//! * `PjrtBackend` — the PJRT runtime executing AOT-compiled HLO
+//!   artifacts. The *implementation* is gated behind the `pjrt` cargo
+//!   feature (it needs the non-vendored `xla` crate) but the API is
+//!   not: [`pjrt`] exists in every build and returns
+//!   [`ServeError::Unavailable`] when the feature is off.
 
 use anyhow::Result;
-#[cfg(feature = "pjrt")]
-use anyhow::ensure;
 
+use super::error::ServeError;
 use crate::bf16::Matrix;
-#[cfg(feature = "pjrt")]
-use crate::data::IMG_PIXELS;
 use crate::nn::Network;
-#[cfg(feature = "pjrt")]
-use crate::runtime::HloExecutable;
 use crate::sim::{Accelerator, AcceleratorConfig};
 use crate::util::par::Parallelism;
-
-/// A PJRT executable bundled with its **own private** client.
-///
-/// The `xla` crate's handles use `Rc` internally, so they are not `Send`.
-/// This wrapper owns the client *and* every executable compiled from it,
-/// so the entire `Rc` graph moves between threads as one unit and is only
-/// ever touched by its current owner — which makes the manual `Send`
-/// sound. Construct it on any thread, then hand it to the server's
-/// worker; never clone pieces out of it.
-#[cfg(feature = "pjrt")]
-pub struct PjrtUnit {
-    // Field order matters: `exe` must drop before `client`.
-    exe: HloExecutable,
-    _client: xla::PjRtClient,
-}
-
-// SAFETY: see type docs — the full ownership graph moves together and is
-// accessed from exactly one thread at a time.
-#[cfg(feature = "pjrt")]
-unsafe impl Send for PjrtUnit {}
-
-#[cfg(feature = "pjrt")]
-impl PjrtUnit {
-    /// Create a fresh client and compile the artifact at `path` with the
-    /// given `batch × features` input shape.
-    pub fn load(path: &Path, input_shape: (usize, usize)) -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        let exe = HloExecutable::load(&client, path, input_shape)?;
-        Ok(Self {
-            exe,
-            _client: client,
-        })
-    }
-}
 
 /// Output of one backend batch execution.
 #[derive(Debug, Clone)]
@@ -59,127 +34,280 @@ pub struct BatchOutput {
     pub sim_cycles: Option<u64>,
 }
 
-/// Where batches actually execute.
-pub enum Backend {
-    /// Cycle-level BEANNA simulator (timing + numerics).
-    Simulator {
-        /// The simulated device.
-        accel: Box<Accelerator>,
-        /// Weights executed on it.
-        net: Network,
-    },
-    /// Pure-rust reference model (fast functional path).
-    Reference {
-        /// Weights.
-        net: Network,
-    },
-    /// PJRT executable built from the AOT artifacts (fixed batch shape;
-    /// smaller batches are zero-padded and sliced).
-    #[cfg(feature = "pjrt")]
-    Pjrt {
-        /// Compiled artifact with its private client.
-        unit: PjrtUnit,
-    },
+/// An execution target for batched inference.
+///
+/// Object-safe by design: the serving layer holds
+/// `Box<dyn ExecutionBackend>`, so third-party engines (a remote
+/// device, a sharded simulator, an FPGA driver) register by
+/// implementing this trait — the coordinator's own backends get no
+/// special treatment.
+///
+/// # Contract
+///
+/// * [`run_batch_with`](Self::run_batch_with) receives a dense
+///   `batch × features` matrix whose width the serving layer has
+///   already validated against [`input_width`](Self::input_width)
+///   (when declared). It returns logits with one row per input row.
+/// * Implementations must be deterministic: the same batch twice
+///   yields identical logits (the conformance suite enforces this).
+/// * Errors are returned, never encoded in the output; the serving
+///   layer wraps them in [`ServeError::Backend`] and delivers them on
+///   the response channel.
+pub trait ExecutionBackend: Send {
+    /// Run one batch (`batch × features`) under an explicit
+    /// kernel-parallelism budget. Backends that manage their own
+    /// threads (or model a single device) may ignore `par`.
+    fn run_batch_with(&mut self, batch: &Matrix, par: Parallelism) -> Result<BatchOutput>;
+
+    /// Short human-readable tag for metrics and logs ("ref", "sim", …).
+    fn tag(&self) -> &str;
+
+    /// Largest batch this backend accepts in one call, if bounded
+    /// (e.g. shape-specialized compiled executables). The server clamps
+    /// its batching policy to this.
+    fn max_batch(&self) -> Option<usize> {
+        None
+    }
+
+    /// Input feature width, when the backend knows it. Declaring it
+    /// lets the serving layer reject mismatched requests at `submit`
+    /// time; backends returning `None` get width-pinning from the
+    /// first accepted request instead.
+    fn input_width(&self) -> Option<usize> {
+        None
+    }
+
+    /// Number of output classes, when known. Declaring it is a
+    /// contract: the engine builder cross-checks it against the served
+    /// model's config and the server rejects batches whose logit
+    /// column count disagrees with it.
+    fn num_classes(&self) -> Option<usize> {
+        None
+    }
+
+    /// One-time warm-up hook, called by the server before it accepts
+    /// traffic (load caches, fault in weights, compile kernels…).
+    /// Default: no-op.
+    fn warm(&mut self) {}
+
+    /// Run one batch with the default (auto-sized) parallelism.
+    fn run_batch(&mut self, batch: &Matrix) -> Result<BatchOutput> {
+        self.run_batch_with(batch, Parallelism::default())
+    }
 }
 
-impl Backend {
+/// Pure-rust reference model: the fast functional host path.
+pub struct ReferenceBackend {
+    net: Network,
+}
+
+impl ReferenceBackend {
+    /// Reference backend over `net`.
+    pub fn new(net: Network) -> Self {
+        Self { net }
+    }
+
+    /// Boxed, ready for `Server`/`Router`/`EngineBuilder::backend`.
+    pub fn boxed(net: Network) -> Box<dyn ExecutionBackend> {
+        Box::new(Self::new(net))
+    }
+}
+
+impl ExecutionBackend for ReferenceBackend {
+    fn run_batch_with(&mut self, batch: &Matrix, par: Parallelism) -> Result<BatchOutput> {
+        Ok(BatchOutput {
+            logits: self.net.forward_with(batch, par)?,
+            sim_cycles: None,
+        })
+    }
+
+    fn tag(&self) -> &str {
+        "ref"
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        self.net.config.sizes.first().copied()
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        self.net.config.sizes.last().copied()
+    }
+}
+
+/// Cycle-level BEANNA simulator: numerics plus device timing.
+pub struct SimulatorBackend {
+    accel: Box<Accelerator>,
+    net: Network,
+}
+
+impl SimulatorBackend {
     /// Simulator backend with the default device configuration.
-    pub fn simulator(net: Network) -> Self {
-        Backend::Simulator {
-            accel: Box::new(Accelerator::new(AcceleratorConfig::default())),
+    pub fn new(net: Network) -> Self {
+        Self::with_config(net, AcceleratorConfig::default())
+    }
+
+    /// Simulator backend with an explicit device configuration.
+    pub fn with_config(net: Network, config: AcceleratorConfig) -> Self {
+        Self {
+            accel: Box::new(Accelerator::new(config)),
             net,
         }
     }
 
-    /// PJRT backend from an AOT artifact (`variant` = "hybrid"/"fp").
+    /// Boxed, ready for `Server`/`Router`/`EngineBuilder::backend`.
+    pub fn boxed(net: Network) -> Box<dyn ExecutionBackend> {
+        Box::new(Self::new(net))
+    }
+}
+
+impl ExecutionBackend for SimulatorBackend {
+    fn run_batch_with(&mut self, batch: &Matrix, _par: Parallelism) -> Result<BatchOutput> {
+        // Command the device through its AXI-Lite front door, exactly
+        // as driver software would (§III-D step 1). The simulator
+        // models one device; the kernel-parallelism budget does not
+        // apply to it.
+        let mut axi = crate::sim::AxiRegisterFile::new();
+        let report = self.accel.run_via_axi(&mut axi, &self.net, batch)?;
+        debug_assert_eq!(axi.status(), crate::sim::axi::Status::Done);
+        Ok(BatchOutput {
+            logits: report.outputs,
+            sim_cycles: Some(report.total_cycles),
+        })
+    }
+
+    fn tag(&self) -> &str {
+        "sim"
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        self.net.config.sizes.first().copied()
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        self.net.config.sizes.last().copied()
+    }
+}
+
+/// PJRT backend from an AOT artifact (`variant` = "hybrid"/"fp",
+/// compiled at a fixed `batch` shape; smaller batches are zero-padded
+/// and sliced).
+///
+/// This constructor is part of every build: when the crate is compiled
+/// without the `pjrt` feature it returns [`ServeError::Unavailable`]
+/// instead of failing to exist, so callers need no `#[cfg]` of their
+/// own.
+pub fn pjrt(
+    paths: &crate::io::ArtifactPaths,
+    variant: &str,
+    batch: usize,
+) -> Result<Box<dyn ExecutionBackend>, ServeError> {
     #[cfg(feature = "pjrt")]
-    pub fn pjrt(paths: &crate::io::ArtifactPaths, variant: &str, batch: usize) -> Result<Self> {
-        let unit = PjrtUnit::load(&paths.hlo(variant, batch), (batch, IMG_PIXELS))?;
-        Ok(Backend::Pjrt { unit })
+    {
+        Ok(Box::new(PjrtBackend::load(paths, variant, batch)?))
     }
-
-    /// Human-readable tag for metrics/logs.
-    pub fn tag(&self) -> &'static str {
-        match self {
-            Backend::Simulator { .. } => "sim",
-            Backend::Reference { .. } => "ref",
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt { .. } => "pjrt",
-        }
+    #[cfg(not(feature = "pjrt"))]
+    {
+        let _ = (paths, variant, batch);
+        Err(ServeError::Unavailable(
+            "this build has no PJRT support (rebuild with --features pjrt)".into(),
+        ))
     }
+}
 
-    /// Largest batch this backend accepts in one call (PJRT executables
-    /// are shape-specialized).
-    pub fn max_batch(&self) -> Option<usize> {
-        #[cfg(feature = "pjrt")]
-        if let Backend::Pjrt { unit } = self {
-            return Some(unit.exe.input_shape.0);
-        }
-        None
+/// A PJRT executable bundled with its **own private** client.
+///
+/// The `xla` crate's handles use `Rc` internally, so they are not
+/// `Send`. This wrapper owns the client *and* every executable compiled
+/// from it, so the entire `Rc` graph moves between threads as one unit
+/// and is only ever touched by its current owner — which makes the
+/// manual `Send` sound. Construct it on any thread, then hand it to the
+/// server's worker; never clone pieces out of it.
+#[cfg(feature = "pjrt")]
+pub struct PjrtBackend {
+    // Field order matters: `exe` must drop before `client`.
+    exe: crate::runtime::HloExecutable,
+    _client: xla::PjRtClient,
+}
+
+// SAFETY: see type docs — the full ownership graph moves together and is
+// accessed from exactly one thread at a time.
+#[cfg(feature = "pjrt")]
+unsafe impl Send for PjrtBackend {}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    /// Create a fresh client and compile the artifact for `variant` at
+    /// the given fixed batch size.
+    pub fn load(
+        paths: &crate::io::ArtifactPaths,
+        variant: &str,
+        batch: usize,
+    ) -> Result<Self, ServeError> {
+        let mk = || -> Result<Self> {
+            let client = xla::PjRtClient::cpu()?;
+            let exe = crate::runtime::HloExecutable::load(
+                &client,
+                &paths.hlo(variant, batch),
+                (batch, crate::data::IMG_PIXELS),
+            )?;
+            Ok(Self {
+                exe,
+                _client: client,
+            })
+        };
+        // Load/compile failures are configuration problems (missing
+        // artifact, client init), not runtime batch faults — callers
+        // must be able to tell them apart from `ServeError::Backend`.
+        mk().map_err(|e| ServeError::InvalidConfig(format!("pjrt load failed: {e:#}")))
     }
+}
 
-    /// Run one batch of images (`batch × 784`) with the default
-    /// (auto-sized) kernel parallelism.
-    pub fn run_batch(&mut self, images: &Matrix) -> Result<BatchOutput> {
-        self.run_batch_with(images, Parallelism::default())
-    }
-
-    /// Run one batch with an explicit kernel-parallelism budget. Only
-    /// the functional reference backend fans out (the simulator models
-    /// one device and PJRT manages its own threads); logits are
-    /// bit-identical at any worker count.
-    pub fn run_batch_with(&mut self, images: &Matrix, par: Parallelism) -> Result<BatchOutput> {
-        match self {
-            Backend::Simulator { accel, net } => {
-                // Command the device through its AXI-Lite front door,
-                // exactly as driver software would (§III-D step 1).
-                let mut axi = crate::sim::AxiRegisterFile::new();
-                let report = accel.run_via_axi(&mut axi, net, images)?;
-                debug_assert_eq!(axi.status(), crate::sim::axi::Status::Done);
-                Ok(BatchOutput {
-                    logits: report.outputs,
-                    sim_cycles: Some(report.total_cycles),
-                })
+#[cfg(feature = "pjrt")]
+impl ExecutionBackend for PjrtBackend {
+    fn run_batch_with(&mut self, batch: &Matrix, _par: Parallelism) -> Result<BatchOutput> {
+        use anyhow::ensure;
+        let (fixed_batch, feat) = self.exe.input_shape;
+        ensure!(
+            batch.cols == feat,
+            "pjrt backend expects {feat} features, got {}",
+            batch.cols
+        );
+        ensure!(
+            batch.rows <= fixed_batch,
+            "batch {} exceeds compiled shape {fixed_batch}",
+            batch.rows
+        );
+        let logits = if batch.rows == fixed_batch {
+            self.exe.run(batch)?
+        } else {
+            // Zero-pad to the compiled batch, slice the result.
+            let mut padded = Matrix::zeros(fixed_batch, feat);
+            for r in 0..batch.rows {
+                padded.row_mut(r).copy_from_slice(batch.row(r));
             }
-            Backend::Reference { net } => Ok(BatchOutput {
-                logits: net.forward_with(images, par)?,
-                sim_cycles: None,
-            }),
-            #[cfg(feature = "pjrt")]
-            Backend::Pjrt { unit } => {
-                let exe = &unit.exe;
-                let (fixed_batch, feat) = exe.input_shape;
-                ensure!(
-                    images.cols == feat,
-                    "pjrt backend expects {feat} features, got {}",
-                    images.cols
-                );
-                ensure!(
-                    images.rows <= fixed_batch,
-                    "batch {} exceeds compiled shape {fixed_batch}",
-                    images.rows
-                );
-                let logits = if images.rows == fixed_batch {
-                    exe.run(images)?
-                } else {
-                    // Zero-pad to the compiled batch, slice the result.
-                    let mut padded = Matrix::zeros(fixed_batch, feat);
-                    for r in 0..images.rows {
-                        padded.row_mut(r).copy_from_slice(images.row(r));
-                    }
-                    let full = exe.run(&padded)?;
-                    let mut out = Matrix::zeros(images.rows, full.cols);
-                    for r in 0..images.rows {
-                        out.row_mut(r).copy_from_slice(full.row(r));
-                    }
-                    out
-                };
-                Ok(BatchOutput {
-                    logits,
-                    sim_cycles: None,
-                })
+            let full = self.exe.run(&padded)?;
+            let mut out = Matrix::zeros(batch.rows, full.cols);
+            for r in 0..batch.rows {
+                out.row_mut(r).copy_from_slice(full.row(r));
             }
-        }
+            out
+        };
+        Ok(BatchOutput {
+            logits,
+            sim_cycles: None,
+        })
+    }
+
+    fn tag(&self) -> &str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        Some(self.exe.input_shape.0)
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        Some(self.exe.input_shape.1)
     }
 }
 
@@ -201,8 +329,8 @@ mod tests {
     #[test]
     fn sim_and_reference_agree() {
         let net = tiny_net();
-        let mut sim = Backend::simulator(net.clone());
-        let mut rf = Backend::Reference { net };
+        let mut sim = SimulatorBackend::new(net.clone());
+        let mut rf = ReferenceBackend::new(net);
         let x = Matrix::from_vec(
             4,
             784,
@@ -223,8 +351,48 @@ mod tests {
     }
 
     #[test]
+    fn backends_declare_model_shape() {
+        let rf = ReferenceBackend::new(tiny_net());
+        assert_eq!(rf.input_width(), Some(784));
+        assert_eq!(rf.num_classes(), Some(10));
+        let sim = SimulatorBackend::new(tiny_net());
+        assert_eq!(sim.input_width(), Some(784));
+        assert_eq!(sim.num_classes(), Some(10));
+    }
+
+    #[test]
     fn reference_rejects_bad_width() {
-        let mut rf = Backend::Reference { net: tiny_net() };
+        let mut rf = ReferenceBackend::new(tiny_net());
         assert!(rf.run_batch(&Matrix::zeros(1, 100)).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn pjrt_constructor_reports_unavailable_without_feature() {
+        let err = pjrt(&crate::io::ArtifactPaths::discover(), "hybrid", 16).unwrap_err();
+        assert!(matches!(err, ServeError::Unavailable(_)));
+    }
+
+    #[test]
+    fn trait_is_object_safe_for_third_parties() {
+        // A backend defined entirely outside the crate's own impls.
+        struct Constant(usize);
+        impl ExecutionBackend for Constant {
+            fn run_batch_with(&mut self, batch: &Matrix, _par: Parallelism) -> Result<BatchOutput> {
+                Ok(BatchOutput {
+                    logits: Matrix::zeros(batch.rows, self.0),
+                    sim_cycles: None,
+                })
+            }
+            fn tag(&self) -> &str {
+                "const"
+            }
+        }
+        let mut b: Box<dyn ExecutionBackend> = Box::new(Constant(5));
+        let out = b.run_batch(&Matrix::zeros(3, 7)).unwrap();
+        assert_eq!((out.logits.rows, out.logits.cols), (3, 5));
+        assert_eq!(b.tag(), "const");
+        assert_eq!(b.max_batch(), None);
+        assert_eq!(b.input_width(), None);
     }
 }

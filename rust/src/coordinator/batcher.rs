@@ -34,6 +34,19 @@ impl BatchPolicy {
         }
     }
 
+    /// Reject unusable policies before any worker starts: a
+    /// `max_batch` of zero ("batches of at most zero requests") is
+    /// contradictory, and the worker loop's behaviour under it was
+    /// accidental. Callers get a typed config error instead.
+    pub fn validate(&self) -> Result<(), super::error::ServeError> {
+        if self.max_batch == 0 {
+            return Err(super::error::ServeError::InvalidConfig(
+                "BatchPolicy::max_batch must be at least 1".into(),
+            ));
+        }
+        Ok(())
+    }
+
     /// Pull the next batch from `rx`. Blocks for the first request;
     /// returns `None` when the channel is closed and drained.
     pub fn next_batch(&self, rx: &Receiver<InferenceRequest>) -> Option<Vec<InferenceRequest>> {
@@ -73,10 +86,22 @@ mod tests {
         std::mem::forget(_rx);
         InferenceRequest {
             id,
-            image: vec![],
+            features: vec![],
             resp_tx: tx,
             enqueued_at: Instant::now(),
         }
+    }
+
+    #[test]
+    fn zero_max_batch_fails_validation() {
+        assert!(BatchPolicy {
+            max_batch: 0,
+            max_wait: Duration::ZERO,
+        }
+        .validate()
+        .is_err());
+        assert!(BatchPolicy::default().validate().is_ok());
+        assert!(BatchPolicy::unbatched().validate().is_ok());
     }
 
     #[test]

@@ -1,0 +1,456 @@
+//! The `Engine` facade: multiple named models behind one submit
+//! surface.
+//!
+//! An [`Engine`] owns one worker group ([`Router`]) per named model —
+//! each group is `replicas` servers over backends produced by that
+//! model's backend factory — and routes `submit(model, features)` to
+//! the right group. Shapes come from each model's
+//! [`NetworkConfig`](crate::nn::NetworkConfig): two models with
+//! different input widths and class counts serve concurrently behind
+//! the same engine, and every request is width-checked against *its*
+//! model at submit time.
+//!
+//! Built fluently:
+//!
+//! ```no_run
+//! use beanna::coordinator::{Engine, SimulatorBackend, RoutePolicy, BatchPolicy};
+//! use beanna::nn::{Network, NetworkConfig, Precision};
+//!
+//! let hybrid = Network::random(&NetworkConfig::beanna_hybrid(), 7);
+//! let tiny = Network::random(&NetworkConfig::uniform(&[32, 16, 4], Precision::Bf16), 9);
+//! let engine = Engine::builder()
+//!     .model("hybrid", hybrid)
+//!     .replicas(2)
+//!     .backend(|net, _i| Ok(SimulatorBackend::boxed(net.clone())))
+//!     .model("tiny", tiny) // defaults: 1 replica, reference backend
+//!     .batch_policy(BatchPolicy::default())
+//!     .route_policy(RoutePolicy::LeastOutstanding)
+//!     .build()?;
+//! let resp = engine.infer("tiny", vec![0.5; 32])?;
+//! assert_eq!(resp.logits.len(), 4);
+//! # anyhow::Ok(())
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+
+use super::backend::{ExecutionBackend, ReferenceBackend};
+use super::batcher::BatchPolicy;
+use super::error::{ServeError, ServeResult};
+use super::metrics::MetricsSnapshot;
+use super::request::InferenceResponse;
+use super::router::{RoutePolicy, Router};
+use super::server::ServerConfig;
+use crate::nn::Network;
+use crate::util::par::Parallelism;
+
+/// Produces one backend per replica for a model. Receives the model's
+/// network and the replica index, so factories can clone weights into
+/// per-replica engines or open per-replica devices.
+pub type BackendFactory =
+    Box<dyn FnMut(&Network, usize) -> Result<Box<dyn ExecutionBackend>, ServeError>>;
+
+struct ModelSpec {
+    name: String,
+    net: Network,
+    replicas: usize,
+    factory: Option<BackendFactory>,
+}
+
+/// Fluent builder for an [`Engine`].
+///
+/// [`model`](Self::model) registers a named model;
+/// [`replicas`](Self::replicas) and [`backend`](Self::backend) apply
+/// to the most recently added model. [`batch_policy`](Self::batch_policy),
+/// [`route_policy`](Self::route_policy), and
+/// [`parallelism`](Self::parallelism) are engine-wide. Configuration
+/// mistakes (knobs before any model, duplicate names, zero replicas)
+/// are collected and reported together as
+/// [`ServeError::InvalidConfig`] from [`build`](Self::build).
+pub struct EngineBuilder {
+    models: Vec<ModelSpec>,
+    policy: BatchPolicy,
+    route: RoutePolicy,
+    parallelism: Parallelism,
+    errors: Vec<String>,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EngineBuilder {
+    /// Empty builder with default batching, round-robin routing, and
+    /// auto-sized kernel parallelism.
+    pub fn new() -> Self {
+        Self {
+            models: Vec::new(),
+            policy: BatchPolicy::default(),
+            route: RoutePolicy::RoundRobin,
+            parallelism: Parallelism::default(),
+            errors: Vec::new(),
+        }
+    }
+
+    /// Register a named model. Defaults for the new model: one
+    /// replica, [`ReferenceBackend`] over `net`. Shapes (input width,
+    /// class count) are taken from `net.config`.
+    pub fn model(mut self, name: &str, net: Network) -> Self {
+        if self.models.iter().any(|m| m.name == name) {
+            self.errors.push(format!("duplicate model name '{name}'"));
+        }
+        self.models.push(ModelSpec {
+            name: name.to_string(),
+            net,
+            replicas: 1,
+            factory: None,
+        });
+        self
+    }
+
+    /// Set the replica count (worker-group size) of the most recently
+    /// added model.
+    pub fn replicas(mut self, n: usize) -> Self {
+        if n == 0 {
+            self.errors.push("replicas(0) is not servable".into());
+        }
+        match self.models.last_mut() {
+            Some(spec) => spec.replicas = n,
+            None => self
+                .errors
+                .push("replicas(..) called before any model(..)".into()),
+        }
+        self
+    }
+
+    /// Set the backend factory of the most recently added model. The
+    /// factory runs once per replica at [`build`](Self::build) time.
+    pub fn backend<F>(mut self, factory: F) -> Self
+    where
+        F: FnMut(&Network, usize) -> Result<Box<dyn ExecutionBackend>, ServeError> + 'static,
+    {
+        match self.models.last_mut() {
+            Some(spec) => spec.factory = Some(Box::new(factory)),
+            None => self
+                .errors
+                .push("backend(..) called before any model(..)".into()),
+        }
+        self
+    }
+
+    /// Engine-wide dynamic-batching policy (validated at build).
+    pub fn batch_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Engine-wide worker-selection policy within each model's group.
+    pub fn route_policy(mut self, route: RoutePolicy) -> Self {
+        self.route = route;
+        self
+    }
+
+    /// Engine-wide kernel-parallelism budget handed to every backend.
+    pub fn parallelism(mut self, parallelism: Parallelism) -> Self {
+        self.parallelism = parallelism;
+        self
+    }
+
+    /// Validate the whole configuration and start every worker group.
+    pub fn build(self) -> Result<Engine, ServeError> {
+        if !self.errors.is_empty() {
+            return Err(ServeError::InvalidConfig(self.errors.join("; ")));
+        }
+        if self.models.is_empty() {
+            return Err(ServeError::InvalidConfig(
+                "engine needs at least one model(..)".into(),
+            ));
+        }
+        self.policy.validate()?;
+        let config = ServerConfig {
+            policy: self.policy,
+            parallelism: self.parallelism,
+        };
+        let mut groups = BTreeMap::new();
+        for mut spec in self.models {
+            spec.net.config.validate().map_err(|e| {
+                ServeError::InvalidConfig(format!("model '{}': {e:#}", spec.name))
+            })?;
+            let input_width = spec.net.config.sizes[0];
+            let num_classes = *spec.net.config.sizes.last().unwrap();
+            let backends = (0..spec.replicas)
+                .map(|i| match &mut spec.factory {
+                    Some(f) => f(&spec.net, i),
+                    None => Ok(ReferenceBackend::boxed(spec.net.clone())),
+                })
+                .collect::<Result<Vec<_>, ServeError>>()?;
+            // A factory may hand back any engine; when it declares its
+            // shape, it must agree with the registered model's config —
+            // caught here, once, instead of as per-request width errors
+            // at serve time.
+            for (i, b) in backends.iter().enumerate() {
+                if let Some(w) = b.input_width() {
+                    if w != input_width {
+                        return Err(ServeError::InvalidConfig(format!(
+                            "model '{}' replica {i}: backend '{}' expects {w}-wide input, \
+                             model config says {input_width}",
+                            spec.name,
+                            b.tag()
+                        )));
+                    }
+                }
+                if let Some(c) = b.num_classes() {
+                    if c != num_classes {
+                        return Err(ServeError::InvalidConfig(format!(
+                            "model '{}' replica {i}: backend '{}' emits {c} classes, \
+                             model config says {num_classes}",
+                            spec.name,
+                            b.tag()
+                        )));
+                    }
+                }
+            }
+            let router = Router::start(backends, config, self.route)?;
+            groups.insert(
+                spec.name,
+                ModelGroup {
+                    router,
+                    input_width,
+                    num_classes,
+                },
+            );
+        }
+        Ok(Engine { groups })
+    }
+}
+
+struct ModelGroup {
+    router: Router,
+    input_width: usize,
+    num_classes: usize,
+}
+
+/// A running multi-model inference engine.
+pub struct Engine {
+    groups: BTreeMap<String, ModelGroup>,
+}
+
+impl Engine {
+    /// Start building an engine.
+    pub fn builder() -> EngineBuilder {
+        EngineBuilder::new()
+    }
+
+    /// Registered model names (sorted).
+    pub fn models(&self) -> Vec<&str> {
+        self.groups.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// (input width, class count) of a model.
+    pub fn model_shape(&self, model: &str) -> Result<(usize, usize), ServeError> {
+        let g = self.group(model)?;
+        Ok((g.input_width, g.num_classes))
+    }
+
+    /// Replica count of a model's worker group.
+    pub fn replicas(&self, model: &str) -> Result<usize, ServeError> {
+        Ok(self.group(model)?.router.num_workers())
+    }
+
+    fn group(&self, model: &str) -> Result<&ModelGroup, ServeError> {
+        self.groups.get(model).ok_or_else(|| ServeError::UnknownModel {
+            name: model.to_string(),
+            available: self.groups.keys().cloned().collect(),
+        })
+    }
+
+    /// Submit a request to a named model; the response (or typed
+    /// error) arrives on the returned receiver. Unknown models and
+    /// width mismatches are rejected here, synchronously.
+    pub fn submit(
+        &self,
+        model: &str,
+        features: Vec<f32>,
+    ) -> Result<Receiver<ServeResult>, ServeError> {
+        let group = self.group(model)?;
+        if features.is_empty() {
+            return Err(ServeError::EmptyRequest);
+        }
+        if features.len() != group.input_width {
+            return Err(ServeError::WidthMismatch {
+                expected: group.input_width,
+                got: features.len(),
+            });
+        }
+        let (_, rx) = group.router.submit(features)?;
+        Ok(rx)
+    }
+
+    /// Submit to a named model and wait (convenience).
+    pub fn infer(&self, model: &str, features: Vec<f32>) -> Result<InferenceResponse, ServeError> {
+        let rx = self.submit(model, features)?;
+        rx.recv().map_err(|_| ServeError::ChannelClosed)?
+    }
+
+    /// Live per-replica metrics of one model's worker group.
+    pub fn metrics(&self, model: &str) -> Result<Vec<MetricsSnapshot>, ServeError> {
+        Ok(self.group(model)?.router.metrics())
+    }
+
+    /// Stop every worker group, returning per-model, per-replica final
+    /// metrics.
+    pub fn shutdown(self) -> BTreeMap<String, Vec<MetricsSnapshot>> {
+        self.groups
+            .into_iter()
+            .map(|(name, g)| (name, g.router.shutdown()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{NetworkConfig, Precision};
+
+    fn net(sizes: &[usize], seed: u64) -> Network {
+        Network::random(&NetworkConfig::uniform(sizes, Precision::Bf16), seed)
+    }
+
+    #[test]
+    fn builder_defaults_one_reference_replica() {
+        let engine = Engine::builder()
+            .model("m", net(&[8, 6, 3], 1))
+            .build()
+            .unwrap();
+        assert_eq!(engine.models(), vec!["m"]);
+        assert_eq!(engine.replicas("m").unwrap(), 1);
+        assert_eq!(engine.model_shape("m").unwrap(), (8, 3));
+        let resp = engine.infer("m", vec![0.5; 8]).unwrap();
+        assert_eq!(resp.logits.len(), 3);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn knobs_before_model_are_config_errors() {
+        let err = Engine::builder()
+            .replicas(2)
+            .model("m", net(&[4, 2], 1))
+            .build()
+            .err()
+            .expect("replicas before model must fail");
+        assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
+        let err = Engine::builder()
+            .backend(|n, _| Ok(ReferenceBackend::boxed(n.clone())))
+            .build()
+            .err()
+            .expect("backend before model must fail");
+        assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn duplicate_and_missing_models_rejected() {
+        let err = Engine::builder()
+            .model("m", net(&[4, 2], 1))
+            .model("m", net(&[4, 2], 2))
+            .build()
+            .err()
+            .expect("duplicate model must fail");
+        assert!(err.to_string().contains("duplicate"), "{err}");
+        assert!(matches!(
+            Engine::builder().build().err().unwrap(),
+            ServeError::InvalidConfig(_)
+        ));
+    }
+
+    #[test]
+    fn zero_replicas_rejected() {
+        let err = Engine::builder()
+            .model("m", net(&[4, 2], 1))
+            .replicas(0)
+            .build()
+            .err()
+            .expect("replicas(0) must fail");
+        assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn unknown_model_lists_available() {
+        let engine = Engine::builder()
+            .model("a", net(&[4, 2], 1))
+            .model("b", net(&[6, 2], 2))
+            .build()
+            .unwrap();
+        let err = engine.submit("c", vec![0.0; 4]).unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::UnknownModel {
+                name: "c".into(),
+                available: vec!["a".into(), "b".into()],
+            }
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn per_model_width_validation() {
+        let engine = Engine::builder()
+            .model("wide", net(&[16, 4], 1))
+            .model("narrow", net(&[4, 2], 2))
+            .build()
+            .unwrap();
+        // The same feature vector is valid for one model, typed-error
+        // for the other.
+        let four = vec![0.1; 4];
+        assert!(engine.infer("narrow", four.clone()).is_ok());
+        assert_eq!(
+            engine.submit("wide", four).unwrap_err(),
+            ServeError::WidthMismatch {
+                expected: 16,
+                got: 4
+            }
+        );
+        assert_eq!(
+            engine.submit("narrow", vec![]).unwrap_err(),
+            ServeError::EmptyRequest
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn factory_shape_disagreement_caught_at_build() {
+        // The factory ignores the registered 8-wide model and builds a
+        // 4-wide backend: a config error at build(), not per-request
+        // width errors at serve time.
+        let err = Engine::builder()
+            .model("m", net(&[8, 3], 1))
+            .backend(|_n, _i| Ok(ReferenceBackend::boxed(net(&[4, 2], 2))))
+            .build()
+            .err()
+            .expect("shape disagreement must fail at build");
+        assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
+        assert!(err.to_string().contains("4-wide"), "{err}");
+    }
+
+    #[test]
+    fn factory_runs_once_per_replica() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Arc;
+        let calls = Arc::new(AtomicUsize::new(0));
+        let calls_f = Arc::clone(&calls);
+        let engine = Engine::builder()
+            .model("m", net(&[8, 3], 1))
+            .replicas(3)
+            .backend(move |n, i| {
+                assert!(i < 3);
+                calls_f.fetch_add(1, Ordering::Relaxed);
+                Ok(ReferenceBackend::boxed(n.clone()))
+            })
+            .build()
+            .unwrap();
+        assert_eq!(calls.load(Ordering::Relaxed), 3);
+        assert_eq!(engine.replicas("m").unwrap(), 3);
+        engine.shutdown();
+    }
+}

@@ -1,0 +1,124 @@
+//! Typed serving errors.
+//!
+//! Every failure on the serving path is a [`ServeError`] — delivered
+//! either synchronously from `submit`/`start`/`build`, or on the
+//! response channel as the `Err` arm of a [`ServeResult`]. No code path
+//! signals failure through sentinel values (empty logits, `usize::MAX`
+//! predictions): a response you receive is either a real
+//! [`InferenceResponse`](super::request::InferenceResponse) or a typed
+//! error you can match on.
+
+use std::fmt;
+
+/// What a submitted request resolves to: a real response or a typed
+/// serving error. This is the payload type of every response channel.
+pub type ServeResult = Result<super::request::InferenceResponse, ServeError>;
+
+/// A typed serving-path failure.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The request's feature width does not match the model's input
+    /// width. Rejected at `submit` time — mismatched requests never
+    /// reach the worker thread, so they can neither panic it nor poison
+    /// a batch.
+    WidthMismatch {
+        /// Input width the serving model expects.
+        expected: usize,
+        /// Width the request actually carried.
+        got: usize,
+    },
+    /// The request carried no features at all.
+    EmptyRequest,
+    /// The engine has no model registered under this name.
+    UnknownModel {
+        /// The name that was asked for.
+        name: String,
+        /// Models that *are* registered (sorted).
+        available: Vec<String>,
+    },
+    /// A configuration was rejected before any worker started
+    /// (`max_batch == 0`, zero replicas, duplicate model names, …).
+    InvalidConfig(String),
+    /// The execution backend failed while running a batch. Carries the
+    /// backend's `tag()` and the rendered error chain.
+    Backend {
+        /// `ExecutionBackend::tag()` of the failing backend.
+        backend: String,
+        /// Rendered error message.
+        message: String,
+    },
+    /// The requested backend is not compiled into this build (e.g. the
+    /// PJRT runtime without the `pjrt` feature).
+    Unavailable(String),
+    /// The server/engine was already shut down when the call was made.
+    Stopped,
+    /// The response channel disconnected before a response arrived
+    /// (the worker exited while the request was in flight).
+    ChannelClosed,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::WidthMismatch { expected, got } => write!(
+                f,
+                "request width mismatch: model expects {expected} features, got {got}"
+            ),
+            ServeError::EmptyRequest => write!(f, "request carries no features"),
+            ServeError::UnknownModel { name, available } => write!(
+                f,
+                "unknown model '{name}' (available: {})",
+                if available.is_empty() {
+                    "none".to_string()
+                } else {
+                    available.join(", ")
+                }
+            ),
+            ServeError::InvalidConfig(msg) => write!(f, "invalid serving config: {msg}"),
+            ServeError::Backend { backend, message } => {
+                write!(f, "backend '{backend}' failed: {message}")
+            }
+            ServeError::Unavailable(msg) => write!(f, "backend unavailable: {msg}"),
+            ServeError::Stopped => write!(f, "server stopped"),
+            ServeError::ChannelClosed => write!(f, "response channel closed"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_actionable() {
+        let e = ServeError::WidthMismatch {
+            expected: 784,
+            got: 10,
+        };
+        assert!(e.to_string().contains("784"));
+        assert!(e.to_string().contains("10"));
+        let e = ServeError::UnknownModel {
+            name: "gpt".into(),
+            available: vec!["hybrid".into(), "fp".into()],
+        };
+        assert!(e.to_string().contains("gpt"));
+        assert!(e.to_string().contains("hybrid"));
+        let e = ServeError::UnknownModel {
+            name: "x".into(),
+            available: vec![],
+        };
+        assert!(e.to_string().contains("none"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        // `ServeError: std::error::Error + Send + Sync`, so `?` works in
+        // anyhow contexts (the CLI and examples rely on this).
+        fn takes_anyhow() -> anyhow::Result<()> {
+            Err(ServeError::Stopped)?
+        }
+        assert!(takes_anyhow().is_err());
+    }
+}

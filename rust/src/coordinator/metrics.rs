@@ -8,6 +8,7 @@ use std::time::Duration;
 #[derive(Debug, Default)]
 struct State {
     requests: u64,
+    failures: u64,
     batches: u64,
     batch_rows_sum: u64,
     queue_us: Vec<f64>,
@@ -29,8 +30,12 @@ pub struct Metrics {
 /// Immutable view of the metrics at a point in time.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
-    /// Requests served.
+    /// Requests served successfully.
     pub requests: u64,
+    /// Requests that received a typed error on the response channel
+    /// (backend faults, or stale-width requests rejected by the worker
+    /// after a width re-pin).
+    pub failures: u64,
     /// Batches executed.
     pub batches: u64,
     /// Mean rows per batch.
@@ -75,7 +80,20 @@ impl Metrics {
             .fetch_add(rows as u64, std::sync::atomic::Ordering::Relaxed);
     }
 
-    /// Served-request count without taking the lock.
+    /// Record `rows` requests that received a typed error response
+    /// (a failed backend batch, or worker-side stale-width
+    /// rejections). Counts toward the fast answered counter (the
+    /// requests are no longer outstanding) but not toward `requests`.
+    pub fn record_failures(&self, rows: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.failures += rows as u64;
+        drop(s);
+        self.requests_fast
+            .fetch_add(rows as u64, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Answered-request count (successes + failures) without taking
+    /// the lock.
     pub fn requests_fast(&self) -> u64 {
         self.requests_fast.load(std::sync::atomic::Ordering::Relaxed)
     }
@@ -94,6 +112,7 @@ impl Metrics {
         };
         MetricsSnapshot {
             requests: s.requests,
+            failures: s.failures,
             batches: s.batches,
             mean_batch: if s.batches > 0 {
                 s.batch_rows_sum as f64 / s.batches as f64
@@ -128,12 +147,25 @@ mod tests {
         m.record_batch(2, &[5, 5], 300, Some(500));
         let s = m.snapshot();
         assert_eq!(s.requests, 6);
+        assert_eq!(s.failures, 0);
         assert_eq!(s.batches, 2);
         assert!((s.mean_batch - 3.0).abs() < 1e-12);
         assert_eq!(s.sim_cycles, 1500);
         let q = s.queue_us.unwrap();
         assert_eq!(q.n, 6);
         assert_eq!(q.max, 40.0);
+    }
+
+    #[test]
+    fn failures_counted_separately_but_settle_outstanding() {
+        let m = Metrics::new();
+        m.record_batch(2, &[1, 1], 10, None);
+        m.record_failures(3);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 2);
+        assert_eq!(s.failures, 3);
+        // The router's outstanding accounting sees all five answered.
+        assert_eq!(m.requests_fast(), 5);
     }
 
     #[test]

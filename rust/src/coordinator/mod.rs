@@ -4,29 +4,56 @@
 //! external hardware controller" (§III-D step 1); this module is that
 //! controller, built like a miniature serving stack:
 //!
-//! * [`request`] — request/response types.
+//! * [`request`] — request/response types (arbitrary feature/class
+//!   widths; shapes come from the served model's config).
+//! * [`error`] — typed serving failures ([`ServeError`]); every
+//!   response channel carries a [`ServeResult`], never a sentinel.
 //! * [`batcher`] — dynamic batching: collect requests up to a maximum
 //!   batch (the paper evaluates 1 and 256) or a deadline, whichever
 //!   comes first.
-//! * [`backend`] — the execution target: the cycle-level simulator, the
-//!   PJRT runtime running the AOT artifacts, or the pure-rust reference
-//!   model. All three produce logits; the simulator also reports cycles.
-//! * [`server`] — a worker thread that owns the backend, drains the
+//! * [`backend`] — the **open** execution seam: anything implementing
+//!   the object-safe [`ExecutionBackend`] trait plugs in as a
+//!   `Box<dyn ExecutionBackend>`. In-tree: [`ReferenceBackend`] (pure
+//!   rust), [`SimulatorBackend`] (cycle-level device model), and the
+//!   PJRT runtime (implementation behind the `pjrt` feature; the
+//!   [`pjrt`](backend::pjrt) constructor exists in every build).
+//! * [`server`] — a worker thread that owns one backend, drains the
 //!   queue through the batcher, and records [`metrics`].
+//! * [`router`] — replicas of one model behind a worker-selection
+//!   policy (round-robin or join-the-shortest-queue).
+//! * [`engine`] — the top-level facade: **multiple named models
+//!   behind one submit surface**, one router-managed worker group per
+//!   model, built with the fluent [`EngineBuilder`].
 //!
 //! Everything is `std::thread` + channels — no async runtime in the
-//! vendored crate set, and a single-device coordinator does not need
-//! one.
+//! vendored crate set.
+//!
+//! ```no_run
+//! use beanna::coordinator::Engine;
+//! use beanna::nn::{Network, NetworkConfig};
+//!
+//! let net = Network::random(&NetworkConfig::beanna_hybrid(), 7);
+//! let engine = Engine::builder().model("hybrid", net).replicas(2).build()?;
+//! let resp = engine.infer("hybrid", vec![0.5; 784])?;
+//! assert_eq!(resp.logits.len(), 10);
+//! # anyhow::Ok(())
+//! ```
 
 pub mod backend;
 pub mod batcher;
+pub mod engine;
+pub mod error;
 pub mod metrics;
 pub mod request;
 pub mod router;
 pub mod server;
 
-pub use backend::Backend;
+pub use backend::{pjrt, BatchOutput, ExecutionBackend, ReferenceBackend, SimulatorBackend};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
 pub use batcher::BatchPolicy;
+pub use engine::{BackendFactory, Engine, EngineBuilder};
+pub use error::{ServeError, ServeResult};
 pub use metrics::MetricsSnapshot;
 pub use request::{InferenceRequest, InferenceResponse};
 pub use router::{RoutePolicy, Router};

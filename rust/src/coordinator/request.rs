@@ -1,17 +1,28 @@
 //! Request/response types for the serving path.
+//!
+//! Shapes are model-defined, not hard-coded: a request carries an
+//! arbitrary-width feature vector (the served model's input width —
+//! 784 pixels for the paper's MNIST workload, anything for other
+//! models) and the response carries one logit per model class. Width
+//! is validated against the served model at `submit` time; the worker
+//! thread only ever sees rectangular batches.
 
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
-/// One inference request: a flattened 28×28 image.
+use super::error::ServeResult;
+
+/// One inference request: a flattened feature vector.
 #[derive(Debug)]
 pub struct InferenceRequest {
     /// Caller-assigned id, echoed in the response.
     pub id: u64,
-    /// Flattened image, 784 f32 pixels in [0, 1].
-    pub image: Vec<f32>,
-    /// Channel the response is delivered on.
-    pub resp_tx: Sender<InferenceResponse>,
+    /// Flattened input features; length must equal the served model's
+    /// input width (enforced at submit).
+    pub features: Vec<f32>,
+    /// Channel the response — or a typed serving error — is delivered
+    /// on.
+    pub resp_tx: Sender<ServeResult>,
     /// Enqueue timestamp (set by the server on submit).
     pub enqueued_at: Instant,
 }
@@ -21,7 +32,7 @@ pub struct InferenceRequest {
 pub struct InferenceResponse {
     /// Echoed request id.
     pub id: u64,
-    /// Raw logits (10 classes).
+    /// Raw logits, one per model class.
     pub logits: Vec<f32>,
     /// argmax class.
     pub prediction: usize,
@@ -45,12 +56,12 @@ mod tests {
         let (tx, rx) = channel();
         let req = InferenceRequest {
             id: 7,
-            image: vec![0.0; 784],
+            features: vec![0.0; 784],
             resp_tx: tx,
             enqueued_at: Instant::now(),
         };
         req.resp_tx
-            .send(InferenceResponse {
+            .send(Ok(InferenceResponse {
                 id: req.id,
                 logits: vec![0.0; 10],
                 prediction: 3,
@@ -58,10 +69,18 @@ mod tests {
                 compute_us: 10,
                 batch_size: 1,
                 sim_cycles: None,
-            })
+            }))
             .unwrap();
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.prediction, 3);
+    }
+
+    #[test]
+    fn errors_travel_the_same_channel() {
+        let (tx, rx) = channel();
+        let failed: ServeResult = Err(super::super::error::ServeError::Stopped);
+        tx.send(failed).unwrap();
+        assert!(rx.recv().unwrap().is_err());
     }
 }

@@ -1,23 +1,24 @@
 //! Multi-device request router: fan a request stream across several
 //! accelerator workers (the natural scale-out of the paper's device —
-//! one BEANNA per FPGA/SLR, one serving queue per device).
+//! one BEANNA per FPGA/SLR, one serving queue per device). Workers are
+//! replicas of the same model; any mix of [`ExecutionBackend`]
+//! implementations works behind one router.
 //!
 //! Policies:
 //! * [`RoutePolicy::RoundRobin`] — stateless rotation.
 //! * [`RoutePolicy::LeastOutstanding`] — join-the-shortest-queue on
-//!   (submitted − served), the standard router heuristic for
+//!   (submitted − answered), the standard router heuristic for
 //!   heterogeneous workers (cf. vLLM's router).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
-
+use super::backend::ExecutionBackend;
+use super::error::{ServeError, ServeResult};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::InferenceResponse;
 use super::server::{Server, ServerConfig};
-use super::Backend;
 
 /// Worker-selection policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -52,23 +53,27 @@ pub struct Router {
 impl Router {
     /// Start one server per backend, all with the same serving config.
     pub fn start(
-        backends: Vec<Backend>,
+        backends: Vec<Box<dyn ExecutionBackend>>,
         config: ServerConfig,
         policy: RoutePolicy,
-    ) -> Result<Self> {
-        ensure!(!backends.is_empty(), "router needs at least one backend");
+    ) -> Result<Self, ServeError> {
+        if backends.is_empty() {
+            return Err(ServeError::InvalidConfig(
+                "router needs at least one backend".into(),
+            ));
+        }
         let workers = backends
             .into_iter()
             .map(|b| {
-                let server = Server::start(b, config);
+                let server = Server::start(b, config)?;
                 let metrics = server.metrics_handle();
-                Worker {
+                Ok(Worker {
                     server,
                     submitted: AtomicU64::new(0),
                     metrics,
-                }
+                })
             })
-            .collect();
+            .collect::<Result<Vec<_>, ServeError>>()?;
         Ok(Self {
             workers,
             policy,
@@ -98,24 +103,30 @@ impl Router {
     }
 
     /// Submit a request; returns (worker index, response receiver).
-    pub fn submit(&self, image: Vec<f32>) -> Result<(usize, Receiver<InferenceResponse>)> {
+    pub fn submit(
+        &self,
+        features: Vec<f32>,
+    ) -> Result<(usize, Receiver<ServeResult>), ServeError> {
         let i = self.pick();
-        let rx = self.workers[i].server.submit(image)?;
+        let rx = self.workers[i].server.submit(features)?;
         self.workers[i].submitted.fetch_add(1, Ordering::Relaxed);
         Ok((i, rx))
     }
 
     /// Submit and wait.
-    pub fn infer(&self, image: Vec<f32>) -> Result<InferenceResponse> {
-        let (_, rx) = self.submit(image)?;
-        let resp = rx.recv().map_err(|_| anyhow::anyhow!("worker gone"))?;
-        ensure!(!resp.logits.is_empty(), "backend failed");
-        Ok(resp)
+    pub fn infer(&self, features: Vec<f32>) -> Result<InferenceResponse, ServeError> {
+        let (_, rx) = self.submit(features)?;
+        rx.recv().map_err(|_| ServeError::ChannelClosed)?
     }
 
     /// Per-worker outstanding counts (diagnostics).
     pub fn outstanding(&self) -> Vec<u64> {
         self.workers.iter().map(|w| w.outstanding()).collect()
+    }
+
+    /// Per-worker live metrics snapshots.
+    pub fn metrics(&self) -> Vec<MetricsSnapshot> {
+        self.workers.iter().map(|w| w.server.metrics()).collect()
     }
 
     /// Stop all workers, returning their final metrics.
@@ -130,6 +141,7 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::{ReferenceBackend, SimulatorBackend};
     use crate::coordinator::BatchPolicy;
     use crate::nn::{Network, NetworkConfig, Precision};
     use std::time::Duration;
@@ -158,9 +170,9 @@ mod tests {
     fn round_robin_spreads_evenly() {
         let router = Router::start(
             vec![
-                Backend::Reference { net: net(1) },
-                Backend::Reference { net: net(1) },
-                Backend::Reference { net: net(1) },
+                ReferenceBackend::boxed(net(1)),
+                ReferenceBackend::boxed(net(1)),
+                ReferenceBackend::boxed(net(1)),
             ],
             config(),
             RoutePolicy::RoundRobin,
@@ -175,7 +187,7 @@ mod tests {
             })
             .collect();
         for rx in rxs {
-            assert!(!rx.recv().unwrap().logits.is_empty());
+            assert!(!rx.recv().unwrap().unwrap().logits.is_empty());
         }
         assert_eq!(counts, [10, 10, 10]);
         let metrics = router.shutdown();
@@ -185,10 +197,7 @@ mod tests {
     #[test]
     fn least_outstanding_avoids_loaded_worker() {
         let router = Router::start(
-            vec![
-                Backend::Reference { net: net(1) },
-                Backend::Reference { net: net(2) },
-            ],
+            vec![ReferenceBackend::boxed(net(1)), ReferenceBackend::boxed(net(2))],
             config(),
             RoutePolicy::LeastOutstanding,
         )
@@ -204,7 +213,7 @@ mod tests {
         }
         assert!(counts[0] >= 10 && counts[1] >= 10, "{counts:?}");
         for (_, rx) in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         router.shutdown();
     }
@@ -212,10 +221,7 @@ mod tests {
     #[test]
     fn all_workers_produce_identical_results_for_same_weights() {
         let router = Router::start(
-            vec![
-                Backend::Reference { net: net(7) },
-                Backend::simulator(net(7)),
-            ],
+            vec![ReferenceBackend::boxed(net(7)), SimulatorBackend::boxed(net(7))],
             config(),
             RoutePolicy::RoundRobin,
         )
@@ -229,6 +235,9 @@ mod tests {
 
     #[test]
     fn empty_router_rejected() {
-        assert!(Router::start(vec![], config(), RoutePolicy::RoundRobin).is_err());
+        let err = Router::start(vec![], config(), RoutePolicy::RoundRobin)
+            .err()
+            .expect("empty router must be rejected");
+        assert!(matches!(err, ServeError::InvalidConfig(_)));
     }
 }

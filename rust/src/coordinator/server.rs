@@ -1,15 +1,22 @@
-//! The serving loop: a worker thread owning the backend, fed through the
-//! dynamic batcher.
+//! The serving loop: a worker thread owning a boxed
+//! [`ExecutionBackend`], fed through the dynamic batcher.
+//!
+//! Failure is typed end to end: malformed requests are rejected at
+//! [`Server::submit`] with a [`ServeError`] (they never reach the
+//! worker thread), and backend failures arrive on the response channel
+//! as the `Err` arm of a [`ServeResult`].
 
-use std::sync::mpsc::{channel, Sender};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::ensure;
 
-use super::backend::Backend;
+use super::backend::ExecutionBackend;
 use super::batcher::BatchPolicy;
+use super::error::{ServeError, ServeResult};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{InferenceRequest, InferenceResponse};
 use crate::bf16::Matrix;
@@ -19,7 +26,7 @@ use crate::util::par::Parallelism;
 /// Server configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
-    /// Batching policy.
+    /// Batching policy (validated by [`Server::start`]).
     pub policy: BatchPolicy,
     /// Kernel-parallelism budget handed to the backend for every batch
     /// (auto-sized to the host by default). A dynamic batch closed by
@@ -40,55 +47,149 @@ impl Default for ServerConfig {
     }
 }
 
-/// A running inference server.
+/// A running inference server over one backend.
 pub struct Server {
     tx: Option<Sender<InferenceRequest>>,
     handle: Option<JoinHandle<()>>,
     metrics: Arc<Metrics>,
-    next_id: std::sync::atomic::AtomicU64,
+    next_id: AtomicU64,
+    /// Input width every request must match. `0` means "not yet known":
+    /// the backend declared no width, so the first accepted request
+    /// pins it (batches must be rectangular). Shared with the worker,
+    /// which *unpins* the width again if the backend rejects a batch
+    /// before any batch of that width ever succeeded — a mis-sized
+    /// first guess must not lock out correctly-sized traffic forever,
+    /// while a once-confirmed width survives transient backend faults.
+    expected_width: Arc<AtomicUsize>,
 }
 
 impl Server {
-    /// Start the worker thread with a backend. Also warms the
+    /// Start the worker thread over any backend. Validates the batch
+    /// policy, clamps it to the backend's `max_batch`, runs the
+    /// backend's [`warm`](ExecutionBackend::warm) hook, and warms the
     /// process-wide kernel worker pool (a no-op for serial budgets and
     /// on every call after the first), so batch dispatch never spawns.
-    pub fn start(mut backend: Backend, config: ServerConfig) -> Self {
+    pub fn start(
+        mut backend: Box<dyn ExecutionBackend>,
+        config: ServerConfig,
+    ) -> Result<Self, ServeError> {
+        config.policy.validate()?;
+        let mut policy = config.policy;
+        if let Some(cap) = backend.max_batch() {
+            if cap == 0 {
+                return Err(ServeError::InvalidConfig(format!(
+                    "backend '{}' reports max_batch == 0",
+                    backend.tag()
+                )));
+            }
+            // Shape-specialized backends cap the dynamic batch.
+            policy.max_batch = policy.max_batch.min(cap);
+        }
+        let declared_width = backend.input_width();
+        let expected_width = Arc::new(AtomicUsize::new(declared_width.unwrap_or(0)));
+        // Only a *pinned* (guessed-from-traffic) width may be reset by
+        // the worker on backend failure; a declared width is authoritative.
+        let unpin_on_failure = if declared_width.is_none() {
+            Some(Arc::clone(&expected_width))
+        } else {
+            None
+        };
+        let expected_worker = Arc::clone(&expected_width);
+        let declared_classes = backend.num_classes();
+        backend.warm();
         config.parallelism.warm_pool();
+        let tag = backend.tag().to_string();
         let (tx, rx) = channel::<InferenceRequest>();
         let metrics = Arc::new(Metrics::new());
         let metrics_worker = Arc::clone(&metrics);
-        // PJRT backends cap the batch at their compiled shape.
-        let mut policy = config.policy;
-        if let Some(cap) = backend.max_batch() {
-            policy.max_batch = policy.max_batch.min(cap);
-        }
         let parallelism = config.parallelism;
         let handle = std::thread::spawn(move || {
+            // Once any batch of the pinned width has succeeded, the pin
+            // is confirmed and never reset: a later transient backend
+            // fault must not let a stray mis-sized request steal it.
+            let mut width_confirmed = false;
             while let Some(batch) = policy.next_batch(&rx) {
                 let closed_at = Instant::now();
+                // `submit` rejects width mismatches, so batches are
+                // normally rectangular — but when an undeclared width is
+                // unpinned after a failure and re-pinned by newer traffic,
+                // leftover queued requests of the old width can share a
+                // batch with the new one. Partition against the *current*
+                // pin (falling back to the batch head when unpinned)
+                // instead of trusting the invariant: stale-width requests
+                // get a typed error, never a `copy_from_slice` panic.
+                let width = match expected_worker.load(Ordering::Relaxed) {
+                    0 => batch[0].features.len(),
+                    w => w,
+                };
+                // Fast path: submit-side validation makes mismatches a
+                // rare post-unpin edge, so don't pay partition's moves
+                // and allocations on every batch.
+                let batch = if batch.iter().all(|req| req.features.len() == width) {
+                    batch
+                } else {
+                    let (keep, mismatched): (Vec<_>, Vec<_>) = batch
+                        .into_iter()
+                        .partition(|req| req.features.len() == width);
+                    for req in mismatched {
+                        metrics_worker.record_failures(1);
+                        let _ = req.resp_tx.send(Err(ServeError::WidthMismatch {
+                            expected: width,
+                            got: req.features.len(),
+                        }));
+                    }
+                    keep
+                };
+                if batch.is_empty() {
+                    continue;
+                }
                 let rows = batch.len();
-                let width = batch[0].image.len();
-                let mut images = Matrix::zeros(rows, width);
+                let mut features = Matrix::zeros(rows, width);
                 for (r, req) in batch.iter().enumerate() {
-                    images.row_mut(r).copy_from_slice(&req.image);
+                    features.row_mut(r).copy_from_slice(&req.features);
                 }
                 let t0 = Instant::now();
-                let out = match backend.run_batch_with(&images, parallelism) {
+                // Shape-check the backend's answer: a misbehaving
+                // third-party engine must become a typed error for this
+                // batch, not an out-of-bounds panic that kills the
+                // worker.
+                let result = backend.run_batch_with(&features, parallelism).and_then(|out| {
+                    ensure!(
+                        out.logits.rows == rows && out.logits.cols > 0,
+                        "backend returned {}x{} logits for a {rows}-row batch",
+                        out.logits.rows,
+                        out.logits.cols
+                    );
+                    if let Some(classes) = declared_classes {
+                        ensure!(
+                            out.logits.cols == classes,
+                            "backend returned {} logit columns, declared {classes}",
+                            out.logits.cols
+                        );
+                    }
+                    Ok(out)
+                });
+                let out = match result {
                     Ok(out) => out,
                     Err(e) => {
-                        // Deliver an error marker: empty logits. Callers
-                        // treat logits.is_empty() as failure.
-                        eprintln!("backend error: {e:#}");
+                        // Also log server-side: a client that dropped its
+                        // receiver must not make the fault invisible.
+                        eprintln!("[beanna::serve] backend '{tag}' error: {e:#}");
+                        let err = ServeError::Backend {
+                            backend: tag.clone(),
+                            message: format!("{e:#}"),
+                        };
+                        metrics_worker.record_failures(rows);
+                        // An unconfirmed pin came from this (rejected)
+                        // traffic's own guess — let the next request
+                        // re-pin it. A confirmed width stays.
+                        if !width_confirmed {
+                            if let Some(pin) = &unpin_on_failure {
+                                pin.store(0, Ordering::Relaxed);
+                            }
+                        }
                         for req in batch {
-                            let _ = req.resp_tx.send(InferenceResponse {
-                                id: req.id,
-                                logits: vec![],
-                                prediction: usize::MAX,
-                                queue_us: 0,
-                                compute_us: 0,
-                                batch_size: rows,
-                                sim_cycles: None,
-                            });
+                            let _ = req.resp_tx.send(Err(err.clone()));
                         }
                         continue;
                     }
@@ -99,9 +200,15 @@ impl Server {
                     .map(|r| closed_at.duration_since(r.enqueued_at).as_micros() as u64)
                     .collect();
                 metrics_worker.record_batch(rows, &queue_us, compute_us, out.sim_cycles);
+                // Re-assert the width that actually succeeded: the pin
+                // may have been cleared by an earlier failure and this
+                // batch served via the head-width fallback, and a
+                // confirmed width must really be the stored one.
+                expected_worker.store(width, Ordering::Relaxed);
+                width_confirmed = true;
                 for (r, req) in batch.into_iter().enumerate() {
                     let logits = out.logits.row(r).to_vec();
-                    let _ = req.resp_tx.send(InferenceResponse {
+                    let _ = req.resp_tx.send(Ok(InferenceResponse {
                         id: req.id,
                         prediction: argmax(&logits),
                         logits,
@@ -109,46 +216,75 @@ impl Server {
                         compute_us,
                         batch_size: rows,
                         sim_cycles: out.sim_cycles,
-                    });
+                    }));
                 }
             }
         });
-        Self {
+        Ok(Self {
             tx: Some(tx),
             handle: Some(handle),
             metrics,
-            next_id: std::sync::atomic::AtomicU64::new(0),
+            next_id: AtomicU64::new(0),
+            expected_width,
+        })
+    }
+
+    /// Validate a request's feature width against the served model,
+    /// pinning the width from the first request when the backend
+    /// declared none.
+    fn check_width(&self, got: usize) -> Result<(), ServeError> {
+        if got == 0 {
+            return Err(ServeError::EmptyRequest);
+        }
+        let expected = match self.expected_width.load(Ordering::Relaxed) {
+            0 => match self
+                .expected_width
+                .compare_exchange(0, got, Ordering::Relaxed, Ordering::Relaxed)
+            {
+                Ok(_) => got,
+                Err(winner) => winner,
+            },
+            w => w,
+        };
+        if got != expected {
+            return Err(ServeError::WidthMismatch { expected, got });
+        }
+        Ok(())
+    }
+
+    /// Input width this server accepts, if already known.
+    pub fn input_width(&self) -> Option<usize> {
+        match self.expected_width.load(Ordering::Relaxed) {
+            0 => None,
+            w => Some(w),
         }
     }
 
-    /// Submit asynchronously; the response arrives on the returned
-    /// receiver.
-    pub fn submit(&self, image: Vec<f32>) -> Result<std::sync::mpsc::Receiver<InferenceResponse>> {
+    /// Submit asynchronously; the response (or typed error) arrives on
+    /// the returned receiver. Requests whose width doesn't match the
+    /// served model are rejected here — before they can reach the
+    /// worker thread.
+    pub fn submit(&self, features: Vec<f32>) -> Result<Receiver<ServeResult>, ServeError> {
+        self.check_width(features.len())?;
         let (resp_tx, resp_rx) = channel();
-        let id = self
-            .next_id
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.tx
             .as_ref()
-            .ok_or_else(|| anyhow!("server stopped"))?
+            .ok_or(ServeError::Stopped)?
             .send(InferenceRequest {
                 id,
-                image,
+                features,
                 resp_tx,
                 enqueued_at: Instant::now(),
             })
-            .map_err(|_| anyhow!("server thread gone"))?;
+            .map_err(|_| ServeError::Stopped)?;
         Ok(resp_rx)
     }
 
     /// Submit and wait (convenience).
-    pub fn infer(&self, image: Vec<f32>) -> Result<InferenceResponse> {
-        let rx = self.submit(image)?;
-        let resp = rx.recv().map_err(|_| anyhow!("response channel closed"))?;
-        if resp.logits.is_empty() {
-            return Err(anyhow!("backend failed for request {}", resp.id));
-        }
-        Ok(resp)
+    pub fn infer(&self, features: Vec<f32>) -> Result<InferenceResponse, ServeError> {
+        let rx = self.submit(features)?;
+        rx.recv().map_err(|_| ServeError::ChannelClosed)?
     }
 
     /// Live metrics handle.
@@ -184,30 +320,30 @@ impl Drop for Server {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::backend::ReferenceBackend;
     use crate::nn::{Network, NetworkConfig, Precision};
     use std::time::Duration;
 
-    fn tiny_backend() -> Backend {
-        Backend::Reference {
-            net: Network::random(
-                &NetworkConfig {
-                    sizes: vec![784, 16, 10],
-                    precisions: vec![Precision::Bf16, Precision::Bf16],
-                },
-                1,
-            ),
-        }
+    fn tiny_backend() -> Box<dyn ExecutionBackend> {
+        ReferenceBackend::boxed(Network::random(
+            &NetworkConfig {
+                sizes: vec![784, 16, 10],
+                precisions: vec![Precision::Bf16, Precision::Bf16],
+            },
+            1,
+        ))
     }
 
     #[test]
     fn serves_single_requests() {
-        let server = Server::start(tiny_backend(), ServerConfig::default());
+        let server = Server::start(tiny_backend(), ServerConfig::default()).unwrap();
         let resp = server.infer(vec![0.5; 784]).unwrap();
         assert_eq!(resp.logits.len(), 10);
         assert!(resp.prediction < 10);
         let m = server.shutdown();
         assert_eq!(m.requests, 1);
         assert_eq!(m.batches, 1);
+        assert_eq!(m.failures, 0);
     }
 
     #[test]
@@ -221,11 +357,15 @@ mod tests {
                 },
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let rxs: Vec<_> = (0..8)
             .map(|i| server.submit(vec![i as f32 / 8.0; 784]).unwrap())
             .collect();
-        let resps: Vec<_> = rxs.into_iter().map(|rx| rx.recv().unwrap()).collect();
+        let resps: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap())
+            .collect();
         assert!(resps.iter().all(|r| r.logits.len() == 10));
         // At least some requests must have shared a batch.
         let max_batch_seen = resps.iter().map(|r| r.batch_size).max().unwrap();
@@ -248,7 +388,8 @@ mod tests {
         let direct = net
             .predict(&Matrix::from_vec(1, 784, image.clone()).unwrap())
             .unwrap()[0];
-        let server = Server::start(Backend::Reference { net }, ServerConfig::default());
+        let server =
+            Server::start(ReferenceBackend::boxed(net), ServerConfig::default()).unwrap();
         let resp = server.infer(image).unwrap();
         assert_eq!(resp.prediction, direct);
         server.shutdown();
@@ -256,11 +397,172 @@ mod tests {
 
     #[test]
     fn shutdown_drains() {
-        let server = Server::start(tiny_backend(), ServerConfig::default());
+        let server = Server::start(tiny_backend(), ServerConfig::default()).unwrap();
         let rx = server.submit(vec![0.0; 784]).unwrap();
         let m = server.shutdown();
         // The queued request is served before the worker exits.
         assert_eq!(m.requests, 1);
-        assert!(rx.recv().is_ok());
+        assert!(rx.recv().unwrap().is_ok());
+    }
+
+    #[test]
+    fn width_mismatch_rejected_at_submit() {
+        let server = Server::start(tiny_backend(), ServerConfig::default()).unwrap();
+        assert_eq!(server.input_width(), Some(784));
+        let err = server.submit(vec![0.1; 10]).unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::WidthMismatch {
+                expected: 784,
+                got: 10
+            }
+        );
+        assert_eq!(server.submit(vec![]).unwrap_err(), ServeError::EmptyRequest);
+        // Well-formed traffic still flows afterwards.
+        assert_eq!(server.infer(vec![0.2; 784]).unwrap().logits.len(), 10);
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_max_batch_is_a_config_error() {
+        let err = Server::start(
+            tiny_backend(),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 0,
+                    max_wait: Duration::ZERO,
+                },
+                ..Default::default()
+            },
+        )
+        .err()
+        .expect("max_batch 0 must be rejected");
+        assert!(matches!(err, ServeError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn pinned_width_unpins_after_backend_rejects_it() {
+        // Declares no width, but only actually accepts 64-wide rows.
+        struct Picky;
+        impl ExecutionBackend for Picky {
+            fn run_batch_with(
+                &mut self,
+                batch: &Matrix,
+                _par: Parallelism,
+            ) -> anyhow::Result<super::super::backend::BatchOutput> {
+                anyhow::ensure!(batch.cols == 64, "device wants 64-wide rows");
+                Ok(super::super::backend::BatchOutput {
+                    logits: Matrix::zeros(batch.rows, 2),
+                    sim_cycles: None,
+                })
+            }
+            fn tag(&self) -> &str {
+                "picky"
+            }
+        }
+        let server = Server::start(
+            Box::new(Picky),
+            ServerConfig {
+                policy: BatchPolicy::unbatched(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // A wrong first guess pins 100 and fails on the backend…
+        let err = server.infer(vec![0.0; 100]).unwrap_err();
+        assert!(matches!(err, ServeError::Backend { .. }), "{err}");
+        // …but must not lock out correctly-sized traffic afterwards.
+        let ok = server.infer(vec![0.0; 64]).unwrap();
+        assert_eq!(ok.logits.len(), 2);
+        assert_eq!(server.input_width(), Some(64));
+        server.shutdown();
+    }
+
+    #[test]
+    fn width_served_after_unpin_is_stored_and_cannot_be_stolen() {
+        // Accepts any width but faults on its first batch; declares none.
+        struct FlakyEcho {
+            failed: bool,
+        }
+        impl ExecutionBackend for FlakyEcho {
+            fn run_batch_with(
+                &mut self,
+                batch: &Matrix,
+                _par: Parallelism,
+            ) -> anyhow::Result<super::super::backend::BatchOutput> {
+                if !self.failed {
+                    self.failed = true;
+                    anyhow::bail!("transient hiccup");
+                }
+                Ok(super::super::backend::BatchOutput {
+                    logits: Matrix::zeros(batch.rows, 1),
+                    sim_cycles: None,
+                })
+            }
+            fn tag(&self) -> &str {
+                "flaky-echo"
+            }
+        }
+        let server = Server::start(
+            Box::new(FlakyEcho { failed: false }),
+            ServerConfig {
+                policy: BatchPolicy::unbatched(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let rx_a = server.submit(vec![0.0; 100]).unwrap(); // pins 100
+        let rx_b = server.submit(vec![0.0; 100]).unwrap();
+        assert!(rx_a.recv().unwrap().is_err()); // fault → width unpinned
+        assert!(rx_b.recv().unwrap().is_ok()); // served via head fallback
+        // The width that actually served is stored back and confirmed —
+        // a stray mis-sized request cannot steal the pin any more.
+        assert_eq!(server.input_width(), Some(100));
+        assert_eq!(
+            server.submit(vec![0.0; 77]).unwrap_err(),
+            ServeError::WidthMismatch {
+                expected: 100,
+                got: 77
+            }
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn width_pinned_from_first_request_when_backend_is_silent() {
+        // A width-agnostic backend: echoes row-sums, any width.
+        struct Echo;
+        impl ExecutionBackend for Echo {
+            fn run_batch_with(
+                &mut self,
+                batch: &Matrix,
+                _par: Parallelism,
+            ) -> anyhow::Result<super::super::backend::BatchOutput> {
+                let mut logits = Matrix::zeros(batch.rows, 1);
+                for r in 0..batch.rows {
+                    logits.row_mut(r)[0] = batch.row(r).iter().sum();
+                }
+                Ok(super::super::backend::BatchOutput {
+                    logits,
+                    sim_cycles: None,
+                })
+            }
+            fn tag(&self) -> &str {
+                "echo"
+            }
+        }
+        let server = Server::start(Box::new(Echo), ServerConfig::default()).unwrap();
+        assert_eq!(server.input_width(), None);
+        assert_eq!(server.infer(vec![1.0; 3]).unwrap().logits, vec![3.0]);
+        assert_eq!(server.input_width(), Some(3));
+        // Pinned: a different width is now a typed error.
+        assert_eq!(
+            server.submit(vec![0.0; 4]).unwrap_err(),
+            ServeError::WidthMismatch {
+                expected: 3,
+                got: 4
+            }
+        );
+        server.shutdown();
     }
 }

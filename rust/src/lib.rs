@@ -11,8 +11,13 @@
 //!   cycle-level simulator ([`sim`]), analytic FPGA resource/power/memory
 //!   models ([`model`]), a PJRT runtime that executes the AOT artifacts
 //!   (`runtime`, behind the off-by-default `pjrt` feature — it needs the
-//!   non-vendored `xla` crate), and an inference coordinator with dynamic
-//!   batching ([`coordinator`]).
+//!   non-vendored `xla` crate), and an inference coordinator
+//!   ([`coordinator`]): dynamic batching, replica routing, and a
+//!   multi-model [`Engine`](coordinator::Engine) facade over an **open**
+//!   [`ExecutionBackend`](coordinator::ExecutionBackend) trait — any
+//!   engine that can run a batch plugs into the same serving stack, and
+//!   every failure is a typed
+//!   [`ServeError`](coordinator::ServeError), never a sentinel.
 //!
 //! The functional hot paths (bf16 and XNOR-popcount matmuls) execute on
 //! a parallel, cache-tiled engine ([`util::par`]) dispatching to a

@@ -19,7 +19,7 @@
 use anyhow::{bail, Result};
 
 use beanna::bf16::format::render_fig1;
-use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::coordinator::{BatchPolicy, Engine, EngineBuilder, RoutePolicy, SimulatorBackend};
 use beanna::data::SynthMnist;
 use beanna::experiments;
 use beanna::io::ArtifactPaths;
@@ -150,10 +150,52 @@ fn cmd_peak() -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--route` value.
+fn parse_route(s: &str) -> Result<RoutePolicy> {
+    Ok(match s {
+        "rr" => RoutePolicy::RoundRobin,
+        "jsq" => RoutePolicy::LeastOutstanding,
+        other => bail!("unknown routing policy '{other}' (use rr | jsq)"),
+    })
+}
+
+/// Register `model` on the builder with the backend kind selected on
+/// the CLI (`ref` keeps the builder's reference default; the PJRT
+/// branch surfaces `ServeError::Unavailable` at build time when the
+/// feature is off — no `#[cfg]` needed here).
+fn with_cli_backend(
+    builder: EngineBuilder,
+    kind: &str,
+    paths: &ArtifactPaths,
+    model: &str,
+    max_batch: usize,
+) -> Result<EngineBuilder> {
+    // ref/sim execute the host weights, so they are required; the PJRT
+    // artifact carries its own weights — the network is only shape
+    // metadata there, so fall back to the paper config when no host
+    // weights file exists.
+    let net = if kind == "pjrt" {
+        experiments::load_variant(paths, model).0
+    } else {
+        Network::load(&paths.weights(model))?
+    };
+    let builder = builder.model(model, net);
+    Ok(match kind {
+        "ref" => builder,
+        "sim" => builder.backend(|net, _i| Ok(SimulatorBackend::boxed(net.clone()))),
+        "pjrt" => {
+            let paths = paths.clone();
+            let model = model.to_string();
+            builder.backend(move |_net, _i| beanna::coordinator::pjrt(&paths, &model, max_batch))
+        }
+        other => bail!("unknown backend '{other}' (use sim | ref | pjrt)"),
+    })
+}
+
 fn cmd_infer(args: Vec<String>) -> Result<()> {
     let spec = ArgSpec::new("beanna infer", "classify one test image")
         .opt("backend", "sim", "sim | ref | pjrt")
-        .opt("variant", "hybrid", "hybrid | fp")
+        .opt("model", "hybrid", "model weights variant: hybrid | fp")
         .opt("index", "0", "test-set image index")
         .flag("show", "print the image as ASCII art");
     let p = spec.parse_from(args)?;
@@ -168,30 +210,16 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
     if p.flag("show") {
         println!("{}", test.ascii_art(idx));
     }
-    let variant = p.get("variant").unwrap().to_string();
-    let backend = match p.get("backend").unwrap() {
-        "sim" => Backend::simulator(Network::load(&paths.weights(&variant))?),
-        "ref" => Backend::Reference {
-            net: Network::load(&paths.weights(&variant))?,
-        },
-        #[cfg(feature = "pjrt")]
-        "pjrt" => Backend::pjrt(&paths, &variant, 1)?,
-        #[cfg(not(feature = "pjrt"))]
-        "pjrt" => bail!("this build has no PJRT support (rebuild with --features pjrt)"),
-        other => bail!("unknown backend '{other}'"),
-    };
-    let server = Server::start(
-        backend,
-        ServerConfig {
-            policy: BatchPolicy::unbatched(),
-            ..Default::default()
-        },
-    );
-    let resp = server.infer(test.images.row(idx).to_vec())?;
+    let model = p.get("model").unwrap().to_string();
+    let builder = Engine::builder().batch_policy(BatchPolicy::unbatched());
+    let engine =
+        with_cli_backend(builder, p.get("backend").unwrap(), &paths, &model, 1)?.build()?;
+    let resp = engine.infer(&model, test.images.row(idx).to_vec())?;
     println!(
-        "label {}  predicted {}  (batch {}, compute {} µs{})",
+        "label {}  predicted {}  (model {}, batch {}, compute {} µs{})",
         test.labels[idx],
         resp.prediction,
+        model,
         resp.batch_size,
         resp.compute_us,
         match resp.sim_cycles {
@@ -199,19 +227,23 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
             None => String::new(),
         }
     );
-    server.shutdown();
+    engine.shutdown();
     Ok(())
 }
 
 fn cmd_serve(args: Vec<String>) -> Result<()> {
     let spec = ArgSpec::new("beanna serve", "serve the test set through the batcher")
         .opt("backend", "ref", "sim | ref | pjrt")
-        .opt("variant", "hybrid", "hybrid | fp")
+        .opt(
+            "model",
+            "hybrid",
+            "comma-separated model list (hybrid,fp); one worker group each",
+        )
         .opt("requests", "512", "number of requests to issue")
         .opt("max-batch", "256", "batcher max batch")
         .opt("max-wait-ms", "2", "batcher deadline (ms)")
-        .opt("workers", "1", "number of devices behind the router")
-        .opt("route", "jsq", "routing policy: rr | jsq")
+        .opt("replicas", "1", "devices per model's worker group")
+        .opt("route", "jsq", "routing policy within a group: rr | jsq")
         .opt(
             "kernel-workers",
             "0",
@@ -220,83 +252,84 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     let p = spec.parse_from(args)?;
     let paths = ArtifactPaths::discover();
     let test = SynthMnist::load(&paths.dataset())?;
-    let variant = p.get("variant").unwrap().to_string();
     let max_batch = p.get_usize("max-batch")?;
-    let workers = p.get_usize("workers")?.max(1);
-    let make_backend = |_i: usize| -> Result<Backend> {
-        Ok(match p.get("backend").unwrap() {
-            "sim" => Backend::simulator(Network::load(&paths.weights(&variant))?),
-            "ref" => Backend::Reference {
-                net: Network::load(&paths.weights(&variant))?,
-            },
-            #[cfg(feature = "pjrt")]
-            "pjrt" => Backend::pjrt(&paths, &variant, max_batch)?,
-            #[cfg(not(feature = "pjrt"))]
-            "pjrt" => bail!("this build has no PJRT support (rebuild with --features pjrt)"),
-            other => bail!("unknown backend '{other}'"),
-        })
-    };
-    let backends: Vec<Backend> = (0..workers)
-        .map(make_backend)
-        .collect::<Result<_>>()?;
-    let policy = match p.get("route").unwrap() {
-        "rr" => beanna::coordinator::RoutePolicy::RoundRobin,
-        "jsq" => beanna::coordinator::RoutePolicy::LeastOutstanding,
-        other => bail!("unknown routing policy '{other}'"),
-    };
+    let replicas = p.get_usize("replicas")?.max(1);
+    let models: Vec<String> = p
+        .get("model")
+        .unwrap()
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    anyhow::ensure!(!models.is_empty(), "--model needs at least one name");
     let parallelism = match p.get_usize("kernel-workers")? {
         0 => beanna::coordinator::Parallelism::auto(),
         n => beanna::coordinator::Parallelism::fixed(n),
     };
-    let router = beanna::coordinator::Router::start(
-        backends,
-        ServerConfig {
-            policy: BatchPolicy {
-                max_batch,
-                max_wait: std::time::Duration::from_millis(p.get_u64("max-wait-ms")?),
-            },
-            parallelism,
-        },
-        policy,
-    )?;
+    let mut builder = Engine::builder()
+        .batch_policy(BatchPolicy {
+            max_batch,
+            max_wait: std::time::Duration::from_millis(p.get_u64("max-wait-ms")?),
+        })
+        .route_policy(parse_route(p.get("route").unwrap())?)
+        .parallelism(parallelism);
+    let kind = p.get("backend").unwrap();
+    for model in &models {
+        builder = with_cli_backend(builder, kind, &paths, model, max_batch)?;
+        builder = builder.replicas(replicas);
+    }
+    let engine = builder.build()?;
+    // Rotate requests across the named models: one shared submit
+    // surface, per-model worker groups underneath.
     let n = p.get_usize("requests")?.min(test.len());
     let rxs: Vec<_> = (0..n)
-        .map(|i| router.submit(test.images.row(i).to_vec()).unwrap().1)
-        .collect();
+        .map(|i| {
+            let model = &models[i % models.len()];
+            engine
+                .submit(model, test.images.row(i).to_vec())
+                .map(|rx| (i, rx))
+        })
+        .collect::<Result<_, _>>()?;
     let mut correct = 0usize;
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv()?;
+    for (i, rx) in rxs {
+        let resp = rx.recv()??;
         if resp.prediction == test.labels[i] {
             correct += 1;
         }
     }
-    let metrics = router.shutdown();
-    let total_requests: u64 = metrics.iter().map(|m| m.requests).sum();
-    let total_batches: u64 = metrics.iter().map(|m| m.batches).sum();
+    let metrics = engine.shutdown();
+    let total_requests: u64 = metrics.values().flatten().map(|m| m.requests).sum();
+    let total_batches: u64 = metrics.values().flatten().map(|m| m.batches).sum();
     println!(
-        "served {} requests in {} batches over {} worker(s)",
-        total_requests, total_batches, workers
+        "served {} requests in {} batches over {} model(s) × {} replica(s)",
+        total_requests,
+        total_batches,
+        models.len(),
+        replicas
     );
-    println!(
-        "accuracy {:.2}%",
-        correct as f64 / n as f64 * 100.0
-    );
-    for (i, m) in metrics.iter().enumerate() {
-        print!(
-            "  worker {i}: {} reqs, {} batches (mean {:.1}), {:.0} req/s",
-            m.requests, m.batches, m.mean_batch, m.throughput_rps
-        );
-        if let Some(q) = &m.queue_us {
-            print!(", queue µs p50 {:.0} p95 {:.0}", q.median, q.p95);
-        }
-        if m.sim_cycles > 0 {
+    println!("accuracy {:.2}%", correct as f64 / n as f64 * 100.0);
+    for (model, group) in &metrics {
+        println!("model '{model}':");
+        for (i, m) in group.iter().enumerate() {
             print!(
-                ", {} device cycles → {:.1} inf/s @100 MHz",
-                m.sim_cycles,
-                m.requests as f64 / (m.sim_cycles as f64 / beanna::CLOCK_HZ as f64)
+                "  replica {i}: {} reqs, {} batches (mean {:.1}), {:.0} req/s",
+                m.requests, m.batches, m.mean_batch, m.throughput_rps
             );
+            if m.failures > 0 {
+                print!(", {} FAILED", m.failures);
+            }
+            if let Some(q) = &m.queue_us {
+                print!(", queue µs p50 {:.0} p95 {:.0}", q.median, q.p95);
+            }
+            if m.sim_cycles > 0 {
+                print!(
+                    ", {} device cycles → {:.1} inf/s @100 MHz",
+                    m.sim_cycles,
+                    m.requests as f64 / (m.sim_cycles as f64 / beanna::CLOCK_HZ as f64)
+                );
+            }
+            println!();
         }
-        println!();
     }
     Ok(())
 }

@@ -1,0 +1,376 @@
+//! Backend-conformance suite: one contract, run over **every**
+//! `ExecutionBackend` implementation — the two in-tree backends plus a
+//! test-local third-party impl (proving external engines register
+//! through the trait without touching any crate enum).
+//!
+//! The contract (see the trait docs):
+//! * `tag()` is non-empty; declared shape matches the model config.
+//! * `warm()` may be called before traffic and must not change results.
+//! * Logits are `batch × classes`, deterministic across repeated runs
+//!   and across worker counts.
+//! * Bad input is an `Err`, never an in-band sentinel.
+//! * Behind a `Server`: width mismatches are typed errors at submit,
+//!   `max_batch` declarations are respected, and backend failures
+//!   arrive as `ServeError::Backend` on the response channel.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use beanna::bf16::Matrix;
+use beanna::coordinator::{
+    BatchOutput, BatchPolicy, ExecutionBackend, Parallelism, ReferenceBackend, ServeError,
+    Server, ServerConfig, SimulatorBackend,
+};
+use beanna::nn::{Network, NetworkConfig, Precision};
+use beanna::util::rng::Xoshiro256;
+
+fn shared_net() -> Network {
+    Network::random(
+        &NetworkConfig {
+            sizes: vec![40, 48, 48, 10],
+            precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+        },
+        77,
+    )
+}
+
+fn probe(rows: usize, cols: usize, seed: u64) -> Matrix {
+    Matrix::from_vec(
+        rows,
+        cols,
+        Xoshiro256::seed_from_u64(seed).normal_vec(rows * cols),
+    )
+    .unwrap()
+}
+
+/// Run the whole conformance contract over one backend constructor.
+fn assert_conforms(mk: &mut dyn FnMut() -> Box<dyn ExecutionBackend>, net: &Network) {
+    let width = net.config.sizes[0];
+    let classes = *net.config.sizes.last().unwrap();
+
+    // Declared identity and shape.
+    let mut b = mk();
+    assert!(!b.tag().is_empty(), "tag must be non-empty");
+    if let Some(w) = b.input_width() {
+        assert_eq!(w, width, "declared input width disagrees with config");
+    }
+    if let Some(c) = b.num_classes() {
+        assert_eq!(c, classes, "declared class count disagrees with config");
+    }
+
+    // warm() before traffic; logits well-shaped and deterministic.
+    // Direct batches must respect the backend's own declared cap.
+    b.warm();
+    let rows = b.max_batch().unwrap_or(5).min(5);
+    let x = probe(rows, width, 1);
+    let out1 = b.run_batch(&x).unwrap();
+    assert_eq!((out1.logits.rows, out1.logits.cols), (rows, classes));
+    let out2 = b.run_batch(&x).unwrap();
+    assert_eq!(out1.logits, out2.logits, "backend is not deterministic");
+
+    // Parallelism budget must not change numerics.
+    let serial = b.run_batch_with(&x, Parallelism::serial()).unwrap();
+    assert_eq!(out1.logits, serial.logits, "parallelism changed numerics");
+
+    // A fresh instance agrees with the first (no hidden global state).
+    let mut b2 = mk();
+    let fresh = b2.run_batch(&x).unwrap();
+    assert_eq!(out1.logits, fresh.logits, "fresh instance diverged");
+
+    // Bad width is an error return, not a sentinel.
+    let bad = b.run_batch(&probe(2, width + 3, 2));
+    assert!(bad.is_err(), "mis-shaped batch must be an Err");
+
+    // Behind a server: typed submit-side rejection + live traffic.
+    let server = Server::start(
+        mk(),
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(5),
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // Prime one good request so width is pinned even for backends that
+    // don't declare it.
+    let good = server.infer(x.row(0).to_vec()).unwrap();
+    assert_eq!(good.logits.len(), classes);
+    let err = server.submit(vec![0.0; width + 1]).unwrap_err();
+    assert_eq!(
+        err,
+        ServeError::WidthMismatch {
+            expected: width,
+            got: width + 1
+        }
+    );
+    // Still serving after the rejection.
+    let again = server.infer(x.row(rows - 1).to_vec()).unwrap();
+    assert_eq!(again.logits.len(), classes);
+    let m = server.shutdown();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.failures, 0);
+}
+
+#[test]
+fn reference_backend_conforms() {
+    let net = shared_net();
+    assert_conforms(&mut || ReferenceBackend::boxed(net.clone()), &net);
+}
+
+#[test]
+fn simulator_backend_conforms() {
+    let net = shared_net();
+    assert_conforms(&mut || SimulatorBackend::boxed(net.clone()), &net);
+}
+
+/// A third-party backend written against the public trait only — no
+/// crate enum to edit. Wraps the reference model and additionally
+/// declares (and enforces) a batch cap.
+struct CappedThirdParty {
+    inner: ReferenceBackend,
+    cap: usize,
+    largest_seen: Arc<AtomicUsize>,
+    warm_calls: Arc<AtomicUsize>,
+}
+
+impl ExecutionBackend for CappedThirdParty {
+    fn run_batch_with(&mut self, batch: &Matrix, par: Parallelism) -> anyhow::Result<BatchOutput> {
+        self.largest_seen.fetch_max(batch.rows, Ordering::Relaxed);
+        anyhow::ensure!(
+            batch.rows <= self.cap,
+            "batch {} exceeds declared cap {}",
+            batch.rows,
+            self.cap
+        );
+        self.inner.run_batch_with(batch, par)
+    }
+
+    fn tag(&self) -> &str {
+        "capped-3p"
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        Some(self.cap)
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        self.inner.input_width()
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        self.inner.num_classes()
+    }
+
+    fn warm(&mut self) {
+        self.warm_calls.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[test]
+fn third_party_backend_conforms() {
+    let net = shared_net();
+    let largest = Arc::new(AtomicUsize::new(0));
+    let warms = Arc::new(AtomicUsize::new(0));
+    let mut mk = || -> Box<dyn ExecutionBackend> {
+        Box::new(CappedThirdParty {
+            inner: ReferenceBackend::new(net.clone()),
+            cap: 4,
+            largest_seen: Arc::clone(&largest),
+            warm_calls: Arc::clone(&warms),
+        })
+    };
+    assert_conforms(&mut mk, &net);
+    assert!(warms.load(Ordering::Relaxed) >= 1, "server never warmed");
+}
+
+/// The server clamps its batching policy to the backend's declared
+/// `max_batch`: a deep queue never produces an over-cap batch.
+#[test]
+fn declared_max_batch_is_respected() {
+    let net = shared_net();
+    let largest = Arc::new(AtomicUsize::new(0));
+    let backend = Box::new(CappedThirdParty {
+        inner: ReferenceBackend::new(net.clone()),
+        cap: 3,
+        largest_seen: Arc::clone(&largest),
+        warm_calls: Arc::new(AtomicUsize::new(0)),
+    });
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            // Policy asks for far more than the backend allows.
+            policy: BatchPolicy {
+                max_batch: 64,
+                max_wait: Duration::from_millis(20),
+            },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let x = probe(1, 40, 3);
+    let rxs: Vec<_> = (0..24)
+        .map(|_| server.submit(x.row(0).to_vec()).unwrap())
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let m = server.shutdown();
+    assert_eq!(m.requests, 24);
+    assert_eq!(m.failures, 0, "over-cap batches reached the backend");
+    let seen = largest.load(Ordering::Relaxed);
+    assert!(seen <= 3, "batch of {seen} exceeded the declared cap");
+}
+
+/// Simulator and reference backends are bit-identical on shared
+/// weights — the serving layer may freely mix them behind one router.
+#[test]
+fn sim_and_ref_bit_identical_on_shared_weights() {
+    let net = shared_net();
+    let mut sim = SimulatorBackend::new(net.clone());
+    let mut rf = ReferenceBackend::new(net);
+    for (rows, seed) in [(1usize, 4u64), (7, 5), (16, 6)] {
+        let x = probe(rows, 40, seed);
+        let a = sim.run_batch(&x).unwrap();
+        let b = rf.run_batch(&x).unwrap();
+        assert_eq!(a.logits, b.logits, "rows {rows}");
+        assert!(a.sim_cycles.unwrap() > 0);
+        assert!(b.sim_cycles.is_none());
+    }
+}
+
+/// A backend violating the one-row-per-input contract.
+struct OffByOne;
+
+impl ExecutionBackend for OffByOne {
+    fn run_batch_with(&mut self, batch: &Matrix, _par: Parallelism) -> anyhow::Result<BatchOutput> {
+        Ok(BatchOutput {
+            logits: Matrix::zeros(batch.rows + 1, 2),
+            sim_cycles: None,
+        })
+    }
+
+    fn tag(&self) -> &str {
+        "off-by-one"
+    }
+}
+
+/// Mis-shaped backend output (wrong logit row count) becomes a typed
+/// error for the batch — it must not panic the worker thread.
+#[test]
+fn misshapen_backend_output_is_a_typed_error_not_a_panic() {
+    let server = Server::start(
+        Box::new(OffByOne),
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    match server.infer(vec![0.0; 8]).unwrap_err() {
+        ServeError::Backend { message, .. } => {
+            assert!(message.contains("logit rows"), "{message}")
+        }
+        other => panic!("expected ServeError::Backend, got {other:?}"),
+    }
+    // The worker survived: the channel still answers (with the same
+    // typed error, since this backend always misbehaves).
+    assert!(matches!(
+        server.infer(vec![0.0; 8]).unwrap_err(),
+        ServeError::Backend { .. }
+    ));
+    server.shutdown();
+
+    // Zero-column logits must be a typed error too, never an Ok
+    // response with empty logits (the old sentinel, resurrected).
+    struct ZeroCols;
+    impl ExecutionBackend for ZeroCols {
+        fn run_batch_with(
+            &mut self,
+            batch: &Matrix,
+            _par: Parallelism,
+        ) -> anyhow::Result<BatchOutput> {
+            Ok(BatchOutput {
+                logits: Matrix::zeros(batch.rows, 0),
+                sim_cycles: None,
+            })
+        }
+        fn tag(&self) -> &str {
+            "zero-cols"
+        }
+    }
+    let server = Server::start(
+        Box::new(ZeroCols),
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(matches!(
+        server.infer(vec![0.0; 8]).unwrap_err(),
+        ServeError::Backend { .. }
+    ));
+    server.shutdown();
+}
+
+/// A backend that fails its first N batches, then recovers.
+struct Flaky {
+    inner: ReferenceBackend,
+    failures_left: usize,
+}
+
+impl ExecutionBackend for Flaky {
+    fn run_batch_with(&mut self, batch: &Matrix, par: Parallelism) -> anyhow::Result<BatchOutput> {
+        if self.failures_left > 0 {
+            self.failures_left -= 1;
+            anyhow::bail!("injected device fault");
+        }
+        self.inner.run_batch_with(batch, par)
+    }
+
+    fn tag(&self) -> &str {
+        "flaky"
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        self.inner.input_width()
+    }
+}
+
+/// Backend failures surface as `ServeError::Backend` on the response
+/// channel — no empty-logits or `usize::MAX` sentinels — and the
+/// worker keeps serving afterwards.
+#[test]
+fn backend_failures_are_typed_not_sentinels() {
+    let net = shared_net();
+    let server = Server::start(
+        Box::new(Flaky {
+            inner: ReferenceBackend::new(net.clone()),
+            failures_left: 1,
+        }),
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let x = probe(2, 40, 9);
+    let err = server.infer(x.row(0).to_vec()).unwrap_err();
+    match &err {
+        ServeError::Backend { backend, message } => {
+            assert_eq!(backend, "flaky");
+            assert!(message.contains("injected device fault"), "{message}");
+        }
+        other => panic!("expected ServeError::Backend, got {other:?}"),
+    }
+    // Worker survived and recovers.
+    let resp = server.infer(x.row(1).to_vec()).unwrap();
+    assert_eq!(resp.logits.len(), 10);
+    assert!(resp.prediction < 10, "no sentinel predictions");
+    let m = server.shutdown();
+    assert_eq!(m.requests, 1);
+    assert_eq!(m.failures, 1);
+}

@@ -6,7 +6,7 @@ use std::time::{Duration, Instant};
 
 use beanna::coordinator::batcher::BatchPolicy;
 use beanna::coordinator::request::InferenceRequest;
-use beanna::coordinator::{Backend, RoutePolicy, Router, Server, ServerConfig};
+use beanna::coordinator::{ReferenceBackend, RoutePolicy, Router, ServeError, Server, ServerConfig};
 use beanna::nn::{Network, NetworkConfig, Precision};
 use beanna::util::prop::{check, Gen};
 
@@ -15,7 +15,7 @@ fn req(id: u64) -> InferenceRequest {
     std::mem::forget(rx);
     InferenceRequest {
         id,
-        image: vec![],
+        features: vec![],
         resp_tx: tx,
         enqueued_at: Instant::now(),
     }
@@ -75,7 +75,7 @@ fn prop_server_conserves_requests() {
         let n = g.usize_in(1..40);
         let max_batch = g.usize_in(1..16);
         let server = Server::start(
-            Backend::Reference { net: net.clone() },
+            ReferenceBackend::boxed(net.clone()),
             ServerConfig {
                 policy: BatchPolicy {
                     max_batch,
@@ -83,13 +83,14 @@ fn prop_server_conserves_requests() {
                 },
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let rxs: Vec<_> = (0..n)
             .map(|_| server.submit(vec![0.5; 784]).unwrap())
             .collect();
         let mut ids: Vec<u64> = rxs
             .into_iter()
-            .map(|rx| rx.recv().unwrap().id)
+            .map(|rx| rx.recv().unwrap().unwrap().id)
             .collect();
         ids.sort();
         let metrics = server.shutdown();
@@ -122,7 +123,7 @@ fn prop_router_conserves_and_balances() {
         };
         let router = Router::start(
             (0..workers)
-                .map(|_| Backend::Reference { net: net.clone() })
+                .map(|_| ReferenceBackend::boxed(net.clone()))
                 .collect(),
             ServerConfig {
                 policy: BatchPolicy {
@@ -140,7 +141,9 @@ fn prop_router_conserves_and_balances() {
         let mut per_worker = vec![0u64; workers];
         for (i, rx) in rxs {
             per_worker[i] += 1;
-            rx.recv().map_err(|e| e.to_string())?;
+            rx.recv()
+                .map_err(|e| e.to_string())?
+                .map_err(|e| e.to_string())?;
         }
         let metrics = router.shutdown();
         let served: u64 = metrics.iter().map(|m| m.requests).sum();
@@ -158,22 +161,34 @@ fn prop_router_conserves_and_balances() {
     });
 }
 
-/// State invariant: a server survives a failing backend (bad input
-/// width) and keeps serving subsequent well-formed requests.
+/// State invariant: malformed requests are typed errors at submit time
+/// — they never reach the worker thread, which keeps serving
+/// well-formed traffic. (Before the trait redesign a mis-sized request
+/// inside a mixed batch could panic the worker via `copy_from_slice`;
+/// this is the regression guard.)
 #[test]
-fn server_recovers_from_backend_errors() {
+fn server_rejects_malformed_and_keeps_serving() {
     let server = Server::start(
-        Backend::Reference { net: tiny_net(3) },
+        ReferenceBackend::boxed(tiny_net(3)),
         ServerConfig {
             policy: BatchPolicy::unbatched(),
             ..Default::default()
         },
-    );
-    // Malformed request (wrong width) → backend error → error response.
+    )
+    .unwrap();
+    // Malformed request (wrong width) → typed error, synchronously.
     let bad = server.infer(vec![0.1; 10]);
-    assert!(bad.is_err(), "malformed request must fail");
+    assert_eq!(
+        bad.unwrap_err(),
+        ServeError::WidthMismatch {
+            expected: 784,
+            got: 10
+        }
+    );
     // The worker thread must still be alive and serving.
     let good = server.infer(vec![0.1; 784]).unwrap();
     assert_eq!(good.logits.len(), 10);
-    server.shutdown();
+    let m = server.shutdown();
+    assert_eq!(m.requests, 1, "rejected request never reached a worker");
+    assert_eq!(m.failures, 0);
 }

@@ -1,0 +1,196 @@
+//! Integration: the multi-model `Engine` facade — two differently
+//! shaped named models behind one submit surface, typed errors end to
+//! end, and the width-mismatch regression that used to panic the
+//! worker thread.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use beanna::bf16::Matrix;
+use beanna::coordinator::{
+    BatchPolicy, Engine, ReferenceBackend, RoutePolicy, ServeError, SimulatorBackend,
+};
+use beanna::nn::{Network, NetworkConfig, Precision};
+
+fn mnist_net() -> Network {
+    Network::random(
+        &NetworkConfig {
+            sizes: vec![784, 32, 10],
+            precisions: vec![Precision::Bf16, Precision::Binary],
+        },
+        21,
+    )
+}
+
+fn sensor_net() -> Network {
+    Network::random(&NetworkConfig::uniform(&[32, 16, 4], Precision::Bf16), 22)
+}
+
+/// Acceptance: an `EngineBuilder`-constructed engine serves two
+/// differently-shaped named models concurrently — interleaved
+/// multi-threaded traffic, every response matching the direct forward
+/// pass of *its* model.
+#[test]
+fn two_differently_shaped_models_serve_concurrently() {
+    let mnist = mnist_net();
+    let sensor = sensor_net();
+    let mnist_input = vec![0.4; 784];
+    let sensor_input = vec![-0.2; 32];
+    let mnist_direct = mnist
+        .predict(&Matrix::from_vec(1, 784, mnist_input.clone()).unwrap())
+        .unwrap()[0];
+    let sensor_direct = sensor
+        .predict(&Matrix::from_vec(1, 32, sensor_input.clone()).unwrap())
+        .unwrap()[0];
+
+    let engine = Arc::new(
+        Engine::builder()
+            .model("mnist", mnist)
+            .replicas(2)
+            .model("sensor", sensor)
+            .batch_policy(BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+            })
+            .route_policy(RoutePolicy::LeastOutstanding)
+            .build()
+            .unwrap(),
+    );
+    assert_eq!(engine.models(), vec!["mnist", "sensor"]);
+    assert_eq!(engine.model_shape("mnist").unwrap(), (784, 10));
+    assert_eq!(engine.model_shape("sensor").unwrap(), (32, 4));
+    assert_eq!(engine.replicas("mnist").unwrap(), 2);
+
+    let mut handles = Vec::new();
+    for t in 0..6 {
+        let engine = Arc::clone(&engine);
+        let mnist_input = mnist_input.clone();
+        let sensor_input = sensor_input.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..20 {
+                if (t + i) % 2 == 0 {
+                    let r = engine.infer("mnist", mnist_input.clone()).unwrap();
+                    assert_eq!(r.logits.len(), 10);
+                    assert!(r.prediction < 10);
+                } else {
+                    let r = engine.infer("sensor", sensor_input.clone()).unwrap();
+                    assert_eq!(r.logits.len(), 4);
+                    assert!(r.prediction < 4);
+                }
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // Predictions agree with each model's own forward pass.
+    assert_eq!(
+        engine.infer("mnist", mnist_input).unwrap().prediction,
+        mnist_direct
+    );
+    assert_eq!(
+        engine.infer("sensor", sensor_input).unwrap().prediction,
+        sensor_direct
+    );
+
+    let metrics = engine.metrics("mnist").unwrap();
+    assert_eq!(metrics.len(), 2);
+    let totals = Arc::try_unwrap(engine).ok().expect("clients done").shutdown();
+    let served: u64 = totals.values().flatten().map(|m| m.requests).sum();
+    assert_eq!(served, 6 * 20 + 2);
+    let failed: u64 = totals.values().flatten().map(|m| m.failures).sum();
+    assert_eq!(failed, 0);
+}
+
+/// Regression: a request whose width differs from its batch-mates used
+/// to reach the worker loop's `copy_from_slice` and panic the serving
+/// thread. It is now rejected at `submit` with a typed error while the
+/// matching request in the same batch window is served normally.
+#[test]
+fn mixed_width_submissions_cannot_poison_a_batch() {
+    let engine = Engine::builder()
+        .model("mnist", mnist_net())
+        // Wide batching window so both submissions would have landed in
+        // one batch under the old design.
+        .batch_policy(BatchPolicy {
+            max_batch: 16,
+            max_wait: Duration::from_millis(50),
+        })
+        .build()
+        .unwrap();
+    let good_rx = engine.submit("mnist", vec![0.1; 784]).unwrap();
+    let err = engine.submit("mnist", vec![0.1; 32]).unwrap_err();
+    assert_eq!(
+        err,
+        ServeError::WidthMismatch {
+            expected: 784,
+            got: 32
+        }
+    );
+    // The well-formed request is unaffected, and the worker survives to
+    // serve more traffic.
+    assert_eq!(good_rx.recv().unwrap().unwrap().logits.len(), 10);
+    assert_eq!(engine.infer("mnist", vec![0.3; 784]).unwrap().logits.len(), 10);
+    let totals = engine.shutdown();
+    assert_eq!(totals["mnist"][0].requests, 2);
+    assert_eq!(totals["mnist"][0].failures, 0);
+}
+
+#[test]
+fn unknown_model_is_a_typed_error() {
+    let engine = Engine::builder()
+        .model("only", sensor_net())
+        .build()
+        .unwrap();
+    match engine.infer("missing", vec![0.0; 32]).unwrap_err() {
+        ServeError::UnknownModel { name, available } => {
+            assert_eq!(name, "missing");
+            assert_eq!(available, vec!["only".to_string()]);
+        }
+        other => panic!("expected UnknownModel, got {other:?}"),
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn invalid_batch_policy_rejected_at_build() {
+    let err = Engine::builder()
+        .model("m", sensor_net())
+        .batch_policy(BatchPolicy {
+            max_batch: 0,
+            max_wait: Duration::ZERO,
+        })
+        .build()
+        .err()
+        .expect("max_batch 0 must be a config error");
+    assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
+}
+
+/// Mixed backend kinds inside one model's worker group: simulator and
+/// reference replicas answer identically for shared weights.
+#[test]
+fn mixed_backend_replicas_agree() {
+    let net = mnist_net();
+    let sim_net = net.clone();
+    let engine = Engine::builder()
+        .model("m", net)
+        .replicas(2)
+        .backend(move |net, i| {
+            Ok(if i == 0 {
+                ReferenceBackend::boxed(net.clone())
+            } else {
+                SimulatorBackend::boxed(sim_net.clone())
+            })
+        })
+        .batch_policy(BatchPolicy::unbatched())
+        .route_policy(RoutePolicy::RoundRobin)
+        .build()
+        .unwrap();
+    // Round-robin alternates replicas; both must predict identically.
+    let a = engine.infer("m", vec![0.25; 784]).unwrap();
+    let b = engine.infer("m", vec![0.25; 784]).unwrap();
+    assert_eq!(a.prediction, b.prediction);
+    assert_eq!(a.logits, b.logits);
+    engine.shutdown();
+}

@@ -1,10 +1,10 @@
 //! Integration: the coordinator serving stack end-to-end over every
-//! backend kind (simulator + reference here; PJRT covered in
+//! in-tree backend kind (simulator + reference here; PJRT covered in
 //! integration_artifacts.rs to keep this file artifact-free).
 
 use std::time::Duration;
 
-use beanna::coordinator::{Backend, BatchPolicy, Server, ServerConfig};
+use beanna::coordinator::{BatchPolicy, ReferenceBackend, Server, ServerConfig, SimulatorBackend};
 use beanna::data::SynthMnist;
 use beanna::nn::{Network, NetworkConfig, Precision};
 
@@ -26,7 +26,7 @@ fn simulator_backend_serves_with_cycles() {
     let data = SynthMnist::generate(12, 8);
     let direct = net.predict(data.images_f32()).unwrap();
     let server = Server::start(
-        Backend::simulator(net),
+        SimulatorBackend::boxed(net),
         ServerConfig {
             policy: BatchPolicy {
                 max_batch: 4,
@@ -34,12 +34,13 @@ fn simulator_backend_serves_with_cycles() {
             },
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     let rxs: Vec<_> = (0..data.len())
         .map(|i| server.submit(data.images.row(i).to_vec()).unwrap())
         .collect();
     for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().unwrap();
+        let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.prediction, direct[i], "request {i}");
         assert!(resp.sim_cycles.unwrap() > 0);
         assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
@@ -58,7 +59,7 @@ fn batching_reduces_device_cycles() {
     let data = SynthMnist::generate(16, 9);
     let run = |max_batch: usize| -> u64 {
         let server = Server::start(
-            Backend::simulator(net.clone()),
+            SimulatorBackend::boxed(net.clone()),
             ServerConfig {
                 policy: BatchPolicy {
                     max_batch,
@@ -66,12 +67,13 @@ fn batching_reduces_device_cycles() {
                 },
                 ..Default::default()
             },
-        );
+        )
+        .unwrap();
         let rxs: Vec<_> = (0..data.len())
             .map(|i| server.submit(data.images.row(i).to_vec()).unwrap())
             .collect();
         for rx in rxs {
-            rx.recv().unwrap();
+            rx.recv().unwrap().unwrap();
         }
         server.shutdown().sim_cycles
     };
@@ -87,16 +89,19 @@ fn batching_reduces_device_cycles() {
 /// deadlocks, metrics consistent.
 #[test]
 fn concurrent_clients_all_served() {
-    let server = std::sync::Arc::new(Server::start(
-        Backend::Reference { net: small_net() },
-        ServerConfig {
-            policy: BatchPolicy {
-                max_batch: 32,
-                max_wait: Duration::from_millis(2),
+    let server = std::sync::Arc::new(
+        Server::start(
+            ReferenceBackend::boxed(small_net()),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 32,
+                    max_wait: Duration::from_millis(2),
+                },
+                ..Default::default()
             },
-            ..Default::default()
-        },
-    ));
+        )
+        .unwrap(),
+    );
     let mut handles = Vec::new();
     for t in 0..8 {
         let server = std::sync::Arc::clone(&server);
@@ -115,6 +120,7 @@ fn concurrent_clients_all_served() {
         .expect("all clients done")
         .shutdown();
     assert_eq!(m.requests, 200);
+    assert_eq!(m.failures, 0);
     assert!(m.batches <= 200);
     assert!(m.mean_batch >= 1.0);
 }
@@ -123,7 +129,7 @@ fn concurrent_clients_all_served() {
 #[test]
 fn deadline_bounds_queue_latency() {
     let server = Server::start(
-        Backend::Reference { net: small_net() },
+        ReferenceBackend::boxed(small_net()),
         ServerConfig {
             policy: BatchPolicy {
                 max_batch: 1024, // never fills
@@ -131,7 +137,8 @@ fn deadline_bounds_queue_latency() {
             },
             ..Default::default()
         },
-    );
+    )
+    .unwrap();
     let resp = server.infer(vec![0.1; 784]).unwrap();
     // One request alone must be released by the deadline, not held
     // indefinitely: generous bound for CI jitter.
