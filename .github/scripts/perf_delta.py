@@ -1,0 +1,76 @@
+#!/usr/bin/env python3
+"""Perf-trajectory diff: compare the current BENCH_hot_paths.json
+against the committed BENCH_baseline.json, printing per-key deltas and
+flagging regressions of more than REGRESSION_PCT.
+
+Direction-aware: throughput-style keys (*_gops, *speedup*) regress when
+they drop; latency-style keys (*_ms) regress when they rise. Keys present
+on only one side are reported but never flagged.
+
+Non-gating by design: always exits 0. The CI step that runs it is
+additionally marked continue-on-error so a malformed file can't fail the
+job either.
+"""
+
+import json
+import sys
+
+REGRESSION_PCT = 10.0
+
+
+def load(path):
+    with open(path) as f:
+        return json.load(f)
+
+
+def higher_is_better(key):
+    return key.endswith("_gops") or "speedup" in key
+
+
+def lower_is_better(key):
+    return key.endswith("_ms")
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(f"usage: {sys.argv[0]} BASELINE.json CURRENT.json")
+        return
+    try:
+        baseline, current = load(sys.argv[1]), load(sys.argv[2])
+    except (OSError, ValueError) as e:
+        print(f"perf-trajectory: cannot diff ({e}); skipping")
+        return
+
+    keys = sorted(set(baseline) | set(current))
+    flagged = []
+    print(f"perf trajectory vs committed baseline ({sys.argv[1]}):")
+    print(f"{'key':<28} {'baseline':>12} {'current':>12} {'delta':>9}")
+    for key in keys:
+        b, c = baseline.get(key), current.get(key)
+        if not isinstance(b, (int, float)) or isinstance(b, bool) or \
+           not isinstance(c, (int, float)) or isinstance(c, bool):
+            if b is None or c is None:
+                print(f"{key:<28} {str(b):>12} {str(c):>12}   (one-sided)")
+            continue
+        pct = (c - b) / b * 100.0 if b else 0.0
+        mark = ""
+        if higher_is_better(key) and pct < -REGRESSION_PCT:
+            mark = f"  << REGRESSION (>{REGRESSION_PCT:.0f}% slower)"
+            flagged.append(key)
+        elif lower_is_better(key) and pct > REGRESSION_PCT:
+            mark = f"  << REGRESSION (>{REGRESSION_PCT:.0f}% slower)"
+            flagged.append(key)
+        print(f"{key:<28} {b:>12.3f} {c:>12.3f} {pct:>+8.1f}%{mark}")
+
+    if flagged:
+        print(f"\nflagged {len(flagged)} regression(s) beyond "
+              f"{REGRESSION_PCT:.0f}%: {', '.join(flagged)}")
+        print("(non-gating: CI-runner noise is real — investigate before "
+              "trusting, refresh the baseline from a clean run if the new "
+              "level is expected)")
+    else:
+        print("\nno regressions beyond the threshold.")
+
+
+if __name__ == "__main__":
+    main()

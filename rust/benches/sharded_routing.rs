@@ -1,0 +1,87 @@
+//! Modeled-time routing bench: JSQ (least-busy) vs round-robin shard
+//! scheduling on skewed batch mixes, measured in **device cycles** on
+//! the sharded simulator — the validation host wall-clock can't give
+//! (host time measures the simulator, modeled time measures the
+//! device).
+//!
+//! ```bash
+//! cargo bench --bench sharded_routing
+//! ```
+
+use beanna::bf16::Matrix;
+use beanna::nn::{Network, NetworkConfig, Precision};
+use beanna::sim::{AcceleratorConfig, ShardPolicy, ShardedAccelerator};
+use beanna::util::rng::Xoshiro256;
+use beanna::CLOCK_HZ;
+
+/// Run `mix` (batch sizes, in arrival order) under a policy; returns
+/// (makespan cycles, mean utilization).
+fn run_mix(net: &Network, mix: &[usize], shards: usize, policy: ShardPolicy) -> (u64, f64) {
+    let width = net.config.sizes[0];
+    let mut dev = ShardedAccelerator::with_policy(AcceleratorConfig::sharded(shards), policy);
+    let mut rng = Xoshiro256::seed_from_u64(7);
+    for &batch in mix {
+        let x = Matrix::from_vec(batch, width, rng.normal_vec(batch * width)).unwrap();
+        dev.submit(net, &x).expect("modeled command failed");
+    }
+    let report = dev.report();
+    (report.makespan, report.mean_utilization())
+}
+
+fn main() {
+    // Small hybrid net: the scheduling dynamics are shape-independent,
+    // and this keeps the functional work per modeled command cheap.
+    let net = Network::random(
+        &NetworkConfig {
+            sizes: vec![32, 48, 48, 8],
+            precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+        },
+        11,
+    );
+    let quick = std::env::var("BEANNA_BENCH_QUICK").as_deref() == Ok("1");
+    let jobs = if quick { 16 } else { 48 };
+
+    // Three workload shapes: uniform (policies should tie), alternating
+    // big/small (adversarial for round-robin), and bursty (heavy head).
+    let uniform: Vec<usize> = vec![16; jobs];
+    let skewed: Vec<usize> = (0..jobs).map(|i| if i % 2 == 0 { 256 } else { 1 }).collect();
+    let bursty: Vec<usize> = (0..jobs)
+        .map(|i| if i < jobs / 4 { 256 } else { 4 })
+        .collect();
+
+    println!("== modeled-time shard routing: JSQ vs round-robin ==");
+    println!(
+        "{:>9} {:>7} {:>14} {:>14} {:>8} {:>9} {:>9}",
+        "mix", "shards", "jsq cy", "rr cy", "jsq/rr", "jsq util", "rr util"
+    );
+    for (name, mix) in [("uniform", &uniform), ("skewed", &skewed), ("bursty", &bursty)] {
+        for shards in [2usize, 4] {
+            let (jsq, jsq_util) = run_mix(&net, mix, shards, ShardPolicy::LeastBusy);
+            let (rr, rr_util) = run_mix(&net, mix, shards, ShardPolicy::RoundRobin);
+            assert!(
+                jsq <= rr,
+                "{name}/{shards}: JSQ regressed vs round-robin ({jsq} > {rr})"
+            );
+            println!(
+                "{name:>9} {shards:>7} {jsq:>14} {rr:>14} {:>8.3} {:>8.1}% {:>8.1}%",
+                jsq as f64 / rr as f64,
+                jsq_util * 100.0,
+                rr_util * 100.0
+            );
+        }
+    }
+
+    // Makespan in device seconds for the skewed mix, by shard count —
+    // the scale-out curve the serving layer buys.
+    println!("\n== skewed-mix makespan vs shard count (least-busy) ==");
+    println!("{:>7} {:>14} {:>12} {:>9}", "shards", "cycles", "ms @100MHz", "speedup");
+    let (base, _) = run_mix(&net, &skewed, 1, ShardPolicy::LeastBusy);
+    for shards in [1usize, 2, 4, 8] {
+        let (cy, _) = run_mix(&net, &skewed, shards, ShardPolicy::LeastBusy);
+        println!(
+            "{shards:>7} {cy:>14} {:>12.3} {:>8.2}x",
+            cy as f64 / CLOCK_HZ as f64 * 1e3,
+            base as f64 / cy as f64
+        );
+    }
+}

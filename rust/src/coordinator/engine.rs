@@ -30,6 +30,14 @@
 //! assert_eq!(resp.logits.len(), 4);
 //! # anyhow::Ok(())
 //! ```
+//!
+//! Any [`ExecutionBackend`] factory plugs in the same way — e.g. a
+//! replica of
+//! [`ShardedSimulatorBackend`](super::backend::ShardedSimulatorBackend)
+//! models a whole multi-array device per worker
+//! (`.backend(|net, _i| Ok(ShardedSimulatorBackend::boxed(net.clone(), 4)))`),
+//! and its per-shard queue depths surface through
+//! [`Engine::metrics`] → [`MetricsSnapshot::shard_depths`].
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::Receiver;

@@ -14,6 +14,7 @@ struct State {
     queue_us: Vec<f64>,
     compute_us: Vec<f64>,
     sim_cycles: u64,
+    shard_depths: Option<Vec<u64>>,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
 }
@@ -46,6 +47,12 @@ pub struct MetricsSnapshot {
     pub compute_us: Option<crate::util::stats::Summary>,
     /// Total simulated device cycles (simulator backend).
     pub sim_cycles: u64,
+    /// Per-shard queue depths reported by a multi-array backend after
+    /// its most recent batch. For the sharded simulator: modeled cycles
+    /// each shard holds beyond the least-busy one (a bounded imbalance
+    /// gauge — the least-loaded shard reads 0). `None` for
+    /// single-device backends.
+    pub shard_depths: Option<Vec<u64>>,
     /// Wall-clock span from first to last batch.
     pub wall: Duration,
     /// Requests per wall-clock second.
@@ -78,6 +85,12 @@ impl Metrics {
         s.sim_cycles += sim_cycles.unwrap_or(0);
         self.requests_fast
             .fetch_add(rows as u64, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    /// Record the per-shard queue depths a multi-array backend reported
+    /// after a batch (latest value wins — it's a gauge, not a counter).
+    pub fn record_shard_depths(&self, depths: Vec<u64>) {
+        self.state.lock().unwrap().shard_depths = Some(depths);
     }
 
     /// Record `rows` requests that received a typed error response
@@ -130,6 +143,7 @@ impl Metrics {
                 Some(crate::util::stats::Summary::of(&s.compute_us))
             },
             sim_cycles: s.sim_cycles,
+            shard_depths: s.shard_depths.clone(),
             wall,
             throughput_rps: throughput,
         }
@@ -173,6 +187,15 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
         assert!(s.queue_us.is_none());
+        assert!(s.shard_depths.is_none());
         assert_eq!(s.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn shard_depths_gauge_keeps_latest() {
+        let m = Metrics::new();
+        m.record_shard_depths(vec![10, 0]);
+        m.record_shard_depths(vec![4, 7]);
+        assert_eq!(m.snapshot().shard_depths, Some(vec![4, 7]));
     }
 }

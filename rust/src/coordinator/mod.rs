@@ -14,7 +14,9 @@
 //! * [`backend`] — the **open** execution seam: anything implementing
 //!   the object-safe [`ExecutionBackend`] trait plugs in as a
 //!   `Box<dyn ExecutionBackend>`. In-tree: [`ReferenceBackend`] (pure
-//!   rust), [`SimulatorBackend`] (cycle-level device model), and the
+//!   rust), [`SimulatorBackend`] (cycle-level device model),
+//!   [`ShardedSimulatorBackend`] (N modeled arrays behind one AXI
+//!   front-end, per-shard queue depths in the metrics), and the
 //!   PJRT runtime (implementation behind the `pjrt` feature; the
 //!   [`pjrt`](backend::pjrt) constructor exists in every build).
 //! * [`server`] — a worker thread that owns one backend, drains the
@@ -48,7 +50,10 @@ pub mod request;
 pub mod router;
 pub mod server;
 
-pub use backend::{pjrt, BatchOutput, ExecutionBackend, ReferenceBackend, SimulatorBackend};
+pub use backend::{
+    pjrt, BatchOutput, ExecutionBackend, ReferenceBackend, ShardedSimulatorBackend,
+    SimulatorBackend,
+};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use batcher::BatchPolicy;

@@ -200,6 +200,11 @@ impl Server {
                     .map(|r| closed_at.duration_since(r.enqueued_at).as_micros() as u64)
                     .collect();
                 metrics_worker.record_batch(rows, &queue_us, compute_us, out.sim_cycles);
+                // Multi-array backends report per-shard backlogs; keep
+                // the latest gauge in the metrics.
+                if let Some(depths) = backend.shard_depths() {
+                    metrics_worker.record_shard_depths(depths);
+                }
                 // Re-assert the width that actually succeeded: the pin
                 // may have been cleared by an earlier failure and this
                 // batch served via the head-width fallback, and a

@@ -8,15 +8,18 @@
 //!   and XNOR-popcount matmul datapaths, a JAX hybrid-MLP model, training,
 //!   and AOT lowering to HLO text (see `python/compile/`).
 //! * **Layer 3 (this crate)** — the paper's hardware, reproduced as a
-//!   cycle-level simulator ([`sim`]), analytic FPGA resource/power/memory
-//!   models ([`model`]), a PJRT runtime that executes the AOT artifacts
-//!   (`runtime`, behind the off-by-default `pjrt` feature — it needs the
-//!   non-vendored `xla` crate), and an inference coordinator
-//!   ([`coordinator`]): dynamic batching, replica routing, and a
-//!   multi-model [`Engine`](coordinator::Engine) facade over an **open**
-//!   [`ExecutionBackend`](coordinator::ExecutionBackend) trait — any
-//!   engine that can run a batch plugs into the same serving stack, and
-//!   every failure is a typed
+//!   cycle-level simulator ([`sim`]) that scales out to a sharded
+//!   multi-array device model
+//!   ([`sim::ShardedAccelerator`](sim::ShardedAccelerator): N arrays
+//!   behind one AXI front-end, scheduled in modeled cycles), analytic
+//!   FPGA resource/power/memory models ([`model`]), a PJRT runtime that
+//!   executes the AOT artifacts (`runtime`, behind the off-by-default
+//!   `pjrt` feature — it needs the non-vendored `xla` crate), and an
+//!   inference coordinator ([`coordinator`]): dynamic batching, replica
+//!   routing, and a multi-model [`Engine`](coordinator::Engine) facade
+//!   over an **open** [`ExecutionBackend`](coordinator::ExecutionBackend)
+//!   trait — any engine that can run a batch plugs into the same serving
+//!   stack, and every failure is a typed
 //!   [`ServeError`](coordinator::ServeError), never a sentinel.
 //!
 //! The functional hot paths (bf16 and XNOR-popcount matmuls) execute on

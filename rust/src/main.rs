@@ -19,12 +19,14 @@
 use anyhow::{bail, Result};
 
 use beanna::bf16::format::render_fig1;
-use beanna::coordinator::{BatchPolicy, Engine, EngineBuilder, RoutePolicy, SimulatorBackend};
+use beanna::coordinator::{
+    BatchPolicy, Engine, EngineBuilder, RoutePolicy, ShardedSimulatorBackend, SimulatorBackend,
+};
 use beanna::data::SynthMnist;
 use beanna::experiments;
 use beanna::io::ArtifactPaths;
 use beanna::nn::{Network, NetworkConfig};
-use beanna::sim::{Accelerator, AcceleratorConfig};
+use beanna::sim::{Accelerator, AcceleratorConfig, ShardPolicy, ShardedAccelerator};
 use beanna::util::args::ArgSpec;
 
 fn main() {
@@ -44,6 +46,7 @@ fn main() {
         "peak" => cmd_peak(),
         "infer" => cmd_infer(args),
         "serve" => cmd_serve(args),
+        "simulate" => cmd_simulate(args),
         "trace" => cmd_trace(args),
         "selftest" => cmd_selftest(),
         "help" | "--help" | "-h" => {
@@ -71,6 +74,7 @@ const COMMANDS: &str = "commands:
   peak       print the §I peak-throughput figures
   infer      classify a test image (--backend sim|ref|pjrt)
   serve      run the batching server over the test set
+  simulate   modeled-time shard scheduling study (jsq vs round-robin)
   trace      dump a per-phase execution trace (CSV + chrome://tracing)
   selftest   cross-check the two simulator engines";
 
@@ -162,13 +166,15 @@ fn parse_route(s: &str) -> Result<RoutePolicy> {
 /// Register `model` on the builder with the backend kind selected on
 /// the CLI (`ref` keeps the builder's reference default; the PJRT
 /// branch surfaces `ServeError::Unavailable` at build time when the
-/// feature is off — no `#[cfg]` needed here).
+/// feature is off — no `#[cfg]` needed here). `shards > 1` upgrades the
+/// sim backend to the sharded multi-array device model.
 fn with_cli_backend(
     builder: EngineBuilder,
     kind: &str,
     paths: &ArtifactPaths,
     model: &str,
     max_batch: usize,
+    shards: usize,
 ) -> Result<EngineBuilder> {
     // ref/sim execute the host weights, so they are required; the PJRT
     // artifact carries its own weights — the network is only shape
@@ -182,6 +188,9 @@ fn with_cli_backend(
     let builder = builder.model(model, net);
     Ok(match kind {
         "ref" => builder,
+        "sim" if shards > 1 => {
+            builder.backend(move |net, _i| Ok(ShardedSimulatorBackend::boxed(net.clone(), shards)))
+        }
         "sim" => builder.backend(|net, _i| Ok(SimulatorBackend::boxed(net.clone()))),
         "pjrt" => {
             let paths = paths.clone();
@@ -213,7 +222,7 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
     let model = p.get("model").unwrap().to_string();
     let builder = Engine::builder().batch_policy(BatchPolicy::unbatched());
     let engine =
-        with_cli_backend(builder, p.get("backend").unwrap(), &paths, &model, 1)?.build()?;
+        with_cli_backend(builder, p.get("backend").unwrap(), &paths, &model, 1, 1)?.build()?;
     let resp = engine.infer(&model, test.images.row(idx).to_vec())?;
     println!(
         "label {}  predicted {}  (model {}, batch {}, compute {} µs{})",
@@ -245,6 +254,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("replicas", "1", "devices per model's worker group")
         .opt("route", "jsq", "routing policy within a group: rr | jsq")
         .opt(
+            "shards",
+            "1",
+            "modeled arrays per sim device (sim backend only)",
+        )
+        .opt(
             "kernel-workers",
             "0",
             "matmul threads per batch (0 = all cores)",
@@ -274,8 +288,13 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .route_policy(parse_route(p.get("route").unwrap())?)
         .parallelism(parallelism);
     let kind = p.get("backend").unwrap();
+    let shards = p.get_usize("shards")?.max(1);
+    anyhow::ensure!(
+        shards == 1 || kind == "sim",
+        "--shards applies to the sim backend only"
+    );
     for model in &models {
-        builder = with_cli_backend(builder, kind, &paths, model, max_batch)?;
+        builder = with_cli_backend(builder, kind, &paths, model, max_batch, shards)?;
         builder = builder.replicas(replicas);
     }
     let engine = builder.build()?;
@@ -328,8 +347,121 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                     m.requests as f64 / (m.sim_cycles as f64 / beanna::CLOCK_HZ as f64)
                 );
             }
+            if let Some(depths) = &m.shard_depths {
+                print!(", shard imbalance (cy) {depths:?}");
+            }
             println!();
         }
+    }
+    Ok(())
+}
+
+/// Render one policy's modeled-time outcome.
+fn print_sharded_report(name: &str, r: &beanna::sim::ShardedReport) {
+    println!(
+        "{name}: makespan {} cycles ({:.3} ms @100 MHz), mean shard utilization {:.1}%",
+        r.makespan,
+        r.makespan as f64 / beanna::CLOCK_HZ as f64 * 1e3,
+        r.mean_utilization() * 100.0
+    );
+    println!(
+        "{:>6} {:>6} {:>14} {:>8} {:>12}",
+        "shard", "jobs", "busy cycles", "util", "backlog cy"
+    );
+    for s in &r.shards {
+        println!(
+            "{:>6} {:>6} {:>14} {:>7.1}% {:>12}",
+            s.shard,
+            s.jobs,
+            s.busy_cycles,
+            s.utilization * 100.0,
+            s.backlog
+        );
+    }
+}
+
+fn cmd_simulate(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new(
+        "beanna simulate",
+        "drive a skewed command mix through the sharded device model and \
+         compare scheduling policies on modeled (device) time",
+    )
+    .opt("shards", "4", "array shards behind the AXI front-end")
+    .opt("requests", "16", "commands in the workload")
+    .opt("big-batch", "64", "rows in the large commands")
+    .opt("small-batch", "1", "rows in the small commands")
+    .opt("variant", "hybrid", "model variant: hybrid | fp")
+    .opt("policy", "both", "jsq | rr | both")
+    .opt("trace", "", "basename for a jsq scheduling trace (CSV + chrome)");
+    let p = spec.parse_from(args)?;
+    let shards = p.get_usize("shards")?.max(1);
+    let requests = p.get_usize("requests")?.max(1);
+    let big = p.get_usize("big-batch")?.max(1);
+    let small = p.get_usize("small-batch")?.max(1);
+    let (net, trained) =
+        experiments::load_variant(&ArtifactPaths::discover(), p.get("variant").unwrap());
+    if !trained {
+        eprintln!("note: no trained weights found, simulating with random weights");
+    }
+    let width = net.config.sizes[0];
+    // Skewed mix: large and small commands interleaved — the shape that
+    // separates queue-aware scheduling from blind rotation.
+    let mix: Vec<usize> = (0..requests)
+        .map(|i| if i % 2 == 0 { big } else { small })
+        .collect();
+    println!(
+        "sharded device study: {shards} shard(s), {requests} commands \
+         (batch mix alternates {big}/{small}), variant '{}'\n",
+        p.get("variant").unwrap()
+    );
+
+    let run = |policy: ShardPolicy| -> Result<(beanna::sim::ShardedReport, Vec<beanna::sim::ShardJob>)> {
+        let mut dev = ShardedAccelerator::with_policy(AcceleratorConfig::sharded(shards), policy);
+        let mut jobs = Vec::with_capacity(mix.len());
+        for &batch in &mix {
+            jobs.push(dev.submit(&net, &beanna::bf16::Matrix::zeros(batch, width))?);
+        }
+        Ok((dev.report(), jobs))
+    };
+
+    let policy = p.get("policy").unwrap().to_string();
+    if !matches!(policy.as_str(), "jsq" | "rr" | "both") {
+        bail!("unknown policy '{policy}' (use jsq | rr | both)");
+    }
+    let jsq = if policy != "rr" {
+        let (report, jobs) = run(ShardPolicy::LeastBusy)?;
+        print_sharded_report("jsq (least-busy)", &report);
+        if let Some(base) = p.get("trace").filter(|s| !s.is_empty()) {
+            let base = std::path::PathBuf::from(base);
+            beanna::sim::Trace::from_sharded(&jobs).save(&base)?;
+            println!(
+                "wrote {}.csv and {}.trace.json",
+                base.display(),
+                base.display()
+            );
+        }
+        Some(report.makespan)
+    } else {
+        None
+    };
+    let rr = if policy != "jsq" {
+        let (report, _) = run(ShardPolicy::RoundRobin)?;
+        if jsq.is_some() {
+            println!();
+        }
+        print_sharded_report("round-robin", &report);
+        Some(report.makespan)
+    } else {
+        None
+    };
+    if let (Some(jsq), Some(rr)) = (jsq, rr) {
+        println!(
+            "\njsq vs round-robin on modeled time: {:.2}x \
+             ({} vs {} cycles — queue-aware dispatch wins on skewed mixes)",
+            rr as f64 / jsq as f64,
+            jsq,
+            rr
+        );
     }
     Ok(())
 }

@@ -75,6 +75,31 @@ impl RunReport {
     }
 }
 
+/// Check a decoded [`InferenceCommand`](super::axi::InferenceCommand)
+/// against the weights it is about to run — the control FSM's sanity
+/// pass. Shared by the single-device AXI path ([`Accelerator::run_via_axi`])
+/// and the sharded front-end ([`super::shard::ShardedAccelerator`]).
+pub(crate) fn validate_command(
+    cmd: &super::axi::InferenceCommand,
+    net: &Network,
+    batch: usize,
+) -> Result<()> {
+    ensure!(cmd.batch == batch, "programmed batch mismatch");
+    ensure!(
+        cmd.layers.len() == net.layers.len(),
+        "programmed layer count mismatch"
+    );
+    for (desc, layer) in cmd.layers.iter().zip(net.layers.iter()) {
+        ensure!(
+            desc.in_features == layer.in_features()
+                && desc.out_features == layer.out_features()
+                && desc.binary == (layer.precision == Precision::Binary),
+            "programmed layer descriptor mismatch"
+        );
+    }
+    Ok(())
+}
+
 /// The simulated device.
 pub struct Accelerator {
     /// Hardware configuration.
@@ -444,18 +469,9 @@ impl Accelerator {
         axi.set_status(super::axi::Status::Busy);
         let cmd = axi.decode_command()?;
         // The decoded programme must match the weights we were handed.
-        ensure!(cmd.batch == input.rows, "programmed batch mismatch");
-        ensure!(
-            cmd.layers.len() == net.layers.len(),
-            "programmed layer count mismatch"
-        );
-        for (desc, layer) in cmd.layers.iter().zip(net.layers.iter()) {
-            ensure!(
-                desc.in_features == layer.in_features()
-                    && desc.out_features == layer.out_features()
-                    && desc.binary == (layer.precision == Precision::Binary),
-                "programmed layer descriptor mismatch"
-            );
+        if let Err(e) = validate_command(&cmd, net, input.rows) {
+            axi.set_status(super::axi::Status::Error);
+            return Err(e);
         }
         let report = self.run_network(net, input, input.rows);
         axi.set_status(match report {

@@ -298,13 +298,69 @@ mod tests {
     fn decode_rejects_zero_batch_and_empty() {
         let mut axi = AxiRegisterFile::new();
         assert!(axi.decode_command().is_err()); // batch 0 / layers 0
+        assert_eq!(axi.status(), Status::Error);
+    }
+
+    #[test]
+    fn decode_rejects_out_of_range_layer_count() {
+        let mut axi = AxiRegisterFile::new();
+        axi.write(Reg::Batch as u32, 1).unwrap();
+        axi.write(Reg::NumLayers as u32, 33).unwrap();
+        let err = axi.decode_command().unwrap_err().to_string();
+        assert!(err.contains("layer count 33"), "{err}");
+        assert_eq!(axi.status(), Status::Error);
+    }
+
+    #[test]
+    fn decode_rejects_zero_dimension_layer() {
+        let net = Network::random(&NetworkConfig::beanna_fp(), 1);
+        let mut axi = AxiRegisterFile::new();
+        axi.program_network(&net, 4, 0, 0, 0).unwrap();
+        // Zero out layer 1's out_features.
+        let base = Reg::LayerTable as u32 + LAYER_DESC_WORDS;
+        axi.write(base + 1, 0).unwrap();
+        let err = axi.decode_command().unwrap_err().to_string();
+        assert!(err.contains("zero dimension"), "{err}");
+        assert_eq!(axi.status(), Status::Error);
+    }
+
+    #[test]
+    fn program_rejects_oversized_network() {
+        // 33 layers exceed the register file's descriptor table.
+        let sizes: Vec<usize> = vec![8; 34];
+        let precisions = vec![crate::nn::Precision::Bf16; 33];
+        let net = Network::random(&NetworkConfig { sizes, precisions }, 1);
+        let mut axi = AxiRegisterFile::new();
+        let err = axi.program_network(&net, 1, 0, 0, 0).unwrap_err().to_string();
+        assert!(err.contains("32 layers"), "{err}");
     }
 
     #[test]
     fn unmapped_addresses_rejected() {
         let mut axi = AxiRegisterFile::new();
-        assert!(axi.write(0xFFFF, 1).is_err());
-        assert!(axi.read(0xFFFF).is_err());
+        let werr = axi.write(0xFFFF, 1).unwrap_err().to_string();
+        assert!(werr.contains("unmapped"), "{werr}");
+        let rerr = axi.read(0xFFFF).unwrap_err().to_string();
+        assert!(rerr.contains("unmapped"), "{rerr}");
+        // Failed transactions are not counted.
+        assert_eq!((axi.writes, axi.reads), (0, 0));
+    }
+
+    #[test]
+    fn decode_failure_then_reprogram_recovers() {
+        let net = Network::random(&NetworkConfig::beanna_hybrid(), 2);
+        let mut axi = AxiRegisterFile::new();
+        axi.write(Reg::Batch as u32, 1).unwrap();
+        axi.write(Reg::NumLayers as u32, 40).unwrap();
+        assert!(axi.decode_command().is_err());
+        assert_eq!(axi.status(), Status::Error);
+        // A well-formed reprogramming clears the way: decode succeeds
+        // and the device side can hand back Done.
+        axi.program_network(&net, 8, 0, 0, 0).unwrap();
+        let cmd = axi.decode_command().unwrap();
+        assert_eq!(cmd.batch, 8);
+        axi.set_status(Status::Done);
+        assert_eq!(axi.status(), Status::Done);
     }
 
     #[test]

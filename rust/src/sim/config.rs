@@ -48,6 +48,12 @@ pub struct AcceleratorConfig {
     pub layer_overhead_cycles: u64,
     /// Which engine to use.
     pub engine: Engine,
+    /// Number of independent systolic-array shards behind the AXI
+    /// front-end (paper device: 1). Only the sharded device model
+    /// ([`crate::sim::ShardedAccelerator`]) consults this — the plain
+    /// [`crate::sim::Accelerator`] always models one array, and every
+    /// shard receives the full single-array configuration above.
+    pub num_shards: usize,
 }
 
 impl Default for AcceleratorConfig {
@@ -64,6 +70,7 @@ impl Default for AcceleratorConfig {
             overlap_weight_stream: true,
             layer_overhead_cycles: 64,
             engine: Engine::Transaction,
+            num_shards: 1,
         }
     }
 }
@@ -80,6 +87,21 @@ impl AcceleratorConfig {
     /// Ablation helper: same config with a different array size.
     pub fn with_array_dim(mut self, dim: usize) -> Self {
         self.array_dim = dim;
+        self
+    }
+
+    /// Paper configuration replicated across `n` array shards (clamped
+    /// to at least one).
+    pub fn sharded(n: usize) -> Self {
+        Self {
+            num_shards: n.max(1),
+            ..Self::default()
+        }
+    }
+
+    /// Builder-style shard count override.
+    pub fn with_shards(mut self, n: usize) -> Self {
+        self.num_shards = n.max(1);
         self
     }
 
@@ -124,5 +146,13 @@ mod tests {
         let c = AcceleratorConfig::default().with_array_dim(32);
         assert_eq!(c.peak_macs_bf16(), 1024);
         assert_eq!(c.peak_macs_binary(), 16384);
+    }
+
+    #[test]
+    fn shard_count_defaults_to_one_and_clamps() {
+        assert_eq!(AcceleratorConfig::default().num_shards, 1);
+        assert_eq!(AcceleratorConfig::sharded(4).num_shards, 4);
+        assert_eq!(AcceleratorConfig::sharded(0).num_shards, 1);
+        assert_eq!(AcceleratorConfig::default().with_shards(0).num_shards, 1);
     }
 }

@@ -20,6 +20,13 @@
 //! top-level [`Accelerator`]; [`timing`] converts cycle counts into the
 //! Table I metrics.
 //!
+//! [`shard`] scales the device out: a [`ShardedAccelerator`] models N
+//! independent arrays (each a full [`Accelerator`] with its own BRAMs,
+//! DMAs, and cycle clock) behind one AXI front-end, with a device-level
+//! scheduler assigning commands to shards in **modeled cycles** — the
+//! basis for validating routing policies against device time instead of
+//! host wall-clock.
+//!
 //! Every subsystem keeps activity counters (MACs by mode, BRAM accesses,
 //! DMA bytes) consumed by the power model ([`crate::model::power`]).
 
@@ -30,6 +37,7 @@ pub mod config;
 pub mod control;
 pub mod dma;
 pub mod pe;
+pub mod shard;
 pub mod systolic;
 pub mod timing;
 pub mod trace;
@@ -39,5 +47,6 @@ pub use accel::{Accelerator, LayerReport, RunReport};
 pub use axi::AxiRegisterFile;
 pub use config::{AcceleratorConfig, Engine};
 pub use pe::Mode;
+pub use shard::{ShardJob, ShardPolicy, ShardUtilization, ShardedAccelerator, ShardedReport};
 pub use timing::TimingBreakdown;
 pub use trace::Trace;

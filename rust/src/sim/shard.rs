@@ -1,0 +1,519 @@
+//! Sharded multi-array device model: N independent systolic arrays
+//! behind **one AXI-Lite front-end**, with a device-level scheduler
+//! assigning whole [`InferenceCommand`](super::axi::InferenceCommand)s
+//! to shards in **modeled cycles**.
+//!
+//! This is the scale-out step BinArray (Fischer & Wassner, 2020) takes
+//! — replicate the processing array, share the command scheduler — with
+//! ChewBaccaNN-style per-array utilization accounting underneath. Each
+//! shard owns a full single-array [`Accelerator`] (its own BRAM banks,
+//! DMA engines, and cycle clock), so every shard's numerics are
+//! **bit-identical** to the single-array reference by construction; the
+//! sharded layer adds only *time*:
+//!
+//! * The shared AXI front-end serializes command programming — one
+//!   register write per cycle, one command programmed at a time.
+//! * The scheduler dispatches each decoded command to a shard:
+//!   [`ShardPolicy::LeastBusy`] picks the shard that frees up earliest
+//!   on the modeled clock (join-the-shortest-queue in device cycles —
+//!   the policy the coordinator's `RoutePolicy::LeastOutstanding`
+//!   approximates with host-side counters), while
+//!   [`ShardPolicy::RoundRobin`] is the stateless baseline.
+//! * A command starts once the front-end has issued it *and* its shard
+//!   has drained earlier work; its completion cycle feeds the shard's
+//!   clock forward.
+//!
+//! Modeled time is the whole point: host wall-clock says how fast the
+//! *simulator* runs, the modeled makespan says how fast the *device*
+//! would — which is what routing policies must be judged against (see
+//! `tests/integration_sharded.rs` and `benches/sharded_routing.rs`).
+
+use anyhow::Result;
+
+use super::accel::{validate_command, Accelerator, Activity, RunReport};
+use super::axi::{AxiRegisterFile, Reg, Status};
+use super::config::AcceleratorConfig;
+use super::timing::TimingBreakdown;
+use crate::bf16::Matrix;
+use crate::nn::Network;
+
+/// Device-level shard-selection policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// Dispatch to the shard that frees up earliest in modeled cycles
+    /// (join-the-shortest-queue on the device clock).
+    LeastBusy,
+    /// Rotate through shards regardless of backlog (baseline).
+    RoundRobin,
+}
+
+/// One systolic-array shard: a full single-array device plus its
+/// modeled clock and accumulated accounting.
+struct Shard {
+    accel: Accelerator,
+    /// Modeled cycle at which this shard finishes its queued work.
+    busy_until: u64,
+    /// Total modeled cycles this shard spent executing commands.
+    busy_cycles: u64,
+    /// Commands executed on this shard.
+    jobs: u64,
+    breakdown: TimingBreakdown,
+    activity: Activity,
+}
+
+/// Scheduling record of one command through the sharded device.
+#[derive(Debug, Clone)]
+pub struct ShardJob {
+    /// Shard the command executed on.
+    pub shard: usize,
+    /// Modeled cycle the command arrived at the device.
+    pub arrival: u64,
+    /// Cycle the AXI front-end began programming the command (waits for
+    /// earlier commands' programming to finish).
+    pub issue_start: u64,
+    /// Cycle the front-end finished programming (one register write per
+    /// cycle).
+    pub issued: u64,
+    /// Cycle the shard began executing (waits for its own backlog).
+    pub start: u64,
+    /// Completion cycle on the modeled clock.
+    pub complete: u64,
+    /// The shard-local run report (bit-identical outputs, per-layer
+    /// [`LayerSchedule`](super::control::LayerSchedule)s and timing).
+    pub run: RunReport,
+}
+
+impl ShardJob {
+    /// Modeled latency: arrival to completion, including front-end
+    /// serialization and shard queueing.
+    pub fn modeled_latency(&self) -> u64 {
+        self.complete - self.arrival
+    }
+
+    /// Modeled cycles spent queued behind the shard's earlier work.
+    pub fn queue_cycles(&self) -> u64 {
+        self.start - self.issued
+    }
+}
+
+/// Per-shard utilization breakdown, relative to the device makespan.
+#[derive(Debug, Clone)]
+pub struct ShardUtilization {
+    /// Shard index.
+    pub shard: usize,
+    /// Commands executed.
+    pub jobs: u64,
+    /// Modeled cycles spent executing.
+    pub busy_cycles: u64,
+    /// `busy_cycles / makespan` (0 when nothing ran).
+    pub utilization: f64,
+    /// Modeled cycles of work still queued ahead of the device's
+    /// arrival clock.
+    pub backlog: u64,
+    /// Phase breakdown summed over this shard's commands.
+    pub breakdown: TimingBreakdown,
+    /// Activity counters summed over this shard's commands (feeds the
+    /// power model per shard).
+    pub activity: Activity,
+}
+
+/// Aggregated view of everything the sharded device has executed.
+#[derive(Debug, Clone)]
+pub struct ShardedReport {
+    /// Total commands executed.
+    pub jobs: u64,
+    /// Modeled cycle the last command completes — the device makespan.
+    pub makespan: u64,
+    /// Activity summed across shards.
+    pub activity: Activity,
+    /// Phase breakdown summed across shards.
+    pub breakdown: TimingBreakdown,
+    /// Per-shard utilization breakdowns.
+    pub shards: Vec<ShardUtilization>,
+}
+
+impl ShardedReport {
+    /// Mean shard utilization over the makespan.
+    pub fn mean_utilization(&self) -> f64 {
+        if self.shards.is_empty() {
+            return 0.0;
+        }
+        self.shards.iter().map(|s| s.utilization).sum::<f64>() / self.shards.len() as f64
+    }
+}
+
+/// The sharded device: one AXI front-end, N arrays, a modeled-time
+/// scheduler.
+pub struct ShardedAccelerator {
+    /// Device configuration ([`AcceleratorConfig::num_shards`] sets N;
+    /// each shard gets the full single-array configuration).
+    pub config: AcceleratorConfig,
+    axi: AxiRegisterFile,
+    policy: ShardPolicy,
+    shards: Vec<Shard>,
+    /// Arrival clock: the modeled cycle at which the *next* submitted
+    /// command reaches the device (advance with [`advance`](Self::advance)
+    /// to model inter-arrival gaps; back-to-back submissions model a
+    /// saturating command queue).
+    now: u64,
+    /// Cycle the front-end finishes programming its current command.
+    frontend_free: u64,
+    rr_next: usize,
+    jobs: u64,
+    makespan: u64,
+}
+
+impl ShardedAccelerator {
+    /// Build a sharded device with the least-busy scheduler.
+    pub fn new(config: AcceleratorConfig) -> Self {
+        Self::with_policy(config, ShardPolicy::LeastBusy)
+    }
+
+    /// Build a sharded device with an explicit scheduling policy.
+    pub fn with_policy(config: AcceleratorConfig, policy: ShardPolicy) -> Self {
+        let n = config.num_shards.max(1);
+        let shards = (0..n)
+            .map(|_| Shard {
+                accel: Accelerator::new(config.clone()),
+                busy_until: 0,
+                busy_cycles: 0,
+                jobs: 0,
+                breakdown: TimingBreakdown::default(),
+                activity: Activity::default(),
+            })
+            .collect();
+        Self {
+            axi: AxiRegisterFile::new(),
+            policy,
+            shards,
+            now: 0,
+            frontend_free: 0,
+            rr_next: 0,
+            jobs: 0,
+            makespan: 0,
+            config,
+        }
+    }
+
+    /// Number of array shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The configured scheduling policy.
+    pub fn policy(&self) -> ShardPolicy {
+        self.policy
+    }
+
+    /// Current arrival clock in modeled cycles.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Modeled cycle the last executed command completes.
+    pub fn makespan(&self) -> u64 {
+        self.makespan
+    }
+
+    /// Advance the arrival clock by `cycles` (an inter-arrival gap in
+    /// the modeled request stream).
+    pub fn advance(&mut self, cycles: u64) {
+        self.now += cycles;
+    }
+
+    /// Per-shard backlog: modeled cycles of queued work each shard
+    /// still has ahead of the arrival clock. Meaningful when the caller
+    /// advances the clock ([`advance`](Self::advance)); under
+    /// back-to-back submissions (clock parked at 0) it grows without
+    /// bound — use [`shard_imbalance`](Self::shard_imbalance) for a
+    /// bounded gauge there.
+    pub fn shard_backlogs(&self) -> Vec<u64> {
+        self.shards
+            .iter()
+            .map(|s| s.busy_until.saturating_sub(self.now))
+            .collect()
+    }
+
+    /// Per-shard queued work **relative to the least-busy shard**: how
+    /// many modeled cycles each shard holds beyond the earliest-free
+    /// one (the least-busy shard always reads 0). Unlike
+    /// [`shard_backlogs`](Self::shard_backlogs) this is bounded under a
+    /// saturated command stream, which makes it the queue-depth signal
+    /// a load-aware router can act on.
+    pub fn shard_imbalance(&self) -> Vec<u64> {
+        let floor = self
+            .shards
+            .iter()
+            .map(|s| s.busy_until)
+            .min()
+            .unwrap_or(0);
+        self.shards
+            .iter()
+            .map(|s| s.busy_until - floor)
+            .collect()
+    }
+
+    /// Pick a shard for a command that becomes runnable at `ready`.
+    fn pick(&mut self, ready: u64) -> usize {
+        match self.policy {
+            ShardPolicy::RoundRobin => {
+                let i = self.rr_next % self.shards.len();
+                self.rr_next += 1;
+                i
+            }
+            ShardPolicy::LeastBusy => self
+                .shards
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, s)| s.busy_until.max(ready))
+                .map(|(i, _)| i)
+                .expect("sharded device has at least one shard"),
+        }
+    }
+
+    /// Submit one inference command through the AXI front door: program
+    /// the shared register file (exactly as driver software would),
+    /// decode and validate it like the control FSM, dispatch it to a
+    /// shard under the scheduling policy, and execute it there.
+    ///
+    /// Functional outputs are those of the shard's single-array
+    /// [`Accelerator`] — bit-identical to the unsharded device. The
+    /// scheduling record carries the modeled issue/start/complete
+    /// cycles.
+    pub fn submit(&mut self, net: &Network, input: &Matrix) -> Result<ShardJob> {
+        let arrival = self.now;
+        // The shared front-end serializes programming: one register
+        // write per cycle, one command at a time.
+        let writes_before = self.axi.writes;
+        self.axi
+            .program_network(net, input.rows, 0x1000_0000, 0x2000_0000, 0x3000_0000)?;
+        self.axi.write(Reg::Ctrl as u32, 1)?;
+        self.axi.set_status(Status::Busy);
+        let cmd = self.axi.decode_command()?; // sets Status::Error itself
+        if let Err(e) = validate_command(&cmd, net, input.rows) {
+            self.axi.set_status(Status::Error);
+            return Err(e);
+        }
+        let issue_cycles = self.axi.writes - writes_before;
+        let issue_start = arrival.max(self.frontend_free);
+        let issued = issue_start + issue_cycles;
+        self.frontend_free = issued;
+
+        let shard = self.pick(issued);
+        let run = match self.shards[shard].accel.run_network(net, input, input.rows) {
+            Ok(run) => run,
+            Err(e) => {
+                self.axi.set_status(Status::Error);
+                return Err(e);
+            }
+        };
+        self.axi.set_status(Status::Done);
+        self.axi.write(Reg::Ctrl as u32, 0)?;
+
+        let s = &mut self.shards[shard];
+        let start = issued.max(s.busy_until);
+        let complete = start + run.total_cycles;
+        s.busy_until = complete;
+        s.busy_cycles += run.total_cycles;
+        s.jobs += 1;
+        s.breakdown.add(&run.breakdown);
+        s.activity.add(&run.activity);
+        self.jobs += 1;
+        self.makespan = self.makespan.max(complete);
+        Ok(ShardJob {
+            shard,
+            arrival,
+            issue_start,
+            issued,
+            start,
+            complete,
+            run,
+        })
+    }
+
+    /// Aggregate everything executed so far, with per-shard utilization
+    /// breakdowns.
+    pub fn report(&self) -> ShardedReport {
+        let makespan = self.makespan;
+        let mut activity = Activity::default();
+        let mut breakdown = TimingBreakdown::default();
+        let shards = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                activity.add(&s.activity);
+                breakdown.add(&s.breakdown);
+                ShardUtilization {
+                    shard: i,
+                    jobs: s.jobs,
+                    busy_cycles: s.busy_cycles,
+                    utilization: if makespan > 0 {
+                        s.busy_cycles as f64 / makespan as f64
+                    } else {
+                        0.0
+                    },
+                    backlog: s.busy_until.saturating_sub(self.now),
+                    breakdown: s.breakdown,
+                    activity: s.activity,
+                }
+            })
+            .collect();
+        ShardedReport {
+            jobs: self.jobs,
+            makespan,
+            activity,
+            breakdown,
+            shards,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::{NetworkConfig, Precision};
+    use crate::util::rng::Xoshiro256;
+
+    fn tiny_net(seed: u64) -> Network {
+        Network::random(
+            &NetworkConfig {
+                sizes: vec![20, 24, 6],
+                precisions: vec![Precision::Bf16, Precision::Binary],
+            },
+            seed,
+        )
+    }
+
+    fn inputs(batch: usize, seed: u64) -> Matrix {
+        Matrix::from_vec(
+            batch,
+            20,
+            Xoshiro256::seed_from_u64(seed).normal_vec(batch * 20),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shard_outputs_bit_identical_to_single_array() {
+        let net = tiny_net(1);
+        let mut dev = ShardedAccelerator::new(AcceleratorConfig::sharded(3));
+        for (batch, seed) in [(1usize, 10u64), (5, 11), (9, 12)] {
+            let x = inputs(batch, seed);
+            let job = dev.submit(&net, &x).unwrap();
+            let mut single = Accelerator::new(AcceleratorConfig::default());
+            let reference = single.run_network(&net, &x, batch).unwrap();
+            assert_eq!(job.run.outputs, reference.outputs, "batch {batch}");
+            assert_eq!(job.run.total_cycles, reference.total_cycles);
+            assert_eq!(job.run.outputs, net.forward(&x).unwrap());
+        }
+    }
+
+    #[test]
+    fn least_busy_spreads_and_round_robin_rotates() {
+        let net = tiny_net(2);
+        let x = inputs(2, 3);
+        let mut lb = ShardedAccelerator::new(AcceleratorConfig::sharded(2));
+        let mut rr =
+            ShardedAccelerator::with_policy(AcceleratorConfig::sharded(2), ShardPolicy::RoundRobin);
+        let lb_shards: Vec<usize> =
+            (0..4).map(|_| lb.submit(&net, &x).unwrap().shard).collect();
+        let rr_shards: Vec<usize> =
+            (0..4).map(|_| rr.submit(&net, &x).unwrap().shard).collect();
+        assert_eq!(rr_shards, vec![0, 1, 0, 1]);
+        // Equal-size jobs: least-busy alternates too (ties go to the
+        // lowest id, then that shard is the busier one).
+        assert_eq!(lb_shards, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn modeled_clocks_are_consistent() {
+        let net = tiny_net(3);
+        let mut dev = ShardedAccelerator::new(AcceleratorConfig::sharded(2));
+        let mut jobs = Vec::new();
+        for i in 0..6 {
+            jobs.push(dev.submit(&net, &inputs(1 + (i % 3), 20 + i as u64)).unwrap());
+        }
+        for j in &jobs {
+            assert!(j.issue_start >= j.arrival);
+            assert!(j.issued > j.issue_start, "programming costs cycles");
+            assert!(j.start >= j.issued);
+            assert_eq!(j.complete, j.start + j.run.total_cycles);
+        }
+        // Front-end serialization: issue windows never overlap.
+        for pair in jobs.windows(2) {
+            assert!(pair[1].issue_start >= pair[0].issued);
+        }
+        let report = dev.report();
+        assert_eq!(report.jobs, 6);
+        assert_eq!(
+            report.makespan,
+            jobs.iter().map(|j| j.complete).max().unwrap()
+        );
+        assert_eq!(
+            report.shards.iter().map(|s| s.jobs).sum::<u64>(),
+            report.jobs
+        );
+        let summed: u64 = report.shards.iter().map(|s| s.busy_cycles).sum();
+        assert_eq!(
+            summed,
+            jobs.iter().map(|j| j.run.total_cycles).sum::<u64>()
+        );
+        for s in &report.shards {
+            assert!(s.busy_cycles <= report.makespan);
+            assert!(s.utilization > 0.0 && s.utilization <= 1.0);
+        }
+        assert_eq!(report.makespan, dev.makespan());
+        // The imbalance gauge is relative: its floor is always 0, and
+        // no shard can be further behind than the whole makespan.
+        let imbalance = dev.shard_imbalance();
+        assert_eq!(imbalance.iter().min(), Some(&0));
+        assert!(imbalance.iter().all(|&d| d < report.makespan));
+    }
+
+    #[test]
+    fn advance_models_interarrival_gaps_and_drains_backlog() {
+        let net = tiny_net(4);
+        let mut dev = ShardedAccelerator::new(AcceleratorConfig::sharded(1));
+        let j0 = dev.submit(&net, &inputs(4, 1)).unwrap();
+        assert!(dev.shard_backlogs()[0] > 0, "work queued at cycle 0");
+        // Let the modeled clock pass the backlog entirely.
+        dev.advance(j0.complete + 10);
+        assert_eq!(dev.shard_backlogs(), vec![0]);
+        // The next command arrives after the gap and starts immediately.
+        let j1 = dev.submit(&net, &inputs(4, 2)).unwrap();
+        assert_eq!(j1.arrival, j0.complete + 10);
+        assert_eq!(j1.start, j1.issued);
+    }
+
+    #[test]
+    fn bad_command_sets_error_and_leaves_clocks_alone() {
+        let net = tiny_net(5);
+        let mut dev = ShardedAccelerator::new(AcceleratorConfig::sharded(2));
+        // Wrong input width: rejected by the shard run, status Error.
+        assert!(dev.submit(&net, &Matrix::zeros(2, 19)).is_err());
+        let report = dev.report();
+        assert_eq!(report.jobs, 0);
+        assert_eq!(report.makespan, 0);
+        assert_eq!(dev.shard_backlogs(), vec![0, 0]);
+        // The device recovers on the next well-formed command.
+        let job = dev.submit(&net, &inputs(2, 6)).unwrap();
+        assert_eq!(job.run.outputs.rows, 2);
+    }
+
+    #[test]
+    fn single_shard_matches_unsharded_cycle_totals() {
+        let net = tiny_net(7);
+        let x = inputs(3, 8);
+        let mut dev = ShardedAccelerator::new(AcceleratorConfig::sharded(1));
+        let job = dev.submit(&net, &x).unwrap();
+        let reference = Accelerator::new(AcceleratorConfig::default())
+            .run_network(&net, &x, 3)
+            .unwrap();
+        // Execution cycles identical; the sharded wrapper only adds the
+        // front-end programming cycles before the start.
+        assert_eq!(job.run.total_cycles, reference.total_cycles);
+        assert_eq!(job.complete - job.start, reference.total_cycles);
+        assert_eq!(job.start, job.issued);
+    }
+}

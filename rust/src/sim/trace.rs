@@ -16,8 +16,9 @@ use crate::report::JsonValue;
 /// One traced interval, in device cycles.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct TraceEvent {
-    /// Track name ("dma0", "array", "dma2", "control").
-    pub track: &'static str,
+    /// Track name ("dma0", "array", "dma2", "control" for single-device
+    /// runs; "frontend" / "shard3" for sharded runs).
+    pub track: String,
     /// Event label (e.g. "L1 weight_stream").
     pub label: String,
     /// Start cycle.
@@ -43,7 +44,7 @@ impl Trace {
         let mut cursor: u64 = run.breakdown.input_stage;
         if run.breakdown.input_stage > 0 {
             events.push(TraceEvent {
-                track: "dma0",
+                track: "dma0".into(),
                 label: "input_stage".into(),
                 start: 0,
                 dur: run.breakdown.input_stage,
@@ -61,7 +62,7 @@ impl Trace {
             ] {
                 if dur > 0 {
                     events.push(TraceEvent {
-                        track,
+                        track: track.into(),
                         label: format!("L{} {label}", layer.index),
                         start: at,
                         dur,
@@ -73,12 +74,39 @@ impl Trace {
         }
         if run.breakdown.output_stage > 0 {
             events.push(TraceEvent {
-                track: "dma0",
+                track: "dma0".into(),
                 label: "output_stage".into(),
                 start: cursor,
                 dur: run.breakdown.output_stage,
             });
         }
+        Self { events }
+    }
+
+    /// Build a scheduling timeline from a sharded run: one track per
+    /// array shard (the modeled execution window of each command) plus a
+    /// "frontend" track showing the serialized AXI programming windows.
+    /// Within each track, events are non-overlapping by construction of
+    /// the modeled clocks.
+    pub fn from_sharded(jobs: &[super::shard::ShardJob]) -> Self {
+        let mut events = Vec::new();
+        for (i, job) in jobs.iter().enumerate() {
+            if job.issued > job.issue_start {
+                events.push(TraceEvent {
+                    track: "frontend".into(),
+                    label: format!("J{i} issue b{}", job.run.batch),
+                    start: job.issue_start,
+                    dur: job.issued - job.issue_start,
+                });
+            }
+            events.push(TraceEvent {
+                track: format!("shard{}", job.shard),
+                label: format!("J{i} b{}", job.run.batch),
+                start: job.start,
+                dur: job.complete - job.start,
+            });
+        }
+        events.sort_by_key(|e| (e.start, e.dur));
         Self { events }
     }
 
@@ -103,27 +131,35 @@ impl Trace {
     /// Chrome `trace_event` JSON (1 cycle = 1 µs so Perfetto's zoom is
     /// usable at 100 MHz scales).
     pub fn to_chrome_json(&self) -> JsonValue {
+        // Fixed tids for the single-device tracks; sharded tracks
+        // ("frontend", "shardN") get stable ids in order of appearance.
+        let mut dynamic: Vec<&str> = Vec::new();
         let events: Vec<JsonValue> = self
             .events
             .iter()
             .map(|e| {
+                let tid = match e.track.as_str() {
+                    "control" => 0.0,
+                    "dma0" => 1.0,
+                    "dma1" => 2.0,
+                    "array" => 3.0,
+                    "dma2" => 4.0,
+                    other => {
+                        let at = dynamic.iter().position(|t| *t == other).unwrap_or_else(|| {
+                            dynamic.push(other);
+                            dynamic.len() - 1
+                        });
+                        (5 + at) as f64
+                    }
+                };
                 JsonValue::obj(vec![
                     ("name", JsonValue::s(e.label.clone())),
-                    ("cat", JsonValue::s(e.track)),
+                    ("cat", JsonValue::s(e.track.clone())),
                     ("ph", JsonValue::s("X")),
                     ("ts", JsonValue::n(e.start as f64)),
                     ("dur", JsonValue::n(e.dur as f64)),
                     ("pid", JsonValue::n(1.0)),
-                    (
-                        "tid",
-                        JsonValue::n(match e.track {
-                            "control" => 0.0,
-                            "dma0" => 1.0,
-                            "dma1" => 2.0,
-                            "array" => 3.0,
-                            _ => 4.0,
-                        }),
-                    ),
+                    ("tid", JsonValue::n(tid)),
                 ])
             })
             .collect();
@@ -182,6 +218,46 @@ mod tests {
         let json = t.to_chrome_json().to_string();
         assert!(json.contains("traceEvents"));
         assert!(json.contains("\"ph\":\"X\""));
+    }
+
+    #[test]
+    fn sharded_trace_has_per_shard_tracks() {
+        use crate::sim::shard::ShardedAccelerator;
+        let net = Network::random(
+            &NetworkConfig {
+                sizes: vec![20, 24, 6],
+                precisions: vec![Precision::Bf16, Precision::Binary],
+            },
+            2,
+        );
+        let mut dev = ShardedAccelerator::new(AcceleratorConfig::sharded(2));
+        let jobs: Vec<_> = (0..4)
+            .map(|_| dev.submit(&net, &Matrix::zeros(3, 20)).unwrap())
+            .collect();
+        let t = Trace::from_sharded(&jobs);
+        // Every command shows up once on a shard track, plus its issue
+        // window on the frontend track.
+        assert_eq!(t.events.len(), 8);
+        assert!(t.events.iter().any(|e| e.track == "shard0"));
+        assert!(t.events.iter().any(|e| e.track == "shard1"));
+        assert!(t.events.iter().any(|e| e.track == "frontend"));
+        assert_eq!(t.total_cycles(), dev.makespan());
+        // Per-track events never overlap (modeled clocks are serial
+        // within a shard and within the frontend).
+        for track in ["frontend", "shard0", "shard1"] {
+            let mut spans: Vec<_> = t
+                .events
+                .iter()
+                .filter(|e| e.track == track)
+                .map(|e| (e.start, e.start + e.dur))
+                .collect();
+            spans.sort_unstable();
+            for pair in spans.windows(2) {
+                assert!(pair[0].1 <= pair[1].0, "{track} overlaps: {spans:?}");
+            }
+        }
+        let json = t.to_chrome_json().to_string();
+        assert!(json.contains("shard1"));
     }
 
     #[test]

@@ -20,7 +20,7 @@ use std::time::Duration;
 use beanna::bf16::Matrix;
 use beanna::coordinator::{
     BatchOutput, BatchPolicy, ExecutionBackend, Parallelism, ReferenceBackend, ServeError,
-    Server, ServerConfig, SimulatorBackend,
+    Server, ServerConfig, ShardedSimulatorBackend, SimulatorBackend,
 };
 use beanna::nn::{Network, NetworkConfig, Precision};
 use beanna::util::rng::Xoshiro256;
@@ -124,6 +124,39 @@ fn reference_backend_conforms() {
 fn simulator_backend_conforms() {
     let net = shared_net();
     assert_conforms(&mut || SimulatorBackend::boxed(net.clone()), &net);
+}
+
+#[test]
+fn sharded_simulator_backend_conforms() {
+    let net = shared_net();
+    for shards in [1usize, 3] {
+        assert_conforms(&mut || ShardedSimulatorBackend::boxed(net.clone(), shards), &net);
+    }
+}
+
+/// Sharding changes modeled time only: every shard's logits are
+/// bit-identical to the single-array simulator backend, command for
+/// command, while the per-command execution cycles match too.
+#[test]
+fn sharded_sim_bit_identical_to_single_array_backend() {
+    let net = shared_net();
+    let mut sharded = ShardedSimulatorBackend::new(net.clone(), 4);
+    let mut single = SimulatorBackend::new(net);
+    // Enough commands that all four shards execute at least one.
+    for (i, rows) in [1usize, 6, 3, 16, 2, 9, 4, 8].into_iter().enumerate() {
+        let x = probe(rows, 40, 30 + i as u64);
+        let a = sharded.run_batch(&x).unwrap();
+        let b = single.run_batch(&x).unwrap();
+        assert_eq!(a.logits, b.logits, "command {i} (rows {rows})");
+        assert_eq!(a.sim_cycles, b.sim_cycles, "command {i} cycles");
+    }
+    let report = sharded.report();
+    assert_eq!(report.jobs, 8);
+    assert!(
+        report.shards.iter().all(|s| s.jobs > 0),
+        "least-busy left a shard idle: {:?}",
+        report.shards.iter().map(|s| s.jobs).collect::<Vec<_>>()
+    );
 }
 
 /// A third-party backend written against the public trait only — no

@@ -3,7 +3,7 @@
 
 use beanna::bf16::Matrix;
 use beanna::nn::{Network, NetworkConfig, Precision};
-use beanna::sim::{Accelerator, AcceleratorConfig, Engine};
+use beanna::sim::{Accelerator, AcceleratorConfig, AxiRegisterFile, Engine};
 use beanna::util::rng::Xoshiro256;
 
 fn inputs(batch: usize, width: usize, seed: u64) -> Matrix {
@@ -111,6 +111,39 @@ fn simulator_is_deterministic() {
     assert_eq!(r1.outputs, r2.outputs);
     assert_eq!(r1.total_cycles, r2.total_cycles);
     assert_eq!(r1.activity, r2.activity);
+}
+
+/// The AXI front door's status handshake across a full run and a
+/// failing one: Idle → (program, launch) → Done for well-formed
+/// commands, Error when the programmed run cannot execute — and the
+/// register file recovers for the next command.
+#[test]
+fn run_via_axi_status_transitions() {
+    use beanna::sim::axi::Status;
+    let cfg = NetworkConfig {
+        sizes: vec![20, 24, 6],
+        precisions: vec![Precision::Bf16, Precision::Binary],
+    };
+    let net = Network::random(&cfg, 8);
+    let mut accel = Accelerator::new(AcceleratorConfig::default());
+    let mut axi = AxiRegisterFile::new();
+    assert_eq!(axi.status(), Status::Idle);
+
+    // Well-formed command: executes and lands on Done.
+    let x = inputs(3, 20, 1);
+    let report = accel.run_via_axi(&mut axi, &net, &x).unwrap();
+    assert_eq!(axi.status(), Status::Done);
+    assert_eq!(report.outputs, net.forward(&x).unwrap());
+
+    // A command whose input doesn't match the programme: typed error,
+    // status Error.
+    assert!(accel.run_via_axi(&mut axi, &net, &Matrix::zeros(2, 19)).is_err());
+    assert_eq!(axi.status(), Status::Error);
+
+    // The same register file serves the next well-formed command.
+    let y = inputs(2, 20, 2);
+    accel.run_via_axi(&mut axi, &net, &y).unwrap();
+    assert_eq!(axi.status(), Status::Done);
 }
 
 /// Sub-16 batch with every engine (systolic fill/drain edge cases).
