@@ -1,10 +1,16 @@
 #!/usr/bin/env python3
-"""Perf-trajectory diff: compare the current BENCH_hot_paths.json
-against the committed BENCH_baseline.json, printing per-key deltas and
-flagging regressions of more than REGRESSION_PCT.
+"""Perf-trajectory diff: compare the current bench outputs
+(BENCH_hot_paths.json, and any further files merged over it — e.g. the
+QoS bench's BENCH_qos.json) against the committed BENCH_baseline.json,
+printing per-key deltas and flagging regressions of more than
+REGRESSION_PCT.
 
 Direction-aware: throughput-style keys (*_gops, *speedup*) regress when
-they drop; latency-style keys (*_ms) regress when they rise. Keys present
+they drop; latency-style keys (*_ms) and rejection-rate keys (*_rate,
+e.g. qos_2x_reject_rate) regress when they rise. Rate keys use an
+ABSOLUTE threshold (RATE_ABS_DELTA) instead of the relative one — a
+near-zero baseline like qos_1x_reject_rate=0.03 would otherwise flag
+scheduler jitter (3%→4% is +33% relative) on every run. Keys present
 on only one side are reported but never flagged.
 
 Non-gating by design: always exits 0. The CI step that runs it is
@@ -16,6 +22,8 @@ import json
 import sys
 
 REGRESSION_PCT = 10.0
+# Absolute rise that flags a *_rate key (rates live in [0, 1]).
+RATE_ABS_DELTA = 0.05
 
 
 def load(path):
@@ -28,17 +36,29 @@ def higher_is_better(key):
 
 
 def lower_is_better(key):
-    return key.endswith("_ms")
+    return key.endswith("_ms") or key.endswith("_rate")
 
 
 def main():
-    if len(sys.argv) != 3:
-        print(f"usage: {sys.argv[0]} BASELINE.json CURRENT.json")
+    if len(sys.argv) < 3:
+        print(f"usage: {sys.argv[0]} BASELINE.json CURRENT.json [MORE_CURRENT.json ...]")
         return
     try:
-        baseline, current = load(sys.argv[1]), load(sys.argv[2])
+        baseline = load(sys.argv[1])
     except (OSError, ValueError) as e:
-        print(f"perf-trajectory: cannot diff ({e}); skipping")
+        print(f"perf-trajectory: cannot load baseline ({e}); skipping")
+        return
+    # Each current file loads independently: a missing/truncated
+    # BENCH_qos.json must not silently drop the hot-path diff.
+    current = {}
+    for path in sys.argv[2:]:
+        try:
+            current.update(load(path))
+        except (OSError, ValueError) as e:
+            print(f"perf-trajectory: cannot load {path} ({e}); "
+                  "its keys will show as one-sided")
+    if not current:
+        print("perf-trajectory: no current data at all; skipping")
         return
 
     keys = sorted(set(baseline) | set(current))
@@ -54,11 +74,15 @@ def main():
             continue
         pct = (c - b) / b * 100.0 if b else 0.0
         mark = ""
-        if higher_is_better(key) and pct < -REGRESSION_PCT:
+        if key.endswith("_rate"):
+            if (c - b) > RATE_ABS_DELTA:
+                mark = f"  << REGRESSION (>{RATE_ABS_DELTA:+.2f} absolute)"
+                flagged.append(key)
+        elif higher_is_better(key) and pct < -REGRESSION_PCT:
             mark = f"  << REGRESSION (>{REGRESSION_PCT:.0f}% slower)"
             flagged.append(key)
         elif lower_is_better(key) and pct > REGRESSION_PCT:
-            mark = f"  << REGRESSION (>{REGRESSION_PCT:.0f}% slower)"
+            mark = f"  << REGRESSION (>{REGRESSION_PCT:.0f}% worse)"
             flagged.append(key)
         print(f"{key:<28} {b:>12.3f} {c:>12.3f} {pct:>+8.1f}%{mark}")
 

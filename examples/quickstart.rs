@@ -11,11 +11,14 @@
 //!    cycles, the §III-D phase breakdown, and inferences/second.
 //! 4. Scales the device out: the same commands on a 4-shard device,
 //!    scheduled in modeled cycles.
-//! 5. Serves two differently-shaped models behind one `Engine`.
+//! 5. Serves two differently-shaped models behind one `Engine` — with
+//!    bounded admission, owned `Ticket`s, priorities, and deadlines.
 //! 6. Shows the Table II hardware model.
 
+use std::time::Duration;
+
 use beanna::bf16::format::render_fig1;
-use beanna::coordinator::{Engine, SimulatorBackend};
+use beanna::coordinator::{Engine, SimulatorBackend, SubmitOptions};
 use beanna::data::SynthMnist;
 use beanna::experiments;
 use beanna::nn::{Network, NetworkConfig, Precision};
@@ -84,12 +87,15 @@ fn main() -> anyhow::Result<()> {
     // -- multi-model serving through the Engine -------------------------------
     // Two named models with different shapes behind one submit surface:
     // the paper's 784→10 hybrid on the simulator, a 32→4 auxiliary
-    // model on the fast reference backend (the builder default).
+    // model on the fast reference backend (the builder default). The
+    // queue is bounded — overload would come back as a typed
+    // `Overloaded` rejection instead of unbounded memory.
     let aux = Network::random(&NetworkConfig::uniform(&[32, 16, 4], Precision::Bf16), 9);
     let engine = Engine::builder()
         .model("mnist", net.clone())
         .backend(|net, _i| Ok(SimulatorBackend::boxed(net.clone())))
         .model("aux", aux)
+        .queue_capacity(256)
         .build()?;
     let a = engine.infer("mnist", data.images.row(0).to_vec())?;
     let b = engine.infer("aux", vec![0.5; 32])?;
@@ -100,6 +106,30 @@ fn main() -> anyhow::Result<()> {
         b.prediction,
         b.logits.len(),
         engine.submit("aux", vec![0.0; 784]).unwrap_err()
+    );
+
+    // -- the request lifecycle: tickets, deadlines, cancellation --------------
+    // `submit_with` hands back an owned Ticket. A request whose
+    // deadline passes while queued is dropped *before* it reaches the
+    // backend; a bulk-class request yields to interactive traffic at
+    // batch formation; a dropped or cancelled ticket withdraws its
+    // request.
+    let ticket = engine.submit_with(
+        "aux",
+        vec![0.25; 32],
+        SubmitOptions::bulk().with_deadline(Duration::from_secs(5)),
+    )?;
+    let served = ticket.wait()?;
+    let doomed = engine.submit_with(
+        "aux",
+        vec![0.25; 32],
+        SubmitOptions::default().with_deadline(Duration::ZERO),
+    )?;
+    let expired = doomed.wait().unwrap_err();
+    println!(
+        "lifecycle: bulk ticket served class {} in a batch of {}; zero-deadline \
+         request resolved '{expired}' without backend compute",
+        served.prediction, served.batch_size
     );
     engine.shutdown();
 

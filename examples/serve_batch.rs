@@ -1,4 +1,6 @@
-//! Batched serving demo: the multi-model `Engine` under open-loop load.
+//! Batched serving demo: the multi-model `Engine` under open-loop load,
+//! with the full QoS request lifecycle — bounded admission, deadlines,
+//! priorities, and ticket resolution.
 //!
 //! ```bash
 //! cargo run --release --example serve_batch -- [requests] [max_batch] [replicas]
@@ -7,13 +9,17 @@
 //! Builds an [`Engine`] serving **two differently-shaped named models**
 //! — the paper's 784→10 hybrid network (artifacts required for trained
 //! weights; falls back to random) and a small 64→4 auxiliary model —
-//! issues open-loop traffic to both through the one submit surface,
-//! and prints the batching behaviour and latency distribution — the
-//! systems-level view of the paper's batch-1 vs batch-256 comparison.
+//! and issues open-loop traffic to both through the one submit surface:
+//! the mnist stream is `Interactive` with a per-request deadline, the
+//! auxiliary stream is `Bulk` backfill. The queue is bounded, so
+//! overload comes back as typed `Overloaded` errors the client absorbs
+//! by settling its oldest in-flight ticket — the systems-level view of
+//! the paper's batch-1 vs batch-256 trade-off under real backpressure.
 
+use std::collections::VecDeque;
 use std::time::Duration;
 
-use beanna::coordinator::{BatchPolicy, Engine, RoutePolicy, ServeError};
+use beanna::coordinator::{BatchPolicy, Engine, RoutePolicy, ServeError, SubmitOptions, Ticket};
 use beanna::data::SynthMnist;
 use beanna::experiments;
 use beanna::io::ArtifactPaths;
@@ -38,9 +44,13 @@ fn main() -> anyhow::Result<()> {
     let aux = Network::random(&NetworkConfig::uniform(&[64, 32, 4], Precision::Bf16), 11);
     let test = SynthMnist::load(&paths.dataset())
         .unwrap_or_else(|_| SynthMnist::generate(1024, 1));
+    // Bound the queue at two full batching windows per replica: deep
+    // enough to keep the batcher fed, small enough that a flood turns
+    // into typed rejections instead of unbounded memory.
+    let queue_capacity = (max_batch * 2).max(64);
     println!(
         "serving {requests} requests (max batch {max_batch}, {replicas} replica(s)/model, \
-         mnist weights: {})",
+         queue capacity {queue_capacity}, mnist weights: {})",
         if trained { "trained" } else { "random" }
     );
 
@@ -54,6 +64,7 @@ fn main() -> anyhow::Result<()> {
             max_wait: Duration::from_millis(2),
         })
         .route_policy(RoutePolicy::LeastOutstanding)
+        .queue_capacity(queue_capacity)
         .build()?;
 
     // A mis-shaped request is a typed error at submit — it never
@@ -65,56 +76,116 @@ fn main() -> anyhow::Result<()> {
         other => anyhow::bail!("expected a typed width error, got {other:?}"),
     }
 
-    // Open-loop load: submit asynchronously in waves (deep queue → the
-    // batcher can actually fill batches), collect per wave. One in
-    // eight requests goes to the small auxiliary model.
-    let t0 = std::time::Instant::now();
-    let wave = (max_batch * 4).max(64);
-    let mut total = 0usize;
-    let mut correct = 0usize;
-    let mut batch_sizes: Vec<usize> = Vec::new();
-    while total < requests {
-        let count = wave.min(requests - total);
-        let rxs: Vec<_> = (0..count)
-            .map(|i| {
-                let idx = (total + i) % test.len();
-                if (total + i) % 8 == 7 {
-                    let feats: Vec<f32> = test.images.row(idx)[..64].to_vec();
-                    (None, engine.submit("aux", feats).unwrap())
-                } else {
-                    let feats = test.images.row(idx).to_vec();
-                    (Some(idx), engine.submit("mnist", feats).unwrap())
-                }
-            })
-            .collect();
-        for (idx, rx) in rxs {
-            let resp = rx.recv()??;
-            if let Some(idx) = idx {
-                if resp.prediction == test.labels[idx] {
-                    correct += 1;
-                }
-                batch_sizes.push(resp.batch_size);
-            }
+    // A request whose deadline already passed is dropped at batch
+    // formation — DeadlineExceeded, without spending backend compute.
+    let hopeless = engine.submit_with(
+        "mnist",
+        test.images.row(0).to_vec(),
+        SubmitOptions::default().with_deadline(Duration::ZERO),
+    )?;
+    match hopeless.wait() {
+        Err(ServeError::DeadlineExceeded { waited_us }) => {
+            println!("deadline guard: expired request dropped after {waited_us} µs, pre-dispatch ✓")
         }
-        total += count;
+        other => anyhow::bail!("expected DeadlineExceeded, got {other:?}"),
+    }
+
+    // Open-loop mixed-QoS load: mnist traffic is Interactive with a
+    // generous deadline; every eighth request is Bulk backfill to the
+    // small auxiliary model. `Overloaded` is absorbed by settling the
+    // oldest in-flight ticket and retrying.
+    let mnist_opts = SubmitOptions::default().with_deadline(Duration::from_secs(5));
+    let aux_opts = SubmitOptions::bulk();
+    let t0 = std::time::Instant::now();
+    let mut pending: VecDeque<(Option<usize>, Ticket)> = VecDeque::new();
+    let mut correct = 0usize;
+    let mut mnist_served = 0usize;
+    let mut total = 0usize;
+    let mut expired = 0usize;
+    let mut backpressure = 0usize;
+    let mut batch_sizes: Vec<usize> = Vec::new();
+    let settle = |entry: (Option<usize>, Ticket),
+                  correct: &mut usize,
+                  mnist_served: &mut usize,
+                  expired: &mut usize,
+                  batch_sizes: &mut Vec<usize>|
+     -> anyhow::Result<()> {
+        let (idx, ticket) = entry;
+        match ticket.wait() {
+            Ok(resp) => {
+                if let Some(idx) = idx {
+                    *mnist_served += 1;
+                    if resp.prediction == test.labels[idx] {
+                        *correct += 1;
+                    }
+                    batch_sizes.push(resp.batch_size);
+                }
+                Ok(())
+            }
+            Err(ServeError::DeadlineExceeded { .. }) => {
+                *expired += 1;
+                Ok(())
+            }
+            Err(e) => Err(e.into()),
+        }
+    };
+    while total < requests {
+        let idx = total % test.len();
+        let (model, tag, feats, opts) = if total % 8 == 7 {
+            ("aux", None, test.images.row(idx)[..64].to_vec(), aux_opts)
+        } else {
+            ("mnist", Some(idx), test.images.row(idx).to_vec(), mnist_opts)
+        };
+        match engine.submit_with(model, feats, opts) {
+            Ok(ticket) => {
+                pending.push_back((tag, ticket));
+                total += 1;
+            }
+            Err(ServeError::Overloaded { .. }) => {
+                backpressure += 1;
+                match pending.pop_front() {
+                    Some(entry) => settle(
+                        entry,
+                        &mut correct,
+                        &mut mnist_served,
+                        &mut expired,
+                        &mut batch_sizes,
+                    )?,
+                    None => std::thread::sleep(Duration::from_micros(100)),
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for entry in pending {
+        settle(
+            entry,
+            &mut correct,
+            &mut mnist_served,
+            &mut expired,
+            &mut batch_sizes,
+        )?;
     }
     println!(
-        "done in {:?}: {total} served, mnist accuracy {:.2}%, max batch observed {}",
+        "done in {:?}: {total} submitted, mnist accuracy {:.2}% over {mnist_served} served, \
+         {expired} expired, {backpressure} backpressure hits, max batch observed {}",
         t0.elapsed(),
-        correct as f64 / (total - total / 8) as f64 * 100.0,
-        batch_sizes.iter().max().unwrap()
+        correct as f64 / mnist_served.max(1) as f64 * 100.0,
+        batch_sizes.iter().max().copied().unwrap_or(0)
     );
 
     for (model, group) in engine.shutdown() {
         for (i, m) in group.iter().enumerate() {
             println!(
-                "{model}/replica{i}: {} reqs in {} batches (mean size {:.1})  host {:.0} req/s",
-                m.requests, m.batches, m.mean_batch, m.throughput_rps
+                "{model}/replica{i}: {} reqs in {} batches (mean size {:.1})  host {:.0} req/s  \
+                 [{} rejected / {} expired / {} cancelled]",
+                m.requests, m.batches, m.mean_batch, m.throughput_rps,
+                m.rejected, m.expired, m.cancelled
             );
             if let Some(q) = &m.queue_us {
                 println!(
-                    "  queue µs: median {:.0}  p95 {:.0}  max {:.0}",
-                    q.median, q.p95, q.max
+                    "  queue µs: p50 {:.0}  p95 {:.0}  p99 {:.0}  max {:.0}",
+                    q.median, q.p95, q.p99, q.max
                 );
             }
             if let Some(c) = &m.compute_us {

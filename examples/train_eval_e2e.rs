@@ -107,11 +107,11 @@ fn main() -> anyhow::Result<()> {
         },
     )?;
     let n_serve = 512.min(test.len());
-    let rxs: Vec<_> = (0..n_serve)
+    let tickets: Vec<_> = (0..n_serve)
         .map(|i| server.submit(test.images.row(i).to_vec()).unwrap())
         .collect();
-    for rx in rxs {
-        rx.recv()??;
+    for ticket in tickets {
+        ticket.wait()?;
     }
     let metrics = server.shutdown();
     println!(

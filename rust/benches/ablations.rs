@@ -125,11 +125,11 @@ fn main() {
         )
         .unwrap();
         let n = 1024.min(test.len());
-        let rxs: Vec<_> = (0..n)
+        let tickets: Vec<_> = (0..n)
             .map(|i| server.submit(test.images.row(i).to_vec()).unwrap())
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap().unwrap();
+        for ticket in tickets {
+            ticket.wait().unwrap();
         }
         let m = server.shutdown();
         println!(

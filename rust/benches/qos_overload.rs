@@ -1,0 +1,139 @@
+//! Open-loop QoS bench: queue-delay p50/p99 and rejection rate at
+//! 1×/2×/4× of the server's service capacity, against a bounded
+//! admission queue.
+//!
+//! ```bash
+//! cargo bench --bench qos_overload
+//! BEANNA_BENCH_QUICK=1 cargo bench --bench qos_overload   # CI-sized run
+//! ```
+//!
+//! The backend is a fixed-cost stand-in (a deterministic per-command
+//! sleep), so the offered:service ratio is exact and portable — this
+//! bench measures the *queueing* behaviour of the admission point, not
+//! kernel speed. At 1× the queue random-walks near empty; past it, the
+//! bounded queue fills, queue delay saturates at
+//! `capacity × service_time` instead of growing without bound, and the
+//! overflow surfaces as typed `Overloaded` rejections. Emits
+//! `BENCH_qos.json`, whose keys CI folds into the perf-trajectory diff
+//! against `BENCH_baseline.json` alongside `BENCH_hot_paths.json`
+//! (rejection-rate keys are direction-aware: rising is a regression).
+
+use std::time::{Duration, Instant};
+
+use beanna::bf16::Matrix;
+use beanna::coordinator::{
+    BatchOutput, BatchPolicy, ExecutionBackend, Parallelism, ServeError, Server, ServerConfig,
+};
+use beanna::report::JsonValue;
+
+/// Deterministic fixed-cost backend: every batch costs `us`
+/// microseconds of wall time, whatever its content.
+struct FixedCost {
+    us: u64,
+}
+
+impl ExecutionBackend for FixedCost {
+    fn run_batch_with(&mut self, batch: &Matrix, _par: Parallelism) -> anyhow::Result<BatchOutput> {
+        std::thread::sleep(Duration::from_micros(self.us));
+        Ok(BatchOutput {
+            logits: Matrix::zeros(batch.rows, 2),
+            sim_cycles: None,
+        })
+    }
+
+    fn tag(&self) -> &str {
+        "fixed-cost"
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        Some(8)
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        Some(2)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BEANNA_BENCH_QUICK").as_deref() == Ok("1");
+    // Per-request backend cost (unbatched policy → the service rate is
+    // exactly 1e6/SERVICE_US requests/s) and the admission bound.
+    const SERVICE_US: u64 = 400;
+    const CAPACITY: usize = 32;
+    let window_s = if quick { 0.25 } else { 1.0 };
+
+    println!(
+        "== open-loop QoS under overload: service {SERVICE_US} µs/req \
+         (≈{:.0} req/s), queue capacity {CAPACITY}, {window_s:.2}s per point ==",
+        1e6 / SERVICE_US as f64
+    );
+    println!(
+        "{:>9} {:>8} {:>10} {:>13} {:>13} {:>13}",
+        "offered", "sent", "rejected", "reject rate", "queue p50 ms", "queue p99 ms"
+    );
+
+    let mut fields: Vec<(String, JsonValue)> = Vec::new();
+    for mult in [1u64, 2, 4] {
+        let server = Server::start(
+            Box::new(FixedCost { us: SERVICE_US }),
+            ServerConfig {
+                policy: BatchPolicy::unbatched(),
+                queue_capacity: Some(CAPACITY),
+                ..Default::default()
+            },
+        )?;
+        let interval = Duration::from_micros(SERVICE_US / mult);
+        let n = (window_s * 1e6 / interval.as_micros() as f64) as usize;
+        let t0 = Instant::now();
+        let mut tickets = Vec::with_capacity(n);
+        let mut rejected = 0usize;
+        for i in 0..n {
+            let target = t0 + interval * i as u32;
+            let now = Instant::now();
+            if now < target {
+                std::thread::sleep(target - now);
+            }
+            match server.submit(vec![0.5; 8]) {
+                Ok(t) => tickets.push(t),
+                Err(ServeError::Overloaded { .. }) => rejected += 1,
+                Err(e) => anyhow::bail!("unexpected submit error: {e}"),
+            }
+        }
+        for t in tickets {
+            t.wait()
+                .map_err(|e| anyhow::anyhow!("admitted request failed: {e}"))?;
+        }
+        let m = server.shutdown();
+        let q = m.queue_us.expect("served requests carry queue stats");
+        let reject_rate = rejected as f64 / n as f64;
+        assert_eq!(m.rejected, rejected as u64, "metrics disagree with client");
+        println!(
+            "{:>8}x {:>8} {:>10} {:>12.1}% {:>13.2} {:>13.2}",
+            mult,
+            n,
+            rejected,
+            reject_rate * 100.0,
+            q.median / 1e3,
+            q.p99 / 1e3
+        );
+        fields.push((
+            format!("qos_{mult}x_queue_p50_ms"),
+            JsonValue::n(q.median / 1e3),
+        ));
+        fields.push((
+            format!("qos_{mult}x_queue_p99_ms"),
+            JsonValue::n(q.p99 / 1e3),
+        ));
+        fields.push((format!("qos_{mult}x_reject_rate"), JsonValue::n(reject_rate)));
+    }
+    println!(
+        "(queue delay saturates at capacity × service ≈ {:.1} ms — the bound is \
+         doing its job; overflow is typed rejection, not memory growth)",
+        CAPACITY as f64 * SERVICE_US as f64 / 1e3
+    );
+
+    let out = std::path::Path::new("BENCH_qos.json");
+    JsonValue::Obj(fields).save(out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -1,11 +1,29 @@
-//! Dynamic batching policy: close a batch at `max_batch` requests or
-//! when the oldest queued request has waited `max_wait`, whichever is
-//! first.
+//! Dynamic batching with QoS: a two-class priority queue in front of
+//! the backend.
+//!
+//! A batch closes at `max_batch` live requests or when the oldest live
+//! request has waited `max_wait`, whichever is first — but batch
+//! *formation* is now an active admission step, not a blind drain:
+//!
+//! * **Priority.** Queued [`Priority::Interactive`] requests are taken
+//!   before any [`Priority::Bulk`] one; within a class, order is FIFO.
+//!   Under a saturated queue, interactive traffic overtakes
+//!   earlier-submitted bulk backfill.
+//! * **Expiry.** A request whose deadline passed while it queued is
+//!   dropped here with [`ServeError::DeadlineExceeded`] — it never
+//!   reaches the backend, so an overloaded server spends no compute on
+//!   answers nobody is waiting for.
+//! * **Cancellation.** A request whose ticket was cancelled (or
+//!   dropped) is discarded silently; its admission slot was already
+//!   released at cancel time.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
-use super::request::InferenceRequest;
+use super::error::ServeError;
+use super::metrics::Metrics;
+use super::request::{InferenceRequest, Priority};
 
 /// Batch-closing policy.
 #[derive(Debug, Clone, Copy)]
@@ -22,6 +40,108 @@ impl Default for BatchPolicy {
             max_batch: 256,
             max_wait: Duration::from_millis(2),
         }
+    }
+}
+
+/// The batcher's working state: the raw channel from `submit` plus the
+/// two priority classes requests are staged into between batches.
+/// Owned by the server's worker thread.
+pub struct BatchQueue {
+    rx: Receiver<InferenceRequest>,
+    interactive: VecDeque<InferenceRequest>,
+    bulk: VecDeque<InferenceRequest>,
+}
+
+impl BatchQueue {
+    /// Wrap the server's request channel.
+    pub fn new(rx: Receiver<InferenceRequest>) -> Self {
+        Self {
+            rx,
+            interactive: VecDeque::new(),
+            bulk: VecDeque::new(),
+        }
+    }
+
+    fn stage(&mut self, req: InferenceRequest) {
+        match req.priority {
+            Priority::Interactive => self.interactive.push_back(req),
+            Priority::Bulk => self.bulk.push_back(req),
+        }
+    }
+
+    /// Drain everything already sitting in the channel (non-blocking).
+    fn pump(&mut self) {
+        while let Ok(req) = self.rx.try_recv() {
+            self.stage(req);
+        }
+    }
+
+    /// Requests currently staged (either class).
+    fn staged(&self) -> usize {
+        self.interactive.len() + self.bulk.len()
+    }
+
+    /// Sweep both classes: discard cancelled requests (counted, no
+    /// response — the ticket holder walked away) and resolve expired
+    /// ones with a typed [`ServeError::DeadlineExceeded`]. Runs at
+    /// batch-formation time, so an expired request provably never
+    /// reaches the backend. The all-live fast path allocates nothing.
+    fn sweep(&mut self, now: Instant, metrics: &Metrics) {
+        for class in [&mut self.interactive, &mut self.bulk] {
+            if class
+                .iter()
+                .all(|req| !req.is_cancelled() && !req.expired_at(now))
+            {
+                continue;
+            }
+            let mut kept = VecDeque::with_capacity(class.len());
+            for req in class.drain(..) {
+                if req.is_cancelled() {
+                    metrics.record_cancelled(1);
+                } else if req.is_expired() {
+                    // The ticket already expired it client-side (and
+                    // resolved the waiter); just record and discard.
+                    metrics.record_expired(1);
+                } else if req.expired_at(now) {
+                    // Claim the request before resolving it, so a
+                    // ticket's later `cancel()` correctly reports
+                    // "too late" instead of pretending to withdraw an
+                    // already-resolved request; losing the claim means
+                    // the ticket cancelled or self-expired concurrently.
+                    if req.try_dispatch() {
+                        metrics.record_expired(1);
+                        let waited_us = req.waited_us(now);
+                        req.resolve(Err(ServeError::DeadlineExceeded { waited_us }));
+                    } else if req.is_expired() {
+                        metrics.record_expired(1);
+                    } else {
+                        metrics.record_cancelled(1);
+                    }
+                } else {
+                    kept.push_back(req);
+                }
+            }
+            *class = kept;
+        }
+    }
+
+    /// Take up to `max` requests, interactive class first, claiming
+    /// each for dispatch. A request cancelled or ticket-expired
+    /// between the sweep and this claim loses the race and is counted
+    /// instead of taken.
+    fn take(&mut self, max: usize, metrics: &Metrics) -> Vec<InferenceRequest> {
+        let mut batch = Vec::new();
+        for class in [&mut self.interactive, &mut self.bulk] {
+            while batch.len() < max {
+                match class.pop_front() {
+                    Some(req) if req.try_dispatch() => batch.push(req),
+                    Some(dead) if dead.is_expired() => metrics.record_expired(1),
+                    Some(_cancelled) => metrics.record_cancelled(1),
+                    None => break,
+                }
+            }
+        }
+        batch
     }
 }
 
@@ -47,49 +167,82 @@ impl BatchPolicy {
         Ok(())
     }
 
-    /// Pull the next batch from `rx`. Blocks for the first request;
-    /// returns `None` when the channel is closed and drained.
-    pub fn next_batch(&self, rx: &Receiver<InferenceRequest>) -> Option<Vec<InferenceRequest>> {
-        let first = rx.recv().ok()?;
-        let deadline = Instant::now() + self.max_wait;
-        let mut batch = vec![first];
-        while batch.len() < self.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                // Deadline passed: take anything already queued, without
-                // blocking, then close.
-                match rx.try_recv() {
-                    Ok(req) => batch.push(req),
-                    Err(_) => break,
+    /// Form the next batch from `queue`. Blocks until at least one
+    /// *live* (uncancelled, unexpired) request is available; returns
+    /// `None` when the channel is closed and fully drained. Expired
+    /// requests are resolved with `DeadlineExceeded` and cancelled
+    /// ones discarded at formation time, and the returned batch is
+    /// ordered interactive-before-bulk, FIFO within each class.
+    pub fn next_batch(
+        &self,
+        queue: &mut BatchQueue,
+        metrics: &Metrics,
+    ) -> Option<Vec<InferenceRequest>> {
+        loop {
+            // Phase 1: wait for at least one live request.
+            loop {
+                queue.pump();
+                queue.sweep(Instant::now(), metrics);
+                if queue.staged() > 0 {
+                    break;
                 }
-                continue;
+                match queue.rx.recv() {
+                    Ok(req) => queue.stage(req),
+                    Err(_) => return None, // closed + drained
+                }
             }
-            match rx.recv_timeout(deadline - now) {
-                Ok(req) => batch.push(req),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
+            // Phase 2: hold the batch open up to `max_wait` for more.
+            // No per-arrival sweep — a dead entry merely inflates the
+            // staged count (closing the window early with a smaller
+            // batch), and the single sweep below settles it.
+            let deadline = Instant::now() + self.max_wait;
+            while queue.staged() < self.max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    queue.pump();
+                    break;
+                }
+                match queue.rx.recv_timeout(deadline - now) {
+                    Ok(req) => {
+                        queue.stage(req);
+                        queue.pump();
+                    }
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            // Phase 3: one sweep at formation (this is what guarantees
+            // an expired request never reaches the backend), then
+            // claim, interactive first. A cancel racing the claim just
+            // shrinks the batch, and an all-dead window loops back to
+            // waiting.
+            queue.sweep(Instant::now(), metrics);
+            let batch = queue.take(self.max_batch, metrics);
+            if !batch.is_empty() {
+                return Some(batch);
             }
         }
-        Some(batch)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+    use crate::coordinator::request::{SubmitOptions, Ticket};
+    use std::sync::mpsc::{channel, Sender};
     use std::time::Instant;
 
-    fn req(id: u64) -> InferenceRequest {
-        let (tx, _rx) = channel();
-        // Keep _rx alive by leaking: tests only inspect ids.
-        std::mem::forget(_rx);
-        InferenceRequest {
-            id,
-            features: vec![],
-            resp_tx: tx,
-            enqueued_at: Instant::now(),
-        }
+    /// Test fixture: a request flowing through the real `Ticket`
+    /// plumbing. The returned ticket must be *held* by the test — a
+    /// dropped ticket cancels its request, which is itself behaviour
+    /// under test below.
+    fn send(tx: &Sender<InferenceRequest>, id: u64, opts: SubmitOptions) -> Ticket {
+        let (req, ticket) = InferenceRequest::fresh(id, vec![], opts);
+        tx.send(req).unwrap();
+        ticket
+    }
+
+    fn ids(batch: &[InferenceRequest]) -> Vec<u64> {
+        batch.iter().map(|r| r.id).collect()
     }
 
     #[test]
@@ -107,29 +260,31 @@ mod tests {
     #[test]
     fn fills_to_max_batch_when_queue_is_deep() {
         let (tx, rx) = channel();
-        for i in 0..10 {
-            tx.send(req(i)).unwrap();
-        }
+        let mut q = BatchQueue::new(rx);
+        let m = Metrics::new();
+        let _tickets: Vec<_> = (0..10).map(|i| send(&tx, i, SubmitOptions::default())).collect();
         let p = BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(50),
         };
-        let b1 = p.next_batch(&rx).unwrap();
-        assert_eq!(b1.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
-        let b2 = p.next_batch(&rx).unwrap();
+        let b1 = p.next_batch(&mut q, &m).unwrap();
+        assert_eq!(ids(&b1), vec![0, 1, 2, 3]);
+        let b2 = p.next_batch(&mut q, &m).unwrap();
         assert_eq!(b2.len(), 4);
     }
 
     #[test]
     fn deadline_closes_partial_batch() {
         let (tx, rx) = channel();
-        tx.send(req(0)).unwrap();
+        let mut q = BatchQueue::new(rx);
+        let m = Metrics::new();
+        let _t = send(&tx, 0, SubmitOptions::default());
         let p = BatchPolicy {
             max_batch: 100,
             max_wait: Duration::from_millis(10),
         };
         let t0 = Instant::now();
-        let b = p.next_batch(&rx).unwrap();
+        let b = p.next_batch(&mut q, &m).unwrap();
         assert_eq!(b.len(), 1);
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
@@ -137,20 +292,97 @@ mod tests {
     #[test]
     fn unbatched_returns_singletons_immediately() {
         let (tx, rx) = channel();
-        tx.send(req(1)).unwrap();
-        tx.send(req(2)).unwrap();
+        let mut q = BatchQueue::new(rx);
+        let m = Metrics::new();
+        let _t1 = send(&tx, 1, SubmitOptions::default());
+        let _t2 = send(&tx, 2, SubmitOptions::default());
         let p = BatchPolicy::unbatched();
-        assert_eq!(p.next_batch(&rx).unwrap().len(), 1);
-        assert_eq!(p.next_batch(&rx).unwrap().len(), 1);
+        assert_eq!(p.next_batch(&mut q, &m).unwrap().len(), 1);
+        assert_eq!(p.next_batch(&mut q, &m).unwrap().len(), 1);
     }
 
     #[test]
     fn closed_channel_yields_none_after_drain() {
         let (tx, rx) = channel();
-        tx.send(req(5)).unwrap();
+        let mut q = BatchQueue::new(rx);
+        let m = Metrics::new();
+        let _t = send(&tx, 5, SubmitOptions::default());
         drop(tx);
         let p = BatchPolicy::default();
-        assert_eq!(p.next_batch(&rx).unwrap().len(), 1);
-        assert!(p.next_batch(&rx).is_none());
+        assert_eq!(p.next_batch(&mut q, &m).unwrap().len(), 1);
+        assert!(p.next_batch(&mut q, &m).is_none());
+    }
+
+    #[test]
+    fn interactive_taken_before_earlier_bulk() {
+        let (tx, rx) = channel();
+        let mut q = BatchQueue::new(rx);
+        let m = Metrics::new();
+        // Bulk submitted first, interactive after — interactive still
+        // leads the batch, and each class stays FIFO.
+        let _tickets = [
+            send(&tx, 0, SubmitOptions::bulk()),
+            send(&tx, 1, SubmitOptions::bulk()),
+            send(&tx, 2, SubmitOptions::default()),
+            send(&tx, 3, SubmitOptions::default()),
+        ];
+        let p = BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_millis(20),
+        };
+        let b = p.next_batch(&mut q, &m).unwrap();
+        assert_eq!(ids(&b), vec![2, 3, 0], "interactive first, then bulk FIFO");
+        let b = p.next_batch(&mut q, &m).unwrap();
+        assert_eq!(ids(&b), vec![1]);
+    }
+
+    #[test]
+    fn expired_requests_resolve_without_reaching_a_batch() {
+        let (tx, rx) = channel();
+        let mut q = BatchQueue::new(rx);
+        let m = Metrics::new();
+        let dead = send(
+            &tx,
+            0,
+            SubmitOptions::default().with_deadline(Duration::ZERO),
+        );
+        let live = send(&tx, 1, SubmitOptions::default());
+        let p = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        };
+        let b = p.next_batch(&mut q, &m).unwrap();
+        assert_eq!(ids(&b), vec![1], "expired request must not be batched");
+        match dead.wait().unwrap_err() {
+            ServeError::DeadlineExceeded { .. } => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert_eq!(m.snapshot().expired, 1);
+        drop(live);
+    }
+
+    #[test]
+    fn cancelled_requests_are_swept_not_batched() {
+        let (tx, rx) = channel();
+        let mut q = BatchQueue::new(rx);
+        let m = Metrics::new();
+        let t0 = send(&tx, 0, SubmitOptions::default());
+        let _t1 = send(&tx, 1, SubmitOptions::default());
+        assert!(t0.cancel());
+        let p = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        };
+        let b = p.next_batch(&mut q, &m).unwrap();
+        assert_eq!(ids(&b), vec![1]);
+        assert_eq!(m.snapshot().cancelled, 1);
+        // A ticket *dropped* (not explicitly cancelled) behaves the
+        // same: the request never surfaces in a batch.
+        let t2 = send(&tx, 2, SubmitOptions::default());
+        drop(t2);
+        let _t3 = send(&tx, 3, SubmitOptions::default());
+        let b = p.next_batch(&mut q, &m).unwrap();
+        assert_eq!(ids(&b), vec![3]);
+        assert_eq!(m.snapshot().cancelled, 2);
     }
 }

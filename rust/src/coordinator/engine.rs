@@ -40,13 +40,12 @@
 //! [`Engine::metrics`] → [`MetricsSnapshot::shard_depths`].
 
 use std::collections::BTreeMap;
-use std::sync::mpsc::Receiver;
 
 use super::backend::{ExecutionBackend, ReferenceBackend};
 use super::batcher::BatchPolicy;
-use super::error::{ServeError, ServeResult};
+use super::error::ServeError;
 use super::metrics::MetricsSnapshot;
-use super::request::InferenceResponse;
+use super::request::{InferenceResponse, SubmitOptions, Ticket};
 use super::router::{RoutePolicy, Router};
 use super::server::ServerConfig;
 use crate::nn::Network;
@@ -80,6 +79,8 @@ pub struct EngineBuilder {
     policy: BatchPolicy,
     route: RoutePolicy,
     parallelism: Parallelism,
+    queue_capacity: Option<usize>,
+    pool_sized_batches: bool,
     errors: Vec<String>,
 }
 
@@ -98,6 +99,8 @@ impl EngineBuilder {
             policy: BatchPolicy::default(),
             route: RoutePolicy::RoundRobin,
             parallelism: Parallelism::default(),
+            queue_capacity: None,
+            pool_sized_batches: false,
             errors: Vec::new(),
         }
     }
@@ -166,6 +169,27 @@ impl EngineBuilder {
         self
     }
 
+    /// Bound each worker's in-flight queue: once a worker holds this
+    /// many admitted requests, further submissions to it fail fast
+    /// with [`ServeError::Overloaded`] instead of growing the queue.
+    /// Zero is rejected at [`build`](Self::build).
+    pub fn queue_capacity(mut self, capacity: usize) -> Self {
+        if capacity == 0 {
+            self.errors
+                .push("queue_capacity(0) admits no requests at all".into());
+        }
+        self.queue_capacity = Some(capacity);
+        self
+    }
+
+    /// Clamp every worker's dynamic batch to the kernel pool's row
+    /// budget (see
+    /// [`ServerConfig::pool_sized_batches`](super::server::ServerConfig::pool_sized_batches)).
+    pub fn pool_sized_batches(mut self, on: bool) -> Self {
+        self.pool_sized_batches = on;
+        self
+    }
+
     /// Validate the whole configuration and start every worker group.
     pub fn build(self) -> Result<Engine, ServeError> {
         if !self.errors.is_empty() {
@@ -180,6 +204,8 @@ impl EngineBuilder {
         let config = ServerConfig {
             policy: self.policy,
             parallelism: self.parallelism,
+            queue_capacity: self.queue_capacity,
+            pool_sized_batches: self.pool_sized_batches,
         };
         let mut groups = BTreeMap::new();
         for mut spec in self.models {
@@ -274,14 +300,16 @@ impl Engine {
         })
     }
 
-    /// Submit a request to a named model; the response (or typed
-    /// error) arrives on the returned receiver. Unknown models and
-    /// width mismatches are rejected here, synchronously.
-    pub fn submit(
+    /// Submit to a named model with explicit QoS options; the request
+    /// resolves through the returned [`Ticket`]. Unknown models, width
+    /// mismatches, and admission overflow
+    /// ([`ServeError::Overloaded`]) are rejected here, synchronously.
+    pub fn submit_with(
         &self,
         model: &str,
         features: Vec<f32>,
-    ) -> Result<Receiver<ServeResult>, ServeError> {
+        opts: SubmitOptions,
+    ) -> Result<Ticket, ServeError> {
         let group = self.group(model)?;
         if features.is_empty() {
             return Err(ServeError::EmptyRequest);
@@ -292,14 +320,19 @@ impl Engine {
                 got: features.len(),
             });
         }
-        let (_, rx) = group.router.submit(features)?;
-        Ok(rx)
+        let (_, ticket) = group.router.submit_with(features, opts)?;
+        Ok(ticket)
+    }
+
+    /// Submit to a named model with default options (no deadline,
+    /// interactive priority).
+    pub fn submit(&self, model: &str, features: Vec<f32>) -> Result<Ticket, ServeError> {
+        self.submit_with(model, features, SubmitOptions::default())
     }
 
     /// Submit to a named model and wait (convenience).
     pub fn infer(&self, model: &str, features: Vec<f32>) -> Result<InferenceResponse, ServeError> {
-        let rx = self.submit(model, features)?;
-        rx.recv().map_err(|_| ServeError::ChannelClosed)?
+        self.submit(model, features)?.wait()
     }
 
     /// Live per-replica metrics of one model's worker group.
@@ -439,6 +472,44 @@ mod tests {
             .expect("shape disagreement must fail at build");
         assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
         assert!(err.to_string().contains("4-wide"), "{err}");
+    }
+
+    #[test]
+    fn zero_queue_capacity_rejected_at_build() {
+        let err = Engine::builder()
+            .model("m", net(&[4, 2], 1))
+            .queue_capacity(0)
+            .build()
+            .err()
+            .expect("queue_capacity(0) must fail");
+        assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn already_expired_deadline_is_a_typed_error_not_a_served_request() {
+        use crate::coordinator::request::SubmitOptions;
+        use std::time::Duration;
+        let engine = Engine::builder()
+            .model("m", net(&[8, 3], 5))
+            .queue_capacity(64)
+            .build()
+            .unwrap();
+        let t = engine
+            .submit_with(
+                "m",
+                vec![0.1; 8],
+                SubmitOptions::default().with_deadline(Duration::ZERO),
+            )
+            .unwrap();
+        match t.wait().unwrap_err() {
+            ServeError::DeadlineExceeded { .. } => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        // Live traffic unaffected.
+        assert_eq!(engine.infer("m", vec![0.1; 8]).unwrap().logits.len(), 3);
+        let totals = engine.shutdown();
+        assert_eq!(totals["m"][0].expired, 1);
+        assert_eq!(totals["m"][0].requests, 1);
     }
 
     #[test]

@@ -39,6 +39,31 @@ pub enum ServeError {
     /// A configuration was rejected before any worker started
     /// (`max_batch == 0`, zero replicas, duplicate model names, …).
     InvalidConfig(String),
+    /// The bounded admission queue is full for this request's
+    /// priority class. Returned synchronously from
+    /// `submit`/`submit_with` — overload is pushed back to the caller
+    /// instead of growing an unbounded queue. Retry later, shed load,
+    /// or route elsewhere.
+    Overloaded {
+        /// In-flight depth observed at rejection time.
+        depth: usize,
+        /// The admission limit applied to this request: the configured
+        /// `queue_capacity` for `Interactive` traffic, or the (lower)
+        /// bulk limit — capacity minus the interactive reserve — for
+        /// `Bulk`. `depth >= capacity` always holds at rejection.
+        capacity: usize,
+    },
+    /// The request's deadline passed while it was still queued; the
+    /// batcher dropped it at batch-formation time — it never reached
+    /// the backend.
+    DeadlineExceeded {
+        /// Microseconds the request had waited when it was dropped.
+        waited_us: u64,
+    },
+    /// The request was withdrawn via
+    /// [`Ticket::cancel`](super::request::Ticket::cancel) — or by
+    /// dropping its unresolved ticket — before it was dispatched.
+    Cancelled,
     /// The execution backend failed while running a batch. Carries the
     /// backend's `tag()` and the rendered error chain.
     Backend {
@@ -75,6 +100,15 @@ impl fmt::Display for ServeError {
                 }
             ),
             ServeError::InvalidConfig(msg) => write!(f, "invalid serving config: {msg}"),
+            ServeError::Overloaded { depth, capacity } => write!(
+                f,
+                "server overloaded: {depth} requests in flight at capacity {capacity}"
+            ),
+            ServeError::DeadlineExceeded { waited_us } => write!(
+                f,
+                "deadline exceeded after {waited_us} µs queued (request never dispatched)"
+            ),
+            ServeError::Cancelled => write!(f, "request cancelled before dispatch"),
             ServeError::Backend { backend, message } => {
                 write!(f, "backend '{backend}' failed: {message}")
             }
@@ -110,6 +144,14 @@ mod tests {
             available: vec![],
         };
         assert!(e.to_string().contains("none"));
+        let e = ServeError::Overloaded {
+            depth: 128,
+            capacity: 128,
+        };
+        assert!(e.to_string().contains("128"));
+        let e = ServeError::DeadlineExceeded { waited_us: 750 };
+        assert!(e.to_string().contains("750"));
+        assert!(ServeError::Cancelled.to_string().contains("cancelled"));
     }
 
     #[test]

@@ -1,6 +1,14 @@
 //! Serving metrics: counters + latency distribution, lock-protected and
 //! snapshot-able.
+//!
+//! QoS accounting distinguishes the four ways a request can fail to be
+//! served: `failures` (the backend ran and errored, or a stale-width
+//! request was rejected worker-side), `rejected` (bounded admission
+//! turned it away at submit — it never held a queue slot), `expired`
+//! (its deadline passed while queued; dropped at batch formation), and
+//! `cancelled` (withdrawn through its ticket before dispatch).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -9,6 +17,9 @@ use std::time::Duration;
 struct State {
     requests: u64,
     failures: u64,
+    rejected: u64,
+    expired: u64,
+    cancelled: u64,
     batches: u64,
     batch_rows_sum: u64,
     queue_us: Vec<f64>,
@@ -23,9 +34,13 @@ struct State {
 #[derive(Debug, Default)]
 pub struct Metrics {
     state: Mutex<State>,
-    /// Lock-free mirror of the served-request count, for hot-path
-    /// consumers (the router's least-outstanding policy).
-    requests_fast: std::sync::atomic::AtomicU64,
+    /// Lock-free mirror of the settled-request count (successes,
+    /// failures, expiries, cancellations), for hot-path consumers
+    /// (the router's least-outstanding policy).
+    requests_fast: AtomicU64,
+    /// Lock-free mirror of the latest summed per-shard backlog gauge,
+    /// for the router's modeled-backlog policy.
+    shard_backlog_fast: AtomicU64,
 }
 
 /// Immutable view of the metrics at a point in time.
@@ -37,11 +52,22 @@ pub struct MetricsSnapshot {
     /// (backend faults, or stale-width requests rejected by the worker
     /// after a width re-pin).
     pub failures: u64,
+    /// Requests refused at submit time by bounded admission
+    /// (`ServeError::Overloaded`); they never held a queue slot.
+    pub rejected: u64,
+    /// Admitted requests whose deadline passed while queued; dropped
+    /// at batch-formation time (`ServeError::DeadlineExceeded`) without
+    /// ever reaching the backend.
+    pub expired: u64,
+    /// Admitted requests withdrawn through their ticket (explicit
+    /// `cancel()` or dropping the unresolved ticket) before dispatch.
+    pub cancelled: u64,
     /// Batches executed.
     pub batches: u64,
     /// Mean rows per batch.
     pub mean_batch: f64,
-    /// Queue-latency summary (µs), if any requests were served.
+    /// Queue-delay summary (µs) — includes p50 (`median`) and `p99` —
+    /// if any requests were served.
     pub queue_us: Option<crate::util::stats::Summary>,
     /// Compute-latency summary (µs per batch).
     pub compute_us: Option<crate::util::stats::Summary>,
@@ -83,13 +109,14 @@ impl Metrics {
         s.queue_us.extend(queue_us.iter().map(|&q| q as f64));
         s.compute_us.push(compute_us as f64);
         s.sim_cycles += sim_cycles.unwrap_or(0);
-        self.requests_fast
-            .fetch_add(rows as u64, std::sync::atomic::Ordering::Relaxed);
+        self.requests_fast.fetch_add(rows as u64, Ordering::Relaxed);
     }
 
     /// Record the per-shard queue depths a multi-array backend reported
     /// after a batch (latest value wins — it's a gauge, not a counter).
     pub fn record_shard_depths(&self, depths: Vec<u64>) {
+        self.shard_backlog_fast
+            .store(depths.iter().sum(), Ordering::Relaxed);
         self.state.lock().unwrap().shard_depths = Some(depths);
     }
 
@@ -101,14 +128,45 @@ impl Metrics {
         let mut s = self.state.lock().unwrap();
         s.failures += rows as u64;
         drop(s);
-        self.requests_fast
-            .fetch_add(rows as u64, std::sync::atomic::Ordering::Relaxed);
+        self.requests_fast.fetch_add(rows as u64, Ordering::Relaxed);
     }
 
-    /// Answered-request count (successes + failures) without taking
-    /// the lock.
+    /// Record `n` submissions refused by bounded admission. They were
+    /// never admitted, so they do **not** settle the fast answered
+    /// counter (the router never counted them as outstanding).
+    pub fn record_rejected(&self, n: usize) {
+        self.state.lock().unwrap().rejected += n as u64;
+    }
+
+    /// Record `n` admitted requests dropped at batch formation because
+    /// their deadline had passed. Settles the fast answered counter.
+    pub fn record_expired(&self, n: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.expired += n as u64;
+        drop(s);
+        self.requests_fast.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Record `n` admitted requests withdrawn through their ticket
+    /// before dispatch. Settles the fast answered counter.
+    pub fn record_cancelled(&self, n: usize) {
+        let mut s = self.state.lock().unwrap();
+        s.cancelled += n as u64;
+        drop(s);
+        self.requests_fast.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Answered-request count (successes + failures + expiries +
+    /// cancellations) without taking the lock.
     pub fn requests_fast(&self) -> u64 {
-        self.requests_fast.load(std::sync::atomic::Ordering::Relaxed)
+        self.requests_fast.load(Ordering::Relaxed)
+    }
+
+    /// Latest summed per-shard modeled backlog, without taking the
+    /// lock (0 until a multi-array backend reports depths). The
+    /// router's `ModeledBacklog` policy reads this on every pick.
+    pub fn shard_backlog_fast(&self) -> u64 {
+        self.shard_backlog_fast.load(Ordering::Relaxed)
     }
 
     /// Snapshot the current totals.
@@ -126,6 +184,9 @@ impl Metrics {
         MetricsSnapshot {
             requests: s.requests,
             failures: s.failures,
+            rejected: s.rejected,
+            expired: s.expired,
+            cancelled: s.cancelled,
             batches: s.batches,
             mean_batch: if s.batches > 0 {
                 s.batch_rows_sum as f64 / s.batches as f64
@@ -168,6 +229,7 @@ mod tests {
         let q = s.queue_us.unwrap();
         assert_eq!(q.n, 6);
         assert_eq!(q.max, 40.0);
+        assert!(q.p99 <= q.max && q.p99 >= q.median);
     }
 
     #[test]
@@ -183,9 +245,28 @@ mod tests {
     }
 
     #[test]
+    fn qos_counters_settle_outstanding_except_rejections() {
+        let m = Metrics::new();
+        m.record_expired(2);
+        m.record_cancelled(1);
+        m.record_rejected(4);
+        let s = m.snapshot();
+        assert_eq!(s.expired, 2);
+        assert_eq!(s.cancelled, 1);
+        assert_eq!(s.rejected, 4);
+        assert_eq!(s.requests, 0);
+        // Expired + cancelled were admitted (outstanding); rejected
+        // never were.
+        assert_eq!(m.requests_fast(), 3);
+    }
+
+    #[test]
     fn empty_snapshot_is_safe() {
         let s = Metrics::new().snapshot();
         assert_eq!(s.requests, 0);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.expired, 0);
+        assert_eq!(s.cancelled, 0);
         assert!(s.queue_us.is_none());
         assert!(s.shard_depths.is_none());
         assert_eq!(s.throughput_rps, 0.0);
@@ -195,7 +276,9 @@ mod tests {
     fn shard_depths_gauge_keeps_latest() {
         let m = Metrics::new();
         m.record_shard_depths(vec![10, 0]);
+        assert_eq!(m.shard_backlog_fast(), 10);
         m.record_shard_depths(vec![4, 7]);
         assert_eq!(m.snapshot().shard_depths, Some(vec![4, 7]));
+        assert_eq!(m.shard_backlog_fast(), 11);
     }
 }

@@ -4,13 +4,19 @@
 //! external hardware controller" (§III-D step 1); this module is that
 //! controller, built like a miniature serving stack:
 //!
-//! * [`request`] — request/response types (arbitrary feature/class
-//!   widths; shapes come from the served model's config).
+//! * [`request`] — the request lifecycle: request/response types
+//!   (arbitrary feature/class widths; shapes come from the served
+//!   model's config), per-request QoS ([`SubmitOptions`]: deadline +
+//!   [`Priority`]), and the owned [`Ticket`] every submission resolves
+//!   through (`wait`/`wait_timeout`/`try_wait`/`cancel`; dropping an
+//!   unresolved ticket cancels an undispatched request).
 //! * [`error`] — typed serving failures ([`ServeError`]); every
-//!   response channel carries a [`ServeResult`], never a sentinel.
-//! * [`batcher`] — dynamic batching: collect requests up to a maximum
-//!   batch (the paper evaluates 1 and 256) or a deadline, whichever
-//!   comes first.
+//!   ticket resolves to a [`ServeResult`], never a sentinel.
+//! * [`batcher`] — QoS-aware dynamic batching: a two-class priority
+//!   queue that collects requests up to a maximum batch (the paper
+//!   evaluates 1 and 256) or a wait deadline, drains Interactive
+//!   before Bulk, and drops expired or cancelled requests at
+//!   batch-formation time — they never reach the backend.
 //! * [`backend`] — the **open** execution seam: anything implementing
 //!   the object-safe [`ExecutionBackend`] trait plugs in as a
 //!   `Box<dyn ExecutionBackend>`. In-tree: [`ReferenceBackend`] (pure
@@ -20,9 +26,14 @@
 //!   PJRT runtime (implementation behind the `pjrt` feature; the
 //!   [`pjrt`](backend::pjrt) constructor exists in every build).
 //! * [`server`] — a worker thread that owns one backend, drains the
-//!   queue through the batcher, and records [`metrics`].
+//!   queue through the batcher, and records [`metrics`]. The queue is
+//!   a real admission point: [`ServerConfig::queue_capacity`] bounds
+//!   in-flight requests and overflow is a synchronous
+//!   [`ServeError::Overloaded`] at submit time.
 //! * [`router`] — replicas of one model behind a worker-selection
-//!   policy (round-robin or join-the-shortest-queue).
+//!   policy (round-robin, join-the-shortest-queue on host-side
+//!   outstanding counts, or [`RoutePolicy::ModeledBacklog`] on the
+//!   modeled backlogs sharded simulator workers report).
 //! * [`engine`] — the top-level facade: **multiple named models
 //!   behind one submit surface**, one router-managed worker group per
 //!   model, built with the fluent [`EngineBuilder`].
@@ -56,13 +67,13 @@ pub use backend::{
 };
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
-pub use batcher::BatchPolicy;
+pub use batcher::{BatchPolicy, BatchQueue};
 pub use engine::{BackendFactory, Engine, EngineBuilder};
 pub use error::{ServeError, ServeResult};
 pub use metrics::MetricsSnapshot;
-pub use request::{InferenceRequest, InferenceResponse};
+pub use request::{InferenceRequest, InferenceResponse, Priority, SubmitOptions, Ticket};
 pub use router::{RoutePolicy, Router};
-pub use server::{Server, ServerConfig};
+pub use server::{Server, ServerConfig, ROWS_PER_WORKER};
 
 // The kernel-parallelism budget carried by [`ServerConfig`] (and its
 // dispatch-strategy knob); re-exported so serving callers don't need to

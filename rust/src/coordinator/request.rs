@@ -1,4 +1,6 @@
-//! Request/response types for the serving path.
+//! Request-lifecycle types for the serving path: requests, responses,
+//! submit options, and the [`Ticket`] handle a submission resolves
+//! through.
 //!
 //! Shapes are model-defined, not hard-coded: a request carries an
 //! arbitrary-width feature vector (the served model's input width —
@@ -6,25 +8,430 @@
 //! models) and the response carries one logit per model class. Width
 //! is validated against the served model at `submit` time; the worker
 //! thread only ever sees rectangular batches.
+//!
+//! # Lifecycle
+//!
+//! ```text
+//! submit_with ──► admitted (holds a queue slot) ──► dispatched ──► resolved
+//!      │                  │                            (backend ran, or a
+//!      │                  ├─► cancelled (ticket)        typed error sent)
+//!      ▼                  └─► expired   (deadline)
+//!   rejected
+//!   (Overloaded / WidthMismatch — never admitted)
+//! ```
+//!
+//! Every admitted request holds exactly one slot of the server's
+//! bounded queue ([`queue_capacity`](super::server::ServerConfig::queue_capacity))
+//! from admission until it is resolved, cancelled, or expired — the
+//! slot is released exactly once, whichever path the request takes, so
+//! a cancelled ticket's capacity is immediately reusable.
 
-use std::sync::mpsc::Sender;
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use super::error::ServeResult;
+use super::error::{ServeError, ServeResult};
 
-/// One inference request: a flattened feature vector.
+/// Scheduling class of a request. The batcher drains all queued
+/// [`Interactive`](Priority::Interactive) requests before any
+/// [`Bulk`](Priority::Bulk) one when forming a batch, so latency-bound
+/// traffic overtakes throughput-bound backfill under load; within one
+/// class, order stays FIFO.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    /// Latency-bound traffic (the default): served first.
+    #[default]
+    Interactive,
+    /// Throughput-bound backfill: served when no interactive request
+    /// is waiting.
+    Bulk,
+}
+
+/// Per-request quality-of-service options for
+/// [`submit_with`](super::server::Server::submit_with).
+///
+/// `SubmitOptions::default()` is what plain `submit` uses: no
+/// deadline, [`Priority::Interactive`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SubmitOptions {
+    /// Relative deadline: if the request is still queued this long
+    /// after submission, the batcher drops it at batch-formation time
+    /// with [`ServeError::DeadlineExceeded`] — it never reaches the
+    /// backend. `None` (default) never expires.
+    pub deadline: Option<Duration>,
+    /// Scheduling class (see [`Priority`]).
+    pub priority: Priority,
+}
+
+impl SubmitOptions {
+    /// Bulk-class options (no deadline).
+    pub fn bulk() -> Self {
+        Self {
+            priority: Priority::Bulk,
+            ..Self::default()
+        }
+    }
+
+    /// Same options with a relative deadline.
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+}
+
+/// Lifecycle states (see module docs). Monotone: QUEUED → DISPATCHED,
+/// QUEUED → CANCELLED, or QUEUED → EXPIRED, decided by exactly one
+/// compare-exchange.
+const QUEUED: u8 = 0;
+const DISPATCHED: u8 = 1;
+const CANCELLED: u8 = 2;
+/// The ticket noticed the deadline had passed while the request was
+/// still queued and resolved it client-side (freeing its slot); the
+/// batcher's sweep later discards the corpse and records the expiry.
+const EXPIRED: u8 = 3;
+
+/// State shared between a queued request and its [`Ticket`]: the
+/// dispatch/cancel race arbiter plus the exactly-once release of the
+/// admission slot.
+#[derive(Debug)]
+pub(crate) struct Lifecycle {
+    state: AtomicU8,
+    /// The server's in-flight gauge this request holds a slot of.
+    depth: Arc<AtomicUsize>,
+    /// Guards the slot release: set by the first of cancel / resolve /
+    /// request drop to get there.
+    released: AtomicBool,
+}
+
+impl Lifecycle {
+    fn new(depth: Arc<AtomicUsize>) -> Self {
+        Self {
+            state: AtomicU8::new(QUEUED),
+            depth,
+            released: AtomicBool::new(false),
+        }
+    }
+
+    /// Claim the request for execution. Fails iff the ticket already
+    /// cancelled it; after success the ticket's `cancel` is a no-op.
+    pub(crate) fn try_dispatch(&self) -> bool {
+        self.state
+            .compare_exchange(QUEUED, DISPATCHED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Cancel if still queued, releasing the admission slot
+    /// immediately (the capacity is reusable before the batcher even
+    /// sweeps the dead request out).
+    pub(crate) fn cancel(&self) -> bool {
+        let won = self
+            .state
+            .compare_exchange(QUEUED, CANCELLED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok();
+        if won {
+            self.release_slot();
+        }
+        won
+    }
+
+    pub(crate) fn is_cancelled(&self) -> bool {
+        self.state.load(Ordering::Acquire) == CANCELLED
+    }
+
+    /// Expire if still queued (the ticket-side twin of the batcher's
+    /// deadline sweep), releasing the admission slot immediately — a
+    /// dead request must not block the bounded queue for the length of
+    /// a backend batch.
+    pub(crate) fn expire(&self) -> bool {
+        let won = self
+            .state
+            .compare_exchange(QUEUED, EXPIRED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok();
+        if won {
+            self.release_slot();
+        }
+        won
+    }
+
+    pub(crate) fn is_expired(&self) -> bool {
+        self.state.load(Ordering::Acquire) == EXPIRED
+    }
+
+    /// Release the admission slot exactly once.
+    pub(crate) fn release_slot(&self) {
+        if !self.released.swap(true, Ordering::AcqRel) {
+            self.depth.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+/// One inference request: a flattened feature vector plus its QoS
+/// envelope. Constructed by the serving layer (or by
+/// [`InferenceRequest::fresh`] for custom front-ends and fixtures) —
+/// always paired with the [`Ticket`] it resolves through.
 #[derive(Debug)]
 pub struct InferenceRequest {
-    /// Caller-assigned id, echoed in the response.
+    /// Server-assigned id, echoed in the response and on the ticket.
     pub id: u64,
     /// Flattened input features; length must equal the served model's
     /// input width (enforced at submit).
     pub features: Vec<f32>,
+    /// Scheduling class (see [`Priority`]).
+    pub priority: Priority,
+    /// Absolute expiry instant, if the submitter set a deadline.
+    pub deadline: Option<Instant>,
+    /// Enqueue timestamp (set at submit).
+    pub enqueued_at: Instant,
     /// Channel the response — or a typed serving error — is delivered
     /// on.
-    pub resp_tx: Sender<ServeResult>,
-    /// Enqueue timestamp (set by the server on submit).
-    pub enqueued_at: Instant,
+    resp_tx: Sender<ServeResult>,
+    /// Shared with the ticket: dispatch/cancel state + slot release.
+    lifecycle: Arc<Lifecycle>,
+}
+
+impl InferenceRequest {
+    /// Build a request and its ticket over an explicit in-flight
+    /// gauge. The caller must have already incremented `depth`
+    /// (admission); the lifecycle decrements it exactly once.
+    pub(crate) fn create(
+        id: u64,
+        features: Vec<f32>,
+        opts: SubmitOptions,
+        depth: Arc<AtomicUsize>,
+    ) -> (Self, Ticket) {
+        let now = Instant::now();
+        let lifecycle = Arc::new(Lifecycle::new(depth));
+        let (resp_tx, resp_rx) = channel();
+        let req = Self {
+            id,
+            features,
+            priority: opts.priority,
+            deadline: opts.deadline.map(|d| now + d),
+            enqueued_at: now,
+            resp_tx,
+            lifecycle: Arc::clone(&lifecycle),
+        };
+        let ticket = Ticket {
+            id,
+            rx: resp_rx,
+            lifecycle,
+            deadline: req.deadline,
+            enqueued_at: now,
+        };
+        (req, ticket)
+    }
+
+    /// Build a free-standing request + ticket outside any server —
+    /// for custom serving front-ends and test fixtures that drive the
+    /// batcher directly. The pair carries its own private one-slot
+    /// gauge.
+    pub fn fresh(id: u64, features: Vec<f32>, opts: SubmitOptions) -> (Self, Ticket) {
+        Self::create(id, features, opts, Arc::new(AtomicUsize::new(1)))
+    }
+
+    /// True once the request's deadline has passed.
+    pub fn expired_at(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+
+    /// Microseconds spent queued as of `now`.
+    pub fn waited_us(&self, now: Instant) -> u64 {
+        now.saturating_duration_since(self.enqueued_at).as_micros() as u64
+    }
+
+    /// Claim the request for execution (see [`Lifecycle::try_dispatch`]).
+    pub(crate) fn try_dispatch(&self) -> bool {
+        self.lifecycle.try_dispatch()
+    }
+
+    pub(crate) fn is_cancelled(&self) -> bool {
+        self.lifecycle.is_cancelled()
+    }
+
+    pub(crate) fn is_expired(&self) -> bool {
+        self.lifecycle.is_expired()
+    }
+
+    /// Resolve the request: release the admission slot, then deliver
+    /// the result (ignored if the ticket is gone). The slot frees
+    /// *before* the send so a caller that observes the result also
+    /// observes the freed capacity.
+    pub(crate) fn resolve(self, result: ServeResult) {
+        self.lifecycle.release_slot();
+        let _ = self.resp_tx.send(result);
+    }
+}
+
+impl Drop for InferenceRequest {
+    /// Whatever path a request leaves the queue by — resolved,
+    /// swept as cancelled/expired, or torn down with the server — its
+    /// admission slot is released exactly once.
+    fn drop(&mut self) {
+        self.lifecycle.release_slot();
+    }
+}
+
+/// Owned handle to one in-flight request — what `submit`/`submit_with`
+/// return instead of a bare channel receiver.
+///
+/// * [`wait`](Self::wait) blocks for the result. On a request with a
+///   deadline it blocks *at most until the deadline*: if the request
+///   is still queued then, the ticket expires it itself — the waiter
+///   gets [`ServeError::DeadlineExceeded`] on time and the queue slot
+///   frees immediately, even while the worker is deep in a long batch.
+///   (A request *dispatched* before its deadline runs to completion:
+///   the deadline bounds queueing, not compute.)
+/// * [`wait_timeout`](Self::wait_timeout) / [`try_wait`](Self::try_wait)
+///   poll without giving the ticket up, applying the same client-side
+///   expiry once the deadline is due.
+/// * [`cancel`](Self::cancel) withdraws the request if it has not been
+///   dispatched to the backend yet; its queue slot frees immediately.
+/// * Dropping an unresolved ticket cancels the request the same way —
+///   an abandoned submission cannot occupy the bounded queue.
+#[derive(Debug)]
+pub struct Ticket {
+    id: u64,
+    rx: Receiver<ServeResult>,
+    lifecycle: Arc<Lifecycle>,
+    deadline: Option<Instant>,
+    enqueued_at: Instant,
+}
+
+impl Ticket {
+    /// Server-assigned request id (echoed in the response).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// The typed expiry error, with the queueing time the request had
+    /// accrued when its deadline hit.
+    fn deadline_error(&self) -> ServeError {
+        let waited_us = self
+            .deadline
+            .map(|d| d.saturating_duration_since(self.enqueued_at).as_micros() as u64)
+            .unwrap_or(0);
+        ServeError::DeadlineExceeded { waited_us }
+    }
+
+    /// Terminal state reached without a channel message, if any:
+    /// cancellation, or a client-side expiry (ours or a previous
+    /// call's).
+    fn local_terminal(&self) -> Option<ServeResult> {
+        if self.lifecycle.is_cancelled() {
+            return Some(Err(ServeError::Cancelled));
+        }
+        if self.lifecycle.is_expired() {
+            return Some(Err(self.deadline_error()));
+        }
+        None
+    }
+
+    /// If the deadline has passed and the request is still queued,
+    /// expire it now (the batcher's sweep would do the same at the
+    /// next batch formation; doing it ticket-side frees the admission
+    /// slot and resolves the waiter promptly).
+    fn expire_if_due(&self) -> bool {
+        matches!(self.deadline, Some(d) if Instant::now() >= d) && self.lifecycle.expire()
+    }
+
+    /// Block until the request resolves. Returns
+    /// [`ServeError::Cancelled`] if the ticket was cancelled,
+    /// [`ServeError::DeadlineExceeded`] once the deadline passes with
+    /// the request still queued, and [`ServeError::ChannelClosed`] if
+    /// the worker exited with the request still in flight.
+    pub fn wait(self) -> ServeResult {
+        if let Some(r) = self.local_terminal() {
+            return r;
+        }
+        if let Some(d) = self.deadline {
+            // Bounded wait: past the deadline a still-queued request is
+            // expired client-side instead of waiting for the sweep.
+            loop {
+                let now = Instant::now();
+                if now >= d {
+                    break;
+                }
+                match self.rx.recv_timeout(d - now) {
+                    Ok(r) => return r,
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => return Err(ServeError::ChannelClosed),
+                }
+            }
+            if self.lifecycle.expire() {
+                return Err(self.deadline_error());
+            }
+            // Dispatched (or already resolved) before the deadline hit:
+            // the real result is coming.
+        }
+        match self.rx.recv() {
+            Ok(result) => result,
+            Err(_) => Err(ServeError::ChannelClosed),
+        }
+    }
+
+    /// Wait up to `timeout`; `None` means the request is still in
+    /// flight and the ticket remains waitable.
+    pub fn wait_timeout(&self, timeout: Duration) -> Option<ServeResult> {
+        if let Some(r) = self.local_terminal() {
+            return Some(r);
+        }
+        if self.expire_if_due() {
+            return Some(Err(self.deadline_error()));
+        }
+        // Cap the block at the deadline so expiry resolves on time; a
+        // dispatched request just reports "still in flight" early.
+        let now = Instant::now();
+        let effective = match self.deadline {
+            Some(d) if d < now + timeout => d.saturating_duration_since(now),
+            _ => timeout,
+        };
+        match self.rx.recv_timeout(effective) {
+            Ok(r) => Some(r),
+            Err(RecvTimeoutError::Timeout) => {
+                if self.expire_if_due() {
+                    return Some(Err(self.deadline_error()));
+                }
+                self.local_terminal()
+            }
+            Err(RecvTimeoutError::Disconnected) => Some(Err(ServeError::ChannelClosed)),
+        }
+    }
+
+    /// Non-blocking poll; `None` means still in flight. A delivered
+    /// result is preferred over local state, so a response that raced
+    /// a concurrent cancel attempt is not lost.
+    pub fn try_wait(&self) -> Option<ServeResult> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(TryRecvError::Disconnected) => Some(Err(ServeError::ChannelClosed)),
+            Err(TryRecvError::Empty) => {
+                if let Some(r) = self.local_terminal() {
+                    return Some(r);
+                }
+                if self.expire_if_due() {
+                    return Some(Err(self.deadline_error()));
+                }
+                None
+            }
+        }
+    }
+
+    /// Withdraw the request. Returns `true` if it was still queued (it
+    /// will never reach the backend; its queue slot is free as of this
+    /// call), `false` if it was already dispatched, resolved, expired,
+    /// or cancelled.
+    pub fn cancel(&self) -> bool {
+        self.lifecycle.cancel()
+    }
+}
+
+impl Drop for Ticket {
+    fn drop(&mut self) {
+        // Cancels only if still queued — a resolved or dispatched
+        // request is unaffected (CAS fails).
+        self.lifecycle.cancel();
+    }
 }
 
 /// The server's answer.
@@ -49,38 +456,182 @@ pub struct InferenceResponse {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
+
+    fn resp(id: u64) -> InferenceResponse {
+        InferenceResponse {
+            id,
+            logits: vec![0.0; 10],
+            prediction: 3,
+            queue_us: 5,
+            compute_us: 10,
+            batch_size: 1,
+            sim_cycles: None,
+        }
+    }
 
     #[test]
-    fn request_response_plumbing() {
-        let (tx, rx) = channel();
-        let req = InferenceRequest {
-            id: 7,
-            features: vec![0.0; 784],
-            resp_tx: tx,
-            enqueued_at: Instant::now(),
-        };
-        req.resp_tx
-            .send(Ok(InferenceResponse {
-                id: req.id,
-                logits: vec![0.0; 10],
-                prediction: 3,
-                queue_us: 5,
-                compute_us: 10,
-                batch_size: 1,
-                sim_cycles: None,
-            }))
-            .unwrap();
-        let resp = rx.recv().unwrap().unwrap();
-        assert_eq!(resp.id, 7);
-        assert_eq!(resp.prediction, 3);
+    fn request_resolves_through_its_ticket() {
+        let (req, ticket) = InferenceRequest::fresh(7, vec![0.0; 784], SubmitOptions::default());
+        assert_eq!(ticket.id(), 7);
+        assert!(ticket.try_wait().is_none(), "nothing resolved yet");
+        assert!(req.try_dispatch());
+        let id = req.id;
+        req.resolve(Ok(resp(id)));
+        let got = ticket.wait().unwrap();
+        assert_eq!(got.id, 7);
+        assert_eq!(got.prediction, 3);
     }
 
     #[test]
     fn errors_travel_the_same_channel() {
-        let (tx, rx) = channel();
-        let failed: ServeResult = Err(super::super::error::ServeError::Stopped);
-        tx.send(failed).unwrap();
-        assert!(rx.recv().unwrap().is_err());
+        let (req, ticket) = InferenceRequest::fresh(1, vec![], SubmitOptions::default());
+        assert!(req.try_dispatch());
+        req.resolve(Err(ServeError::Stopped));
+        assert_eq!(ticket.wait().unwrap_err(), ServeError::Stopped);
+    }
+
+    #[test]
+    fn cancel_wins_only_before_dispatch() {
+        let (req, ticket) = InferenceRequest::fresh(2, vec![0.0], SubmitOptions::default());
+        assert!(ticket.cancel(), "queued request is cancellable");
+        assert!(!ticket.cancel(), "second cancel is a no-op");
+        assert!(!req.try_dispatch(), "cancelled request must not dispatch");
+        assert!(req.is_cancelled());
+        assert_eq!(ticket.wait().unwrap_err(), ServeError::Cancelled);
+
+        let (req, ticket) = InferenceRequest::fresh(3, vec![0.0], SubmitOptions::default());
+        assert!(req.try_dispatch());
+        assert!(!ticket.cancel(), "dispatched request is past cancelling");
+    }
+
+    #[test]
+    fn dropping_an_unresolved_ticket_cancels_a_queued_request() {
+        let (req, ticket) = InferenceRequest::fresh(4, vec![0.0], SubmitOptions::default());
+        drop(ticket);
+        assert!(req.is_cancelled());
+        assert!(!req.try_dispatch());
+
+        // …but not a dispatched one.
+        let (req, ticket) = InferenceRequest::fresh(5, vec![0.0], SubmitOptions::default());
+        assert!(req.try_dispatch());
+        drop(ticket);
+        assert!(!req.is_cancelled());
+    }
+
+    #[test]
+    fn slot_released_exactly_once_on_every_path() {
+        let depth = Arc::new(AtomicUsize::new(3));
+        // Path 1: resolve.
+        let (req, _t) =
+            InferenceRequest::create(0, vec![], SubmitOptions::default(), Arc::clone(&depth));
+        req.try_dispatch();
+        req.resolve(Ok(resp(0)));
+        assert_eq!(depth.load(Ordering::SeqCst), 2);
+        // Path 2: cancel releases immediately; the later request drop
+        // must not double-release.
+        let (req, t) =
+            InferenceRequest::create(1, vec![], SubmitOptions::default(), Arc::clone(&depth));
+        assert!(t.cancel());
+        assert_eq!(depth.load(Ordering::SeqCst), 1);
+        drop(req);
+        assert_eq!(depth.load(Ordering::SeqCst), 1);
+        // Path 3: plain drop (server teardown).
+        let (req, _t) =
+            InferenceRequest::create(2, vec![], SubmitOptions::default(), Arc::clone(&depth));
+        drop(req);
+        assert_eq!(depth.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn deadlines_are_absolute_and_observable() {
+        let now = Instant::now();
+        let (req, _t) = InferenceRequest::fresh(
+            0,
+            vec![],
+            SubmitOptions::default().with_deadline(Duration::ZERO),
+        );
+        assert!(req.expired_at(now + Duration::from_millis(1)));
+        let (req, _t) = InferenceRequest::fresh(
+            1,
+            vec![],
+            SubmitOptions::default().with_deadline(Duration::from_secs(3600)),
+        );
+        assert!(!req.expired_at(now));
+        let (req, _t) = InferenceRequest::fresh(2, vec![], SubmitOptions::default());
+        assert!(!req.expired_at(now + Duration::from_secs(3600)), "no deadline, never expires");
+    }
+
+    #[test]
+    fn wait_timeout_polls_without_consuming() {
+        let (req, ticket) = InferenceRequest::fresh(9, vec![], SubmitOptions::default());
+        assert!(ticket.wait_timeout(Duration::from_millis(1)).is_none());
+        req.try_dispatch();
+        let id = req.id;
+        req.resolve(Ok(resp(id)));
+        let got = ticket
+            .wait_timeout(Duration::from_secs(5))
+            .expect("resolved")
+            .unwrap();
+        assert_eq!(got.id, 9);
+    }
+
+    #[test]
+    fn ticket_expires_itself_at_the_deadline() {
+        let (req, ticket) = InferenceRequest::fresh(
+            6,
+            vec![],
+            SubmitOptions::default().with_deadline(Duration::from_millis(5)),
+        );
+        let t0 = Instant::now();
+        match ticket.wait().unwrap_err() {
+            ServeError::DeadlineExceeded { .. } => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        // The corpse is observably expired and can no longer dispatch.
+        assert!(req.is_expired());
+        assert!(!req.try_dispatch());
+    }
+
+    #[test]
+    fn try_wait_expires_a_due_request_without_blocking() {
+        let (req, ticket) = InferenceRequest::fresh(
+            7,
+            vec![],
+            SubmitOptions::default().with_deadline(Duration::ZERO),
+        );
+        match ticket.try_wait() {
+            Some(Err(ServeError::DeadlineExceeded { .. })) => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+        assert!(req.is_expired());
+        // A ticket cannot cancel what already expired.
+        assert!(!ticket.cancel());
+    }
+
+    #[test]
+    fn dispatched_request_outlives_its_deadline() {
+        // The deadline bounds *queueing*, not compute: a request
+        // dispatched before it expires runs to completion.
+        let (req, ticket) = InferenceRequest::fresh(
+            8,
+            vec![],
+            SubmitOptions::default().with_deadline(Duration::from_millis(2)),
+        );
+        assert!(req.try_dispatch());
+        std::thread::sleep(Duration::from_millis(5));
+        let id = req.id;
+        req.resolve(Ok(resp(id)));
+        assert!(ticket.wait().is_ok());
+    }
+
+    #[test]
+    fn default_options_are_interactive_no_deadline() {
+        let o = SubmitOptions::default();
+        assert_eq!(o.priority, Priority::Interactive);
+        assert!(o.deadline.is_none());
+        let b = SubmitOptions::bulk().with_deadline(Duration::from_millis(5));
+        assert_eq!(b.priority, Priority::Bulk);
+        assert!(b.deadline.is_some());
     }
 }

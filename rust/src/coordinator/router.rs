@@ -9,15 +9,23 @@
 //! * [`RoutePolicy::LeastOutstanding`] — join-the-shortest-queue on
 //!   (submitted − answered), the standard router heuristic for
 //!   heterogeneous workers (cf. vLLM's router).
+//! * [`RoutePolicy::ModeledBacklog`] — join-the-shortest-queue on the
+//!   **modeled** per-shard backlogs sharded simulator workers report
+//!   through [`ExecutionBackend::shard_depths`]. Host-side outstanding
+//!   counts go blind behind a device model: responses return at host
+//!   speed while the modeled device still owes cycles, so
+//!   `LeastOutstanding` reads every worker as idle. The modeled gauge
+//!   keeps the skew visible. Workers that report no depths score 0 and
+//!   fall back to the outstanding tie-break, so the policy degrades
+//!   gracefully to `LeastOutstanding` for single-device backends.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 
 use super::backend::ExecutionBackend;
-use super::error::{ServeError, ServeResult};
+use super::error::ServeError;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::InferenceResponse;
+use super::request::{InferenceResponse, SubmitOptions, Ticket};
 use super::server::{Server, ServerConfig};
 
 /// Worker-selection policy.
@@ -27,6 +35,10 @@ pub enum RoutePolicy {
     RoundRobin,
     /// Pick the worker with the fewest outstanding requests.
     LeastOutstanding,
+    /// Pick the worker whose backend reports the smallest summed
+    /// modeled backlog (`shard_depths`), breaking ties on host-side
+    /// outstanding counts.
+    ModeledBacklog,
 }
 
 struct Worker {
@@ -99,24 +111,41 @@ impl Router {
                 .min_by_key(|(_, w)| w.outstanding())
                 .map(|(i, _)| i)
                 .unwrap(),
+            RoutePolicy::ModeledBacklog => self
+                .workers
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, w)| (w.metrics.shard_backlog_fast(), w.outstanding()))
+                .map(|(i, _)| i)
+                .unwrap(),
         }
     }
 
-    /// Submit a request; returns (worker index, response receiver).
-    pub fn submit(
+    /// Submit with explicit QoS options; returns (worker index,
+    /// ticket). Admission rejections ([`ServeError::Overloaded`]) come
+    /// from the chosen worker's bounded queue — the router does not
+    /// retry another worker, so backpressure stays visible to the
+    /// caller.
+    pub fn submit_with(
         &self,
         features: Vec<f32>,
-    ) -> Result<(usize, Receiver<ServeResult>), ServeError> {
+        opts: SubmitOptions,
+    ) -> Result<(usize, Ticket), ServeError> {
         let i = self.pick();
-        let rx = self.workers[i].server.submit(features)?;
+        let ticket = self.workers[i].server.submit_with(features, opts)?;
         self.workers[i].submitted.fetch_add(1, Ordering::Relaxed);
-        Ok((i, rx))
+        Ok((i, ticket))
+    }
+
+    /// Submit with default options; returns (worker index, ticket).
+    pub fn submit(&self, features: Vec<f32>) -> Result<(usize, Ticket), ServeError> {
+        self.submit_with(features, SubmitOptions::default())
     }
 
     /// Submit and wait.
     pub fn infer(&self, features: Vec<f32>) -> Result<InferenceResponse, ServeError> {
-        let (_, rx) = self.submit(features)?;
-        rx.recv().map_err(|_| ServeError::ChannelClosed)?
+        let (_, ticket) = self.submit(features)?;
+        ticket.wait()
     }
 
     /// Per-worker outstanding counts (diagnostics).
@@ -179,15 +208,15 @@ mod tests {
         )
         .unwrap();
         let mut counts = [0usize; 3];
-        let rxs: Vec<_> = (0..30)
+        let tickets: Vec<_> = (0..30)
             .map(|_| {
-                let (i, rx) = router.submit(vec![0.1; 784]).unwrap();
+                let (i, t) = router.submit(vec![0.1; 784]).unwrap();
                 counts[i] += 1;
-                rx
+                t
             })
             .collect();
-        for rx in rxs {
-            assert!(!rx.recv().unwrap().unwrap().logits.is_empty());
+        for t in tickets {
+            assert!(!t.wait().unwrap().logits.is_empty());
         }
         assert_eq!(counts, [10, 10, 10]);
         let metrics = router.shutdown();
@@ -204,16 +233,16 @@ mod tests {
         .unwrap();
         // Submit a burst without receiving; JSQ must not send everything
         // to one worker.
-        let rxs: Vec<_> = (0..40)
+        let tickets: Vec<_> = (0..40)
             .map(|_| router.submit(vec![0.2; 784]).unwrap())
             .collect();
         let mut counts = [0usize; 2];
-        for (i, _) in &rxs {
+        for (i, _) in &tickets {
             counts[*i] += 1;
         }
         assert!(counts[0] >= 10 && counts[1] >= 10, "{counts:?}");
-        for (_, rx) in rxs {
-            rx.recv().unwrap().unwrap();
+        for (_, t) in tickets {
+            t.wait().unwrap();
         }
         router.shutdown();
     }
@@ -230,6 +259,31 @@ mod tests {
         let a = router.infer(vec![0.3; 784]).unwrap();
         let b = router.infer(vec![0.3; 784]).unwrap();
         assert_eq!(a.prediction, b.prediction);
+        router.shutdown();
+    }
+
+    #[test]
+    fn modeled_backlog_without_depths_degrades_to_outstanding() {
+        // Reference backends report no shard depths, so every worker
+        // scores 0 and the outstanding tie-break decides: a burst must
+        // still spread instead of piling on worker 0.
+        let router = Router::start(
+            vec![ReferenceBackend::boxed(net(3)), ReferenceBackend::boxed(net(4))],
+            config(),
+            RoutePolicy::ModeledBacklog,
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..40)
+            .map(|_| router.submit(vec![0.2; 784]).unwrap())
+            .collect();
+        let mut counts = [0usize; 2];
+        for (i, _) in &tickets {
+            counts[*i] += 1;
+        }
+        assert!(counts[0] >= 10 && counts[1] >= 10, "{counts:?}");
+        for (_, t) in tickets {
+            t.wait().unwrap();
+        }
         router.shutdown();
     }
 

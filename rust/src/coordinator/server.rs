@@ -1,13 +1,22 @@
 //! The serving loop: a worker thread owning a boxed
-//! [`ExecutionBackend`], fed through the dynamic batcher.
+//! [`ExecutionBackend`], fed through the QoS-aware dynamic batcher.
 //!
-//! Failure is typed end to end: malformed requests are rejected at
-//! [`Server::submit`] with a [`ServeError`] (they never reach the
-//! worker thread), and backend failures arrive on the response channel
-//! as the `Err` arm of a [`ServeResult`].
+//! The queue is a real admission point. [`Server::submit_with`]
+//! validates the request *and* admits it against
+//! [`ServerConfig::queue_capacity`]: when the bound is reached the
+//! caller gets a synchronous [`ServeError::Overloaded`] instead of an
+//! unbounded queue quietly growing — memory and tail latency stay
+//! bounded by construction. Admitted requests resolve through an owned
+//! [`Ticket`]; the batcher drops expired requests before they reach
+//! the backend and discards cancelled ones.
+//!
+//! Failure stays typed end to end: malformed requests are rejected at
+//! submit with a [`ServeError`] (they never reach the worker thread),
+//! and backend failures arrive on the ticket as the `Err` arm of a
+//! [`ServeResult`](super::error::ServeResult).
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -15,13 +24,30 @@ use std::time::Instant;
 use anyhow::ensure;
 
 use super::backend::ExecutionBackend;
-use super::batcher::BatchPolicy;
-use super::error::{ServeError, ServeResult};
+use super::batcher::{BatchPolicy, BatchQueue};
+use super::error::ServeError;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{InferenceRequest, InferenceResponse};
+use super::request::{InferenceRequest, InferenceResponse, Priority, SubmitOptions, Ticket};
 use crate::bf16::Matrix;
 use crate::nn::metrics::argmax;
 use crate::util::par::Parallelism;
+
+/// Rows of one dynamic batch each kernel worker can chew before extra
+/// rows stop buying parallelism and only add queue latency — the
+/// pool-aware batch ceiling is `workers × ROWS_PER_WORKER` (see
+/// [`ServerConfig::pool_sized_batches`]).
+pub const ROWS_PER_WORKER: usize = 32;
+
+/// The in-flight count at which Bulk submissions stop being admitted:
+/// capacity minus a reserve of one eighth (at least one slot) kept for
+/// Interactive traffic. A capacity of 1 has no slot to spare — there
+/// the single slot stays first-come-first-served.
+fn bulk_admission_limit(capacity: usize) -> usize {
+    if capacity <= 1 {
+        return capacity;
+    }
+    capacity - (capacity / 8).clamp(1, capacity - 1)
+}
 
 /// Server configuration.
 #[derive(Debug, Clone, Copy)]
@@ -36,6 +62,24 @@ pub struct ServerConfig {
     /// constructs eagerly — so no request, not even the first, pays
     /// thread-spawn cost.
     pub parallelism: Parallelism,
+    /// Bound on in-flight requests (admitted but not yet resolved,
+    /// cancelled, or expired). `None` (default) keeps the historical
+    /// unbounded queue; `Some(n)` makes `submit` return
+    /// [`ServeError::Overloaded`] once `n` requests are in flight.
+    /// `Some(0)` is rejected at [`Server::start`]. Admission is
+    /// priority-aware: the top eighth of the capacity (at least one
+    /// slot, for capacities ≥ 2) is reserved for
+    /// [`Priority::Interactive`] traffic, so queued bulk backfill can
+    /// fill the batcher but never starve interactive *admission*.
+    pub queue_capacity: Option<usize>,
+    /// Clamp the dynamic batch to the worker pool's budget
+    /// (`parallelism` workers × [`ROWS_PER_WORKER`] rows): rows beyond
+    /// what the pool can process concurrently only add queue latency
+    /// for host-pool backends. Off by default — device-model backends
+    /// (the simulator) amortize per-command overheads over *bigger*
+    /// batches and run no host kernels, so the clamp would cost them
+    /// modeled throughput.
+    pub pool_sized_batches: bool,
 }
 
 impl Default for ServerConfig {
@@ -43,6 +87,8 @@ impl Default for ServerConfig {
         Self {
             policy: BatchPolicy::default(),
             parallelism: Parallelism::default(),
+            queue_capacity: None,
+            pool_sized_batches: false,
         }
     }
 }
@@ -53,6 +99,11 @@ pub struct Server {
     handle: Option<JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// In-flight gauge: incremented at admission, decremented exactly
+    /// once per request by its lifecycle (resolution, cancellation,
+    /// expiry, or teardown).
+    depth: Arc<AtomicUsize>,
+    queue_capacity: Option<usize>,
     /// Input width every request must match. `0` means "not yet known":
     /// the backend declared no width, so the first accepted request
     /// pins it (batches must be rectangular). Shared with the worker,
@@ -65,8 +116,11 @@ pub struct Server {
 
 impl Server {
     /// Start the worker thread over any backend. Validates the batch
-    /// policy, clamps it to the backend's `max_batch`, runs the
-    /// backend's [`warm`](ExecutionBackend::warm) hook, and warms the
+    /// policy and queue capacity, clamps the policy to the backend's
+    /// `max_batch` (and, when
+    /// [`ServerConfig::pool_sized_batches`] is on, to the worker
+    /// pool's row budget), runs the backend's
+    /// [`warm`](ExecutionBackend::warm) hook, and warms the
     /// process-wide kernel worker pool (a no-op for serial budgets and
     /// on every call after the first), so batch dispatch never spawns.
     pub fn start(
@@ -74,6 +128,11 @@ impl Server {
         config: ServerConfig,
     ) -> Result<Self, ServeError> {
         config.policy.validate()?;
+        if config.queue_capacity == Some(0) {
+            return Err(ServeError::InvalidConfig(
+                "queue_capacity of 0 admits no requests at all".into(),
+            ));
+        }
         let mut policy = config.policy;
         if let Some(cap) = backend.max_batch() {
             if cap == 0 {
@@ -84,6 +143,13 @@ impl Server {
             }
             // Shape-specialized backends cap the dynamic batch.
             policy.max_batch = policy.max_batch.min(cap);
+        }
+        if config.pool_sized_batches {
+            // The pool-aware batcher (ROADMAP follow-on): don't hold a
+            // batch open for more rows than the kernel pool can chew
+            // concurrently.
+            let workers = config.parallelism.max_workers().max(1);
+            policy.max_batch = policy.max_batch.min(workers * ROWS_PER_WORKER).max(1);
         }
         let declared_width = backend.input_width();
         let expected_width = Arc::new(AtomicUsize::new(declared_width.unwrap_or(0)));
@@ -104,11 +170,12 @@ impl Server {
         let metrics_worker = Arc::clone(&metrics);
         let parallelism = config.parallelism;
         let handle = std::thread::spawn(move || {
+            let mut queue = BatchQueue::new(rx);
             // Once any batch of the pinned width has succeeded, the pin
             // is confirmed and never reset: a later transient backend
             // fault must not let a stray mis-sized request steal it.
             let mut width_confirmed = false;
-            while let Some(batch) = policy.next_batch(&rx) {
+            while let Some(batch) = policy.next_batch(&mut queue, &metrics_worker) {
                 let closed_at = Instant::now();
                 // `submit` rejects width mismatches, so batches are
                 // normally rectangular — but when an undeclared width is
@@ -133,9 +200,10 @@ impl Server {
                         .partition(|req| req.features.len() == width);
                     for req in mismatched {
                         metrics_worker.record_failures(1);
-                        let _ = req.resp_tx.send(Err(ServeError::WidthMismatch {
+                        let got = req.features.len();
+                        req.resolve(Err(ServeError::WidthMismatch {
                             expected: width,
-                            got: req.features.len(),
+                            got,
                         }));
                     }
                     keep
@@ -173,7 +241,7 @@ impl Server {
                     Ok(out) => out,
                     Err(e) => {
                         // Also log server-side: a client that dropped its
-                        // receiver must not make the fault invisible.
+                        // ticket must not make the fault invisible.
                         eprintln!("[beanna::serve] backend '{tag}' error: {e:#}");
                         let err = ServeError::Backend {
                             backend: tag.clone(),
@@ -189,7 +257,7 @@ impl Server {
                             }
                         }
                         for req in batch {
-                            let _ = req.resp_tx.send(Err(err.clone()));
+                            req.resolve(Err(err.clone()));
                         }
                         continue;
                     }
@@ -213,8 +281,9 @@ impl Server {
                 width_confirmed = true;
                 for (r, req) in batch.into_iter().enumerate() {
                     let logits = out.logits.row(r).to_vec();
-                    let _ = req.resp_tx.send(Ok(InferenceResponse {
-                        id: req.id,
+                    let id = req.id;
+                    req.resolve(Ok(InferenceResponse {
+                        id,
                         prediction: argmax(&logits),
                         logits,
                         queue_us: queue_us[r],
@@ -230,6 +299,8 @@ impl Server {
             handle: Some(handle),
             metrics,
             next_id: AtomicU64::new(0),
+            depth: Arc::new(AtomicUsize::new(0)),
+            queue_capacity: config.queue_capacity,
             expected_width,
         })
     }
@@ -265,31 +336,65 @@ impl Server {
         }
     }
 
-    /// Submit asynchronously; the response (or typed error) arrives on
-    /// the returned receiver. Requests whose width doesn't match the
-    /// served model are rejected here — before they can reach the
-    /// worker thread.
-    pub fn submit(&self, features: Vec<f32>) -> Result<Receiver<ServeResult>, ServeError> {
+    /// Requests currently in flight (admitted, not yet resolved,
+    /// cancelled, or expired).
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Acquire)
+    }
+
+    /// Submit with explicit QoS options; the request resolves through
+    /// the returned [`Ticket`]. Rejections are synchronous and typed:
+    /// width mismatches ([`ServeError::WidthMismatch`]) and admission
+    /// overflow ([`ServeError::Overloaded`]) never reach the worker
+    /// thread.
+    pub fn submit_with(
+        &self,
+        features: Vec<f32>,
+        opts: SubmitOptions,
+    ) -> Result<Ticket, ServeError> {
         self.check_width(features.len())?;
-        let (resp_tx, resp_rx) = channel();
+        // Admission: claim a slot, give it back if over the bound. The
+        // momentary overshoot of a losing racer is bounded by the
+        // number of concurrent submitters and is always rolled back.
+        // Bulk stops short of the full bound (see
+        // [`ServerConfig::queue_capacity`]): without the headroom, a
+        // backfill flood would hold every slot and interactive traffic
+        // could never even be admitted for the batcher to prioritize.
+        let prev = self.depth.fetch_add(1, Ordering::AcqRel);
+        if let Some(cap) = self.queue_capacity {
+            let limit = match opts.priority {
+                Priority::Interactive => cap,
+                Priority::Bulk => bulk_admission_limit(cap),
+            };
+            if prev >= limit {
+                self.depth.fetch_sub(1, Ordering::AcqRel);
+                self.metrics.record_rejected(1);
+                return Err(ServeError::Overloaded {
+                    depth: prev,
+                    capacity: limit,
+                });
+            }
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .as_ref()
-            .ok_or(ServeError::Stopped)?
-            .send(InferenceRequest {
-                id,
-                features,
-                resp_tx,
-                enqueued_at: Instant::now(),
-            })
-            .map_err(|_| ServeError::Stopped)?;
-        Ok(resp_rx)
+        let (req, ticket) =
+            InferenceRequest::create(id, features, opts, Arc::clone(&self.depth));
+        // On either Stopped path the undelivered `req` is dropped,
+        // which rolls the admission slot back.
+        let tx = self.tx.as_ref().ok_or(ServeError::Stopped)?;
+        tx.send(req).map_err(|_| ServeError::Stopped)?;
+        Ok(ticket)
+    }
+
+    /// Submit with default options (no deadline, interactive
+    /// priority); the response (or typed error) resolves through the
+    /// returned [`Ticket`].
+    pub fn submit(&self, features: Vec<f32>) -> Result<Ticket, ServeError> {
+        self.submit_with(features, SubmitOptions::default())
     }
 
     /// Submit and wait (convenience).
     pub fn infer(&self, features: Vec<f32>) -> Result<InferenceResponse, ServeError> {
-        let rx = self.submit(features)?;
-        rx.recv().map_err(|_| ServeError::ChannelClosed)?
+        self.submit(features)?.wait()
     }
 
     /// Live metrics handle.
@@ -325,7 +430,8 @@ impl Drop for Server {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::ReferenceBackend;
+    use crate::coordinator::backend::{BatchOutput, ReferenceBackend};
+    use crate::coordinator::request::Priority;
     use crate::nn::{Network, NetworkConfig, Precision};
     use std::time::Duration;
 
@@ -349,6 +455,7 @@ mod tests {
         assert_eq!(m.requests, 1);
         assert_eq!(m.batches, 1);
         assert_eq!(m.failures, 0);
+        assert_eq!(m.rejected, 0);
     }
 
     #[test]
@@ -364,12 +471,12 @@ mod tests {
             },
         )
         .unwrap();
-        let rxs: Vec<_> = (0..8)
+        let tickets: Vec<_> = (0..8)
             .map(|i| server.submit(vec![i as f32 / 8.0; 784]).unwrap())
             .collect();
-        let resps: Vec<_> = rxs
+        let resps: Vec<_> = tickets
             .into_iter()
-            .map(|rx| rx.recv().unwrap().unwrap())
+            .map(|t| t.wait().unwrap())
             .collect();
         assert!(resps.iter().all(|r| r.logits.len() == 10));
         // At least some requests must have shared a batch.
@@ -403,11 +510,11 @@ mod tests {
     #[test]
     fn shutdown_drains() {
         let server = Server::start(tiny_backend(), ServerConfig::default()).unwrap();
-        let rx = server.submit(vec![0.0; 784]).unwrap();
+        let ticket = server.submit(vec![0.0; 784]).unwrap();
         let m = server.shutdown();
         // The queued request is served before the worker exits.
         assert_eq!(m.requests, 1);
-        assert!(rx.recv().unwrap().is_ok());
+        assert!(ticket.wait().is_ok());
     }
 
     #[test]
@@ -446,6 +553,100 @@ mod tests {
     }
 
     #[test]
+    fn bulk_admission_reserve_math() {
+        assert_eq!(bulk_admission_limit(1), 1, "no slot to spare");
+        assert_eq!(bulk_admission_limit(2), 1);
+        assert_eq!(bulk_admission_limit(8), 7);
+        assert_eq!(bulk_admission_limit(32), 28);
+        assert_eq!(bulk_admission_limit(1024), 896);
+    }
+
+    #[test]
+    fn zero_queue_capacity_is_a_config_error() {
+        let err = Server::start(
+            tiny_backend(),
+            ServerConfig {
+                queue_capacity: Some(0),
+                ..Default::default()
+            },
+        )
+        .err()
+        .expect("queue_capacity 0 must be rejected");
+        assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
+    }
+
+    #[test]
+    fn queue_depth_tracks_in_flight_and_drains() {
+        let server = Server::start(
+            tiny_backend(),
+            ServerConfig {
+                queue_capacity: Some(16),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..4)
+            .map(|_| server.submit(vec![0.1; 784]).unwrap())
+            .collect();
+        assert!(server.queue_depth() <= 4);
+        for t in tickets {
+            t.wait().unwrap();
+        }
+        // All resolved: every admission slot is back.
+        assert_eq!(server.queue_depth(), 0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn submit_with_deadline_and_priority_round_trips() {
+        let server = Server::start(tiny_backend(), ServerConfig::default()).unwrap();
+        let t = server
+            .submit_with(
+                vec![0.2; 784],
+                SubmitOptions {
+                    deadline: Some(Duration::from_secs(30)),
+                    priority: Priority::Bulk,
+                },
+            )
+            .unwrap();
+        assert!(t.wait().is_ok(), "a generous deadline must not expire");
+        server.shutdown();
+    }
+
+    #[test]
+    fn pool_sized_batches_clamp_to_the_worker_budget() {
+        // Two fixed workers → the dynamic batch must never exceed
+        // 2 × ROWS_PER_WORKER even though the policy asks for 4096 and
+        // the queue is deep.
+        let server = Server::start(
+            tiny_backend(),
+            ServerConfig {
+                policy: BatchPolicy {
+                    max_batch: 4096,
+                    max_wait: Duration::from_millis(40),
+                },
+                parallelism: Parallelism::fixed(2),
+                pool_sized_batches: true,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..(2 * ROWS_PER_WORKER + 8))
+            .map(|_| server.submit(vec![0.3; 784]).unwrap())
+            .collect();
+        let max_seen = tickets
+            .into_iter()
+            .map(|t| t.wait().unwrap().batch_size)
+            .max()
+            .unwrap();
+        assert!(
+            max_seen <= 2 * ROWS_PER_WORKER,
+            "batch of {max_seen} exceeds the pool budget"
+        );
+        server.shutdown();
+    }
+
+    #[test]
     fn pinned_width_unpins_after_backend_rejects_it() {
         // Declares no width, but only actually accepts 64-wide rows.
         struct Picky;
@@ -454,9 +655,9 @@ mod tests {
                 &mut self,
                 batch: &Matrix,
                 _par: Parallelism,
-            ) -> anyhow::Result<super::super::backend::BatchOutput> {
+            ) -> anyhow::Result<BatchOutput> {
                 anyhow::ensure!(batch.cols == 64, "device wants 64-wide rows");
-                Ok(super::super::backend::BatchOutput {
+                Ok(BatchOutput {
                     logits: Matrix::zeros(batch.rows, 2),
                     sim_cycles: None,
                 })
@@ -494,12 +695,12 @@ mod tests {
                 &mut self,
                 batch: &Matrix,
                 _par: Parallelism,
-            ) -> anyhow::Result<super::super::backend::BatchOutput> {
+            ) -> anyhow::Result<BatchOutput> {
                 if !self.failed {
                     self.failed = true;
                     anyhow::bail!("transient hiccup");
                 }
-                Ok(super::super::backend::BatchOutput {
+                Ok(BatchOutput {
                     logits: Matrix::zeros(batch.rows, 1),
                     sim_cycles: None,
                 })
@@ -516,10 +717,10 @@ mod tests {
             },
         )
         .unwrap();
-        let rx_a = server.submit(vec![0.0; 100]).unwrap(); // pins 100
-        let rx_b = server.submit(vec![0.0; 100]).unwrap();
-        assert!(rx_a.recv().unwrap().is_err()); // fault → width unpinned
-        assert!(rx_b.recv().unwrap().is_ok()); // served via head fallback
+        let t_a = server.submit(vec![0.0; 100]).unwrap(); // pins 100
+        let t_b = server.submit(vec![0.0; 100]).unwrap();
+        assert!(t_a.wait().is_err()); // fault → width unpinned
+        assert!(t_b.wait().is_ok()); // served via head fallback
         // The width that actually served is stored back and confirmed —
         // a stray mis-sized request cannot steal the pin any more.
         assert_eq!(server.input_width(), Some(100));
@@ -542,12 +743,12 @@ mod tests {
                 &mut self,
                 batch: &Matrix,
                 _par: Parallelism,
-            ) -> anyhow::Result<super::super::backend::BatchOutput> {
+            ) -> anyhow::Result<BatchOutput> {
                 let mut logits = Matrix::zeros(batch.rows, 1);
                 for r in 0..batch.rows {
                     logits.row_mut(r)[0] = batch.row(r).iter().sum();
                 }
-                Ok(super::super::backend::BatchOutput {
+                Ok(BatchOutput {
                     logits,
                     sim_cycles: None,
                 })

@@ -15,11 +15,21 @@
 //!   FPGA resource/power/memory models ([`model`]), a PJRT runtime that
 //!   executes the AOT artifacts (`runtime`, behind the off-by-default
 //!   `pjrt` feature — it needs the non-vendored `xla` crate), and an
-//!   inference coordinator ([`coordinator`]): dynamic batching, replica
-//!   routing, and a multi-model [`Engine`](coordinator::Engine) facade
-//!   over an **open** [`ExecutionBackend`](coordinator::ExecutionBackend)
-//!   trait — any engine that can run a batch plugs into the same serving
-//!   stack, and every failure is a typed
+//!   inference coordinator ([`coordinator`]): a full request-lifecycle
+//!   API — every submission resolves through an owned
+//!   [`Ticket`](coordinator::Ticket), with per-request deadlines and
+//!   priorities ([`SubmitOptions`](coordinator::SubmitOptions)),
+//!   bounded admission
+//!   ([`ServerConfig::queue_capacity`](coordinator::ServerConfig::queue_capacity)
+//!   pushes overload back as typed
+//!   [`Overloaded`](coordinator::ServeError::Overloaded) errors),
+//!   QoS-aware dynamic batching (two-class priority queue, expiry
+//!   before dispatch), replica routing (including modeled-backlog
+//!   routing for sharded simulator workers), and a multi-model
+//!   [`Engine`](coordinator::Engine) facade over an **open**
+//!   [`ExecutionBackend`](coordinator::ExecutionBackend) trait — any
+//!   engine that can run a batch plugs into the same serving stack,
+//!   and every failure is a typed
 //!   [`ServeError`](coordinator::ServeError), never a sentinel.
 //!
 //! The functional hot paths (bf16 and XNOR-popcount matmuls) execute on

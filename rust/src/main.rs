@@ -20,7 +20,8 @@ use anyhow::{bail, Result};
 
 use beanna::bf16::format::render_fig1;
 use beanna::coordinator::{
-    BatchPolicy, Engine, EngineBuilder, RoutePolicy, ShardedSimulatorBackend, SimulatorBackend,
+    BatchPolicy, Engine, EngineBuilder, Priority, RoutePolicy, ServeError, ServeResult,
+    ShardedSimulatorBackend, SimulatorBackend, SubmitOptions,
 };
 use beanna::data::SynthMnist;
 use beanna::experiments;
@@ -159,7 +160,17 @@ fn parse_route(s: &str) -> Result<RoutePolicy> {
     Ok(match s {
         "rr" => RoutePolicy::RoundRobin,
         "jsq" => RoutePolicy::LeastOutstanding,
-        other => bail!("unknown routing policy '{other}' (use rr | jsq)"),
+        "backlog" => RoutePolicy::ModeledBacklog,
+        other => bail!("unknown routing policy '{other}' (use rr | jsq | backlog)"),
+    })
+}
+
+/// Parse a `--priority` value.
+fn parse_priority(s: &str) -> Result<Priority> {
+    Ok(match s {
+        "interactive" => Priority::Interactive,
+        "bulk" => Priority::Bulk,
+        other => bail!("unknown priority '{other}' (use interactive | bulk)"),
     })
 }
 
@@ -206,6 +217,12 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
         .opt("backend", "sim", "sim | ref | pjrt")
         .opt("model", "hybrid", "model weights variant: hybrid | fp")
         .opt("index", "0", "test-set image index")
+        .opt("priority", "interactive", "scheduling class: interactive | bulk")
+        .opt(
+            "timeout-ms",
+            "0",
+            "client-side wait budget; on timeout the ticket is cancelled (0 = wait forever)",
+        )
         .flag("show", "print the image as ASCII art");
     let p = spec.parse_from(args)?;
     let paths = ArtifactPaths::discover();
@@ -223,7 +240,26 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
     let builder = Engine::builder().batch_policy(BatchPolicy::unbatched());
     let engine =
         with_cli_backend(builder, p.get("backend").unwrap(), &paths, &model, 1, 1)?.build()?;
-    let resp = engine.infer(&model, test.images.row(idx).to_vec())?;
+    let opts = SubmitOptions {
+        priority: parse_priority(p.get("priority").unwrap())?,
+        deadline: None,
+    };
+    let ticket = engine.submit_with(&model, test.images.row(idx).to_vec(), opts)?;
+    let resp = match p.get_u64("timeout-ms")? {
+        0 => ticket.wait()?,
+        ms => match ticket.wait_timeout(std::time::Duration::from_millis(ms)) {
+            Some(result) => result?,
+            None => {
+                // Withdraw the request if it hasn't been dispatched yet;
+                // either way the client stops waiting.
+                let withdrawn = ticket.cancel();
+                bail!(
+                    "no response within {ms} ms (request {})",
+                    if withdrawn { "cancelled before dispatch" } else { "already dispatched" }
+                );
+            }
+        },
+    };
     println!(
         "label {}  predicted {}  (model {}, batch {}, compute {} µs{})",
         test.labels[idx],
@@ -252,7 +288,11 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         .opt("max-batch", "256", "batcher max batch")
         .opt("max-wait-ms", "2", "batcher deadline (ms)")
         .opt("replicas", "1", "devices per model's worker group")
-        .opt("route", "jsq", "routing policy within a group: rr | jsq")
+        .opt(
+            "route",
+            "jsq",
+            "routing policy within a group: rr | jsq | backlog",
+        )
         .opt(
             "shards",
             "1",
@@ -262,6 +302,22 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             "kernel-workers",
             "0",
             "matmul threads per batch (0 = all cores)",
+        )
+        .opt(
+            "queue-capacity",
+            "0",
+            "bound on in-flight requests per worker; overflow is a typed \
+             Overloaded rejection (0 = unbounded)",
+        )
+        .opt(
+            "deadline-ms",
+            "0",
+            "per-request deadline; requests still queued past it are dropped \
+             before dispatch (0 = none)",
+        )
+        .flag(
+            "pool-batch",
+            "clamp dynamic batches to the kernel pool's row budget",
         );
     let p = spec.parse_from(args)?;
     let paths = ArtifactPaths::discover();
@@ -286,7 +342,16 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             max_wait: std::time::Duration::from_millis(p.get_u64("max-wait-ms")?),
         })
         .route_policy(parse_route(p.get("route").unwrap())?)
-        .parallelism(parallelism);
+        .parallelism(parallelism)
+        .pool_sized_batches(p.flag("pool-batch"));
+    let queue_capacity = p.get_usize("queue-capacity")?;
+    if queue_capacity > 0 {
+        builder = builder.queue_capacity(queue_capacity);
+    }
+    let opts = match p.get_u64("deadline-ms")? {
+        0 => SubmitOptions::default(),
+        ms => SubmitOptions::default().with_deadline(std::time::Duration::from_millis(ms)),
+    };
     let kind = p.get("backend").unwrap();
     let shards = p.get_usize("shards")?.max(1);
     anyhow::ensure!(
@@ -299,22 +364,60 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     }
     let engine = builder.build()?;
     // Rotate requests across the named models: one shared submit
-    // surface, per-model worker groups underneath.
+    // surface, per-model worker groups underneath. With a bounded
+    // queue, `Overloaded` is real backpressure: settle the oldest
+    // in-flight ticket, then retry the rejected submission.
     let n = p.get_usize("requests")?.min(test.len());
-    let rxs: Vec<_> = (0..n)
-        .map(|i| {
-            let model = &models[i % models.len()];
-            engine
-                .submit(model, test.images.row(i).to_vec())
-                .map(|rx| (i, rx))
-        })
-        .collect::<Result<_, _>>()?;
+    let mut pending: std::collections::VecDeque<(usize, beanna::coordinator::Ticket)> =
+        std::collections::VecDeque::new();
     let mut correct = 0usize;
-    for (i, rx) in rxs {
-        let resp = rx.recv()??;
-        if resp.prediction == test.labels[i] {
-            correct += 1;
+    let mut served = 0usize;
+    let mut expired = 0usize;
+    let mut backpressure_hits = 0u64;
+    let settle = |result: ServeResult,
+                  label: usize,
+                  correct: &mut usize,
+                  served: &mut usize,
+                  expired: &mut usize|
+     -> Result<()> {
+        match result {
+            Ok(resp) => {
+                *served += 1;
+                if resp.prediction == label {
+                    *correct += 1;
+                }
+                Ok(())
+            }
+            Err(ServeError::DeadlineExceeded { .. }) => {
+                *expired += 1;
+                Ok(())
+            }
+            Err(e) => Err(e.into()),
         }
+    };
+    for i in 0..n {
+        let model = &models[i % models.len()];
+        loop {
+            match engine.submit_with(model, test.images.row(i).to_vec(), opts) {
+                Ok(ticket) => {
+                    pending.push_back((i, ticket));
+                    break;
+                }
+                Err(ServeError::Overloaded { .. }) => {
+                    backpressure_hits += 1;
+                    match pending.pop_front() {
+                        Some((j, t)) => {
+                            settle(t.wait(), test.labels[j], &mut correct, &mut served, &mut expired)?
+                        }
+                        None => std::thread::sleep(std::time::Duration::from_micros(200)),
+                    }
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+    }
+    for (i, t) in pending {
+        settle(t.wait(), test.labels[i], &mut correct, &mut served, &mut expired)?;
     }
     let metrics = engine.shutdown();
     let total_requests: u64 = metrics.values().flatten().map(|m| m.requests).sum();
@@ -326,7 +429,17 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         models.len(),
         replicas
     );
-    println!("accuracy {:.2}%", correct as f64 / n as f64 * 100.0);
+    if expired > 0 || backpressure_hits > 0 {
+        println!(
+            "QoS: {expired} expired before dispatch, {backpressure_hits} submit(s) \
+             hit admission backpressure and were retried"
+        );
+    }
+    println!(
+        "accuracy {:.2}% over {} served",
+        correct as f64 / served.max(1) as f64 * 100.0,
+        served
+    );
     for (model, group) in &metrics {
         println!("model '{model}':");
         for (i, m) in group.iter().enumerate() {
@@ -337,8 +450,14 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             if m.failures > 0 {
                 print!(", {} FAILED", m.failures);
             }
+            if m.rejected + m.expired + m.cancelled > 0 {
+                print!(
+                    ", {} rejected / {} expired / {} cancelled",
+                    m.rejected, m.expired, m.cancelled
+                );
+            }
             if let Some(q) = &m.queue_us {
-                print!(", queue µs p50 {:.0} p95 {:.0}", q.median, q.p95);
+                print!(", queue µs p50 {:.0} p99 {:.0}", q.median, q.p99);
             }
             if m.sim_cycles > 0 {
                 print!(

@@ -19,6 +19,9 @@ pub struct Summary {
     pub p05: f64,
     /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile — the tail the serving QoS metrics report
+    /// (queue-delay p99 under overload).
+    pub p99: f64,
 }
 
 impl Summary {
@@ -43,6 +46,7 @@ impl Summary {
             median: percentile_sorted(&sorted, 50.0),
             p05: percentile_sorted(&sorted, 5.0),
             p95: percentile_sorted(&sorted, 95.0),
+            p99: percentile_sorted(&sorted, 99.0),
         }
     }
 

@@ -244,11 +244,11 @@ fn declared_max_batch_is_respected() {
     )
     .unwrap();
     let x = probe(1, 40, 3);
-    let rxs: Vec<_> = (0..24)
+    let tickets: Vec<_> = (0..24)
         .map(|_| server.submit(x.row(0).to_vec()).unwrap())
         .collect();
-    for rx in rxs {
-        rx.recv().unwrap().unwrap();
+    for ticket in tickets {
+        ticket.wait().unwrap();
     }
     let m = server.shutdown();
     assert_eq!(m.requests, 24);

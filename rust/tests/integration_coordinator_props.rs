@@ -1,24 +1,24 @@
 //! Property-based tests on coordinator invariants (routing, batching,
 //! state), using the in-tree `util::prop` framework.
 
-use std::sync::mpsc::channel;
-use std::time::{Duration, Instant};
+use std::sync::mpsc::{channel, Sender};
+use std::time::Duration;
 
-use beanna::coordinator::batcher::BatchPolicy;
-use beanna::coordinator::request::InferenceRequest;
+use beanna::coordinator::batcher::{BatchPolicy, BatchQueue};
+use beanna::coordinator::metrics::Metrics;
+use beanna::coordinator::request::{InferenceRequest, SubmitOptions, Ticket};
 use beanna::coordinator::{ReferenceBackend, RoutePolicy, Router, ServeError, Server, ServerConfig};
 use beanna::nn::{Network, NetworkConfig, Precision};
 use beanna::util::prop::{check, Gen};
 
-fn req(id: u64) -> InferenceRequest {
-    let (tx, rx) = channel();
-    std::mem::forget(rx);
-    InferenceRequest {
-        id,
-        features: vec![],
-        resp_tx: tx,
-        enqueued_at: Instant::now(),
-    }
+/// Fixture: a request flowing through the real `Ticket` plumbing. The
+/// ticket must be held alive by the caller — dropping it cancels the
+/// request (which is exactly the lifecycle contract, and is itself
+/// asserted below).
+fn send_req(tx: &Sender<InferenceRequest>, id: u64) -> Ticket {
+    let (req, ticket) = InferenceRequest::fresh(id, vec![], SubmitOptions::default());
+    tx.send(req).unwrap();
+    ticket
 }
 
 fn tiny_net(seed: u64) -> Network {
@@ -31,24 +31,25 @@ fn tiny_net(seed: u64) -> Network {
     )
 }
 
-/// Batching invariants: every request appears in exactly one batch, in
-/// FIFO order, and no batch exceeds max_batch.
+/// Batching invariants: every live request appears in exactly one
+/// batch, in FIFO order (all fixtures share the default class), and no
+/// batch exceeds max_batch.
 #[test]
 fn prop_batcher_partitions_fifo() {
     check("batcher partitions the queue FIFO", 50, |g: &mut Gen| {
         let n = g.usize_in(1..60);
         let max_batch = g.usize_in(1..10);
         let (tx, rx) = channel();
-        for i in 0..n as u64 {
-            tx.send(req(i)).unwrap();
-        }
+        let mut queue = BatchQueue::new(rx);
+        let metrics = Metrics::new();
+        let _tickets: Vec<Ticket> = (0..n as u64).map(|i| send_req(&tx, i)).collect();
         drop(tx);
         let policy = BatchPolicy {
             max_batch,
             max_wait: Duration::from_millis(1),
         };
         let mut seen = Vec::new();
-        while let Some(batch) = policy.next_batch(&rx) {
+        while let Some(batch) = policy.next_batch(&mut queue, &metrics) {
             if batch.len() > max_batch {
                 return Err(format!(
                     "batch of {} exceeds max {max_batch}",
@@ -63,6 +64,49 @@ fn prop_batcher_partitions_fifo() {
         } else {
             Err(format!("order/partition broken: {seen:?}"))
         }
+    });
+}
+
+/// Lifecycle invariant: a dropped ticket cancels its queued request —
+/// the batcher never hands it out, whatever the queue shape around it.
+#[test]
+fn prop_dropped_tickets_never_reach_a_batch() {
+    check("dropped tickets are swept, survivors keep FIFO", 30, |g: &mut Gen| {
+        let n = g.usize_in(1..40);
+        let (tx, rx) = channel();
+        let mut queue = BatchQueue::new(rx);
+        let metrics = Metrics::new();
+        let mut kept = Vec::new();
+        let mut live_ids = Vec::new();
+        for i in 0..n as u64 {
+            let t = send_req(&tx, i);
+            if g.bool() {
+                drop(t); // cancels the queued request
+            } else {
+                live_ids.push(i);
+                kept.push(t);
+            }
+        }
+        drop(tx);
+        let policy = BatchPolicy {
+            max_batch: g.usize_in(1..8),
+            max_wait: Duration::from_millis(1),
+        };
+        let mut seen = Vec::new();
+        while let Some(batch) = policy.next_batch(&mut queue, &metrics) {
+            seen.extend(batch.iter().map(|r| r.id));
+        }
+        if seen != live_ids {
+            return Err(format!("expected {live_ids:?}, batched {seen:?}"));
+        }
+        let cancelled = metrics.snapshot().cancelled;
+        if cancelled != (n - live_ids.len()) as u64 {
+            return Err(format!(
+                "cancelled counter {cancelled} != {}",
+                n - live_ids.len()
+            ));
+        }
+        Ok(())
     });
 }
 
@@ -85,12 +129,12 @@ fn prop_server_conserves_requests() {
             },
         )
         .unwrap();
-        let rxs: Vec<_> = (0..n)
+        let tickets: Vec<_> = (0..n)
             .map(|_| server.submit(vec![0.5; 784]).unwrap())
             .collect();
-        let mut ids: Vec<u64> = rxs
+        let mut ids: Vec<u64> = tickets
             .into_iter()
-            .map(|rx| rx.recv().unwrap().unwrap().id)
+            .map(|t| t.wait().unwrap().id)
             .collect();
         ids.sort();
         let metrics = server.shutdown();
@@ -116,10 +160,10 @@ fn prop_router_conserves_and_balances() {
     check("router conserves requests", 6, |g: &mut Gen| {
         let workers = g.usize_in(1..5);
         let n = g.usize_in(1..50);
-        let policy = if g.bool() {
-            RoutePolicy::RoundRobin
-        } else {
-            RoutePolicy::LeastOutstanding
+        let policy = match g.usize_in(0..3) {
+            0 => RoutePolicy::RoundRobin,
+            1 => RoutePolicy::LeastOutstanding,
+            _ => RoutePolicy::ModeledBacklog,
         };
         let router = Router::start(
             (0..workers)
@@ -135,15 +179,13 @@ fn prop_router_conserves_and_balances() {
             policy,
         )
         .unwrap();
-        let rxs: Vec<_> = (0..n)
+        let tickets: Vec<_> = (0..n)
             .map(|_| router.submit(vec![0.25; 784]).unwrap())
             .collect();
         let mut per_worker = vec![0u64; workers];
-        for (i, rx) in rxs {
+        for (i, t) in tickets {
             per_worker[i] += 1;
-            rx.recv()
-                .map_err(|e| e.to_string())?
-                .map_err(|e| e.to_string())?;
+            t.wait().map_err(|e| e.to_string())?;
         }
         let metrics = router.shutdown();
         let served: u64 = metrics.iter().map(|m| m.requests).sum();

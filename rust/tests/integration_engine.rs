@@ -119,7 +119,7 @@ fn mixed_width_submissions_cannot_poison_a_batch() {
         })
         .build()
         .unwrap();
-    let good_rx = engine.submit("mnist", vec![0.1; 784]).unwrap();
+    let good_ticket = engine.submit("mnist", vec![0.1; 784]).unwrap();
     let err = engine.submit("mnist", vec![0.1; 32]).unwrap_err();
     assert_eq!(
         err,
@@ -130,7 +130,7 @@ fn mixed_width_submissions_cannot_poison_a_batch() {
     );
     // The well-formed request is unaffected, and the worker survives to
     // serve more traffic.
-    assert_eq!(good_rx.recv().unwrap().unwrap().logits.len(), 10);
+    assert_eq!(good_ticket.wait().unwrap().logits.len(), 10);
     assert_eq!(engine.infer("mnist", vec![0.3; 784]).unwrap().logits.len(), 10);
     let totals = engine.shutdown();
     assert_eq!(totals["mnist"][0].requests, 2);

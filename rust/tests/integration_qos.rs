@@ -1,0 +1,479 @@
+//! Integration: the QoS request lifecycle end to end — bounded
+//! admission under an open-loop flood, deadline expiry before backend
+//! dispatch, cancellation slot reuse, priority ordering under a
+//! saturated queue, and modeled-backlog routing across sharded
+//! simulator workers.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use beanna::bf16::Matrix;
+use beanna::coordinator::{
+    BatchOutput, BatchPolicy, ExecutionBackend, Parallelism, RoutePolicy, Router, ServeError,
+    Server, ServerConfig, ShardedSimulatorBackend, SubmitOptions,
+};
+use beanna::nn::{Network, NetworkConfig, Precision};
+
+/// A backend whose first gate is closed: `run_batch_with` parks until
+/// the test opens it, so the test can deterministically hold one
+/// request "in the backend" while more traffic queues behind it. It
+/// records how many batches actually executed and the first feature of
+/// every served row (the observable service order).
+struct Gated {
+    gate: Arc<(Mutex<bool>, Condvar)>,
+    /// Batches that *entered* the backend (pre-gate).
+    entered: Arc<AtomicUsize>,
+    /// Batches that executed (post-gate).
+    calls: Arc<AtomicUsize>,
+    /// First feature of each served row, in service order.
+    order: Arc<Mutex<Vec<f32>>>,
+}
+
+impl Gated {
+    #[allow(clippy::type_complexity)]
+    fn boxed() -> (
+        Box<dyn ExecutionBackend>,
+        Arc<(Mutex<bool>, Condvar)>,
+        Arc<AtomicUsize>,
+        Arc<AtomicUsize>,
+        Arc<Mutex<Vec<f32>>>,
+    ) {
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let entered = Arc::new(AtomicUsize::new(0));
+        let calls = Arc::new(AtomicUsize::new(0));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let b = Box::new(Gated {
+            gate: Arc::clone(&gate),
+            entered: Arc::clone(&entered),
+            calls: Arc::clone(&calls),
+            order: Arc::clone(&order),
+        });
+        (b, gate, entered, calls, order)
+    }
+}
+
+fn open_gate(gate: &Arc<(Mutex<bool>, Condvar)>) {
+    let (lock, cv) = &**gate;
+    *lock.lock().unwrap() = true;
+    cv.notify_all();
+}
+
+fn wait_until(cond: impl Fn() -> bool) {
+    for _ in 0..2000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("condition not reached within 2s");
+}
+
+impl ExecutionBackend for Gated {
+    fn run_batch_with(&mut self, batch: &Matrix, _par: Parallelism) -> anyhow::Result<BatchOutput> {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let (lock, cv) = &*self.gate;
+        let mut open = lock.lock().unwrap();
+        while !*open {
+            open = cv.wait(open).unwrap();
+        }
+        drop(open);
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        let mut order = self.order.lock().unwrap();
+        for r in 0..batch.rows {
+            order.push(batch.row(r)[0]);
+        }
+        Ok(BatchOutput {
+            logits: Matrix::zeros(batch.rows, 2),
+            sim_cycles: None,
+        })
+    }
+
+    fn tag(&self) -> &str {
+        "gated"
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        Some(4)
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        Some(2)
+    }
+}
+
+fn feats(tag: f32) -> Vec<f32> {
+    vec![tag; 4]
+}
+
+/// Satellite: an open-loop flood against a small `queue_capacity`
+/// yields prompt typed `Overloaded` errors with bounded in-flight
+/// depth, no worker panic, and full recovery once the flood drains.
+#[test]
+fn overload_flood_is_typed_bounded_and_recoverable() {
+    let (backend, gate, _entered, calls, _order) = Gated::boxed();
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            queue_capacity: Some(8),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // Flood: the worker is gated, so nothing resolves while we submit.
+    let mut tickets = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..64 {
+        match server.submit(feats(i as f32)) {
+            Ok(t) => tickets.push(t),
+            Err(ServeError::Overloaded { depth, capacity }) => {
+                assert_eq!(capacity, 8);
+                assert!(depth >= capacity, "rejected below capacity: {depth}");
+                rejected += 1;
+            }
+            Err(other) => panic!("unexpected error under flood: {other:?}"),
+        }
+    }
+    assert_eq!(tickets.len(), 8, "admissions must stop at capacity");
+    assert_eq!(rejected, 56);
+    assert!(server.queue_depth() <= 8, "in-flight depth exceeded the bound");
+    // Rejection is prompt and synchronous — nothing above was blocked
+    // on the (gated) worker. Open the gate: every admitted request is
+    // served; none were lost.
+    open_gate(&gate);
+    for t in tickets {
+        t.wait().unwrap();
+    }
+    // Capacity drained: fresh traffic is admitted again.
+    assert!(server.infer(feats(99.0)).is_ok());
+    let m = server.shutdown();
+    assert_eq!(m.requests, 9);
+    assert_eq!(m.rejected, 56);
+    assert_eq!(m.failures, 0);
+    assert_eq!(calls.load(Ordering::SeqCst), 9);
+}
+
+/// Satellite: requests whose deadline passes while queued resolve as
+/// `DeadlineExceeded` and provably never reach the backend (asserted
+/// via the backend's call count).
+#[test]
+fn expired_requests_never_reach_the_backend() {
+    let (backend, gate, entered, calls, _order) = Gated::boxed();
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            queue_capacity: Some(16),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // Hold one request inside the backend so the expiring ones are
+    // still queued when their deadline passes.
+    let blocker = server.submit(feats(1.0)).unwrap();
+    wait_until(|| entered.load(Ordering::SeqCst) == 1);
+    let dead: Vec<_> = (0..3)
+        .map(|_| {
+            server
+                .submit_with(
+                    feats(2.0),
+                    SubmitOptions::default().with_deadline(Duration::ZERO),
+                )
+                .unwrap()
+        })
+        .collect();
+    let live = server.submit(feats(3.0)).unwrap();
+    open_gate(&gate);
+    assert!(blocker.wait().is_ok());
+    for d in dead {
+        match d.wait().unwrap_err() {
+            ServeError::DeadlineExceeded { .. } => {}
+            other => panic!("expected DeadlineExceeded, got {other:?}"),
+        }
+    }
+    assert!(live.wait().is_ok());
+    let m = server.shutdown();
+    assert_eq!(m.expired, 3);
+    assert_eq!(m.requests, 2);
+    assert_eq!(
+        calls.load(Ordering::SeqCst),
+        2,
+        "an expired request reached the backend"
+    );
+}
+
+/// Satellite: a cancelled ticket's admission slot is immediately
+/// reusable, and the cancelled request never executes.
+#[test]
+fn cancelled_ticket_slot_is_reusable() {
+    let (backend, gate, entered, calls, order) = Gated::boxed();
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            queue_capacity: Some(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // Slot 1: dispatched and parked inside the backend.
+    let blocker = server.submit(feats(1.0)).unwrap();
+    wait_until(|| entered.load(Ordering::SeqCst) == 1);
+    // Slot 2: queued.
+    let queued = server.submit(feats(2.0)).unwrap();
+    // Full: a third submission is typed overload.
+    assert!(matches!(
+        server.submit(feats(3.0)).unwrap_err(),
+        ServeError::Overloaded { .. }
+    ));
+    // Cancel the queued request: its slot frees without waiting for
+    // the worker, and the very next submission is admitted.
+    assert!(queued.cancel());
+    assert_eq!(server.queue_depth(), 1);
+    let reused = server.submit(feats(4.0)).unwrap();
+    open_gate(&gate);
+    assert!(blocker.wait().is_ok());
+    assert!(reused.wait().is_ok());
+    assert_eq!(queued.wait().unwrap_err(), ServeError::Cancelled);
+    let m = server.shutdown();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.cancelled, 1);
+    assert_eq!(m.rejected, 1);
+    assert_eq!(calls.load(Ordering::SeqCst), 2);
+    assert_eq!(
+        *order.lock().unwrap(),
+        vec![1.0, 4.0],
+        "the cancelled request must never execute"
+    );
+}
+
+/// Satellite: under a saturated queue, Interactive requests complete
+/// ahead of earlier-submitted Bulk requests; within a class order
+/// stays FIFO.
+#[test]
+fn interactive_overtakes_earlier_bulk_under_saturation() {
+    let (backend, gate, entered, _calls, order) = Gated::boxed();
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            queue_capacity: Some(16),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let blocker = server.submit(feats(10.0)).unwrap();
+    wait_until(|| entered.load(Ordering::SeqCst) == 1);
+    // Bulk first, interactive afterwards — all queued behind the
+    // blocker.
+    let bulk: Vec<_> = [20.0f32, 21.0, 22.0]
+        .iter()
+        .map(|&v| server.submit_with(feats(v), SubmitOptions::bulk()).unwrap())
+        .collect();
+    let interactive: Vec<_> = [30.0f32, 31.0]
+        .iter()
+        .map(|&v| server.submit(feats(v)).unwrap())
+        .collect();
+    open_gate(&gate);
+    assert!(blocker.wait().is_ok());
+    for t in interactive {
+        t.wait().unwrap();
+    }
+    for t in bulk {
+        t.wait().unwrap();
+    }
+    server.shutdown();
+    assert_eq!(
+        *order.lock().unwrap(),
+        vec![10.0, 30.0, 31.0, 20.0, 21.0, 22.0],
+        "interactive must be served before earlier-submitted bulk"
+    );
+}
+
+/// Admission is priority-aware: bulk backfill stops short of the full
+/// bound, so a bulk flood can never occupy the slots reserved for
+/// interactive admission.
+#[test]
+fn bulk_flood_cannot_starve_interactive_admission() {
+    let (backend, gate, _entered, _calls, _order) = Gated::boxed();
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            queue_capacity: Some(8),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // Bulk flood: only capacity − reserve (8 − 1 = 7) admitted.
+    let bulk: Vec<_> = (0..12)
+        .filter_map(|i| {
+            server
+                .submit_with(feats(20.0 + i as f32), SubmitOptions::bulk())
+                .ok()
+        })
+        .collect();
+    assert_eq!(bulk.len(), 7, "bulk must stop at the reserve line");
+    // Interactive still has headroom…
+    let interactive = server.submit(feats(50.0)).unwrap();
+    // …until the full bound is reached.
+    assert!(matches!(
+        server.submit(feats(51.0)).unwrap_err(),
+        ServeError::Overloaded { .. }
+    ));
+    open_gate(&gate);
+    for t in bulk {
+        t.wait().unwrap();
+    }
+    interactive.wait().unwrap();
+    let m = server.shutdown();
+    assert_eq!(m.requests, 8);
+    assert_eq!(m.rejected, 6, "5 bulk + 1 interactive rejections");
+}
+
+/// A waiter on a queued request is resolved *at* the deadline — not
+/// when the worker next frees up — and the admission slot is reusable
+/// immediately, even while the worker is parked inside a long batch.
+#[test]
+fn ticket_side_expiry_frees_slot_while_worker_is_busy() {
+    let (backend, gate, entered, calls, _order) = Gated::boxed();
+    let server = Server::start(
+        backend,
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            queue_capacity: Some(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let blocker = server.submit(feats(1.0)).unwrap();
+    wait_until(|| entered.load(Ordering::SeqCst) == 1);
+    let doomed = server
+        .submit_with(
+            feats(2.0),
+            SubmitOptions::default().with_deadline(Duration::from_millis(10)),
+        )
+        .unwrap();
+    let t0 = std::time::Instant::now();
+    match doomed.wait().unwrap_err() {
+        ServeError::DeadlineExceeded { .. } => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(1),
+        "expiry waited on the busy worker"
+    );
+    // The slot is already free — while the worker is still gated.
+    assert_eq!(server.queue_depth(), 1);
+    let reused = server.submit(feats(3.0)).unwrap();
+    open_gate(&gate);
+    assert!(blocker.wait().is_ok());
+    assert!(reused.wait().is_ok());
+    let m = server.shutdown();
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.expired, 1, "the swept corpse is recorded as expired");
+    assert_eq!(calls.load(Ordering::SeqCst), 2);
+}
+
+/// A `ShardedSimulatorBackend` wrapper that exposes the device's
+/// modeled makespan to the test thread after every command.
+struct ReportingSharded {
+    inner: ShardedSimulatorBackend,
+    makespan: Arc<AtomicU64>,
+}
+
+impl ExecutionBackend for ReportingSharded {
+    fn run_batch_with(&mut self, batch: &Matrix, par: Parallelism) -> anyhow::Result<BatchOutput> {
+        let out = self.inner.run_batch_with(batch, par)?;
+        self.makespan
+            .store(self.inner.report().makespan, Ordering::SeqCst);
+        Ok(out)
+    }
+
+    fn tag(&self) -> &str {
+        "reporting-sharded"
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        self.inner.input_width()
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        self.inner.num_classes()
+    }
+
+    fn shard_depths(&self) -> Option<Vec<u64>> {
+        self.inner.shard_depths()
+    }
+}
+
+/// Acceptance: `ModeledBacklog` routes closed-loop traffic across
+/// sharded simulator workers with **no worse modeled makespan** than
+/// `LeastOutstanding` — and actually spreads the load. Host-side
+/// outstanding counts go blind behind a device model (responses return
+/// at host speed, so JSQ reads every worker as idle and piles
+/// everything on worker 0); the modeled `shard_depths` gauge keeps the
+/// device-time skew visible.
+#[test]
+fn modeled_backlog_routes_no_worse_than_least_outstanding() {
+    let net = Network::random(
+        &NetworkConfig {
+            sizes: vec![20, 24, 6],
+            precisions: vec![Precision::Bf16, Precision::Bf16],
+        },
+        13,
+    );
+    // Closed-loop skewed arrival sequence: every command is submitted
+    // only after the previous one resolved, so host-side outstanding
+    // counts are always zero at pick time.
+    let run = |policy: RoutePolicy| -> (u64, Vec<u64>) {
+        let gauges: Vec<Arc<AtomicU64>> =
+            (0..2).map(|_| Arc::new(AtomicU64::new(0))).collect();
+        let backends: Vec<Box<dyn ExecutionBackend>> = gauges
+            .iter()
+            .map(|g| {
+                Box::new(ReportingSharded {
+                    inner: ShardedSimulatorBackend::new(net.clone(), 2),
+                    makespan: Arc::clone(g),
+                }) as Box<dyn ExecutionBackend>
+            })
+            .collect();
+        let router = Router::start(
+            backends,
+            ServerConfig {
+                policy: BatchPolicy::unbatched(),
+                ..Default::default()
+            },
+            policy,
+        )
+        .unwrap();
+        let mut counts = vec![0u64; 2];
+        for i in 0..12 {
+            let (w, t) = router.submit(vec![0.1 * (i as f32 + 1.0); 20]).unwrap();
+            counts[w] += 1;
+            t.wait().unwrap();
+        }
+        router.shutdown();
+        let makespan = gauges
+            .iter()
+            .map(|g| g.load(Ordering::SeqCst))
+            .max()
+            .unwrap();
+        (makespan, counts)
+    };
+    let (lo_makespan, lo_counts) = run(RoutePolicy::LeastOutstanding);
+    let (mb_makespan, mb_counts) = run(RoutePolicy::ModeledBacklog);
+    // Closed loop: JSQ on host counts sees idle workers everywhere and
+    // rides the index tie-break onto worker 0 for every command.
+    assert_eq!(lo_counts, vec![12, 0], "{lo_counts:?}");
+    // The modeled gauge sees the backlog and spreads.
+    assert!(
+        mb_counts.iter().all(|&c| c > 0),
+        "modeled backlog left a worker idle: {mb_counts:?}"
+    );
+    assert!(
+        mb_makespan <= lo_makespan,
+        "modeled-backlog makespan {mb_makespan} worse than least-outstanding {lo_makespan}"
+    );
+}

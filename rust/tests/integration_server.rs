@@ -36,11 +36,11 @@ fn simulator_backend_serves_with_cycles() {
         },
     )
     .unwrap();
-    let rxs: Vec<_> = (0..data.len())
+    let tickets: Vec<_> = (0..data.len())
         .map(|i| server.submit(data.images.row(i).to_vec()).unwrap())
         .collect();
-    for (i, rx) in rxs.into_iter().enumerate() {
-        let resp = rx.recv().unwrap().unwrap();
+    for (i, ticket) in tickets.into_iter().enumerate() {
+        let resp = ticket.wait().unwrap();
         assert_eq!(resp.prediction, direct[i], "request {i}");
         assert!(resp.sim_cycles.unwrap() > 0);
         assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
@@ -69,11 +69,11 @@ fn batching_reduces_device_cycles() {
             },
         )
         .unwrap();
-        let rxs: Vec<_> = (0..data.len())
+        let tickets: Vec<_> = (0..data.len())
             .map(|i| server.submit(data.images.row(i).to_vec()).unwrap())
             .collect();
-        for rx in rxs {
-            rx.recv().unwrap().unwrap();
+        for ticket in tickets {
+            ticket.wait().unwrap();
         }
         server.shutdown().sim_cycles
     };
