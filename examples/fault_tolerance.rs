@@ -1,0 +1,134 @@
+//! Fault-tolerance tour: a misbehaving replica behind the router's
+//! circuit breaker, transparent retry, and graceful drain.
+//!
+//! ```bash
+//! cargo run --release --example fault_tolerance
+//! ```
+//!
+//! No artifacts required. A three-replica [`Router`] serves a small
+//! random network while replica 0 misbehaves behind a seeded
+//! [`FaultInjectingBackend`]: a deterministic opening outage (three
+//! consecutive typed errors — exactly the breaker threshold), then
+//! random errors and worker panics. The same workload runs twice:
+//!
+//! * **no retry** — every fault on the sick replica surfaces to its
+//!   caller as a typed `ServeError::Backend`, until the breaker ejects
+//!   the replica from the rotation;
+//! * **default retry** — failed attempts transparently re-admit on a
+//!   healthy replica, so *zero* faults surface, at the cost of a little
+//!   backoff latency and a `retries` tick in the metrics.
+//!
+//! The run ends with a drain: admission closes with a typed
+//! `ShuttingDown` while already-admitted work still flushes.
+
+use std::time::Duration;
+
+use beanna::coordinator::{
+    BatchPolicy, ExecutionBackend, FaultInjectingBackend, FaultSpec, ReferenceBackend, RetryPolicy,
+    RoutePolicy, Router, ServeError, ServerConfig,
+};
+use beanna::nn::{Network, NetworkConfig, Precision};
+
+const WIDTH: usize = 16;
+const REQUESTS: usize = 400;
+
+/// Three replicas: replica 0 wrapped in `spec`, replicas 1 and 2 clean.
+fn router(net: &Network, spec: FaultSpec, retry: RetryPolicy) -> Result<Router, ServeError> {
+    let backends: Vec<Box<dyn ExecutionBackend>> = vec![
+        FaultInjectingBackend::boxed(ReferenceBackend::boxed(net.clone()), spec),
+        ReferenceBackend::boxed(net.clone()),
+        ReferenceBackend::boxed(net.clone()),
+    ];
+    Router::start_with_retry(
+        backends,
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+            },
+            ..Default::default()
+        },
+        RoutePolicy::RoundRobin,
+        retry,
+    )
+}
+
+fn features(i: usize) -> Vec<f32> {
+    vec![0.1 * (i % 10) as f32; WIDTH]
+}
+
+fn main() -> anyhow::Result<()> {
+    let net = Network::random(&NetworkConfig::uniform(&[WIDTH, 24, 4], Precision::Bf16), 3);
+    let spec = FaultSpec {
+        fail_first: 3,
+        error_rate: 0.08,
+        panic_rate: 0.02,
+        seed: 7,
+        ..FaultSpec::default()
+    };
+    println!(
+        "replica 0 misbehaves: 3-call opening outage, then {:.0}% errors + {:.0}% panics \
+         (seed {}); replicas 1 and 2 are clean",
+        spec.error_rate * 100.0,
+        spec.panic_rate * 100.0,
+        spec.seed
+    );
+
+    // -- no retry: faults surface (until the breaker ejects) ------------------
+    let naive = router(&net, spec, RetryPolicy::none())?;
+    let mut surfaced = 0u64;
+    for i in 0..REQUESTS {
+        match naive.infer(features(i)) {
+            Ok(_) => {}
+            Err(ServeError::Backend { .. }) => surfaced += 1,
+            Err(e) => anyhow::bail!("unexpected serving error: {e}"),
+        }
+    }
+    let m = naive.shutdown();
+    println!(
+        "no retry:      {surfaced} of {REQUESTS} requests failed in the caller's lap \
+         ({} ejection(s) still contained the blast radius)",
+        m[0].ejections
+    );
+    anyhow::ensure!(surfaced >= spec.fail_first, "the opening outage must surface");
+
+    // -- default retry: zero surfaced faults ----------------------------------
+    let tolerant = router(&net, spec, RetryPolicy::default())?;
+    let mut retried_tickets = 0u64;
+    for i in 0..REQUESTS {
+        // With two always-healthy replicas and three attempts, every
+        // request succeeds — `?` is safe here.
+        if tolerant.infer(features(i))?.retries > 0 {
+            retried_tickets += 1;
+        }
+    }
+    println!(
+        "default retry: 0 of {REQUESTS} requests failed; {retried_tickets} were \
+         transparently re-admitted on a healthy replica"
+    );
+    println!("breaker states mid-run: {:?}", tolerant.health());
+
+    // -- graceful drain -------------------------------------------------------
+    let (_, in_flight) = tolerant.submit(features(0))?;
+    tolerant.begin_drain();
+    match tolerant.submit(features(1)) {
+        Err(ServeError::ShuttingDown) => println!("drain: new work refused, typed ✓"),
+        other => anyhow::bail!("draining router must refuse with ShuttingDown, got {other:?}"),
+    }
+    in_flight.wait()?;
+    println!("drain: in-flight request still served ✓");
+
+    let m = tolerant.shutdown();
+    for (i, s) in m.iter().enumerate() {
+        println!(
+            "replica {i}: {} served, {} failures (all retried away), {} ejection(s), \
+             {} readmission(s)",
+            s.requests, s.failures, s.ejections, s.readmissions
+        );
+    }
+    let failures: u64 = m.iter().map(|s| s.failures).sum();
+    let retries: u64 = m.iter().map(|s| s.retries).sum();
+    anyhow::ensure!(failures == retries, "a failure neither retried nor surfaced");
+    anyhow::ensure!(m[0].ejections >= 1, "the opening outage must trip the breaker");
+    Ok(())
+}

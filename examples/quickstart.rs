@@ -12,7 +12,8 @@
 //! 4. Scales the device out: the same commands on a 4-shard device,
 //!    scheduled in modeled cycles.
 //! 5. Serves two differently-shaped models behind one `Engine` — with
-//!    bounded admission, owned `Ticket`s, priorities, and deadlines.
+//!    bounded admission, owned tickets, priorities, deadlines, and
+//!    transparent retry across replicas.
 //! 6. Shows the Table II hardware model.
 
 use std::time::Duration;
@@ -109,7 +110,9 @@ fn main() -> anyhow::Result<()> {
     );
 
     // -- the request lifecycle: tickets, deadlines, cancellation --------------
-    // `submit_with` hands back an owned Ticket. A request whose
+    // `submit_with` hands back an owned RoutedTicket (which would also
+    // transparently retry a failed attempt on another replica). A
+    // request whose
     // deadline passes while queued is dropped *before* it reaches the
     // backend; a bulk-class request yields to interactive traffic at
     // batch formation; a dropped or cancelled ticket withdraws its

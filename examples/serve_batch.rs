@@ -19,7 +19,9 @@
 use std::collections::VecDeque;
 use std::time::Duration;
 
-use beanna::coordinator::{BatchPolicy, Engine, RoutePolicy, ServeError, SubmitOptions, Ticket};
+use beanna::coordinator::{
+    BatchPolicy, Engine, RoutePolicy, RoutedTicket, ServeError, SubmitOptions,
+};
 use beanna::data::SynthMnist;
 use beanna::experiments;
 use beanna::io::ArtifactPaths;
@@ -97,14 +99,14 @@ fn main() -> anyhow::Result<()> {
     let mnist_opts = SubmitOptions::default().with_deadline(Duration::from_secs(5));
     let aux_opts = SubmitOptions::bulk();
     let t0 = std::time::Instant::now();
-    let mut pending: VecDeque<(Option<usize>, Ticket)> = VecDeque::new();
+    let mut pending: VecDeque<(Option<usize>, RoutedTicket<'_>)> = VecDeque::new();
     let mut correct = 0usize;
     let mut mnist_served = 0usize;
     let mut total = 0usize;
     let mut expired = 0usize;
     let mut backpressure = 0usize;
     let mut batch_sizes: Vec<usize> = Vec::new();
-    let settle = |entry: (Option<usize>, Ticket),
+    let settle = |entry: (Option<usize>, RoutedTicket<'_>),
                   correct: &mut usize,
                   mnist_served: &mut usize,
                   expired: &mut usize,

@@ -1,0 +1,154 @@
+//! Availability under injected faults: end-to-end failure rate and
+//! latency p99 of a three-replica router when **every** replica
+//! misbehaves at a 10% typed-error rate, with and without the router's
+//! transparent retry.
+//!
+//! ```bash
+//! cargo bench --bench chaos_availability
+//! BEANNA_BENCH_QUICK=1 cargo bench --bench chaos_availability   # CI-sized run
+//! ```
+//!
+//! The backend is a fixed-cost stand-in (a deterministic per-command
+//! sleep) behind a seeded [`FaultInjectingBackend`], so the offered
+//! fault rate is exact and portable — the bench measures the *serving
+//! layer's* fault handling, not kernel speed. Without retry, roughly
+//! the injected fault rate surfaces to callers as `ServeError::Backend`;
+//! with a three-attempt retry policy each re-submission lands on a
+//! different replica, so only a triple coincidence (~0.1%) can still
+//! surface, at the cost of backoff latency in the tail. Emits
+//! `BENCH_chaos.json` whose keys CI folds into the perf-trajectory
+//! diff: `chaos_*_fail_rate` regress when they rise (absolute
+//! threshold), `chaos_*_p99_ms` when they rise relatively.
+
+use std::time::{Duration, Instant};
+
+use beanna::bf16::Matrix;
+use beanna::coordinator::{
+    BatchOutput, BatchPolicy, ExecutionBackend, FaultInjectingBackend, FaultSpec, Parallelism,
+    RetryPolicy, RoutePolicy, Router, ServeError, ServerConfig,
+};
+use beanna::report::JsonValue;
+use beanna::util::stats::Summary;
+
+/// Deterministic fixed-cost backend: every batch costs `us`
+/// microseconds of wall time, whatever its content.
+struct FixedCost {
+    us: u64,
+}
+
+impl ExecutionBackend for FixedCost {
+    fn run_batch_with(&mut self, batch: &Matrix, _par: Parallelism) -> anyhow::Result<BatchOutput> {
+        std::thread::sleep(Duration::from_micros(self.us));
+        Ok(BatchOutput {
+            logits: Matrix::zeros(batch.rows, 2),
+            sim_cycles: None,
+        })
+    }
+
+    fn tag(&self) -> &str {
+        "fixed-cost"
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        Some(8)
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        Some(2)
+    }
+}
+
+const SERVICE_US: u64 = 200;
+const FAULT_RATE: f64 = 0.10;
+const REPLICAS: usize = 3;
+
+fn faulty_router(retry: RetryPolicy) -> Result<Router, ServeError> {
+    let backends: Vec<Box<dyn ExecutionBackend>> = (0..REPLICAS)
+        .map(|i| {
+            FaultInjectingBackend::boxed(
+                Box::new(FixedCost { us: SERVICE_US }),
+                // Decorrelated seeds: replicas must not fault in
+                // lockstep, or a retry would meet the same draw again.
+                FaultSpec::errors(FAULT_RATE, 0xBEA + i as u64),
+            )
+        })
+        .collect();
+    Router::start_with_retry(
+        backends,
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            ..Default::default()
+        },
+        RoutePolicy::RoundRobin,
+        retry,
+    )
+}
+
+/// Closed-loop run: per-request end-to-end latency (ms) and the count
+/// of faults that surfaced to the caller.
+fn run(retry: RetryPolicy, n: usize) -> anyhow::Result<(Summary, f64, u64)> {
+    let router = faulty_router(retry)?;
+    let mut lat_ms = Vec::with_capacity(n);
+    let mut surfaced = 0u64;
+    for _ in 0..n {
+        let t0 = Instant::now();
+        match router.infer(vec![0.5; 8]) {
+            Ok(_) => {}
+            Err(ServeError::Backend { .. }) => surfaced += 1,
+            Err(e) => anyhow::bail!("unexpected serving error: {e}"),
+        }
+        lat_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let retries: u64 = router.shutdown().iter().map(|m| m.retries).sum();
+    Ok((Summary::of(&lat_ms), surfaced as f64 / n as f64, retries))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BEANNA_BENCH_QUICK").as_deref() == Ok("1");
+    let n = if quick { 500 } else { 4000 };
+
+    println!(
+        "== availability under {:.0}% injected faults: {REPLICAS} replicas × \
+         {SERVICE_US} µs/req, {n} closed-loop requests ==",
+        FAULT_RATE * 100.0
+    );
+    println!(
+        "{:>10} {:>12} {:>9} {:>11} {:>11}",
+        "policy", "fail rate", "retries", "p50 ms", "p99 ms"
+    );
+
+    let (no_lat, no_fail, no_retries) = run(RetryPolicy::none(), n)?;
+    let (re_lat, re_fail, re_retries) = run(RetryPolicy::default(), n)?;
+    for (name, lat, fail, retries) in [
+        ("no-retry", &no_lat, no_fail, no_retries),
+        ("retry", &re_lat, re_fail, re_retries),
+    ] {
+        println!(
+            "{name:>10} {:>11.2}% {retries:>9} {:>11.3} {:>11.3}",
+            fail * 100.0,
+            lat.median,
+            lat.p99
+        );
+    }
+    assert_eq!(no_retries, 0, "RetryPolicy::none must never re-submit");
+    assert!(
+        re_fail < no_fail,
+        "retry must beat the no-retry baseline: {re_fail} vs {no_fail}"
+    );
+    println!(
+        "(every fault is a typed `ServeError::Backend`; retry trades ~{:.1}% \
+         surfaced failures for backoff latency in the tail)",
+        (no_fail - re_fail) * 100.0
+    );
+
+    let fields = vec![
+        ("chaos_noretry_fail_rate".into(), JsonValue::n(no_fail)),
+        ("chaos_retry_fail_rate".into(), JsonValue::n(re_fail)),
+        ("chaos_noretry_p99_ms".into(), JsonValue::n(no_lat.p99)),
+        ("chaos_retry_p99_ms".into(), JsonValue::n(re_lat.p99)),
+    ];
+    let out = std::path::Path::new("BENCH_chaos.json");
+    JsonValue::Obj(fields).save(out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -94,12 +94,17 @@ pub trait ExecutionBackend: Send {
     /// Default: no-op.
     fn warm(&mut self) {}
 
-    /// Per-shard queue depths for multi-array backends: a bounded
-    /// per-shard backlog gauge (the sharded simulator reports modeled
-    /// cycles queued beyond its least-busy shard, so the least-loaded
-    /// shard reads 0 and the gauge drains as the schedule balances).
-    /// The server polls this after each batch and surfaces the latest
-    /// value in
+    /// Per-shard queue depths for multi-array backends: an
+    /// absolute-load gauge of the work each shard still owes (the
+    /// sharded simulator reports modeled cycles queued beyond its
+    /// front-end's issue frontier — see
+    /// [`ShardedAccelerator::shard_remaining_work`](crate::sim::ShardedAccelerator::shard_remaining_work)).
+    /// It must reflect *total* remaining work, not relative skew: a
+    /// device that balances its own shards internally still reports how
+    /// loaded it is, which is what
+    /// [`RoutePolicy::ModeledBacklog`](super::router::RoutePolicy::ModeledBacklog)
+    /// compares across devices. The server polls this after each batch
+    /// and surfaces the latest value in
     /// [`MetricsSnapshot::shard_depths`](super::metrics::MetricsSnapshot).
     /// Default: `None` (single-device backends).
     fn shard_depths(&self) -> Option<Vec<u64>> {
@@ -289,11 +294,13 @@ impl ExecutionBackend for ShardedSimulatorBackend {
     }
 
     fn shard_depths(&self) -> Option<Vec<u64>> {
-        // The serving path submits back-to-back (the device's arrival
-        // clock stays parked), so report the *bounded* imbalance gauge
-        // — cycles queued beyond the least-busy shard — rather than the
-        // unbounded absolute backlog.
-        Some(self.dev.shard_imbalance())
+        // Remaining work past the front-end's issue frontier: stays
+        // informative when the device-level scheduler balances its own
+        // shards (where the relative imbalance gauge flatlines at ~0
+        // regardless of load), and stays anchored to issued work for
+        // the serving path's back-to-back submissions (arrival clock
+        // parked at 0).
+        Some(self.dev.shard_remaining_work())
     }
 }
 
@@ -493,13 +500,14 @@ mod tests {
             assert_eq!(a.logits, b.logits, "sharded shard diverged");
             assert_eq!(a.sim_cycles, b.sim_cycles, "per-command cycles diverged");
         }
-        // Two equal commands under least-busy land one per shard; the
-        // imbalance gauge reads 0 on the least-busy shard and the
-        // (front-end-serialized) issue offset on the other.
+        // Two equal commands under least-busy land one per shard; with
+        // nothing yet executed on the modeled clock, *both* shards owe
+        // their command's cycles beyond the issue frontier — the
+        // remaining-work gauge sees the absolute load a relative
+        // imbalance gauge would read as ~0 here.
         let depths = sharded.shard_depths().unwrap();
         assert_eq!(depths.len(), 2);
-        assert_eq!(depths.iter().min(), Some(&0), "{depths:?}");
-        assert!(depths.iter().max().unwrap() > &0, "{depths:?}");
+        assert!(depths.iter().all(|&d| d > 0), "{depths:?}");
         let report = sharded.report();
         assert_eq!(report.jobs, 2);
         assert!(report.makespan > 0);

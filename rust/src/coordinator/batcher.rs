@@ -6,9 +6,14 @@
 //! *formation* is now an active admission step, not a blind drain:
 //!
 //! * **Priority.** Queued [`Priority::Interactive`] requests are taken
-//!   before any [`Priority::Bulk`] one; within a class, order is FIFO.
-//!   Under a saturated queue, interactive traffic overtakes
-//!   earlier-submitted bulk backfill.
+//!   before any [`Priority::Bulk`] one. Under a saturated queue,
+//!   interactive traffic overtakes earlier-submitted bulk backfill.
+//! * **Deadlines first (EDF).** Within a class, deadlined requests are
+//!   ordered earliest-deadline-first and all of them lead undeadlined
+//!   traffic, which stays FIFO behind them. The requests closest to
+//!   expiring have the least slack, so serving them first converts
+//!   would-be `DeadlineExceeded` drops into answers — and undeadlined
+//!   requests have, by construction, declared they can wait.
 //! * **Expiry.** A request whose deadline passed while it queued is
 //!   dropped here with [`ServeError::DeadlineExceeded`] — it never
 //!   reaches the backend, so an overloaded server spends no compute on
@@ -62,10 +67,26 @@ impl BatchQueue {
         }
     }
 
+    /// Stage a request into its priority class, keeping the class in
+    /// EDF order: a sorted run of deadlined requests (earliest first),
+    /// then undeadlined requests in arrival order. The insert is
+    /// stable — equal deadlines stay FIFO — and every later removal
+    /// (sweep, take) preserves relative order, so the invariant holds
+    /// for the queue's whole lifetime.
     fn stage(&mut self, req: InferenceRequest) {
-        match req.priority {
-            Priority::Interactive => self.interactive.push_back(req),
-            Priority::Bulk => self.bulk.push_back(req),
+        let class = match req.priority {
+            Priority::Interactive => &mut self.interactive,
+            Priority::Bulk => &mut self.bulk,
+        };
+        match req.deadline {
+            Some(due) => {
+                let at = class
+                    .iter()
+                    .take_while(|r| matches!(r.deadline, Some(d) if d <= due))
+                    .count();
+                class.insert(at, req);
+            }
+            None => class.push_back(req),
         }
     }
 
@@ -172,7 +193,8 @@ impl BatchPolicy {
     /// `None` when the channel is closed and fully drained. Expired
     /// requests are resolved with `DeadlineExceeded` and cancelled
     /// ones discarded at formation time, and the returned batch is
-    /// ordered interactive-before-bulk, FIFO within each class.
+    /// ordered interactive-before-bulk; within a class, deadlined
+    /// requests lead earliest-deadline-first, undeadlined follow FIFO.
     pub fn next_batch(
         &self,
         queue: &mut BatchQueue,
@@ -334,6 +356,61 @@ mod tests {
         assert_eq!(ids(&b), vec![2, 3, 0], "interactive first, then bulk FIFO");
         let b = p.next_batch(&mut q, &m).unwrap();
         assert_eq!(ids(&b), vec![1]);
+    }
+
+    #[test]
+    fn deadlined_requests_lead_their_class_in_edf_order() {
+        let (tx, rx) = channel();
+        let mut q = BatchQueue::new(rx);
+        let m = Metrics::new();
+        // Arrival order deliberately scrambles urgency: undeadlined
+        // first, then a loose deadline, then the tightest, then a
+        // middle one. All deadlines are far enough out never to expire
+        // during the test.
+        let _tickets = [
+            send(&tx, 0, SubmitOptions::default()),
+            send(&tx, 1, SubmitOptions::default().with_deadline(Duration::from_secs(30))),
+            send(&tx, 2, SubmitOptions::default().with_deadline(Duration::from_secs(10))),
+            send(&tx, 3, SubmitOptions::default().with_deadline(Duration::from_secs(20))),
+            send(&tx, 4, SubmitOptions::default()),
+        ];
+        let p = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+        };
+        let b = p.next_batch(&mut q, &m).unwrap();
+        assert_eq!(
+            ids(&b),
+            vec![2, 3, 1, 0, 4],
+            "EDF among deadlined, then undeadlined FIFO"
+        );
+    }
+
+    #[test]
+    fn edf_is_scoped_to_a_class_and_stable_within_it() {
+        let (tx, rx) = channel();
+        let mut q = BatchQueue::new(rx);
+        let m = Metrics::new();
+        // A tight-deadline *bulk* request must not overtake interactive
+        // traffic: priority still dominates, EDF only reorders peers.
+        // And two interactive requests sharing a deadline stay FIFO.
+        let shared = Duration::from_secs(15);
+        let _tickets = [
+            send(&tx, 0, SubmitOptions::bulk().with_deadline(Duration::from_secs(1))),
+            send(&tx, 1, SubmitOptions::default().with_deadline(shared)),
+            send(&tx, 2, SubmitOptions::default().with_deadline(shared)),
+            send(&tx, 3, SubmitOptions::default()),
+        ];
+        let p = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(20),
+        };
+        let b = p.next_batch(&mut q, &m).unwrap();
+        assert_eq!(
+            ids(&b),
+            vec![1, 2, 3, 0],
+            "interactive class intact (equal deadlines FIFO), bulk last"
+        );
     }
 
     #[test]

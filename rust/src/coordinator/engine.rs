@@ -44,9 +44,9 @@ use std::collections::BTreeMap;
 use super::backend::{ExecutionBackend, ReferenceBackend};
 use super::batcher::BatchPolicy;
 use super::error::ServeError;
-use super::metrics::MetricsSnapshot;
-use super::request::{InferenceResponse, SubmitOptions, Ticket};
-use super::router::{RoutePolicy, Router};
+use super::metrics::{HealthState, MetricsSnapshot};
+use super::request::{InferenceResponse, SubmitOptions};
+use super::router::{RetryPolicy, RoutePolicy, RoutedTicket, Router};
 use super::server::ServerConfig;
 use crate::nn::Network;
 use crate::util::par::Parallelism;
@@ -78,6 +78,7 @@ pub struct EngineBuilder {
     models: Vec<ModelSpec>,
     policy: BatchPolicy,
     route: RoutePolicy,
+    retry: RetryPolicy,
     parallelism: Parallelism,
     queue_capacity: Option<usize>,
     pool_sized_batches: bool,
@@ -98,6 +99,7 @@ impl EngineBuilder {
             models: Vec::new(),
             policy: BatchPolicy::default(),
             route: RoutePolicy::RoundRobin,
+            retry: RetryPolicy::default(),
             parallelism: Parallelism::default(),
             queue_capacity: None,
             pool_sized_batches: false,
@@ -160,6 +162,16 @@ impl EngineBuilder {
     /// Engine-wide worker-selection policy within each model's group.
     pub fn route_policy(mut self, route: RoutePolicy) -> Self {
         self.route = route;
+        self
+    }
+
+    /// Engine-wide retry / circuit-breaker policy applied by each
+    /// model's router (validated at build). Defaults to
+    /// [`RetryPolicy::default`] — up to 3 attempts per request;
+    /// [`RetryPolicy::none`] disables re-submission while keeping
+    /// per-replica health tracking.
+    pub fn retry_policy(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
         self
     }
 
@@ -246,7 +258,7 @@ impl EngineBuilder {
                     }
                 }
             }
-            let router = Router::start(backends, config, self.route)?;
+            let router = Router::start_with_retry(backends, config, self.route, self.retry)?;
             groups.insert(
                 spec.name,
                 ModelGroup {
@@ -301,15 +313,18 @@ impl Engine {
     }
 
     /// Submit to a named model with explicit QoS options; the request
-    /// resolves through the returned [`Ticket`]. Unknown models, width
-    /// mismatches, and admission overflow
-    /// ([`ServeError::Overloaded`]) are rejected here, synchronously.
+    /// resolves through the returned [`RoutedTicket`] (which
+    /// transparently retries failed attempts on other replicas under
+    /// the engine's [`RetryPolicy`]). Unknown models, width
+    /// mismatches, admission overflow ([`ServeError::Overloaded`]
+    /// after every replica was tried), and a draining engine
+    /// ([`ServeError::ShuttingDown`]) are rejected here, synchronously.
     pub fn submit_with(
         &self,
         model: &str,
         features: Vec<f32>,
         opts: SubmitOptions,
-    ) -> Result<Ticket, ServeError> {
+    ) -> Result<RoutedTicket<'_>, ServeError> {
         let group = self.group(model)?;
         if features.is_empty() {
             return Err(ServeError::EmptyRequest);
@@ -326,7 +341,7 @@ impl Engine {
 
     /// Submit to a named model with default options (no deadline,
     /// interactive priority).
-    pub fn submit(&self, model: &str, features: Vec<f32>) -> Result<Ticket, ServeError> {
+    pub fn submit(&self, model: &str, features: Vec<f32>) -> Result<RoutedTicket<'_>, ServeError> {
         self.submit_with(model, features, SubmitOptions::default())
     }
 
@@ -340,8 +355,24 @@ impl Engine {
         Ok(self.group(model)?.router.metrics())
     }
 
-    /// Stop every worker group, returning per-model, per-replica final
-    /// metrics.
+    /// Per-replica circuit-breaker states of one model's worker group.
+    pub fn health(&self, model: &str) -> Result<Vec<HealthState>, ServeError> {
+        Ok(self.group(model)?.router.health())
+    }
+
+    /// Close admission on every model's worker group: subsequent
+    /// submissions fail fast with [`ServeError::ShuttingDown`] while
+    /// every already-admitted request still resolves with its typed
+    /// outcome. Idempotent; [`shutdown`](Self::shutdown) implies it.
+    pub fn begin_drain(&self) {
+        for g in self.groups.values() {
+            g.router.begin_drain();
+        }
+    }
+
+    /// Stop every worker group gracefully — drain admission, flush
+    /// queued work, join workers — returning per-model, per-replica
+    /// final metrics.
     pub fn shutdown(self) -> BTreeMap<String, Vec<MetricsSnapshot>> {
         self.groups
             .into_iter()
@@ -510,6 +541,66 @@ mod tests {
         let totals = engine.shutdown();
         assert_eq!(totals["m"][0].expired, 1);
         assert_eq!(totals["m"][0].requests, 1);
+    }
+
+    #[test]
+    fn engine_drain_closes_admission_but_flushes() {
+        let engine = Engine::builder()
+            .model("m", net(&[8, 3], 1))
+            .build()
+            .unwrap();
+        let queued = engine.submit("m", vec![0.1; 8]).unwrap();
+        engine.begin_drain();
+        assert_eq!(
+            engine.submit("m", vec![0.1; 8]).unwrap_err(),
+            ServeError::ShuttingDown
+        );
+        assert!(queued.wait().is_ok(), "queued work flushes during drain");
+        assert_eq!(engine.health("m").unwrap(), vec![HealthState::Closed]);
+        let totals = engine.shutdown();
+        assert_eq!(totals["m"][0].requests, 1);
+    }
+
+    #[test]
+    fn engine_retries_a_faulty_replica_transparently() {
+        use crate::coordinator::fault::{FaultInjectingBackend, FaultSpec};
+        // Replica 0 always errors; replica 1 is healthy. The engine's
+        // default retry policy hides the faults from callers.
+        let engine = Engine::builder()
+            .model("m", net(&[8, 3], 1))
+            .replicas(2)
+            .backend(|n, i| {
+                let inner = ReferenceBackend::boxed(n.clone());
+                Ok(if i == 0 {
+                    FaultInjectingBackend::boxed(inner, FaultSpec::errors(1.0, 7))
+                } else {
+                    inner
+                })
+            })
+            .build()
+            .unwrap();
+        let mut retried = 0u32;
+        for _ in 0..6 {
+            retried += engine.infer("m", vec![0.2; 8]).unwrap().retries;
+        }
+        assert!(retried >= 1, "some requests must have been retried");
+        let totals = engine.shutdown();
+        assert_eq!(totals["m"][1].requests, 6, "all work ends on the healthy replica");
+        assert_eq!(totals["m"][0].retries, totals["m"][0].failures);
+    }
+
+    #[test]
+    fn invalid_retry_policy_rejected_at_build() {
+        let err = Engine::builder()
+            .model("m", net(&[4, 2], 1))
+            .retry_policy(RetryPolicy {
+                max_attempts: 0,
+                ..RetryPolicy::default()
+            })
+            .build()
+            .err()
+            .expect("max_attempts 0 must fail at build");
+        assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
     }
 
     #[test]

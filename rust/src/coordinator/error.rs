@@ -75,6 +75,13 @@ pub enum ServeError {
     /// The requested backend is not compiled into this build (e.g. the
     /// PJRT runtime without the `pjrt` feature).
     Unavailable(String),
+    /// The server/engine is draining: admission is closed while
+    /// already-queued work is flushed (see
+    /// [`Server::begin_drain`](super::server::Server::begin_drain)).
+    /// Unlike [`Stopped`](Self::Stopped), the worker is still running —
+    /// in-flight tickets resolve normally; only *new* submissions are
+    /// refused.
+    ShuttingDown,
     /// The server/engine was already shut down when the call was made.
     Stopped,
     /// The response channel disconnected before a response arrived
@@ -113,6 +120,9 @@ impl fmt::Display for ServeError {
                 write!(f, "backend '{backend}' failed: {message}")
             }
             ServeError::Unavailable(msg) => write!(f, "backend unavailable: {msg}"),
+            ServeError::ShuttingDown => {
+                write!(f, "server draining: admission closed, queued work is being flushed")
+            }
             ServeError::Stopped => write!(f, "server stopped"),
             ServeError::ChannelClosed => write!(f, "response channel closed"),
         }
@@ -152,6 +162,9 @@ mod tests {
         let e = ServeError::DeadlineExceeded { waited_us: 750 };
         assert!(e.to_string().contains("750"));
         assert!(ServeError::Cancelled.to_string().contains("cancelled"));
+        assert!(ServeError::ShuttingDown.to_string().contains("draining"));
+        // Drain and stop are distinct, matchable conditions.
+        assert_ne!(ServeError::ShuttingDown, ServeError::Stopped);
     }
 
     #[test]

@@ -1,0 +1,458 @@
+//! Deterministic fault injection: the chaos harness the fault-tolerance
+//! layer is built and tested against.
+//!
+//! [`FaultInjectingBackend`] wraps any [`ExecutionBackend`] and injects
+//! the four failure shapes a real deployment sees, each at an
+//! independently configured rate drawn from a **seeded** PRNG
+//! ([`Xoshiro256`]) — the same seed replays the exact same fault
+//! schedule, so chaos tests are reproducible bit-for-bit:
+//!
+//! * **Typed errors** — `run_batch_with` returns `Err`, which the
+//!   server converts to [`ServeError::Backend`](super::error::ServeError::Backend)
+//!   on every ticket of the batch (a faulted RPC, a device reset).
+//! * **Added latency** — the call sleeps before executing (a slow or
+//!   congested replica; exercises deadline and backoff interaction).
+//! * **Garbage logits** — the call short-circuits with well-shaped but
+//!   meaningless logits (silent data corruption; shape checks cannot
+//!   catch it, which is exactly the point — it measures what slips
+//!   through).
+//! * **Panics** — the call panics (a driver bug, an assertion in
+//!   third-party code); the server's `catch_unwind` must contain it.
+//!
+//! Two deterministic overrides make targeted tests easy:
+//! [`FaultSpec::fail_first`] fails the first N calls unconditionally
+//! (a replica that comes up broken and then recovers — drives the
+//! circuit breaker through eject → probe → readmit on a fixed script)
+//! and [`FaultSpec::panic_on_call`] panics on exactly the given call.
+//!
+//! With every rate at 0 and no overrides, the wrapper is **transparent**
+//! — same logits, same declared shape, same `shard_depths` — which the
+//! backend-conformance suite asserts for every in-tree backend.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::backend::{BatchOutput, ExecutionBackend};
+use super::error::ServeError;
+use crate::bf16::Matrix;
+use crate::util::par::Parallelism;
+use crate::util::rng::Xoshiro256;
+
+/// Fault configuration: independent rates per failure shape, plus
+/// deterministic overrides. All rates are probabilities in `[0, 1]`
+/// applied per `run_batch_with` call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Probability a call returns a typed error.
+    pub error_rate: f64,
+    /// Probability a call short-circuits with garbage logits.
+    pub garbage_rate: f64,
+    /// Probability a call panics.
+    pub panic_rate: f64,
+    /// Probability a call sleeps [`added_latency`](Self::added_latency)
+    /// before executing.
+    pub latency_rate: f64,
+    /// Sleep injected on a latency draw.
+    pub added_latency: Duration,
+    /// Deterministic outage: the first N calls fail unconditionally
+    /// with a typed error (then the configured rates apply).
+    pub fail_first: u64,
+    /// Deterministic panic: call number N (1-based) panics.
+    pub panic_on_call: Option<u64>,
+    /// PRNG seed; the whole fault schedule is a pure function of it.
+    pub seed: u64,
+}
+
+impl Default for FaultSpec {
+    /// No faults at all (a transparent wrapper).
+    fn default() -> Self {
+        Self {
+            error_rate: 0.0,
+            garbage_rate: 0.0,
+            panic_rate: 0.0,
+            latency_rate: 0.0,
+            added_latency: Duration::ZERO,
+            fail_first: 0,
+            panic_on_call: None,
+            seed: 0,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// Typed errors only, at `rate`, from `seed`.
+    pub fn errors(rate: f64, seed: u64) -> Self {
+        Self {
+            error_rate: rate,
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// True when the wrapper injects nothing (pure pass-through).
+    pub fn is_transparent(&self) -> bool {
+        self.error_rate == 0.0
+            && self.garbage_rate == 0.0
+            && self.panic_rate == 0.0
+            && self.latency_rate == 0.0
+            && self.fail_first == 0
+            && self.panic_on_call.is_none()
+    }
+
+    /// Reject rates outside `[0, 1]`.
+    pub fn validate(&self) -> Result<(), ServeError> {
+        for (name, rate) in [
+            ("error", self.error_rate),
+            ("garbage", self.garbage_rate),
+            ("panic", self.panic_rate),
+            ("latency-rate", self.latency_rate),
+        ] {
+            if !(0.0..=1.0).contains(&rate) || !rate.is_finite() {
+                return Err(ServeError::InvalidConfig(format!(
+                    "fault spec: {name} rate {rate} is not in [0, 1]"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse the CLI's `--fault-spec` syntax: comma-separated
+    /// `key=value` pairs. Keys: `error`, `garbage`, `panic`,
+    /// `latency-rate` (rates in `[0,1]`), `latency-us` (injected sleep),
+    /// `fail-first` (deterministic leading failures), `panic-on-call`
+    /// (1-based call number), `seed`.
+    ///
+    /// ```
+    /// use beanna::coordinator::fault::FaultSpec;
+    /// let s = FaultSpec::parse("error=0.1,seed=42").unwrap();
+    /// assert_eq!(s.error_rate, 0.1);
+    /// assert_eq!(s.seed, 42);
+    /// ```
+    pub fn parse(spec: &str) -> Result<Self, ServeError> {
+        let mut out = Self::default();
+        let bad = |part: &str, what: &str| {
+            ServeError::InvalidConfig(format!("fault spec: {what} in '{part}'"))
+        };
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| bad(part, "expected key=value"))?;
+            let rate = || value.parse::<f64>().map_err(|_| bad(part, "bad number"));
+            let int = || value.parse::<u64>().map_err(|_| bad(part, "bad integer"));
+            match key.trim() {
+                "error" => out.error_rate = rate()?,
+                "garbage" => out.garbage_rate = rate()?,
+                "panic" => out.panic_rate = rate()?,
+                "latency-rate" => out.latency_rate = rate()?,
+                "latency-us" => out.added_latency = Duration::from_micros(int()?),
+                "fail-first" => out.fail_first = int()?,
+                "panic-on-call" => out.panic_on_call = Some(int()?),
+                "seed" => out.seed = int()?,
+                other => {
+                    return Err(ServeError::InvalidConfig(format!(
+                        "fault spec: unknown key '{other}' (known: error, garbage, panic, \
+                         latency-rate, latency-us, fail-first, panic-on-call, seed)"
+                    )))
+                }
+            }
+        }
+        out.validate()?;
+        Ok(out)
+    }
+
+    /// Same spec with a different seed (per-replica decorrelation).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// What the wrapper has injected so far (observability for tests and
+/// the chaos bench).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct InjectionCounts {
+    /// Typed errors returned (including `fail_first` ones).
+    pub errors: u64,
+    /// Garbage-logit short circuits.
+    pub garbage: u64,
+    /// Panics raised.
+    pub panics: u64,
+    /// Latency sleeps injected.
+    pub delays: u64,
+    /// Total `run_batch_with` calls observed.
+    pub calls: u64,
+}
+
+/// A seedable chaos wrapper around any [`ExecutionBackend`].
+///
+/// Declared shape (`max_batch`, `input_width`, `num_classes`),
+/// `warm`, and `shard_depths` pass straight through to the inner
+/// backend; only `run_batch_with` is intercepted. The tag is
+/// `faulty-<inner tag>` so injected failures are attributable in logs
+/// and [`ServeError::Backend`](super::error::ServeError::Backend)
+/// messages.
+pub struct FaultInjectingBackend {
+    inner: Box<dyn ExecutionBackend>,
+    spec: FaultSpec,
+    rng: Xoshiro256,
+    tag: String,
+    counts: InjectionCounts,
+}
+
+impl FaultInjectingBackend {
+    /// Wrap `inner` under `spec`. The fault schedule is fully
+    /// determined by `spec.seed` and the sequence of calls.
+    pub fn new(inner: Box<dyn ExecutionBackend>, spec: FaultSpec) -> Self {
+        let tag = format!("faulty-{}", inner.tag());
+        Self {
+            inner,
+            rng: Xoshiro256::seed_from_u64(spec.seed),
+            spec,
+            tag,
+            counts: InjectionCounts::default(),
+        }
+    }
+
+    /// Boxed, ready for `Server`/`Router`/`EngineBuilder::backend`.
+    pub fn boxed(inner: Box<dyn ExecutionBackend>, spec: FaultSpec) -> Box<dyn ExecutionBackend> {
+        Box::new(Self::new(inner, spec))
+    }
+
+    /// Injection counters so far.
+    pub fn counts(&self) -> InjectionCounts {
+        self.counts
+    }
+
+    /// The configured fault spec.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+}
+
+impl ExecutionBackend for FaultInjectingBackend {
+    fn run_batch_with(&mut self, batch: &Matrix, par: Parallelism) -> Result<BatchOutput> {
+        self.counts.calls += 1;
+        let call = self.counts.calls;
+        // One draw per failure shape per call, in fixed order, so the
+        // schedule for seed S is independent of which rates are zero.
+        let d_latency = self.rng.next_f64();
+        let d_panic = self.rng.next_f64();
+        let d_error = self.rng.next_f64();
+        let d_garbage = self.rng.next_f64();
+        if self.spec.latency_rate > 0.0 && d_latency < self.spec.latency_rate {
+            self.counts.delays += 1;
+            std::thread::sleep(self.spec.added_latency);
+        }
+        if self.spec.panic_on_call == Some(call) {
+            self.counts.panics += 1;
+            panic!("injected panic on call {call} (panic-on-call)");
+        }
+        if call <= self.spec.fail_first {
+            self.counts.errors += 1;
+            anyhow::bail!(
+                "injected fault: deterministic outage (call {call} of first {})",
+                self.spec.fail_first
+            );
+        }
+        if self.spec.panic_rate > 0.0 && d_panic < self.spec.panic_rate {
+            self.counts.panics += 1;
+            panic!("injected panic on call {call} (rate {})", self.spec.panic_rate);
+        }
+        if self.spec.error_rate > 0.0 && d_error < self.spec.error_rate {
+            self.counts.errors += 1;
+            anyhow::bail!("injected fault on call {call} (rate {})", self.spec.error_rate);
+        }
+        if self.spec.garbage_rate > 0.0 && d_garbage < self.spec.garbage_rate {
+            self.counts.garbage += 1;
+            // Well-shaped, meaningless logits: rows match the batch and
+            // columns match the declared class count (1 when the inner
+            // backend declares none), so shape checks pass — silent
+            // corruption by construction.
+            let cols = self.inner.num_classes().unwrap_or(1);
+            let mut logits = Matrix::zeros(batch.rows, cols);
+            for r in 0..batch.rows {
+                for v in logits.row_mut(r) {
+                    *v = self.rng.uniform(-1.0e3, 1.0e3);
+                }
+            }
+            return Ok(BatchOutput {
+                logits,
+                sim_cycles: None,
+            });
+        }
+        self.inner.run_batch_with(batch, par)
+    }
+
+    fn tag(&self) -> &str {
+        &self.tag
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        self.inner.max_batch()
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        self.inner.input_width()
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        self.inner.num_classes()
+    }
+
+    fn warm(&mut self) {
+        self.inner.warm();
+    }
+
+    fn shard_depths(&self) -> Option<Vec<u64>> {
+        self.inner.shard_depths()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::backend::ReferenceBackend;
+    use crate::nn::{Network, NetworkConfig, Precision};
+
+    fn tiny_net() -> Network {
+        Network::random(
+            &NetworkConfig {
+                sizes: vec![16, 8, 4],
+                precisions: vec![Precision::Bf16, Precision::Bf16],
+            },
+            5,
+        )
+    }
+
+    fn wrapped(spec: FaultSpec) -> FaultInjectingBackend {
+        FaultInjectingBackend::new(ReferenceBackend::boxed(tiny_net()), spec)
+    }
+
+    #[test]
+    fn transparent_at_rate_zero() {
+        let x = Matrix::from_vec(3, 16, vec![0.25; 48]).unwrap();
+        let mut plain = ReferenceBackend::new(tiny_net());
+        let mut faulty = wrapped(FaultSpec::default());
+        assert!(faulty.spec().is_transparent());
+        for _ in 0..5 {
+            let a = plain.run_batch(&x).unwrap();
+            let b = faulty.run_batch(&x).unwrap();
+            assert_eq!(a.logits, b.logits);
+        }
+        assert_eq!(faulty.tag(), "faulty-ref");
+        assert_eq!(faulty.input_width(), Some(16));
+        assert_eq!(faulty.num_classes(), Some(4));
+        assert_eq!(faulty.counts().errors, 0);
+        assert_eq!(faulty.counts().calls, 5);
+    }
+
+    #[test]
+    fn fault_schedule_is_deterministic_per_seed() {
+        let x = Matrix::from_vec(1, 16, vec![0.5; 16]).unwrap();
+        let run = |seed: u64| -> Vec<bool> {
+            let mut b = wrapped(FaultSpec::errors(0.5, seed));
+            (0..64).map(|_| b.run_batch(&x).is_err()).collect()
+        };
+        assert_eq!(run(7), run(7), "same seed must replay the same schedule");
+        assert_ne!(run(7), run(8), "different seeds must differ");
+    }
+
+    #[test]
+    fn error_rate_is_roughly_honored() {
+        let x = Matrix::from_vec(1, 16, vec![0.5; 16]).unwrap();
+        let mut b = wrapped(FaultSpec::errors(0.1, 3));
+        let errs = (0..1000).filter(|_| b.run_batch(&x).is_err()).count();
+        assert!((50..200).contains(&errs), "10% of 1000 ≈ {errs}");
+        assert_eq!(b.counts().errors as usize, errs);
+    }
+
+    #[test]
+    fn fail_first_is_an_exact_outage() {
+        let x = Matrix::from_vec(1, 16, vec![0.5; 16]).unwrap();
+        let mut b = wrapped(FaultSpec {
+            fail_first: 3,
+            ..FaultSpec::default()
+        });
+        for call in 1..=3 {
+            let err = b.run_batch(&x).unwrap_err();
+            assert!(err.to_string().contains("outage"), "call {call}: {err}");
+        }
+        assert!(b.run_batch(&x).is_ok(), "recovers after the outage");
+    }
+
+    #[test]
+    fn garbage_is_well_shaped_but_wrong() {
+        let x = Matrix::from_vec(2, 16, vec![0.5; 32]).unwrap();
+        let mut plain = ReferenceBackend::new(tiny_net());
+        let mut b = wrapped(FaultSpec {
+            garbage_rate: 1.0,
+            ..FaultSpec::default()
+        });
+        let garbage = b.run_batch(&x).unwrap();
+        let real = plain.run_batch(&x).unwrap();
+        assert_eq!(
+            (garbage.logits.rows, garbage.logits.cols),
+            (real.logits.rows, real.logits.cols),
+            "garbage must pass shape checks"
+        );
+        assert_ne!(garbage.logits, real.logits, "…but not be the real answer");
+        assert_eq!(b.counts().garbage, 1);
+    }
+
+    #[test]
+    fn panic_on_call_panics_exactly_there() {
+        let x = Matrix::from_vec(1, 16, vec![0.5; 16]).unwrap();
+        let mut b = wrapped(FaultSpec {
+            panic_on_call: Some(2),
+            ..FaultSpec::default()
+        });
+        assert!(b.run_batch(&x).is_ok());
+        let x2 = x.clone();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = b.run_batch(&x2);
+        }));
+        assert!(caught.is_err(), "call 2 must panic");
+        assert!(b.run_batch(&x).is_ok(), "call 3 runs again");
+    }
+
+    #[test]
+    fn latency_injection_sleeps() {
+        let x = Matrix::from_vec(1, 16, vec![0.5; 16]).unwrap();
+        let mut b = wrapped(FaultSpec {
+            latency_rate: 1.0,
+            added_latency: Duration::from_millis(5),
+            ..FaultSpec::default()
+        });
+        let t0 = std::time::Instant::now();
+        assert!(b.run_batch(&x).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(5));
+        assert_eq!(b.counts().delays, 1);
+    }
+
+    #[test]
+    fn spec_parses_the_cli_syntax() {
+        let s = FaultSpec::parse(
+            "error=0.1, garbage=0.05, panic=0.01, latency-us=200, latency-rate=0.5, \
+             fail-first=3, panic-on-call=7, seed=42",
+        )
+        .unwrap();
+        assert_eq!(s.error_rate, 0.1);
+        assert_eq!(s.garbage_rate, 0.05);
+        assert_eq!(s.panic_rate, 0.01);
+        assert_eq!(s.added_latency, Duration::from_micros(200));
+        assert_eq!(s.latency_rate, 0.5);
+        assert_eq!(s.fail_first, 3);
+        assert_eq!(s.panic_on_call, Some(7));
+        assert_eq!(s.seed, 42);
+        assert_eq!(FaultSpec::parse("").unwrap(), FaultSpec::default());
+    }
+
+    #[test]
+    fn spec_rejects_nonsense() {
+        for bad in ["error", "error=x", "bogus=1", "error=1.5", "panic=-0.1"] {
+            let err = FaultSpec::parse(bad).unwrap_err();
+            assert!(matches!(err, ServeError::InvalidConfig(_)), "{bad}: {err}");
+        }
+    }
+}

@@ -8,9 +8,36 @@
 //! (its deadline passed while queued; dropped at batch formation), and
 //! `cancelled` (withdrawn through its ticket before dispatch).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Circuit-breaker state of one replica, as tracked by the router's
+/// health layer and surfaced in [`MetricsSnapshot::health`].
+///
+/// ```text
+///            threshold consecutive failures
+///   Closed ─────────────────────────────────► Open   (ejected)
+///     ▲                                         │
+///     │ probe succeeds                          │ cooldown elapsed,
+///     │ (readmitted)                            ▼ one probe routed
+///     └──────────────────────────────────── HalfOpen
+///                                               │ probe fails
+///                                               └───────► Open
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum HealthState {
+    /// Healthy: in the routing rotation (the default).
+    #[default]
+    Closed,
+    /// Ejected: consecutive failures crossed the breaker threshold;
+    /// the replica receives no traffic until its probe cooldown
+    /// elapses.
+    Open,
+    /// Probing: exactly one request is in flight to test recovery;
+    /// success readmits (→ Closed), failure re-ejects (→ Open).
+    HalfOpen,
+}
 
 /// Internal accumulating state.
 #[derive(Debug, Default)]
@@ -20,6 +47,9 @@ struct State {
     rejected: u64,
     expired: u64,
     cancelled: u64,
+    retries: u64,
+    ejections: u64,
+    readmissions: u64,
     batches: u64,
     batch_rows_sum: u64,
     queue_us: Vec<f64>,
@@ -41,6 +71,10 @@ pub struct Metrics {
     /// Lock-free mirror of the latest summed per-shard backlog gauge,
     /// for the router's modeled-backlog policy.
     shard_backlog_fast: AtomicU64,
+    /// Circuit-breaker state of the replica these metrics belong to
+    /// (written by the router's health layer; [`HealthState::Closed`]
+    /// for replicas behind no router).
+    health: AtomicU8,
 }
 
 /// Immutable view of the metrics at a point in time.
@@ -62,6 +96,20 @@ pub struct MetricsSnapshot {
     /// Admitted requests withdrawn through their ticket (explicit
     /// `cancel()` or dropping the unresolved ticket) before dispatch.
     pub cancelled: u64,
+    /// Failed attempts the router transparently re-submitted to
+    /// another replica instead of surfacing to the ticket. Counted on
+    /// the replica whose failure *caused* the retry.
+    pub retries: u64,
+    /// Times the router's circuit breaker ejected this replica from
+    /// the routing rotation (Closed → Open).
+    pub ejections: u64,
+    /// Times a probe succeeded and the router readmitted this replica
+    /// (HalfOpen → Closed).
+    pub readmissions: u64,
+    /// Current circuit-breaker state of this replica
+    /// ([`HealthState::Closed`] when no router health layer is
+    /// involved).
+    pub health: HealthState,
     /// Batches executed.
     pub batches: u64,
     /// Mean rows per batch.
@@ -75,9 +123,10 @@ pub struct MetricsSnapshot {
     pub sim_cycles: u64,
     /// Per-shard queue depths reported by a multi-array backend after
     /// its most recent batch. For the sharded simulator: modeled cycles
-    /// each shard holds beyond the least-busy one (a bounded imbalance
-    /// gauge — the least-loaded shard reads 0). `None` for
-    /// single-device backends.
+    /// of **remaining work** each shard still owes beyond the device's
+    /// issue frontier — an absolute-load gauge that keeps growing with
+    /// queued commands even when the device balances its own shards
+    /// perfectly. `None` for single-device backends.
     pub shard_depths: Option<Vec<u64>>,
     /// Wall-clock span from first to last batch.
     pub wall: Duration,
@@ -156,6 +205,39 @@ impl Metrics {
         self.requests_fast.fetch_add(n as u64, Ordering::Relaxed);
     }
 
+    /// Record one failed attempt the router re-submitted elsewhere.
+    /// The failing attempt already settled the fast answered counter
+    /// through [`record_failures`](Self::record_failures), so this is
+    /// a pure router-level counter.
+    pub fn record_retry(&self) {
+        self.state.lock().unwrap().retries += 1;
+    }
+
+    /// Record one circuit-breaker ejection (Closed → Open).
+    pub fn record_ejection(&self) {
+        self.state.lock().unwrap().ejections += 1;
+    }
+
+    /// Record one readmission (a probe succeeded, HalfOpen → Closed).
+    pub fn record_readmission(&self) {
+        self.state.lock().unwrap().readmissions += 1;
+    }
+
+    /// Publish the replica's current circuit-breaker state (written by
+    /// the router's health layer on every transition).
+    pub fn set_health(&self, h: HealthState) {
+        self.health.store(h as u8, Ordering::Relaxed);
+    }
+
+    /// The replica's current circuit-breaker state.
+    pub fn health(&self) -> HealthState {
+        match self.health.load(Ordering::Relaxed) {
+            1 => HealthState::Open,
+            2 => HealthState::HalfOpen,
+            _ => HealthState::Closed,
+        }
+    }
+
     /// Answered-request count (successes + failures + expiries +
     /// cancellations) without taking the lock.
     pub fn requests_fast(&self) -> u64 {
@@ -187,6 +269,10 @@ impl Metrics {
             rejected: s.rejected,
             expired: s.expired,
             cancelled: s.cancelled,
+            retries: s.retries,
+            ejections: s.ejections,
+            readmissions: s.readmissions,
+            health: self.health(),
             batches: s.batches,
             mean_batch: if s.batches > 0 {
                 s.batch_rows_sum as f64 / s.batches as f64
@@ -267,9 +353,40 @@ mod tests {
         assert_eq!(s.rejected, 0);
         assert_eq!(s.expired, 0);
         assert_eq!(s.cancelled, 0);
+        assert_eq!(s.retries, 0);
+        assert_eq!(s.ejections, 0);
+        assert_eq!(s.readmissions, 0);
+        assert_eq!(s.health, HealthState::Closed);
         assert!(s.queue_us.is_none());
         assert!(s.shard_depths.is_none());
         assert_eq!(s.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn fault_tolerance_counters_are_pure_router_events() {
+        let m = Metrics::new();
+        m.record_retry();
+        m.record_retry();
+        m.record_ejection();
+        m.record_readmission();
+        let s = m.snapshot();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.ejections, 1);
+        assert_eq!(s.readmissions, 1);
+        // None of these settle the outstanding accounting: the failing
+        // attempt itself was already counted by record_failures.
+        assert_eq!(m.requests_fast(), 0);
+    }
+
+    #[test]
+    fn health_gauge_round_trips_every_state() {
+        let m = Metrics::new();
+        assert_eq!(m.health(), HealthState::Closed);
+        for h in [HealthState::Open, HealthState::HalfOpen, HealthState::Closed] {
+            m.set_health(h);
+            assert_eq!(m.health(), h);
+            assert_eq!(m.snapshot().health, h);
+        }
     }
 
     #[test]

@@ -33,7 +33,17 @@
 //! * [`router`] — replicas of one model behind a worker-selection
 //!   policy (round-robin, join-the-shortest-queue on host-side
 //!   outstanding counts, or [`RoutePolicy::ModeledBacklog`] on the
-//!   modeled backlogs sharded simulator workers report).
+//!   modeled backlogs sharded simulator workers report). The router is
+//!   also the fault-tolerance layer: per-replica circuit breakers
+//!   ([`HealthState`]: eject → probe → readmit), transparent retry of
+//!   failed attempts on healthy replicas under a [`RetryPolicy`]
+//!   (deadline- and budget-aware exponential backoff), and graceful
+//!   drain ([`Router::begin_drain`] — typed
+//!   [`ServeError::ShuttingDown`] while queued work flushes).
+//! * [`fault`] — deterministic, seedable chaos:
+//!   [`FaultInjectingBackend`] wraps any backend and injects typed
+//!   errors, latency, garbage logits, and panics at configured rates —
+//!   the harness the fault-tolerance layer is tested against.
 //! * [`engine`] — the top-level facade: **multiple named models
 //!   behind one submit surface**, one router-managed worker group per
 //!   model, built with the fluent [`EngineBuilder`].
@@ -56,6 +66,7 @@ pub mod backend;
 pub mod batcher;
 pub mod engine;
 pub mod error;
+pub mod fault;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -70,9 +81,10 @@ pub use backend::PjrtBackend;
 pub use batcher::{BatchPolicy, BatchQueue};
 pub use engine::{BackendFactory, Engine, EngineBuilder};
 pub use error::{ServeError, ServeResult};
-pub use metrics::MetricsSnapshot;
+pub use fault::{FaultInjectingBackend, FaultSpec, InjectionCounts};
+pub use metrics::{HealthState, MetricsSnapshot};
 pub use request::{InferenceRequest, InferenceResponse, Priority, SubmitOptions, Ticket};
-pub use router::{RoutePolicy, Router};
+pub use router::{RetryPolicy, RoutePolicy, RoutedTicket, Router};
 pub use server::{Server, ServerConfig, ROWS_PER_WORKER};
 
 // The kernel-parallelism budget carried by [`ServerConfig`] (and its

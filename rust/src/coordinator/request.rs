@@ -451,6 +451,12 @@ pub struct InferenceResponse {
     pub batch_size: usize,
     /// Simulated device cycles for the batch (simulator backend only).
     pub sim_cycles: Option<u64>,
+    /// Failed attempts the router transparently re-submitted before
+    /// this response was produced. Always 0 from a bare
+    /// [`Server`](super::server::Server); set by the router's retry
+    /// layer when the response travelled through a
+    /// [`RoutedTicket`](super::router::RoutedTicket).
+    pub retries: u32,
 }
 
 #[cfg(test)]
@@ -466,6 +472,7 @@ mod tests {
             compute_us: 10,
             batch_size: 1,
             sim_cycles: None,
+            retries: 0,
         }
     }
 

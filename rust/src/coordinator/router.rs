@@ -18,15 +18,44 @@
 //!   keeps the skew visible. Workers that report no depths score 0 and
 //!   fall back to the outstanding tie-break, so the policy degrades
 //!   gracefully to `LeastOutstanding` for single-device backends.
+//!
+//! # Fault tolerance
+//!
+//! The router is also the serving stack's reliability layer:
+//!
+//! * **Per-replica health.** Every worker carries a consecutive-failure
+//!   circuit breaker ([`HealthState`]): [`RetryPolicy::breaker_threshold`]
+//!   consecutive backend failures eject it from the routing rotation
+//!   (Closed → Open). After [`RetryPolicy::probe_cooldown`] the next
+//!   pick routes exactly **one** probe request to it (Open → HalfOpen);
+//!   a successful probe readmits it (→ Closed), a failed one re-ejects.
+//!   Ejections, readmissions, and the live state surface per replica in
+//!   [`MetricsSnapshot`].
+//! * **Retry with backoff.** [`submit_with`](Router::submit_with)
+//!   returns a [`RoutedTicket`]: when an attempt resolves with
+//!   [`ServeError::Backend`] (including contained worker panics) or
+//!   [`ServeError::ChannelClosed`], the ticket strikes the replica's
+//!   health and transparently re-submits to another replica — with
+//!   exponential backoff plus deterministic jitter, bounded by
+//!   [`RetryPolicy::max_attempts`], the request's own deadline, and
+//!   [`RetryPolicy::retry_budget`]. Synchronous
+//!   [`ServeError::Overloaded`] rejections are forwarded to the other
+//!   replicas before any error surfaces to the caller.
+//! * **Graceful drain.** [`begin_drain`](Router::begin_drain) closes
+//!   admission on every worker (typed [`ServeError::ShuttingDown`])
+//!   while queued work flushes; [`shutdown`](Router::shutdown) drains,
+//!   joins every worker, and returns the final metrics.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::backend::ExecutionBackend;
-use super::error::ServeError;
-use super::metrics::{Metrics, MetricsSnapshot};
+use super::error::{ServeError, ServeResult};
+use super::metrics::{HealthState, Metrics, MetricsSnapshot};
 use super::request::{InferenceResponse, SubmitOptions, Ticket};
 use super::server::{Server, ServerConfig};
+use crate::util::rng::Xoshiro256;
 
 /// Worker-selection policy.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -41,10 +70,185 @@ pub enum RoutePolicy {
     ModeledBacklog,
 }
 
+/// Retry and circuit-breaker policy applied by the router.
+///
+/// An *attempt* is one admission to one worker; `max_attempts` counts
+/// the first try, so `max_attempts == 1` (see [`none`](Self::none))
+/// disables re-submission entirely while keeping health tracking
+/// active. Backoff before retry `k` (1-based) is
+/// `base_backoff · 2^(k−1)`, capped at `max_backoff`, then jittered
+/// deterministically into `[½·d, d]` from [`seed`](Self::seed) and the
+/// ticket's sequence number — two routers with the same seed replay
+/// the same jitter schedule.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total admission attempts per request, including the first
+    /// (validated ≥ 1).
+    pub max_attempts: u32,
+    /// Backoff before the first retry.
+    pub base_backoff: Duration,
+    /// Ceiling on any single backoff.
+    pub max_backoff: Duration,
+    /// Wall-clock budget across *all* retries of one request, measured
+    /// from first admission; `None` leaves only the request deadline
+    /// and `max_attempts` as bounds.
+    pub retry_budget: Option<Duration>,
+    /// Consecutive failures that eject a replica (Closed → Open).
+    pub breaker_threshold: u32,
+    /// Time an ejected replica sits out before the router routes one
+    /// probe request to it (Open → HalfOpen).
+    pub probe_cooldown: Duration,
+    /// Seed for the deterministic backoff jitter.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(500),
+            max_backoff: Duration::from_millis(50),
+            retry_budget: None,
+            breaker_threshold: 3,
+            probe_cooldown: Duration::from_millis(10),
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// No re-submission (a single attempt per request); health
+    /// tracking and the circuit breaker stay active.
+    pub fn none() -> Self {
+        Self {
+            max_attempts: 1,
+            ..Self::default()
+        }
+    }
+
+    /// Reject contradictory policies before any worker starts.
+    pub fn validate(&self) -> Result<(), ServeError> {
+        if self.max_attempts == 0 {
+            return Err(ServeError::InvalidConfig(
+                "RetryPolicy::max_attempts must be at least 1 (the first attempt)".into(),
+            ));
+        }
+        if self.breaker_threshold == 0 {
+            return Err(ServeError::InvalidConfig(
+                "RetryPolicy::breaker_threshold must be at least 1".into(),
+            ));
+        }
+        Ok(())
+    }
+
+    /// Backoff before retry `retry_index` (0-based), jittered into
+    /// `[½·d, d]`.
+    fn backoff(&self, retry_index: u32, rng: &mut Xoshiro256) -> Duration {
+        let factor = 1u32 << retry_index.min(16);
+        let exp = self
+            .base_backoff
+            .saturating_mul(factor)
+            .min(self.max_backoff);
+        exp.mul_f64(0.5 + 0.5 * rng.next_f64())
+    }
+}
+
+/// Circuit-breaker state values (mirrors [`HealthState`]).
+const CLOSED: u8 = 0;
+const OPEN: u8 = 1;
+const HALF_OPEN: u8 = 2;
+
+/// Per-worker breaker: consecutive-failure counter + state machine.
+struct Health {
+    state: AtomicU8,
+    consecutive: AtomicU32,
+    /// Microseconds since the router epoch at which the breaker last
+    /// opened (probe-cooldown anchor).
+    opened_at_us: AtomicU64,
+}
+
+impl Health {
+    fn new() -> Self {
+        Self {
+            state: AtomicU8::new(CLOSED),
+            consecutive: AtomicU32::new(0),
+            opened_at_us: AtomicU64::new(0),
+        }
+    }
+
+    fn state(&self) -> HealthState {
+        match self.state.load(Ordering::Acquire) {
+            OPEN => HealthState::Open,
+            HALF_OPEN => HealthState::HalfOpen,
+            _ => HealthState::Closed,
+        }
+    }
+
+    /// One observed failure. Ejects at `threshold` consecutive ones; a
+    /// failed probe re-ejects. Every transition *into* Open counts as
+    /// an ejection.
+    fn strike(&self, threshold: u32, now_us: u64, metrics: &Metrics) {
+        let c = self.consecutive.fetch_add(1, Ordering::AcqRel) + 1;
+        let opened = if c >= threshold {
+            self.state
+                .compare_exchange(CLOSED, OPEN, Ordering::AcqRel, Ordering::Acquire)
+                .is_ok()
+        } else {
+            false
+        };
+        // A failed probe re-ejects regardless of the counter.
+        let reopened = self
+            .state
+            .compare_exchange(HALF_OPEN, OPEN, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok();
+        if opened || reopened {
+            self.opened_at_us.store(now_us, Ordering::Release);
+            metrics.record_ejection();
+            metrics.set_health(HealthState::Open);
+        }
+    }
+
+    /// One observed success. Resets the failure streak; a successful
+    /// probe readmits the replica.
+    fn ok(&self, metrics: &Metrics) {
+        self.consecutive.store(0, Ordering::Release);
+        if self
+            .state
+            .compare_exchange(HALF_OPEN, CLOSED, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            metrics.record_readmission();
+            metrics.set_health(HealthState::Closed);
+        }
+    }
+
+    /// Claim this worker for a single probe if it is Open and its
+    /// cooldown has elapsed. At most one caller wins the CAS, so at
+    /// most one probe is ever in flight.
+    fn try_probe(&self, cooldown: Duration, now_us: u64, metrics: &Metrics) -> bool {
+        if self.state.load(Ordering::Acquire) != OPEN {
+            return false;
+        }
+        let opened = self.opened_at_us.load(Ordering::Acquire);
+        if now_us.saturating_sub(opened) < cooldown.as_micros() as u64 {
+            return false;
+        }
+        let won = self
+            .state
+            .compare_exchange(OPEN, HALF_OPEN, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok();
+        if won {
+            metrics.set_health(HealthState::HalfOpen);
+        }
+        won
+    }
+}
+
 struct Worker {
     server: Server,
     submitted: AtomicU64,
     metrics: Arc<Metrics>,
+    health: Health,
 }
 
 impl Worker {
@@ -55,25 +259,46 @@ impl Worker {
     }
 }
 
-/// The router: owns one [`Server`] per backend.
+/// The router: owns one [`Server`] per backend, plus the health and
+/// retry layer between them and the caller.
 pub struct Router {
     workers: Vec<Worker>,
     policy: RoutePolicy,
+    retry: RetryPolicy,
     next: AtomicU64,
+    /// Ticket sequence: decorrelates per-ticket jitter streams.
+    ticket_seq: AtomicU64,
+    /// Anchor for the breaker's probe-cooldown clock.
+    epoch: Instant,
 }
 
 impl Router {
-    /// Start one server per backend, all with the same serving config.
+    /// Start one server per backend, all with the same serving config,
+    /// under the default [`RetryPolicy`] (up to 3 attempts, breaker
+    /// threshold 3).
     pub fn start(
         backends: Vec<Box<dyn ExecutionBackend>>,
         config: ServerConfig,
         policy: RoutePolicy,
+    ) -> Result<Self, ServeError> {
+        Self::start_with_retry(backends, config, policy, RetryPolicy::default())
+    }
+
+    /// Start with an explicit retry / circuit-breaker policy
+    /// ([`RetryPolicy::none`] restores the PR-5 behaviour of surfacing
+    /// every failure to its ticket unretried).
+    pub fn start_with_retry(
+        backends: Vec<Box<dyn ExecutionBackend>>,
+        config: ServerConfig,
+        policy: RoutePolicy,
+        retry: RetryPolicy,
     ) -> Result<Self, ServeError> {
         if backends.is_empty() {
             return Err(ServeError::InvalidConfig(
                 "router needs at least one backend".into(),
             ));
         }
+        retry.validate()?;
         let workers = backends
             .into_iter()
             .map(|b| {
@@ -83,13 +308,17 @@ impl Router {
                     server,
                     submitted: AtomicU64::new(0),
                     metrics,
+                    health: Health::new(),
                 })
             })
             .collect::<Result<Vec<_>, ServeError>>()?;
         Ok(Self {
             workers,
             policy,
+            retry,
             next: AtomicU64::new(0),
+            ticket_seq: AtomicU64::new(0),
+            epoch: Instant::now(),
         })
     }
 
@@ -98,47 +327,186 @@ impl Router {
         self.workers.len()
     }
 
-    /// Pick a worker index under the configured policy.
-    fn pick(&self) -> usize {
+    /// The configured retry / circuit-breaker policy.
+    pub fn retry_policy(&self) -> RetryPolicy {
+        self.retry
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Pick a worker index under the configured policy from `eligible`
+    /// (non-empty).
+    fn pick_among(&self, eligible: &[usize]) -> usize {
         match self.policy {
             RoutePolicy::RoundRobin => {
-                (self.next.fetch_add(1, Ordering::Relaxed) as usize) % self.workers.len()
+                eligible[(self.next.fetch_add(1, Ordering::Relaxed) as usize) % eligible.len()]
             }
-            RoutePolicy::LeastOutstanding => self
-                .workers
+            RoutePolicy::LeastOutstanding => eligible
                 .iter()
-                .enumerate()
-                .min_by_key(|(_, w)| w.outstanding())
-                .map(|(i, _)| i)
+                .copied()
+                .min_by_key(|&i| self.workers[i].outstanding())
                 .unwrap(),
-            RoutePolicy::ModeledBacklog => self
-                .workers
+            RoutePolicy::ModeledBacklog => eligible
                 .iter()
-                .enumerate()
-                .min_by_key(|(_, w)| (w.metrics.shard_backlog_fast(), w.outstanding()))
-                .map(|(i, _)| i)
+                .copied()
+                .min_by_key(|&i| {
+                    let w = &self.workers[i];
+                    (w.metrics.shard_backlog_fast(), w.outstanding())
+                })
                 .unwrap(),
         }
     }
 
-    /// Submit with explicit QoS options; returns (worker index,
-    /// ticket). Admission rejections ([`ServeError::Overloaded`]) come
-    /// from the chosen worker's bounded queue — the router does not
-    /// retry another worker, so backpressure stays visible to the
-    /// caller.
+    /// Route one request: probe an ejected-but-cooled-down worker if
+    /// any, otherwise pick among healthy workers (falling back to the
+    /// full set when every worker is ejected — availability over
+    /// purity), skipping `exclude` when an alternative exists.
+    fn route(&self, exclude: Option<usize>) -> usize {
+        let now_us = self.now_us();
+        for (i, w) in self.workers.iter().enumerate() {
+            if Some(i) == exclude {
+                continue;
+            }
+            if w.health.try_probe(self.retry.probe_cooldown, now_us, &w.metrics) {
+                return i;
+            }
+        }
+        let mut eligible: Vec<usize> = (0..self.workers.len())
+            .filter(|&i| {
+                Some(i) != exclude && self.workers[i].health.state() == HealthState::Closed
+            })
+            .collect();
+        if eligible.is_empty() {
+            // Every alternative is ejected or probing: routing nowhere
+            // helps nobody, so route among whatever exists.
+            eligible = (0..self.workers.len())
+                .filter(|&i| Some(i) != exclude)
+                .collect();
+        }
+        if eligible.is_empty() {
+            // Single-worker router retrying against itself.
+            return exclude.unwrap_or(0);
+        }
+        self.pick_among(&eligible)
+    }
+
+    /// One admission pass: route, and on [`ServeError::Overloaded`]
+    /// forward to each remaining non-ejected worker before giving up.
+    /// Non-overload rejections (width, drain, …) surface immediately.
+    fn admit(
+        &self,
+        features: Vec<f32>,
+        opts: SubmitOptions,
+        exclude: Option<usize>,
+    ) -> Result<(usize, Ticket), ServeError> {
+        let first = self.route(exclude);
+        if self.workers.len() == 1 {
+            // Nobody to forward to: move the features instead of
+            // cloning them for a scan that cannot happen.
+            let t = self.workers[first].server.submit_with(features, opts)?;
+            self.workers[first].submitted.fetch_add(1, Ordering::Relaxed);
+            return Ok((first, t));
+        }
+        let mut last_err = match self.workers[first].server.submit_with(features.clone(), opts) {
+            Ok(t) => {
+                self.workers[first].submitted.fetch_add(1, Ordering::Relaxed);
+                return Ok((first, t));
+            }
+            Err(e @ ServeError::Overloaded { .. }) => e,
+            Err(e) => return Err(e),
+        };
+        for i in 0..self.workers.len() {
+            if i == first || Some(i) == exclude {
+                continue;
+            }
+            if self.workers[i].health.state() != HealthState::Closed {
+                continue;
+            }
+            match self.workers[i].server.submit_with(features.clone(), opts) {
+                Ok(t) => {
+                    self.workers[i].submitted.fetch_add(1, Ordering::Relaxed);
+                    return Ok((i, t));
+                }
+                Err(e @ ServeError::Overloaded { .. }) => last_err = e,
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_err)
+    }
+
+    /// Record a success observed on worker `i`.
+    fn note_success(&self, i: usize) {
+        self.workers[i].health.ok(&self.workers[i].metrics);
+    }
+
+    /// Record a failure observed on worker `i` (breaker strike).
+    fn note_failure(&self, i: usize) {
+        self.workers[i]
+            .health
+            .strike(self.retry.breaker_threshold, self.now_us(), &self.workers[i].metrics);
+    }
+
+    /// Submit with explicit QoS options; returns (first worker index,
+    /// ticket). The returned [`RoutedTicket`] transparently retries
+    /// [`ServeError::Backend`] / [`ServeError::ChannelClosed`] results
+    /// on other replicas within the [`RetryPolicy`]; synchronous
+    /// [`ServeError::Overloaded`] rejections are forwarded across
+    /// replicas (with backoff between full scans) before surfacing, so
+    /// backpressure is only visible once the whole group is saturated.
     pub fn submit_with(
         &self,
         features: Vec<f32>,
         opts: SubmitOptions,
-    ) -> Result<(usize, Ticket), ServeError> {
-        let i = self.pick();
-        let ticket = self.workers[i].server.submit_with(features, opts)?;
-        self.workers[i].submitted.fetch_add(1, Ordering::Relaxed);
-        Ok((i, ticket))
+    ) -> Result<(usize, RoutedTicket<'_>), ServeError> {
+        let started = Instant::now();
+        let abs_deadline = opts.deadline.map(|d| started + d);
+        let seq = self.ticket_seq.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Xoshiro256::seed_from_u64(self.retry.seed ^ seq.wrapping_mul(0x9E37_79B9));
+        // Keep a copy for re-submission only when retries are possible.
+        let held = (self.retry.max_attempts > 1).then(|| features.clone());
+        let mut attempts = 0u32;
+        let mut pending = features;
+        loop {
+            attempts += 1;
+            match self.admit(pending, opts, None) {
+                Ok((i, ticket)) => {
+                    return Ok((
+                        i,
+                        RoutedTicket {
+                            router: self,
+                            worker: i,
+                            inner: Some(ticket),
+                            features: held,
+                            opts,
+                            abs_deadline,
+                            started,
+                            attempts,
+                            retries: 0,
+                            rng,
+                        },
+                    ));
+                }
+                Err(e @ ServeError::Overloaded { .. }) => {
+                    let Some(ref kept) = held else { return Err(e) };
+                    if attempts >= self.retry.max_attempts {
+                        return Err(e);
+                    }
+                    let wait = self.retry.backoff(attempts - 1, &mut rng);
+                    match bounded_backoff(wait, started, abs_deadline, self.retry.retry_budget) {
+                        Some(d) => std::thread::sleep(d),
+                        None => return Err(e),
+                    }
+                    pending = kept.clone();
+                }
+                Err(e) => return Err(e),
+            }
+        }
     }
 
     /// Submit with default options; returns (worker index, ticket).
-    pub fn submit(&self, features: Vec<f32>) -> Result<(usize, Ticket), ServeError> {
+    pub fn submit(&self, features: Vec<f32>) -> Result<(usize, RoutedTicket<'_>), ServeError> {
         self.submit_with(features, SubmitOptions::default())
     }
 
@@ -153,13 +521,29 @@ impl Router {
         self.workers.iter().map(|w| w.outstanding()).collect()
     }
 
+    /// Per-worker circuit-breaker states.
+    pub fn health(&self) -> Vec<HealthState> {
+        self.workers.iter().map(|w| w.health.state()).collect()
+    }
+
     /// Per-worker live metrics snapshots.
     pub fn metrics(&self) -> Vec<MetricsSnapshot> {
         self.workers.iter().map(|w| w.server.metrics()).collect()
     }
 
-    /// Stop all workers, returning their final metrics.
+    /// Close admission on every worker (typed
+    /// [`ServeError::ShuttingDown`]) while queued work keeps flushing.
+    /// Idempotent; [`shutdown`](Self::shutdown) implies it.
+    pub fn begin_drain(&self) {
+        for w in &self.workers {
+            w.server.begin_drain();
+        }
+    }
+
+    /// Gracefully stop all workers — drain admission, flush queues,
+    /// join worker threads — returning their final metrics.
     pub fn shutdown(self) -> Vec<MetricsSnapshot> {
+        self.begin_drain();
         self.workers
             .into_iter()
             .map(|w| w.server.shutdown())
@@ -167,12 +551,224 @@ impl Router {
     }
 }
 
+/// Cap `wait` to what the deadline and retry budget leave; `None`
+/// means no time remains and the retry must not happen.
+fn bounded_backoff(
+    wait: Duration,
+    started: Instant,
+    abs_deadline: Option<Instant>,
+    budget: Option<Duration>,
+) -> Option<Duration> {
+    let now = Instant::now();
+    let mut wait = wait;
+    if let Some(d) = abs_deadline {
+        if now >= d {
+            return None;
+        }
+        wait = wait.min(d - now);
+    }
+    if let Some(b) = budget {
+        let spent = now.saturating_duration_since(started);
+        if spent >= b {
+            return None;
+        }
+        wait = wait.min(b - spent);
+    }
+    Some(wait)
+}
+
+/// Owned handle to one router-managed request: wraps the current
+/// attempt's [`Ticket`] and transparently re-submits retryable
+/// failures to another replica (see [`Router::submit_with`]).
+///
+/// Mirrors the [`Ticket`] surface — [`wait`](Self::wait),
+/// [`wait_timeout`](Self::wait_timeout), [`try_wait`](Self::try_wait),
+/// [`cancel`](Self::cancel) — with retry folded into the waiting
+/// methods; `wait_timeout`/`try_wait` take `&mut self` because a retry
+/// replaces the inner ticket. Successful responses carry the retry
+/// count in [`InferenceResponse::retries`]. Dropping the handle
+/// cancels the current attempt if it is still queued, exactly like
+/// dropping a [`Ticket`].
+pub struct RoutedTicket<'r> {
+    router: &'r Router,
+    worker: usize,
+    inner: Option<Ticket>,
+    /// A copy of the features for re-submission; `None` when the
+    /// policy allows a single attempt (no copy is kept).
+    features: Option<Vec<f32>>,
+    opts: SubmitOptions,
+    abs_deadline: Option<Instant>,
+    started: Instant,
+    attempts: u32,
+    retries: u32,
+    rng: Xoshiro256,
+}
+
+/// What to do after observing one attempt's result.
+enum Verdict {
+    /// Result is final: hand it to the caller.
+    Done(ServeResult),
+    /// The attempt was retried; keep waiting on the new inner ticket.
+    Retried,
+}
+
+impl RoutedTicket<'_> {
+    /// Server-assigned id of the *current* attempt (a retry re-admits
+    /// under a fresh id).
+    pub fn id(&self) -> u64 {
+        self.inner.as_ref().map(|t| t.id()).unwrap_or(0)
+    }
+
+    /// Worker index of the current attempt.
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Completed transparent retries so far.
+    pub fn retries(&self) -> u32 {
+        self.retries
+    }
+
+    /// Withdraw the current attempt if still queued (see
+    /// [`Ticket::cancel`]); no further retries happen for a cancelled
+    /// ticket.
+    pub fn cancel(&self) -> bool {
+        self.inner.as_ref().is_some_and(|t| t.cancel())
+    }
+
+    fn remaining_opts(&self, now: Instant) -> Option<SubmitOptions> {
+        match self.abs_deadline {
+            None => Some(self.opts),
+            Some(d) if now >= d => None,
+            Some(d) => Some(SubmitOptions {
+                deadline: Some(d - now),
+                ..self.opts
+            }),
+        }
+    }
+
+    /// Process one attempt's result: feed the health layer, then
+    /// either finalize or re-submit. `sleep_cap` bounds the backoff
+    /// (for `wait_timeout`, which must not overshoot its window).
+    fn settle(&mut self, result: ServeResult, sleep_cap: Option<Duration>) -> Verdict {
+        let worker = self.worker;
+        match result {
+            Ok(mut resp) => {
+                self.router.note_success(worker);
+                resp.retries = self.retries;
+                Verdict::Done(Ok(resp))
+            }
+            Err(e @ (ServeError::Backend { .. } | ServeError::ChannelClosed)) => {
+                self.router.note_failure(worker);
+                let Some(ref features) = self.features else {
+                    return Verdict::Done(Err(e));
+                };
+                if self.attempts >= self.router.retry.max_attempts {
+                    return Verdict::Done(Err(e));
+                }
+                let wait = self.router.retry.backoff(self.retries, &mut self.rng);
+                let wait = match bounded_backoff(
+                    wait,
+                    self.started,
+                    self.abs_deadline,
+                    self.router.retry.retry_budget,
+                ) {
+                    Some(d) => match sleep_cap {
+                        Some(cap) => d.min(cap),
+                        None => d,
+                    },
+                    None => return Verdict::Done(Err(e)),
+                };
+                if !wait.is_zero() {
+                    std::thread::sleep(wait);
+                }
+                let Some(opts) = self.remaining_opts(Instant::now()) else {
+                    return Verdict::Done(Err(e));
+                };
+                match self.router.admit(features.clone(), opts, Some(worker)) {
+                    Ok((j, ticket)) => {
+                        // The failed attempt was already settled by the
+                        // worker (record_failures); the retry is a pure
+                        // router event on the replica that caused it.
+                        self.router.workers[worker].metrics.record_retry();
+                        self.worker = j;
+                        self.inner = Some(ticket);
+                        self.attempts += 1;
+                        self.retries += 1;
+                        Verdict::Retried
+                    }
+                    // Re-admission failed synchronously (all replicas
+                    // overloaded or draining): surface that, it is the
+                    // current truth.
+                    Err(e2) => Verdict::Done(Err(e2)),
+                }
+            }
+            Err(other) => Verdict::Done(Err(other)),
+        }
+    }
+
+    /// Block until the request resolves, retrying failed attempts
+    /// within the policy. Returns the same typed errors as
+    /// [`Ticket::wait`], plus whatever the *last* attempt surfaced
+    /// when the retry budget ran out.
+    pub fn wait(mut self) -> ServeResult {
+        loop {
+            let ticket = self.inner.take().expect("routed ticket has an attempt");
+            match self.settle(ticket.wait(), None) {
+                Verdict::Done(r) => return r,
+                Verdict::Retried => {}
+            }
+        }
+    }
+
+    /// Wait up to `timeout`; `None` means the request (or its current
+    /// retry) is still in flight and the ticket remains waitable.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<ServeResult> {
+        let end = Instant::now() + timeout;
+        loop {
+            let now = Instant::now();
+            let window = end.saturating_duration_since(now);
+            let result = self.inner.as_ref()?.wait_timeout(window)?;
+            let cap = end.saturating_duration_since(Instant::now());
+            let ticket = self.inner.take();
+            match self.settle(result, Some(cap)) {
+                Verdict::Done(r) => {
+                    drop(ticket);
+                    return Some(r);
+                }
+                Verdict::Retried => drop(ticket),
+            }
+        }
+    }
+
+    /// Non-blocking poll; `None` means still in flight. A retryable
+    /// failure triggers an immediate (no-backoff) re-submission and
+    /// reports "still in flight".
+    pub fn try_wait(&mut self) -> Option<ServeResult> {
+        let result = self.inner.as_ref()?.try_wait()?;
+        let ticket = self.inner.take();
+        match self.settle(result, Some(Duration::ZERO)) {
+            Verdict::Done(r) => {
+                drop(ticket);
+                Some(r)
+            }
+            Verdict::Retried => {
+                drop(ticket);
+                None
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::backend::{ReferenceBackend, SimulatorBackend};
-    use crate::coordinator::BatchPolicy;
+    use crate::bf16::Matrix;
+    use crate::coordinator::backend::{BatchOutput, ReferenceBackend, SimulatorBackend};
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::coordinator::fault::{FaultInjectingBackend, FaultSpec};
     use crate::nn::{Network, NetworkConfig, Precision};
+    use crate::util::par::Parallelism;
     use std::time::Duration;
 
     fn net(seed: u64) -> Network {
@@ -293,5 +889,230 @@ mod tests {
             .err()
             .expect("empty router must be rejected");
         assert!(matches!(err, ServeError::InvalidConfig(_)));
+    }
+
+    #[test]
+    fn invalid_retry_policy_rejected() {
+        let err = Router::start_with_retry(
+            vec![ReferenceBackend::boxed(net(1))],
+            config(),
+            RoutePolicy::RoundRobin,
+            RetryPolicy {
+                max_attempts: 0,
+                ..RetryPolicy::default()
+            },
+        )
+        .err()
+        .expect("max_attempts 0 must be rejected");
+        assert!(matches!(err, ServeError::InvalidConfig(_)), "{err}");
+        assert!(RetryPolicy {
+            breaker_threshold: 0,
+            ..RetryPolicy::default()
+        }
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn backoff_is_exponential_capped_and_jittered() {
+        let p = RetryPolicy {
+            base_backoff: Duration::from_millis(1),
+            max_backoff: Duration::from_millis(4),
+            ..RetryPolicy::default()
+        };
+        let mut rng = Xoshiro256::seed_from_u64(1);
+        let b0 = p.backoff(0, &mut rng);
+        let b1 = p.backoff(1, &mut rng);
+        let b9 = p.backoff(9, &mut rng);
+        assert!(b0 >= Duration::from_micros(500) && b0 <= Duration::from_millis(1), "{b0:?}");
+        assert!(b1 >= Duration::from_millis(1) && b1 <= Duration::from_millis(2), "{b1:?}");
+        assert!(b9 <= Duration::from_millis(4), "cap holds: {b9:?}");
+        // Deterministic per seed.
+        let mut r1 = Xoshiro256::seed_from_u64(9);
+        let mut r2 = Xoshiro256::seed_from_u64(9);
+        assert_eq!(p.backoff(2, &mut r1), p.backoff(2, &mut r2));
+    }
+
+    /// Always fails with a typed error.
+    struct AlwaysFails;
+    impl ExecutionBackend for AlwaysFails {
+        fn run_batch_with(
+            &mut self,
+            _batch: &Matrix,
+            _par: Parallelism,
+        ) -> anyhow::Result<BatchOutput> {
+            anyhow::bail!("permanently broken")
+        }
+        fn tag(&self) -> &str {
+            "always-fails"
+        }
+        fn input_width(&self) -> Option<usize> {
+            Some(784)
+        }
+        fn num_classes(&self) -> Option<usize> {
+            Some(10)
+        }
+    }
+
+    #[test]
+    fn retry_forwards_backend_failures_to_a_healthy_replica() {
+        let router = Router::start(
+            vec![Box::new(AlwaysFails), ReferenceBackend::boxed(net(1))],
+            ServerConfig {
+                policy: BatchPolicy::unbatched(),
+                ..Default::default()
+            },
+            RoutePolicy::RoundRobin,
+        )
+        .unwrap();
+        // Every request succeeds even though worker 0 always fails: the
+        // failed attempt is transparently forwarded to worker 1.
+        for _ in 0..6 {
+            let resp = router.infer(vec![0.2; 784]).unwrap();
+            assert!(resp.retries <= 2);
+        }
+        let m = router.shutdown();
+        assert_eq!(m[1].requests, 6, "all work lands on the healthy replica");
+        assert!(m[0].failures >= 1);
+        assert_eq!(m[0].retries, m[0].failures, "every failure was retried");
+    }
+
+    #[test]
+    fn without_retry_failures_surface_to_the_ticket() {
+        let router = Router::start_with_retry(
+            vec![Box::new(AlwaysFails), ReferenceBackend::boxed(net(1))],
+            ServerConfig {
+                policy: BatchPolicy::unbatched(),
+                ..Default::default()
+            },
+            RoutePolicy::RoundRobin,
+            RetryPolicy::none(),
+        )
+        .unwrap();
+        let mut errors = 0;
+        for _ in 0..6 {
+            if router.infer(vec![0.2; 784]).is_err() {
+                errors += 1;
+            }
+        }
+        assert!(errors >= 1, "unretried failures must surface");
+        let m = router.shutdown();
+        assert_eq!(m[0].retries, 0);
+    }
+
+    #[test]
+    fn breaker_ejects_probes_and_readmits() {
+        // Worker 0 fails its first two batches, then recovers; with
+        // threshold 2 the breaker must eject it after the second
+        // failure, route a probe after the cooldown, and readmit it.
+        let faulty = FaultInjectingBackend::boxed(
+            ReferenceBackend::boxed(net(1)),
+            FaultSpec {
+                fail_first: 2,
+                ..FaultSpec::default()
+            },
+        );
+        let retry = RetryPolicy {
+            breaker_threshold: 2,
+            probe_cooldown: Duration::from_millis(5),
+            ..RetryPolicy::default()
+        };
+        let router = Router::start_with_retry(
+            vec![faulty, ReferenceBackend::boxed(net(1))],
+            ServerConfig {
+                policy: BatchPolicy::unbatched(),
+                ..Default::default()
+            },
+            RoutePolicy::RoundRobin,
+            retry,
+        )
+        .unwrap();
+        // Drive until the breaker opens (bounded).
+        let mut ejected = false;
+        for _ in 0..20 {
+            router.infer(vec![0.2; 784]).unwrap();
+            if router.health()[0] == HealthState::Open {
+                ejected = true;
+                break;
+            }
+        }
+        assert!(ejected, "worker 0 must be ejected: {:?}", router.health());
+        // While Open it receives no routine traffic.
+        let before = router.metrics()[0].failures;
+        router.infer(vec![0.2; 784]).unwrap();
+        assert_eq!(router.metrics()[0].failures, before, "no traffic while ejected");
+        // After the cooldown a probe goes through and readmits it.
+        std::thread::sleep(Duration::from_millis(8));
+        let mut readmitted = false;
+        for _ in 0..20 {
+            router.infer(vec![0.2; 784]).unwrap();
+            if router.health()[0] == HealthState::Closed
+                && router.metrics()[0].readmissions >= 1
+            {
+                readmitted = true;
+                break;
+            }
+        }
+        assert!(readmitted, "worker 0 must be readmitted: {:?}", router.health());
+        let m = router.shutdown();
+        assert_eq!(m[0].ejections, 1);
+        assert_eq!(m[0].readmissions, 1);
+        assert_eq!(m[0].health, HealthState::Closed);
+        assert_eq!(m[0].failures, 2, "exactly the scripted outage");
+    }
+
+    #[test]
+    fn drain_closes_admission_and_flushes() {
+        let router = Router::start(
+            vec![ReferenceBackend::boxed(net(1))],
+            config(),
+            RoutePolicy::RoundRobin,
+        )
+        .unwrap();
+        let (_, queued) = router.submit(vec![0.1; 784]).unwrap();
+        router.begin_drain();
+        assert_eq!(
+            router.submit(vec![0.1; 784]).unwrap_err(),
+            ServeError::ShuttingDown
+        );
+        assert!(queued.wait().is_ok(), "queued work flushes during drain");
+        let m = router.shutdown();
+        assert_eq!(m[0].requests, 1);
+    }
+
+    #[test]
+    fn deadline_bounds_retries() {
+        // A single permanently-broken worker with a short deadline:
+        // retries must stop at the deadline, not spin max_attempts
+        // times past it.
+        let router = Router::start_with_retry(
+            vec![Box::new(AlwaysFails)],
+            ServerConfig {
+                policy: BatchPolicy::unbatched(),
+                ..Default::default()
+            },
+            RoutePolicy::RoundRobin,
+            RetryPolicy {
+                max_attempts: 100,
+                base_backoff: Duration::from_millis(20),
+                max_backoff: Duration::from_millis(20),
+                ..RetryPolicy::default()
+            },
+        )
+        .unwrap();
+        let t0 = Instant::now();
+        let (_, ticket) = router
+            .submit_with(
+                vec![0.2; 784],
+                SubmitOptions::default().with_deadline(Duration::from_millis(40)),
+            )
+            .unwrap();
+        assert!(ticket.wait().is_err());
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "deadline must bound the retry loop, took {:?}",
+            t0.elapsed()
+        );
+        router.shutdown();
     }
 }

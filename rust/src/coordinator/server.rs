@@ -15,7 +15,7 @@
 //! and backend failures arrive on the ticket as the `Err` arm of a
 //! [`ServeResult`](super::error::ServeResult).
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -104,6 +104,10 @@ pub struct Server {
     /// expiry, or teardown).
     depth: Arc<AtomicUsize>,
     queue_capacity: Option<usize>,
+    /// Set by [`begin_drain`](Self::begin_drain): admission is closed
+    /// (`submit` returns [`ServeError::ShuttingDown`]) while the worker
+    /// keeps flushing already-queued work.
+    draining: Arc<AtomicBool>,
     /// Input width every request must match. `0` means "not yet known":
     /// the backend declared no width, so the first accepted request
     /// pins it (batches must be rectangular). Shared with the worker,
@@ -220,8 +224,29 @@ impl Server {
                 // Shape-check the backend's answer: a misbehaving
                 // third-party engine must become a typed error for this
                 // batch, not an out-of-bounds panic that kills the
-                // worker.
-                let result = backend.run_batch_with(&features, parallelism).and_then(|out| {
+                // worker. The call itself runs under `catch_unwind`: a
+                // panicking backend (driver bug, injected chaos) is
+                // contained to this batch — the requests get a typed
+                // [`ServeError::Backend`] and the worker thread lives
+                // on to serve the next batch, instead of dying silently
+                // with the whole replica. `AssertUnwindSafe` is sound
+                // here because on unwind the backend is only ever
+                // touched again through `run_batch_with` (whose
+                // implementations own their state) and the rest of the
+                // captured state (`features`, metrics) is not mutated
+                // mid-call.
+                let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    backend.run_batch_with(&features, parallelism)
+                }))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "opaque panic payload".into());
+                    Err(anyhow::anyhow!("backend panicked: {msg}"))
+                })
+                .and_then(|out| {
                     ensure!(
                         out.logits.rows == rows && out.logits.cols > 0,
                         "backend returned {}x{} logits for a {rows}-row batch",
@@ -290,6 +315,7 @@ impl Server {
                         compute_us,
                         batch_size: rows,
                         sim_cycles: out.sim_cycles,
+                        retries: 0,
                     }));
                 }
             }
@@ -301,6 +327,7 @@ impl Server {
             next_id: AtomicU64::new(0),
             depth: Arc::new(AtomicUsize::new(0)),
             queue_capacity: config.queue_capacity,
+            draining: Arc::new(AtomicBool::new(false)),
             expected_width,
         })
     }
@@ -352,6 +379,9 @@ impl Server {
         features: Vec<f32>,
         opts: SubmitOptions,
     ) -> Result<Ticket, ServeError> {
+        if self.draining.load(Ordering::Acquire) {
+            return Err(ServeError::ShuttingDown);
+        }
         self.check_width(features.len())?;
         // Admission: claim a slot, give it back if over the bound. The
         // momentary overshoot of a losing racer is bounded by the
@@ -408,9 +438,29 @@ impl Server {
         Arc::clone(&self.metrics)
     }
 
-    /// Stop the server, returning the final metrics.
+    /// Close admission without stopping the worker: subsequent
+    /// `submit` calls fail fast with [`ServeError::ShuttingDown`],
+    /// while every already-admitted request still resolves normally —
+    /// served, expired, or cancelled, each with its typed outcome.
+    /// Idempotent. [`shutdown`](Self::shutdown) implies it.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::Release);
+    }
+
+    /// True once [`begin_drain`](Self::begin_drain) (or `shutdown`)
+    /// has closed admission.
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::Acquire)
+    }
+
+    /// Stop the server gracefully: close admission
+    /// ([`begin_drain`](Self::begin_drain)), flush the queue (every
+    /// queued request is served — or expired/cancelled with its typed
+    /// error — before the worker exits), join the worker, and return
+    /// the final metrics.
     pub fn shutdown(mut self) -> MetricsSnapshot {
-        self.tx.take(); // close the queue; worker drains and exits
+        self.begin_drain();
+        self.tx.take(); // close the queue; worker flushes and exits
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -732,6 +782,76 @@ mod tests {
             }
         );
         server.shutdown();
+    }
+
+    #[test]
+    fn begin_drain_closes_admission_but_flushes_queued_work() {
+        let server = Server::start(tiny_backend(), ServerConfig::default()).unwrap();
+        let queued = server.submit(vec![0.4; 784]).unwrap();
+        server.begin_drain();
+        assert!(server.is_draining());
+        // New work is refused with the drain-specific error…
+        assert_eq!(
+            server.submit(vec![0.4; 784]).unwrap_err(),
+            ServeError::ShuttingDown
+        );
+        // …while already-admitted work still resolves normally.
+        assert!(queued.wait().is_ok());
+        let m = server.shutdown();
+        assert_eq!(m.requests, 1);
+        assert_eq!(m.rejected, 0, "drain refusals are not admission rejections");
+    }
+
+    #[test]
+    fn worker_survives_a_panicking_backend() {
+        // Panics on its first batch, then behaves.
+        struct Grenade {
+            armed: bool,
+        }
+        impl ExecutionBackend for Grenade {
+            fn run_batch_with(
+                &mut self,
+                batch: &Matrix,
+                _par: Parallelism,
+            ) -> anyhow::Result<BatchOutput> {
+                if self.armed {
+                    self.armed = false;
+                    panic!("kaboom");
+                }
+                Ok(BatchOutput {
+                    logits: Matrix::zeros(batch.rows, 2),
+                    sim_cycles: None,
+                })
+            }
+            fn tag(&self) -> &str {
+                "grenade"
+            }
+            fn input_width(&self) -> Option<usize> {
+                Some(4)
+            }
+        }
+        let server = Server::start(
+            Box::new(Grenade { armed: true }),
+            ServerConfig {
+                policy: BatchPolicy::unbatched(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        // The panic surfaces as a typed Backend error on the ticket…
+        match server.infer(vec![0.1; 4]).unwrap_err() {
+            ServeError::Backend { backend, message } => {
+                assert_eq!(backend, "grenade");
+                assert!(message.contains("panicked"), "{message}");
+                assert!(message.contains("kaboom"), "{message}");
+            }
+            other => panic!("expected Backend error, got {other:?}"),
+        }
+        // …and the worker thread is alive to serve the next request.
+        assert_eq!(server.infer(vec![0.1; 4]).unwrap().logits.len(), 2);
+        let m = server.shutdown();
+        assert_eq!(m.failures, 1);
+        assert_eq!(m.requests, 1);
     }
 
     #[test]

@@ -20,7 +20,8 @@ use anyhow::{bail, Result};
 
 use beanna::bf16::format::render_fig1;
 use beanna::coordinator::{
-    BatchPolicy, Engine, EngineBuilder, Priority, RoutePolicy, ServeError, ServeResult,
+    BackendFactory, BatchPolicy, Engine, EngineBuilder, FaultInjectingBackend, FaultSpec,
+    HealthState, Priority, ReferenceBackend, RetryPolicy, RoutePolicy, ServeError, ServeResult,
     ShardedSimulatorBackend, SimulatorBackend, SubmitOptions,
 };
 use beanna::data::SynthMnist;
@@ -175,10 +176,13 @@ fn parse_priority(s: &str) -> Result<Priority> {
 }
 
 /// Register `model` on the builder with the backend kind selected on
-/// the CLI (`ref` keeps the builder's reference default; the PJRT
-/// branch surfaces `ServeError::Unavailable` at build time when the
-/// feature is off — no `#[cfg]` needed here). `shards > 1` upgrades the
-/// sim backend to the sharded multi-array device model.
+/// the CLI (the PJRT branch surfaces `ServeError::Unavailable` at
+/// build time when the feature is off — no `#[cfg]` needed here).
+/// `shards > 1` upgrades the sim backend to the sharded multi-array
+/// device model. A `fault` spec wraps every replica in a
+/// [`FaultInjectingBackend`], decorrelating the per-replica fault
+/// schedules by folding the replica index into the seed (replica 0
+/// keeps the spec's own seed).
 fn with_cli_backend(
     builder: EngineBuilder,
     kind: &str,
@@ -186,6 +190,7 @@ fn with_cli_backend(
     model: &str,
     max_batch: usize,
     shards: usize,
+    fault: Option<FaultSpec>,
 ) -> Result<EngineBuilder> {
     // ref/sim execute the host weights, so they are required; the PJRT
     // artifact carries its own weights — the network is only shape
@@ -197,19 +202,29 @@ fn with_cli_backend(
         Network::load(&paths.weights(model))?
     };
     let builder = builder.model(model, net);
-    Ok(match kind {
-        "ref" => builder,
-        "sim" if shards > 1 => {
-            builder.backend(move |net, _i| Ok(ShardedSimulatorBackend::boxed(net.clone(), shards)))
-        }
-        "sim" => builder.backend(|net, _i| Ok(SimulatorBackend::boxed(net.clone()))),
+    let mut base: BackendFactory = match kind {
+        "ref" => Box::new(|net: &Network, _i| Ok(ReferenceBackend::boxed(net.clone()))),
+        "sim" if shards > 1 => Box::new(move |net: &Network, _i| {
+            Ok(ShardedSimulatorBackend::boxed(net.clone(), shards))
+        }),
+        "sim" => Box::new(|net: &Network, _i| Ok(SimulatorBackend::boxed(net.clone()))),
         "pjrt" => {
             let paths = paths.clone();
             let model = model.to_string();
-            builder.backend(move |_net, _i| beanna::coordinator::pjrt(&paths, &model, max_batch))
+            Box::new(move |_net: &Network, _i| beanna::coordinator::pjrt(&paths, &model, max_batch))
         }
         other => bail!("unknown backend '{other}' (use sim | ref | pjrt)"),
-    })
+    };
+    Ok(builder.backend(move |net, i| {
+        let backend = base(net, i)?;
+        Ok(match fault {
+            Some(spec) => FaultInjectingBackend::boxed(
+                backend,
+                spec.with_seed(spec.seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            ),
+            None => backend,
+        })
+    }))
 }
 
 fn cmd_infer(args: Vec<String>) -> Result<()> {
@@ -238,13 +253,13 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
     }
     let model = p.get("model").unwrap().to_string();
     let builder = Engine::builder().batch_policy(BatchPolicy::unbatched());
-    let engine =
-        with_cli_backend(builder, p.get("backend").unwrap(), &paths, &model, 1, 1)?.build()?;
+    let engine = with_cli_backend(builder, p.get("backend").unwrap(), &paths, &model, 1, 1, None)?
+        .build()?;
     let opts = SubmitOptions {
         priority: parse_priority(p.get("priority").unwrap())?,
         deadline: None,
     };
-    let ticket = engine.submit_with(&model, test.images.row(idx).to_vec(), opts)?;
+    let mut ticket = engine.submit_with(&model, test.images.row(idx).to_vec(), opts)?;
     let resp = match p.get_u64("timeout-ms")? {
         0 => ticket.wait()?,
         ms => match ticket.wait_timeout(std::time::Duration::from_millis(ms)) {
@@ -261,7 +276,7 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
         },
     };
     println!(
-        "label {}  predicted {}  (model {}, batch {}, compute {} µs{})",
+        "label {}  predicted {}  (model {}, batch {}, compute {} µs{}{})",
         test.labels[idx],
         resp.prediction,
         model,
@@ -270,6 +285,10 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
         match resp.sim_cycles {
             Some(c) => format!(", {c} device cycles"),
             None => String::new(),
+        },
+        match resp.retries {
+            0 => String::new(),
+            n => format!(", {n} transparent retr{}", if n == 1 { "y" } else { "ies" }),
         }
     );
     engine.shutdown();
@@ -315,6 +334,20 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             "per-request deadline; requests still queued past it are dropped \
              before dispatch (0 = none)",
         )
+        .opt(
+            "retry-max",
+            "3",
+            "admission attempts per request; failed attempts transparently \
+             move to a healthy replica (1 = no retry)",
+        )
+        .opt(
+            "fault-spec",
+            "",
+            "chaos demo: wrap every replica in a fault injector, e.g. \
+             'error=0.1,latency-rate=0.2,latency-us=500,seed=7' \
+             (keys: error, garbage, panic, latency-rate, latency-us, \
+             fail-first, panic-on-call, seed)",
+        )
         .flag(
             "pool-batch",
             "clamp dynamic batches to the kernel pool's row budget",
@@ -348,6 +381,14 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     if queue_capacity > 0 {
         builder = builder.queue_capacity(queue_capacity);
     }
+    builder = builder.retry_policy(RetryPolicy {
+        max_attempts: p.get_usize("retry-max")?.max(1) as u32,
+        ..Default::default()
+    });
+    let fault = match p.get("fault-spec").unwrap() {
+        "" => None,
+        s => Some(FaultSpec::parse(s)?),
+    };
     let opts = match p.get_u64("deadline-ms")? {
         0 => SubmitOptions::default(),
         ms => SubmitOptions::default().with_deadline(std::time::Duration::from_millis(ms)),
@@ -359,7 +400,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         "--shards applies to the sim backend only"
     );
     for model in &models {
-        builder = with_cli_backend(builder, kind, &paths, model, max_batch, shards)?;
+        builder = with_cli_backend(builder, kind, &paths, model, max_batch, shards, fault)?;
         builder = builder.replicas(replicas);
     }
     let engine = builder.build()?;
@@ -368,7 +409,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
     // queue, `Overloaded` is real backpressure: settle the oldest
     // in-flight ticket, then retry the rejected submission.
     let n = p.get_usize("requests")?.min(test.len());
-    let mut pending: std::collections::VecDeque<(usize, beanna::coordinator::Ticket)> =
+    let mut pending: std::collections::VecDeque<(usize, beanna::coordinator::RoutedTicket<'_>)> =
         std::collections::VecDeque::new();
     let mut correct = 0usize;
     let mut served = 0usize;
@@ -456,6 +497,15 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                     m.rejected, m.expired, m.cancelled
                 );
             }
+            if m.retries + m.ejections + m.readmissions > 0 {
+                print!(
+                    ", {} retried away / {} ejections / {} readmissions",
+                    m.retries, m.ejections, m.readmissions
+                );
+            }
+            if m.health != HealthState::Closed {
+                print!(", breaker {:?}", m.health);
+            }
             if let Some(q) = &m.queue_us {
                 print!(", queue µs p50 {:.0} p99 {:.0}", q.median, q.p99);
             }
@@ -467,7 +517,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                 );
             }
             if let Some(depths) = &m.shard_depths {
-                print!(", shard imbalance (cy) {depths:?}");
+                print!(", shard remaining work (cy) {depths:?}");
             }
             println!();
         }

@@ -238,8 +238,10 @@ impl ShardedAccelerator {
     /// many modeled cycles each shard holds beyond the earliest-free
     /// one (the least-busy shard always reads 0). Unlike
     /// [`shard_backlogs`](Self::shard_backlogs) this is bounded under a
-    /// saturated command stream, which makes it the queue-depth signal
-    /// a load-aware router can act on.
+    /// saturated command stream — but it is blind to *total* load: a
+    /// device whose scheduler balances internally reads all-zero here
+    /// whether it is idle or drowning. Routers comparing devices should
+    /// use [`shard_remaining_work`](Self::shard_remaining_work).
     pub fn shard_imbalance(&self) -> Vec<u64> {
         let floor = self
             .shards
@@ -250,6 +252,30 @@ impl ShardedAccelerator {
         self.shards
             .iter()
             .map(|s| s.busy_until - floor)
+            .collect()
+    }
+
+    /// Per-shard **remaining work**: modeled cycles each shard still
+    /// owes beyond the device's issue frontier — `busy_until` minus the
+    /// later of the arrival clock and the front-end's free cycle.
+    ///
+    /// This is the absolute-load twin of
+    /// [`shard_imbalance`](Self::shard_imbalance): a device whose
+    /// scheduler keeps its own shards perfectly balanced reads all-zero
+    /// imbalance at any load, while remaining work still grows with
+    /// every queued command — exactly the signal a router comparing
+    /// *devices* (rather than shards within one) needs. Anchoring at
+    /// the front-end frontier instead of a wall clock keeps the gauge
+    /// meaningful for callers that never advance the arrival clock
+    /// (back-to-back submissions): it then measures queued execution
+    /// cycles beyond what the front-end has already issued, bounded by
+    /// the backlog actually outstanding rather than growing with
+    /// simulated idle time.
+    pub fn shard_remaining_work(&self) -> Vec<u64> {
+        let frontier = self.now.max(self.frontend_free);
+        self.shards
+            .iter()
+            .map(|s| s.busy_until.saturating_sub(frontier))
             .collect()
     }
 
@@ -469,6 +495,40 @@ mod tests {
         let imbalance = dev.shard_imbalance();
         assert_eq!(imbalance.iter().min(), Some(&0));
         assert!(imbalance.iter().all(|&d| d < report.makespan));
+    }
+
+    #[test]
+    fn remaining_work_sees_total_load_where_imbalance_reads_zero() {
+        let net = tiny_net(9);
+        let x = inputs(2, 30);
+        // Round-robin over equal jobs keeps the two shards perfectly
+        // balanced: the imbalance gauge flatlines while remaining work
+        // keeps growing with every queued command.
+        let mut dev =
+            ShardedAccelerator::with_policy(AcceleratorConfig::sharded(2), ShardPolicy::RoundRobin);
+        assert_eq!(dev.shard_remaining_work(), vec![0, 0], "idle device owes nothing");
+        let mut first_imbalance = None;
+        let mut last_total = 0u64;
+        for round in 0..3 {
+            dev.submit(&net, &x).unwrap();
+            dev.submit(&net, &x).unwrap();
+            // Balanced shards: the relative gauge flatlines at the
+            // constant front-end issue skew, blind to the growing queue…
+            let imbalance: u64 = dev.shard_imbalance().iter().sum();
+            let first = *first_imbalance.get_or_insert(imbalance);
+            assert_eq!(imbalance, first, "round {round}: imbalance must not grow");
+            // …while remaining work grows with every queued command.
+            let total: u64 = dev.shard_remaining_work().iter().sum();
+            assert!(
+                total > last_total,
+                "round {round}: remaining work must grow with queued load \
+                 ({total} vs {last_total})"
+            );
+            last_total = total;
+        }
+        // Advancing the clock past the makespan drains the gauge.
+        dev.advance(dev.makespan() + 1);
+        assert_eq!(dev.shard_remaining_work(), vec![0, 0]);
     }
 
     #[test]

@@ -19,8 +19,8 @@ use std::time::Duration;
 
 use beanna::bf16::Matrix;
 use beanna::coordinator::{
-    BatchOutput, BatchPolicy, ExecutionBackend, Parallelism, ReferenceBackend, ServeError,
-    Server, ServerConfig, ShardedSimulatorBackend, SimulatorBackend,
+    BatchOutput, BatchPolicy, ExecutionBackend, FaultInjectingBackend, FaultSpec, Parallelism,
+    ReferenceBackend, ServeError, Server, ServerConfig, ShardedSimulatorBackend, SimulatorBackend,
 };
 use beanna::nn::{Network, NetworkConfig, Precision};
 use beanna::util::rng::Xoshiro256;
@@ -132,6 +132,40 @@ fn sharded_simulator_backend_conforms() {
     for shards in [1usize, 3] {
         assert_conforms(&mut || ShardedSimulatorBackend::boxed(net.clone(), shards), &net);
     }
+}
+
+/// The fault wrapper at rate zero is invisible: every in-tree backend
+/// still passes the whole conformance contract when wrapped in a
+/// `FaultInjectingBackend` with the default (fault-free) spec. This is
+/// the transparency guarantee the chaos tests lean on — any behaviour
+/// difference they observe comes from the injected faults, never from
+/// the wrapper itself.
+#[test]
+fn fault_wrapper_at_rate_zero_is_transparent_for_every_backend() {
+    let net = shared_net();
+    // A nonzero seed proves transparency is structural (no faults
+    // configured), not an accident of one PRNG stream.
+    let spec = FaultSpec {
+        seed: 0xC0FFEE,
+        ..FaultSpec::default()
+    };
+    assert!(spec.is_transparent());
+    assert_conforms(
+        &mut || FaultInjectingBackend::boxed(ReferenceBackend::boxed(net.clone()), spec),
+        &net,
+    );
+    assert_conforms(
+        &mut || FaultInjectingBackend::boxed(SimulatorBackend::boxed(net.clone()), spec),
+        &net,
+    );
+    assert_conforms(
+        &mut || FaultInjectingBackend::boxed(ShardedSimulatorBackend::boxed(net.clone(), 2), spec),
+        &net,
+    );
+    // The wrapper announces itself in the tag, so a misrouted faulty
+    // backend stays identifiable in `ServeError::Backend`.
+    let b = FaultInjectingBackend::boxed(SimulatorBackend::boxed(net), spec);
+    assert_eq!(b.tag(), "faulty-sim");
 }
 
 /// Sharding changes modeled time only: every shard's logits are

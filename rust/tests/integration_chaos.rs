@@ -1,0 +1,225 @@
+//! Chaos soak: the fault-tolerance acceptance test the CI matrix runs
+//! under several seeds (`BEANNA_CHAOS_SEED`, default 1).
+//!
+//! A three-replica router serves a mixed workload — interactive, bulk,
+//! zero-deadline (guaranteed-to-expire), and cancelled requests —
+//! while replica 0 misbehaves behind a seeded [`FaultInjectingBackend`]
+//! (a deterministic opening outage, then random typed errors and
+//! worker panics). The invariants, per seed:
+//!
+//! * every ticket resolves with a typed outcome — no hangs, no
+//!   sentinels, no unexpected error variants;
+//! * counters reconcile: each replica's admissions equal its served +
+//!   failed + expired + cancelled requests (observed as every
+//!   outstanding gauge draining to zero), and every recorded failure
+//!   was either transparently retried or surfaced to exactly one
+//!   ticket;
+//! * the faulty replica is ejected by the circuit breaker and later
+//!   readmitted by a successful probe, while the healthy replicas are
+//!   never ejected;
+//! * with two healthy replicas and retry enabled, **no** backend fault
+//!   ever surfaces to a caller.
+
+use std::time::Duration;
+
+use beanna::coordinator::{
+    BatchPolicy, ExecutionBackend, FaultInjectingBackend, FaultSpec, ReferenceBackend, RetryPolicy,
+    RoutePolicy, Router, ServeError, ServerConfig, SubmitOptions,
+};
+use beanna::nn::{Network, NetworkConfig, Precision};
+
+fn chaos_seed() -> u64 {
+    std::env::var("BEANNA_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1)
+}
+
+fn small_net() -> Network {
+    Network::random(
+        &NetworkConfig {
+            sizes: vec![12, 16, 4],
+            precisions: vec![Precision::Bf16, Precision::Bf16],
+        },
+        9,
+    )
+}
+
+/// Three replicas of one model — replica 0 wrapped in the given fault
+/// spec, replicas 1 and 2 clean — behind an aggressive retry policy.
+fn chaos_router(spec: FaultSpec) -> Router {
+    let net = small_net();
+    let backends: Vec<Box<dyn ExecutionBackend>> = vec![
+        FaultInjectingBackend::boxed(ReferenceBackend::boxed(net.clone()), spec),
+        ReferenceBackend::boxed(net.clone()),
+        ReferenceBackend::boxed(net),
+    ];
+    Router::start_with_retry(
+        backends,
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+            },
+            ..Default::default()
+        },
+        RoutePolicy::RoundRobin,
+        RetryPolicy {
+            max_attempts: 3,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(2),
+            retry_budget: None,
+            breaker_threshold: 3,
+            probe_cooldown: Duration::from_millis(1),
+            seed: spec.seed,
+        },
+    )
+    .unwrap()
+}
+
+fn wait_until(cond: impl Fn() -> bool) {
+    for _ in 0..2000 {
+        if cond() {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    panic!("condition not reached within 2s");
+}
+
+#[test]
+fn chaos_soak_resolves_every_ticket_and_reconciles_counters() {
+    let router = chaos_router(FaultSpec {
+        // Deterministic opening outage: three consecutive failures,
+        // exactly the breaker threshold — ejection is guaranteed on
+        // every seed, not left to the random draws.
+        fail_first: 3,
+        error_rate: 0.05,
+        panic_rate: 0.02,
+        seed: chaos_seed(),
+        ..FaultSpec::default()
+    });
+    const WAVES: usize = 40;
+    const WAVE: usize = 4;
+    let (mut ok, mut expired, mut cancelled) = (0u64, 0u64, 0u64);
+    let mut retried_tickets = 0u64;
+    for wave in 0..WAVES {
+        // Small concurrent waves: submissions overlap (so faults,
+        // probes, and retries interleave) but the loop stays closed
+        // enough that the queues drain continuously.
+        let mut tickets = Vec::new();
+        for k in 0..WAVE {
+            let i = wave * WAVE + k;
+            let opts = match i % 8 {
+                // Guaranteed expiry: swept at batch formation, never
+                // reaches any backend, never retried.
+                3 => SubmitOptions::default().with_deadline(Duration::ZERO),
+                5 => SubmitOptions::bulk(),
+                _ => SubmitOptions::default(),
+            };
+            let features = vec![0.1 * (i % 10) as f32; 12];
+            let (_, ticket) = router.submit_with(features, opts).unwrap();
+            // Withdraw a slice of the traffic mid-flight (never the
+            // zero-deadline tickets — expiry vs. cancel would race).
+            // The cancel may still lose the dispatch race, in which
+            // case the request resolves normally; both outcomes are
+            // legal and typed.
+            if i % 13 == 7 && i % 8 != 3 {
+                ticket.cancel();
+            }
+            tickets.push(ticket);
+        }
+        for t in tickets {
+            match t.wait() {
+                Ok(resp) => {
+                    assert_eq!(resp.logits.len(), 4);
+                    if resp.retries > 0 {
+                        retried_tickets += 1;
+                    }
+                    ok += 1;
+                }
+                Err(ServeError::DeadlineExceeded { .. }) => expired += 1,
+                Err(ServeError::Cancelled) => cancelled += 1,
+                Err(other) => panic!("untyped or unexpected chaos outcome: {other:?}"),
+            }
+        }
+    }
+    // Every ticket resolved to exactly one typed outcome, and every
+    // zero-deadline ticket expired (none ever reached a backend).
+    assert_eq!(ok + expired + cancelled, (WAVES * WAVE) as u64);
+    assert_eq!(expired, (WAVES * WAVE / 8) as u64);
+    // With two always-healthy replicas and three attempts, no backend
+    // fault ever surfaces: the match above would have panicked on
+    // `ServeError::Backend`, and the opening outage alone guarantees
+    // at least one transparent retry happened.
+    assert!(retried_tickets >= 1, "the opening outage must be retried");
+    // Per-replica reconciliation: admissions = served + failures +
+    // expired + cancelled on every replica — nothing leaked, no slot
+    // released twice. (A missed release would pin a gauge above zero;
+    // a double release could never keep all three gauges *at* zero
+    // once later traffic lands.)
+    wait_until(|| router.outstanding() == vec![0, 0, 0]);
+    let live = router.metrics();
+    assert_eq!(live.iter().map(|s| s.requests).sum::<u64>(), ok);
+    assert_eq!(live.iter().map(|s| s.expired).sum::<u64>(), expired);
+    assert_eq!(live.iter().map(|s| s.cancelled).sum::<u64>(), cancelled);
+    // Probes only fire when requests route, so keep a trickle of
+    // traffic flowing until one readmits the faulty replica. (It may
+    // already have happened mid-soak; then this loop exits at once.)
+    let mut trickle_ok = 0u64;
+    for _ in 0..2000 {
+        if router.metrics()[0].readmissions >= 1 {
+            break;
+        }
+        assert!(router.infer(vec![0.2; 12]).is_ok());
+        trickle_ok += 1;
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let m = router.shutdown();
+    // Breaker lifecycle: the opening outage ejected replica 0; a later
+    // successful probe readmitted it. Healthy replicas never ejected.
+    assert!(m[0].ejections >= 1, "faulty replica never ejected: {:?}", m[0]);
+    assert!(m[0].readmissions >= 1, "never readmitted: {:?}", m[0]);
+    assert_eq!(m[1].ejections + m[2].ejections, 0);
+    assert_eq!(m[1].failures + m[2].failures, 0, "healthy replicas must not fail");
+    // Global attempt accounting: every recorded failure was retried
+    // (none surfaced), and successes match the ticket tally.
+    let failures: u64 = m.iter().map(|s| s.failures).sum();
+    let retries: u64 = m.iter().map(|s| s.retries).sum();
+    assert_eq!(failures, retries, "a failure neither retried nor surfaced");
+    assert_eq!(m.iter().map(|s| s.requests).sum::<u64>(), ok + trickle_ok);
+    // The healthy replicas carried real traffic throughout.
+    assert!(m[1].requests > 0 && m[2].requests > 0);
+}
+
+/// Drain under chaos: `begin_drain` mid-flight closes admission with a
+/// typed `ShuttingDown` while every already-admitted ticket still
+/// resolves. The fault here is injected *latency* (no failures), so
+/// none of the in-flight tickets needs a post-drain re-admission —
+/// drain must flush them all.
+#[test]
+fn drain_under_chaos_is_typed_and_flushes_in_flight_work() {
+    let router = chaos_router(FaultSpec {
+        latency_rate: 0.5,
+        added_latency: Duration::from_millis(1),
+        seed: chaos_seed() ^ 0xD5A1,
+        ..FaultSpec::default()
+    });
+    let tickets: Vec<_> = (0..12)
+        .map(|i| router.submit(vec![0.05 * i as f32; 12]).unwrap().1)
+        .collect();
+    router.begin_drain();
+    match router.submit(vec![0.0; 12]) {
+        Err(ServeError::ShuttingDown) => {}
+        Err(other) => panic!("draining router must refuse with ShuttingDown, got {other:?}"),
+        Ok(_) => panic!("draining router admitted new work"),
+    }
+    for t in tickets {
+        match t.wait() {
+            Ok(resp) => assert_eq!(resp.logits.len(), 4),
+            Err(other) => panic!("in-flight work lost during drain: {other:?}"),
+        }
+    }
+    let m = router.shutdown();
+    assert_eq!(m.iter().map(|s| s.requests).sum::<u64>(), 12);
+}

@@ -10,8 +10,8 @@ use std::time::Duration;
 
 use beanna::bf16::Matrix;
 use beanna::coordinator::{
-    BatchOutput, BatchPolicy, ExecutionBackend, Parallelism, RoutePolicy, Router, ServeError,
-    Server, ServerConfig, ShardedSimulatorBackend, SubmitOptions,
+    BatchOutput, BatchPolicy, ExecutionBackend, FaultInjectingBackend, FaultSpec, Parallelism,
+    RoutePolicy, Router, ServeError, Server, ServerConfig, ShardedSimulatorBackend, SubmitOptions,
 };
 use beanna::nn::{Network, NetworkConfig, Precision};
 
@@ -374,6 +374,66 @@ fn ticket_side_expiry_frees_slot_while_worker_is_busy() {
     assert_eq!(m.requests, 2);
     assert_eq!(m.expired, 1, "the swept corpse is recorded as expired");
     assert_eq!(calls.load(Ordering::SeqCst), 2);
+}
+
+/// The retry/cancel race: a request fails on a faulty replica, is
+/// transparently re-admitted to a healthy one, and *then* its ticket
+/// is dropped while the retry is still queued behind a busy worker.
+/// The admission slot must be released exactly once (the cancel), the
+/// retried request must never execute, and every counter must still
+/// reconcile — submitted = served + failures + expired + cancelled on
+/// each replica, with the retry charged to the replica that caused it.
+#[test]
+fn dropped_ticket_during_retry_releases_its_slot_exactly_once() {
+    let (gated, gate, entered, calls, order) = Gated::boxed();
+    // Replica 1 always fails; the error draw short-circuits before its
+    // (never-opened) inner gate, so it fails *fast*.
+    let (inner, _g2, _e2, _c2, _o2) = Gated::boxed();
+    let faulty = FaultInjectingBackend::boxed(inner, FaultSpec::errors(1.0, 11));
+    let router = Router::start(
+        vec![gated, faulty],
+        ServerConfig {
+            policy: BatchPolicy::unbatched(),
+            queue_capacity: Some(4),
+            ..Default::default()
+        },
+        RoutePolicy::RoundRobin,
+    )
+    .unwrap();
+    // Round-robin: the blocker lands on replica 0 and parks inside the
+    // gated backend.
+    let (w0, blocker) = router.submit(feats(1.0)).unwrap();
+    assert_eq!(w0, 0);
+    wait_until(|| entered.load(Ordering::SeqCst) == 1);
+    // The victim lands on replica 1, fails, and — inside this bounded
+    // wait — retries onto replica 0, where it queues behind the
+    // blocker. The wait then times out with the retry still queued.
+    let (w1, mut victim) = router.submit(feats(2.0)).unwrap();
+    assert_eq!(w1, 1);
+    assert!(victim.wait_timeout(Duration::from_millis(300)).is_none());
+    assert_eq!(victim.retries(), 1, "the failure must have been retried");
+    assert_eq!(victim.worker(), 0, "the retry must move to the healthy replica");
+    assert_eq!(router.outstanding(), vec![2, 0]);
+    // Drop the ticket mid-retry: the queued re-admission is cancelled
+    // and its slot released — once.
+    drop(victim);
+    open_gate(&gate);
+    assert!(blocker.wait().is_ok());
+    wait_until(|| router.outstanding() == vec![0, 0]);
+    let m = router.shutdown();
+    // Replica 0: served the blocker, swept the cancelled retry.
+    assert_eq!(m[0].requests, 1);
+    assert_eq!(m[0].cancelled, 1, "the cancel must be counted exactly once");
+    assert_eq!(m[0].failures, 0);
+    assert_eq!(m[0].retries, 0);
+    // Replica 1: one failure, which caused the one retry.
+    assert_eq!(m[1].requests, 0);
+    assert_eq!(m[1].failures, 1);
+    assert_eq!(m[1].retries, 1);
+    assert_eq!(m[1].cancelled, 0);
+    // The cancelled retry provably never executed.
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+    assert_eq!(*order.lock().unwrap(), vec![1.0]);
 }
 
 /// A `ShardedSimulatorBackend` wrapper that exposes the device's

@@ -203,11 +203,11 @@ fn sharded_backend_serves_and_reports_depths() {
     assert_eq!(m.requests, 6);
     let depths = m.shard_depths.expect("sharded backend must report depths");
     assert_eq!(depths.len(), 2);
-    // The gauge is relative to the least-busy shard: it reads 0 there
-    // (bounded — it must not grow with total work served) and the
-    // issue-offset imbalance on the other.
-    assert_eq!(depths.iter().min(), Some(&0), "{depths:?}");
-    assert!(depths.iter().any(|&d| d > 0), "{depths:?}");
+    // The gauge is absolute remaining work past the issue frontier:
+    // back-to-back serving leaves every shard owing modeled cycles, so
+    // the device's total load is visible even though its own scheduler
+    // keeps the shards balanced.
+    assert!(depths.iter().all(|&d| d > 0), "{depths:?}");
     let m_single = single.shutdown();
     assert!(m_single.shard_depths.is_none());
 }
