@@ -1,0 +1,171 @@
+//! Wire overhead and reconnect-storm availability of the remote
+//! backend seam: the same reference backend driven in-process, over a
+//! loopback `WorkerHost`, and over a wire that keeps tearing its
+//! connections down.
+//!
+//! ```bash
+//! cargo bench --bench remote_serving
+//! BEANNA_BENCH_QUICK=1 cargo bench --bench remote_serving   # CI-sized run
+//! ```
+//!
+//! Three closed-loop modes on bit-identical weights:
+//!
+//! * **inproc** — `ReferenceBackend` called directly: the floor.
+//! * **remote** — the same backend behind `beanna`'s framed protocol
+//!   on loopback TCP: the pure wire tax (serialize + syscalls + CRC).
+//! * **storm** — the remote wire with seeded mid-request disconnects;
+//!   each torn connection surfaces as one typed failure while the
+//!   supervisor re-dials, and the loop resumes once readmitted.
+//!
+//! Every successful response is asserted bit-identical to the local
+//! forward pass — the bench doubles as a wire-integrity check. Emits
+//! `BENCH_remote.json` for the CI perf-trajectory diff: `*_p99_ms`
+//! regress when they rise relatively, `remote_storm_fail_rate` when it
+//! rises absolutely.
+
+use std::time::{Duration, Instant};
+
+use beanna::bf16::Matrix;
+use beanna::coordinator::{ExecutionBackend, ReferenceBackend, RetryPolicy};
+use beanna::nn::{Network, NetworkConfig, Precision};
+use beanna::report::JsonValue;
+use beanna::transport::{RemoteBackend, RemoteConfig, TransportFaultSpec, WorkerConfig, WorkerHost};
+use beanna::util::stats::Summary;
+
+fn bench_net() -> Network {
+    Network::random(&NetworkConfig::uniform(&[12, 16, 4], Precision::Bf16), 9)
+}
+
+/// Tight client timeouts so storm recoveries are milliseconds, not the
+/// production-default seconds.
+fn quick_remote_config() -> RemoteConfig {
+    RemoteConfig {
+        connect_timeout: Duration::from_millis(500),
+        read_timeout: Duration::from_secs(2),
+        write_timeout: Duration::from_millis(500),
+        heartbeat_interval: Duration::from_millis(100),
+        reconnect: RetryPolicy {
+            base_backoff: Duration::from_millis(2),
+            max_backoff: Duration::from_millis(20),
+            ..RetryPolicy::default()
+        },
+        ..RemoteConfig::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BEANNA_BENCH_QUICK").as_deref() == Ok("1");
+    let n = if quick { 400 } else { 3000 };
+    let net = bench_net();
+    let x = Matrix::from_vec(1, 12, vec![0.25; 12])?;
+    let want = net.forward(&x)?;
+
+    println!("== remote serving seam: {n} closed-loop 1-row requests per mode ==");
+
+    // Mode 1: the in-process floor.
+    let mut local = ReferenceBackend::new(net.clone());
+    let mut lat = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let out = local.run_batch(&x)?;
+        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(out.logits, want);
+    }
+    let inproc = Summary::of(&lat);
+
+    // Mode 2: the same backend behind loopback TCP.
+    let host = WorkerHost::start(
+        ReferenceBackend::boxed(net.clone()),
+        "127.0.0.1:0",
+        WorkerConfig::default(),
+    )?;
+    let mut remote = RemoteBackend::connect(host.local_addr(), quick_remote_config())?;
+    let mut lat = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let out = remote.run_batch(&x)?;
+        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        assert_eq!(out.logits, want, "the wire changed the logits");
+    }
+    let wire = Summary::of(&lat);
+    // Free the host for the storm client (one connection at a time).
+    drop(remote);
+
+    // Mode 3: seeded disconnect storm on the same worker. The hello
+    // itself draws from the fault schedule, so vary the seed until a
+    // connect lands (reconnects decorrelate per connection on their
+    // own).
+    let mut attempt = 0u64;
+    let mut stormy = loop {
+        let mut config = quick_remote_config();
+        config.faults = TransportFaultSpec::disconnects(0.02, 7 + attempt);
+        match RemoteBackend::connect(host.local_addr(), config) {
+            Ok(r) => break r,
+            Err(_) => attempt += 1,
+        }
+        anyhow::ensure!(attempt < 50, "storm connect never succeeded");
+    };
+    let mut lat = Vec::with_capacity(n);
+    let mut fails = 0u64;
+    for _ in 0..n {
+        let t0 = Instant::now();
+        match stormy.run_batch(&x) {
+            Ok(out) => {
+                lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                assert_eq!(out.logits, want, "a storm survivor was corrupted");
+            }
+            Err(_) => {
+                // One typed failure per torn connection; wait out the
+                // supervised reconnect instead of hammering a dead slot.
+                fails += 1;
+                let deadline = Instant::now() + Duration::from_secs(2);
+                while !stormy.is_connected() && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            }
+        }
+    }
+    assert!(fails >= 1, "the storm never tore a connection");
+    assert!(fails < n as u64 / 2, "the wire never recovered: {fails}/{n}");
+    let storm = Summary::of(&lat);
+    let storm_fail = fails as f64 / n as f64;
+    let stats = stormy.stats();
+    assert!(stats.reconnects >= 1, "no supervised reconnect happened");
+
+    println!(
+        "{:>8} {:>11} {:>11} {:>11} {:>12}",
+        "mode", "p50 ms", "p99 ms", "fail rate", "reconnects"
+    );
+    println!(
+        "{:>8} {:>11.4} {:>11.4} {:>10.2}% {:>12}",
+        "inproc", inproc.median, inproc.p99, 0.0, 0
+    );
+    println!(
+        "{:>8} {:>11.4} {:>11.4} {:>10.2}% {:>12}",
+        "remote", wire.median, wire.p99, 0.0, 0
+    );
+    println!(
+        "{:>8} {:>11.4} {:>11.4} {:>10.2}% {:>12}",
+        "storm",
+        storm.median,
+        storm.p99,
+        storm_fail * 100.0,
+        stats.reconnects
+    );
+    println!(
+        "(wire tax p50: {:.1}x the in-process floor; every storm survivor \
+         bit-identical to the local forward pass)",
+        wire.median / inproc.median.max(1e-9)
+    );
+
+    let fields = vec![
+        ("inproc_p99_ms".into(), JsonValue::n(inproc.p99)),
+        ("remote_p99_ms".into(), JsonValue::n(wire.p99)),
+        ("remote_storm_fail_rate".into(), JsonValue::n(storm_fail)),
+        ("remote_storm_p99_ms".into(), JsonValue::n(storm.p99)),
+    ];
+    let out = std::path::Path::new("BENCH_remote.json");
+    JsonValue::Obj(fields).save(out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -38,6 +38,21 @@ pub struct BatchOutput {
     pub sim_cycles: Option<u64>,
 }
 
+/// Cumulative wire-health counters reported by backends that talk to a
+/// remote process (see
+/// [`ExecutionBackend::transport_stats`]). Both counters are
+/// monotonically non-decreasing over a backend's lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    /// Successful re-dials after connection loss (the initial connect
+    /// is not counted).
+    pub reconnects: u64,
+    /// Wire-level failures: write/read errors, decode failures,
+    /// checksum mismatches, missed heartbeats. Worker-side *backend*
+    /// errors (a typed error frame) are not transport errors.
+    pub transport_errors: u64,
+}
+
 /// An execution target for batched inference.
 ///
 /// Object-safe by design: the serving layer holds
@@ -108,6 +123,21 @@ pub trait ExecutionBackend: Send {
     /// [`MetricsSnapshot::shard_depths`](super::metrics::MetricsSnapshot).
     /// Default: `None` (single-device backends).
     fn shard_depths(&self) -> Option<Vec<u64>> {
+        None
+    }
+
+    /// Cumulative wire-health counters for backends that reach a
+    /// remote process (see
+    /// [`RemoteBackend`](crate::transport::RemoteBackend)). The server
+    /// polls this after each batch — like
+    /// [`shard_depths`](Self::shard_depths), latest value wins — and
+    /// surfaces it as
+    /// [`MetricsSnapshot::reconnects`](super::metrics::MetricsSnapshot::reconnects)
+    /// /
+    /// [`MetricsSnapshot::transport_errors`](super::metrics::MetricsSnapshot::transport_errors),
+    /// so wire faults stay distinguishable from backend faults.
+    /// Default: `None` (in-process backends have no wire).
+    fn transport_stats(&self) -> Option<TransportStats> {
         None
     }
 

@@ -455,4 +455,27 @@ mod tests {
             assert!(matches!(err, ServeError::InvalidConfig(_)), "{bad}: {err}");
         }
     }
+
+    #[test]
+    fn typo_key_error_names_the_offender_and_lists_valid_keys() {
+        // The classic one-letter slip: `erorr=0.1`. The typed error
+        // must point at the bad key AND enumerate every valid key, so
+        // the fix is in the message.
+        let err = FaultSpec::parse("erorr=0.1").unwrap_err();
+        assert!(matches!(err, ServeError::InvalidConfig(_)));
+        let msg = err.to_string();
+        assert!(msg.contains("unknown key 'erorr'"), "{msg}");
+        for key in [
+            "error",
+            "garbage",
+            "panic",
+            "latency-rate",
+            "latency-us",
+            "fail-first",
+            "panic-on-call",
+            "seed",
+        ] {
+            assert!(msg.contains(key), "message must list '{key}': {msg}");
+        }
+    }
 }

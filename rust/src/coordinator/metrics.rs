@@ -12,6 +12,8 @@ use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
+use super::backend::TransportStats;
+
 /// Circuit-breaker state of one replica, as tracked by the router's
 /// health layer and surfaced in [`MetricsSnapshot::health`].
 ///
@@ -56,6 +58,8 @@ struct State {
     compute_us: Vec<f64>,
     sim_cycles: u64,
     shard_depths: Option<Vec<u64>>,
+    reconnects: u64,
+    transport_errors: u64,
     started: Option<std::time::Instant>,
     finished: Option<std::time::Instant>,
 }
@@ -128,6 +132,22 @@ pub struct MetricsSnapshot {
     /// queued commands even when the device balances its own shards
     /// perfectly. `None` for single-device backends.
     pub shard_depths: Option<Vec<u64>>,
+    /// Times this replica's transport re-dialed its worker after a
+    /// lost connection (cumulative, reported by remote backends via
+    /// [`ExecutionBackend::transport_stats`]; 0 for in-process
+    /// replicas). Together with [`transport_errors`], this separates
+    /// wire trouble from backend trouble: a replica whose `failures`
+    /// climb *with* `transport_errors` has a flaky wire or dead
+    /// worker, one whose `failures` climb alone has a faulty backend.
+    ///
+    /// [`ExecutionBackend::transport_stats`]: super::backend::ExecutionBackend::transport_stats
+    /// [`transport_errors`]: Self::transport_errors
+    pub reconnects: u64,
+    /// Wire-level failures on this replica's transport (read/write
+    /// errors, decode failures, checksum mismatches, missed
+    /// heartbeats). A worker answering with a typed error frame is a
+    /// *backend* fault and counts only in `failures`, not here.
+    pub transport_errors: u64,
     /// Wall-clock span from first to last batch.
     pub wall: Duration,
     /// Requests per wall-clock second.
@@ -167,6 +187,16 @@ impl Metrics {
         self.shard_backlog_fast
             .store(depths.iter().sum(), Ordering::Relaxed);
         self.state.lock().unwrap().shard_depths = Some(depths);
+    }
+
+    /// Record the cumulative wire-health counters a remote backend
+    /// reported after a batch (latest value wins — the backend reports
+    /// monotonic totals, not deltas). Pure gauge: never settles the
+    /// fast answered counter.
+    pub fn record_transport_stats(&self, stats: TransportStats) {
+        let mut s = self.state.lock().unwrap();
+        s.reconnects = stats.reconnects;
+        s.transport_errors = stats.transport_errors;
     }
 
     /// Record `rows` requests that received a typed error response
@@ -291,6 +321,8 @@ impl Metrics {
             },
             sim_cycles: s.sim_cycles,
             shard_depths: s.shard_depths.clone(),
+            reconnects: s.reconnects,
+            transport_errors: s.transport_errors,
             wall,
             throughput_rps: throughput,
         }
@@ -359,6 +391,8 @@ mod tests {
         assert_eq!(s.health, HealthState::Closed);
         assert!(s.queue_us.is_none());
         assert!(s.shard_depths.is_none());
+        assert_eq!(s.reconnects, 0);
+        assert_eq!(s.transport_errors, 0);
         assert_eq!(s.throughput_rps, 0.0);
     }
 
@@ -387,6 +421,26 @@ mod tests {
             assert_eq!(m.health(), h);
             assert_eq!(m.snapshot().health, h);
         }
+    }
+
+    #[test]
+    fn transport_stats_gauge_keeps_latest_and_stays_pure() {
+        let m = Metrics::new();
+        m.record_transport_stats(TransportStats {
+            reconnects: 1,
+            transport_errors: 4,
+        });
+        m.record_transport_stats(TransportStats {
+            reconnects: 2,
+            transport_errors: 9,
+        });
+        let s = m.snapshot();
+        // Latest cumulative totals win; wire faults never settle the
+        // outstanding accounting (the failed request itself does, via
+        // record_failures).
+        assert_eq!(s.reconnects, 2);
+        assert_eq!(s.transport_errors, 9);
+        assert_eq!(m.requests_fast(), 0);
     }
 
     #[test]

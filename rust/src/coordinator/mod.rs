@@ -74,7 +74,7 @@ pub mod server;
 
 pub use backend::{
     pjrt, BatchOutput, ExecutionBackend, ReferenceBackend, ShardedSimulatorBackend,
-    SimulatorBackend,
+    SimulatorBackend, TransportStats,
 };
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;

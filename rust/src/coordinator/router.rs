@@ -143,7 +143,12 @@ impl RetryPolicy {
 
     /// Backoff before retry `retry_index` (0-based), jittered into
     /// `[½·d, d]`.
-    fn backoff(&self, retry_index: u32, rng: &mut Xoshiro256) -> Duration {
+    ///
+    /// Public so other supervised loops — notably the
+    /// [`RemoteBackend`](crate::transport::RemoteBackend) reconnect
+    /// supervisor — share the router's exact backoff semantics instead
+    /// of re-deriving them.
+    pub fn backoff(&self, retry_index: u32, rng: &mut Xoshiro256) -> Duration {
         let factor = 1u32 << retry_index.min(16);
         let exp = self
             .base_backoff

@@ -273,6 +273,13 @@ impl Server {
                             message: format!("{e:#}"),
                         };
                         metrics_worker.record_failures(rows);
+                        // Wire faults move the transport gauge exactly
+                        // when batches fail — poll it on this path too,
+                        // so a dead worker's errors are visible without
+                        // waiting for the next success.
+                        if let Some(stats) = backend.transport_stats() {
+                            metrics_worker.record_transport_stats(stats);
+                        }
                         // An unconfirmed pin came from this (rejected)
                         // traffic's own guess — let the next request
                         // re-pin it. A confirmed width stays.
@@ -297,6 +304,11 @@ impl Server {
                 // the latest gauge in the metrics.
                 if let Some(depths) = backend.shard_depths() {
                     metrics_worker.record_shard_depths(depths);
+                }
+                // Remote backends report cumulative wire-health
+                // counters; same latest-wins gauge treatment.
+                if let Some(stats) = backend.transport_stats() {
+                    metrics_worker.record_transport_stats(stats);
                 }
                 // Re-assert the width that actually succeeded: the pin
                 // may have been cleared by an earlier failure and this

@@ -30,7 +30,13 @@
 //!   [`ExecutionBackend`](coordinator::ExecutionBackend) trait — any
 //!   engine that can run a batch plugs into the same serving stack,
 //!   and every failure is a typed
-//!   [`ServeError`](coordinator::ServeError), never a sentinel.
+//!   [`ServeError`](coordinator::ServeError), never a sentinel. The
+//!   serving seam crosses processes through [`transport`]: a framed,
+//!   checksummed wire protocol hosting any backend in a `beanna
+//!   worker` process ([`transport::WorkerHost`]), consumed through
+//!   [`transport::RemoteBackend`] — timeouts, heartbeats, and
+//!   supervised reconnect, chaos-tested down to killed worker
+//!   processes.
 //!
 //! The functional hot paths (bf16 and XNOR-popcount matmuls) execute on
 //! a parallel, cache-tiled engine ([`util::par`]) dispatching to a
@@ -54,6 +60,7 @@ pub mod report;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
+pub mod transport;
 pub mod util;
 
 /// Crate-wide result type.

@@ -13,8 +13,15 @@
 //! beanna peak       §I peak-throughput figures
 //! beanna infer      classify one test image (sim | ref | pjrt backend)
 //! beanna serve      run the batching server over the test set
+//! beanna worker     host one backend behind a wire listener
 //! beanna selftest   cross-check xact vs cycle-exact engines
 //! ```
+//!
+//! `worker` and `serve --remote` are the two halves of cross-process
+//! serving: a worker hosts any in-tree backend behind the framed wire
+//! protocol ([`beanna::transport`]), and `serve --remote host:port`
+//! consumes it as a replica — same router, breakers, and retry
+//! semantics as in-process replicas.
 
 use anyhow::{bail, Result};
 
@@ -29,6 +36,7 @@ use beanna::experiments;
 use beanna::io::ArtifactPaths;
 use beanna::nn::{Network, NetworkConfig};
 use beanna::sim::{Accelerator, AcceleratorConfig, ShardPolicy, ShardedAccelerator};
+use beanna::transport::{RemoteBackend, RemoteConfig, WorkerConfig, WorkerHost};
 use beanna::util::args::ArgSpec;
 
 fn main() {
@@ -48,6 +56,7 @@ fn main() {
         "peak" => cmd_peak(),
         "infer" => cmd_infer(args),
         "serve" => cmd_serve(args),
+        "worker" => cmd_worker(args),
         "simulate" => cmd_simulate(args),
         "trace" => cmd_trace(args),
         "selftest" => cmd_selftest(),
@@ -76,6 +85,7 @@ const COMMANDS: &str = "commands:
   peak       print the §I peak-throughput figures
   infer      classify a test image (--backend sim|ref|pjrt)
   serve      run the batching server over the test set
+  worker     host one backend behind a wire listener (for serve --remote)
   simulate   modeled-time shard scheduling study (jsq vs round-robin)
   trace      dump a per-phase execution trace (CSV + chrome://tracing)
   selftest   cross-check the two simulator engines";
@@ -318,6 +328,13 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             "modeled arrays per sim device (sim backend only)",
         )
         .opt(
+            "remote",
+            "",
+            "comma-separated `beanna worker` addresses (host:port or \
+             uds:<path>); each becomes one remote replica and \
+             --backend/--replicas are ignored",
+        )
+        .opt(
             "kernel-workers",
             "0",
             "matmul threads per batch (0 = all cores)",
@@ -399,9 +416,47 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         shards == 1 || kind == "sim",
         "--shards applies to the sim backend only"
     );
-    for model in &models {
-        builder = with_cli_backend(builder, kind, &paths, model, max_batch, shards, fault)?;
-        builder = builder.replicas(replicas);
+    let remote: Vec<String> = p
+        .get("remote")
+        .unwrap()
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    let replica_count = if remote.is_empty() {
+        replicas
+    } else {
+        remote.len()
+    };
+    if remote.is_empty() {
+        for model in &models {
+            builder = with_cli_backend(builder, kind, &paths, model, max_batch, shards, fault)?;
+            builder = builder.replicas(replicas);
+        }
+    } else {
+        // Remote replicas: the worker processes own the weights; the
+        // local network is shape metadata (the wire hello cross-checks
+        // it at connect time).
+        anyhow::ensure!(
+            models.len() == 1,
+            "--remote serves one model group (got {} models)",
+            models.len()
+        );
+        anyhow::ensure!(
+            fault.is_none(),
+            "--fault-spec wraps in-process backends; wire chaos lives in \
+             the transport layer's own fault injector"
+        );
+        builder = builder.model(&models[0], experiments::load_variant(&paths, &models[0]).0);
+        builder = builder.backend(move |_net, i| {
+            RemoteBackend::boxed(&remote[i], RemoteConfig::default()).map_err(|e| {
+                ServeError::Backend {
+                    backend: format!("remote:{}", remote[i]),
+                    message: format!("{e:#}"),
+                }
+            })
+        });
+        builder = builder.replicas(replica_count);
     }
     let engine = builder.build()?;
     // Rotate requests across the named models: one shared submit
@@ -468,7 +523,7 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
         total_requests,
         total_batches,
         models.len(),
-        replicas
+        replica_count
     );
     if expired > 0 || backpressure_hits > 0 {
         println!(
@@ -503,6 +558,12 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
                     m.retries, m.ejections, m.readmissions
                 );
             }
+            if m.transport_errors + m.reconnects > 0 {
+                print!(
+                    ", {} wire errors / {} reconnects",
+                    m.transport_errors, m.reconnects
+                );
+            }
             if m.health != HealthState::Closed {
                 print!(", breaker {:?}", m.health);
             }
@@ -521,6 +582,140 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
             }
             println!();
         }
+    }
+    Ok(())
+}
+
+/// SIGTERM → drain flag. No signal-handling crates: a raw `signal(2)`
+/// registration whose handler only flips an atomic (all an
+/// async-signal-safe handler may do); the serve loop polls it.
+#[cfg(unix)]
+mod sigterm {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TRIGGERED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigterm(_sig: std::os::raw::c_int) {
+        TRIGGERED.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: std::os::raw::c_int, handler: usize) -> usize;
+    }
+
+    /// Install the handler for SIGTERM (15).
+    pub fn install() {
+        unsafe {
+            signal(15, on_sigterm as usize);
+        }
+    }
+
+    /// Whether SIGTERM has arrived since [`install`].
+    pub fn triggered() -> bool {
+        TRIGGERED.load(Ordering::SeqCst)
+    }
+}
+
+/// Parse the `--random` layer-size list (`12,16,4`).
+fn parse_sizes(csv: &str) -> Result<Vec<usize>> {
+    let sizes: Vec<usize> = csv
+        .split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<usize>()
+                .map_err(|_| anyhow::anyhow!("bad layer size '{}' in --random", s.trim()))
+        })
+        .collect::<Result<_>>()?;
+    anyhow::ensure!(
+        sizes.len() >= 2 && sizes.iter().all(|&n| n > 0),
+        "--random needs at least two nonzero layer sizes"
+    );
+    Ok(sizes)
+}
+
+fn cmd_worker(args: Vec<String>) -> Result<()> {
+    let spec = ArgSpec::new("beanna worker", "host one backend behind a wire listener")
+        .opt("backend", "ref", "sim | ref")
+        .opt("model", "hybrid", "model weights variant: hybrid | fp")
+        .opt(
+            "random",
+            "",
+            "serve random weights with these layer sizes (e.g. 12,16,4) \
+             instead of --model; deterministic under --seed",
+        )
+        .opt("seed", "7", "weight seed for --random")
+        .opt(
+            "listen",
+            "127.0.0.1:0",
+            "listen address: host:port or uds:<path> (port 0 = ephemeral)",
+        )
+        .opt(
+            "shards",
+            "1",
+            "modeled arrays per sim device (sim backend only)",
+        )
+        .opt(
+            "kernel-workers",
+            "0",
+            "matmul threads per batch (0 = all cores)",
+        );
+    let p = spec.parse_from(args)?;
+    let net = match p.get("random").unwrap() {
+        "" => Network::load(&ArtifactPaths::discover().weights(p.get("model").unwrap()))?,
+        csv => {
+            let sizes = parse_sizes(csv)?;
+            Network::random(
+                &NetworkConfig::uniform(&sizes, beanna::nn::Precision::Bf16),
+                p.get_u64("seed")?,
+            )
+        }
+    };
+    let kind = p.get("backend").unwrap();
+    let shards = p.get_usize("shards")?.max(1);
+    anyhow::ensure!(
+        shards == 1 || kind == "sim",
+        "--shards applies to the sim backend only"
+    );
+    let backend = match kind {
+        "ref" => ReferenceBackend::boxed(net),
+        "sim" if shards > 1 => ShardedSimulatorBackend::boxed(net, shards),
+        "sim" => SimulatorBackend::boxed(net),
+        other => bail!("unknown backend '{other}' (use sim | ref)"),
+    };
+    let config = WorkerConfig {
+        parallelism: match p.get_usize("kernel-workers")? {
+            0 => beanna::coordinator::Parallelism::auto(),
+            n => beanna::coordinator::Parallelism::fixed(n),
+        },
+        ..Default::default()
+    };
+    #[cfg(unix)]
+    sigterm::install();
+    let tag = backend.tag().to_string();
+    let host = WorkerHost::start(backend, p.get("listen").unwrap(), config)?;
+    // The serving line is the contract with whoever spawned us: tests
+    // and scripts scrape the resolved (ephemeral) address from it.
+    println!("beanna worker: serving '{tag}' on {}", host.local_addr());
+    std::io::Write::flush(&mut std::io::stdout()).ok();
+    loop {
+        if host.is_finished() {
+            // A client's drain frame already stopped the host.
+            break;
+        }
+        #[cfg(unix)]
+        if sigterm::triggered() {
+            eprintln!("beanna worker: SIGTERM, draining");
+            host.begin_drain();
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(25));
+    }
+    host.join();
+    // Whoever spawned us may have closed the stdout pipe after reading
+    // the serving line — the final status line must not panic.
+    {
+        use std::io::Write;
+        let _ = writeln!(std::io::stdout(), "beanna worker: drained");
     }
     Ok(())
 }

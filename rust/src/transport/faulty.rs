@@ -1,0 +1,364 @@
+//! Deterministic wire-fault injection: the chaos layer for the framed
+//! transport.
+//!
+//! [`FaultyTransport`] wraps any `Read + Write` stream and corrupts
+//! traffic according to a seedable [`TransportFaultSpec`] — dropped
+//! frames, added latency, truncated writes, garbage bytes, and
+//! mid-request disconnects. It mirrors the design of
+//! [`FaultInjectingBackend`](crate::coordinator::FaultInjectingBackend):
+//! the RNG draws a **fixed number of variates per write in a fixed
+//! order**, so a given seed produces the same fault schedule regardless
+//! of which fault classes are enabled, and a rate-0 spec is perfectly
+//! transparent (proved by the conformance suite, which serves through
+//! it).
+//!
+//! The injector works at frame granularity because
+//! [`write_frame`](super::frame::write_frame) issues exactly one
+//! `write` per frame: dropping or corrupting one `write` call is
+//! dropping or corrupting one whole protocol frame, which is how real
+//! wires fail (a lost segment kills the frame, not half a field).
+//! Reads pass through untouched — every injected fault manifests at
+//! the *peer's* decoder or timeout, exactly like a real fault would.
+
+use std::io::{Read, Write};
+use std::time::Duration;
+
+use crate::util::rng::Xoshiro256;
+
+/// Rates and knobs for wire-fault injection. All rates are
+/// probabilities in `[0, 1]` drawn independently per written frame.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TransportFaultSpec {
+    /// Probability a written frame is silently discarded (the writer
+    /// sees success; the peer waits until its read times out).
+    pub drop_rate: f64,
+    /// Probability a write is delayed by [`delay`](Self::delay) first.
+    pub delay_rate: f64,
+    /// The added latency for delayed writes.
+    pub delay: Duration,
+    /// Probability a frame is cut mid-write: half the bytes go out,
+    /// then the connection is reset.
+    pub truncate_rate: f64,
+    /// Probability one byte of the frame is flipped in flight (the
+    /// peer's CRC check catches it).
+    pub garbage_rate: f64,
+    /// Probability the connection is reset *instead of* writing — a
+    /// mid-request disconnect.
+    pub disconnect_rate: f64,
+    /// RNG seed for the fault schedule.
+    pub seed: u64,
+}
+
+impl Default for TransportFaultSpec {
+    fn default() -> Self {
+        Self {
+            drop_rate: 0.0,
+            delay_rate: 0.0,
+            delay: Duration::ZERO,
+            truncate_rate: 0.0,
+            garbage_rate: 0.0,
+            disconnect_rate: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+impl TransportFaultSpec {
+    /// A spec that injects nothing (the default).
+    pub fn transparent() -> Self {
+        Self::default()
+    }
+
+    /// Convenience: only mid-request disconnects, at `rate`.
+    pub fn disconnects(rate: f64, seed: u64) -> Self {
+        Self {
+            disconnect_rate: rate,
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// Convenience: only garbage (bit-flip) corruption, at `rate`.
+    pub fn garbage(rate: f64, seed: u64) -> Self {
+        Self {
+            garbage_rate: rate,
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// True when this spec can never perturb traffic.
+    pub fn is_transparent(&self) -> bool {
+        self.drop_rate == 0.0
+            && self.delay_rate == 0.0
+            && self.truncate_rate == 0.0
+            && self.garbage_rate == 0.0
+            && self.disconnect_rate == 0.0
+    }
+
+    /// Same spec, different seed (per-connection decorrelation).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Reject rates outside `[0, 1]`.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, rate) in [
+            ("drop", self.drop_rate),
+            ("delay", self.delay_rate),
+            ("truncate", self.truncate_rate),
+            ("garbage", self.garbage_rate),
+            ("disconnect", self.disconnect_rate),
+        ] {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&rate),
+                "transport fault {name} rate {rate} outside [0, 1]"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// What the injector actually did, for test assertions.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportFaultCounts {
+    /// Frames silently discarded.
+    pub drops: u64,
+    /// Writes delayed.
+    pub delays: u64,
+    /// Frames truncated mid-write.
+    pub truncations: u64,
+    /// Frames corrupted by a byte flip.
+    pub garbage: u64,
+    /// Connections reset instead of writing.
+    pub disconnects: u64,
+    /// Total write calls observed.
+    pub writes: u64,
+}
+
+/// A `Read + Write` wrapper that injects wire faults per
+/// [`TransportFaultSpec`]. Once a disconnect or truncation fires, the
+/// stream stays dead (every later operation fails) — a reset socket
+/// does not come back; reconnection is the supervisor's job.
+#[derive(Debug)]
+pub struct FaultyTransport<S> {
+    inner: S,
+    spec: TransportFaultSpec,
+    rng: Xoshiro256,
+    counts: TransportFaultCounts,
+    dead: bool,
+}
+
+impl<S> FaultyTransport<S> {
+    /// Wrap `inner` under `spec` (a transparent spec passes everything
+    /// through untouched).
+    pub fn new(inner: S, spec: TransportFaultSpec) -> Self {
+        Self {
+            inner,
+            spec,
+            rng: Xoshiro256::seed_from_u64(spec.seed),
+            counts: TransportFaultCounts::default(),
+            dead: false,
+        }
+    }
+
+    /// What has been injected so far.
+    pub fn counts(&self) -> TransportFaultCounts {
+        self.counts
+    }
+
+    /// The wrapped stream.
+    pub fn get_ref(&self) -> &S {
+        &self.inner
+    }
+
+    fn reset_err() -> std::io::Error {
+        std::io::Error::new(
+            std::io::ErrorKind::ConnectionReset,
+            "injected wire fault: connection reset",
+        )
+    }
+}
+
+impl<S: Read> Read for FaultyTransport<S> {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        if self.dead {
+            return Err(Self::reset_err());
+        }
+        self.inner.read(buf)
+    }
+}
+
+impl<S: Write> Write for FaultyTransport<S> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        if self.dead {
+            return Err(Self::reset_err());
+        }
+        self.counts.writes += 1;
+        // Fixed draw order — delay, drop, truncate, garbage, disconnect
+        // — so the schedule depends only on the seed and the write
+        // sequence, never on which rates are enabled.
+        let delay = self.rng.next_f64() < self.spec.delay_rate;
+        let drop = self.rng.next_f64() < self.spec.drop_rate;
+        let truncate = self.rng.next_f64() < self.spec.truncate_rate;
+        let garbage = self.rng.next_f64() < self.spec.garbage_rate;
+        let disconnect = self.rng.next_f64() < self.spec.disconnect_rate;
+        if delay {
+            self.counts.delays += 1;
+            std::thread::sleep(self.spec.delay);
+        }
+        if disconnect {
+            self.counts.disconnects += 1;
+            self.dead = true;
+            return Err(Self::reset_err());
+        }
+        if drop {
+            self.counts.drops += 1;
+            return Ok(buf.len());
+        }
+        if truncate {
+            self.counts.truncations += 1;
+            self.dead = true;
+            let half = buf.len() / 2;
+            if half > 0 {
+                self.inner.write_all(&buf[..half])?;
+                self.inner.flush().ok();
+            }
+            return Err(Self::reset_err());
+        }
+        if garbage && !buf.is_empty() {
+            self.counts.garbage += 1;
+            let mut corrupted = buf.to_vec();
+            // Flip a byte past the length prefix so the peer reads a
+            // plausible frame and fails its CRC check, the way line
+            // noise actually surfaces.
+            let pos = (4 + corrupted.len().saturating_sub(4) / 2).min(corrupted.len() - 1);
+            corrupted[pos] ^= 0x55;
+            self.inner.write_all(&corrupted)?;
+            return Ok(buf.len());
+        }
+        self.inner.write_all(buf)?;
+        Ok(buf.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        if self.dead {
+            return Err(Self::reset_err());
+        }
+        self.inner.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::frame::{read_frame, write_frame, Frame, FrameError, DEFAULT_MAX_FRAME};
+
+    fn ping(nonce: u64) -> Frame {
+        Frame::Heartbeat { nonce }
+    }
+
+    #[test]
+    fn transparent_spec_passes_frames_untouched() {
+        let mut t = FaultyTransport::new(Vec::<u8>::new(), TransportFaultSpec::transparent());
+        for i in 0..32 {
+            write_frame(&mut t, &ping(i)).unwrap();
+        }
+        let wire = t.get_ref().clone();
+        let mut cursor = &wire[..];
+        for i in 0..32 {
+            assert_eq!(read_frame(&mut cursor, DEFAULT_MAX_FRAME).unwrap(), ping(i));
+        }
+        assert_eq!(t.counts().writes, 32);
+        assert_eq!(t.counts().drops + t.counts().garbage + t.counts().disconnects, 0);
+    }
+
+    #[test]
+    fn garbage_frames_fail_the_peer_checksum() {
+        let spec = TransportFaultSpec::garbage(1.0, 7);
+        let mut t = FaultyTransport::new(Vec::<u8>::new(), spec);
+        write_frame(&mut t, &ping(1)).unwrap();
+        assert_eq!(t.counts().garbage, 1);
+        let wire = t.get_ref().clone();
+        match read_frame(&mut &wire[..], DEFAULT_MAX_FRAME) {
+            Err(FrameError::BadChecksum { .. }) => {}
+            other => panic!("expected BadChecksum, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn disconnects_kill_the_stream_permanently() {
+        let spec = TransportFaultSpec::disconnects(1.0, 3);
+        let mut t = FaultyTransport::new(Vec::<u8>::new(), spec);
+        let err = write_frame(&mut t, &ping(1)).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::ConnectionReset);
+        // Dead means dead: reads and writes both keep failing.
+        assert!(write_frame(&mut t, &ping(2)).is_err());
+        let mut buf = [0u8; 1];
+        assert!(t.read(&mut buf).is_err());
+        assert_eq!(t.counts().disconnects, 1);
+    }
+
+    #[test]
+    fn dropped_frames_report_success_to_the_writer() {
+        let spec = TransportFaultSpec {
+            drop_rate: 1.0,
+            seed: 5,
+            ..TransportFaultSpec::default()
+        };
+        let mut t = FaultyTransport::new(Vec::<u8>::new(), spec);
+        write_frame(&mut t, &ping(1)).unwrap();
+        assert_eq!(t.counts().drops, 1);
+        assert!(t.get_ref().is_empty(), "dropped frame must not reach the wire");
+    }
+
+    #[test]
+    fn truncation_leaves_a_partial_frame_then_dies() {
+        let spec = TransportFaultSpec {
+            truncate_rate: 1.0,
+            seed: 9,
+            ..TransportFaultSpec::default()
+        };
+        let mut t = FaultyTransport::new(Vec::<u8>::new(), spec);
+        let full = ping(1).encode().len();
+        assert!(write_frame(&mut t, &ping(1)).is_err());
+        let written = t.get_ref().len();
+        assert!(written > 0 && written < full, "partial frame: {written} of {full}");
+        assert_eq!(t.counts().truncations, 1);
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let spec = TransportFaultSpec {
+            drop_rate: 0.3,
+            garbage_rate: 0.2,
+            seed: 42,
+            ..TransportFaultSpec::default()
+        };
+        let schedule = |spec| {
+            let mut t = FaultyTransport::new(Vec::<u8>::new(), spec);
+            for i in 0..64 {
+                let _ = write_frame(&mut t, &ping(i));
+            }
+            t.counts()
+        };
+        let a = schedule(spec);
+        let b = schedule(spec);
+        assert_eq!(a, b);
+        assert!(a.drops > 0 && a.garbage > 0, "schedule exercised: {a:?}");
+        // A different seed decorrelates.
+        assert_ne!(schedule(spec.with_seed(43)), a);
+    }
+
+    #[test]
+    fn rates_outside_unit_interval_are_rejected() {
+        let mut spec = TransportFaultSpec::transparent();
+        assert!(spec.validate().is_ok());
+        spec.garbage_rate = 1.5;
+        assert!(spec.validate().is_err());
+        spec.garbage_rate = 0.0;
+        spec.disconnect_rate = -0.1;
+        assert!(spec.validate().is_err());
+    }
+}

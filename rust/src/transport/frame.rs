@@ -1,0 +1,693 @@
+//! The wire format: length-prefixed, checksummed frames.
+//!
+//! Every frame on the wire is
+//!
+//! ```text
+//! [len: u32 LE][body: len bytes][crc32: u32 LE]
+//!   body = [type: u8][payload]
+//! ```
+//!
+//! `len` covers the body only; the CRC-32 (IEEE 802.3, the same
+//! polynomial as Ethernet/zip) covers the body and is verified before
+//! any payload field is decoded. `len` is bounded by the receiver's
+//! `max_frame` *before* any allocation, so a corrupt or hostile length
+//! prefix cannot make the peer reserve gigabytes. All integers are
+//! little-endian; strings are `u32` length + UTF-8 bytes; optional
+//! fields are a `u8` presence flag followed by the value.
+//!
+//! Decoding failures are the typed [`FrameError`] — the client maps
+//! them into `anyhow` errors that surface to the serving layer as
+//! [`ServeError::Backend`](crate::coordinator::ServeError::Backend),
+//! so a garbage frame costs one typed request failure, never a hang or
+//! a crash.
+
+use std::fmt;
+use std::io::{Read, Write};
+use std::sync::OnceLock;
+
+/// Protocol version carried by [`Frame::Hello`] / [`Frame::HelloAck`];
+/// a mismatch is refused at handshake time, not discovered mid-batch.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Magic bytes opening every [`Frame::Hello`] payload — a cheap guard
+/// against pointing the client at a non-beanna listener.
+pub const MAGIC: [u8; 4] = *b"BEA1";
+
+/// Default per-frame size bound (body bytes). A 16 MiB frame holds a
+/// 2048-row batch of 2048-wide f32 features with room to spare.
+pub const DEFAULT_MAX_FRAME: usize = 16 * 1024 * 1024;
+
+/// Typed wire-decoding failure.
+#[derive(Debug)]
+pub enum FrameError {
+    /// The length prefix exceeds the receiver's frame bound.
+    TooLarge {
+        /// Advertised body length.
+        len: usize,
+        /// The receiver's bound.
+        max: usize,
+    },
+    /// The body checksum did not match — the frame was corrupted in
+    /// flight (or deliberately, by the chaos injector).
+    BadChecksum {
+        /// CRC the sender wrote.
+        expected: u32,
+        /// CRC of the bytes that arrived.
+        got: u32,
+    },
+    /// Unknown frame-type byte.
+    UnknownType(u8),
+    /// The payload ended before a declared field.
+    Truncated,
+    /// A hello frame without the protocol magic — the peer is not a
+    /// beanna worker.
+    BadMagic([u8; 4]),
+    /// Hello versions disagree.
+    VersionMismatch {
+        /// Our protocol version.
+        ours: u16,
+        /// The peer's.
+        theirs: u16,
+    },
+    /// A string field held invalid UTF-8.
+    BadUtf8,
+    /// Underlying socket error (includes clean EOF and read timeouts).
+    Io(std::io::Error),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::TooLarge { len, max } => {
+                write!(f, "frame of {len} bytes exceeds the {max}-byte bound")
+            }
+            Self::BadChecksum { expected, got } => write!(
+                f,
+                "frame checksum mismatch (wire {expected:#010x}, computed {got:#010x})"
+            ),
+            Self::UnknownType(t) => write!(f, "unknown frame type {t:#04x}"),
+            Self::Truncated => write!(f, "frame payload truncated"),
+            Self::BadMagic(m) => {
+                write!(f, "bad hello magic {m:02x?} (peer is not a beanna worker)")
+            }
+            Self::VersionMismatch { ours, theirs } => {
+                write!(f, "protocol version mismatch (ours {ours}, peer {theirs})")
+            }
+            Self::BadUtf8 => write!(f, "string field is not valid UTF-8"),
+            Self::Io(e) => write!(f, "wire i/o: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+/// One protocol message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → worker, first frame on every connection.
+    Hello {
+        /// Client protocol version.
+        version: u16,
+    },
+    /// Worker → client hello reply: the hosted backend's identity and
+    /// declared shape (what [`ExecutionBackend`] exposes as
+    /// `tag` / `input_width` / `num_classes` / `max_batch`).
+    ///
+    /// [`ExecutionBackend`]: crate::coordinator::ExecutionBackend
+    HelloAck {
+        /// Worker protocol version.
+        version: u16,
+        /// The hosted backend's `tag()`.
+        tag: String,
+        /// Declared input width, if the backend declares one.
+        input_width: Option<u32>,
+        /// Declared class count, if the backend declares one.
+        num_classes: Option<u32>,
+        /// Declared batch bound, if the backend declares one.
+        max_batch: Option<u32>,
+    },
+    /// One inference batch (row-major f32 features).
+    Request {
+        /// Client-chosen correlation id, echoed by the reply.
+        id: u64,
+        /// Batch rows.
+        rows: u32,
+        /// Feature width.
+        cols: u32,
+        /// `rows × cols` features, row-major.
+        features: Vec<f32>,
+    },
+    /// Successful batch reply.
+    Response {
+        /// Correlation id of the request this answers.
+        id: u64,
+        /// Logit rows.
+        rows: u32,
+        /// Logit columns (class count).
+        cols: u32,
+        /// `rows × cols` logits, row-major.
+        logits: Vec<f32>,
+        /// Modeled device cycles, when the hosted backend reports them.
+        sim_cycles: Option<u64>,
+        /// Per-shard remaining work, when the hosted backend is a
+        /// multi-array device model.
+        shard_depths: Option<Vec<u64>>,
+    },
+    /// Typed failure reply (the hosted backend errored, or the worker
+    /// refused the request). `id` 0 means "not tied to a request" —
+    /// e.g. a decode failure before the id could be read.
+    Error {
+        /// Correlation id, or 0.
+        id: u64,
+        /// Human-readable cause.
+        message: String,
+    },
+    /// Liveness ping (client → worker).
+    Heartbeat {
+        /// Echoed by the ack.
+        nonce: u64,
+    },
+    /// Liveness reply.
+    HeartbeatAck {
+        /// The ping's nonce.
+        nonce: u64,
+    },
+    /// Ask the worker to drain: it acks, stops accepting work, and
+    /// exits once in-flight work is flushed.
+    Drain,
+    /// Drain acknowledged.
+    DrainAck,
+}
+
+const T_HELLO: u8 = 1;
+const T_HELLO_ACK: u8 = 2;
+const T_REQUEST: u8 = 3;
+const T_RESPONSE: u8 = 4;
+const T_ERROR: u8 = 5;
+const T_HEARTBEAT: u8 = 6;
+const T_HEARTBEAT_ACK: u8 = 7;
+const T_DRAIN: u8 = 8;
+const T_DRAIN_ACK: u8 = 9;
+
+/// CRC-32 (IEEE 802.3, reflected). Table built once per process.
+pub fn crc32(data: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 {
+                    0xEDB8_8320 ^ (c >> 1)
+                } else {
+                    c >> 1
+                };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------- encode
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new(ty: u8) -> Self {
+        Self { buf: vec![ty] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn opt_u32(&mut self, v: Option<u32>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.u32(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn f32s(&mut self, xs: &[f32]) {
+        self.buf.reserve(xs.len() * 4);
+        for x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+impl Frame {
+    /// Encode as a complete wire frame (`len` + body + CRC) — one
+    /// buffer, so the transport sees exactly one write per frame.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = match self {
+            Self::Hello { version } => {
+                let mut e = Enc::new(T_HELLO);
+                e.buf.extend_from_slice(&MAGIC);
+                e.u16(*version);
+                e
+            }
+            Self::HelloAck {
+                version,
+                tag,
+                input_width,
+                num_classes,
+                max_batch,
+            } => {
+                let mut e = Enc::new(T_HELLO_ACK);
+                e.u16(*version);
+                e.str(tag);
+                e.opt_u32(*input_width);
+                e.opt_u32(*num_classes);
+                e.opt_u32(*max_batch);
+                e
+            }
+            Self::Request {
+                id,
+                rows,
+                cols,
+                features,
+            } => {
+                let mut e = Enc::new(T_REQUEST);
+                e.u64(*id);
+                e.u32(*rows);
+                e.u32(*cols);
+                e.f32s(features);
+                e
+            }
+            Self::Response {
+                id,
+                rows,
+                cols,
+                logits,
+                sim_cycles,
+                shard_depths,
+            } => {
+                let mut e = Enc::new(T_RESPONSE);
+                e.u64(*id);
+                e.u32(*rows);
+                e.u32(*cols);
+                e.f32s(logits);
+                match sim_cycles {
+                    Some(c) => {
+                        e.u8(1);
+                        e.u64(*c);
+                    }
+                    None => e.u8(0),
+                }
+                match shard_depths {
+                    Some(depths) => {
+                        e.u8(1);
+                        e.u32(depths.len() as u32);
+                        for d in depths {
+                            e.u64(*d);
+                        }
+                    }
+                    None => e.u8(0),
+                }
+                e
+            }
+            Self::Error { id, message } => {
+                let mut e = Enc::new(T_ERROR);
+                e.u64(*id);
+                e.str(message);
+                e
+            }
+            Self::Heartbeat { nonce } => {
+                let mut e = Enc::new(T_HEARTBEAT);
+                e.u64(*nonce);
+                e
+            }
+            Self::HeartbeatAck { nonce } => {
+                let mut e = Enc::new(T_HEARTBEAT_ACK);
+                e.u64(*nonce);
+                e
+            }
+            Self::Drain => Enc::new(T_DRAIN),
+            Self::DrainAck => Enc::new(T_DRAIN_ACK),
+        };
+        let crc = crc32(&e.buf);
+        let mut wire = Vec::with_capacity(e.buf.len() + 8);
+        wire.extend_from_slice(&(e.buf.len() as u32).to_le_bytes());
+        wire.append(&mut e.buf);
+        wire.extend_from_slice(&crc.to_le_bytes());
+        wire
+    }
+}
+
+// ---------------------------------------------------------------- decode
+
+struct Dec<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], FrameError> {
+        if self.buf.len() < n {
+            return Err(FrameError::Truncated);
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8, FrameError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, FrameError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, FrameError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, FrameError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn opt_u32(&mut self) -> Result<Option<u32>, FrameError> {
+        Ok(match self.u8()? {
+            0 => None,
+            _ => Some(self.u32()?),
+        })
+    }
+
+    fn str(&mut self) -> Result<String, FrameError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| FrameError::BadUtf8)
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>, FrameError> {
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+/// Validate a length prefix against the receiver's frame bound —
+/// called *before* any allocation, so a corrupt or hostile prefix
+/// cannot reserve memory.
+pub(crate) fn check_len(len: usize, max: usize) -> Result<(), FrameError> {
+    if len == 0 {
+        return Err(FrameError::Truncated);
+    }
+    if len > max {
+        return Err(FrameError::TooLarge { len, max });
+    }
+    Ok(())
+}
+
+/// Decode one frame body (type byte + payload, CRC already verified).
+/// The worker's drain-aware polling reader assembles bodies itself and
+/// decodes through this.
+pub(crate) fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
+    let mut d = Dec { buf: body };
+    let ty = d.u8()?;
+    let frame = match ty {
+        T_HELLO => {
+            let magic: [u8; 4] = d.take(4)?.try_into().unwrap();
+            if magic != MAGIC {
+                return Err(FrameError::BadMagic(magic));
+            }
+            Frame::Hello { version: d.u16()? }
+        }
+        T_HELLO_ACK => Frame::HelloAck {
+            version: d.u16()?,
+            tag: d.str()?,
+            input_width: d.opt_u32()?,
+            num_classes: d.opt_u32()?,
+            max_batch: d.opt_u32()?,
+        },
+        T_REQUEST => {
+            let id = d.u64()?;
+            let rows = d.u32()?;
+            let cols = d.u32()?;
+            let features = d.f32s((rows as usize).saturating_mul(cols as usize))?;
+            Frame::Request {
+                id,
+                rows,
+                cols,
+                features,
+            }
+        }
+        T_RESPONSE => {
+            let id = d.u64()?;
+            let rows = d.u32()?;
+            let cols = d.u32()?;
+            let logits = d.f32s((rows as usize).saturating_mul(cols as usize))?;
+            let sim_cycles = match d.u8()? {
+                0 => None,
+                _ => Some(d.u64()?),
+            };
+            let shard_depths = match d.u8()? {
+                0 => None,
+                _ => {
+                    let n = d.u32()? as usize;
+                    let mut depths = Vec::with_capacity(n.min(4096));
+                    for _ in 0..n {
+                        depths.push(d.u64()?);
+                    }
+                    Some(depths)
+                }
+            };
+            Frame::Response {
+                id,
+                rows,
+                cols,
+                logits,
+                sim_cycles,
+                shard_depths,
+            }
+        }
+        T_ERROR => Frame::Error {
+            id: d.u64()?,
+            message: d.str()?,
+        },
+        T_HEARTBEAT => Frame::Heartbeat { nonce: d.u64()? },
+        T_HEARTBEAT_ACK => Frame::HeartbeatAck { nonce: d.u64()? },
+        T_DRAIN => Frame::Drain,
+        T_DRAIN_ACK => Frame::DrainAck,
+        other => return Err(FrameError::UnknownType(other)),
+    };
+    Ok(frame)
+}
+
+/// Write one frame (a single `write_all` of the encoded buffer, then a
+/// flush — so a fault injector wrapping `w` sees whole frames).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&frame.encode())?;
+    w.flush()
+}
+
+/// Read one frame, enforcing `max_frame` before any allocation and
+/// verifying the checksum before decoding.
+pub fn read_frame(r: &mut impl Read, max_frame: usize) -> Result<Frame, FrameError> {
+    let mut len_bytes = [0u8; 4];
+    r.read_exact(&mut len_bytes)?;
+    let len = u32::from_le_bytes(len_bytes) as usize;
+    check_len(len, max_frame)?;
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    let mut crc_bytes = [0u8; 4];
+    r.read_exact(&mut crc_bytes)?;
+    let expected = u32::from_le_bytes(crc_bytes);
+    let got = crc32(&body);
+    if expected != got {
+        return Err(FrameError::BadChecksum { expected, got });
+    }
+    decode_body(&body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn round_trip(frame: Frame) {
+        let wire = frame.encode();
+        let mut cursor = &wire[..];
+        let back = read_frame(&mut cursor, DEFAULT_MAX_FRAME).unwrap();
+        assert_eq!(back, frame);
+        assert!(cursor.is_empty(), "decoder must consume the whole frame");
+    }
+
+    #[test]
+    fn crc32_matches_the_ieee_check_value() {
+        // The standard CRC-32 check: crc32("123456789") = 0xCBF43926.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn every_frame_kind_round_trips() {
+        round_trip(Frame::Hello {
+            version: PROTOCOL_VERSION,
+        });
+        round_trip(Frame::HelloAck {
+            version: PROTOCOL_VERSION,
+            tag: "reference".into(),
+            input_width: Some(40),
+            num_classes: Some(10),
+            max_batch: None,
+        });
+        round_trip(Frame::Request {
+            id: 7,
+            rows: 2,
+            cols: 3,
+            features: vec![0.5, -1.0, 3.25, 0.0, -0.0, f32::MIN_POSITIVE],
+        });
+        round_trip(Frame::Response {
+            id: 7,
+            rows: 2,
+            cols: 2,
+            logits: vec![1.0, 2.0, 3.0, 4.0],
+            sim_cycles: Some(1234),
+            shard_depths: Some(vec![10, 0, 3]),
+        });
+        round_trip(Frame::Response {
+            id: 8,
+            rows: 1,
+            cols: 1,
+            logits: vec![0.25],
+            sim_cycles: None,
+            shard_depths: None,
+        });
+        round_trip(Frame::Error {
+            id: 9,
+            message: "backend 'sim' exploded".into(),
+        });
+        round_trip(Frame::Heartbeat { nonce: 42 });
+        round_trip(Frame::HeartbeatAck { nonce: 42 });
+        round_trip(Frame::Drain);
+        round_trip(Frame::DrainAck);
+    }
+
+    #[test]
+    fn corrupt_byte_is_a_checksum_error() {
+        let mut wire = Frame::Heartbeat { nonce: 42 }.encode();
+        let mid = wire.len() / 2;
+        wire[mid] ^= 0xFF;
+        match read_frame(&mut &wire[..], DEFAULT_MAX_FRAME) {
+            Err(FrameError::BadChecksum { .. }) => {}
+            other => panic!("expected BadChecksum, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_refused_before_allocation() {
+        let mut wire = Frame::Heartbeat { nonce: 1 }.encode();
+        wire[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        match read_frame(&mut &wire[..], 1024) {
+            Err(FrameError::TooLarge { len, max }) => {
+                assert_eq!(len, u32::MAX as usize);
+                assert_eq!(max, 1024);
+            }
+            other => panic!("expected TooLarge, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_and_unknown_frames_are_typed() {
+        // Truncated payload: a Request body cut short, CRC recomputed so
+        // only the *decode* step can object.
+        let mut body = vec![3u8]; // T_REQUEST with no fields at all
+        body.push(1); // half a u64 id
+        let crc = crc32(&body);
+        let mut wire = (body.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&body);
+        wire.extend_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &wire[..], DEFAULT_MAX_FRAME),
+            Err(FrameError::Truncated)
+        ));
+
+        // Unknown type byte, valid checksum.
+        let body = vec![0xEEu8];
+        let crc = crc32(&body);
+        let mut wire = 1u32.to_le_bytes().to_vec();
+        wire.extend_from_slice(&body);
+        wire.extend_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &wire[..], DEFAULT_MAX_FRAME),
+            Err(FrameError::UnknownType(0xEE))
+        ));
+
+        // Random garbage that never completes a frame header.
+        assert!(matches!(
+            read_frame(&mut &[0x01u8][..], DEFAULT_MAX_FRAME),
+            Err(FrameError::Io(_))
+        ));
+    }
+
+    #[test]
+    fn hello_magic_is_checked() {
+        let mut body = vec![1u8]; // T_HELLO
+        body.extend_from_slice(b"HTTP");
+        body.extend_from_slice(&PROTOCOL_VERSION.to_le_bytes());
+        let crc = crc32(&body);
+        let mut wire = (body.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&body);
+        wire.extend_from_slice(&crc.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut &wire[..], DEFAULT_MAX_FRAME),
+            Err(FrameError::BadMagic(m)) if &m == b"HTTP"
+        ));
+    }
+
+    #[test]
+    fn floats_round_trip_bit_exactly() {
+        let values = vec![0.0f32, -0.0, 1.0, -1.5, f32::MIN_POSITIVE, 3.402_823_5e38];
+        let frame = Frame::Request {
+            id: 1,
+            rows: 1,
+            cols: values.len() as u32,
+            features: values.clone(),
+        };
+        match read_frame(&mut &frame.encode()[..], DEFAULT_MAX_FRAME).unwrap() {
+            Frame::Request { features, .. } => {
+                for (a, b) in values.iter().zip(&features) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Cross-process serving: the wire between a
+//! [`Router`](crate::coordinator::Router) and remote accelerator
+//! worker processes.
+//!
+//! The serving stack scales the way the BEANNA hardware does — many
+//! small replicated tiles behind one front-end — except the "tiles"
+//! are worker *processes* (possibly on other hosts), so the dominant
+//! faults change: connection loss, stalled sockets, corrupt frames,
+//! and dead workers. This module makes that wire survivable, with
+//! robustness as the contract rather than an afterthought:
+//!
+//! * [`frame`] — the length-prefixed, CRC-checksummed codec with a
+//!   versioned hello and strict size bounds; every decode failure is a
+//!   typed [`FrameError`].
+//! * [`wire`] — TCP or Unix-domain streams and listeners behind one
+//!   address syntax (`host:port` or `uds:<path>`).
+//! * [`worker`] — [`WorkerHost`] serves any in-tree
+//!   [`ExecutionBackend`](crate::coordinator::ExecutionBackend) behind
+//!   a listener, with graceful drain (the `beanna worker` subcommand
+//!   is a thin CLI shell around it).
+//! * [`remote`] — [`RemoteBackend`] is the client: timeouts on every
+//!   operation, heartbeat liveness, and a supervised reconnect loop
+//!   with the router's own capped/jittered backoff, so a restarted
+//!   worker is readmitted through the breaker's HalfOpen probe path.
+//! * [`faulty`] — [`FaultyTransport`] extends the chaos harness to the
+//!   wire: seedable frame drops, delays, truncations, garbage bytes,
+//!   and mid-request disconnects.
+//!
+//! In-process and remote replicas are interchangeable: the conformance
+//! suite drives [`RemoteBackend`] over a loopback [`WorkerHost`] and
+//! requires bit-identical logits to the wrapped local backend.
+
+pub mod faulty;
+pub mod frame;
+pub mod remote;
+pub mod wire;
+pub mod worker;
+
+pub use faulty::{FaultyTransport, TransportFaultCounts, TransportFaultSpec};
+pub use frame::{Frame, FrameError, DEFAULT_MAX_FRAME, PROTOCOL_VERSION};
+pub use remote::{RemoteBackend, RemoteConfig};
+pub use wire::{WireAddr, WireListener, WireStream};
+pub use worker::{WorkerConfig, WorkerHost};

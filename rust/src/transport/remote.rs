@@ -1,0 +1,731 @@
+//! The client side of the wire: [`RemoteBackend`] speaks the framed
+//! protocol to a [`WorkerHost`](super::worker::WorkerHost) (usually a
+//! `beanna worker` process) and plugs into the serving stack as an
+//! ordinary [`ExecutionBackend`].
+//!
+//! Robustness contract:
+//!
+//! * **Every wire failure is typed.** Connect, read, and write are all
+//!   timeout-bounded; a decode failure, checksum mismatch, truncated
+//!   frame, or dead socket surfaces as an error from
+//!   [`run_batch_with`](ExecutionBackend::run_batch_with), which the
+//!   serving layer wraps in `ServeError::Backend` — it feeds the
+//!   router's breaker exactly like an in-process backend fault.
+//! * **Supervised reconnect.** A background supervisor thread owns the
+//!   connection lifecycle: while connected it heartbeats the worker at
+//!   [`RemoteConfig::heartbeat_interval`]; once the connection drops it
+//!   re-dials under the *router's own* backoff semantics
+//!   ([`RetryPolicy::backoff`]: capped exponential, deterministic
+//!   jitter into `[½·d, d]`). A restarted worker is readmitted to
+//!   traffic through the router's existing HalfOpen probe path — the
+//!   breaker ejects the replica while it is down, the supervisor
+//!   restores the wire, and the next probe finds it healthy.
+//! * **Fast fail while down.** Requests issued while disconnected fail
+//!   immediately (no queueing behind a dead socket), so retry/breaker
+//!   accounting sees the outage promptly instead of stacking timeouts.
+//! * **Wire faults are countable.** [`ExecutionBackend::transport_stats`]
+//!   exposes cumulative `reconnects` / `transport_errors`, which the
+//!   server polls into the metrics snapshot — wire trouble and backend
+//!   trouble stay distinguishable. For chaos tests, every connection
+//!   can be wrapped in a seeded
+//!   [`TransportFaultSpec`](super::faulty::TransportFaultSpec).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::faulty::{FaultyTransport, TransportFaultSpec};
+use super::frame::{read_frame, write_frame, Frame, PROTOCOL_VERSION};
+use super::wire::{WireAddr, WireStream};
+use crate::bf16::Matrix;
+use crate::coordinator::{BatchOutput, ExecutionBackend, RetryPolicy, TransportStats};
+use crate::util::par::Parallelism;
+use crate::util::rng::Xoshiro256;
+
+/// Decorrelates the supervisor's jitter stream and per-connection
+/// fault schedules from the configured seeds (same constant the rest
+/// of the crate uses for seed fan-out).
+const SEED_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Client-side knobs for one remote replica.
+#[derive(Debug, Clone, Copy)]
+pub struct RemoteConfig {
+    /// Bound on the TCP connect (dial) itself.
+    pub connect_timeout: Duration,
+    /// Bound on every blocking read (reply, hello-ack, heartbeat-ack).
+    pub read_timeout: Duration,
+    /// Bound on every blocking write.
+    pub write_timeout: Duration,
+    /// How often the supervisor pings an idle connection.
+    pub heartbeat_interval: Duration,
+    /// Backoff schedule for re-dialing a lost worker. Only the backoff
+    /// fields (`base_backoff`, `max_backoff`, `seed`) and their jitter
+    /// semantics are used — reconnect attempts are unbounded by design
+    /// (the router's breaker decides when the replica gets traffic,
+    /// the supervisor just keeps trying to restore the wire).
+    pub reconnect: RetryPolicy,
+    /// Largest accepted frame body, in bytes.
+    pub max_frame: usize,
+    /// Wire-fault injection for chaos tests; transparent by default.
+    /// Each (re)connection gets a decorrelated fault schedule derived
+    /// from this spec's seed.
+    pub faults: TransportFaultSpec,
+}
+
+impl Default for RemoteConfig {
+    fn default() -> Self {
+        Self {
+            connect_timeout: Duration::from_secs(1),
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(1),
+            heartbeat_interval: Duration::from_millis(250),
+            reconnect: RetryPolicy {
+                base_backoff: Duration::from_millis(10),
+                max_backoff: Duration::from_secs(1),
+                ..RetryPolicy::default()
+            },
+            max_frame: super::frame::DEFAULT_MAX_FRAME,
+            faults: TransportFaultSpec::transparent(),
+        }
+    }
+}
+
+/// What the worker declared about its hosted backend in the hello-ack.
+#[derive(PartialEq, Eq)]
+struct HelloInfo {
+    tag: String,
+    input_width: Option<usize>,
+    num_classes: Option<usize>,
+    max_batch: Option<usize>,
+}
+
+/// The connection slot, guarded by one mutex: requests hold it for a
+/// full request/response exchange, the supervisor holds it while
+/// heartbeating, so frames never interleave on the wire.
+struct ConnSlot {
+    conn: Option<FaultyTransport<WireStream>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    slot: Mutex<ConnSlot>,
+    cv: Condvar,
+    reconnects: AtomicU64,
+    transport_errors: AtomicU64,
+}
+
+fn lock_slot(shared: &Shared) -> MutexGuard<'_, ConnSlot> {
+    shared.slot.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Tear down the current connection after a wire failure: count it,
+/// close the socket, and wake the supervisor to start re-dialing.
+fn drop_conn(shared: &Shared, slot: &mut ConnSlot) {
+    if let Some(conn) = slot.conn.take() {
+        conn.get_ref().shutdown();
+    }
+    shared.transport_errors.fetch_add(1, Ordering::SeqCst);
+    shared.cv.notify_all();
+}
+
+/// A remote worker process as an [`ExecutionBackend`].
+pub struct RemoteBackend {
+    tag: String,
+    addr: WireAddr,
+    config: RemoteConfig,
+    input_width: Option<usize>,
+    num_classes: Option<usize>,
+    max_batch: Option<usize>,
+    next_id: u64,
+    last_shard_depths: Option<Vec<u64>>,
+    shared: Arc<Shared>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl RemoteBackend {
+    /// Dial `addr` (see [`WireAddr::parse`]), perform the versioned
+    /// hello, and start the reconnect supervisor. Fails typed when the
+    /// worker is unreachable, speaks a different protocol version, or
+    /// the hello exchange is corrupted — connecting is the one
+    /// operation that must succeed up front, because the engine's
+    /// build-time shape cross-check needs the hello-declared shape.
+    pub fn connect(addr: &str, config: RemoteConfig) -> Result<Self> {
+        config.faults.validate()?;
+        config.reconnect.validate()?;
+        let wire_addr = WireAddr::parse(addr)?;
+        let (conn, hello) = dial_and_hello(&wire_addr, &config, 0)
+            .with_context(|| format!("connecting remote backend to {wire_addr}"))?;
+        let slot = ConnSlot {
+            conn: Some(conn),
+            shutdown: false,
+        };
+        let shared = Arc::new(Shared {
+            slot: Mutex::new(slot),
+            cv: Condvar::new(),
+            reconnects: AtomicU64::new(0),
+            transport_errors: AtomicU64::new(0),
+        });
+        let shared_t = Arc::clone(&shared);
+        let addr_t = wire_addr.clone();
+        let expected = HelloInfo {
+            tag: hello.tag.clone(),
+            input_width: hello.input_width,
+            num_classes: hello.num_classes,
+            max_batch: hello.max_batch,
+        };
+        let supervisor = std::thread::Builder::new()
+            .name("beanna-remote-supervisor".into())
+            .spawn(move || supervise(&shared_t, &addr_t, &config, &expected))
+            .expect("spawning the remote supervisor thread");
+        Ok(Self {
+            tag: format!("remote:{}", hello.tag),
+            addr: wire_addr,
+            config,
+            input_width: hello.input_width,
+            num_classes: hello.num_classes,
+            max_batch: hello.max_batch,
+            next_id: 1,
+            last_shard_depths: None,
+            shared,
+            supervisor: Some(supervisor),
+        })
+    }
+
+    /// [`connect`](Self::connect), boxed for the serving stack.
+    pub fn boxed(addr: &str, config: RemoteConfig) -> Result<Box<dyn ExecutionBackend>> {
+        Ok(Box::new(Self::connect(addr, config)?))
+    }
+
+    /// Cumulative wire-health counters (also exposed through
+    /// [`ExecutionBackend::transport_stats`]).
+    pub fn stats(&self) -> TransportStats {
+        TransportStats {
+            reconnects: self.shared.reconnects.load(Ordering::SeqCst),
+            transport_errors: self.shared.transport_errors.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Whether the wire to the worker is currently up. Advisory — the
+    /// connection can drop between this answer and the next request.
+    pub fn is_connected(&self) -> bool {
+        lock_slot(&self.shared).conn.is_some()
+    }
+}
+
+impl Drop for RemoteBackend {
+    fn drop(&mut self) {
+        {
+            let mut slot = lock_slot(&self.shared);
+            slot.shutdown = true;
+            // Close without a drain frame: dropping one client must not
+            // drain a worker other replicas may still restart against.
+            if let Some(conn) = slot.conn.take() {
+                conn.get_ref().shutdown();
+            }
+        }
+        self.shared.cv.notify_all();
+        if let Some(h) = self.supervisor.take() {
+            h.join().ok();
+        }
+    }
+}
+
+/// Outcome of one request/response exchange on a live connection.
+enum Exchange {
+    /// The worker answered with logits.
+    Ok(BatchOutput, Option<Vec<u64>>),
+    /// The worker answered with a typed per-request error (its hosted
+    /// backend failed or refused the batch); the connection stays up.
+    WorkerError(String),
+}
+
+impl ExecutionBackend for RemoteBackend {
+    /// The parallelism budget is *not* forwarded: the worker owns its
+    /// host's cores and applies its own configured budget.
+    fn run_batch_with(&mut self, batch: &Matrix, _par: Parallelism) -> Result<BatchOutput> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut slot = lock_slot(&self.shared);
+        if slot.shutdown {
+            bail!("remote backend '{}' is shut down", self.tag);
+        }
+        let Some(conn) = slot.conn.as_mut() else {
+            // Fast fail: no queueing behind a dead socket. The router
+            // counts this like any backend failure, ejects the replica,
+            // and probes it again once the supervisor restores the wire.
+            bail!(
+                "remote worker '{}' at {} is disconnected (reconnect in progress)",
+                self.tag,
+                self.addr
+            );
+        };
+        match exchange(conn, id, batch, self.config.max_frame) {
+            Ok(Exchange::Ok(out, depths)) => {
+                drop(slot);
+                self.last_shard_depths = depths;
+                Ok(out)
+            }
+            Ok(Exchange::WorkerError(message)) => {
+                drop(slot);
+                Err(anyhow!("remote worker '{}': {message}", self.tag))
+            }
+            Err(wire) => {
+                drop_conn(&self.shared, &mut slot);
+                drop(slot);
+                Err(anyhow!("remote worker '{}': {wire}", self.tag))
+            }
+        }
+    }
+
+    fn tag(&self) -> &str {
+        &self.tag
+    }
+
+    fn max_batch(&self) -> Option<usize> {
+        self.max_batch
+    }
+
+    fn input_width(&self) -> Option<usize> {
+        self.input_width
+    }
+
+    fn num_classes(&self) -> Option<usize> {
+        self.num_classes
+    }
+
+    fn shard_depths(&self) -> Option<Vec<u64>> {
+        self.last_shard_depths.clone()
+    }
+
+    fn transport_stats(&self) -> Option<TransportStats> {
+        Some(self.stats())
+    }
+}
+
+/// One request/response exchange. `Err` means the wire itself failed
+/// (drop the connection); `Ok(WorkerError)` means the worker answered
+/// typed (keep it).
+fn exchange(
+    conn: &mut FaultyTransport<WireStream>,
+    id: u64,
+    batch: &Matrix,
+    max_frame: usize,
+) -> std::result::Result<Exchange, String> {
+    let req = Frame::Request {
+        id,
+        rows: batch.rows as u32,
+        cols: batch.cols as u32,
+        features: batch.data.clone(),
+    };
+    write_frame(conn, &req).map_err(|e| format!("request write failed: {e}"))?;
+    loop {
+        let frame = read_frame(conn, max_frame).map_err(|e| format!("reply read failed: {e}"))?;
+        match frame {
+            Frame::Response {
+                id: rid,
+                rows,
+                cols,
+                logits,
+                sim_cycles: cycles,
+                shard_depths,
+            } if rid == id => {
+                let (r, c) = (rows as usize, cols as usize);
+                if logits.len() != r * c {
+                    return Err(format!(
+                        "malformed response: {r}x{c} header with {} logits",
+                        logits.len()
+                    ));
+                }
+                let logits = Matrix::from_vec(r, c, logits)
+                    .map_err(|e| format!("malformed response: {e:#}"))?;
+                let out = BatchOutput {
+                    logits,
+                    sim_cycles: cycles,
+                };
+                return Ok(Exchange::Ok(out, shard_depths));
+            }
+            // id 0 marks a connection-level failure (the worker could
+            // not even decode a frame); it closes the connection after
+            // sending it, so treat it as a wire fault.
+            Frame::Error { id: 0, message } => {
+                return Err(format!("worker reported wire failure: {message}"));
+            }
+            Frame::Error { id: rid, message } if rid == id => {
+                return Ok(Exchange::WorkerError(message));
+            }
+            // A stray ack from a heartbeat that raced a connection drop;
+            // harmless, keep reading.
+            Frame::HeartbeatAck { .. } => {}
+            other => return Err(format!("protocol desync: unexpected {other:?}")),
+        }
+    }
+}
+
+/// Dial + versioned hello. `conn_seq` decorrelates the injected-fault
+/// schedule per connection (0 is the initial connect).
+fn dial_and_hello(
+    addr: &WireAddr,
+    config: &RemoteConfig,
+    conn_seq: u64,
+) -> Result<(FaultyTransport<WireStream>, HelloInfo)> {
+    let stream = WireStream::connect(addr, config.connect_timeout)?;
+    stream.set_read_timeout(Some(config.read_timeout))?;
+    stream.set_write_timeout(Some(config.write_timeout))?;
+    let spec = config
+        .faults
+        .with_seed(config.faults.seed ^ conn_seq.wrapping_mul(SEED_SALT));
+    let mut conn = FaultyTransport::new(stream, spec);
+    let hello = Frame::Hello {
+        version: PROTOCOL_VERSION,
+    };
+    write_frame(&mut conn, &hello).context("sending hello")?;
+    match read_frame(&mut conn, config.max_frame) {
+        Ok(Frame::HelloAck {
+            version,
+            tag,
+            input_width,
+            num_classes,
+            max_batch,
+        }) => {
+            if version != PROTOCOL_VERSION {
+                bail!("protocol version mismatch (ours {PROTOCOL_VERSION}, worker {version})");
+            }
+            let info = HelloInfo {
+                tag,
+                input_width: input_width.map(|v| v as usize),
+                num_classes: num_classes.map(|v| v as usize),
+                max_batch: max_batch.map(|v| v as usize),
+            };
+            Ok((conn, info))
+        }
+        Ok(Frame::Error { message, .. }) => bail!("worker refused hello: {message}"),
+        Ok(other) => bail!("unexpected hello reply: {other:?}"),
+        Err(e) => bail!("hello reply failed: {e}"),
+    }
+}
+
+/// The supervisor loop: heartbeat while connected, capped-backoff
+/// re-dial while not, exit on shutdown. Wakes early on the condvar
+/// when a request drops the connection or the backend shuts down.
+///
+/// A re-dial only readmits a worker whose hello matches `expected` —
+/// the identity (tag + declared shape) learned at the initial connect.
+/// A different process answering on the old address must not be
+/// served against: the router's shape checks and the caller's idea of
+/// which model it is talking to were both established at connect time.
+fn supervise(shared: &Shared, addr: &WireAddr, config: &RemoteConfig, expected: &HelloInfo) {
+    let mut rng = Xoshiro256::seed_from_u64(config.reconnect.seed ^ SEED_SALT);
+    let mut attempt: u32 = 0;
+    let mut nonce: u64 = 0;
+    let mut conn_seq: u64 = 1;
+    loop {
+        let slot = lock_slot(shared);
+        if slot.shutdown {
+            return;
+        }
+        if slot.conn.is_some() {
+            attempt = 0;
+            let (mut slot, _) = shared
+                .cv
+                .wait_timeout(slot, config.heartbeat_interval)
+                .unwrap_or_else(|p| p.into_inner());
+            if slot.shutdown {
+                return;
+            }
+            if let Some(conn) = slot.conn.as_mut() {
+                nonce += 1;
+                if !heartbeat_ok(conn, nonce, config.max_frame) {
+                    drop_conn(shared, &mut slot);
+                }
+            }
+        } else {
+            let wait = config.reconnect.backoff(attempt, &mut rng);
+            attempt = attempt.saturating_add(1);
+            let (slot, _) = shared
+                .cv
+                .wait_timeout(slot, wait)
+                .unwrap_or_else(|p| p.into_inner());
+            if slot.shutdown {
+                return;
+            }
+            if slot.conn.is_some() {
+                continue;
+            }
+            drop(slot);
+            if let Ok((conn, hello)) = dial_and_hello(addr, config, conn_seq) {
+                if hello != *expected {
+                    // An impostor: something answered the hello on the
+                    // old address with a different tag or shape. Count
+                    // it as wire trouble and keep probing — readmitting
+                    // would silently swap models under the router.
+                    conn.get_ref().shutdown();
+                    shared.transport_errors.fetch_add(1, Ordering::SeqCst);
+                } else {
+                    let mut slot = lock_slot(shared);
+                    if slot.shutdown {
+                        conn.get_ref().shutdown();
+                        return;
+                    }
+                    slot.conn = Some(conn);
+                    shared.reconnects.fetch_add(1, Ordering::SeqCst);
+                    attempt = 0;
+                    shared.cv.notify_all();
+                }
+            }
+            conn_seq += 1;
+        }
+    }
+}
+
+/// One heartbeat ping/ack on a live connection; false drops it.
+fn heartbeat_ok(conn: &mut FaultyTransport<WireStream>, nonce: u64, max_frame: usize) -> bool {
+    if write_frame(conn, &Frame::Heartbeat { nonce }).is_err() {
+        return false;
+    }
+    matches!(read_frame(conn, max_frame), Ok(Frame::HeartbeatAck { .. }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ReferenceBackend;
+    use crate::nn::{Network, NetworkConfig, Precision};
+    use crate::transport::worker::{WorkerConfig, WorkerHost};
+    use std::time::Instant;
+
+    fn tiny_net() -> Network {
+        Network::random(&NetworkConfig::uniform(&[8, 6, 3], Precision::Bf16), 11)
+    }
+
+    /// Short timeouts + aggressive reconnect so tests converge fast.
+    fn quick_config() -> RemoteConfig {
+        RemoteConfig {
+            connect_timeout: Duration::from_millis(500),
+            read_timeout: Duration::from_secs(2),
+            write_timeout: Duration::from_millis(500),
+            heartbeat_interval: Duration::from_millis(25),
+            reconnect: RetryPolicy {
+                base_backoff: Duration::from_millis(5),
+                max_backoff: Duration::from_millis(50),
+                ..RetryPolicy::default()
+            },
+            ..RemoteConfig::default()
+        }
+    }
+
+    fn start_host(net: Network) -> WorkerHost {
+        WorkerHost::start(
+            ReferenceBackend::boxed(net),
+            "127.0.0.1:0",
+            WorkerConfig::default(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn connect_learns_shape_and_logits_match_the_local_forward_pass() {
+        let net = tiny_net();
+        let host = start_host(net.clone());
+        let mut remote = RemoteBackend::connect(host.local_addr(), quick_config()).unwrap();
+        assert_eq!(remote.input_width(), Some(8));
+        assert_eq!(remote.num_classes(), Some(3));
+        assert!(remote.tag().starts_with("remote:"));
+        let batch = Matrix::from_vec(4, 8, (0..32).map(|i| i as f32 * 0.1).collect()).unwrap();
+        let out = remote.run_batch_with(&batch, Parallelism::serial()).unwrap();
+        let expected = net.forward(&batch).unwrap();
+        assert_eq!(out.logits.data, expected.data);
+        let stats = remote.stats();
+        assert_eq!((stats.reconnects, stats.transport_errors), (0, 0));
+    }
+
+    #[test]
+    fn connecting_to_a_dead_address_fails_typed_and_fast() {
+        // Bind-then-drop guarantees nothing listens on the port.
+        let addr = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let started = Instant::now();
+        let err = RemoteBackend::connect(&addr, quick_config()).unwrap_err();
+        assert!(started.elapsed() < Duration::from_secs(5));
+        assert!(format!("{err:#}").contains("connecting"), "{err:#}");
+    }
+
+    #[test]
+    fn requests_fail_fast_while_disconnected_and_recover_on_worker_restart() {
+        let net = tiny_net();
+        let host = start_host(net.clone());
+        let addr = host.local_addr().to_string();
+        let mut remote = RemoteBackend::connect(&addr, quick_config()).unwrap();
+        let batch = Matrix::from_vec(1, 8, vec![0.5; 8]).unwrap();
+        remote.run_batch_with(&batch, Parallelism::serial()).unwrap();
+
+        // Kill the worker. The next request fails typed, and once the
+        // connection is torn down further requests fail *fast*.
+        host.begin_drain();
+        host.join();
+        let err = remote
+            .run_batch_with(&batch, Parallelism::serial())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("remote worker"), "{err:#}");
+        let started = Instant::now();
+        remote
+            .run_batch_with(&batch, Parallelism::serial())
+            .unwrap_err();
+        assert!(started.elapsed() < Duration::from_secs(1), "must fail fast");
+        assert!(remote.stats().transport_errors >= 1);
+
+        // Restart a worker on the *same* address (retry the bind until
+        // the old listener's port is released).
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let revived = loop {
+            match WorkerHost::start(
+                ReferenceBackend::boxed(net.clone()),
+                &addr,
+                WorkerConfig::default(),
+            ) {
+                Ok(h) => break h,
+                Err(_) => {
+                    assert!(Instant::now() < deadline, "rebinding {addr} timed out");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+
+        // The supervisor re-dials and requests start succeeding again.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let out = loop {
+            match remote.run_batch_with(&batch, Parallelism::serial()) {
+                Ok(out) => break out,
+                Err(_) => {
+                    assert!(Instant::now() < deadline, "reconnect timed out");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        let expected = net.forward(&batch).unwrap();
+        assert_eq!(out.logits.data, expected.data);
+        assert!(remote.stats().reconnects >= 1);
+        drop(revived);
+    }
+
+    /// A different worker answering on the old address must be refused
+    /// readmission: the client pinned the worker's identity (tag +
+    /// declared shape) at connect time, and serving against a swapped
+    /// model would be silent garbage, not a typed failure.
+    #[test]
+    fn reconnect_refuses_a_worker_with_a_different_identity() {
+        let net = tiny_net();
+        let host = start_host(net.clone());
+        let addr = host.local_addr().to_string();
+        let mut remote = RemoteBackend::connect(&addr, quick_config()).unwrap();
+        let batch = Matrix::from_vec(1, 8, vec![0.5; 8]).unwrap();
+        remote.run_batch_with(&batch, Parallelism::serial()).unwrap();
+        drop(host);
+
+        // An impostor with a different input width takes over the port.
+        let impostor_net =
+            Network::random(&NetworkConfig::uniform(&[10, 6, 3], Precision::Bf16), 11);
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let impostor = loop {
+            match WorkerHost::start(
+                ReferenceBackend::boxed(impostor_net.clone()),
+                &addr,
+                WorkerConfig::default(),
+            ) {
+                Ok(h) => break h,
+                Err(_) => {
+                    assert!(Instant::now() < deadline, "rebinding {addr} timed out");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+
+        // The supervisor keeps dialing (each refused hello counts as
+        // wire trouble) but never readmits the mismatched worker.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while remote.stats().transport_errors < 4 {
+            assert!(Instant::now() < deadline, "impostor dials never counted");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!remote.is_connected(), "impostor must not be readmitted");
+        remote
+            .run_batch_with(&batch, Parallelism::serial())
+            .unwrap_err();
+        drop(impostor);
+
+        // The true identity returning on the same address is readmitted.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let revived = loop {
+            match WorkerHost::start(
+                ReferenceBackend::boxed(net.clone()),
+                &addr,
+                WorkerConfig::default(),
+            ) {
+                Ok(h) => break h,
+                Err(_) => {
+                    assert!(Instant::now() < deadline, "rebinding {addr} timed out");
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        };
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let out = loop {
+            match remote.run_batch_with(&batch, Parallelism::serial()) {
+                Ok(out) => break out,
+                Err(_) => {
+                    assert!(Instant::now() < deadline, "reconnect timed out");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        assert_eq!(out.logits.data, net.forward(&batch).unwrap().data);
+        drop(revived);
+    }
+
+    #[test]
+    fn injected_disconnects_yield_typed_errors_then_recovery() {
+        let net = tiny_net();
+        let host = start_host(net.clone());
+        // Connecting may itself take a few tries under injected faults;
+        // vary the seed per attempt so a schedule that faults the hello
+        // write can't pin the loop (each seed is deterministic, the
+        // *sequence* of seeds guarantees progress).
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut attempt = 0u64;
+        let mut remote = loop {
+            let config = RemoteConfig {
+                faults: TransportFaultSpec::disconnects(0.25, 0xC0FFEE + attempt),
+                ..quick_config()
+            };
+            attempt += 1;
+            match RemoteBackend::connect(host.local_addr(), config) {
+                Ok(r) => break r,
+                Err(_) => assert!(Instant::now() < deadline, "faulty connect timed out"),
+            }
+        };
+        let batch = Matrix::from_vec(1, 8, vec![0.25; 8]).unwrap();
+        let expected = net.forward(&batch).unwrap();
+        let (mut oks, mut errs) = (0u32, 0u32);
+        let deadline = Instant::now() + Duration::from_secs(20);
+        while (oks == 0 || errs == 0) && Instant::now() < deadline {
+            match remote.run_batch_with(&batch, Parallelism::serial()) {
+                Ok(out) => {
+                    assert_eq!(out.logits.data, expected.data);
+                    oks += 1;
+                }
+                Err(_) => {
+                    errs += 1;
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+        assert!(oks > 0, "no request ever succeeded under faults");
+        assert!(errs > 0, "disconnect faults never surfaced");
+        let stats = remote.stats();
+        assert!(stats.transport_errors >= 1);
+        assert!(stats.reconnects >= 1);
+    }
+}

@@ -1,0 +1,264 @@
+//! Stream plumbing under the frame codec: TCP or Unix-domain sockets
+//! behind one address syntax.
+//!
+//! Addresses are plain `host:port` strings for TCP, or `uds:<path>`
+//! for a Unix-domain socket (`uds:/tmp/beanna.sock`). Both sides —
+//! [`WireListener`] on the worker, [`WireStream`] on the client —
+//! speak the same [`frame`](super::frame) protocol over either.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed worker address: TCP `host:port` or `uds:<path>`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireAddr {
+    /// TCP endpoint (`127.0.0.1:7070`).
+    Tcp(String),
+    /// Unix-domain socket path (`uds:/tmp/beanna.sock`).
+    Unix(std::path::PathBuf),
+}
+
+impl WireAddr {
+    /// Parse the CLI/address syntax.
+    pub fn parse(s: &str) -> Result<Self> {
+        if let Some(path) = s.strip_prefix("uds:") {
+            if path.is_empty() {
+                bail!("empty uds: socket path");
+            }
+            #[cfg(unix)]
+            return Ok(Self::Unix(path.into()));
+            #[cfg(not(unix))]
+            bail!("uds: addresses need a unix platform");
+        }
+        if s.is_empty() {
+            bail!("empty worker address (want host:port or uds:<path>)");
+        }
+        Ok(Self::Tcp(s.to_string()))
+    }
+}
+
+impl std::fmt::Display for WireAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Tcp(a) => write!(f, "{a}"),
+            Self::Unix(p) => write!(f, "uds:{}", p.display()),
+        }
+    }
+}
+
+/// A connected stream to/from a worker, TCP or UDS.
+#[derive(Debug)]
+pub enum WireStream {
+    /// TCP connection.
+    Tcp(TcpStream),
+    /// Unix-domain connection.
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl WireStream {
+    /// Dial `addr` with a connect timeout (the timeout applies to the
+    /// TCP connect; UDS connects don't block on a remote host).
+    pub fn connect(addr: &WireAddr, connect_timeout: Duration) -> Result<Self> {
+        match addr {
+            WireAddr::Tcp(a) => {
+                let sock = a
+                    .to_socket_addrs()
+                    .with_context(|| format!("resolving worker address '{a}'"))?
+                    .next()
+                    .ok_or_else(|| anyhow!("worker address '{a}' resolved to nothing"))?;
+                let stream = TcpStream::connect_timeout(&sock, connect_timeout)
+                    .with_context(|| format!("connecting to worker {a}"))?;
+                stream.set_nodelay(true).ok();
+                Ok(Self::Tcp(stream))
+            }
+            #[cfg(unix)]
+            WireAddr::Unix(p) => {
+                let s = UnixStream::connect(p)
+                    .with_context(|| format!("connecting to worker uds:{}", p.display()))?;
+                Ok(Self::Unix(s))
+            }
+        }
+    }
+
+    /// Bound the blocking time of every read on this stream.
+    pub fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Self::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    /// Bound the blocking time of every write on this stream.
+    pub fn set_write_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(s) => s.set_write_timeout(d),
+            #[cfg(unix)]
+            Self::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+
+    /// Close both directions (best-effort; used on teardown so the
+    /// peer sees EOF instead of a stalled socket).
+    pub fn shutdown(&self) {
+        match self {
+            Self::Tcp(s) => {
+                s.shutdown(std::net::Shutdown::Both).ok();
+            }
+            #[cfg(unix)]
+            Self::Unix(s) => {
+                s.shutdown(std::net::Shutdown::Both).ok();
+            }
+        }
+    }
+}
+
+impl Read for WireStream {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Self::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for WireStream {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Self::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Self::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Self::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// A bound worker listener, TCP or UDS.
+pub enum WireListener {
+    /// TCP listener.
+    Tcp(TcpListener),
+    /// Unix-domain listener (unlinks its socket path on drop).
+    #[cfg(unix)]
+    Unix(UnixListener, std::path::PathBuf),
+}
+
+impl WireListener {
+    /// Bind `addr`. TCP port 0 binds an ephemeral port — read the
+    /// resolved endpoint back with [`local_addr`](Self::local_addr).
+    pub fn bind(addr: &WireAddr) -> Result<Self> {
+        match addr {
+            WireAddr::Tcp(a) => {
+                let l = TcpListener::bind(a)
+                    .with_context(|| format!("binding worker listener {a}"))?;
+                Ok(Self::Tcp(l))
+            }
+            #[cfg(unix)]
+            WireAddr::Unix(p) => {
+                // A stale socket file from a killed worker blocks the
+                // bind; remove it first (fresh path, nothing listening).
+                std::fs::remove_file(p).ok();
+                let l = UnixListener::bind(p)
+                    .with_context(|| format!("binding worker listener uds:{}", p.display()))?;
+                Ok(Self::Unix(l, p.clone()))
+            }
+        }
+    }
+
+    /// The bound endpoint in [`WireAddr::parse`] syntax (with the real
+    /// port for ephemeral TCP binds).
+    pub fn local_addr(&self) -> Result<String> {
+        match self {
+            Self::Tcp(l) => Ok(l.local_addr()?.to_string()),
+            #[cfg(unix)]
+            Self::Unix(_, p) => Ok(format!("uds:{}", p.display())),
+        }
+    }
+
+    /// Switch the listener to non-blocking accepts (the worker's accept
+    /// loop polls a drain flag between attempts).
+    pub fn set_nonblocking(&self, on: bool) -> std::io::Result<()> {
+        match self {
+            Self::Tcp(l) => l.set_nonblocking(on),
+            #[cfg(unix)]
+            Self::Unix(l, _) => l.set_nonblocking(on),
+        }
+    }
+
+    /// Accept one connection.
+    pub fn accept(&self) -> std::io::Result<WireStream> {
+        match self {
+            Self::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nodelay(true).ok();
+                Ok(WireStream::Tcp(s))
+            }
+            #[cfg(unix)]
+            Self::Unix(l, _) => {
+                let (s, _) = l.accept()?;
+                Ok(WireStream::Unix(s))
+            }
+        }
+    }
+}
+
+impl Drop for WireListener {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Self::Unix(_, p) = self {
+            std::fs::remove_file(p).ok();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn addr_syntax_parses_both_families() {
+        assert_eq!(
+            WireAddr::parse("127.0.0.1:7070").unwrap(),
+            WireAddr::Tcp("127.0.0.1:7070".into())
+        );
+        #[cfg(unix)]
+        assert_eq!(
+            WireAddr::parse("uds:/tmp/beanna.sock").unwrap(),
+            WireAddr::Unix("/tmp/beanna.sock".into())
+        );
+        assert!(WireAddr::parse("").is_err());
+        assert!(WireAddr::parse("uds:").is_err());
+    }
+
+    #[test]
+    fn tcp_loopback_round_trips_bytes() {
+        let listener = WireListener::bind(&WireAddr::parse("127.0.0.1:0").unwrap()).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let mut s = listener.accept().unwrap();
+            let mut buf = [0u8; 5];
+            s.read_exact(&mut buf).unwrap();
+            s.write_all(&buf).unwrap();
+        });
+        let addr = WireAddr::parse(&addr).unwrap();
+        let mut c = WireStream::connect(&addr, Duration::from_secs(1)).unwrap();
+        c.write_all(b"hello").unwrap();
+        let mut back = [0u8; 5];
+        c.read_exact(&mut back).unwrap();
+        assert_eq!(&back, b"hello");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,548 @@
+//! The worker side of the wire: a listener hosting one
+//! [`ExecutionBackend`] behind the framed protocol.
+//!
+//! [`WorkerHost::start`] binds a [`WireListener`] and serves
+//! connections sequentially on a background thread — each connection
+//! is one client (a
+//! [`RemoteBackend`](super::remote::RemoteBackend) replica), handshook
+//! with hello/hello-ack and then fed request/heartbeat frames. The
+//! hosted backend's declared shape travels in the hello-ack, so the
+//! engine's build-time shape cross-check works across the wire exactly
+//! as it does in-process.
+//!
+//! Robustness contract:
+//!
+//! * a **panicking** backend batch is caught per request
+//!   (`catch_unwind`) and answered with a typed [`Frame::Error`] — the
+//!   worker keeps serving, mirroring the in-process server;
+//! * a **garbage or truncated** frame costs that one connection (the
+//!   framing is unrecoverable once desynced), never the process — the
+//!   client reconnects and the accept loop hands it a fresh stream;
+//! * **drain** (a [`Frame::Drain`], [`WorkerHost::begin_drain`], or
+//!   the CLI's SIGTERM handler) finishes the in-flight request,
+//!   refuses later ones with a typed error, and exits the accept loop.
+
+use std::io::Read;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::frame::{check_len, crc32, decode_body, write_frame};
+use super::frame::{Frame, FrameError, PROTOCOL_VERSION};
+use super::wire::{WireAddr, WireListener, WireStream};
+use crate::coordinator::ExecutionBackend;
+use crate::util::par::Parallelism;
+
+/// Worker-side knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerConfig {
+    /// Largest accepted frame body, in bytes.
+    pub max_frame: usize,
+    /// Kernel-parallelism budget handed to the hosted backend (the
+    /// worker owns its host's cores; clients don't negotiate this).
+    pub parallelism: Parallelism,
+    /// How often idle reads wake up to check the drain flag.
+    pub poll_interval: Duration,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        Self {
+            max_frame: super::frame::DEFAULT_MAX_FRAME,
+            parallelism: Parallelism::default(),
+            poll_interval: Duration::from_millis(25),
+        }
+    }
+}
+
+/// A running worker: listener + serving thread, draining on request.
+pub struct WorkerHost {
+    addr: String,
+    drain: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerHost {
+    /// Bind `addr` (see [`WireAddr::parse`]; TCP port 0 picks an
+    /// ephemeral port) and serve `backend` behind it until drained.
+    pub fn start(
+        backend: Box<dyn ExecutionBackend>,
+        addr: &str,
+        config: WorkerConfig,
+    ) -> Result<Self> {
+        let listener = WireListener::bind(&WireAddr::parse(addr)?)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let drain = Arc::new(AtomicBool::new(false));
+        let drain_t = Arc::clone(&drain);
+        let handle = std::thread::Builder::new()
+            .name("beanna-worker-host".into())
+            .spawn(move || accept_loop(listener, backend, &drain_t, config))
+            .expect("spawning the worker host thread");
+        Ok(Self {
+            addr,
+            drain,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound endpoint (with the real port for ephemeral binds), in
+    /// the syntax [`RemoteBackend::connect`] accepts.
+    ///
+    /// [`RemoteBackend::connect`]: super::remote::RemoteBackend::connect
+    pub fn local_addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Ask the host to drain: the in-flight request finishes, later
+    /// ones get a typed refusal, and the serving thread exits.
+    /// Idempotent.
+    pub fn begin_drain(&self) {
+        self.drain.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether the serving thread has exited (drained, or crashed).
+    pub fn is_finished(&self) -> bool {
+        match &self.handle {
+            Some(h) => h.is_finished(),
+            None => true,
+        }
+    }
+
+    /// Block until the serving thread exits. (Call
+    /// [`begin_drain`](Self::begin_drain) first, or this waits for a
+    /// drain frame.)
+    pub fn join(mut self) {
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for WorkerHost {
+    fn drop(&mut self) {
+        self.begin_drain();
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+fn accept_loop(
+    listener: WireListener,
+    mut backend: Box<dyn ExecutionBackend>,
+    drain: &AtomicBool,
+    config: WorkerConfig,
+) {
+    while !drain.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok(stream) => {
+                if serve_conn(stream, backend.as_mut(), drain, &config) {
+                    drain.store(true, Ordering::SeqCst);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(config.poll_interval);
+            }
+            Err(_) => std::thread::sleep(config.poll_interval),
+        }
+    }
+}
+
+/// Serve one connection to completion. Returns true when the client
+/// asked the whole worker to drain.
+fn serve_conn(
+    mut stream: WireStream,
+    backend: &mut dyn ExecutionBackend,
+    drain: &AtomicBool,
+    config: &WorkerConfig,
+) -> bool {
+    // Reads wake up every poll_interval so an idle connection still
+    // notices a drain (SIGTERM) promptly.
+    if stream.set_read_timeout(Some(config.poll_interval)).is_err() {
+        return false;
+    }
+    loop {
+        let frame = match recv_polling(&mut stream, config.max_frame, drain) {
+            Ok(Some(f)) => f,
+            // Draining while idle: close the connection.
+            Ok(None) => return false,
+            // Peer hung up (or stalled mid-frame past patience).
+            Err(FrameError::Io(_)) => return false,
+            // Decode failure: the framing is desynced — answer typed,
+            // then drop this connection. The worker itself survives.
+            Err(e) => {
+                let reply = error_frame(0, format!("wire decode: {e}"));
+                send(&mut stream, &reply);
+                return false;
+            }
+        };
+        match frame {
+            Frame::Hello { version } => {
+                if version != PROTOCOL_VERSION {
+                    let msg = format!(
+                        "protocol version mismatch (worker {PROTOCOL_VERSION}, client {version})"
+                    );
+                    send(&mut stream, &error_frame(0, msg));
+                    return false;
+                }
+                let ack = Frame::HelloAck {
+                    version: PROTOCOL_VERSION,
+                    tag: backend.tag().to_string(),
+                    input_width: backend.input_width().map(|w| w as u32),
+                    num_classes: backend.num_classes().map(|c| c as u32),
+                    max_batch: backend.max_batch().map(|b| b as u32),
+                };
+                if !send(&mut stream, &ack) {
+                    return false;
+                }
+            }
+            Frame::Request {
+                id,
+                rows,
+                cols,
+                features,
+            } => {
+                if drain.load(Ordering::SeqCst) {
+                    send(&mut stream, &error_frame(id, "worker draining".into()));
+                    return false;
+                }
+                let reply = match run_request(backend, config.parallelism, rows, cols, features) {
+                    Ok((out, shard_depths)) => Frame::Response {
+                        id,
+                        rows: out.logits.rows as u32,
+                        cols: out.logits.cols as u32,
+                        logits: out.logits.data,
+                        sim_cycles: out.sim_cycles,
+                        shard_depths,
+                    },
+                    Err(message) => Frame::Error { id, message },
+                };
+                if !send(&mut stream, &reply) {
+                    return false;
+                }
+            }
+            Frame::Heartbeat { nonce } => {
+                if !send(&mut stream, &Frame::HeartbeatAck { nonce }) {
+                    return false;
+                }
+            }
+            Frame::Drain => {
+                send(&mut stream, &Frame::DrainAck);
+                return true;
+            }
+            // A worker only ever *receives* client frames; anything
+            // else means the peer is confused — refuse and drop.
+            other => {
+                let reply = error_frame(0, format!("unexpected frame from client: {other:?}"));
+                send(&mut stream, &reply);
+                return false;
+            }
+        }
+    }
+}
+
+fn error_frame(id: u64, message: String) -> Frame {
+    Frame::Error { id, message }
+}
+
+/// Execute one request batch, catching backend panics the same way the
+/// in-process server does — a panic is a typed failure, not a dead
+/// worker.
+fn run_request(
+    backend: &mut dyn ExecutionBackend,
+    par: Parallelism,
+    rows: u32,
+    cols: u32,
+    features: Vec<f32>,
+) -> Result<(crate::coordinator::BatchOutput, Option<Vec<u64>>), String> {
+    let batch = crate::bf16::Matrix::from_vec(rows as usize, cols as usize, features)
+        .map_err(|e| format!("bad request shape: {e:#}"))?;
+    let result = catch_unwind(AssertUnwindSafe(|| backend.run_batch_with(&batch, par)));
+    match result {
+        Ok(Ok(out)) => {
+            let depths = backend.shard_depths();
+            Ok((out, depths))
+        }
+        Ok(Err(e)) => Err(format!("{e:#}")),
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| panic.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".into());
+            Err(format!("backend panicked: {msg}"))
+        }
+    }
+}
+
+/// Best-effort frame write; false means the connection is gone.
+fn send(stream: &mut WireStream, frame: &Frame) -> bool {
+    write_frame(stream, frame).is_ok()
+}
+
+/// Drain-aware frame read. Idle waiting polls the drain flag between
+/// read timeouts and returns `Ok(None)` once draining; a frame that
+/// has *started* arriving is finished with bounded patience so a slow
+/// writer isn't desynced by one poll tick.
+fn recv_polling(
+    stream: &mut WireStream,
+    max_frame: usize,
+    drain: &AtomicBool,
+) -> Result<Option<Frame>, FrameError> {
+    let mut len_buf = [0u8; 4];
+    let mut have = 0usize;
+    while have == 0 {
+        if drain.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match stream.read(&mut len_buf) {
+            Ok(0) => return Err(FrameError::Io(std::io::ErrorKind::UnexpectedEof.into())),
+            Ok(n) => have = n,
+            Err(e) if stalled(&e) => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    fill(stream, &mut len_buf, have)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    check_len(len, max_frame)?;
+    let mut rest = vec![0u8; len + 4];
+    fill(stream, &mut rest, 0)?;
+    let (body, crc_bytes) = rest.split_at(len);
+    let expected = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let got = crc32(body);
+    if expected != got {
+        return Err(FrameError::BadChecksum { expected, got });
+    }
+    decode_body(body).map(Some)
+}
+
+/// Finish reading a frame that has started arriving (the first
+/// `already` bytes of `buf` are filled): retry timeouts up to a
+/// patience budget — a peer that stalls mid-frame for seconds is
+/// treated as gone.
+fn fill(stream: &mut WireStream, buf: &mut [u8], already: usize) -> Result<(), FrameError> {
+    const PATIENCE: u32 = 200;
+    let mut filled = already;
+    let mut stalls = 0u32;
+    while filled < buf.len() {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => return Err(FrameError::Io(std::io::ErrorKind::UnexpectedEof.into())),
+            Ok(n) => {
+                filled += n;
+                stalls = 0;
+            }
+            Err(e) if stalled(&e) => {
+                stalls += 1;
+                if stalls > PATIENCE {
+                    return Err(FrameError::Io(e));
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(FrameError::Io(e)),
+        }
+    }
+    Ok(())
+}
+
+/// A read timeout on a socket surfaces as WouldBlock or TimedOut
+/// depending on the platform.
+fn stalled(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ReferenceBackend;
+    use crate::nn::{Network, NetworkConfig, Precision};
+    use crate::transport::frame::{read_frame, DEFAULT_MAX_FRAME};
+    use std::io::Write as _;
+
+    fn tiny_net() -> Network {
+        Network::random(&NetworkConfig::uniform(&[8, 6, 3], Precision::Bf16), 11)
+    }
+
+    fn start_host() -> WorkerHost {
+        WorkerHost::start(
+            ReferenceBackend::boxed(tiny_net()),
+            "127.0.0.1:0",
+            WorkerConfig::default(),
+        )
+        .unwrap()
+    }
+
+    fn dial(host: &WorkerHost) -> WireStream {
+        let addr = WireAddr::parse(host.local_addr()).unwrap();
+        let s = WireStream::connect(&addr, Duration::from_secs(2)).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s
+    }
+
+    fn hello(stream: &mut WireStream) -> Frame {
+        let frame = Frame::Hello {
+            version: PROTOCOL_VERSION,
+        };
+        write_frame(stream, &frame).unwrap();
+        read_frame(stream, DEFAULT_MAX_FRAME).unwrap()
+    }
+
+    fn request(id: u64, rows: u32, cols: u32, fill: f32) -> Frame {
+        Frame::Request {
+            id,
+            rows,
+            cols,
+            features: vec![fill; (rows * cols) as usize],
+        }
+    }
+
+    #[test]
+    fn hello_reports_the_hosted_backend_shape() {
+        let host = start_host();
+        let mut c = dial(&host);
+        match hello(&mut c) {
+            Frame::HelloAck {
+                version,
+                tag,
+                input_width,
+                num_classes,
+                ..
+            } => {
+                assert_eq!(version, PROTOCOL_VERSION);
+                assert!(!tag.is_empty());
+                assert_eq!(input_width, Some(8));
+                assert_eq!(num_classes, Some(3));
+            }
+            other => panic!("expected HelloAck, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn request_heartbeat_and_drain_round_trip() {
+        let net = tiny_net();
+        let host = WorkerHost::start(
+            ReferenceBackend::boxed(net.clone()),
+            "127.0.0.1:0",
+            WorkerConfig::default(),
+        )
+        .unwrap();
+        let mut c = dial(&host);
+        hello(&mut c);
+        write_frame(&mut c, &request(1, 1, 8, 0.5)).unwrap();
+        match read_frame(&mut c, DEFAULT_MAX_FRAME).unwrap() {
+            Frame::Response {
+                id,
+                rows,
+                cols,
+                logits,
+                ..
+            } => {
+                assert_eq!((id, rows, cols), (1, 1, 3));
+                // Bit-identical to the local forward pass.
+                let x = crate::bf16::Matrix::from_vec(1, 8, vec![0.5; 8]).unwrap();
+                let expected = net.forward(&x).unwrap();
+                assert_eq!(logits, expected.data);
+            }
+            other => panic!("expected Response, got {other:?}"),
+        }
+        write_frame(&mut c, &Frame::Heartbeat { nonce: 99 }).unwrap();
+        assert_eq!(
+            read_frame(&mut c, DEFAULT_MAX_FRAME).unwrap(),
+            Frame::HeartbeatAck { nonce: 99 }
+        );
+        write_frame(&mut c, &Frame::Drain).unwrap();
+        assert_eq!(read_frame(&mut c, DEFAULT_MAX_FRAME).unwrap(), Frame::DrainAck);
+        host.join();
+    }
+
+    #[test]
+    fn bad_width_request_is_a_typed_error_and_the_worker_survives() {
+        let host = start_host();
+        let mut c = dial(&host);
+        hello(&mut c);
+        // Wrong width for the 8-wide net.
+        write_frame(&mut c, &request(5, 1, 4, 0.5)).unwrap();
+        match read_frame(&mut c, DEFAULT_MAX_FRAME).unwrap() {
+            Frame::Error { id, message } => {
+                assert_eq!(id, 5);
+                assert!(!message.is_empty());
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+        // Same connection still serves good requests.
+        write_frame(&mut c, &request(6, 1, 8, 0.1)).unwrap();
+        assert!(matches!(
+            read_frame(&mut c, DEFAULT_MAX_FRAME).unwrap(),
+            Frame::Response { id: 6, .. }
+        ));
+    }
+
+    #[test]
+    fn garbage_bytes_cost_one_connection_not_the_worker() {
+        let host = start_host();
+        {
+            let mut c = dial(&host);
+            hello(&mut c);
+            // A plausible length prefix followed by garbage: the worker
+            // answers typed (or just drops the connection) and moves on.
+            let mut junk = 16u32.to_le_bytes().to_vec();
+            junk.extend_from_slice(&[0xAB; 20]);
+            c.write_all(&junk).unwrap();
+            match read_frame(&mut c, DEFAULT_MAX_FRAME) {
+                Ok(Frame::Error { id: 0, message }) => {
+                    assert!(message.contains("decode"), "{message}");
+                }
+                Ok(other) => panic!("expected Error, got {other:?}"),
+                // Connection closed without a reply is acceptable too.
+                Err(_) => {}
+            }
+        }
+        // A fresh connection gets a healthy worker.
+        let mut c2 = dial(&host);
+        assert!(matches!(hello(&mut c2), Frame::HelloAck { .. }));
+    }
+
+    #[test]
+    fn oversized_frames_are_refused_typed() {
+        let host = WorkerHost::start(
+            ReferenceBackend::boxed(tiny_net()),
+            "127.0.0.1:0",
+            WorkerConfig {
+                max_frame: 64,
+                ..WorkerConfig::default()
+            },
+        )
+        .unwrap();
+        let mut c = dial(&host);
+        hello(&mut c);
+        // 1×8 floats fits in 64 bytes; 4×8 does not.
+        write_frame(&mut c, &request(1, 4, 8, 0.5)).unwrap();
+        match read_frame(&mut c, DEFAULT_MAX_FRAME) {
+            Ok(Frame::Error { message, .. }) => assert!(message.contains("bound"), "{message}"),
+            Ok(other) => panic!("expected Error, got {other:?}"),
+            Err(_) => {}
+        }
+    }
+
+    #[test]
+    fn begin_drain_refuses_new_work_and_exits() {
+        let host = start_host();
+        let mut c = dial(&host);
+        hello(&mut c);
+        host.begin_drain();
+        // The idle connection closes within a poll tick or two, and the
+        // serving thread exits.
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while !host.is_finished() {
+            assert!(std::time::Instant::now() < deadline, "drain must finish");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        host.join();
+    }
+}

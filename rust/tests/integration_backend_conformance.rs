@@ -23,6 +23,7 @@ use beanna::coordinator::{
     ReferenceBackend, ServeError, Server, ServerConfig, ShardedSimulatorBackend, SimulatorBackend,
 };
 use beanna::nn::{Network, NetworkConfig, Precision};
+use beanna::transport::{RemoteBackend, RemoteConfig, WorkerConfig, WorkerHost};
 use beanna::util::rng::Xoshiro256;
 
 fn shared_net() -> Network {
@@ -132,6 +133,43 @@ fn sharded_simulator_backend_conforms() {
     for shards in [1usize, 3] {
         assert_conforms(&mut || ShardedSimulatorBackend::boxed(net.clone(), shards), &net);
     }
+}
+
+/// The wire is invisible: a `RemoteBackend` dialing a loopback
+/// `WorkerHost` passes the identical conformance contract the local
+/// backends pass, and its logits are bit-identical to the wrapped
+/// backend's — serialization round-trips every f32 exactly.
+#[test]
+fn remote_backend_over_loopback_worker_conforms() {
+    let net = shared_net();
+    // Each fresh backend gets its own loopback worker (a host serves
+    // one connection at a time); the hosts must outlive their clients.
+    let hosts = std::cell::RefCell::new(Vec::new());
+    let mut mk = || -> Box<dyn ExecutionBackend> {
+        let host = WorkerHost::start(
+            ReferenceBackend::boxed(net.clone()),
+            "127.0.0.1:0",
+            WorkerConfig::default(),
+        )
+        .expect("starting loopback worker");
+        let remote = RemoteBackend::boxed(host.local_addr(), RemoteConfig::default())
+            .expect("dialing loopback worker");
+        hosts.borrow_mut().push(host);
+        remote
+    };
+    assert_conforms(&mut mk, &net);
+
+    // Bit-identical to the wrapped local backend, batch for batch.
+    let mut local = ReferenceBackend::new(net.clone());
+    let mut remote = mk();
+    assert_eq!(remote.tag(), "remote:ref");
+    for (rows, seed) in [(1usize, 21u64), (5, 22), (16, 23)] {
+        let x = probe(rows, 40, seed);
+        let a = remote.run_batch(&x).unwrap();
+        let b = local.run_batch(&x).unwrap();
+        assert_eq!(a.logits, b.logits, "rows {rows}");
+    }
+    drop(remote);
 }
 
 /// The fault wrapper at rate zero is invisible: every in-tree backend

@@ -223,3 +223,71 @@ fn drain_under_chaos_is_typed_and_flushes_in_flight_work() {
     let m = router.shutdown();
     assert_eq!(m.iter().map(|s| s.requests).sum::<u64>(), 12);
 }
+
+/// A retry *scheduled* when drain begins must still resolve. Every
+/// replica fails every attempt, so each ticket has a backoff-delayed
+/// re-admission pending when `begin_drain` lands; the race must end in
+/// a typed outcome — the final backend error, or `ShuttingDown` when
+/// drain refuses the re-admission — never a hang, and the outstanding
+/// gauges must still drain to zero (no slot leaks).
+#[test]
+fn drain_racing_scheduled_retries_resolves_typed_and_leaks_nothing() {
+    let net = small_net();
+    let spec = FaultSpec {
+        error_rate: 1.0,
+        seed: chaos_seed() ^ 0x0D12,
+        ..FaultSpec::default()
+    };
+    let decorrelated = spec.with_seed(spec.seed ^ 1);
+    let backends: Vec<Box<dyn ExecutionBackend>> = vec![
+        FaultInjectingBackend::boxed(ReferenceBackend::boxed(net.clone()), spec),
+        FaultInjectingBackend::boxed(ReferenceBackend::boxed(net), decorrelated),
+    ];
+    let router = Router::start_with_retry(
+        backends,
+        ServerConfig {
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_micros(200),
+            },
+            ..Default::default()
+        },
+        RoutePolicy::RoundRobin,
+        RetryPolicy {
+            max_attempts: 3,
+            // Long enough that drain lands while the first failures'
+            // retries are still waiting out their backoff, not already
+            // re-admitted.
+            base_backoff: Duration::from_millis(20),
+            max_backoff: Duration::from_millis(40),
+            retry_budget: None,
+            // Never eject: both replicas must keep admitting so the
+            // race is retry-vs-drain, not retry-vs-breaker.
+            breaker_threshold: 64,
+            probe_cooldown: Duration::from_millis(1),
+            seed: spec.seed,
+        },
+    )
+    .unwrap();
+    let tickets: Vec<_> = (0..8)
+        .map(|i| router.submit(vec![0.1 * i as f32; 12]).unwrap().1)
+        .collect();
+    // Let the first attempts fail and their retries get scheduled...
+    std::thread::sleep(Duration::from_millis(5));
+    // ...then drain while those backoffs are still pending.
+    router.begin_drain();
+    for t in tickets {
+        match t.wait() {
+            Err(ServeError::Backend { .. }) | Err(ServeError::ShuttingDown) => {}
+            Ok(_) => panic!("all-failing replicas cannot serve a request"),
+            Err(other) => panic!("retry-vs-drain race leaked an untyped outcome: {other:?}"),
+        }
+    }
+    wait_until(|| router.outstanding().iter().all(|&o| o == 0));
+    let m = router.shutdown();
+    // Nothing could succeed, and every dispatched attempt settled as a
+    // replica-level failure (then retried or surfaced) — no slot is
+    // still held anywhere.
+    assert_eq!(m.iter().map(|s| s.requests).sum::<u64>(), 0);
+    assert!(m.iter().map(|s| s.failures).sum::<u64>() >= 1);
+}
