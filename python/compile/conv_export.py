@@ -1,0 +1,190 @@
+"""Export conv-front weights in the rust `.bwt` layout.
+
+The rust loader (`Network::from_tensor_file`) extends the dense naming
+scheme with a convolutional front:
+
+* ``meta/front`` — an f32 descriptor tensor of ``(stages + 1) x 6``
+  rows. Row 0 is the input image ``[h, w, c, 0, 0, 0]`` (HWC feature
+  maps, flattened as ``(y*W + x)*C + c``); then one row per stage:
+  conv ``[1, out_channels, kernel, stride, padding, precision]``
+  (precision 0 = bf16, 1 = binary), pool ``[2, kernel, stride, 0, 0,
+  0]``, flatten ``[3, 0, 0, 0, 0, 0]``.
+* ``front{i}/weight`` — per conv **stage index** ``i`` (pools and
+  flatten occupy indices but carry no tensors), an
+  ``out_channels x kernel**2 * in_channels`` f32 matrix whose columns
+  follow the ``(ky, kx, c)`` patch order — the exact rows the rust
+  im2col lowering contracts against.
+* ``front{i}/bn_scale`` / ``front{i}/bn_shift`` — optional folded
+  batch-norm vectors, one value per output channel.
+
+The dense trunk keeps the existing ``layer{i}/...`` + ``meta/sizes`` +
+``meta/precisions`` contract from :mod:`.train`.
+
+Run as a module to write an untrained (He-initialised) hybrid CNN the
+rust side can load and serve::
+
+    python -m compile.conv_export --out artifacts/weights_cnn.bwt
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .bwt import TensorFile
+
+BF16 = 0
+BINARY = 1
+
+
+@dataclass(frozen=True)
+class ConvStage:
+    """One ``conv`` row of the descriptor."""
+
+    out_channels: int
+    kernel: int
+    stride: int = 1
+    padding: int = 0
+    precision: int = BF16
+
+    def desc_row(self):
+        return [1, self.out_channels, self.kernel, self.stride, self.padding, self.precision]
+
+
+@dataclass(frozen=True)
+class PoolStage:
+    """One ``pool`` row of the descriptor."""
+
+    kernel: int
+    stride: int
+
+    def desc_row(self):
+        return [2, self.kernel, self.stride, 0, 0, 0]
+
+
+@dataclass(frozen=True)
+class FlattenStage:
+    """The ``flatten`` row of the descriptor."""
+
+    def desc_row(self):
+        return [3, 0, 0, 0, 0, 0]
+
+
+@dataclass(frozen=True)
+class ConvFrontSpec:
+    """Input geometry + ordered stages (must end with a flatten)."""
+
+    height: int
+    width: int
+    channels: int
+    stages: tuple = field(default_factory=tuple)
+
+    def descriptor(self) -> np.ndarray:
+        rows = [[self.height, self.width, self.channels, 0, 0, 0]]
+        rows += [s.desc_row() for s in self.stages]
+        return np.asarray(rows, dtype=np.float32)
+
+    def conv_shapes(self):
+        """Yield ``(stage_index, stage, in_channels)`` per conv stage,
+        tracking channel counts through pools (channel-preserving)."""
+        channels = self.channels
+        for i, stage in enumerate(self.stages):
+            if isinstance(stage, ConvStage):
+                yield i, stage, channels
+                channels = stage.out_channels
+
+
+def cnn_hybrid_front() -> ConvFrontSpec:
+    """The rust `NetworkConfig::cnn_hybrid` front: 32x32x3 -> bf16 conv
+    -> pool -> binary conv -> pool -> flatten (1024 features)."""
+    return ConvFrontSpec(
+        32,
+        32,
+        3,
+        (
+            ConvStage(16, 3, 1, 1, BF16),
+            PoolStage(2, 2),
+            ConvStage(16, 3, 1, 1, BINARY),
+            PoolStage(2, 2),
+            FlattenStage(),
+        ),
+    )
+
+
+def init_front_params(front: ConvFrontSpec, seed: int) -> dict:
+    """He-initialised conv weights + identity BN, keyed by stage index.
+
+    Weight rows are ``(out_channels, kernel**2 * in_channels)`` in the
+    ``(ky, kx, c)`` column order the rust loader expects. A framework
+    checkpoint in OHWI layout ``(O, KH, KW, I)`` maps onto this with a
+    plain ``reshape(O, -1)``.
+    """
+    rng = np.random.default_rng(seed)
+    params = {}
+    for i, stage, in_channels in front.conv_shapes():
+        patch = stage.kernel * stage.kernel * in_channels
+        params[i] = {
+            "w": (rng.standard_normal((stage.out_channels, patch)) * np.sqrt(2.0 / patch)).astype(
+                np.float32
+            ),
+            "scale": np.ones(stage.out_channels, dtype=np.float32),
+            "shift": np.zeros(stage.out_channels, dtype=np.float32),
+        }
+    return params
+
+
+def export_conv_front(tf: TensorFile, front: ConvFrontSpec, params: dict) -> None:
+    """Insert the front's tensors into an open `.bwt` container."""
+    tf.insert_f32("meta/front", front.descriptor())
+    for i, stage, in_channels in front.conv_shapes():
+        p = params[i]
+        w = np.asarray(p["w"], dtype=np.float32)
+        patch = stage.kernel * stage.kernel * in_channels
+        if w.shape != (stage.out_channels, patch):
+            raise ValueError(
+                f"front{i} weights must be {(stage.out_channels, patch)}, got {w.shape}"
+            )
+        if stage.precision == BINARY:
+            # Deploy the binarized weights (what the hardware stores).
+            w = np.where(w < 0, -1.0, 1.0).astype(np.float32)
+        tf.insert_f32(f"front{i}/weight", w)
+        if "scale" in p:
+            tf.insert_f32(f"front{i}/bn_scale", np.asarray(p["scale"], dtype=np.float32))
+            tf.insert_f32(f"front{i}/bn_shift", np.asarray(p["shift"], dtype=np.float32))
+
+
+def export_cnn_weights(path: str, seed: int = 7) -> None:
+    """Write a loadable hybrid-CNN `.bwt`: the cnn_hybrid front plus its
+    1024-128-10 dense trunk (binary matmul into the 128 hidden layer)."""
+    front = cnn_hybrid_front()
+    sizes = [1024, 128, 10]
+    binary = [True, False]
+    tf = TensorFile()
+    export_conv_front(tf, front, init_front_params(front, seed))
+    rng = np.random.default_rng(seed + 1)
+    for i, (n_in, n_out) in enumerate(zip(sizes[:-1], sizes[1:])):
+        w = (rng.standard_normal((n_out, n_in)) * np.sqrt(2.0 / n_in)).astype(np.float32)
+        if binary[i]:
+            w = np.where(w < 0, -1.0, 1.0).astype(np.float32)
+        tf.insert_f32(f"layer{i}/weight", w)
+        if i < len(sizes) - 2:  # hidden layers carry BN, the head doesn't
+            tf.insert_f32(f"layer{i}/bn_scale", np.ones(n_out, dtype=np.float32))
+            tf.insert_f32(f"layer{i}/bn_shift", np.zeros(n_out, dtype=np.float32))
+    tf.insert_f32("meta/precisions", np.asarray([1.0 if b else 0.0 for b in binary]))
+    tf.insert_f32("meta/sizes", np.asarray(sizes, dtype=np.float32))
+    tf.save(path)
+    print(f"wrote {path}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="artifacts/weights_cnn.bwt")
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+    export_cnn_weights(args.out, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Conv-front export tests: the `.bwt` the exporter writes carries the
+descriptor layout and tensor shapes the rust loader
+(`Network::from_tensor_file`) contracts on."""
+
+import numpy as np
+
+from compile.bwt import TensorFile
+from compile.conv_export import (
+    BINARY,
+    ConvStage,
+    FlattenStage,
+    PoolStage,
+    cnn_hybrid_front,
+    export_cnn_weights,
+    export_conv_front,
+    init_front_params,
+)
+
+
+class TestDescriptor:
+    def test_cnn_hybrid_rows(self):
+        desc = cnn_hybrid_front().descriptor()
+        assert desc.shape == (6, 6)
+        assert desc.dtype == np.float32
+        # Row 0: input image h, w, c.
+        assert desc[0].tolist() == [32, 32, 3, 0, 0, 0]
+        # conv(16, 3x3, s1, p1, bf16) / pool(2,2) / conv binary / pool / flatten
+        assert desc[1].tolist() == [1, 16, 3, 1, 1, 0]
+        assert desc[2].tolist() == [2, 2, 2, 0, 0, 0]
+        assert desc[3].tolist() == [1, 16, 3, 1, 1, 1]
+        assert desc[4].tolist() == [2, 2, 2, 0, 0, 0]
+        assert desc[5].tolist() == [3, 0, 0, 0, 0, 0]
+
+    def test_conv_shapes_track_channels_through_pools(self):
+        front = cnn_hybrid_front()
+        shapes = list(front.conv_shapes())
+        # Stage indices skip the pools; in_channels chain 3 -> 16.
+        assert [(i, c) for i, _, c in shapes] == [(0, 3), (2, 16)]
+
+
+class TestExport:
+    def test_front_tensors_match_rust_contract(self):
+        front = cnn_hybrid_front()
+        tf = TensorFile()
+        export_conv_front(tf, front, init_front_params(front, seed=3))
+        # Weights exist per conv *stage index*, with (ky,kx,c) patch cols.
+        assert tf.get("front0/weight").shape == (16, 3 * 3 * 3)
+        assert tf.get("front2/weight").shape == (16, 3 * 3 * 16)
+        assert tf.get("front0/bn_scale").shape == (16,)
+        assert tf.get("front2/bn_shift").shape == (16,)
+        # The binary stage deploys binarized weights.
+        w2 = tf.get("front2/weight").to_f32()
+        assert set(np.unique(w2)) <= {-1.0, 1.0}
+        w0 = tf.get("front0/weight").to_f32()
+        assert not set(np.unique(w0)) <= {-1.0, 1.0}
+
+    def test_full_cnn_bwt_roundtrip(self, tmp_path):
+        path = tmp_path / "weights_cnn.bwt"
+        export_cnn_weights(str(path), seed=5)
+        back = TensorFile.load(str(path))
+        assert back.get("meta/front").shape == (6, 6)
+        assert back.get("meta/sizes").to_f32().tolist() == [1024, 128, 10]
+        assert back.get("meta/precisions").to_f32().tolist() == [1.0, 0.0]
+        # Trunk entry width equals the front's flattened output (8*8*16).
+        assert back.get("layer0/weight").shape == (128, 1024)
+        assert back.get("layer1/weight").shape == (10, 128)
+        # Hidden trunk layer carries BN, the head doesn't.
+        assert back.get("layer0/bn_scale").shape == (128,)
+        try:
+            back.get("layer1/bn_scale")
+            assert False, "head must not carry BN"
+        except KeyError:
+            pass
+
+    def test_mismatched_weights_rejected(self):
+        front = cnn_hybrid_front()
+        params = init_front_params(front, seed=1)
+        params[0]["w"] = params[0]["w"][:, :-1]
+        tf = TensorFile()
+        try:
+            export_conv_front(tf, front, params)
+            assert False, "shape mismatch must raise"
+        except ValueError as e:
+            assert "front0" in str(e)
+
+
+class TestStageRows:
+    def test_row_encodings(self):
+        assert ConvStage(8, 3, 2, 1, BINARY).desc_row() == [1, 8, 3, 2, 1, 1]
+        assert PoolStage(3, 3).desc_row() == [2, 3, 3, 0, 0, 0]
+        assert FlattenStage().desc_row() == [3, 0, 0, 0, 0, 0]

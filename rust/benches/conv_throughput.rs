@@ -1,0 +1,131 @@
+//! Bench: the conv subsystem's lowering throughput — packed-parallel
+//! XNOR-popcount conv (im2col and direct) against the scalar ±1
+//! reference, and the bf16 packed-panel conv against its scalar
+//! k-blocked reference.
+//!
+//! ```bash
+//! cargo bench --bench conv_throughput
+//! BEANNA_BENCH_QUICK=1 cargo bench --bench conv_throughput   # CI-sized run
+//! ```
+//!
+//! Before timing, every kernel's output is asserted bit-identical to
+//! its reference (integer counts / order-fixed psums), so the numbers
+//! compare equal work. Emits `BENCH_conv.json` for the CI
+//! perf-trajectory diff: `*_gops` regress when they drop relatively;
+//! `conv_bin_im2col_speedup` is additionally asserted ≥ 10× right here
+//! (the acceptance floor for the packed datapath), so a violation
+//! fails the bench run itself, not just the diff.
+
+use beanna::bf16::Matrix;
+use beanna::conv::{reference, Conv2dSpec, ConvAlgo, ConvLayer, ImageShape};
+use beanna::report::JsonValue;
+use beanna::util::bench::{BenchConfig, Harness};
+use beanna::util::par::Parallelism;
+use beanna::util::rng::Xoshiro256;
+
+fn rand_matrix(rows: usize, cols: usize, rng: &mut Xoshiro256) -> Matrix {
+    Matrix::from_vec(rows, cols, rng.normal_vec(rows * cols)).unwrap()
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::var("BEANNA_BENCH_QUICK").as_deref() == Ok("1");
+    let par = Parallelism::auto();
+    let mut rng = Xoshiro256::seed_from_u64(11);
+
+    // ---- binary conv: 16×16×64 maps, 64 filters, 3×3 same conv ----------
+    let bin_spec = Conv2dSpec {
+        input: ImageShape::new(16, 16, 64),
+        out_channels: 64,
+        kernel: 3,
+        stride: 1,
+        padding: 1,
+    };
+    let batch = if quick { 4 } else { 16 };
+    let x = rand_matrix(batch, bin_spec.input.features(), &mut rng);
+    let w = rand_matrix(bin_spec.out_channels, bin_spec.patch_len(), &mut rng);
+    let im2col = ConvLayer::binary(bin_spec, &w, None, false)?.with_algo(ConvAlgo::Im2col);
+    let direct = ConvLayer::binary(bin_spec, &w, None, false)?.with_algo(ConvAlgo::Direct);
+
+    // Equal work, proven: both lowerings reproduce the scalar reference.
+    let want = reference::conv2d_ref_binary(&x, &bin_spec, &w)?;
+    anyhow::ensure!(
+        im2col.psums_with(&x, par)?.data == want.data,
+        "im2col lowering diverged from the scalar reference"
+    );
+    anyhow::ensure!(
+        direct.psums_with(&x, par)?.data == want.data,
+        "direct lowering diverged from the scalar reference"
+    );
+
+    let ops = (2 * batch * bin_spec.macs_per_image()) as f64;
+    Harness::header(&format!(
+        "binary conv {b}×16×16×64, 64 filters 3×3 same ({w} worker(s))",
+        b = batch,
+        w = par.max_workers()
+    ));
+    let mut h = Harness::new(BenchConfig::default());
+    let r = h.bench("conv/bin/ref", || {
+        reference::conv2d_ref_binary(&x, &bin_spec, &w).unwrap()
+    });
+    let bin_ref_gops = ops / r.ns.mean;
+    let r = h.bench("conv/bin/im2col", || im2col.psums_with(&x, par).unwrap());
+    let bin_im2col_gops = ops / r.ns.mean;
+    let r = h.bench("conv/bin/direct", || direct.psums_with(&x, par).unwrap());
+    let bin_direct_gops = ops / r.ns.mean;
+    h.finish();
+    let speedup = bin_im2col_gops / bin_ref_gops;
+    println!(
+        "binary ref {bin_ref_gops:>7.2} GOps/s → im2col {bin_im2col_gops:>7.2} \
+         ({speedup:.1}×) → direct {bin_direct_gops:>7.2} ({:.1}×)",
+        bin_direct_gops / bin_ref_gops
+    );
+    anyhow::ensure!(
+        speedup >= 10.0,
+        "packed-parallel binary conv is only {speedup:.1}× the scalar \
+         reference (acceptance floor: 10×)"
+    );
+
+    // ---- bf16 conv: 16×16×16 maps, 16 filters, 3×3 same conv ------------
+    let fp_spec = Conv2dSpec {
+        input: ImageShape::new(16, 16, 16),
+        out_channels: 16,
+        kernel: 3,
+        stride: 1,
+        padding: 1,
+    };
+    let xf = rand_matrix(batch, fp_spec.input.features(), &mut rng);
+    let wf = rand_matrix(fp_spec.out_channels, fp_spec.patch_len(), &mut rng);
+    let fp = ConvLayer::bf16(fp_spec, wf.clone(), None, false)?;
+    let want = reference::conv2d_ref_bf16(&xf, &fp_spec, &wf, beanna::ARRAY_DIM)?;
+    anyhow::ensure!(
+        fp.psums_with(&xf, par)?.data == want.data,
+        "bf16 conv diverged from the scalar k-blocked reference"
+    );
+    let fops = (2 * batch * fp_spec.macs_per_image()) as f64;
+    Harness::header(&format!("bf16 conv {batch}×16×16×16, 16 filters 3×3 same"));
+    let mut h = Harness::new(BenchConfig::default());
+    let r = h.bench("conv/bf16/ref", || {
+        reference::conv2d_ref_bf16(&xf, &fp_spec, &wf, beanna::ARRAY_DIM).unwrap()
+    });
+    let bf16_ref_gops = fops / r.ns.mean;
+    let r = h.bench("conv/bf16/packed", || fp.psums_with(&xf, par).unwrap());
+    let bf16_gops = fops / r.ns.mean;
+    h.finish();
+    println!(
+        "bf16   ref {bf16_ref_gops:>7.2} GOps/s → packed panels {bf16_gops:>7.2} ({:.1}×)",
+        bf16_gops / bf16_ref_gops
+    );
+
+    let fields = vec![
+        ("conv_bin_ref_gops".into(), JsonValue::n(bin_ref_gops)),
+        ("conv_bin_im2col_gops".into(), JsonValue::n(bin_im2col_gops)),
+        ("conv_bin_direct_gops".into(), JsonValue::n(bin_direct_gops)),
+        ("conv_bin_im2col_speedup".into(), JsonValue::n(speedup)),
+        ("conv_bf16_ref_gops".into(), JsonValue::n(bf16_ref_gops)),
+        ("conv_bf16_gops".into(), JsonValue::n(bf16_gops)),
+    ];
+    let out = std::path::Path::new("BENCH_conv.json");
+    JsonValue::Obj(fields).save(out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

@@ -17,7 +17,7 @@ use beanna::CLOCK_HZ;
 /// Run `mix` (batch sizes, in arrival order) under a policy; returns
 /// (makespan cycles, mean utilization).
 fn run_mix(net: &Network, mix: &[usize], shards: usize, policy: ShardPolicy) -> (u64, f64) {
-    let width = net.config.sizes[0];
+    let width = net.config.input_width();
     let mut dev = ShardedAccelerator::with_policy(AcceleratorConfig::sharded(shards), policy);
     let mut rng = Xoshiro256::seed_from_u64(7);
     for &batch in mix {
@@ -35,6 +35,7 @@ fn main() {
         &NetworkConfig {
             sizes: vec![32, 48, 48, 8],
             precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+            front: None,
         },
         11,
     );

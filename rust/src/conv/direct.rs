@@ -1,0 +1,252 @@
+//! Direct binary convolution with XNORBIN-style row reuse.
+//!
+//! Instead of materializing an im2col patch matrix, the packed input
+//! feature map is convolved in place: for each output position, each
+//! kernel row's bit window (`kernel·C` contiguous sign bits under the
+//! HWC layout, zero-filled at the padding) is extracted **once** into a
+//! word-aligned scratch and XOR-popcounted against every output
+//! channel's matching weight slice. The window extraction cost is paid
+//! `kernel` times per output position and amortized over all
+//! `out_channels` — the reuse that makes this path win on small
+//! spatial extents with many filters.
+//!
+//! Bit-exactness with im2col is structural: the im2col patch is the
+//! concatenation of these kernel-row windows in `(ky, kx, c)` order,
+//! XOR distributes over the concatenation, and popcount sums are
+//! integer adds (associative). Zero tail bits in each per-row scratch
+//! cancel in the XOR exactly like [`crate::binary::BitVector::dot`]'s
+//! padding bits. Only the binary datapath gets a direct variant: a
+//! direct bf16 conv would reassociate the k-blocked float accumulation
+//! and break the hardware numeric contract.
+
+use anyhow::{ensure, Result};
+
+use super::Conv2dSpec;
+use crate::bf16::Matrix;
+use crate::binary::BitMatrix;
+use crate::util::par::Parallelism;
+use crate::util::pool::par_row_chunks_mut;
+
+/// Read up to 64 bits starting at absolute bit `start` of `src`
+/// (zero-extended past the end of `src`).
+#[inline]
+fn read_bits(src: &[u64], start: usize, n: usize) -> u64 {
+    debug_assert!(n >= 1 && n <= 64);
+    let (w, b) = (start / 64, start % 64);
+    let lo = src.get(w).copied().unwrap_or(0) >> b;
+    let hi = if b > 0 {
+        src.get(w + 1).copied().unwrap_or(0) << (64 - b)
+    } else {
+        0
+    };
+    let v = lo | hi;
+    if n == 64 {
+        v
+    } else {
+        v & ((1u64 << n) - 1)
+    }
+}
+
+/// OR `len` bits of `src` starting at bit `src_start` into `dst`
+/// starting at bit `dst_start` (`dst` must be pre-zeroed over the
+/// destination range).
+fn copy_bits_at(src: &[u64], src_start: usize, len: usize, dst: &mut [u64], dst_start: usize) {
+    let mut done = 0;
+    while done < len {
+        let d = dst_start + done;
+        let (dw, db) = (d / 64, d % 64);
+        let n = (64 - db).min(len - done);
+        dst[dw] |= read_bits(src, src_start + done, n) << db;
+        done += n;
+    }
+}
+
+/// Per-`(oc, ky)` weight slices, realigned to bit 0: slice `(oc, ky)`
+/// holds bits `[ky·kernel·C, (ky+1)·kernel·C)` of weight row `oc`.
+fn weight_slices(wbits: &BitMatrix, spec: &Conv2dSpec) -> Vec<Vec<u64>> {
+    let wlen = spec.kernel * spec.input.channels;
+    let words = wlen.div_ceil(64);
+    let mut slices = Vec::with_capacity(spec.out_channels * spec.kernel);
+    for oc in 0..spec.out_channels {
+        let row = &wbits.row(oc).words;
+        for ky in 0..spec.kernel {
+            let mut s = vec![0u64; words];
+            copy_bits_at(row, ky * wlen, wlen, &mut s, 0);
+            slices.push(s);
+        }
+    }
+    slices
+}
+
+/// Direct XNOR-popcount convolution on packed feature maps: `xb` is
+/// `B × input.features()` sign bits, `wbits` is
+/// `out_channels × patch_len` sign bits in `(ky,kx,c)` order. Returns
+/// the integer counts as f32, `(B·OH·OW) × out_channels` in the same
+/// row order as the im2col path — bit-identical to
+/// `im2col_bits_packed(xb).matmul_t(wbits)` at any worker count.
+pub fn conv2d_direct_binary(
+    xb: &BitMatrix,
+    spec: &Conv2dSpec,
+    wbits: &BitMatrix,
+    par: Parallelism,
+) -> Result<Matrix> {
+    spec.validate()?;
+    let kp = spec.patch_len();
+    ensure!(
+        xb.cols == spec.input.features(),
+        "conv expects {} features, got {}",
+        spec.input.features(),
+        xb.cols
+    );
+    ensure!(
+        wbits.rows == spec.out_channels && wbits.cols == kp,
+        "conv weight bits must be {}x{}, got {}x{}",
+        spec.out_channels,
+        kp,
+        wbits.rows,
+        wbits.cols
+    );
+    let out = spec.out_shape();
+    let (oh, ow) = (out.height, out.width);
+    let c = spec.input.channels;
+    let (ih, iw) = (spec.input.height as isize, spec.input.width as isize);
+    let wlen = spec.kernel * c;
+    let words = wlen.div_ceil(64);
+    let slices = weight_slices(wbits, spec);
+    let rows = xb.rows * oh * ow;
+    let mut y = Matrix::zeros(rows, spec.out_channels);
+    let workers = par.workers_for(rows * spec.out_channels * words);
+    par_row_chunks_mut(
+        par.dispatch(),
+        workers,
+        spec.out_channels,
+        &mut y.data,
+        |row0, band| {
+            // Scratch: one aligned window per kernel row, reused across
+            // all output channels of this position (XNORBIN row reuse).
+            let mut windows = vec![0u64; spec.kernel * words];
+            for (i, dst) in band.chunks_mut(spec.out_channels).enumerate() {
+                let row = row0 + i;
+                let b = row / (oh * ow);
+                let oy = (row / ow) % oh;
+                let ox = row % ow;
+                let src = &xb.row(b).words;
+                windows.fill(0);
+                let ix0 = (ox * spec.stride) as isize - spec.padding as isize;
+                for ky in 0..spec.kernel {
+                    let iy = (oy * spec.stride + ky) as isize - spec.padding as isize;
+                    if iy < 0 || iy >= ih {
+                        continue; // all-padding row: window stays zero
+                    }
+                    let x_lo = ix0.max(0);
+                    let x_hi = (ix0 + spec.kernel as isize).min(iw);
+                    if x_hi <= x_lo {
+                        continue;
+                    }
+                    let src_start = (iy as usize * spec.input.width + x_lo as usize) * c;
+                    let len = (x_hi - x_lo) as usize * c;
+                    let dst_off = (x_lo - ix0) as usize * c;
+                    copy_bits_at(
+                        src,
+                        src_start,
+                        len,
+                        &mut windows[ky * words..(ky + 1) * words],
+                        dst_off,
+                    );
+                }
+                for (oc, o) in dst.iter_mut().enumerate() {
+                    let mut disagreements = 0u32;
+                    for ky in 0..spec.kernel {
+                        let win = &windows[ky * words..(ky + 1) * words];
+                        let ws = &slices[oc * spec.kernel + ky];
+                        for (a, w) in win.iter().zip(ws.iter()) {
+                            disagreements += (a ^ w).count_ones();
+                        }
+                    }
+                    *o = (kp as i32 - 2 * disagreements as i32) as f32;
+                }
+            }
+        },
+    );
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::binary::BitVector;
+    use crate::conv::{im2col, ImageShape};
+    use crate::util::rng::Xoshiro256;
+
+    #[test]
+    fn bit_copy_matches_per_bit_oracle() {
+        let mut rng = Xoshiro256::seed_from_u64(5);
+        for _ in 0..200 {
+            let n = 1 + (rng.next_u64() % 180) as usize;
+            let src = BitVector::from_fn(n, |_| rng.next_u64() & 1 == 1);
+            let start = (rng.next_u64() as usize) % n;
+            let len = 1 + (rng.next_u64() as usize) % (n - start).max(1);
+            let len = len.min(n - start);
+            let dst_start = (rng.next_u64() % 70) as usize;
+            let mut dst = vec![0u64; (dst_start + len).div_ceil(64)];
+            copy_bits_at(&src.words, start, len, &mut dst, dst_start);
+            for j in 0..dst_start + len {
+                let got = (dst[j / 64] >> (j % 64)) & 1 == 1;
+                let want = j >= dst_start && src.get(start + (j - dst_start));
+                assert!(
+                    got == want,
+                    "bit {j} mismatch (start {start} len {len} dst_start {dst_start})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn direct_matches_im2col_on_random_shapes() {
+        let mut rng = Xoshiro256::seed_from_u64(17);
+        for trial in 0..40 {
+            let k = 1 + (rng.next_u64() % 3) as usize;
+            let h = k + (rng.next_u64() % 6) as usize;
+            let w = k + (rng.next_u64() % 6) as usize;
+            let c = 1 + (rng.next_u64() % 5) as usize;
+            let spec = Conv2dSpec {
+                input: ImageShape::new(h, w, c),
+                out_channels: 1 + (rng.next_u64() % 6) as usize,
+                kernel: k,
+                stride: 1 + (rng.next_u64() % 2) as usize,
+                padding: (rng.next_u64() % k as u64) as usize,
+            };
+            let b = 1 + (rng.next_u64() % 3) as usize;
+            let x = Matrix::from_vec(
+                b,
+                spec.input.features(),
+                rng.normal_vec(b * spec.input.features()),
+            )
+            .unwrap();
+            let wm = Matrix::from_vec(
+                spec.out_channels,
+                spec.patch_len(),
+                rng.normal_vec(spec.out_channels * spec.patch_len()),
+            )
+            .unwrap();
+            let xb = BitMatrix::from_matrix(&x);
+            let wb = BitMatrix::from_matrix(&wm);
+            let via_im2col = im2col::im2col_bits_packed(&xb, &spec, Parallelism::serial())
+                .unwrap()
+                .matmul_t(&wb)
+                .unwrap();
+            for workers in [1usize, 3] {
+                let par = if workers == 1 {
+                    Parallelism::serial()
+                } else {
+                    Parallelism::fixed(workers)
+                };
+                let direct = conv2d_direct_binary(&xb, &spec, &wb, par).unwrap();
+                assert_eq!(
+                    direct.data, via_im2col.data,
+                    "trial {trial} workers {workers}: direct != im2col"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! im2col lowering: gather receptive-field patches so a convolution
+//! becomes one dense matmul on the existing engines.
+//!
+//! Patch rows are ordered b-major, then `(oy, ox)` — so the resulting
+//! `(B·OH·OW) × out_channels` GEMM output is, read row-major, already
+//! the `B × (OH·OW·OC)` HWC-flattened output feature map: the reshape
+//! after the matmul is free.
+
+use anyhow::{ensure, Result};
+
+use super::Conv2dSpec;
+use crate::bf16::Matrix;
+use crate::binary::{BitMatrix, BitVector};
+use crate::util::par::Parallelism;
+use crate::util::pool::{par_row_bands, par_row_chunks_mut};
+
+/// Gather float im2col patches: `x` is `B × input.features()` HWC rows;
+/// returns `(B·OH·OW) × patch_len` with columns in `(ky, kx, c)` order.
+/// Padding gathers `0.0`. Pure data movement — any row split is
+/// identical — so it fans out over patch rows.
+pub fn im2col_f32(x: &Matrix, spec: &Conv2dSpec, par: Parallelism) -> Result<Matrix> {
+    ensure!(
+        x.cols == spec.input.features(),
+        "im2col expects {} features, got {}",
+        spec.input.features(),
+        x.cols
+    );
+    let out = spec.out_shape();
+    let (oh, ow) = (out.height, out.width);
+    let kp = spec.patch_len();
+    let c = spec.input.channels;
+    let (ih, iw) = (spec.input.height as isize, spec.input.width as isize);
+    let mut patches = Matrix::zeros(x.rows * oh * ow, kp);
+    let workers = par.workers_for(patches.rows * kp);
+    par_row_chunks_mut(par.dispatch(), workers, kp, &mut patches.data, |row0, band| {
+        for (i, dst) in band.chunks_mut(kp).enumerate() {
+            let row = row0 + i;
+            let b = row / (oh * ow);
+            let oy = (row / ow) % oh;
+            let ox = row % ow;
+            let src = x.row(b);
+            for ky in 0..spec.kernel {
+                let iy = (oy * spec.stride + ky) as isize - spec.padding as isize;
+                for kx in 0..spec.kernel {
+                    let ix = (ox * spec.stride + kx) as isize - spec.padding as isize;
+                    let seg = &mut dst[(ky * spec.kernel + kx) * c..(ky * spec.kernel + kx + 1) * c];
+                    if iy < 0 || iy >= ih || ix < 0 || ix >= iw {
+                        seg.fill(0.0);
+                    } else {
+                        let base = (iy as usize * spec.input.width + ix as usize) * c;
+                        seg.copy_from_slice(&src[base..base + c]);
+                    }
+                }
+            }
+        }
+    });
+    Ok(patches)
+}
+
+/// Shared bit-gather: build packed patch rows where the sign bit of
+/// patch element `(ky,kx,c)` comes from `bit(b, feature_index)`;
+/// out-of-bounds (padding) positions gather bit 0 (= +1).
+fn gather_bits(
+    batch: usize,
+    spec: &Conv2dSpec,
+    par: Parallelism,
+    bit: impl Fn(usize, usize) -> bool + Sync,
+) -> BitMatrix {
+    let out = spec.out_shape();
+    let (oh, ow) = (out.height, out.width);
+    let kp = spec.patch_len();
+    let c = spec.input.channels;
+    let (ih, iw) = (spec.input.height as isize, spec.input.width as isize);
+    let rows = batch * oh * ow;
+    let workers = par.workers_for(rows * kp / 4);
+    let row_bits: Vec<BitVector> = par_row_bands(par.dispatch(), workers, rows, |band| {
+        band.map(|row| {
+            let b = row / (oh * ow);
+            let oy = (row / ow) % oh;
+            let ox = row % ow;
+            BitVector::from_fn(kp, |j| {
+                let ch = j % c;
+                let kx = (j / c) % spec.kernel;
+                let ky = j / (c * spec.kernel);
+                let iy = (oy * spec.stride + ky) as isize - spec.padding as isize;
+                let ix = (ox * spec.stride + kx) as isize - spec.padding as isize;
+                if iy < 0 || iy >= ih || ix < 0 || ix >= iw {
+                    false
+                } else {
+                    bit(b, (iy as usize * spec.input.width + ix as usize) * c + ch)
+                }
+            })
+        })
+        .collect::<Vec<_>>()
+    })
+    .into_iter()
+    .flatten()
+    .collect();
+    BitMatrix {
+        rows,
+        cols: kp,
+        row_bits,
+    }
+}
+
+/// Gather im2col patches **directly as sign bits** from float feature
+/// maps — the binary path never materializes a float patch matrix.
+/// Bit-exact with `BitMatrix::from_matrix(&im2col_f32(…))` (same sign
+/// rule, padding zeros pack to +1 on both routes).
+pub fn im2col_bits(x: &Matrix, spec: &Conv2dSpec, par: Parallelism) -> Result<BitMatrix> {
+    ensure!(
+        x.cols == spec.input.features(),
+        "im2col expects {} features, got {}",
+        spec.input.features(),
+        x.cols
+    );
+    Ok(gather_bits(x.rows, spec, par, |b, i| x.row(b)[i] < 0.0))
+}
+
+/// [`im2col_bits`] on **already packed** feature maps (`xb` is
+/// `B × input.features()` sign bits) — used when a binary conv streams
+/// from an upstream binary stage.
+pub fn im2col_bits_packed(xb: &BitMatrix, spec: &Conv2dSpec, par: Parallelism) -> Result<BitMatrix> {
+    ensure!(
+        xb.cols == spec.input.features(),
+        "im2col expects {} features, got {}",
+        spec.input.features(),
+        xb.cols
+    );
+    Ok(gather_bits(xb.rows, spec, par, |b, i| xb.row(b).get(i)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ImageShape;
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_spec(seed: u64) -> (Conv2dSpec, Matrix) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let h = 1 + (rng.next_u64() % 7) as usize;
+        let w = 1 + (rng.next_u64() % 7) as usize;
+        let c = 1 + (rng.next_u64() % 4) as usize;
+        let k = 1 + (rng.next_u64() % 3) as usize;
+        let p = (rng.next_u64() % k as u64) as usize;
+        let spec = Conv2dSpec {
+            input: ImageShape::new(h.max(k), w.max(k), c),
+            out_channels: 1,
+            kernel: k,
+            stride: 1 + (rng.next_u64() % 2) as usize,
+            padding: p,
+        };
+        let b = 1 + (rng.next_u64() % 3) as usize;
+        let x = Matrix::from_vec(
+            b,
+            spec.input.features(),
+            rng.normal_vec(b * spec.input.features()),
+        )
+        .unwrap();
+        (spec, x)
+    }
+
+    #[test]
+    fn bits_match_f32_gather_then_pack() {
+        for seed in 0..30u64 {
+            let (spec, x) = rand_spec(seed);
+            let f = im2col_f32(&x, &spec, Parallelism::serial()).unwrap();
+            let direct = im2col_bits(&x, &spec, Parallelism::serial()).unwrap();
+            assert_eq!(
+                direct,
+                BitMatrix::from_matrix(&f),
+                "seed {seed}: bit gather != pack(float gather)"
+            );
+            let packed_in =
+                im2col_bits_packed(&BitMatrix::from_matrix(&x), &spec, Parallelism::serial())
+                    .unwrap();
+            assert_eq!(direct, packed_in, "seed {seed}: packed-input gather diverged");
+        }
+    }
+
+    #[test]
+    fn parallel_gather_is_bit_identical() {
+        let (spec, x) = rand_spec(99);
+        let serial = im2col_f32(&x, &spec, Parallelism::serial()).unwrap();
+        let par = im2col_f32(&x, &spec, Parallelism::fixed(4)).unwrap();
+        assert_eq!(serial.data, par.data);
+        let sb = im2col_bits(&x, &spec, Parallelism::serial()).unwrap();
+        let pb = im2col_bits(&x, &spec, Parallelism::fixed(3)).unwrap();
+        assert_eq!(sb, pb);
+    }
+
+    #[test]
+    fn patch_rows_reshape_to_hwc_output() {
+        // Row order is (b, oy, ox): with OC columns appended per row,
+        // reading the GEMM output row-major gives HWC maps per image.
+        let spec = Conv2dSpec {
+            input: ImageShape::new(2, 2, 1),
+            out_channels: 1,
+            kernel: 1,
+            stride: 1,
+            padding: 0,
+        };
+        let x = Matrix::from_vec(2, 4, (0..8).map(|v| v as f32).collect()).unwrap();
+        let p = im2col_f32(&x, &spec, Parallelism::serial()).unwrap();
+        // 1×1 kernel: patches are the features themselves, batch-major.
+        assert_eq!(p.rows, 8);
+        assert_eq!(p.data, (0..8).map(|v| v as f32).collect::<Vec<_>>());
+    }
+}

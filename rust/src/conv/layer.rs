@@ -1,0 +1,441 @@
+//! Materialized conv layer: geometry + a [`DenseLayer`] patch-GEMM
+//! engine, so convs inherit the packed kernels, the folded BN/hardtanh
+//! epilogue, and the bit-exactness contract structurally.
+
+use anyhow::{ensure, Result};
+
+use super::{direct, im2col, Conv2dSpec};
+use crate::bf16::Matrix;
+use crate::binary::{BitMatrix, BitVector};
+use crate::nn::{BatchNorm, DenseLayer, Precision};
+use crate::util::par::Parallelism;
+use crate::util::pool::par_row_bands;
+
+/// Which lowering a binary conv uses. Both are bit-identical; the
+/// choice is purely a throughput trade (bf16 convs always use im2col —
+/// a direct float path would reassociate the k-blocked accumulation).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ConvAlgo {
+    /// Pick per shape: direct for small spatial extents (where window
+    /// extraction amortizes over many filters), im2col otherwise.
+    #[default]
+    Auto,
+    /// Always lower through the patch matrix onto `matmul_t`.
+    Im2col,
+    /// Always use the row-reuse direct kernel (binary only).
+    Direct,
+}
+
+/// Spatial extent (`OH·OW`) at or below which [`ConvAlgo::Auto`]
+/// prefers the direct kernel for binary convs.
+const DIRECT_SPATIAL_LIMIT: usize = 64;
+
+/// One 2-D conv layer. The weights live in an embedded [`DenseLayer`]
+/// (`out_channels × patch_len`, `(ky,kx,c)` column order) so every
+/// lowering reuses the dense engines: bf16 convs run their im2col
+/// patches through the layer-resident [`crate::bf16::PackedWeights`]
+/// panels, binary convs XNOR-popcount packed patch bits — or skip the
+/// patch matrix entirely via [`direct`].
+#[derive(Debug, Clone)]
+pub struct ConvLayer {
+    /// Geometry.
+    pub spec: Conv2dSpec,
+    /// Patch-GEMM engine: weights, packed forms, per-channel BN,
+    /// activation flag. Its "features" are output channels.
+    pub dense: DenseLayer,
+    /// Lowering selection for the binary datapath.
+    pub algo: ConvAlgo,
+}
+
+impl ConvLayer {
+    /// Construct a bf16 conv layer; `weights` is
+    /// `out_channels × patch_len` in `(ky,kx,c)` order (quantized to
+    /// bf16 and packed into panels at construction, like dense layers).
+    pub fn bf16(
+        spec: Conv2dSpec,
+        weights: Matrix,
+        bn: Option<BatchNorm>,
+        activation: bool,
+    ) -> Result<Self> {
+        Self::check_weights(&spec, &weights)?;
+        Ok(Self {
+            spec,
+            dense: DenseLayer::bf16(weights, bn, activation),
+            algo: ConvAlgo::Auto,
+        })
+    }
+
+    /// Construct a binary conv layer (weights binarized by sign).
+    pub fn binary(
+        spec: Conv2dSpec,
+        weights: &Matrix,
+        bn: Option<BatchNorm>,
+        activation: bool,
+    ) -> Result<Self> {
+        Self::check_weights(&spec, weights)?;
+        Ok(Self {
+            spec,
+            dense: DenseLayer::binary(weights, bn, activation),
+            algo: ConvAlgo::Auto,
+        })
+    }
+
+    fn check_weights(spec: &Conv2dSpec, weights: &Matrix) -> Result<()> {
+        spec.validate()?;
+        ensure!(
+            weights.rows == spec.out_channels && weights.cols == spec.patch_len(),
+            "conv weights must be {}x{} (out_channels × kernel²·C), got {}x{}",
+            spec.out_channels,
+            spec.patch_len(),
+            weights.rows,
+            weights.cols
+        );
+        Ok(())
+    }
+
+    /// Override the lowering selection (builder style).
+    pub fn with_algo(mut self, algo: ConvAlgo) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    /// Datapath precision.
+    pub fn precision(&self) -> Precision {
+        self.dense.precision
+    }
+
+    /// Flattened input feature count (`H·W·C`).
+    pub fn in_features(&self) -> usize {
+        self.spec.input.features()
+    }
+
+    /// Flattened output feature count (`OH·OW·OC`).
+    pub fn out_features(&self) -> usize {
+        self.spec.out_shape().features()
+    }
+
+    /// Weight storage bytes (Table II model, via the embedded dense
+    /// layer).
+    pub fn weight_bytes(&self) -> usize {
+        self.dense.weight_bytes()
+    }
+
+    /// Resolved lowering for this layer's shape.
+    fn lowering(&self) -> ConvAlgo {
+        match self.algo {
+            ConvAlgo::Auto => {
+                let out = self.spec.out_shape();
+                if self.precision() == Precision::Binary
+                    && out.height * out.width <= DIRECT_SPATIAL_LIMIT
+                {
+                    ConvAlgo::Direct
+                } else {
+                    ConvAlgo::Im2col
+                }
+            }
+            a => a,
+        }
+    }
+
+    /// Reshape the patch-GEMM output (`(B·OH·OW) × OC`, b-major row
+    /// order) into `B × (OH·OW·OC)` HWC feature maps — free under the
+    /// shared row order: the row-major buffer is identical.
+    fn regroup(&self, pre: Matrix, batch: usize) -> Matrix {
+        debug_assert_eq!(pre.rows * pre.cols, batch * self.out_features());
+        Matrix::from_vec(batch, self.out_features(), pre.data)
+            .expect("patch rows regroup to whole feature maps")
+    }
+
+    /// Pre-epilogue psums for one input batch — counts for binary,
+    /// k-blocked bf16 psums otherwise — as `(B·OH·OW) × OC` patch rows.
+    /// This is the seam the simulator's transaction engine shares with
+    /// the functional path (compare `sim::xact::layer_psums`).
+    pub fn psums_with(&self, x: &Matrix, par: Parallelism) -> Result<Matrix> {
+        ensure!(
+            x.cols == self.in_features(),
+            "conv expects {} features, got {}",
+            self.in_features(),
+            x.cols
+        );
+        match self.precision() {
+            Precision::Bf16 => {
+                let patches = im2col::im2col_f32(x, &self.spec, par)?;
+                patches.matmul_bf16_blocked_t_par(&self.dense.weights, crate::ARRAY_DIM, par)
+            }
+            Precision::Binary => {
+                let bits = self.dense.bits.as_ref().expect("binary conv has bits");
+                match self.lowering() {
+                    ConvAlgo::Direct => {
+                        let xb = BitMatrix::from_matrix_par(x, par);
+                        direct::conv2d_direct_binary(&xb, &self.spec, bits, par)
+                    }
+                    _ => im2col::im2col_bits(x, &self.spec, par)?.matmul_t_par(bits, par),
+                }
+            }
+        }
+    }
+
+    /// Forward pass on float feature maps: `x (B × H·W·C)` →
+    /// `B × OH·OW·OC`, epilogue applied per output channel. Fans out
+    /// across host cores; bit-identical at any worker count.
+    pub fn forward_with(&self, x: &Matrix, par: Parallelism) -> Result<Matrix> {
+        ensure!(
+            x.cols == self.in_features(),
+            "conv expects {} features, got {}",
+            self.in_features(),
+            x.cols
+        );
+        let pre = match self.precision() {
+            Precision::Bf16 => {
+                // Hot path: patches through the layer-resident packed
+                // panels inside the dense engine (psum + epilogue).
+                let patches = im2col::im2col_f32(x, &self.spec, par)?;
+                self.dense.forward_with(&patches, par)?
+            }
+            Precision::Binary => {
+                let mut pre = self.psums_with(x, par)?;
+                self.dense.apply_epilogue(&mut pre, par);
+                pre
+            }
+        };
+        Ok(self.regroup(pre, x.rows))
+    }
+
+    /// Binary conv forward on **already packed** feature maps
+    /// (`xb: B × H·W·C` sign bits) with float output.
+    pub fn forward_packed_with(&self, xb: &BitMatrix, par: Parallelism) -> Result<Matrix> {
+        let mut pre = self.packed_counts(xb, par)?;
+        self.dense.apply_epilogue(&mut pre, par);
+        Ok(self.regroup(pre, xb.rows))
+    }
+
+    /// Binary conv forward that feeds another sign-consuming stage: the
+    /// epilogue folds into the packed sign decision and the output
+    /// feature maps are produced directly as sign bits
+    /// (`B × OH·OW·OC`) — no float maps materialize between binary
+    /// stages.
+    pub fn forward_packed_to_bits_with(
+        &self,
+        xb: &BitMatrix,
+        par: Parallelism,
+    ) -> Result<BitMatrix> {
+        let counts = self.packed_counts(xb, par)?;
+        Ok(self.fold_to_bits(&counts, xb.rows, par))
+    }
+
+    /// [`Self::forward_packed_to_bits_with`] from float feature maps —
+    /// the entry stage of a packed streaming run.
+    pub fn forward_to_bits_with(&self, x: &Matrix, par: Parallelism) -> Result<BitMatrix> {
+        ensure!(
+            self.precision() == Precision::Binary,
+            "packed conv output needs a binary layer"
+        );
+        let counts = self.psums_with(x, par)?;
+        Ok(self.fold_to_bits(&counts, x.rows, par))
+    }
+
+    /// XNOR-popcount counts from packed input, `(B·OH·OW) × OC`.
+    fn packed_counts(&self, xb: &BitMatrix, par: Parallelism) -> Result<Matrix> {
+        ensure!(
+            self.precision() == Precision::Binary,
+            "packed conv forward needs a binary layer"
+        );
+        ensure!(
+            xb.cols == self.in_features(),
+            "conv expects {} features, got {}",
+            self.in_features(),
+            xb.cols
+        );
+        let bits = self.dense.bits.as_ref().expect("binary conv has bits");
+        match self.lowering() {
+            ConvAlgo::Direct => direct::conv2d_direct_binary(xb, &self.spec, bits, par),
+            _ => im2col::im2col_bits_packed(xb, &self.spec, par)?.matmul_t_par(bits, par),
+        }
+    }
+
+    /// Fold the per-channel epilogue into sign bits and regroup the
+    /// patch rows into per-image bit rows in one pass.
+    fn fold_to_bits(&self, counts: &Matrix, batch: usize, par: Parallelism) -> BitMatrix {
+        let oc = self.spec.out_channels;
+        let feat = self.out_features();
+        let patches_per_image = feat / oc;
+        let workers = par.workers_for(batch * feat / 4);
+        let row_bits: Vec<BitVector> = par_row_bands(par.dispatch(), workers, batch, |band| {
+            band.map(|b| {
+                BitVector::from_fn(feat, |j| {
+                    let p = j / oc;
+                    let ch = j % oc;
+                    let v = counts.data[(b * patches_per_image + p) * oc + ch];
+                    self.dense.epilogue(ch, v) < 0.0
+                })
+            })
+            .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+        BitMatrix {
+            rows: batch,
+            cols: feat,
+            row_bits,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::{reference, ImageShape};
+    use crate::util::rng::Xoshiro256;
+
+    fn rand_layer(
+        rng: &mut Xoshiro256,
+        precision: Precision,
+    ) -> (ConvLayer, Matrix, Matrix) {
+        let k = 1 + (rng.next_u64() % 3) as usize;
+        let spec = Conv2dSpec {
+            input: ImageShape::new(
+                k + (rng.next_u64() % 5) as usize,
+                k + (rng.next_u64() % 5) as usize,
+                1 + (rng.next_u64() % 4) as usize,
+            ),
+            out_channels: 1 + (rng.next_u64() % 6) as usize,
+            kernel: k,
+            stride: 1 + (rng.next_u64() % 2) as usize,
+            padding: (rng.next_u64() % k as u64) as usize,
+        };
+        let w = Matrix::from_vec(
+            spec.out_channels,
+            spec.patch_len(),
+            rng.normal_vec(spec.out_channels * spec.patch_len()),
+        )
+        .unwrap();
+        let bn = BatchNorm {
+            scale: (0..spec.out_channels).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+            shift: (0..spec.out_channels).map(|_| rng.uniform(-2.0, 2.0)).collect(),
+        };
+        let layer = match precision {
+            Precision::Bf16 => ConvLayer::bf16(spec, w.clone(), Some(bn), true).unwrap(),
+            Precision::Binary => ConvLayer::binary(spec, &w, Some(bn), true).unwrap(),
+        };
+        let b = 1 + (rng.next_u64() % 3) as usize;
+        let x = Matrix::from_vec(
+            b,
+            spec.input.features(),
+            rng.normal_vec(b * spec.input.features()),
+        )
+        .unwrap();
+        (layer, x, w)
+    }
+
+    #[test]
+    fn bf16_forward_matches_reference_plus_epilogue() {
+        let mut rng = Xoshiro256::seed_from_u64(3);
+        for _ in 0..25 {
+            let (layer, x, _) = rand_layer(&mut rng, Precision::Bf16);
+            let refpre = reference::conv2d_ref_bf16(
+                &x,
+                &layer.spec,
+                &layer.dense.weights,
+                crate::ARRAY_DIM,
+            )
+            .unwrap();
+            let oc = layer.spec.out_channels;
+            let y = layer.forward_with(&x, Parallelism::serial()).unwrap();
+            assert_eq!((y.rows, y.cols), (x.rows, layer.out_features()));
+            for (i, &v) in y.data.iter().enumerate() {
+                let want = layer.dense.epilogue(i % oc, refpre.data[i]);
+                assert!(v == want, "element {i}: {v} != {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn binary_forward_matches_reference_plus_epilogue() {
+        let mut rng = Xoshiro256::seed_from_u64(4);
+        for _ in 0..25 {
+            let (layer, x, _) = rand_layer(&mut rng, Precision::Binary);
+            let refpre =
+                reference::conv2d_ref_binary(&x, &layer.spec, &layer.dense.weights).unwrap();
+            let oc = layer.spec.out_channels;
+            for algo in [ConvAlgo::Im2col, ConvAlgo::Direct, ConvAlgo::Auto] {
+                let l = layer.clone().with_algo(algo);
+                let y = l.forward_with(&x, Parallelism::serial()).unwrap();
+                for (i, &v) in y.data.iter().enumerate() {
+                    let want = l.dense.epilogue(i % oc, refpre.data[i]);
+                    assert!(v == want, "{algo:?} element {i}: {v} != {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_paths_match_float_path() {
+        let mut rng = Xoshiro256::seed_from_u64(6);
+        for _ in 0..25 {
+            let (layer, x, _) = rand_layer(&mut rng, Precision::Binary);
+            // ±1 inputs so the float path and the packed path see the
+            // same signs and the same values.
+            let x = {
+                let mut s = x.clone();
+                s.map_inplace(|v| if v < 0.0 { -1.0 } else { 1.0 });
+                s
+            };
+            let par = Parallelism::serial();
+            let xb = BitMatrix::from_matrix(&x);
+            let float_out = layer.forward_with(&x, par).unwrap();
+            let packed_out = layer.forward_packed_with(&xb, par).unwrap();
+            assert_eq!(float_out.data, packed_out.data);
+            let bits = layer.forward_packed_to_bits_with(&xb, par).unwrap();
+            assert_eq!(bits, BitMatrix::from_matrix(&float_out));
+            assert_eq!(bits, layer.forward_to_bits_with(&x, par).unwrap());
+        }
+    }
+
+    #[test]
+    fn worker_counts_are_bit_identical() {
+        let mut rng = Xoshiro256::seed_from_u64(8);
+        for precision in [Precision::Bf16, Precision::Binary] {
+            let (layer, x, _) = rand_layer(&mut rng, precision);
+            let serial = layer.forward_with(&x, Parallelism::serial()).unwrap();
+            for workers in [2usize, 5] {
+                let y = layer.forward_with(&x, Parallelism::fixed(workers)).unwrap();
+                assert_eq!(serial.data, y.data, "{precision:?} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_entry_points_reject_bf16() {
+        let spec = Conv2dSpec {
+            input: ImageShape::new(3, 3, 1),
+            out_channels: 2,
+            kernel: 2,
+            stride: 1,
+            padding: 0,
+        };
+        let layer = ConvLayer::bf16(spec, Matrix::zeros(2, 4), None, false).unwrap();
+        let xb = BitMatrix::from_matrix(&Matrix::zeros(1, 9));
+        assert!(layer.forward_packed_with(&xb, Parallelism::serial()).is_err());
+        assert!(layer
+            .forward_packed_to_bits_with(&xb, Parallelism::serial())
+            .is_err());
+        assert!(layer
+            .forward_to_bits_with(&Matrix::zeros(1, 9), Parallelism::serial())
+            .is_err());
+    }
+
+    #[test]
+    fn weight_shape_mismatch_rejected() {
+        let spec = Conv2dSpec {
+            input: ImageShape::new(3, 3, 2),
+            out_channels: 2,
+            kernel: 2,
+            stride: 1,
+            padding: 0,
+        };
+        assert!(ConvLayer::bf16(spec, Matrix::zeros(2, 7), None, false).is_err());
+        assert!(ConvLayer::binary(spec, &Matrix::zeros(3, 8), None, false).is_err());
+        assert!(ConvLayer::bf16(spec, Matrix::zeros(2, 8), None, false).is_ok());
+    }
+}

@@ -1,0 +1,562 @@
+//! Convolutional front subsystem: XNOR-popcount binary convolution,
+//! bf16 convolution, and the pool/flatten stages that lower CNN fronts
+//! onto the dense systolic kernels.
+//!
+//! Every related accelerator to the paper (BinArray, XNORBIN,
+//! ChewBaccaNN) is a *CNN* accelerator; this module extends the hybrid
+//! float/binary story beyond dense MLPs. A convolution is lowered onto
+//! the existing dense engines two ways:
+//!
+//! * **im2col** — gather each output position's receptive field into a
+//!   patch row, then run the patch matrix through the dense kernels:
+//!   [`crate::bf16::PackedWeights`] panels for bf16 convs,
+//!   [`crate::binary::BitMatrix::matmul_t`] XNOR-popcount for binary
+//!   convs. Binary patches are gathered **directly as sign bits**
+//!   ([`im2col::im2col_bits`]) — no float patch matrix is ever
+//!   materialized on the binary path.
+//! * **direct** (binary only) — XNORBIN-style row reuse: for each
+//!   output position, each kernel row's bit window is extracted from
+//!   the packed input feature map **once** and XOR-popcounted against
+//!   every output channel's matching weight slice ([`direct`]). Wins
+//!   when the spatial extent is small and `out_channels` amortizes the
+//!   window extraction. Popcount accumulation is order-independent, so
+//!   this is bit-exact with im2col by construction; a bf16 direct path
+//!   would change the k-blocked accumulation order and is deliberately
+//!   not offered.
+//!
+//! ### Layout conventions (shared with the python exporter)
+//!
+//! * Feature maps are flattened **HWC** (channel-minor): feature index
+//!   `(y·W + x)·C + c`. [`FrontSpec::Flatten`] is therefore a pure
+//!   reinterpretation — no data movement.
+//! * Patches and conv weight rows use **(ky, kx, c)** order: patch
+//!   index `(ky·kernel + kx)·C + c`. Each kernel row of a patch is a
+//!   contiguous HWC slice of the input, which is what makes the direct
+//!   path's window extraction a word-aligned bit copy.
+//! * Padding contributes **zeros**: exact `+0.0` on the bf16 path, and
+//!   sign bit 0 (= +1) on the binary path — the standard BNN padding
+//!   convention, applied identically by im2col, direct, and the scalar
+//!   references.
+//!
+//! ### Bit-exactness
+//!
+//! Scalar references for both precisions live in [`reference`]; every
+//! packed/parallel path is asserted bit-identical to them at any worker
+//! count (`tests/integration_conv.rs`), and max-pool on packed sign
+//! activations is an AND of bits — exactly `sign(max)` because
+//! `max(v…) < 0 ⟺ all vᵢ < 0`.
+
+pub mod direct;
+pub mod im2col;
+pub mod layer;
+pub mod reference;
+
+pub use layer::{ConvAlgo, ConvLayer};
+
+use anyhow::{ensure, Result};
+
+use crate::nn::Precision;
+
+/// Spatial shape of a feature map, flattened channel-minor (HWC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ImageShape {
+    /// Rows (y).
+    pub height: usize,
+    /// Columns (x).
+    pub width: usize,
+    /// Channels (minor axis of the flattened layout).
+    pub channels: usize,
+}
+
+impl ImageShape {
+    /// Construct a shape.
+    pub fn new(height: usize, width: usize, channels: usize) -> Self {
+        Self {
+            height,
+            width,
+            channels,
+        }
+    }
+
+    /// Flattened feature count `H·W·C`.
+    pub fn features(&self) -> usize {
+        self.height * self.width * self.channels
+    }
+
+    /// Flattened HWC index of `(y, x, c)`.
+    #[inline]
+    pub fn index(&self, y: usize, x: usize, c: usize) -> usize {
+        (y * self.width + x) * self.channels + c
+    }
+}
+
+/// Geometry of one 2-D convolution (square kernel, symmetric zero
+/// padding, equal stride in both axes — the shapes the 16×16 array's
+/// schedule models).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Conv2dSpec {
+    /// Input feature-map shape.
+    pub input: ImageShape,
+    /// Number of filters (output channels).
+    pub out_channels: usize,
+    /// Kernel side length.
+    pub kernel: usize,
+    /// Stride in both axes.
+    pub stride: usize,
+    /// Symmetric zero padding in both axes.
+    pub padding: usize,
+}
+
+impl Conv2dSpec {
+    /// Output spatial extent along one axis, or `None` when the kernel
+    /// does not fit even once.
+    fn out_extent(in_dim: usize, kernel: usize, stride: usize, padding: usize) -> Option<usize> {
+        let span = in_dim + 2 * padding;
+        if span < kernel {
+            return None;
+        }
+        Some((span - kernel) / stride + 1)
+    }
+
+    /// Output feature-map shape (panics on an invalid spec — call
+    /// [`Self::validate`] first on untrusted geometry).
+    pub fn out_shape(&self) -> ImageShape {
+        ImageShape::new(
+            Self::out_extent(self.input.height, self.kernel, self.stride, self.padding)
+                .expect("kernel taller than padded input"),
+            Self::out_extent(self.input.width, self.kernel, self.stride, self.padding)
+                .expect("kernel wider than padded input"),
+            self.out_channels,
+        )
+    }
+
+    /// im2col patch length `kernel²·C` — the K dimension of the lowered
+    /// matmul.
+    pub fn patch_len(&self) -> usize {
+        self.kernel * self.kernel * self.input.channels
+    }
+
+    /// Check the geometry is realizable.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.input.height > 0 && self.input.width > 0 && self.input.channels > 0,
+            "conv input dims must be positive"
+        );
+        ensure!(self.out_channels > 0, "conv out_channels must be positive");
+        ensure!(self.kernel > 0, "conv kernel must be positive");
+        ensure!(self.stride > 0, "conv stride must be positive");
+        ensure!(
+            self.padding < self.kernel,
+            "conv padding {} >= kernel {} would emit all-padding outputs",
+            self.padding,
+            self.kernel
+        );
+        ensure!(
+            Self::out_extent(self.input.height, self.kernel, self.stride, self.padding).is_some()
+                && Self::out_extent(self.input.width, self.kernel, self.stride, self.padding)
+                    .is_some(),
+            "conv kernel {}x{} does not fit the padded {}x{} input",
+            self.kernel,
+            self.kernel,
+            self.input.height + 2 * self.padding,
+            self.input.width + 2 * self.padding
+        );
+        Ok(())
+    }
+
+    /// Multiply-accumulates per image: one patch-GEMM row per output
+    /// position.
+    pub fn macs_per_image(&self) -> usize {
+        let out = self.out_shape();
+        out.height * out.width * self.patch_len() * self.out_channels
+    }
+}
+
+/// Output shape of a `kernel`/`stride` max-pool over `input` (no
+/// padding; channels pass through).
+pub fn pool_out_shape(input: ImageShape, kernel: usize, stride: usize) -> Result<ImageShape> {
+    ensure!(kernel > 0 && stride > 0, "pool kernel/stride must be positive");
+    ensure!(
+        input.height >= kernel && input.width >= kernel,
+        "pool window {kernel}x{kernel} larger than {}x{} input",
+        input.height,
+        input.width
+    );
+    Ok(ImageShape::new(
+        (input.height - kernel) / stride + 1,
+        (input.width - kernel) / stride + 1,
+        input.channels,
+    ))
+}
+
+/// Max-pool on float feature maps (`x` is `B × input.features()` HWC
+/// rows). Pure per-output max — any row split is identical to the
+/// serial loop, so this fans out over batch rows.
+pub fn maxpool_f32(
+    x: &crate::bf16::Matrix,
+    input: ImageShape,
+    kernel: usize,
+    stride: usize,
+    par: crate::util::par::Parallelism,
+) -> Result<crate::bf16::Matrix> {
+    ensure!(
+        x.cols == input.features(),
+        "pool expects {} features, got {}",
+        input.features(),
+        x.cols
+    );
+    let out = pool_out_shape(input, kernel, stride)?;
+    let (oh, ow, c) = (out.height, out.width, out.channels);
+    let mut y = crate::bf16::Matrix::zeros(x.rows, out.features());
+    let workers = par.workers_for(x.rows * out.features() * kernel * kernel / 4);
+    crate::util::pool::par_row_chunks_mut(
+        par.dispatch(),
+        workers,
+        out.features(),
+        &mut y.data,
+        |row0, band| {
+            for (i, dst) in band.chunks_mut(out.features()).enumerate() {
+                let src = x.row(row0 + i);
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        for ch in 0..c {
+                            let mut m = f32::NEG_INFINITY;
+                            for ky in 0..kernel {
+                                for kx in 0..kernel {
+                                    let v = src[input.index(oy * stride + ky, ox * stride + kx, ch)];
+                                    m = m.max(v);
+                                }
+                            }
+                            dst[out.index(oy, ox, ch)] = m;
+                        }
+                    }
+                }
+            }
+        },
+    );
+    Ok(y)
+}
+
+/// Max-pool on packed sign activations: the pooled sign bit is the AND
+/// of the window's bits, because `max(v…) < 0 ⟺ all vᵢ < 0` (and the
+/// `-0.0 → +1` packing convention agrees on both sides). Bit-exact
+/// with packing the output of [`maxpool_f32`].
+pub fn maxpool_bits(
+    xb: &crate::binary::BitMatrix,
+    input: ImageShape,
+    kernel: usize,
+    stride: usize,
+    par: crate::util::par::Parallelism,
+) -> Result<crate::binary::BitMatrix> {
+    use crate::binary::BitVector;
+    ensure!(
+        xb.cols == input.features(),
+        "pool expects {} features, got {}",
+        input.features(),
+        xb.cols
+    );
+    let out = pool_out_shape(input, kernel, stride)?;
+    let c = out.channels;
+    let workers = par.workers_for(xb.rows * out.features() * kernel * kernel / 4);
+    let row_bits: Vec<BitVector> =
+        crate::util::pool::par_row_bands(par.dispatch(), workers, xb.rows, |band| {
+            band.map(|r| {
+                let src = xb.row(r);
+                BitVector::from_fn(out.features(), |j| {
+                    let ch = j % c;
+                    let ox = (j / c) % out.width;
+                    let oy = j / (c * out.width);
+                    for ky in 0..kernel {
+                        for kx in 0..kernel {
+                            if !src.get(input.index(oy * stride + ky, ox * stride + kx, ch)) {
+                                return false; // a +1 in the window wins the max
+                            }
+                        }
+                    }
+                    true
+                })
+            })
+            .collect::<Vec<_>>()
+        })
+        .into_iter()
+        .flatten()
+        .collect();
+    Ok(crate::binary::BitMatrix {
+        rows: xb.rows,
+        cols: out.features(),
+        row_bits,
+    })
+}
+
+/// One declarative stage of a network's convolutional front.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrontSpec {
+    /// 2-D convolution (+ folded BN + hardtanh epilogue, like a hidden
+    /// dense layer) in the given datapath precision.
+    Conv2d {
+        /// Number of filters.
+        out_channels: usize,
+        /// Square kernel side.
+        kernel: usize,
+        /// Stride in both axes.
+        stride: usize,
+        /// Symmetric zero padding.
+        padding: usize,
+        /// Datapath mode of the lowered patch-GEMM.
+        precision: Precision,
+    },
+    /// Spatial max-pool (channels pass through).
+    MaxPool {
+        /// Window side.
+        kernel: usize,
+        /// Stride in both axes.
+        stride: usize,
+    },
+    /// Reinterpret the HWC feature map as a flat dense-trunk input
+    /// (no data movement under the HWC layout). Must be the last stage.
+    Flatten,
+}
+
+/// Declarative convolutional front: input image shape plus ordered
+/// stages, ending in [`FrontSpec::Flatten`]. Owned by
+/// [`crate::nn::NetworkConfig::front`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConvFront {
+    /// Shape of the network input image.
+    pub input: ImageShape,
+    /// Stages in forward order; the last must be `Flatten`.
+    pub stages: Vec<FrontSpec>,
+}
+
+impl ConvFront {
+    /// Feature-map shape **entering** each stage, plus the final output
+    /// shape (so `shapes().len() == stages.len() + 1`). Errors on
+    /// unrealizable geometry.
+    pub fn shapes(&self) -> Result<Vec<ImageShape>> {
+        let mut shapes = vec![self.input];
+        for (i, stage) in self.stages.iter().enumerate() {
+            let cur = *shapes.last().unwrap();
+            let next = match *stage {
+                FrontSpec::Conv2d {
+                    out_channels,
+                    kernel,
+                    stride,
+                    padding,
+                    ..
+                } => {
+                    let spec = Conv2dSpec {
+                        input: cur,
+                        out_channels,
+                        kernel,
+                        stride,
+                        padding,
+                    };
+                    spec.validate()
+                        .map_err(|e| e.context(format!("front stage {i}")))?;
+                    spec.out_shape()
+                }
+                FrontSpec::MaxPool { kernel, stride } => pool_out_shape(cur, kernel, stride)
+                    .map_err(|e| e.context(format!("front stage {i}")))?,
+                FrontSpec::Flatten => cur,
+            };
+            shapes.push(next);
+        }
+        Ok(shapes)
+    }
+
+    /// Validate stage ordering and geometry.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.stages.is_empty(), "conv front has no stages");
+        ensure!(
+            matches!(self.stages.last(), Some(FrontSpec::Flatten)),
+            "conv front must end with a Flatten stage"
+        );
+        ensure!(
+            self.stages
+                .iter()
+                .filter(|s| matches!(s, FrontSpec::Flatten))
+                .count()
+                == 1,
+            "conv front must contain exactly one Flatten stage"
+        );
+        self.shapes()?;
+        Ok(())
+    }
+
+    /// Flattened feature count handed to the dense trunk.
+    pub fn output_features(&self) -> Result<usize> {
+        Ok(self.shapes()?.last().unwrap().features())
+    }
+
+    /// The [`Conv2dSpec`] of stage `i` given the shape entering it.
+    /// Panics if stage `i` is not a conv (internal helper for
+    /// materialization and lowering).
+    pub(crate) fn conv_spec(&self, i: usize, input: ImageShape) -> Conv2dSpec {
+        match self.stages[i] {
+            FrontSpec::Conv2d {
+                out_channels,
+                kernel,
+                stride,
+                padding,
+                ..
+            } => Conv2dSpec {
+                input,
+                out_channels,
+                kernel,
+                stride,
+                padding,
+            },
+            _ => panic!("stage {i} is not a conv"),
+        }
+    }
+
+    /// Multiply-accumulates per image across all conv stages.
+    pub fn macs(&self) -> usize {
+        let Ok(shapes) = self.shapes() else { return 0 };
+        self.stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| match s {
+                FrontSpec::Conv2d { .. } => self.conv_spec(i, shapes[i]).macs_per_image(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Weight storage bytes across all conv stages (Table II model:
+    /// bf16 = 2 B/weight, binary = 1 bit/weight, rounded to bytes per
+    /// stage).
+    pub fn weight_bytes(&self) -> usize {
+        let Ok(shapes) = self.shapes() else { return 0 };
+        self.stages
+            .iter()
+            .enumerate()
+            .map(|(i, s)| match *s {
+                FrontSpec::Conv2d { precision, .. } => {
+                    let spec = self.conv_spec(i, shapes[i]);
+                    (spec.out_channels * spec.patch_len() * precision.weight_bits()).div_ceil(8)
+                }
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bf16::Matrix;
+    use crate::binary::BitMatrix;
+    use crate::util::par::Parallelism;
+    use crate::util::rng::Xoshiro256;
+
+    fn spec(h: usize, w: usize, c: usize, oc: usize, k: usize, s: usize, p: usize) -> Conv2dSpec {
+        Conv2dSpec {
+            input: ImageShape::new(h, w, c),
+            out_channels: oc,
+            kernel: k,
+            stride: s,
+            padding: p,
+        }
+    }
+
+    #[test]
+    fn conv_shapes() {
+        // 32×32, k3 s1 p1 → same spatial; k2 s2 p0 → halved.
+        assert_eq!(
+            spec(32, 32, 3, 8, 3, 1, 1).out_shape(),
+            ImageShape::new(32, 32, 8)
+        );
+        assert_eq!(
+            spec(32, 32, 3, 8, 2, 2, 0).out_shape(),
+            ImageShape::new(16, 16, 8)
+        );
+        // Non-square input keeps its aspect.
+        assert_eq!(
+            spec(8, 6, 2, 4, 3, 1, 0).out_shape(),
+            ImageShape::new(6, 4, 4)
+        );
+        assert_eq!(spec(8, 6, 2, 4, 3, 1, 0).patch_len(), 18);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        assert!(spec(4, 4, 1, 2, 5, 1, 0).validate().is_err()); // kernel too big
+        assert!(spec(4, 4, 1, 2, 3, 0, 0).validate().is_err()); // zero stride
+        assert!(spec(4, 4, 1, 0, 3, 1, 0).validate().is_err()); // no filters
+        assert!(spec(4, 4, 1, 2, 3, 1, 3).validate().is_err()); // padding >= kernel
+        assert!(spec(4, 4, 1, 2, 3, 1, 1).validate().is_ok());
+    }
+
+    #[test]
+    fn pool_shapes_and_errors() {
+        let s = pool_out_shape(ImageShape::new(8, 6, 4), 2, 2).unwrap();
+        assert_eq!(s, ImageShape::new(4, 3, 4));
+        assert!(pool_out_shape(ImageShape::new(1, 8, 4), 2, 2).is_err());
+    }
+
+    #[test]
+    fn maxpool_f32_known() {
+        // 2×2×1 → 1×1×1 max.
+        let sh = ImageShape::new(2, 2, 1);
+        let x = Matrix::from_vec(1, 4, vec![-3.0, -1.0, -2.0, -4.0]).unwrap();
+        let y = maxpool_f32(&x, sh, 2, 2, Parallelism::serial()).unwrap();
+        assert_eq!(y.data, vec![-1.0]);
+    }
+
+    #[test]
+    fn maxpool_bits_matches_f32_signs() {
+        let mut rng = Xoshiro256::seed_from_u64(42);
+        for &(h, w, c, k, s) in &[(4usize, 4usize, 3usize, 2usize, 2usize), (5, 7, 2, 3, 2)] {
+            let sh = ImageShape::new(h, w, c);
+            let x = Matrix::from_vec(3, sh.features(), rng.normal_vec(3 * sh.features())).unwrap();
+            let f = maxpool_f32(&x, sh, k, s, Parallelism::serial()).unwrap();
+            let b = maxpool_bits(&BitMatrix::from_matrix(&x), sh, k, s, Parallelism::serial())
+                .unwrap();
+            assert_eq!(b, BitMatrix::from_matrix(&f), "h={h} w={w} c={c} k={k} s={s}");
+        }
+    }
+
+    #[test]
+    fn front_validation_and_features() {
+        use crate::nn::Precision;
+        let front = ConvFront {
+            input: ImageShape::new(32, 32, 3),
+            stages: vec![
+                FrontSpec::Conv2d {
+                    out_channels: 16,
+                    kernel: 3,
+                    stride: 1,
+                    padding: 1,
+                    precision: Precision::Bf16,
+                },
+                FrontSpec::MaxPool { kernel: 2, stride: 2 },
+                FrontSpec::Conv2d {
+                    out_channels: 16,
+                    kernel: 3,
+                    stride: 1,
+                    padding: 1,
+                    precision: Precision::Binary,
+                },
+                FrontSpec::MaxPool { kernel: 2, stride: 2 },
+                FrontSpec::Flatten,
+            ],
+        };
+        front.validate().unwrap();
+        assert_eq!(front.output_features().unwrap(), 8 * 8 * 16);
+        assert!(front.macs() > 0);
+        assert!(front.weight_bytes() > 0);
+
+        let no_flatten = ConvFront {
+            input: front.input,
+            stages: front.stages[..4].to_vec(),
+        };
+        assert!(no_flatten.validate().is_err());
+        assert!(ConvFront {
+            input: front.input,
+            stages: vec![],
+        }
+        .validate()
+        .is_err());
+    }
+}

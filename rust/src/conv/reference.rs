@@ -1,0 +1,234 @@
+//! Scalar reference convolutions — the oracles for the lowered paths.
+//!
+//! Both references gather the `(ky, kx, c)` patch explicitly per output
+//! position and accumulate in the exact hardware numerics:
+//!
+//! * **bf16** — operands quantized to bf16 once, then k-blocked f32
+//!   accumulation over the patch order (sequential within a block of
+//!   `k_block`, block sums added in order) — the same contract as
+//!   [`crate::bf16::Matrix::matmul_bf16_blocked_t`], so the im2col
+//!   lowering onto the packed panels is bit-identical.
+//! * **binary** — ±1 sign products summed as integers. Integer adds are
+//!   associative, so any XNOR-popcount evaluation order matches.
+//!
+//! Padding gathers exact zeros: `+0.0` (bf16-representable, adds
+//! nothing) on the float path, sign `+1` on the binary path.
+
+use anyhow::{ensure, Result};
+
+use super::Conv2dSpec;
+use crate::bf16::{Matrix, BF16};
+
+/// Gather one quantized patch row for output position `(oy, ox)` of
+/// image row `src` into `patch` (length `spec.patch_len()`, `(ky,kx,c)`
+/// order). Out-of-bounds positions gather `0.0`.
+fn gather_patch(src: &[f32], spec: &Conv2dSpec, oy: usize, ox: usize, patch: &mut [f32]) {
+    let (h, w, c) = (
+        spec.input.height as isize,
+        spec.input.width as isize,
+        spec.input.channels,
+    );
+    for ky in 0..spec.kernel {
+        let iy = (oy * spec.stride + ky) as isize - spec.padding as isize;
+        for kx in 0..spec.kernel {
+            let ix = (ox * spec.stride + kx) as isize - spec.padding as isize;
+            let dst = &mut patch[((ky * spec.kernel + kx) * c)..((ky * spec.kernel + kx) + 1) * c];
+            if iy < 0 || iy >= h || ix < 0 || ix >= w {
+                dst.fill(0.0);
+            } else {
+                let base = (iy as usize * spec.input.width + ix as usize) * c;
+                dst.copy_from_slice(&src[base..base + c]);
+            }
+        }
+    }
+}
+
+/// Scalar bf16 conv reference: `x` is `B × input.features()` HWC rows,
+/// `weights` is `out_channels × patch_len` in `(ky,kx,c)` order; returns
+/// pre-epilogue psums, one patch row per output position
+/// (`(B·OH·OW) × out_channels`, b-major then `(oy, ox)`).
+pub fn conv2d_ref_bf16(
+    x: &Matrix,
+    spec: &Conv2dSpec,
+    weights: &Matrix,
+    k_block: usize,
+) -> Result<Matrix> {
+    spec.validate()?;
+    ensure!(k_block > 0, "k_block must be positive");
+    let kp = spec.patch_len();
+    ensure!(
+        x.cols == spec.input.features(),
+        "conv expects {} features, got {}",
+        spec.input.features(),
+        x.cols
+    );
+    ensure!(
+        weights.rows == spec.out_channels && weights.cols == kp,
+        "conv weights must be {}x{}, got {}x{}",
+        spec.out_channels,
+        kp,
+        weights.rows,
+        weights.cols
+    );
+    let out = spec.out_shape();
+    let (oh, ow) = (out.height, out.width);
+    let quant = |xs: &[f32]| -> Vec<f32> {
+        xs.iter().map(|&v| BF16::from_f32(v).to_f32()).collect()
+    };
+    let x_q = quant(&x.data);
+    let w_q = quant(&weights.data);
+    let mut y = Matrix::zeros(x.rows * oh * ow, spec.out_channels);
+    let mut patch = vec![0.0f32; kp];
+    for b in 0..x.rows {
+        let src = &x_q[b * x.cols..(b + 1) * x.cols];
+        for oy in 0..oh {
+            for ox in 0..ow {
+                gather_patch(src, spec, oy, ox, &mut patch);
+                let row = (b * oh + oy) * ow + ox;
+                for oc in 0..spec.out_channels {
+                    let w_row = &w_q[oc * kp..(oc + 1) * kp];
+                    // k-blocked psum accumulation (hardware contract).
+                    let mut acc = 0.0f32;
+                    let mut k0 = 0;
+                    while k0 < kp {
+                        let k1 = (k0 + k_block).min(kp);
+                        let mut block = 0.0f32;
+                        for kk in k0..k1 {
+                            block += patch[kk] * w_row[kk];
+                        }
+                        acc += block;
+                        k0 = k1;
+                    }
+                    y.data[row * spec.out_channels + oc] = acc;
+                }
+            }
+        }
+    }
+    Ok(y)
+}
+
+/// Scalar binary conv reference: sign products summed as integers.
+/// Padding contributes `+1` (sign bit 0). Same shapes/row order as
+/// [`conv2d_ref_bf16`]; outputs are the integer counts as f32.
+pub fn conv2d_ref_binary(x: &Matrix, spec: &Conv2dSpec, weights: &Matrix) -> Result<Matrix> {
+    spec.validate()?;
+    let kp = spec.patch_len();
+    ensure!(
+        x.cols == spec.input.features(),
+        "conv expects {} features, got {}",
+        spec.input.features(),
+        x.cols
+    );
+    ensure!(
+        weights.rows == spec.out_channels && weights.cols == kp,
+        "conv weights must be {}x{}, got {}x{}",
+        spec.out_channels,
+        kp,
+        weights.rows,
+        weights.cols
+    );
+    let out = spec.out_shape();
+    let (oh, ow) = (out.height, out.width);
+    let mut y = Matrix::zeros(x.rows * oh * ow, spec.out_channels);
+    let mut patch = vec![0.0f32; kp];
+    for b in 0..x.rows {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                gather_patch(x.row(b), spec, oy, ox, &mut patch);
+                let row = (b * oh + oy) * ow + ox;
+                for oc in 0..spec.out_channels {
+                    let w_row = weights.row(oc);
+                    let mut acc = 0i32;
+                    for kk in 0..kp {
+                        let sx = if patch[kk] < 0.0 { -1i32 } else { 1 };
+                        let sw = if w_row[kk] < 0.0 { -1i32 } else { 1 };
+                        acc += sx * sw;
+                    }
+                    y.data[row * spec.out_channels + oc] = acc as f32;
+                }
+            }
+        }
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ImageShape;
+
+    #[test]
+    fn bf16_identity_kernel_passes_input_through() {
+        // 1×1 kernel, single channel, weight +1: psum = input value.
+        let spec = Conv2dSpec {
+            input: ImageShape::new(2, 3, 1),
+            out_channels: 1,
+            kernel: 1,
+            stride: 1,
+            padding: 0,
+        };
+        let x = Matrix::from_vec(1, 6, vec![0.5, -1.5, 2.0, 3.0, -0.25, 0.0]).unwrap();
+        let w = Matrix::from_vec(1, 1, vec![1.0]).unwrap();
+        let y = conv2d_ref_bf16(&x, &spec, &w, 16).unwrap();
+        assert_eq!(y.rows, 6);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn bf16_known_3x3_sum_kernel() {
+        // All-ones 3×3 kernel with p=1 on a 3×3 image of ones: the
+        // center output sums 9, corners sum 4 (padding adds zeros).
+        let spec = Conv2dSpec {
+            input: ImageShape::new(3, 3, 1),
+            out_channels: 1,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+        };
+        let x = Matrix::from_vec(1, 9, vec![1.0; 9]).unwrap();
+        let w = Matrix::from_vec(1, 9, vec![1.0; 9]).unwrap();
+        let y = conv2d_ref_bf16(&x, &spec, &w, 16).unwrap();
+        assert_eq!(y.data[4], 9.0); // center
+        assert_eq!(y.data[0], 4.0); // corner
+        assert_eq!(y.data[1], 6.0); // edge
+    }
+
+    #[test]
+    fn binary_counts_with_padding_as_plus_one() {
+        // 3×3 all -1 image, all +1 3×3 kernel, p=1. Center: 9 products
+        // of (+1)(-1) = -9. Corner: 4 in-bounds (-1) + 5 padding (+1) = 1.
+        let spec = Conv2dSpec {
+            input: ImageShape::new(3, 3, 1),
+            out_channels: 1,
+            kernel: 3,
+            stride: 1,
+            padding: 1,
+        };
+        let x = Matrix::from_vec(1, 9, vec![-1.0; 9]).unwrap();
+        let w = Matrix::from_vec(1, 9, vec![1.0; 9]).unwrap();
+        let y = conv2d_ref_binary(&x, &spec, &w).unwrap();
+        assert_eq!(y.data[4], -9.0);
+        assert_eq!(y.data[0], 1.0);
+    }
+
+    #[test]
+    fn multi_channel_patch_order_is_ky_kx_c() {
+        // 2×2 image, 2 channels, 2×2 kernel covering the whole image:
+        // the single patch in (ky,kx,c) order equals the HWC row, so
+        // one-hot weight rows pick the input back out in order.
+        let spec = Conv2dSpec {
+            input: ImageShape::new(2, 2, 2),
+            out_channels: 8,
+            kernel: 2,
+            stride: 1,
+            padding: 0,
+        };
+        let x = Matrix::from_vec(1, 8, (1..=8).map(|v| v as f32).collect()).unwrap();
+        let mut w = Matrix::zeros(8, 8);
+        for i in 0..8 {
+            w.data[i * 8 + i] = 1.0;
+        }
+        let y = conv2d_ref_bf16(&x, &spec, &w, 16).unwrap();
+        assert_eq!(y.data, x.data);
+    }
+}

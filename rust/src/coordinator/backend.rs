@@ -177,11 +177,11 @@ impl ExecutionBackend for ReferenceBackend {
     }
 
     fn input_width(&self) -> Option<usize> {
-        self.net.config.sizes.first().copied()
+        Some(self.net.config.input_width())
     }
 
     fn num_classes(&self) -> Option<usize> {
-        self.net.config.sizes.last().copied()
+        Some(self.net.config.num_classes())
     }
 }
 
@@ -231,11 +231,11 @@ impl ExecutionBackend for SimulatorBackend {
     }
 
     fn input_width(&self) -> Option<usize> {
-        self.net.config.sizes.first().copied()
+        Some(self.net.config.input_width())
     }
 
     fn num_classes(&self) -> Option<usize> {
-        self.net.config.sizes.last().copied()
+        Some(self.net.config.num_classes())
     }
 }
 
@@ -316,11 +316,11 @@ impl ExecutionBackend for ShardedSimulatorBackend {
     }
 
     fn input_width(&self) -> Option<usize> {
-        self.net.config.sizes.first().copied()
+        Some(self.net.config.input_width())
     }
 
     fn num_classes(&self) -> Option<usize> {
-        self.net.config.sizes.last().copied()
+        Some(self.net.config.num_classes())
     }
 
     fn shard_depths(&self) -> Option<Vec<u64>> {
@@ -467,6 +467,7 @@ mod tests {
             &NetworkConfig {
                 sizes: vec![784, 32, 10],
                 precisions: vec![Precision::Bf16, Precision::Binary],
+                front: None,
             },
             3,
         )

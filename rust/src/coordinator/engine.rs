@@ -224,8 +224,8 @@ impl EngineBuilder {
             spec.net.config.validate().map_err(|e| {
                 ServeError::InvalidConfig(format!("model '{}': {e:#}", spec.name))
             })?;
-            let input_width = spec.net.config.sizes[0];
-            let num_classes = *spec.net.config.sizes.last().unwrap();
+            let input_width = spec.net.config.input_width();
+            let num_classes = spec.net.config.num_classes();
             let backends = (0..spec.replicas)
                 .map(|i| match &mut spec.factory {
                     Some(f) => f(&spec.net, i),

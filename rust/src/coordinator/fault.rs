@@ -320,6 +320,7 @@ mod tests {
             &NetworkConfig {
                 sizes: vec![16, 8, 4],
                 precisions: vec![Precision::Bf16, Precision::Bf16],
+                front: None,
             },
             5,
         )

@@ -781,6 +781,7 @@ mod tests {
             &NetworkConfig {
                 sizes: vec![784, 16, 10],
                 precisions: vec![Precision::Bf16, Precision::Bf16],
+                front: None,
             },
             seed,
         )

@@ -502,6 +502,7 @@ mod tests {
             &NetworkConfig {
                 sizes: vec![784, 16, 10],
                 precisions: vec![Precision::Bf16, Precision::Bf16],
+                front: None,
             },
             1,
         ))
@@ -555,6 +556,7 @@ mod tests {
             &NetworkConfig {
                 sizes: vec![784, 16, 10],
                 precisions: vec![Precision::Bf16, Precision::Bf16],
+                front: None,
             },
             1,
         );

@@ -1,0 +1,305 @@
+//! Synthetic CIFAR-like data substrate for the CNN workload.
+//!
+//! Like [`super::SynthMnist`], this environment has no network access,
+//! so the conv pipeline is exercised on a **procedural 32×32×3**
+//! classification set: each class renders a distinct colored figure
+//! (disc / ring / cross / stripes / checker in a class-specific
+//! palette) over a gradient background, with random jitter in position,
+//! scale, orientation, and pixel noise. The tensor shapes match CIFAR
+//! exactly (HWC rows, `(y·32 + x)·3 + c` indexing — the layout
+//! [`crate::conv`] convolves), so every conv code path runs at the real
+//! workload's geometry.
+//!
+//! Generation is deterministic from a seed.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::bf16::Matrix;
+use crate::io::{Tensor, TensorFile};
+use crate::util::rng::Xoshiro256;
+
+/// Image side length (CIFAR-compatible).
+pub const CIFAR_SIDE: usize = 32;
+/// Color channels.
+pub const CIFAR_CHANNELS: usize = 3;
+/// Flattened HWC image size = 3072.
+pub const CIFAR_FEATURES: usize = CIFAR_SIDE * CIFAR_SIDE * CIFAR_CHANNELS;
+/// Number of classes.
+pub const CIFAR_CLASSES: usize = 10;
+
+/// Per-class base colors (RGB in [0,1]) — chosen pairwise distinct.
+const PALETTE: [[f32; 3]; CIFAR_CLASSES] = [
+    [0.90, 0.15, 0.15],
+    [0.15, 0.80, 0.20],
+    [0.20, 0.30, 0.95],
+    [0.95, 0.85, 0.10],
+    [0.80, 0.20, 0.85],
+    [0.10, 0.85, 0.85],
+    [0.95, 0.55, 0.10],
+    [0.55, 0.35, 0.15],
+    [0.45, 0.50, 0.95],
+    [0.65, 0.90, 0.40],
+];
+
+/// Render one image of `class` into a 3072-value HWC row.
+fn render_image(class: usize, rng: &mut Xoshiro256) -> Vec<f32> {
+    let side = CIFAR_SIDE as f32;
+    let fg = PALETTE[class];
+    let bg = PALETTE[(class + 3) % CIFAR_CLASSES];
+    // Jittered figure placement.
+    let cx = side / 2.0 + rng.uniform(-4.0, 4.0);
+    let cy = side / 2.0 + rng.uniform(-4.0, 4.0);
+    let radius = rng.uniform(6.0, 11.0);
+    let angle = rng.uniform(0.0, std::f32::consts::PI);
+    let (sin_a, cos_a) = angle.sin_cos();
+    let freq = 0.35 + 0.1 * (class % 3) as f32;
+    let phase = rng.uniform(0.0, 6.0);
+    let mut img = vec![0.0f32; CIFAR_FEATURES];
+    for y in 0..CIFAR_SIDE {
+        for x in 0..CIFAR_SIDE {
+            let (xf, yf) = (x as f32, y as f32);
+            // Background: soft gradient in the class's secondary color.
+            let g = 0.25 + 0.5 * (xf * cos_a + yf * sin_a) / side;
+            let (dx, dy) = (xf - cx, yf - cy);
+            let r = (dx * dx + dy * dy).sqrt();
+            // Figure mask per class family.
+            let inside = match class % 5 {
+                0 => r < radius,                                // disc
+                1 => r < radius && r > radius * 0.55,           // ring
+                2 => dx.abs() < 2.5 || dy.abs() < 2.5,          // cross
+                3 => ((xf * cos_a + yf * sin_a) * freq + phase) // stripes
+                    .sin()
+                    > 0.0,
+                _ => {
+                    // checker
+                    (((xf / 4.0) as usize) + ((yf / 4.0) as usize)) % 2 == 0
+                }
+            };
+            let base = y * CIFAR_SIDE * CIFAR_CHANNELS + x * CIFAR_CHANNELS;
+            for c in 0..CIFAR_CHANNELS {
+                let v = if inside { fg[c] } else { bg[c] * g };
+                let noise = rng.uniform(-0.04, 0.04);
+                img[base + c] = (v + noise).clamp(0.0, 1.0);
+            }
+        }
+    }
+    img
+}
+
+/// An in-memory labelled 32×32×3 image set.
+#[derive(Debug, Clone)]
+pub struct SynthCifar {
+    /// `n × 3072` HWC images, values in `[0, 1]`.
+    pub images: Matrix,
+    /// `n` labels in `0..10`.
+    pub labels: Vec<usize>,
+}
+
+impl SynthCifar {
+    /// Generate `n` images with balanced classes, deterministic in `seed`.
+    pub fn generate(n: usize, seed: u64) -> Self {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut images = Matrix::zeros(n, CIFAR_FEATURES);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            let class = i % CIFAR_CLASSES;
+            let img = render_image(class, &mut rng);
+            images.row_mut(i).copy_from_slice(&img);
+            labels.push(class);
+        }
+        // Shuffle rows so batches are class-mixed.
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        let mut shuffled = Matrix::zeros(n, CIFAR_FEATURES);
+        let mut shuffled_labels = vec![0usize; n];
+        for (dst, &src) in order.iter().enumerate() {
+            shuffled.row_mut(dst).copy_from_slice(images.row(src));
+            shuffled_labels[dst] = labels[src];
+        }
+        Self {
+            images: shuffled,
+            labels: shuffled_labels,
+        }
+    }
+
+    /// Number of examples.
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Borrow the images matrix (n × 3072).
+    pub fn images_f32(&self) -> &Matrix {
+        &self.images
+    }
+
+    /// Split off the first `n` examples as a new set.
+    pub fn take(&self, n: usize) -> Self {
+        let n = n.min(self.len());
+        let mut images = Matrix::zeros(n, CIFAR_FEATURES);
+        for i in 0..n {
+            images.row_mut(i).copy_from_slice(self.images.row(i));
+        }
+        Self {
+            images,
+            labels: self.labels[..n].to_vec(),
+        }
+    }
+
+    /// Serialize as a `.bwt` file (`images` f32 n×3072, `labels` f32 n).
+    pub fn to_tensor_file(&self) -> TensorFile {
+        let mut tf = TensorFile::new();
+        tf.insert(
+            "images",
+            Tensor::from_f32(&[self.len(), CIFAR_FEATURES], &self.images.data).unwrap(),
+        );
+        let labels_f: Vec<f32> = self.labels.iter().map(|&l| l as f32).collect();
+        tf.insert(
+            "labels",
+            Tensor::from_f32(&[self.len()], &labels_f).unwrap(),
+        );
+        tf
+    }
+
+    /// Load from a `.bwt` file written by [`Self::to_tensor_file`].
+    pub fn from_tensor_file(tf: &TensorFile) -> Result<Self> {
+        let images = tf.get("images")?.to_matrix()?;
+        ensure!(
+            images.cols == CIFAR_FEATURES,
+            "images must be n×{CIFAR_FEATURES}, got n×{}",
+            images.cols
+        );
+        let labels: Vec<usize> = tf
+            .get("labels")?
+            .to_f32_vec()?
+            .into_iter()
+            .map(|x| x as usize)
+            .collect();
+        ensure!(
+            labels.len() == images.rows,
+            "label count {} != image count {}",
+            labels.len(),
+            images.rows
+        );
+        ensure!(
+            labels.iter().all(|&l| l < CIFAR_CLASSES),
+            "label out of range"
+        );
+        Ok(Self { images, labels })
+    }
+
+    /// Save to disk.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        self.to_tensor_file().save(path)
+    }
+
+    /// Load from disk.
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_tensor_file(&TensorFile::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_shapes_and_determinism() {
+        let a = SynthCifar::generate(30, 9);
+        let b = SynthCifar::generate(30, 9);
+        let c = SynthCifar::generate(30, 10);
+        assert_eq!(a.len(), 30);
+        assert_eq!(a.images.cols, 3072);
+        assert_eq!(a.images.data, b.images.data);
+        assert_eq!(a.labels, b.labels);
+        assert_ne!(a.images.data, c.images.data);
+    }
+
+    #[test]
+    fn pixels_in_unit_range_and_colored() {
+        let d = SynthCifar::generate(20, 3);
+        assert!(d.images.data.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        // Images are genuinely colored: channels differ somewhere.
+        for i in 0..d.len() {
+            let row = d.images.row(i);
+            let diff = (0..CIFAR_SIDE * CIFAR_SIDE)
+                .any(|p| (row[p * 3] - row[p * 3 + 1]).abs() > 0.1);
+            assert!(diff, "image {i} is grayscale");
+        }
+    }
+
+    #[test]
+    fn classes_balanced() {
+        let d = SynthCifar::generate(100, 4);
+        let mut counts = [0usize; CIFAR_CLASSES];
+        for &l in &d.labels {
+            counts[l] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10), "{counts:?}");
+    }
+
+    #[test]
+    fn classes_visually_distinct() {
+        // Mean image of each class differs substantially from every
+        // other class's mean — the classes are separable in principle.
+        let d = SynthCifar::generate(100, 5);
+        let mut means = vec![vec![0.0f64; CIFAR_FEATURES]; CIFAR_CLASSES];
+        let mut counts = [0usize; CIFAR_CLASSES];
+        for i in 0..d.len() {
+            let l = d.labels[i];
+            counts[l] += 1;
+            for (m, &v) in means[l].iter_mut().zip(d.images.row(i)) {
+                *m += v as f64;
+            }
+        }
+        for (m, &c) in means.iter_mut().zip(counts.iter()) {
+            for v in m.iter_mut() {
+                *v /= c as f64;
+            }
+        }
+        for a in 0..CIFAR_CLASSES {
+            for b in a + 1..CIFAR_CLASSES {
+                let dist: f64 = means[a]
+                    .iter()
+                    .zip(means[b].iter())
+                    .map(|(x, y)| (x - y).abs())
+                    .sum();
+                assert!(
+                    dist / CIFAR_FEATURES as f64 > 0.02,
+                    "classes {a} and {b} look alike"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_file_roundtrip() {
+        let d = SynthCifar::generate(8, 6);
+        let back = SynthCifar::from_tensor_file(&d.to_tensor_file()).unwrap();
+        assert_eq!(back.labels, d.labels);
+        assert_eq!(back.images.data, d.images.data);
+    }
+
+    #[test]
+    fn take_subset() {
+        let d = SynthCifar::generate(15, 7);
+        let t = d.take(5);
+        assert_eq!(t.len(), 5);
+        assert_eq!(t.labels[..], d.labels[..5]);
+        assert_eq!(t.images.row(2), d.images.row(2));
+    }
+
+    #[test]
+    fn matches_cnn_hybrid_input() {
+        assert_eq!(
+            CIFAR_FEATURES,
+            crate::nn::NetworkConfig::cnn_hybrid().input_width()
+        );
+    }
+}

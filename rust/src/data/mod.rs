@@ -14,8 +14,11 @@
 //! from `make artifacts`) and shared by the Python trainer and the rust
 //! evaluation, so both sides see the same distribution.
 
+pub mod cifar;
 pub mod glyphs;
 pub mod render;
+
+pub use cifar::{SynthCifar, CIFAR_CHANNELS, CIFAR_CLASSES, CIFAR_FEATURES, CIFAR_SIDE};
 
 use std::path::Path;
 

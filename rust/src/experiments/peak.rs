@@ -20,6 +20,7 @@ pub fn sustained_gops(mode: Mode, batch: usize) -> Result<f64> {
     let cfg = NetworkConfig {
         sizes: vec![1024, 1024],
         precisions: vec![precision],
+        front: None,
     };
     let mut net = Network::random(&cfg, 7);
     // Strip the epilogue: measure the raw matmul engine.

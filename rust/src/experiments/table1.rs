@@ -48,7 +48,7 @@ pub fn measure_variant(
     // Timing: one representative batch per batch size (cycle counts are
     // input-independent, so a single run suffices).
     for &batch in &[1usize, 256] {
-        let x = crate::bf16::Matrix::zeros(batch, net.config.sizes[0]);
+        let x = crate::bf16::Matrix::zeros(batch, net.config.input_width());
         let mut accel = Accelerator::new(AcceleratorConfig::default());
         let report = accel.run_network(net, &x, batch)?;
         let ips = report.inferences_per_sec(CLOCK_HZ);

@@ -50,6 +50,7 @@
 
 pub mod bf16;
 pub mod binary;
+pub mod conv;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;

@@ -616,21 +616,166 @@ mod sigterm {
     }
 }
 
-/// Parse the `--random` layer-size list (`12,16,4`).
-fn parse_sizes(csv: &str) -> Result<Vec<usize>> {
-    let sizes: Vec<usize> = csv
-        .split(',')
-        .map(|s| {
-            s.trim()
-                .parse::<usize>()
-                .map_err(|_| anyhow::anyhow!("bad layer size '{}' in --random", s.trim()))
-        })
-        .collect::<Result<_>>()?;
-    anyhow::ensure!(
-        sizes.len() >= 2 && sizes.iter().all(|&n| n > 0),
-        "--random needs at least two nonzero layer sizes"
-    );
-    Ok(sizes)
+/// Parse the `--random` model spec into a [`NetworkConfig`].
+///
+/// Dense form (back-compatible): comma-separated layer sizes
+/// (`12,16,4`); suffix a size with `:bin` to make the matmul *into*
+/// that layer binary (`784,1024:bin,10`). All matmuls default to bf16.
+///
+/// Conv form: the first segment is an `HxWxC` image shape, followed by
+/// front stages — `conv:OC:K:S:P` (optional `:bin`/`:bf16` precision),
+/// `pool:K:S`, then a mandatory `flatten` — and the dense sizes:
+///
+/// ```text
+/// 32x32x3,conv:16:3:1:1,pool:2:2,conv:16:3:1:1:bin,pool:2:2,flatten,128:bin,10
+/// ```
+///
+/// The dense trunk's input width is derived from the front, so it is
+/// not written in the spec.
+fn parse_model_spec(csv: &str) -> Result<NetworkConfig> {
+    use beanna::conv::{ConvFront, FrontSpec, ImageShape};
+    use beanna::nn::Precision;
+    let parse_num = |s: &str, what: &str| -> Result<usize> {
+        let n = s
+            .parse::<usize>()
+            .map_err(|_| anyhow::anyhow!("bad {what} '{s}' in --random"))?;
+        anyhow::ensure!(n > 0, "{what} must be nonzero in --random");
+        Ok(n)
+    };
+    let parse_prec = |s: &str| -> Result<Precision> {
+        match s {
+            "bin" => Ok(Precision::Binary),
+            "bf16" => Ok(Precision::Bf16),
+            other => bail!("bad precision '{other}' in --random (use bin | bf16)"),
+        }
+    };
+    let segs: Vec<&str> = csv.split(',').map(str::trim).collect();
+    let mut input: Option<ImageShape> = None;
+    let mut stages: Vec<FrontSpec> = Vec::new();
+    let mut flattened = false;
+    let mut dense: Vec<(usize, Option<Precision>)> = Vec::new();
+    for (si, seg) in segs.iter().enumerate() {
+        let fields: Vec<&str> = seg.split(':').collect();
+        match fields[0] {
+            shape if si == 0 && shape.contains('x') => {
+                anyhow::ensure!(
+                    fields.len() == 1,
+                    "the image shape takes no suffix, got '{seg}'"
+                );
+                let dims: Vec<usize> = shape
+                    .split('x')
+                    .map(|d| parse_num(d, "image dimension"))
+                    .collect::<Result<_>>()?;
+                anyhow::ensure!(
+                    dims.len() == 3,
+                    "image shape must be HxWxC, got '{shape}'"
+                );
+                input = Some(ImageShape::new(dims[0], dims[1], dims[2]));
+            }
+            "conv" => {
+                anyhow::ensure!(
+                    input.is_some() && !flattened,
+                    "conv stages need an HxWxC image first and must precede `flatten`"
+                );
+                anyhow::ensure!(
+                    fields.len() == 5 || fields.len() == 6,
+                    "conv stage is conv:OC:K:S:P[:bin|bf16], got '{seg}'"
+                );
+                stages.push(FrontSpec::Conv2d {
+                    out_channels: parse_num(fields[1], "conv channels")?,
+                    kernel: parse_num(fields[2], "conv kernel")?,
+                    stride: parse_num(fields[3], "conv stride")?,
+                    padding: fields[4]
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("bad conv padding '{}'", fields[4]))?,
+                    precision: match fields.get(5) {
+                        Some(p) => parse_prec(p)?,
+                        None => Precision::Bf16,
+                    },
+                });
+            }
+            "pool" => {
+                anyhow::ensure!(
+                    input.is_some() && !flattened,
+                    "pool stages need an HxWxC image first and must precede `flatten`"
+                );
+                anyhow::ensure!(
+                    fields.len() == 3,
+                    "pool stage is pool:K:S, got '{seg}'"
+                );
+                stages.push(FrontSpec::MaxPool {
+                    kernel: parse_num(fields[1], "pool kernel")?,
+                    stride: parse_num(fields[2], "pool stride")?,
+                });
+            }
+            "flatten" => {
+                anyhow::ensure!(input.is_some(), "`flatten` needs an HxWxC image first");
+                anyhow::ensure!(fields.len() == 1, "`flatten` takes no fields, got '{seg}'");
+                stages.push(FrontSpec::Flatten);
+                flattened = true;
+            }
+            size => {
+                anyhow::ensure!(
+                    input.is_none() || flattened,
+                    "dense sizes must come after `flatten` in a conv spec"
+                );
+                anyhow::ensure!(
+                    fields.len() <= 2,
+                    "dense size is SIZE[:bin|bf16], got '{seg}'"
+                );
+                let prec = match fields.get(1) {
+                    Some(p) => Some(parse_prec(p)?),
+                    None => None,
+                };
+                dense.push((parse_num(size, "layer size")?, prec));
+            }
+        }
+    }
+    let config = match input {
+        Some(_) => {
+            anyhow::ensure!(
+                flattened && !dense.is_empty(),
+                "conv spec needs `flatten` followed by at least one dense size"
+            );
+            let front = ConvFront {
+                input: input.unwrap(),
+                stages,
+            };
+            let mut sizes = vec![front.output_features()?];
+            let mut precisions = Vec::new();
+            for (size, prec) in dense {
+                sizes.push(size);
+                precisions.push(prec.unwrap_or(Precision::Bf16));
+            }
+            NetworkConfig {
+                sizes,
+                precisions,
+                front: Some(front),
+            }
+        }
+        None => {
+            anyhow::ensure!(
+                dense.len() >= 2,
+                "--random needs at least two nonzero layer sizes"
+            );
+            anyhow::ensure!(
+                dense[0].1.is_none(),
+                "the input size takes no precision suffix"
+            );
+            let sizes: Vec<usize> = dense.iter().map(|&(s, _)| s).collect();
+            let precisions = dense[1..]
+                .iter()
+                .map(|&(_, p)| p.unwrap_or(Precision::Bf16))
+                .collect();
+            NetworkConfig {
+                sizes,
+                precisions,
+                front: None,
+            }
+        }
+    };
+    config.validate()?;
+    Ok(config)
 }
 
 fn cmd_worker(args: Vec<String>) -> Result<()> {
@@ -640,8 +785,10 @@ fn cmd_worker(args: Vec<String>) -> Result<()> {
         .opt(
             "random",
             "",
-            "serve random weights with these layer sizes (e.g. 12,16,4) \
-             instead of --model; deterministic under --seed",
+            "serve random weights from a model spec instead of --model: \
+             dense sizes (`12,16,4`; `:bin` makes a matmul binary, e.g. \
+             `784,1024:bin,10`) or a conv front (`32x32x3,conv:8:3:1:1,\
+             pool:2:2,flatten,32,10`); deterministic under --seed",
         )
         .opt("seed", "7", "weight seed for --random")
         .opt(
@@ -662,13 +809,7 @@ fn cmd_worker(args: Vec<String>) -> Result<()> {
     let p = spec.parse_from(args)?;
     let net = match p.get("random").unwrap() {
         "" => Network::load(&ArtifactPaths::discover().weights(p.get("model").unwrap()))?,
-        csv => {
-            let sizes = parse_sizes(csv)?;
-            Network::random(
-                &NetworkConfig::uniform(&sizes, beanna::nn::Precision::Bf16),
-                p.get_u64("seed")?,
-            )
-        }
+        csv => Network::random(&parse_model_spec(csv)?, p.get_u64("seed")?),
     };
     let kind = p.get("backend").unwrap();
     let shards = p.get_usize("shards")?.max(1);
@@ -767,7 +908,7 @@ fn cmd_simulate(args: Vec<String>) -> Result<()> {
     if !trained {
         eprintln!("note: no trained weights found, simulating with random weights");
     }
-    let width = net.config.sizes[0];
+    let width = net.config.input_width();
     // Skewed mix: large and small commands interleaved — the shape that
     // separates queue-aware scheduling from blind rotation.
     let mix: Vec<usize> = (0..requests)
@@ -846,7 +987,7 @@ fn cmd_trace(args: Vec<String>) -> Result<()> {
     let mut accel = Accelerator::new(AcceleratorConfig::default());
     let run = accel.run_network(
         &net,
-        &beanna::bf16::Matrix::zeros(batch, net.config.sizes[0]),
+        &beanna::bf16::Matrix::zeros(batch, net.config.input_width()),
         batch,
     )?;
     let trace = beanna::sim::Trace::from_run(&run);
@@ -869,6 +1010,7 @@ fn cmd_selftest() -> Result<()> {
     let cfg = NetworkConfig {
         sizes: vec![40, 48, 48, 10],
         precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+        front: None,
     };
     let net = Network::random(&cfg, 99);
     let x = Matrix::from_vec(
@@ -889,4 +1031,81 @@ fn cmd_selftest() -> Result<()> {
         a.layers.len()
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use beanna::conv::FrontSpec;
+    use beanna::nn::Precision;
+
+    #[test]
+    fn parse_model_spec_plain_dense() {
+        let cfg = parse_model_spec("784,1024,10").unwrap();
+        assert_eq!(cfg.sizes, vec![784, 1024, 10]);
+        assert_eq!(cfg.precisions, vec![Precision::Bf16; 2]);
+        assert!(cfg.front.is_none());
+    }
+
+    #[test]
+    fn parse_model_spec_bin_suffix() {
+        let cfg = parse_model_spec("784, 1024:bin, 10:bf16").unwrap();
+        assert_eq!(cfg.sizes, vec![784, 1024, 10]);
+        assert_eq!(cfg.precisions, vec![Precision::Binary, Precision::Bf16]);
+    }
+
+    #[test]
+    fn parse_model_spec_conv_front() {
+        let cfg = parse_model_spec(
+            "32x32x3,conv:8:3:1:1,pool:2:2,conv:8:3:1:1:bin,pool:2:2,flatten,32:bin,10",
+        )
+        .unwrap();
+        let front = cfg.front.as_ref().unwrap();
+        assert_eq!(
+            (front.input.height, front.input.width, front.input.channels),
+            (32, 32, 3)
+        );
+        assert_eq!(front.stages.len(), 5);
+        match front.stages[2] {
+            FrontSpec::Conv2d {
+                out_channels,
+                kernel,
+                stride,
+                padding,
+                precision,
+            } => {
+                assert_eq!(
+                    (out_channels, kernel, stride, padding),
+                    (8, 3, 1, 1)
+                );
+                assert_eq!(precision, Precision::Binary);
+            }
+            ref other => panic!("expected conv, got {other:?}"),
+        }
+        // 32→pool→16→pool→8, 8 channels ⇒ 8·8·8 = 512 flattened.
+        assert_eq!(cfg.sizes, vec![512, 32, 10]);
+        assert_eq!(cfg.precisions, vec![Precision::Binary, Precision::Bf16]);
+    }
+
+    #[test]
+    fn parse_model_spec_rejects_malformed() {
+        // Suffix on the dense input size.
+        assert!(parse_model_spec("784:bin,10").is_err());
+        // Dense size before flatten in a conv spec.
+        assert!(parse_model_spec("8x8x1,conv:4:3:1:1,32,flatten,10").is_err());
+        // Missing flatten entirely.
+        assert!(parse_model_spec("8x8x1,conv:4:3:1:1,pool:2:2").is_err());
+        // Wrong field counts.
+        assert!(parse_model_spec("8x8x1,conv:4:3,flatten,10").is_err());
+        assert!(parse_model_spec("8x8x1,pool:2,flatten,10").is_err());
+        // Bad numbers / shapes.
+        assert!(parse_model_spec("8x8,conv:4:3:1:1,flatten,10").is_err());
+        assert!(parse_model_spec("12,0,4").is_err());
+        assert!(parse_model_spec("12").is_err());
+        // Padding must stay below the kernel (config validation).
+        assert!(parse_model_spec("8x8x1,conv:4:3:1:3,flatten,10").is_err());
+        // No suffixes on the image shape or flatten segments.
+        assert!(parse_model_spec("8x8x1:bin,conv:4:3:1:1,flatten,10").is_err());
+        assert!(parse_model_spec("8x8x1,conv:4:3:1:1,flatten:2,10").is_err());
+    }
 }

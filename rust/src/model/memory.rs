@@ -99,6 +99,7 @@ mod tests {
         let cfg = NetworkConfig {
             sizes: vec![9, 3],
             precisions: vec![crate::nn::Precision::Binary],
+            front: None,
         };
         // 9 bits → 2 bytes per neuron row, 3 neurons.
         assert_eq!(MemoryModel::of(&cfg).total_bytes(), 6);

@@ -266,8 +266,9 @@ impl DenseLayer {
 
     /// Apply [`Self::epilogue`] to every element of `m`, fanning out
     /// over row bands for wide outputs (elementwise → any split is
-    /// identical to the serial loop).
-    fn apply_epilogue(&self, m: &mut Matrix, par: Parallelism) {
+    /// identical to the serial loop). Crate-visible so conv layers can
+    /// run their direct-kernel counts through the same epilogue.
+    pub(crate) fn apply_epilogue(&self, m: &mut Matrix, par: Parallelism) {
         let n = m.cols;
         if n == 0 || m.rows == 0 {
             return;

@@ -29,7 +29,7 @@ pub mod network;
 
 pub use layer::{BatchNorm, DenseLayer, Precision};
 pub use metrics::{accuracy, argmax, confusion_matrix, cross_entropy};
-pub use network::{Network, NetworkConfig};
+pub use network::{FrontLayer, Network, NetworkConfig};
 
 /// hardtanh (eq. 3): clamp to [-1, 1].
 #[inline]

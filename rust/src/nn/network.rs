@@ -7,17 +7,26 @@ use anyhow::{ensure, Context, Result};
 
 use super::layer::{BatchNorm, DenseLayer, Precision};
 use crate::bf16::Matrix;
+use crate::conv::{maxpool_bits, maxpool_f32, ConvFront, ConvLayer, FrontSpec, ImageShape};
 use crate::io::{Tensor, TensorFile};
 use crate::util::rng::Xoshiro256;
 use crate::PAPER_LAYERS;
 
-/// Declarative network configuration: layer sizes + per-matmul precision.
+/// Declarative network configuration: an optional convolutional front
+/// (conv/pool/flatten stages) ahead of a dense trunk described by layer
+/// sizes + per-matmul precision.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct NetworkConfig {
-    /// Neuron counts per stage; `sizes.len() - 1` weight matrices.
+    /// Neuron counts per dense-trunk stage; `sizes.len() - 1` weight
+    /// matrices. With a conv front present, `sizes[0]` must equal the
+    /// front's flattened output feature count.
     pub sizes: Vec<usize>,
-    /// Precision of each weight matrix (`sizes.len() - 1` entries).
+    /// Precision of each trunk weight matrix (`sizes.len() - 1` entries).
     pub precisions: Vec<Precision>,
+    /// Optional convolutional front. `None` = plain MLP; the network
+    /// input is then `sizes[0]` wide, otherwise it is the front's HWC
+    /// image ([`NetworkConfig::input_width`]).
+    pub front: Option<ConvFront>,
 }
 
 impl NetworkConfig {
@@ -32,6 +41,7 @@ impl NetworkConfig {
                 Precision::Binary,
                 Precision::Bf16,
             ],
+            front: None,
         }
     }
 
@@ -40,6 +50,7 @@ impl NetworkConfig {
         Self {
             sizes: PAPER_LAYERS.to_vec(),
             precisions: vec![Precision::Bf16; 4],
+            front: None,
         }
     }
 
@@ -49,6 +60,83 @@ impl NetworkConfig {
         Self {
             sizes: sizes.to_vec(),
             precisions: vec![precision; sizes.len() - 1],
+            front: None,
+        }
+    }
+
+    /// Attach a convolutional front (builder style). The front's
+    /// flattened output must equal `sizes[0]` —
+    /// [`Self::validate`] enforces it.
+    pub fn with_front(mut self, front: ConvFront) -> Self {
+        self.front = Some(front);
+        self
+    }
+
+    /// A CIFAR-shaped hybrid CNN extending the paper's float-outer /
+    /// binary-hidden recipe to convolutions: bf16 conv stem, 2×2 pool,
+    /// binary conv, 2×2 pool, then a binary→bf16 dense trunk. Input is
+    /// the `data::SynthCifar` 32×32×3 image.
+    pub fn cnn_hybrid() -> Self {
+        Self {
+            sizes: vec![8 * 8 * 16, 128, 10],
+            precisions: vec![Precision::Binary, Precision::Bf16],
+            front: Some(ConvFront {
+                input: ImageShape::new(32, 32, 3),
+                stages: vec![
+                    FrontSpec::Conv2d {
+                        out_channels: 16,
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        precision: Precision::Bf16,
+                    },
+                    FrontSpec::MaxPool { kernel: 2, stride: 2 },
+                    FrontSpec::Conv2d {
+                        out_channels: 16,
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        precision: Precision::Binary,
+                    },
+                    FrontSpec::MaxPool { kernel: 2, stride: 2 },
+                    FrontSpec::Flatten,
+                ],
+            }),
+        }
+    }
+
+    /// Width of the network input: the front's flattened HWC image when
+    /// a conv front is present, else `sizes[0]`.
+    pub fn input_width(&self) -> usize {
+        match &self.front {
+            Some(f) => f.input.features(),
+            None => self.sizes[0],
+        }
+    }
+
+    /// Output class count (`sizes.last()`).
+    pub fn num_classes(&self) -> usize {
+        *self.sizes.last().expect("validated config has sizes")
+    }
+
+    /// Widest activation the device must hold resident: max over the
+    /// trunk sizes and (with a front) every front feature map — the
+    /// BRAM working-set bound used by the simulator's batch splitter.
+    pub fn max_features(&self) -> usize {
+        let trunk = self.sizes.iter().copied().max().unwrap_or(0);
+        match &self.front {
+            Some(f) => f
+                .shapes()
+                .map(|shapes| {
+                    shapes
+                        .iter()
+                        .map(|s| s.features())
+                        .max()
+                        .unwrap_or(0)
+                        .max(trunk)
+                })
+                .unwrap_or(trunk),
+            None => trunk,
         }
     }
 
@@ -70,33 +158,71 @@ impl NetworkConfig {
             self.sizes.iter().all(|&s| s > 0),
             "layer sizes must be positive"
         );
+        if let Some(front) = &self.front {
+            front.validate()?;
+            let flat = front.output_features()?;
+            ensure!(
+                flat == self.sizes[0],
+                "conv front flattens to {flat} features but the dense trunk expects {}",
+                self.sizes[0]
+            );
+        }
         Ok(())
     }
 
-    /// Total multiply-accumulate operations for one inference.
+    /// Total multiply-accumulate operations for one inference
+    /// (conv front + dense trunk).
     pub fn macs(&self) -> usize {
-        self.sizes.windows(2).map(|w| w[0] * w[1]).sum()
+        let front = self.front.as_ref().map_or(0, |f| f.macs());
+        front + self.sizes.windows(2).map(|w| w[0] * w[1]).sum::<usize>()
     }
 
-    /// Weight storage bytes under the Table II model.
+    /// Weight storage bytes under the Table II model (conv front +
+    /// dense trunk).
     pub fn weight_bytes(&self) -> usize {
-        self.sizes
-            .windows(2)
-            .zip(self.precisions.iter())
-            .map(|(w, p)| (w[0] * w[1] * p.weight_bits()).div_ceil(8))
-            .sum()
+        let front = self.front.as_ref().map_or(0, |f| f.weight_bytes());
+        front
+            + self
+                .sizes
+                .windows(2)
+                .zip(self.precisions.iter())
+                .map(|(w, p)| (w[0] * w[1] * p.weight_bits()).div_ceil(8))
+                .sum::<usize>()
     }
 
-    /// Variant tag used in artifact names ("hybrid" / "fp" / "custom").
+    /// Variant tag used in artifact names ("hybrid" / "fp" / "cnn" /
+    /// "custom").
     pub fn variant_tag(&self) -> &'static str {
         if *self == Self::beanna_hybrid() {
             "hybrid"
         } else if *self == Self::beanna_fp() {
             "fp"
+        } else if *self == Self::cnn_hybrid() {
+            "cnn"
         } else {
             "custom"
         }
     }
+}
+
+/// One materialized stage of a network's convolutional front.
+#[derive(Debug, Clone)]
+pub enum FrontLayer {
+    /// 2-D convolution with its weights/BN engine.
+    Conv(ConvLayer),
+    /// Spatial max-pool over `input`-shaped maps. On packed sign
+    /// activations this is an AND of the window's bits —
+    /// `max(v…) < 0 ⟺ all vᵢ < 0` — bit-exact with the float max.
+    Pool {
+        /// Feature-map shape entering the pool.
+        input: ImageShape,
+        /// Window side.
+        kernel: usize,
+        /// Stride in both axes.
+        stride: usize,
+    },
+    /// HWC reinterpretation into the dense trunk — no data movement.
+    Flatten,
 }
 
 /// A concrete network: configuration + per-layer weights.
@@ -104,7 +230,9 @@ impl NetworkConfig {
 pub struct Network {
     /// Configuration this network was built from.
     pub config: NetworkConfig,
-    /// Layers in forward order.
+    /// Convolutional front stages in forward order (empty for MLPs).
+    pub front: Vec<FrontLayer>,
+    /// Dense-trunk layers in forward order.
     pub layers: Vec<DenseLayer>,
 }
 
@@ -114,6 +242,37 @@ impl Network {
     pub fn random(config: &NetworkConfig, seed: u64) -> Self {
         config.validate().expect("invalid config");
         let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut front = Vec::new();
+        if let Some(spec) = &config.front {
+            let shapes = spec.shapes().expect("validated front has shapes");
+            for (i, stage) in spec.stages.iter().enumerate() {
+                front.push(match *stage {
+                    FrontSpec::Conv2d { precision, .. } => {
+                        let cs = spec.conv_spec(i, shapes[i]);
+                        let fan_in = cs.patch_len();
+                        let std = (2.0 / fan_in as f32).sqrt();
+                        let data: Vec<f32> = rng
+                            .normal_vec(fan_in * cs.out_channels)
+                            .into_iter()
+                            .map(|x| x * std)
+                            .collect();
+                        let w = Matrix::from_vec(cs.out_channels, fan_in, data).unwrap();
+                        let bn = Some(BatchNorm::identity(cs.out_channels));
+                        let layer = match precision {
+                            Precision::Bf16 => ConvLayer::bf16(cs, w, bn, true),
+                            Precision::Binary => ConvLayer::binary(cs, &w, bn, true),
+                        };
+                        FrontLayer::Conv(layer.expect("validated conv spec"))
+                    }
+                    FrontSpec::MaxPool { kernel, stride } => FrontLayer::Pool {
+                        input: shapes[i],
+                        kernel,
+                        stride,
+                    },
+                    FrontSpec::Flatten => FrontLayer::Flatten,
+                });
+            }
+        }
         let n = config.num_layers();
         let mut layers = Vec::with_capacity(n);
         for i in 0..n {
@@ -139,8 +298,26 @@ impl Network {
         }
         Self {
             config: config.clone(),
+            front,
             layers,
         }
+    }
+
+    /// True when every stage strictly after front stage `si` consumes
+    /// only activation **signs** — i.e. the next conv (skipping pools
+    /// and flatten, which are sign-preserving on the packed path) or,
+    /// past the front, the first dense layer, is binary. A binary conv
+    /// at `si` may then emit packed bits instead of float maps.
+    fn streams_past_front_stage(&self, si: usize) -> bool {
+        for stage in &self.front[si + 1..] {
+            match stage {
+                FrontLayer::Conv(c) => return c.precision() == Precision::Binary,
+                FrontLayer::Pool { .. } | FrontLayer::Flatten => continue,
+            }
+        }
+        self.layers
+            .first()
+            .is_some_and(|l| l.precision == Precision::Binary)
     }
 
     /// Full forward pass: `x (B×in)` → logits `(B×out)`. Fans out
@@ -160,20 +337,61 @@ impl Network {
     /// is bit-identical to the naive layer-by-layer pass (asserted by
     /// `tests/integration_par_kernels.rs`) — the float intermediates it
     /// skips would have been binarized by sign anyway.
+    /// The same streaming applies across the conv front: a binary conv
+    /// whose downstream sign consumers are all binary emits packed sign
+    /// bits directly, pools operate on those bits as window-ANDs, and
+    /// the packed stream can continue straight into a leading binary
+    /// run of the dense trunk without ever expanding to floats.
     pub fn forward_with(
         &self,
         x: &Matrix,
         par: crate::util::par::Parallelism,
     ) -> Result<Matrix> {
         use crate::binary::BitMatrix;
+        // ---- Convolutional front ----
+        let mut h = x.clone();
+        let mut hb: Option<BitMatrix> = None;
+        for (si, stage) in self.front.iter().enumerate() {
+            match stage {
+                FrontLayer::Conv(conv) => {
+                    let stream = conv.precision() == Precision::Binary
+                        && self.streams_past_front_stage(si);
+                    match (hb.take(), stream) {
+                        (Some(xb), true) => {
+                            hb = Some(conv.forward_packed_to_bits_with(&xb, par)?)
+                        }
+                        (Some(xb), false) => h = conv.forward_packed_with(&xb, par)?,
+                        (None, true) => hb = Some(conv.forward_to_bits_with(&h, par)?),
+                        (None, false) => h = conv.forward_with(&h, par)?,
+                    }
+                }
+                FrontLayer::Pool {
+                    input,
+                    kernel,
+                    stride,
+                } => match hb.take() {
+                    Some(xb) => hb = Some(maxpool_bits(&xb, *input, *kernel, *stride, par)?),
+                    None => h = maxpool_f32(&h, *input, *kernel, *stride, par)?,
+                },
+                // HWC flatten is a pure reinterpretation of the row.
+                FrontLayer::Flatten => {}
+            }
+        }
+        // ---- Dense trunk ----
         let is_bin = |i: usize| self.layers[i].precision == Precision::Binary;
         let n = self.layers.len();
-        let mut h = x.clone();
         let mut i = 0;
         while i < n {
-            if is_bin(i) && i + 1 < n && is_bin(i + 1) {
+            // A packed stream out of the front only exists when the
+            // first trunk layer is binary (the stream decision looked
+            // ahead), so it enters the binary-run path directly.
+            if hb.is_some() || (is_bin(i) && i + 1 < n && is_bin(i + 1)) {
+                debug_assert!(is_bin(i));
                 // Binary run: pack once, stay packed between layers.
-                let mut xb = BitMatrix::from_matrix_par(&h, par);
+                let mut xb = match hb.take() {
+                    Some(xb) => xb,
+                    None => BitMatrix::from_matrix_par(&h, par),
+                };
                 while i + 1 < n && is_bin(i + 1) {
                     xb = self.layers[i].forward_packed_to_bits_with(&xb, par)?;
                     i += 1;
@@ -199,15 +417,90 @@ impl Network {
 
     /// Total weight storage bytes (Table II model).
     pub fn weight_bytes(&self) -> usize {
-        self.layers.iter().map(|l| l.weight_bytes()).sum()
+        let front: usize = self
+            .front
+            .iter()
+            .map(|s| match s {
+                FrontLayer::Conv(c) => c.weight_bytes(),
+                FrontLayer::Pool { .. } | FrontLayer::Flatten => 0,
+            })
+            .sum();
+        front + self.layers.iter().map(|l| l.weight_bytes()).sum::<usize>()
     }
 
     /// Serialize to a [`TensorFile`] using the exporter's naming scheme:
     /// `layer{i}/weight` (f32, out×in), `layer{i}/bn_scale`,
     /// `layer{i}/bn_shift`, plus `meta/precisions` (0 = bf16, 1 = binary)
-    /// and `meta/sizes`.
+    /// and `meta/sizes`. A conv front adds `front{i}/weight`
+    /// (f32, out_channels × patch_len, `(ky,kx,c)` patch order) with
+    /// optional `front{i}/bn_scale`/`front{i}/bn_shift`, and a
+    /// `meta/front` descriptor tensor of `stages + 1` rows × 6:
+    /// row 0 is the input image `[h, w, c, 0, 0, 0]`, then one row per
+    /// stage — conv `[1, out_c, kernel, stride, padding, precision]`,
+    /// pool `[2, kernel, stride, 0, 0, 0]`, flatten `[3, 0, 0, 0, 0, 0]`.
     pub fn to_tensor_file(&self) -> TensorFile {
         let mut tf = TensorFile::new();
+        if let Some(spec) = &self.config.front {
+            let mut desc = vec![
+                spec.input.height as f32,
+                spec.input.width as f32,
+                spec.input.channels as f32,
+                0.0,
+                0.0,
+                0.0,
+            ];
+            for stage in &spec.stages {
+                desc.extend_from_slice(&match *stage {
+                    FrontSpec::Conv2d {
+                        out_channels,
+                        kernel,
+                        stride,
+                        padding,
+                        precision,
+                    } => [
+                        1.0,
+                        out_channels as f32,
+                        kernel as f32,
+                        stride as f32,
+                        padding as f32,
+                        match precision {
+                            Precision::Bf16 => 0.0,
+                            Precision::Binary => 1.0,
+                        },
+                    ],
+                    FrontSpec::MaxPool { kernel, stride } => {
+                        [2.0, kernel as f32, stride as f32, 0.0, 0.0, 0.0]
+                    }
+                    FrontSpec::Flatten => [3.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+                });
+            }
+            tf.insert(
+                "meta/front",
+                Tensor::from_f32(&[spec.stages.len() + 1, 6], &desc).unwrap(),
+            );
+            for (i, stage) in self.front.iter().enumerate() {
+                if let FrontLayer::Conv(c) = stage {
+                    tf.insert(
+                        &format!("front{i}/weight"),
+                        Tensor::from_f32(
+                            &[c.dense.weights.rows, c.dense.weights.cols],
+                            &c.dense.weights.data,
+                        )
+                        .unwrap(),
+                    );
+                    if let Some(bn) = &c.dense.bn {
+                        tf.insert(
+                            &format!("front{i}/bn_scale"),
+                            Tensor::from_f32(&[bn.scale.len()], &bn.scale).unwrap(),
+                        );
+                        tf.insert(
+                            &format!("front{i}/bn_shift"),
+                            Tensor::from_f32(&[bn.shift.len()], &bn.shift).unwrap(),
+                        );
+                    }
+                }
+            }
+        }
         for (i, layer) in self.layers.iter().enumerate() {
             tf.insert(
                 &format!("layer{i}/weight"),
@@ -269,8 +562,66 @@ impl Network {
                 }
             })
             .collect();
-        let config = NetworkConfig { sizes, precisions };
+        let front_spec = match tf.tensors.get("meta/front") {
+            Some(t) => Some(Self::parse_front_desc(&t.to_f32_vec()?)?),
+            None => None,
+        };
+        let config = NetworkConfig {
+            sizes,
+            precisions,
+            front: front_spec,
+        };
         config.validate()?;
+        let mut front = Vec::new();
+        if let Some(spec) = &config.front {
+            let shapes = spec.shapes()?;
+            for (i, stage) in spec.stages.iter().enumerate() {
+                front.push(match *stage {
+                    FrontSpec::Conv2d { precision, .. } => {
+                        let cs = spec.conv_spec(i, shapes[i]);
+                        let w = tf
+                            .get(&format!("front{i}/weight"))?
+                            .to_matrix()
+                            .with_context(|| format!("front{i}/weight"))?;
+                        ensure!(
+                            w.rows == cs.out_channels && w.cols == cs.patch_len(),
+                            "front{i} weight shape {}x{} != spec {}x{}",
+                            w.rows,
+                            w.cols,
+                            cs.out_channels,
+                            cs.patch_len()
+                        );
+                        let bn = match (
+                            tf.tensors.get(&format!("front{i}/bn_scale")),
+                            tf.tensors.get(&format!("front{i}/bn_shift")),
+                        ) {
+                            (Some(s), Some(b)) => Some(BatchNorm {
+                                scale: s.to_f32_vec()?,
+                                shift: b.to_f32_vec()?,
+                            }),
+                            _ => None,
+                        };
+                        if let Some(bn) = &bn {
+                            ensure!(
+                                bn.scale.len() == w.rows && bn.shift.len() == w.rows,
+                                "front{i} bn length mismatch"
+                            );
+                        }
+                        let layer = match precision {
+                            Precision::Bf16 => ConvLayer::bf16(cs, w, bn, true),
+                            Precision::Binary => ConvLayer::binary(cs, &w, bn, true),
+                        };
+                        FrontLayer::Conv(layer?)
+                    }
+                    FrontSpec::MaxPool { kernel, stride } => FrontLayer::Pool {
+                        input: shapes[i],
+                        kernel,
+                        stride,
+                    },
+                    FrontSpec::Flatten => FrontLayer::Flatten,
+                });
+            }
+        }
         let n = config.num_layers();
         let mut layers = Vec::with_capacity(n);
         for i in 0..n {
@@ -309,7 +660,46 @@ impl Network {
             };
             layers.push(layer);
         }
-        Ok(Self { config, layers })
+        Ok(Self {
+            config,
+            front,
+            layers,
+        })
+    }
+
+    /// Decode a `meta/front` descriptor tensor (see
+    /// [`Self::to_tensor_file`] for the row format).
+    fn parse_front_desc(desc: &[f32]) -> Result<ConvFront> {
+        ensure!(
+            desc.len() >= 12 && desc.len() % 6 == 0,
+            "meta/front must be (stages+1)x6 values, got {}",
+            desc.len()
+        );
+        let rows: Vec<&[f32]> = desc.chunks(6).collect();
+        let input = ImageShape::new(rows[0][0] as usize, rows[0][1] as usize, rows[0][2] as usize);
+        let mut stages = Vec::with_capacity(rows.len() - 1);
+        for row in &rows[1..] {
+            stages.push(match row[0] as usize {
+                1 => FrontSpec::Conv2d {
+                    out_channels: row[1] as usize,
+                    kernel: row[2] as usize,
+                    stride: row[3] as usize,
+                    padding: row[4] as usize,
+                    precision: if row[5] == 0.0 {
+                        Precision::Bf16
+                    } else {
+                        Precision::Binary
+                    },
+                },
+                2 => FrontSpec::MaxPool {
+                    kernel: row[1] as usize,
+                    stride: row[2] as usize,
+                },
+                3 => FrontSpec::Flatten,
+                k => anyhow::bail!("unknown front stage kind {k}"),
+            });
+        }
+        Ok(ConvFront { input, stages })
     }
 
     /// Load from a `.bwt` file.
@@ -350,18 +740,41 @@ mod tests {
         assert!(NetworkConfig {
             sizes: vec![10],
             precisions: vec![],
+            front: None,
         }
         .validate()
         .is_err());
         assert!(NetworkConfig {
             sizes: vec![10, 5],
             precisions: vec![],
+            front: None,
         }
         .validate()
         .is_err());
         assert!(NetworkConfig {
             sizes: vec![10, 0],
             precisions: vec![Precision::Bf16],
+            front: None,
+        }
+        .validate()
+        .is_err());
+        // Front whose flattened output disagrees with the trunk input.
+        assert!(NetworkConfig {
+            sizes: vec![10, 5],
+            precisions: vec![Precision::Bf16],
+            front: Some(ConvFront {
+                input: ImageShape::new(4, 4, 1),
+                stages: vec![
+                    FrontSpec::Conv2d {
+                        out_channels: 2,
+                        kernel: 3,
+                        stride: 1,
+                        padding: 0,
+                        precision: Precision::Bf16,
+                    },
+                    FrontSpec::Flatten,
+                ],
+            }),
         }
         .validate()
         .is_err());
@@ -393,6 +806,7 @@ mod tests {
         let cfg = NetworkConfig {
             sizes: vec![6, 9, 4],
             precisions: vec![Precision::Bf16, Precision::Binary],
+            front: None,
         };
         let net = Network::random(&cfg, 3);
         let tf = net.to_tensor_file();
@@ -423,6 +837,110 @@ mod tests {
             .data
             .iter()
             .all(|&w| w == 1.0 || w == -1.0));
+    }
+
+    /// 6×6×2 mini-CNN mirroring [`NetworkConfig::cnn_hybrid`]'s shape:
+    /// conv stem → pool → conv → flatten → binary→bf16 trunk.
+    fn tiny_cnn(stem: Precision) -> NetworkConfig {
+        NetworkConfig {
+            sizes: vec![2 * 2 * 4, 8, 5],
+            precisions: vec![Precision::Binary, Precision::Bf16],
+            front: Some(ConvFront {
+                input: ImageShape::new(6, 6, 2),
+                stages: vec![
+                    FrontSpec::Conv2d {
+                        out_channels: 3,
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        precision: stem,
+                    },
+                    FrontSpec::MaxPool { kernel: 2, stride: 2 },
+                    FrontSpec::Conv2d {
+                        out_channels: 4,
+                        kernel: 2,
+                        stride: 1,
+                        padding: 0,
+                        precision: Precision::Binary,
+                    },
+                    FrontSpec::Flatten,
+                ],
+            }),
+        }
+    }
+
+    #[test]
+    fn cnn_hybrid_config() {
+        let cfg = NetworkConfig::cnn_hybrid();
+        cfg.validate().unwrap();
+        assert_eq!(cfg.variant_tag(), "cnn");
+        assert_eq!(cfg.input_width(), 32 * 32 * 3);
+        assert_eq!(cfg.num_classes(), 10);
+        // Widest resident activation is the 32×32×16 stem output.
+        assert_eq!(cfg.max_features(), 32 * 32 * 16);
+        // Front MACs dominate the dense trunk.
+        assert!(cfg.macs() > 1024 * 128 + 128 * 10);
+        assert!(cfg.weight_bytes() > 0);
+    }
+
+    #[test]
+    fn front_streaming_matches_naive_pass() {
+        use crate::util::par::Parallelism;
+        for stem in [Precision::Bf16, Precision::Binary] {
+            let cfg = tiny_cnn(stem);
+            cfg.validate().unwrap();
+            let net = Network::random(&cfg, 21);
+            let x = Matrix::from_vec(
+                3,
+                cfg.input_width(),
+                Xoshiro256::seed_from_u64(9).normal_vec(3 * cfg.input_width()),
+            )
+            .unwrap();
+            // Naive pass: every stage through its float path.
+            let par = Parallelism::serial();
+            let mut h = x.clone();
+            for stage in &net.front {
+                match stage {
+                    FrontLayer::Conv(c) => h = c.forward_with(&h, par).unwrap(),
+                    FrontLayer::Pool {
+                        input,
+                        kernel,
+                        stride,
+                    } => h = maxpool_f32(&h, *input, *kernel, *stride, par).unwrap(),
+                    FrontLayer::Flatten => {}
+                }
+            }
+            for layer in &net.layers {
+                h = layer.forward_with(&h, par).unwrap();
+            }
+            // Streaming pass must match bit-for-bit at any worker count.
+            for workers in [1usize, 3] {
+                let par = if workers == 1 {
+                    Parallelism::serial()
+                } else {
+                    Parallelism::fixed(workers)
+                };
+                let y = net.forward_with(&x, par).unwrap();
+                assert_eq!(y.data, h.data, "stem {stem:?} workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn front_tensor_roundtrip() {
+        let cfg = tiny_cnn(Precision::Bf16);
+        let net = Network::random(&cfg, 13);
+        let back = Network::from_tensor_file(&net.to_tensor_file()).unwrap();
+        assert_eq!(back.config, cfg);
+        assert_eq!(back.front.len(), net.front.len());
+        let x = Matrix::from_vec(
+            2,
+            cfg.input_width(),
+            Xoshiro256::seed_from_u64(4).normal_vec(2 * cfg.input_width()),
+        )
+        .unwrap();
+        assert_eq!(net.forward(&x).unwrap(), back.forward(&x).unwrap());
+        assert_eq!(net.weight_bytes(), back.weight_bytes());
     }
 
     #[test]

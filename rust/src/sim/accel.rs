@@ -13,7 +13,9 @@ use super::systolic::SystolicArray;
 use super::timing::TimingBreakdown;
 use super::xact;
 use crate::bf16::Matrix;
-use crate::nn::{DenseLayer, Network, Precision};
+use crate::conv::{im2col, maxpool_f32, ConvLayer};
+use crate::nn::{DenseLayer, FrontLayer, Network, Precision};
+use crate::util::par::Parallelism;
 
 /// Aggregated activity counters for the power model.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
@@ -84,14 +86,44 @@ pub(crate) fn validate_command(
     net: &Network,
     batch: usize,
 ) -> Result<()> {
+    use super::axi::LayerKind;
     ensure!(cmd.batch == batch, "programmed batch mismatch");
     ensure!(
-        cmd.layers.len() == net.layers.len(),
+        cmd.layers.len() == net.front.len() + net.layers.len(),
         "programmed layer count mismatch"
     );
-    for (desc, layer) in cmd.layers.iter().zip(net.layers.iter()) {
+    let (front_descs, dense_descs) = cmd.layers.split_at(net.front.len());
+    for (desc, stage) in front_descs.iter().zip(net.front.iter()) {
+        let ok = match stage {
+            FrontLayer::Conv(c) => {
+                desc.kind == LayerKind::Conv
+                    && desc.in_features == c.spec.patch_len()
+                    && desc.out_features == c.spec.out_channels
+                    && desc.binary == (c.precision() == Precision::Binary)
+                    && desc.kernel == c.spec.kernel
+                    && desc.stride == c.spec.stride
+                    && desc.padding == c.spec.padding
+                    && desc.in_height == c.spec.input.height
+                    && desc.in_width == c.spec.input.width
+            }
+            FrontLayer::Pool {
+                input,
+                kernel,
+                stride,
+            } => {
+                desc.kind == LayerKind::Pool
+                    && desc.in_features == input.features()
+                    && desc.kernel == *kernel
+                    && desc.stride == *stride
+            }
+            FrontLayer::Flatten => desc.kind == LayerKind::Flatten,
+        };
+        ensure!(ok, "programmed front-stage descriptor mismatch");
+    }
+    for (desc, layer) in dense_descs.iter().zip(net.layers.iter()) {
         ensure!(
-            desc.in_features == layer.in_features()
+            desc.kind == LayerKind::Dense
+                && desc.in_features == layer.in_features()
                 && desc.out_features == layer.out_features()
                 && desc.binary == (layer.precision == Precision::Binary),
             "programmed layer descriptor mismatch"
@@ -150,8 +182,9 @@ impl Accelerator {
     ) -> Result<RunReport> {
         let batch = input.rows;
         ensure!(batch > 0, "empty batch");
-        // Rows whose double-buffered bf16 working set fits the BRAM.
-        let max_feat = net.config.sizes.iter().copied().max().unwrap();
+        // Rows whose double-buffered bf16 working set fits the BRAM
+        // (with a conv front, the widest feature map bounds the set).
+        let max_feat = net.config.max_features();
         let bram_limit = (self.config.act_bram_bytes / (2 * max_feat * 2)).max(1);
         let per_pass = max_batch_per_pass.clamp(1, bram_limit);
         if batch > per_pass {
@@ -211,10 +244,10 @@ impl Accelerator {
     fn run_network_single(&mut self, net: &Network, input: &Matrix) -> Result<RunReport> {
         let batch = input.rows;
         ensure!(
-            input.cols == net.config.sizes[0],
+            input.cols == net.config.input_width(),
             "input width {} != network input {}",
             input.cols,
-            net.config.sizes[0]
+            net.config.input_width()
         );
         let mut activity = Activity::default();
         let mut breakdown = TimingBreakdown::default();
@@ -222,7 +255,7 @@ impl Accelerator {
 
         // Steps 1–2: stage input activations from off-chip (bf16).
         let in_bytes = batch * input.cols * 2;
-        let max_feat = net.config.sizes.iter().copied().max().unwrap();
+        let max_feat = net.config.max_features();
         // Double-buffered layer I/O working set must fit the BRAM.
         self.act_bram.alloc(2 * batch * max_feat * 2)?;
         breakdown.input_stage += self
@@ -232,14 +265,50 @@ impl Accelerator {
         activity.offchip_bytes += in_bytes as u64;
         activity.bram_bytes += in_bytes as u64;
 
-        // Steps 3–10: layers.
+        // Conv front: each conv is lowered onto the array as a patch
+        // GEMM (one array pass per im2col row); pools run as comparator
+        // passes in the activation/normalization units, and flatten is
+        // a pure reinterpretation of the HWC rows already in BRAM.
         let mut acts = input.clone();
-        for (i, layer) in net.layers.iter().enumerate() {
-            let (out, report, layer_activity) = self.run_layer(i, layer, &acts)?;
+        let mut li = 0;
+        for stage in &net.front {
+            match stage {
+                FrontLayer::Conv(c) => {
+                    let (out, report, layer_activity) = self.run_conv_layer(li, c, &acts)?;
+                    breakdown.add(&report.timing);
+                    activity.add(&layer_activity);
+                    layer_reports.push(report);
+                    acts = out;
+                    li += 1;
+                }
+                FrontLayer::Pool {
+                    input: shape,
+                    kernel,
+                    stride,
+                } => {
+                    let out = maxpool_f32(&acts, *shape, *kernel, *stride, Parallelism::serial())?;
+                    // One comparator op per window element per output,
+                    // on the control/epilogue path.
+                    breakdown.control += (batch * out.cols * kernel * kernel) as u64;
+                    let in_bytes = batch * acts.cols * 2;
+                    let out_bytes = batch * out.cols * 2;
+                    self.act_bram.read(in_bytes);
+                    self.act_bram.write(out_bytes);
+                    activity.bram_bytes += (in_bytes + out_bytes) as u64;
+                    acts = out;
+                }
+                FrontLayer::Flatten => {}
+            }
+        }
+
+        // Steps 3–10: dense trunk layers.
+        for layer in net.layers.iter() {
+            let (out, report, layer_activity) = self.run_layer(li, layer, &acts)?;
             breakdown.add(&report.timing);
             activity.add(&layer_activity);
             layer_reports.push(report);
             acts = out;
+            li += 1;
         }
 
         // Step 11: write results off-chip.
@@ -356,6 +425,25 @@ impl Accelerator {
             },
             activity,
         ))
+    }
+
+    /// Execute one conv-front layer by lowering onto the dense path:
+    /// im2col the feature maps (modeling the address generator's patch
+    /// walk), run the patch GEMM through [`Self::run_layer`] — patch
+    /// rows are batch rows to the array — and regroup the output into
+    /// `B × (OH·OW·OC)` HWC maps (free: the row order already matches).
+    fn run_conv_layer(
+        &mut self,
+        index: usize,
+        conv: &ConvLayer,
+        input: &Matrix,
+    ) -> Result<(Matrix, LayerReport, Activity)> {
+        let batch = input.rows;
+        let patches = im2col::im2col_f32(input, &conv.spec, Parallelism::serial())?;
+        let (pre, report, activity) = self.run_layer(index, &conv.dense, &patches)?;
+        let out = Matrix::from_vec(batch, conv.out_features(), pre.data)
+            .expect("patch rows regroup to whole feature maps");
+        Ok((out, report, activity))
     }
 
     /// RT-engine layer execution: iterate blocks through the cycle-exact
@@ -501,6 +589,7 @@ mod tests {
         NetworkConfig {
             sizes: vec![20, 24, 24, 6],
             precisions: vec![P::Bf16, P::Binary, P::Bf16],
+            front: None,
         }
     }
 
@@ -548,6 +637,7 @@ mod tests {
         let cfg = NetworkConfig {
             sizes: vec![30, 40, 7],
             precisions: vec![P::Binary, P::Binary],
+            front: None,
         };
         let net = Network::random(&cfg, 21);
         let x = Matrix::from_vec(
@@ -559,6 +649,65 @@ mod tests {
         let mut a_rt = Accelerator::new(AcceleratorConfig::cycle_exact());
         let r = a_rt.run_network(&net, &x, 3).unwrap();
         assert_eq!(r.outputs, net.forward(&x).unwrap());
+    }
+
+    fn small_cnn_config() -> NetworkConfig {
+        use crate::conv::{ConvFront, FrontSpec, ImageShape};
+        NetworkConfig {
+            sizes: vec![2 * 2 * 4, 8, 5],
+            precisions: vec![P::Binary, P::Bf16],
+            front: Some(ConvFront {
+                input: ImageShape::new(6, 6, 2),
+                stages: vec![
+                    FrontSpec::Conv2d {
+                        out_channels: 3,
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        precision: P::Bf16,
+                    },
+                    FrontSpec::MaxPool { kernel: 2, stride: 2 },
+                    FrontSpec::Conv2d {
+                        out_channels: 4,
+                        kernel: 2,
+                        stride: 1,
+                        padding: 0,
+                        precision: P::Binary,
+                    },
+                    FrontSpec::Flatten,
+                ],
+            }),
+        }
+    }
+
+    #[test]
+    fn cnn_front_matches_nn_reference() {
+        let cfg = small_cnn_config();
+        let net = Network::random(&cfg, 31);
+        let x = Matrix::from_vec(
+            3,
+            cfg.input_width(),
+            crate::util::rng::Xoshiro256::seed_from_u64(6).normal_vec(3 * cfg.input_width()),
+        )
+        .unwrap();
+        let expect = net.forward(&x).unwrap();
+        let mut a_x = Accelerator::new(AcceleratorConfig::default());
+        let r = a_x.run_network(&net, &x, 3).unwrap();
+        assert_eq!(r.outputs, expect, "conv lowering must be bit-exact");
+        // Reports: 2 convs + 2 dense layers; pools show up as control
+        // cycles, not layer reports.
+        assert_eq!(r.layers.len(), 4);
+        assert!(r.breakdown.control > 0);
+        // Cycle-exact engine agrees on outputs and cycles.
+        let mut a_rt = Accelerator::new(AcceleratorConfig::cycle_exact());
+        let r_rt = a_rt.run_network(&net, &x, 3).unwrap();
+        assert_eq!(r_rt.outputs, expect);
+        assert_eq!(r_rt.total_cycles, r.total_cycles);
+        // Multipass split keeps conv results identical.
+        let multi = Accelerator::new(AcceleratorConfig::default())
+            .run_network(&net, &x, 1)
+            .unwrap();
+        assert_eq!(multi.outputs, expect);
     }
 
     #[test]

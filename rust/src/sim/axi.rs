@@ -12,7 +12,7 @@
 
 use anyhow::{bail, ensure, Result};
 
-use crate::nn::{Network, Precision};
+use crate::nn::{FrontLayer, Network, Precision};
 
 /// Register address map (word-addressed, 32-bit registers).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,13 +30,21 @@ pub enum Reg {
     InputBase = 0x04,
     /// Output DRAM base address.
     OutputBase = 0x05,
-    /// Start of the layer-descriptor table (4 words per layer).
+    /// Start of the layer-descriptor table (6 words per layer).
     LayerTable = 0x10,
 }
 
 /// Words per layer descriptor in the table:
-/// `[in_features, out_features, flags, weight_base]`.
-pub const LAYER_DESC_WORDS: u32 = 4;
+/// `[in_features, out_features, flags, weight_base, geom0, geom1]`.
+///
+/// For dense layers the two geometry words are zero. For conv/pool
+/// stages `geom0 = kernel | stride << 8 | padding << 16` and
+/// `geom1 = in_height | in_width << 16`; a conv descriptor's
+/// `in_features` is the patch length the array contracts over
+/// (`kernel²·C`, so `C = in_features / kernel²`) and its
+/// `out_features` is the output channel count — the GEMM the array
+/// actually executes. Pool descriptors carry flattened feature counts.
+pub const LAYER_DESC_WORDS: u32 = 6;
 
 /// Flag bits in a layer descriptor.
 pub mod flags {
@@ -46,6 +54,25 @@ pub mod flags {
     pub const ACTIVATION: u32 = 1 << 1;
     /// Apply folded batch-norm (bit 2).
     pub const BATCHNORM: u32 = 1 << 2;
+    /// Stage is a 2-D convolution lowered onto the array (bit 3).
+    pub const CONV: u32 = 1 << 3;
+    /// Stage is a spatial max-pool on the epilogue path (bit 4).
+    pub const POOL: u32 = 1 << 4;
+    /// Stage reinterprets HWC maps as a flat vector (bit 5).
+    pub const FLATTEN: u32 = 1 << 5;
+}
+
+/// Decoded stage kind (from the descriptor flag bits).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    /// Fully-connected matmul.
+    Dense,
+    /// 2-D convolution (im2col'd onto the array).
+    Conv,
+    /// Spatial max-pool.
+    Pool,
+    /// HWC flatten.
+    Flatten,
 }
 
 /// Device status codes surfaced in [`Reg::Status`].
@@ -64,9 +91,11 @@ pub enum Status {
 /// One decoded layer descriptor.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerDesc {
-    /// Input feature count.
+    /// Stage kind (dense / conv / pool / flatten).
+    pub kind: LayerKind,
+    /// Input feature count (patch length for conv stages).
     pub in_features: usize,
-    /// Output feature count.
+    /// Output feature count (channel count for conv stages).
     pub out_features: usize,
     /// Binary mode?
     pub binary: bool,
@@ -76,6 +105,16 @@ pub struct LayerDesc {
     pub batchnorm: bool,
     /// Weight base address in off-chip memory.
     pub weight_base: u32,
+    /// Window side (conv/pool stages; 0 for dense/flatten).
+    pub kernel: usize,
+    /// Window stride (conv/pool stages).
+    pub stride: usize,
+    /// Zero padding (conv stages).
+    pub padding: usize,
+    /// Input feature-map height (conv/pool stages).
+    pub in_height: usize,
+    /// Input feature-map width (conv/pool stages).
+    pub in_width: usize,
 }
 
 /// A fully decoded inference command.
@@ -153,9 +192,32 @@ impl AxiRegisterFile {
         self.regs[Reg::Status as usize] = s as u32;
     }
 
+    /// Write one 6-word descriptor at table slot `i`.
+    #[allow(clippy::too_many_arguments)]
+    fn write_desc(
+        &mut self,
+        i: u32,
+        in_features: u32,
+        out_features: u32,
+        f: u32,
+        wbase: u32,
+        geom0: u32,
+        geom1: u32,
+    ) -> Result<()> {
+        let base = Reg::LayerTable as u32 + i * LAYER_DESC_WORDS;
+        self.write(base, in_features)?;
+        self.write(base + 1, out_features)?;
+        self.write(base + 2, f)?;
+        self.write(base + 3, wbase)?;
+        self.write(base + 4, geom0)?;
+        self.write(base + 5, geom1)?;
+        Ok(())
+    }
+
     /// Driver-side helper: program a network run into the register file
-    /// (the §III-D step 1 sequence). Weight base addresses are assigned
-    /// contiguously from `weight_base` in layer order.
+    /// (the §III-D step 1 sequence). Conv-front stages are programmed
+    /// ahead of the dense trunk in execution order; weight base
+    /// addresses are assigned contiguously from `weight_base`.
     pub fn program_network(
         &mut self,
         net: &Network,
@@ -164,17 +226,68 @@ impl AxiRegisterFile {
         output_base: u32,
         weight_base: u32,
     ) -> Result<()> {
-        ensure!(
-            net.layers.len() <= 32,
-            "register file supports ≤ 32 layers"
-        );
+        let stages = net.front.len() + net.layers.len();
+        ensure!(stages <= 32, "register file supports ≤ 32 layers");
         self.write(Reg::Batch as u32, batch as u32)?;
-        self.write(Reg::NumLayers as u32, net.layers.len() as u32)?;
+        self.write(Reg::NumLayers as u32, stages as u32)?;
         self.write(Reg::InputBase as u32, input_base)?;
         self.write(Reg::OutputBase as u32, output_base)?;
         let mut wbase = weight_base;
-        for (i, layer) in net.layers.iter().enumerate() {
-            let base = Reg::LayerTable as u32 + i as u32 * LAYER_DESC_WORDS;
+        let mut i = 0u32;
+        // Shape chain through the front (shapes[j] enters stage j).
+        let shapes = match &net.config.front {
+            Some(spec) => spec.shapes()?,
+            None => Vec::new(),
+        };
+        for stage in &net.front {
+            match stage {
+                FrontLayer::Conv(c) => {
+                    let mut f = flags::CONV;
+                    if c.precision() == Precision::Binary {
+                        f |= flags::BINARY;
+                    }
+                    if c.dense.activation {
+                        f |= flags::ACTIVATION;
+                    }
+                    if c.dense.bn.is_some() {
+                        f |= flags::BATCHNORM;
+                    }
+                    let s = &c.spec;
+                    self.write_desc(
+                        i,
+                        s.patch_len() as u32,
+                        s.out_channels as u32,
+                        f,
+                        wbase,
+                        (s.kernel | s.stride << 8 | s.padding << 16) as u32,
+                        (s.input.height | s.input.width << 16) as u32,
+                    )?;
+                    wbase += c.weight_bytes() as u32;
+                }
+                FrontLayer::Pool {
+                    input,
+                    kernel,
+                    stride,
+                } => {
+                    let out = crate::conv::pool_out_shape(*input, *kernel, *stride)?;
+                    self.write_desc(
+                        i,
+                        input.features() as u32,
+                        out.features() as u32,
+                        flags::POOL,
+                        wbase,
+                        (kernel | stride << 8) as u32,
+                        (input.height | input.width << 16) as u32,
+                    )?;
+                }
+                FrontLayer::Flatten => {
+                    let feats = shapes[i as usize].features() as u32;
+                    self.write_desc(i, feats, feats, flags::FLATTEN, wbase, 0, 0)?;
+                }
+            }
+            i += 1;
+        }
+        for layer in net.layers.iter() {
             let mut f = 0u32;
             if layer.precision == Precision::Binary {
                 f |= flags::BINARY;
@@ -185,11 +298,17 @@ impl AxiRegisterFile {
             if layer.bn.is_some() {
                 f |= flags::BATCHNORM;
             }
-            self.write(base, layer.in_features() as u32)?;
-            self.write(base + 1, layer.out_features() as u32)?;
-            self.write(base + 2, f)?;
-            self.write(base + 3, wbase)?;
+            self.write_desc(
+                i,
+                layer.in_features() as u32,
+                layer.out_features() as u32,
+                f,
+                wbase,
+                0,
+                0,
+            )?;
             wbase += layer.weight_bytes() as u32;
+            i += 1;
         }
         Ok(())
     }
@@ -210,6 +329,8 @@ impl AxiRegisterFile {
         let input_base = self.read(Reg::InputBase as u32)?;
         let output_base = self.read(Reg::OutputBase as u32)?;
         let mut layers = Vec::with_capacity(n);
+        // Chain check tracks the *flattened* feature count each stage
+        // consumes/produces, so conv/pool geometry stays honest.
         let mut prev_out: Option<usize> = None;
         for i in 0..n {
             let base = Reg::LayerTable as u32 + i as u32 * LAYER_DESC_WORDS;
@@ -217,26 +338,91 @@ impl AxiRegisterFile {
             let out_features = self.read(base + 1)? as usize;
             let f = self.read(base + 2)?;
             let weight_base = self.read(base + 3)?;
+            let geom0 = self.read(base + 4)?;
+            let geom1 = self.read(base + 5)?;
             if in_features == 0 || out_features == 0 {
                 self.set_status(Status::Error);
                 bail!("layer {i}: zero dimension");
             }
-            if let Some(prev) = prev_out {
-                if prev != in_features {
+            let kind = match f & (flags::CONV | flags::POOL | flags::FLATTEN) {
+                0 => LayerKind::Dense,
+                k if k == flags::CONV => LayerKind::Conv,
+                k if k == flags::POOL => LayerKind::Pool,
+                k if k == flags::FLATTEN => LayerKind::Flatten,
+                _ => {
                     self.set_status(Status::Error);
-                    bail!(
-                        "layer {i}: input {in_features} != previous output {prev}"
-                    );
+                    bail!("layer {i}: conflicting kind flags {f:#x}");
+                }
+            };
+            let kernel = (geom0 & 0xff) as usize;
+            let stride = ((geom0 >> 8) & 0xff) as usize;
+            let padding = ((geom0 >> 16) & 0xff) as usize;
+            let in_height = (geom1 & 0xffff) as usize;
+            let in_width = (geom1 >> 16) as usize;
+            // Flattened feature counts this stage consumes and produces.
+            let (flat_in, flat_out) = match kind {
+                LayerKind::Dense | LayerKind::Flatten => (in_features, out_features),
+                LayerKind::Conv => {
+                    if kernel == 0
+                        || stride == 0
+                        || in_height == 0
+                        || in_width == 0
+                        || in_features % (kernel * kernel) != 0
+                        || in_height + 2 * padding < kernel
+                        || in_width + 2 * padding < kernel
+                    {
+                        self.set_status(Status::Error);
+                        bail!("layer {i}: malformed conv geometry");
+                    }
+                    let channels = in_features / (kernel * kernel);
+                    let oh = (in_height + 2 * padding - kernel) / stride + 1;
+                    let ow = (in_width + 2 * padding - kernel) / stride + 1;
+                    (in_height * in_width * channels, oh * ow * out_features)
+                }
+                LayerKind::Pool => {
+                    if kernel == 0
+                        || stride == 0
+                        || in_height < kernel
+                        || in_width < kernel
+                        || in_features % (in_height * in_width) != 0
+                    {
+                        self.set_status(Status::Error);
+                        bail!("layer {i}: malformed pool geometry");
+                    }
+                    let channels = in_features / (in_height * in_width);
+                    let oh = (in_height - kernel) / stride + 1;
+                    let ow = (in_width - kernel) / stride + 1;
+                    if out_features != oh * ow * channels {
+                        self.set_status(Status::Error);
+                        bail!("layer {i}: pool output {out_features} != {oh}x{ow}x{channels}");
+                    }
+                    (in_features, out_features)
+                }
+            };
+            if kind == LayerKind::Flatten && in_features != out_features {
+                self.set_status(Status::Error);
+                bail!("layer {i}: flatten must preserve feature count");
+            }
+            if let Some(prev) = prev_out {
+                if prev != flat_in {
+                    self.set_status(Status::Error);
+                    bail!("layer {i}: input {flat_in} != previous output {prev}");
                 }
             }
-            prev_out = Some(out_features);
+            prev_out = Some(flat_out);
             layers.push(LayerDesc {
+                kind,
                 in_features,
                 out_features,
                 binary: f & flags::BINARY != 0,
                 activation: f & flags::ACTIVATION != 0,
                 batchnorm: f & flags::BATCHNORM != 0,
                 weight_base,
+                kernel,
+                stride,
+                padding,
+                in_height,
+                in_width,
             });
         }
         Ok(InferenceCommand {
@@ -329,7 +515,7 @@ mod tests {
         // 33 layers exceed the register file's descriptor table.
         let sizes: Vec<usize> = vec![8; 34];
         let precisions = vec![crate::nn::Precision::Bf16; 33];
-        let net = Network::random(&NetworkConfig { sizes, precisions }, 1);
+        let net = Network::random(&NetworkConfig { sizes, precisions, front: None }, 1);
         let mut axi = AxiRegisterFile::new();
         let err = axi.program_network(&net, 1, 0, 0, 0).unwrap_err().to_string();
         assert!(err.contains("32 layers"), "{err}");
@@ -378,7 +564,59 @@ mod tests {
         let net = Network::random(&NetworkConfig::beanna_hybrid(), 1);
         let mut axi = AxiRegisterFile::new();
         axi.program_network(&net, 1, 0, 0, 0).unwrap();
-        // 4 globals + 4 layers × 4 words.
-        assert_eq!(axi.writes, 4 + 16);
+        // 4 globals + 4 layers × 6 words.
+        assert_eq!(axi.writes, 4 + 24);
+    }
+
+    #[test]
+    fn program_decode_roundtrip_cnn() {
+        let net = Network::random(&NetworkConfig::cnn_hybrid(), 1);
+        let mut axi = AxiRegisterFile::new();
+        axi.program_network(&net, 16, 0, 0, 0x3000_0000).unwrap();
+        let cmd = axi.decode_command().unwrap();
+        // 5 front stages + 2 dense layers.
+        assert_eq!(cmd.layers.len(), 7);
+        let kinds: Vec<LayerKind> = cmd.layers.iter().map(|l| l.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                LayerKind::Conv,
+                LayerKind::Pool,
+                LayerKind::Conv,
+                LayerKind::Pool,
+                LayerKind::Flatten,
+                LayerKind::Dense,
+                LayerKind::Dense,
+            ]
+        );
+        // Stem conv: 3×3×3 patches onto 16 channels over a 32×32 map.
+        let stem = &cmd.layers[0];
+        assert_eq!((stem.in_features, stem.out_features), (27, 16));
+        assert_eq!((stem.kernel, stem.stride, stem.padding), (3, 1, 1));
+        assert_eq!((stem.in_height, stem.in_width), (32, 32));
+        assert!(!stem.binary && cmd.layers[2].binary);
+        // Flatten carries the 8×8×16 count into the trunk.
+        assert_eq!(cmd.layers[4].in_features, 1024);
+        assert_eq!(cmd.layers[5].in_features, 1024);
+        // Weight bases skip weightless pool/flatten stages.
+        assert_eq!(cmd.layers[1].weight_base, cmd.layers[2].weight_base);
+    }
+
+    #[test]
+    fn decode_rejects_corrupt_conv_geometry() {
+        let net = Network::random(&NetworkConfig::cnn_hybrid(), 1);
+        let mut axi = AxiRegisterFile::new();
+        axi.program_network(&net, 1, 0, 0, 0).unwrap();
+        // Zero the stem conv's kernel field.
+        axi.write(Reg::LayerTable as u32 + 4, 0).unwrap();
+        let err = axi.decode_command().unwrap_err().to_string();
+        assert!(err.contains("malformed conv geometry"), "{err}");
+        assert_eq!(axi.status(), Status::Error);
+        // Breaking the spatial chain (pool height) is also caught.
+        axi.program_network(&net, 1, 0, 0, 0).unwrap();
+        let pool_base = Reg::LayerTable as u32 + LAYER_DESC_WORDS;
+        axi.write(pool_base + 5, (16 << 16) | 31).unwrap();
+        assert!(axi.decode_command().is_err());
+        assert_eq!(axi.status(), Status::Error);
     }
 }

@@ -406,6 +406,7 @@ mod tests {
             &NetworkConfig {
                 sizes: vec![20, 24, 6],
                 precisions: vec![Precision::Bf16, Precision::Binary],
+                front: None,
             },
             seed,
         )

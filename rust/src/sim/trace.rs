@@ -187,6 +187,7 @@ mod tests {
             &NetworkConfig {
                 sizes: vec![20, 24, 6],
                 precisions: vec![Precision::Bf16, Precision::Binary],
+                front: None,
             },
             1,
         );
@@ -227,6 +228,7 @@ mod tests {
             &NetworkConfig {
                 sizes: vec![20, 24, 6],
                 precisions: vec![Precision::Bf16, Precision::Binary],
+                front: None,
             },
             2,
         );

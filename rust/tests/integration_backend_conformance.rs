@@ -31,8 +31,43 @@ fn shared_net() -> Network {
         &NetworkConfig {
             sizes: vec![40, 48, 48, 10],
             precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+            front: None,
         },
         77,
+    )
+}
+
+/// A small hybrid CNN (bf16 conv → pool → binary conv → dense trunk)
+/// so the conformance contract also covers networks with a conv front.
+fn cnn_net() -> Network {
+    use beanna::conv::{ConvFront, FrontSpec, ImageShape};
+    Network::random(
+        &NetworkConfig {
+            sizes: vec![16, 8, 5],
+            precisions: vec![Precision::Binary, Precision::Bf16],
+            front: Some(ConvFront {
+                input: ImageShape::new(6, 6, 2),
+                stages: vec![
+                    FrontSpec::Conv2d {
+                        out_channels: 3,
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        precision: Precision::Bf16,
+                    },
+                    FrontSpec::MaxPool { kernel: 2, stride: 2 },
+                    FrontSpec::Conv2d {
+                        out_channels: 4,
+                        kernel: 2,
+                        stride: 1,
+                        padding: 0,
+                        precision: Precision::Binary,
+                    },
+                    FrontSpec::Flatten,
+                ],
+            }),
+        },
+        78,
     )
 }
 
@@ -47,8 +82,8 @@ fn probe(rows: usize, cols: usize, seed: u64) -> Matrix {
 
 /// Run the whole conformance contract over one backend constructor.
 fn assert_conforms(mk: &mut dyn FnMut() -> Box<dyn ExecutionBackend>, net: &Network) {
-    let width = net.config.sizes[0];
-    let classes = *net.config.sizes.last().unwrap();
+    let width = net.config.input_width();
+    let classes = net.config.num_classes();
 
     // Declared identity and shape.
     let mut b = mk();
@@ -168,6 +203,50 @@ fn remote_backend_over_loopback_worker_conforms() {
         let a = remote.run_batch(&x).unwrap();
         let b = local.run_batch(&x).unwrap();
         assert_eq!(a.logits, b.logits, "rows {rows}");
+    }
+    drop(remote);
+}
+
+/// Every backend passes the identical contract on a conv-front model:
+/// the conv subsystem is invisible to the serving layer. The remote
+/// variant dials loopback workers, so CNNs cross the wire too.
+#[test]
+fn conv_models_conform_on_every_backend() {
+    let net = cnn_net();
+    assert_conforms(&mut || ReferenceBackend::boxed(net.clone()), &net);
+    assert_conforms(&mut || SimulatorBackend::boxed(net.clone()), &net);
+    assert_conforms(&mut || ShardedSimulatorBackend::boxed(net.clone(), 3), &net);
+    let hosts = std::cell::RefCell::new(Vec::new());
+    let mut mk = || -> Box<dyn ExecutionBackend> {
+        let host = WorkerHost::start(
+            SimulatorBackend::boxed(net.clone()),
+            "127.0.0.1:0",
+            WorkerConfig::default(),
+        )
+        .expect("starting loopback worker");
+        let remote = RemoteBackend::boxed(host.local_addr(), RemoteConfig::default())
+            .expect("dialing loopback worker");
+        hosts.borrow_mut().push(host);
+        remote
+    };
+    assert_conforms(&mut mk, &net);
+
+    // All four agree bit-for-bit on shared weights — reference, both
+    // simulator shapes, and the wire-crossing remote.
+    let mut rf = ReferenceBackend::new(net.clone());
+    let mut sim = SimulatorBackend::new(net.clone());
+    let mut sharded = ShardedSimulatorBackend::new(net.clone(), 2);
+    let mut remote = mk();
+    for (rows, seed) in [(1usize, 41u64), (5, 42), (9, 43)] {
+        let x = probe(rows, net.config.input_width(), seed);
+        let a = rf.run_batch(&x).unwrap();
+        let b = sim.run_batch(&x).unwrap();
+        let c = sharded.run_batch(&x).unwrap();
+        let d = remote.run_batch(&x).unwrap();
+        assert_eq!(a.logits, b.logits, "sim diverged at rows {rows}");
+        assert_eq!(a.logits, c.logits, "sharded diverged at rows {rows}");
+        assert_eq!(a.logits, d.logits, "remote diverged at rows {rows}");
+        assert!(b.sim_cycles.unwrap() > 0, "CNN reported no modeled cycles");
     }
     drop(remote);
 }

@@ -40,6 +40,7 @@ fn small_net() -> Network {
         &NetworkConfig {
             sizes: vec![12, 16, 4],
             precisions: vec![Precision::Bf16, Precision::Bf16],
+            front: None,
         },
         9,
     )

@@ -1,0 +1,308 @@
+//! Integration: the binary/bf16 convolution subsystem end to end.
+//!
+//! * Bit-exactness: the packed-parallel conv kernels (im2col *and*
+//!   direct lowering) match the scalar references on ragged shapes ×
+//!   stride/padding × worker counts — XNOR-popcount counts and
+//!   k-blocked bf16 psums are integer/order-fixed, so equality is
+//!   exact, not approximate.
+//! * Hybrid CNN forward is worker-count invariant through the whole
+//!   `Network` (conv front streaming included).
+//! * Acceptance: a hybrid conv→dense model serves end to end through
+//!   the `Engine` on the reference, simulator, sharded-simulator, and
+//!   remote (loopback worker) backends with bit-identical logits, and
+//!   the simulator reports modeled cycles for the CNN.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use beanna::bf16::Matrix;
+use beanna::binary::BitMatrix;
+use beanna::conv::{
+    im2col, reference, Conv2dSpec, ConvAlgo, ConvFront, ConvLayer, FrontSpec, ImageShape,
+};
+use beanna::coordinator::{
+    BatchPolicy, Engine, ExecutionBackend, Parallelism, ReferenceBackend, ServeError,
+    ShardedSimulatorBackend, SimulatorBackend,
+};
+use beanna::data::SynthCifar;
+use beanna::nn::{Network, NetworkConfig, Precision};
+use beanna::transport::{RemoteBackend, RemoteConfig, WorkerConfig, WorkerHost};
+use beanna::util::rng::Xoshiro256;
+
+fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    Matrix::from_vec(
+        rows,
+        cols,
+        Xoshiro256::seed_from_u64(seed).normal_vec(rows * cols),
+    )
+    .unwrap()
+}
+
+/// Ragged geometry sweep shared by the bit-exactness suites:
+/// `(h, w, c, oc, kernel, stride, padding)`.
+const GEOMETRIES: &[(usize, usize, usize, usize, usize, usize, usize)] = &[
+    (5, 7, 3, 4, 3, 1, 1),  // non-square, same-ish padding
+    (8, 6, 1, 5, 2, 2, 0),  // strided valid conv, single channel
+    (9, 9, 4, 3, 3, 2, 1),  // strided + padded
+    (4, 4, 2, 2, 1, 1, 0),  // 1×1 pointwise
+    (6, 5, 3, 4, 3, 1, 2),  // padding thicker than stride
+    (16, 16, 9, 7, 3, 1, 1), // tail-word channel count
+];
+
+fn spec_of(
+    (h, w, c, oc, k, s, p): (usize, usize, usize, usize, usize, usize, usize),
+) -> Conv2dSpec {
+    Conv2dSpec {
+        input: ImageShape::new(h, w, c),
+        out_channels: oc,
+        kernel: k,
+        stride: s,
+        padding: p,
+    }
+}
+
+/// Binary conv: both lowerings reproduce the scalar ±1 reference
+/// bit-for-bit on every geometry and worker count. Integer popcount
+/// sums are associative, so any fan-out must agree exactly.
+#[test]
+fn binary_conv_bit_exact_vs_scalar_reference() {
+    for (gi, &geom) in GEOMETRIES.iter().enumerate() {
+        let spec = spec_of(geom);
+        let x = rand_matrix(3, spec.input.features(), 100 + gi as u64);
+        let w = rand_matrix(spec.out_channels, spec.patch_len(), 200 + gi as u64);
+        let want = reference::conv2d_ref_binary(&x, &spec, &w).unwrap();
+        for algo in [ConvAlgo::Im2col, ConvAlgo::Direct] {
+            let layer = ConvLayer::binary(spec, &w, None, false)
+                .unwrap()
+                .with_algo(algo);
+            for workers in [1usize, 2, 5] {
+                let got = layer
+                    .psums_with(&x, Parallelism::fixed(workers))
+                    .unwrap();
+                assert_eq!(
+                    got.data, want.data,
+                    "geometry {gi} algo {algo:?} workers {workers}"
+                );
+            }
+        }
+    }
+}
+
+/// bf16 conv: the packed-panel path matches the scalar k-blocked
+/// reference exactly — same quantization, same accumulation order.
+#[test]
+fn bf16_conv_bit_exact_vs_scalar_reference() {
+    for (gi, &geom) in GEOMETRIES.iter().enumerate() {
+        let spec = spec_of(geom);
+        let x = rand_matrix(2, spec.input.features(), 300 + gi as u64);
+        let w = rand_matrix(spec.out_channels, spec.patch_len(), 400 + gi as u64);
+        let want = reference::conv2d_ref_bf16(&x, &spec, &w, beanna::ARRAY_DIM).unwrap();
+        let layer = ConvLayer::bf16(spec, w, None, false).unwrap();
+        for workers in [1usize, 3] {
+            let got = layer
+                .psums_with(&x, Parallelism::fixed(workers))
+                .unwrap();
+            assert_eq!(got.data, want.data, "geometry {gi} workers {workers}");
+        }
+    }
+}
+
+/// im2col and direct lowerings agree on packed input too — float maps
+/// never materialize, and the streamed sign-bit outputs match as well.
+#[test]
+fn im2col_and_direct_agree_on_packed_input() {
+    for (gi, &geom) in GEOMETRIES.iter().enumerate() {
+        let spec = spec_of(geom);
+        let x = rand_matrix(4, spec.input.features(), 500 + gi as u64);
+        let w = rand_matrix(spec.out_channels, spec.patch_len(), 600 + gi as u64);
+        let xb = BitMatrix::from_matrix(&x);
+        let mk = |algo| {
+            ConvLayer::binary(spec, &w, None, true)
+                .unwrap()
+                .with_algo(algo)
+        };
+        let (a, b) = (mk(ConvAlgo::Im2col), mk(ConvAlgo::Direct));
+        let par = Parallelism::fixed(3);
+        let fa = a.forward_packed_with(&xb, par).unwrap();
+        let fb = b.forward_packed_with(&xb, par).unwrap();
+        assert_eq!(fa.data, fb.data, "geometry {gi} float outputs");
+        let ba = a.forward_packed_to_bits_with(&xb, par).unwrap();
+        let bb = b.forward_packed_to_bits_with(&xb, par).unwrap();
+        assert_eq!(ba, bb, "geometry {gi} packed outputs");
+        // Packed input is exactly the float path on the same signs.
+        let ff = a.forward_with(&x, par).unwrap();
+        let signs = Matrix::from_vec(
+            x.rows,
+            x.cols,
+            x.data
+                .iter()
+                .map(|&v| if v < 0.0 { -1.0 } else { 1.0 })
+                .collect(),
+        )
+        .unwrap();
+        let fs = a.forward_with(&signs, par).unwrap();
+        assert_eq!(ff.data, fs.data, "geometry {gi}: conv reads signs only");
+    }
+}
+
+/// The packed im2col transform agrees with packing the float patches.
+#[test]
+fn packed_im2col_matches_float_then_pack() {
+    for (gi, &geom) in GEOMETRIES.iter().enumerate() {
+        let spec = spec_of(geom);
+        let x = rand_matrix(3, spec.input.features(), 700 + gi as u64);
+        let par = Parallelism::fixed(2);
+        let from_float = im2col::im2col_bits(&x, &spec, par).unwrap();
+        let from_packed =
+            im2col::im2col_bits_packed(&BitMatrix::from_matrix(&x), &spec, par).unwrap();
+        assert_eq!(from_float, from_packed, "geometry {gi}");
+    }
+}
+
+fn small_cnn() -> Network {
+    Network::random(
+        &NetworkConfig {
+            sizes: vec![16, 8, 5],
+            precisions: vec![Precision::Binary, Precision::Bf16],
+            front: Some(ConvFront {
+                input: ImageShape::new(6, 6, 2),
+                stages: vec![
+                    FrontSpec::Conv2d {
+                        out_channels: 3,
+                        kernel: 3,
+                        stride: 1,
+                        padding: 1,
+                        precision: Precision::Bf16,
+                    },
+                    FrontSpec::MaxPool { kernel: 2, stride: 2 },
+                    FrontSpec::Conv2d {
+                        out_channels: 4,
+                        kernel: 2,
+                        stride: 1,
+                        padding: 0,
+                        precision: Precision::Binary,
+                    },
+                    FrontSpec::Flatten,
+                ],
+            }),
+        },
+        91,
+    )
+}
+
+/// Whole-network worker-count invariance with a conv front — the
+/// packed streaming run across conv and dense binary stages included.
+#[test]
+fn hybrid_cnn_forward_is_worker_count_invariant() {
+    let net = small_cnn();
+    let x = rand_matrix(5, net.config.input_width(), 800);
+    let want = net.forward_with(&x, Parallelism::serial()).unwrap();
+    for workers in [2usize, 4, 7] {
+        let got = net.forward_with(&x, Parallelism::fixed(workers)).unwrap();
+        assert_eq!(got.data, want.data, "workers {workers}");
+    }
+}
+
+/// Acceptance: the hybrid CNN serves end to end through the `Engine`
+/// on every backend — reference, simulator, sharded simulator, and a
+/// remote backend dialing a loopback worker — with logits bit-identical
+/// to the direct forward pass on all of them.
+#[test]
+fn engine_serves_cnn_on_all_backends_bit_identically() {
+    let net = small_cnn();
+    let width = net.config.input_width();
+    let probes: Vec<Vec<f32>> = (0..4)
+        .map(|i| rand_matrix(1, width, 900 + i).data)
+        .collect();
+    let direct: Vec<Vec<f32>> = probes
+        .iter()
+        .map(|p| {
+            net.forward(&Matrix::from_vec(1, width, p.clone()).unwrap())
+                .unwrap()
+                .data
+        })
+        .collect();
+
+    // The remote factory's loopback workers must outlive the engines.
+    let hosts: Arc<Mutex<Vec<WorkerHost>>> = Arc::new(Mutex::new(Vec::new()));
+    type Factory = Box<
+        dyn FnMut(&Network, usize) -> Result<Box<dyn ExecutionBackend>, ServeError>,
+    >;
+    let remote_hosts = Arc::clone(&hosts);
+    let factories: Vec<(&str, Factory)> = vec![
+        ("ref", Box::new(|net: &Network, _| Ok(ReferenceBackend::boxed(net.clone())))),
+        ("sim", Box::new(|net: &Network, _| Ok(SimulatorBackend::boxed(net.clone())))),
+        (
+            "sharded",
+            Box::new(|net: &Network, _| Ok(ShardedSimulatorBackend::boxed(net.clone(), 2))),
+        ),
+        (
+            "remote",
+            Box::new(move |net: &Network, _| {
+                let host = WorkerHost::start(
+                    SimulatorBackend::boxed(net.clone()),
+                    "127.0.0.1:0",
+                    WorkerConfig::default(),
+                )
+                .map_err(|e| ServeError::InvalidConfig(e.to_string()))?;
+                let backend = RemoteBackend::boxed(host.local_addr(), RemoteConfig::default())
+                    .map_err(|e| ServeError::InvalidConfig(e.to_string()))?;
+                remote_hosts.lock().unwrap().push(host);
+                Ok(backend)
+            }),
+        ),
+    ];
+    for (kind, factory) in factories {
+        let engine = Engine::builder()
+            .model("cnn", net.clone())
+            .backend(factory)
+            .batch_policy(BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(2),
+            })
+            .build()
+            .unwrap_or_else(|e| panic!("building {kind} engine: {e:?}"));
+        assert_eq!(engine.model_shape("cnn").unwrap(), (width, 5));
+        for (i, (probe, want)) in probes.iter().zip(&direct).enumerate() {
+            let r = engine.infer("cnn", probe.clone()).unwrap();
+            assert_eq!(&r.logits, want, "{kind} probe {i} logits diverged");
+        }
+        engine.shutdown();
+    }
+}
+
+/// The CNN workload generator feeds the hybrid model at its native
+/// geometry, and the simulator agrees with the reference backend on
+/// real generated images while reporting modeled cycles.
+#[test]
+fn synth_cifar_runs_through_cnn_hybrid_on_the_simulator() {
+    let cfg = NetworkConfig::cnn_hybrid();
+    let net = Network::random(&cfg, 92);
+    let data = SynthCifar::generate(4, 17);
+    assert_eq!(data.images.cols, cfg.input_width());
+    let mut rf = ReferenceBackend::new(net.clone());
+    let mut sim = SimulatorBackend::new(net);
+    let a = rf.run_batch(data.images_f32()).unwrap();
+    let b = sim.run_batch(data.images_f32()).unwrap();
+    assert_eq!(a.logits, b.logits, "sim diverged from reference on CIFAR");
+    assert!(b.sim_cycles.unwrap() > 0, "no modeled cycles for the CNN");
+}
+
+/// Conv-front serialization round-trips through the tensor container
+/// on disk: weights, batch-norm, geometry, and precisions all survive,
+/// and the reloaded network is bit-identical in inference.
+#[test]
+fn cnn_network_roundtrips_through_disk() {
+    let net = small_cnn();
+    let dir = std::env::temp_dir().join(format!("beanna_conv_it_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cnn.bwt");
+    net.save(&path).unwrap();
+    let back = Network::load(&path).unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+    assert_eq!(back.config, net.config);
+    let x = rand_matrix(3, net.config.input_width(), 1000);
+    let a = net.forward(&x).unwrap();
+    let b = back.forward(&x).unwrap();
+    assert_eq!(a.data, b.data, "reloaded CNN diverged");
+}

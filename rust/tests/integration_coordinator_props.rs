@@ -26,6 +26,7 @@ fn tiny_net(seed: u64) -> Network {
         &NetworkConfig {
             sizes: vec![784, 16, 10],
             precisions: vec![Precision::Bf16, Precision::Bf16],
+            front: None,
         },
         seed,
     )

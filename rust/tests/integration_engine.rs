@@ -17,6 +17,7 @@ fn mnist_net() -> Network {
         &NetworkConfig {
             sizes: vec![784, 32, 10],
             precisions: vec![Precision::Bf16, Precision::Binary],
+            front: None,
         },
         21,
     )

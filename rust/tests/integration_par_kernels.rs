@@ -208,6 +208,7 @@ fn binary_stack_streaming_matches_layerwise_float_path() {
             &NetworkConfig {
                 sizes: sizes.clone(),
                 precisions,
+                front: None,
             },
             9,
         );

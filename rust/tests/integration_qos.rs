@@ -481,6 +481,7 @@ fn modeled_backlog_routes_no_worse_than_least_outstanding() {
         &NetworkConfig {
             sizes: vec![20, 24, 6],
             precisions: vec![Precision::Bf16, Precision::Bf16],
+            front: None,
         },
         13,
     );

@@ -13,6 +13,7 @@ fn small_net() -> Network {
         &NetworkConfig {
             sizes: vec![784, 64, 64, 10],
             precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+            front: None,
         },
         5,
     )

@@ -26,6 +26,7 @@ fn small_net(seed: u64) -> Network {
         &NetworkConfig {
             sizes: vec![20, 24, 24, 6],
             precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+            front: None,
         },
         seed,
     )

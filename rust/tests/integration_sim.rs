@@ -28,19 +28,23 @@ fn engines_and_reference_agree_across_topologies() {
         NetworkConfig {
             sizes: vec![784, 32, 10],
             precisions: vec![Precision::Bf16, Precision::Bf16],
+            front: None,
         },
         NetworkConfig {
             sizes: vec![784, 64, 64, 10],
             precisions: vec![Precision::Bf16, Precision::Binary, Precision::Bf16],
+            front: None,
         },
         NetworkConfig {
             // Awkward sizes: partial n-blocks and partial binary k-groups.
             sizes: vec![50, 70, 70, 7],
             precisions: vec![Precision::Bf16, Precision::Binary, Precision::Binary],
+            front: None,
         },
         NetworkConfig {
             sizes: vec![30, 17, 5],
             precisions: vec![Precision::Binary, Precision::Binary],
+            front: None,
         },
     ];
     for (i, cfg) in topologies.iter().enumerate() {
@@ -123,6 +127,7 @@ fn run_via_axi_status_transitions() {
     let cfg = NetworkConfig {
         sizes: vec![20, 24, 6],
         precisions: vec![Precision::Bf16, Precision::Binary],
+        front: None,
     };
     let net = Network::random(&cfg, 8);
     let mut accel = Accelerator::new(AcceleratorConfig::default());
@@ -152,6 +157,7 @@ fn tiny_batches_bit_exact() {
     let cfg = NetworkConfig {
         sizes: vec![20, 24, 6],
         precisions: vec![Precision::Bf16, Precision::Binary],
+        front: None,
     };
     let net = Network::random(&cfg, 4);
     for batch in [1usize, 2, 3] {
