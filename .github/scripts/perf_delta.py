@@ -11,7 +11,11 @@ e.g. qos_2x_reject_rate) regress when they rise. Rate keys use an
 ABSOLUTE threshold (RATE_ABS_DELTA) instead of the relative one — a
 near-zero baseline like qos_1x_reject_rate=0.03 would otherwise flag
 scheduler jitter (3%→4% is +33% relative) on every run. Keys present
-on only one side are reported but never flagged.
+on only one side are reported but never flagged; in particular the
+per-ISA kernel keys (bf16_avx2_gops, binary_avx2_gops, bf16_neon_gops,
+binary_neon_gops, ...) only exist in a run when that ISA's kernel is
+available on the machine, so an aarch64 runner diffing against an
+x86_64 baseline legitimately produces one-sided rows.
 
 Non-gating by design: always exits 0. The CI step that runs it is
 additionally marked continue-on-error so a malformed file can't fail the
@@ -70,7 +74,10 @@ def main():
         if not isinstance(b, (int, float)) or isinstance(b, bool) or \
            not isinstance(c, (int, float)) or isinstance(c, bool):
             if b is None or c is None:
-                print(f"{key:<28} {str(b):>12} {str(c):>12}   (one-sided)")
+                note = ("(ISA not on this machine)"
+                        if "_avx2_" in key or "_neon_" in key
+                        else "(one-sided)")
+                print(f"{key:<28} {str(b):>12} {str(c):>12}   {note}")
             continue
         pct = (c - b) / b * 100.0 if b else 0.0
         mark = ""

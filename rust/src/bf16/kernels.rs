@@ -1,0 +1,392 @@
+//! Tile kernels for the packed bf16 ᵀ-GEMM, one per [`KernelIsa`].
+//!
+//! All kernels compute the same tile contract as the original scalar
+//! quad kernel and are **bit-identical** to it. The contract that makes
+//! this possible: every output element `(r, c)` is a k-blocked sum
+//!
+//! ```text
+//!   acc(r,c) = Σ_blocks ( Σ_{kk in block} a[r][kk] * w[c][kk] )
+//! ```
+//!
+//! evaluated with one `mul` then one `add` per step (two IEEE
+//! roundings), blocks in ascending order. SIMD variants vectorize
+//! *across output columns* — one vector lane per column — so each
+//! column's add chain is exactly the scalar chain; they never use FMA
+//! (single rounding would diverge from the reference) and never
+//! reassociate across `kk`.
+//!
+//! | ISA    | panel layout | inner step                                   |
+//! |--------|--------------|----------------------------------------------|
+//! | scalar | `[k][4]`/`[k][8]` | unrolled `blk[j] += a * lane[j]`        |
+//! | AVX2   | `[k][8]`     | `_mm256_add_ps(_mm256_mul_ps(splat(a), w))`  |
+//! | NEON   | `[k][4]`     | `vaddq_f32(vmulq_f32(vdupq_n_f32(a), w))`    |
+//!
+//! Tile-edge columns (ranges the tiler cut mid-panel) and the `N %
+//! LANES` row-major tail always take [`scalar_col`], on every ISA —
+//! identical order, merely slower, and only on the rim of a tile.
+
+use std::ops::Range;
+
+use super::PackedWeights;
+use crate::util::dispatch::KernelIsa;
+
+/// Dispatch the tile to the best kernel for `isa` **and** the panel
+/// layout `w` was packed with. A layout/ISA mismatch (weights packed
+/// under a different dispatch decision than the current one) is not an
+/// error: the scalar kernel handles every lane width.
+pub(crate) fn packed_t_tile(
+    isa: KernelIsa,
+    a_q: &[f32],
+    w: &PackedWeights,
+    k_block: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 if w.lanes() == 8 && KernelIsa::Avx2.available() => unsafe {
+            packed_t_tile_avx2(a_q, w, k_block, rows, cols, tile)
+        },
+        #[cfg(target_arch = "aarch64")]
+        KernelIsa::Neon if w.lanes() == 4 && KernelIsa::Neon.available() => unsafe {
+            packed_t_tile_neon(a_q, w, k_block, rows, cols, tile)
+        },
+        _ => packed_t_tile_scalar(a_q, w, k_block, rows, cols, tile),
+    }
+}
+
+/// Portable reference kernel: handles any panel width. Widths 4 and 8
+/// take an unrolled lane-group path (the autovectorizer's shape); other
+/// widths fall back to per-column accumulation.
+pub(crate) fn packed_t_tile_scalar(
+    a_q: &[f32],
+    w: &PackedWeights,
+    k_block: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    let k = w.k;
+    let lanes = w.lanes();
+    let tw = cols.len();
+    let n_full = w.n_full();
+    let mut r = rows.start;
+    while r < rows.end {
+        // Tile over up to 4 batch rows so each panel stream serves 4
+        // outputs' worth of rows (same W-traffic argument as the
+        // unpacked kernel).
+        let r_tile = (rows.end - r).min(4);
+        let mut c = cols.start;
+        while c < cols.end {
+            if c % lanes == 0 && c + lanes <= cols.end && c + lanes <= n_full {
+                // Aligned group: one contiguous [k][lanes] panel.
+                let panel = w.panel(c);
+                for rr in r..r + r_tile {
+                    let a_row = &a_q[rr * k..(rr + 1) * k];
+                    let tc = c - cols.start;
+                    let t_row = &mut tile[(rr - rows.start) * tw..];
+                    match lanes {
+                        4 => t_row[tc..tc + 4].copy_from_slice(&panel_cols::<4>(
+                            a_row, panel, k_block,
+                        )),
+                        8 => t_row[tc..tc + 8].copy_from_slice(&panel_cols::<8>(
+                            a_row, panel, k_block,
+                        )),
+                        _ => {
+                            for (j, t) in t_row[tc..tc + lanes].iter_mut().enumerate() {
+                                *t = scalar_col(a_row, w, c + j, k_block);
+                            }
+                        }
+                    }
+                }
+                c += lanes;
+            } else {
+                // Tile-edge column or row-major tail row.
+                for rr in r..r + r_tile {
+                    let a_row = &a_q[rr * k..(rr + 1) * k];
+                    tile[(rr - rows.start) * tw + (c - cols.start)] =
+                        scalar_col(a_row, w, c, k_block);
+                }
+                c += 1;
+            }
+        }
+        r += r_tile;
+    }
+}
+
+/// One activation row against one `[k][L]` panel: `L` independent
+/// k-blocked add chains, one per output column.
+fn panel_cols<const L: usize>(a_row: &[f32], panel: &[f32], k_block: usize) -> [f32; L] {
+    let k = a_row.len();
+    let mut acc = [0.0f32; L];
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + k_block).min(k);
+        let mut blk = [0.0f32; L];
+        for kk in k0..k1 {
+            let a = a_row[kk];
+            let lane = &panel[kk * L..kk * L + L];
+            for (b, &wj) in blk.iter_mut().zip(lane) {
+                *b += a * wj;
+            }
+        }
+        for (t, b) in acc.iter_mut().zip(blk) {
+            *t += b;
+        }
+        k0 = k1;
+    }
+    acc
+}
+
+/// One output element in the reference accumulation order, reading
+/// either a strided panel lane (`c < n_full`) or a row-major tail row.
+/// Every ISA uses this for tile-edge columns and the `N % LANES` tail.
+pub(crate) fn scalar_col(a_row: &[f32], w: &PackedWeights, c: usize, k_block: usize) -> f32 {
+    let k = a_row.len();
+    let lanes = w.lanes();
+    let n_full = w.n_full();
+    let mut acc = 0.0f32;
+    let mut k0 = 0;
+    while k0 < k {
+        let k1 = (k0 + k_block).min(k);
+        let mut block = 0.0f32;
+        if c < n_full {
+            let panel = w.panel(c);
+            let j = c % lanes;
+            for kk in k0..k1 {
+                block += a_row[kk] * panel[kk * lanes + j];
+            }
+        } else {
+            let w_row = w.tail_row(c);
+            for kk in k0..k1 {
+                block += a_row[kk] * w_row[kk];
+            }
+        }
+        acc += block;
+        k0 = k1;
+    }
+    acc
+}
+
+/// AVX2 kernel over `[k][8]` panels: 8 output columns per 256-bit
+/// vector, up to 4 batch rows sharing each panel load. Per column the
+/// op sequence is `mul` then `add` per k step, blocks accumulated in
+/// order — the exact scalar chain, never FMA-contracted (Rust does not
+/// contract float ops, and we do not emit `fmadd`).
+///
+/// # Safety
+/// Caller must ensure AVX2 is available (`KernelIsa::Avx2.available()`)
+/// and `w.lanes() == 8`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn packed_t_tile_avx2(
+    a_q: &[f32],
+    w: &PackedWeights,
+    k_block: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    debug_assert_eq!(w.lanes(), 8);
+    let k = w.k;
+    let tw = cols.len();
+    let n_full = w.n_full();
+    let mut r = rows.start;
+    while r < rows.end {
+        let r_tile = (rows.end - r).min(4);
+        let mut c = cols.start;
+        while c < cols.end {
+            if c % 8 == 0 && c + 8 <= cols.end && c + 8 <= n_full {
+                let panel = w.panel(c);
+                // Interleave up to 4 batch rows: one panel load per k
+                // step feeds 4 independent block vectors, hiding the
+                // 4-cycle add latency without changing any chain.
+                let mut acc = [_mm256_setzero_ps(); 4];
+                let mut k0 = 0;
+                while k0 < k {
+                    let k1 = (k0 + k_block).min(k);
+                    let mut blk = [_mm256_setzero_ps(); 4];
+                    for kk in k0..k1 {
+                        let wv = _mm256_loadu_ps(panel.as_ptr().add(kk * 8));
+                        for (i, b) in blk.iter_mut().enumerate().take(r_tile) {
+                            let a = _mm256_set1_ps(a_q[(r + i) * k + kk]);
+                            *b = _mm256_add_ps(*b, _mm256_mul_ps(a, wv));
+                        }
+                    }
+                    for (t, b) in acc.iter_mut().zip(blk).take(r_tile) {
+                        *t = _mm256_add_ps(*t, b);
+                    }
+                    k0 = k1;
+                }
+                for (i, t) in acc.iter().enumerate().take(r_tile) {
+                    let dst = tile
+                        .as_mut_ptr()
+                        .add((r + i - rows.start) * tw + (c - cols.start));
+                    _mm256_storeu_ps(dst, *t);
+                }
+                c += 8;
+            } else {
+                for rr in r..r + r_tile {
+                    let a_row = &a_q[rr * k..(rr + 1) * k];
+                    tile[(rr - rows.start) * tw + (c - cols.start)] =
+                        scalar_col(a_row, w, c, k_block);
+                }
+                c += 1;
+            }
+        }
+        r += r_tile;
+    }
+}
+
+/// NEON kernel over `[k][4]` panels — same structure as the AVX2
+/// kernel with 128-bit vectors (4 columns per vector, `vmulq`/`vaddq`,
+/// no `vfmaq`).
+///
+/// # Safety
+/// aarch64 only; `w.lanes() == 4`.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn packed_t_tile_neon(
+    a_q: &[f32],
+    w: &PackedWeights,
+    k_block: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    use std::arch::aarch64::*;
+    debug_assert_eq!(w.lanes(), 4);
+    let k = w.k;
+    let tw = cols.len();
+    let n_full = w.n_full();
+    let mut r = rows.start;
+    while r < rows.end {
+        let r_tile = (rows.end - r).min(4);
+        let mut c = cols.start;
+        while c < cols.end {
+            if c % 4 == 0 && c + 4 <= cols.end && c + 4 <= n_full {
+                let panel = w.panel(c);
+                let mut acc = [vdupq_n_f32(0.0); 4];
+                let mut k0 = 0;
+                while k0 < k {
+                    let k1 = (k0 + k_block).min(k);
+                    let mut blk = [vdupq_n_f32(0.0); 4];
+                    for kk in k0..k1 {
+                        let wv = vld1q_f32(panel.as_ptr().add(kk * 4));
+                        for (i, b) in blk.iter_mut().enumerate().take(r_tile) {
+                            let a = vdupq_n_f32(a_q[(r + i) * k + kk]);
+                            *b = vaddq_f32(*b, vmulq_f32(a, wv));
+                        }
+                    }
+                    for (t, b) in acc.iter_mut().zip(blk).take(r_tile) {
+                        *t = vaddq_f32(*t, b);
+                    }
+                    k0 = k1;
+                }
+                for (i, t) in acc.iter().enumerate().take(r_tile) {
+                    let dst = tile
+                        .as_mut_ptr()
+                        .add((r + i - rows.start) * tw + (c - cols.start));
+                    vst1q_f32(dst, *t);
+                }
+                c += 4;
+            } else {
+                for rr in r..r + r_tile {
+                    let a_row = &a_q[rr * k..(rr + 1) * k];
+                    tile[(rr - rows.start) * tw + (c - cols.start)] =
+                        scalar_col(a_row, w, c, k_block);
+                }
+                c += 1;
+            }
+        }
+        r += r_tile;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bf16::{Matrix, BF16};
+    use crate::util::prop::Gen;
+
+    fn rand_matrix(g: &mut Gen, rows: usize, cols: usize) -> Matrix {
+        Matrix::from_vec(rows, cols, (0..rows * cols).map(|_| g.f32_in(-3.0, 3.0)).collect())
+            .unwrap()
+    }
+
+    fn quantize(m: &Matrix) -> Vec<f32> {
+        m.data.iter().map(|&x| BF16::from_f32(x).to_f32()).collect()
+    }
+
+    /// Run one ISA's tile kernel over a full output with a deliberately
+    /// awkward column split (width 3: cuts every panel).
+    fn run_tiled(isa: KernelIsa, a: &Matrix, w: &PackedWeights, kb: usize) -> Vec<f32> {
+        let a_q = quantize(a);
+        let n = w.n;
+        let mut out = vec![0.0f32; a.rows * n];
+        let mut c0 = 0;
+        while c0 < n {
+            let c1 = (c0 + 3).min(n);
+            let mut tile = vec![0.0f32; a.rows * (c1 - c0)];
+            packed_t_tile(isa, &a_q, w, kb, 0..a.rows, c0..c1, &mut tile);
+            for r in 0..a.rows {
+                out[r * n + c0..r * n + c1]
+                    .copy_from_slice(&tile[r * (c1 - c0)..(r + 1) * (c1 - c0)]);
+            }
+            c0 = c1;
+        }
+        out
+    }
+
+    #[test]
+    fn scalar_kernel_identical_across_lane_widths() {
+        // The lane width changes memory layout only — every width must
+        // produce the bit-exact reference result.
+        let mut g = Gen::new(0xBEA);
+        for (b, k, n) in [(3usize, 33usize, 16usize), (5, 40, 17), (2, 19, 6), (1, 50, 3)] {
+            let a = rand_matrix(&mut g, b, k);
+            let w_nk = rand_matrix(&mut g, n, k);
+            let want = a.matmul_bf16_blocked_t(&w_nk, 16).unwrap();
+            for lanes in [4usize, 8, 5] {
+                let pw = PackedWeights::pack_with_lanes(&w_nk, lanes);
+                let got = run_tiled(KernelIsa::Scalar, &a, &pw, 16);
+                assert_eq!(got, want.data, "lanes={lanes} b={b} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_kernels_bit_exact_vs_scalar_reference() {
+        // On hardware without the ISA this exercises the dispatch
+        // fallback instead — still asserting the reference result.
+        let mut g = Gen::new(0x51D);
+        for isa in [KernelIsa::Avx2, KernelIsa::Neon] {
+            for (b, k, n) in [(1usize, 64usize, 32usize), (6, 37, 23), (3, 100, 8), (2, 9, 70)] {
+                let a = rand_matrix(&mut g, b, k);
+                let w_nk = rand_matrix(&mut g, n, k);
+                let pw = PackedWeights::pack_with_lanes(&w_nk, isa.bf16_lanes());
+                for kb in [1usize, 7, 16, 128] {
+                    let want = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
+                    let got = run_tiled(isa, &a, &pw, kb);
+                    assert_eq!(got, want.data, "isa={isa:?} b={b} k={k} n={n} kb={kb}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_layout_falls_back_to_scalar_path() {
+        // avx2 dispatch over 4-lane panels (packed under a different
+        // decision) must still be exact via the scalar kernel.
+        let mut g = Gen::new(0xFA11);
+        let a = rand_matrix(&mut g, 4, 48);
+        let w_nk = rand_matrix(&mut g, 20, 48);
+        let want = a.matmul_bf16_blocked_t(&w_nk, 16).unwrap();
+        let pw4 = PackedWeights::pack_with_lanes(&w_nk, 4);
+        assert_eq!(run_tiled(KernelIsa::Avx2, &a, &pw4, 16), want.data);
+        let pw8 = PackedWeights::pack_with_lanes(&w_nk, 8);
+        assert_eq!(run_tiled(KernelIsa::Neon, &a, &pw8, 16), want.data);
+    }
+}

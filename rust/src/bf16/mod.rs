@@ -19,6 +19,7 @@
 //! for the `fig1` report.
 
 pub mod format;
+pub(crate) mod kernels;
 pub mod packed;
 pub mod tensor;
 

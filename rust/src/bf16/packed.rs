@@ -1,68 +1,102 @@
 //! Layer-resident interleaved weight panels for the bf16 ᵀ-kernel.
 //!
-//! The blocked-ᵀ tile kernel advances FOUR output columns per pass over
-//! an activation row (four independent add chains — see
-//! `tensor::blocked_t_tile`). With the plain `N×K` row-major weight
-//! matrix those four chains read four rows **a full row apart**, so each
-//! k-step touches four cache lines. [`PackedWeights`] interleaves each
-//! group of four output neurons' weights as `[k][4]` panels:
+//! The packed tile kernels advance a whole *panel* of output columns
+//! per pass over an activation row — one independent add chain per
+//! column (see `bf16::kernels`). With the plain `N×K` row-major
+//! weight matrix those chains read rows **a full row apart**, so each
+//! k-step touches one cache line per column. [`PackedWeights`]
+//! interleaves each group of `LANES` output neurons' weights as
+//! `[k][LANES]` panels:
 //!
 //! ```text
-//!   row-major N×K:        w[c][k]                (4 strided streams)
-//!   packed panel p=c/4:   panel[k*4 + (c%4)]     (1 contiguous stream)
+//!   row-major N×K:        w[c][k]                      (LANES strided streams)
+//!   packed panel p=c/L:   panel[k*L + (c%L)]           (1 contiguous stream)
 //!
-//!   panel memory:  k=0: w0 w1 w2 w3 | k=1: w0 w1 w2 w3 | ...
+//!   panel memory (L=4):  k=0: w0 w1 w2 w3 | k=1: w0 w1 w2 w3 | ...
 //! ```
 //!
-//! so the quad inner loop reads one contiguous 16-byte lane per k-step —
-//! the layout the autovectorizer wants for a 4-wide FMA (the same
-//! layout-over-compute argument TCBNN/BinArray make for binary layers).
-//! The `N % 4` remainder rows are kept row-major and handled by the
-//! scalar column path.
+//! so the inner loop reads one contiguous lane-sized vector per k-step
+//! — the layout-over-compute co-design TCBNN/BinArray make for binary
+//! layers, applied to bf16. The panel width is **chosen for the vector
+//! width of the dispatched kernel** ([`crate::util::dispatch`]): 4 for
+//! the scalar/NEON kernels, 8 for AVX2. The `N % LANES` remainder rows
+//! are kept row-major and handled by the scalar column path.
 //!
 //! Packing quantizes to bf16 once at construction ([`PackedWeights`] is
 //! built when a `DenseLayer` is, and lives as long as the layer), so the
 //! per-call weight quantization pass of the unpacked kernel disappears
 //! from the serving hot path. Per-output accumulation order is identical
-//! to `matmul_bf16_blocked_t` — the packed kernel is bit-exact with it
+//! to `matmul_bf16_blocked_t` — every packed kernel is bit-exact with it
 //! (asserted by `tests/integration_par_kernels.rs`).
-
-use std::ops::Range;
+//!
+//! ```
+//! use beanna::bf16::{Matrix, PackedWeights};
+//! use beanna::util::par::Parallelism;
+//!
+//! let w = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])?;
+//! let x = Matrix::from_vec(1, 3, vec![1.0, 0.5, -1.0])?;
+//! // Panel width picked from the dispatched kernel's vector width.
+//! let packed = PackedWeights::pack(&w);
+//! let fast = x.matmul_bf16_blocked_t_packed_par(&packed, 64, Parallelism::serial())?;
+//! let reference = x.matmul_bf16_blocked_t(&w, 64)?;
+//! assert_eq!(fast, reference); // bit-exact, whatever kernel dispatched
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 use anyhow::{ensure, Result};
 
-use super::{Matrix, BF16};
-use crate::util::par::{par_tiles_with, Parallelism};
+use super::{kernels, Matrix, BF16};
+use crate::util::dispatch::{self, KernelIsa};
+use crate::util::par::{par_tiles_aligned, Parallelism};
 
 /// Weights for `x · Wᵀ`, pre-quantized to bf16 and interleaved in
-/// 4-column panels (see module docs).
+/// `[k][LANES]` panels (see module docs). The panel width is fixed at
+/// construction — [`PackedWeights::pack`] asks the kernel dispatcher —
+/// and recorded, so the matmul can pick the kernel matching the layout
+/// it actually has.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PackedWeights {
     /// Output features (rows of the `N×K` source).
     pub n: usize,
     /// Input features (columns of the `N×K` source).
     pub k: usize,
-    /// Full panels: `n_full/4` panels of `k×4` interleaved weights;
-    /// element `(c, kk)` for `c < n_full` lives at
-    /// `(c/4)*4*k + kk*4 + c%4`.
+    /// Panel width: output columns interleaved per k step.
+    lanes: usize,
+    /// Full panels: `n_full/lanes` panels of `k×lanes` interleaved
+    /// weights; element `(c, kk)` for `c < n_full` lives at
+    /// `(c/lanes)*lanes*k + kk*lanes + c%lanes`.
     panels: Vec<f32>,
-    /// Remainder rows (`n % 4`), row-major `(n - n_full) × k`.
+    /// Remainder rows (`n % lanes`), row-major `(n - n_full) × k`.
     tail: Vec<f32>,
 }
 
 impl PackedWeights {
     /// Pack an `N×K` weight matrix (one output neuron per row — the
     /// hardware layout), rounding every weight to bf16 resolution once.
+    /// The panel width comes from the currently dispatched kernel
+    /// ([`crate::util::dispatch::active`]).
     pub fn pack(w_nk: &Matrix) -> Self {
+        Self::pack_for(w_nk, dispatch::active())
+    }
+
+    /// Pack with the panel width `isa`'s bf16 kernel expects.
+    pub fn pack_for(w_nk: &Matrix, isa: KernelIsa) -> Self {
+        Self::pack_with_lanes(w_nk, isa.bf16_lanes())
+    }
+
+    /// Pack with an explicit panel width (tests and layout experiments;
+    /// the scalar kernel handles any width).
+    pub fn pack_with_lanes(w_nk: &Matrix, lanes: usize) -> Self {
+        assert!(lanes >= 1, "panel width must be at least 1");
         let (n, k) = (w_nk.rows, w_nk.cols);
-        let n_full = n - n % 4;
+        let n_full = n - n % lanes;
         let mut panels = vec![0.0f32; n_full * k];
-        for p in 0..n_full / 4 {
-            let base = p * 4 * k;
-            for j in 0..4 {
-                let row = w_nk.row(p * 4 + j);
+        for p in 0..n_full / lanes {
+            let base = p * lanes * k;
+            for j in 0..lanes {
+                let row = w_nk.row(p * lanes + j);
                 for (kk, &x) in row.iter().enumerate() {
-                    panels[base + kk * 4 + j] = BF16::from_f32(x).to_f32();
+                    panels[base + kk * lanes + j] = BF16::from_f32(x).to_f32();
                 }
             }
         }
@@ -70,13 +104,33 @@ impl PackedWeights {
         for r in n_full..n {
             tail.extend(w_nk.row(r).iter().map(|&x| BF16::from_f32(x).to_f32()));
         }
-        Self { n, k, panels, tail }
+        Self { n, k, lanes, panels, tail }
     }
 
-    /// Number of columns covered by full 4-wide panels.
+    /// Panel width this matrix was packed with.
     #[inline]
-    fn n_full(&self) -> usize {
-        self.n - self.n % 4
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    /// Number of columns covered by full `lanes`-wide panels.
+    #[inline]
+    pub(crate) fn n_full(&self) -> usize {
+        self.n - self.n % self.lanes
+    }
+
+    /// The `k×lanes` panel containing output column `c` (`c < n_full`).
+    #[inline]
+    pub(crate) fn panel(&self, c: usize) -> &[f32] {
+        let p = c / self.lanes;
+        &self.panels[p * self.lanes * self.k..(p + 1) * self.lanes * self.k]
+    }
+
+    /// Row-major tail row for output column `c` (`c >= n_full`).
+    #[inline]
+    pub(crate) fn tail_row(&self, c: usize) -> &[f32] {
+        let i = c - self.n_full();
+        &self.tail[i * self.k..(i + 1) * self.k]
     }
 
     /// Resident bytes of the packed form (f32 host storage).
@@ -88,10 +142,11 @@ impl PackedWeights {
 impl Matrix {
     /// [`Matrix::matmul_bf16_blocked_t_par`] against layer-resident
     /// [`PackedWeights`]: identical numerics (bit-exact, asserted by
-    /// tests), but the four add chains of the quad kernel read one
-    /// contiguous `[k][4]` panel stream instead of four strided rows,
-    /// and the weights are already bf16 so only the activations are
-    /// quantized per call.
+    /// tests), but the add chains read one contiguous `[k][LANES]`
+    /// panel stream instead of strided rows, the weights are already
+    /// bf16 so only the activations are quantized per call, and the
+    /// tile kernel is chosen by [`crate::util::dispatch`] (scalar /
+    /// AVX2 / NEON) to match the CPU and the panel layout.
     pub fn matmul_bf16_blocked_t_packed_par(
         &self,
         w: &PackedWeights,
@@ -116,106 +171,17 @@ impl Matrix {
         let n = w.n;
         let mut out = Matrix::zeros(self.rows, n);
         let workers = par.workers_for(self.rows * k * n);
-        par_tiles_with(
+        let isa = dispatch::active();
+        par_tiles_aligned(
             par.dispatch(),
             workers,
             self.rows,
             n,
+            w.lanes(),
             &mut out.data,
-            |rr, cc, tile| packed_t_tile(&a_q, w, k_block, rr, cc, tile),
+            |rr, cc, tile| kernels::packed_t_tile(isa, &a_q, w, k_block, rr, cc, tile),
         );
         Ok(out)
-    }
-}
-
-/// Tile kernel for [`Matrix::matmul_bf16_blocked_t_packed_par`].
-///
-/// Column ranges produced by the tiler may start or end mid-panel; those
-/// edge columns (and the `N % 4` tail rows) take a scalar path that walks
-/// the same k-blocked accumulation order, so every output element is
-/// computed identically regardless of how the tiler split the columns.
-pub(super) fn packed_t_tile(
-    a_q: &[f32],
-    w: &PackedWeights,
-    k_block: usize,
-    rows: Range<usize>,
-    cols: Range<usize>,
-    tile: &mut [f32],
-) {
-    let k = w.k;
-    let tw = cols.len();
-    let n_full = w.n_full();
-    let mut r = rows.start;
-    while r < rows.end {
-        // Tile over up to 4 batch rows so each panel stream serves 4
-        // outputs' worth of rows (same W-traffic argument as the
-        // unpacked kernel).
-        let r_tile = (rows.end - r).min(4);
-        let mut c = cols.start;
-        while c < cols.end {
-            if c % 4 == 0 && c + 4 <= cols.end && c + 4 <= n_full {
-                // Aligned quad: one contiguous [k][4] panel.
-                let panel = &w.panels[(c / 4) * 4 * k..(c / 4 + 1) * 4 * k];
-                for rr in r..r + r_tile {
-                    let a_row = &a_q[rr * k..(rr + 1) * k];
-                    let (mut acc0, mut acc1, mut acc2, mut acc3) = (0f32, 0f32, 0f32, 0f32);
-                    let mut k0 = 0;
-                    while k0 < k {
-                        let k1 = (k0 + k_block).min(k);
-                        let (mut b0, mut b1, mut b2, mut b3) = (0f32, 0f32, 0f32, 0f32);
-                        for kk in k0..k1 {
-                            let a = a_row[kk];
-                            let lane = &panel[kk * 4..kk * 4 + 4];
-                            b0 += a * lane[0];
-                            b1 += a * lane[1];
-                            b2 += a * lane[2];
-                            b3 += a * lane[3];
-                        }
-                        acc0 += b0;
-                        acc1 += b1;
-                        acc2 += b2;
-                        acc3 += b3;
-                        k0 = k1;
-                    }
-                    let t_row = &mut tile[(rr - rows.start) * tw..(rr - rows.start + 1) * tw];
-                    let tc = c - cols.start;
-                    t_row[tc] = acc0;
-                    t_row[tc + 1] = acc1;
-                    t_row[tc + 2] = acc2;
-                    t_row[tc + 3] = acc3;
-                }
-                c += 4;
-            } else {
-                // Scalar column: strided panel lane (tile-edge columns)
-                // or a row-major tail row. Same k-blocked order.
-                for rr in r..r + r_tile {
-                    let a_row = &a_q[rr * k..(rr + 1) * k];
-                    let mut acc = 0.0f32;
-                    let mut k0 = 0;
-                    while k0 < k {
-                        let k1 = (k0 + k_block).min(k);
-                        let mut block = 0.0f32;
-                        if c < n_full {
-                            let panel = &w.panels[(c / 4) * 4 * k..(c / 4 + 1) * 4 * k];
-                            let j = c % 4;
-                            for kk in k0..k1 {
-                                block += a_row[kk] * panel[kk * 4 + j];
-                            }
-                        } else {
-                            let w_row = &w.tail[(c - n_full) * k..(c - n_full + 1) * k];
-                            for kk in k0..k1 {
-                                block += a_row[kk] * w_row[kk];
-                            }
-                        }
-                        acc += block;
-                        k0 = k1;
-                    }
-                    tile[(rr - rows.start) * tw + (c - cols.start)] = acc;
-                }
-                c += 1;
-            }
-        }
-        r += r_tile;
     }
 }
 
@@ -232,17 +198,19 @@ mod tests {
     #[test]
     fn packed_matmul_bit_exact_with_unpacked_known_shapes() {
         let mut g = Gen::new(41);
-        // n spanning every n % 4 residue, incl. n < 4 (tail-only).
+        // n spanning every n % lanes residue, incl. n < lanes (tail-only).
         for (b, k, n) in [(3usize, 33usize, 16usize), (5, 40, 17), (2, 19, 6), (1, 50, 3)] {
             let a = rand_matrix(&mut g, b, k);
             let w_nk = rand_matrix(&mut g, n, k);
-            let pw = PackedWeights::pack(&w_nk);
-            for kb in [1usize, 5, 16, 100] {
-                let unpacked = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
-                let packed = a
-                    .matmul_bf16_blocked_t_packed_par(&pw, kb, Parallelism::serial())
-                    .unwrap();
-                assert_eq!(unpacked, packed, "b={b} k={k} n={n} kb={kb}");
+            for lanes in [4usize, 8] {
+                let pw = PackedWeights::pack_with_lanes(&w_nk, lanes);
+                for kb in [1usize, 5, 16, 100] {
+                    let unpacked = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
+                    let packed = a
+                        .matmul_bf16_blocked_t_packed_par(&pw, kb, Parallelism::serial())
+                        .unwrap();
+                    assert_eq!(unpacked, packed, "b={b} k={k} n={n} kb={kb} lanes={lanes}");
+                }
             }
         }
     }
@@ -256,18 +224,19 @@ mod tests {
             let k = g.usize_in(1..80);
             let n = g.usize_in(1..24);
             let kb = g.usize_in(1..12);
+            let lanes = if g.usize_in(0..2) == 0 { 4 } else { 8 };
             let a = rand_matrix(g, b, k);
             let w_nk = rand_matrix(g, n, k);
-            let pw = PackedWeights::pack(&w_nk);
+            let pw = PackedWeights::pack_with_lanes(&w_nk, lanes);
             let want = a.matmul_bf16_blocked_t(&w_nk, kb).unwrap();
             for workers in [2usize, 3, 7] {
                 let mut out = vec![0.0f32; b * n];
                 let a_q: Vec<f32> = a.data.iter().map(|&x| BF16::from_f32(x).to_f32()).collect();
                 crate::util::par::par_tiles(workers, b, n, &mut out, |rr, cc, tile| {
-                    packed_t_tile(&a_q, &pw, kb, rr, cc, tile)
+                    kernels::packed_t_tile_scalar(&a_q, &pw, kb, rr, cc, tile)
                 });
                 if out != want.data {
-                    return Err(format!("mismatch b={b} k={k} n={n} kb={kb} w={workers}"));
+                    return Err(format!("mismatch b={b} k={k} n={n} kb={kb} w={workers} l={lanes}"));
                 }
             }
             Ok(())
@@ -288,12 +257,23 @@ mod tests {
     }
 
     #[test]
+    fn pack_records_dispatched_lane_width() {
+        let w = Matrix::zeros(16, 8);
+        let pw = PackedWeights::pack(&w);
+        assert_eq!(pw.lanes(), dispatch::active().bf16_lanes());
+        for isa in KernelIsa::ALL {
+            assert_eq!(PackedWeights::pack_for(&w, isa).lanes(), isa.bf16_lanes());
+        }
+    }
+
+    #[test]
     fn packed_shape_mismatch_errors() {
         let a = Matrix::zeros(2, 5);
         let pw = PackedWeights::pack(&Matrix::zeros(3, 4));
         assert!(a
             .matmul_bf16_blocked_t_packed_par(&pw, 16, Parallelism::serial())
             .is_err());
+        // n=3 < any lane width: tail-only storage, 3 rows × 4 cols × 4 B.
         assert_eq!(pw.resident_bytes(), 3 * 4 * 4);
     }
 }

@@ -1,0 +1,283 @@
+//! Tile kernels for the XNOR-popcount GEMM, one per [`KernelIsa`].
+//!
+//! Binary matmul is exact integer arithmetic — `s = K − 2·popcount(a
+//! XOR w)` — so *any* vectorization is automatically bit-identical to
+//! the scalar reference; the only question is popcount throughput.
+//!
+//! | ISA    | reduction                                                  |
+//! |--------|------------------------------------------------------------|
+//! | scalar | `u64::count_ones` per word (SWAR on baseline x86-64)       |
+//! | AVX2   | Mula nibble-LUT popcount on 256-bit XOR lanes:             |
+//! |        | `shuffle_epi8` table lookup per nibble → `sad_epu8` byte   |
+//! |        | sums → `add_epi64` lane accumulators (4 words per step)    |
+//! | NEON   | scalar loop — aarch64 `count_ones` already lowers to the   |
+//! |        | vector `CNT`+`ADDV` sequence, so no intrinsics needed      |
+//!
+//! The register-blocking strategy (four weight rows per pass over an
+//! activation row, TCBNN-style) is shared by all ISAs; AVX2 widens the
+//! inner word loop from 64 to 256 bits on top of it. The direct conv
+//! kernel reuses the same reduction through [`xor_popcount`].
+
+use std::ops::Range;
+
+use super::BitVector;
+use crate::util::dispatch::KernelIsa;
+
+/// Dispatch the matmul tile to the best kernel for `isa`.
+pub(crate) fn bin_tile(
+    isa: KernelIsa,
+    acts: &[BitVector],
+    weights: &[BitVector],
+    len: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        KernelIsa::Avx2 if KernelIsa::Avx2.available() => unsafe {
+            bin_tile_avx2(acts, weights, len, rows, cols, tile)
+        },
+        _ => bin_tile_scalar(acts, weights, len, rows, cols, tile),
+    }
+}
+
+/// XOR-popcount disagreement count over two equal-length word slices,
+/// routed to the best reduction for `isa`. This is the inner loop of
+/// both the matmul tiles and the direct conv kernel.
+#[inline]
+pub(crate) fn xor_popcount(isa: KernelIsa, a: &[u64], b: &[u64]) -> u32 {
+    debug_assert_eq!(a.len(), b.len());
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // Below 4 words there is no 256-bit work; skip straight to scalar.
+        KernelIsa::Avx2 if a.len() >= 4 && KernelIsa::Avx2.available() => unsafe {
+            xor_popcount_avx2(a, b)
+        },
+        _ => xor_popcount_scalar(a, b),
+    }
+}
+
+/// Portable reference reduction.
+#[inline]
+pub(crate) fn xor_popcount_scalar(a: &[u64], b: &[u64]) -> u32 {
+    a.iter().zip(b).map(|(&x, &y)| (x ^ y).count_ones()).sum()
+}
+
+/// Portable reference tile kernel.
+///
+/// Register blocking: four weight rows are walked per activation-word
+/// pass (four disagreement accumulators), so each activation word is
+/// loaded once per four outputs. The `s = K - 2·popcount(a XOR w)`
+/// arithmetic is exact in integers — identical to [`BitVector::dot`]
+/// per output.
+pub(crate) fn bin_tile_scalar(
+    acts: &[BitVector],
+    weights: &[BitVector],
+    len: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    let tw = cols.len();
+    let k = len as i32;
+    for (ti, r) in rows.clone().enumerate() {
+        let a = acts[r].words.as_slice();
+        let t_row = &mut tile[ti * tw..(ti + 1) * tw];
+        let mut c = cols.start;
+        while c + 4 <= cols.end {
+            let w0 = &weights[c].words[..a.len()];
+            let w1 = &weights[c + 1].words[..a.len()];
+            let w2 = &weights[c + 2].words[..a.len()];
+            let w3 = &weights[c + 3].words[..a.len()];
+            let (mut d0, mut d1, mut d2, mut d3) = (0u32, 0u32, 0u32, 0u32);
+            for (i, &aw) in a.iter().enumerate() {
+                d0 += (aw ^ w0[i]).count_ones();
+                d1 += (aw ^ w1[i]).count_ones();
+                d2 += (aw ^ w2[i]).count_ones();
+                d3 += (aw ^ w3[i]).count_ones();
+            }
+            let tc = c - cols.start;
+            t_row[tc] = (k - 2 * d0 as i32) as f32;
+            t_row[tc + 1] = (k - 2 * d1 as i32) as f32;
+            t_row[tc + 2] = (k - 2 * d2 as i32) as f32;
+            t_row[tc + 3] = (k - 2 * d3 as i32) as f32;
+            c += 4;
+        }
+        // Ragged tail weight rows.
+        while c < cols.end {
+            t_row[c - cols.start] = acts[r].dot(&weights[c]) as f32;
+            c += 1;
+        }
+    }
+}
+
+/// 256-bit popcount of each 64-bit lane (Mula's nibble-LUT algorithm):
+/// per-byte counts via two `shuffle_epi8` table lookups, summed into
+/// the four u64 lanes by `sad_epu8`. Exact for any input.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn popcount256(v: std::arch::x86_64::__m256i) -> std::arch::x86_64::__m256i {
+    use std::arch::x86_64::*;
+    #[rustfmt::skip]
+    let lookup = _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    );
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let lo = _mm256_and_si256(v, low_mask);
+    let hi = _mm256_and_si256(_mm256_srli_epi16(v, 4), low_mask);
+    let cnt = _mm256_add_epi8(
+        _mm256_shuffle_epi8(lookup, lo),
+        _mm256_shuffle_epi8(lookup, hi),
+    );
+    _mm256_sad_epu8(cnt, _mm256_setzero_si256())
+}
+
+/// Sum the four u64 lanes of a 256-bit accumulator.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[inline]
+unsafe fn hsum_epi64(v: std::arch::x86_64::__m256i) -> u64 {
+    use std::arch::x86_64::*;
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes[0] + lanes[1] + lanes[2] + lanes[3]
+}
+
+/// AVX2 reduction for [`xor_popcount`]: 4 words per 256-bit step with
+/// per-lane u64 accumulation, scalar `popcnt` remainder.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available and `a.len() == b.len()`.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,popcnt")]
+unsafe fn xor_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
+    use std::arch::x86_64::*;
+    let vlen = a.len() & !3;
+    let mut vd = _mm256_setzero_si256();
+    let mut i = 0;
+    while i < vlen {
+        let x = _mm256_xor_si256(
+            _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i),
+            _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i),
+        );
+        vd = _mm256_add_epi64(vd, popcount256(x));
+        i += 4;
+    }
+    let mut d = hsum_epi64(vd) as u32;
+    for (&x, &y) in a[vlen..].iter().zip(&b[vlen..]) {
+        d += (x ^ y).count_ones();
+    }
+    d
+}
+
+/// AVX2 tile kernel: the same four-weight-row register blocking as the
+/// scalar kernel, with the inner word loop widened to 256-bit XOR +
+/// Mula popcount (4×u64 per step). Counts are exact integers, so the
+/// result is bit-identical to the scalar kernel by construction.
+///
+/// # Safety
+/// Caller must ensure AVX2 is available.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,popcnt")]
+unsafe fn bin_tile_avx2(
+    acts: &[BitVector],
+    weights: &[BitVector],
+    len: usize,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    tile: &mut [f32],
+) {
+    use std::arch::x86_64::*;
+    let tw = cols.len();
+    let k = len as i32;
+    for (ti, r) in rows.clone().enumerate() {
+        let a = acts[r].words.as_slice();
+        let vlen = a.len() & !3;
+        let t_row = &mut tile[ti * tw..(ti + 1) * tw];
+        let mut c = cols.start;
+        while c + 4 <= cols.end {
+            let ws = [
+                &weights[c].words[..a.len()],
+                &weights[c + 1].words[..a.len()],
+                &weights[c + 2].words[..a.len()],
+                &weights[c + 3].words[..a.len()],
+            ];
+            let mut vd = [_mm256_setzero_si256(); 4];
+            let mut i = 0;
+            while i < vlen {
+                let av = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+                for (acc, w) in vd.iter_mut().zip(ws) {
+                    let x = _mm256_xor_si256(
+                        av,
+                        _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i),
+                    );
+                    *acc = _mm256_add_epi64(*acc, popcount256(x));
+                }
+                i += 4;
+            }
+            let tc = c - cols.start;
+            for ((t, acc), w) in t_row[tc..tc + 4].iter_mut().zip(vd).zip(ws) {
+                let mut d = hsum_epi64(acc) as u32;
+                for (&aw, &ww) in a[vlen..].iter().zip(&w[vlen..]) {
+                    d += (aw ^ ww).count_ones();
+                }
+                *t = (k - 2 * d as i32) as f32;
+            }
+            c += 4;
+        }
+        // Ragged tail weight rows.
+        while c < cols.end {
+            let w = &weights[c].words[..a.len()];
+            let d = xor_popcount_avx2(a, w);
+            t_row[c - cols.start] = (k - 2 * d as i32) as f32;
+            c += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bf16::Matrix;
+    use crate::binary::BitMatrix;
+    use crate::util::prop::Gen;
+
+    fn sign_bits(g: &mut Gen, rows: usize, cols: usize) -> BitMatrix {
+        BitMatrix::from_matrix(&Matrix::from_vec(rows, cols, g.signs(rows * cols)).unwrap())
+    }
+
+    #[test]
+    fn xor_popcount_dispatch_exact_for_all_isas_and_lengths() {
+        let mut g = Gen::new(0xB17);
+        for words in [0usize, 1, 2, 3, 4, 5, 7, 8, 13, 32, 41] {
+            let a: Vec<u64> = (0..words).map(|_| g.rng().next_u64()).collect();
+            let b: Vec<u64> = (0..words).map(|_| g.rng().next_u64()).collect();
+            let want = xor_popcount_scalar(&a, &b);
+            for isa in KernelIsa::ALL {
+                assert_eq!(xor_popcount(isa, &a, &b), want, "isa={isa:?} words={words}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_kernels_identical_across_isas_any_shape() {
+        // Shapes crossing the 256-bit boundary (k around 256·m) and
+        // ragged column counts; every ISA must equal the scalar tile.
+        let mut g = Gen::new(0x10C);
+        for (b, k, n) in [(1usize, 63usize, 4usize), (3, 64, 9), (2, 300, 7), (4, 1024, 12), (2, 257, 5)]
+        {
+            let acts = sign_bits(&mut g, b, k);
+            let w_t = sign_bits(&mut g, n, k);
+            let mut want = vec![0.0f32; b * n];
+            bin_tile_scalar(&acts.row_bits, &w_t.row_bits, k, 0..b, 0..n, &mut want);
+            for isa in KernelIsa::ALL {
+                let mut got = vec![0.0f32; b * n];
+                bin_tile(isa, &acts.row_bits, &w_t.row_bits, k, 0..b, 0..n, &mut got);
+                assert_eq!(got, want, "isa={isa:?} b={b} k={k} n={n}");
+            }
+        }
+    }
+}

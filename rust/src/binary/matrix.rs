@@ -1,13 +1,12 @@
 //! Bit-packed ±1 matrices and the binary matmul used by the reference
 //! model and the coordinator's fast functional path.
 
-use std::ops::Range;
-
 use anyhow::{ensure, Result};
 
-use super::BitVector;
+use super::{kernels, BitVector};
 use crate::bf16::Matrix;
-use crate::util::par::{par_tiles_with, Parallelism};
+use crate::util::dispatch;
+use crate::util::par::{par_tiles_aligned, Parallelism};
 
 /// A matrix with ±1 entries, stored as one packed [`BitVector`] per row.
 ///
@@ -88,9 +87,12 @@ impl BitMatrix {
     /// activation row (TCBNN-style layout/parallelism co-design): each
     /// packed activation word is loaded once and XOR-popcounted against
     /// four weight words into four independent accumulators, quartering
-    /// activation-word traffic and filling the popcount ports. Results
-    /// are exact integers, so any tiling is bit-identical to the scalar
-    /// per-output [`BitVector::dot`] loop (asserted by tests).
+    /// activation-word traffic and filling the popcount ports. The word
+    /// reduction is chosen by [`crate::util::dispatch`] (scalar
+    /// `count_ones` vs 256-bit Mula popcount on AVX2). Results are
+    /// exact integers, so any tiling and any kernel is bit-identical to
+    /// the scalar per-output [`BitVector::dot`] loop (asserted by
+    /// tests).
     pub fn matmul_t_par(&self, weights_t: &BitMatrix, par: Parallelism) -> Result<Matrix> {
         ensure!(
             self.cols == weights_t.cols,
@@ -102,14 +104,19 @@ impl BitMatrix {
         let words = self.cols.div_ceil(64).max(1);
         let mut out = Matrix::zeros(self.rows, n);
         let workers = par.workers_for(self.rows * n * words);
-        par_tiles_with(
+        let isa = dispatch::active();
+        // Bands aligned to the 4-weight-row register blocking so column
+        // splits don't strand quad groups on tile edges.
+        par_tiles_aligned(
             par.dispatch(),
             workers,
             self.rows,
             n,
+            4,
             &mut out.data,
             |rr, cc, tile| {
-                bin_tile(
+                kernels::bin_tile(
+                    isa,
                     &self.row_bits,
                     &weights_t.row_bits,
                     self.cols,
@@ -126,56 +133,6 @@ impl BitMatrix {
     /// whole bytes — the Table II memory accounting).
     pub fn packed_bytes(&self) -> usize {
         self.row_bits.iter().map(|r| r.packed_bytes()).sum()
-    }
-}
-
-/// Tile kernel for [`BitMatrix::matmul_t_par`]: XNOR-popcount counts for
-/// activation rows `rows` × weight rows `cols`, written into the
-/// row-major `rows.len() × cols.len()` tile.
-///
-/// Register blocking: four weight rows are walked per activation-word
-/// pass (four disagreement accumulators), so each activation word is
-/// loaded once per four outputs. The `s = K - 2·popcount(a XOR w)`
-/// arithmetic is exact in integers — identical to [`BitVector::dot`] per
-/// output.
-fn bin_tile(
-    acts: &[BitVector],
-    weights: &[BitVector],
-    len: usize,
-    rows: Range<usize>,
-    cols: Range<usize>,
-    tile: &mut [f32],
-) {
-    let tw = cols.len();
-    let k = len as i32;
-    for (ti, r) in rows.clone().enumerate() {
-        let a = acts[r].words.as_slice();
-        let t_row = &mut tile[ti * tw..(ti + 1) * tw];
-        let mut c = cols.start;
-        while c + 4 <= cols.end {
-            let w0 = &weights[c].words[..a.len()];
-            let w1 = &weights[c + 1].words[..a.len()];
-            let w2 = &weights[c + 2].words[..a.len()];
-            let w3 = &weights[c + 3].words[..a.len()];
-            let (mut d0, mut d1, mut d2, mut d3) = (0u32, 0u32, 0u32, 0u32);
-            for (i, &aw) in a.iter().enumerate() {
-                d0 += (aw ^ w0[i]).count_ones();
-                d1 += (aw ^ w1[i]).count_ones();
-                d2 += (aw ^ w2[i]).count_ones();
-                d3 += (aw ^ w3[i]).count_ones();
-            }
-            let tc = c - cols.start;
-            t_row[tc] = (k - 2 * d0 as i32) as f32;
-            t_row[tc + 1] = (k - 2 * d1 as i32) as f32;
-            t_row[tc + 2] = (k - 2 * d2 as i32) as f32;
-            t_row[tc + 3] = (k - 2 * d3 as i32) as f32;
-            c += 4;
-        }
-        // Ragged tail weight rows.
-        while c < cols.end {
-            t_row[c - cols.start] = acts[r].dot(&weights[c]) as f32;
-            c += 1;
-        }
     }
 }
 
@@ -305,7 +262,7 @@ mod tests {
             for workers in [1usize, 2, 5] {
                 let mut out = vec![0.0f32; b * n];
                 crate::util::par::par_tiles(workers, b, n, &mut out, |rr, cc, tile| {
-                    bin_tile(&acts.row_bits, &w_t.row_bits, k, rr, cc, tile)
+                    kernels::bin_tile_scalar(&acts.row_bits, &w_t.row_bits, k, rr, cc, tile)
                 });
                 if out != oracle.data {
                     return Err(format!("mismatch b={b} k={k} n={n} workers={workers}"));

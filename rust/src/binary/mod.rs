@@ -16,7 +16,29 @@
 //! host-side. The hardware packs 16 bits per PE lane ([`crate::BINARY_PACK`]);
 //! the 64-bit host packing is a pure performance choice — [`BitVector::dot`]
 //! is bit-exact with the 16-bit-lane hardware model in [`crate::sim`].
+//!
+//! The word-level reduction inside [`BitMatrix::matmul_t_par`] is
+//! routed by [`crate::util::dispatch`] (scalar `count_ones` vs 256-bit
+//! popcount on AVX2); because the counts are exact integers, every
+//! kernel is bit-identical:
+//!
+//! ```
+//! use beanna::bf16::Matrix;
+//! use beanna::binary::{BitMatrix, BitVector};
+//!
+//! // +1 ↦ bit 0, -1 ↦ bit 1; a dot product counts agreements − disagreements.
+//! let a = BitVector::from_f32(&[1.0, -1.0, 1.0]);
+//! let w = BitVector::from_f32(&[1.0, 1.0, -1.0]);
+//! assert_eq!(a.dot(&w), 1 - 2); // one agreement, two disagreements
+//!
+//! // The packed matmul is the same arithmetic per output element.
+//! let acts = BitMatrix::from_matrix(&Matrix::from_vec(1, 3, vec![1.0, -1.0, 1.0])?);
+//! let weights_t = BitMatrix::from_matrix(&Matrix::from_vec(1, 3, vec![1.0, 1.0, -1.0])?);
+//! assert_eq!(acts.matmul_t(&weights_t)?.data, vec![-1.0]);
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
+pub(crate) mod kernels;
 pub mod matrix;
 
 pub use matrix::BitMatrix;

@@ -23,7 +23,8 @@ use anyhow::{ensure, Result};
 
 use super::Conv2dSpec;
 use crate::bf16::Matrix;
-use crate::binary::BitMatrix;
+use crate::binary::{kernels, BitMatrix};
+use crate::util::dispatch;
 use crate::util::par::Parallelism;
 use crate::util::pool::par_row_chunks_mut;
 
@@ -116,6 +117,9 @@ pub fn conv2d_direct_binary(
     let rows = xb.rows * oh * ow;
     let mut y = Matrix::zeros(rows, spec.out_channels);
     let workers = par.workers_for(rows * spec.out_channels * words);
+    // The window-vs-slice reduction inherits the dispatched popcount
+    // kernel (exact integers — identical on every ISA).
+    let isa = dispatch::active();
     par_row_chunks_mut(
         par.dispatch(),
         workers,
@@ -159,9 +163,7 @@ pub fn conv2d_direct_binary(
                     for ky in 0..spec.kernel {
                         let win = &windows[ky * words..(ky + 1) * words];
                         let ws = &slices[oc * spec.kernel + ky];
-                        for (a, w) in win.iter().zip(ws.iter()) {
-                            disagreements += (a ^ w).count_ones();
-                        }
+                        disagreements += kernels::xor_popcount(isa, win, ws);
                     }
                     *o = (kp as i32 - 2 * disagreements as i32) as f32;
                 }

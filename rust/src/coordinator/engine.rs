@@ -12,7 +12,7 @@
 //!
 //! Built fluently:
 //!
-//! ```no_run
+//! ```
 //! use beanna::coordinator::{Engine, SimulatorBackend, RoutePolicy, BatchPolicy};
 //! use beanna::nn::{Network, NetworkConfig, Precision};
 //!
@@ -28,6 +28,7 @@
 //!     .build()?;
 //! let resp = engine.infer("tiny", vec![0.5; 32])?;
 //! assert_eq!(resp.logits.len(), 4);
+//! engine.shutdown();
 //! # anyhow::Ok(())
 //! ```
 //!

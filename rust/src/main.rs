@@ -176,6 +176,21 @@ fn parse_route(s: &str) -> Result<RoutePolicy> {
     })
 }
 
+/// Apply a `--kernel` value: pin the matmul kernel ISA for the whole
+/// process (overriding `BEANNA_KERNEL`) before any weights are packed,
+/// so panel layouts match the forced kernel. Must run before
+/// `Network::load`/`Network::random`. Prints the resolved kernel so
+/// A/B runs are self-describing.
+fn force_kernel(value: &str) -> Result<()> {
+    beanna::util::dispatch::force_named(value).map_err(anyhow::Error::msg)?;
+    eprintln!(
+        "kernel: {} (requested '{}')",
+        beanna::util::dispatch::active().tag(),
+        value
+    );
+    Ok(())
+}
+
 /// Parse a `--priority` value.
 fn parse_priority(s: &str) -> Result<Priority> {
     Ok(match s {
@@ -248,8 +263,14 @@ fn cmd_infer(args: Vec<String>) -> Result<()> {
             "0",
             "client-side wait budget; on timeout the ticket is cancelled (0 = wait forever)",
         )
+        .opt(
+            "kernel",
+            "auto",
+            "matmul kernel ISA: auto | scalar | avx2 | neon (overrides BEANNA_KERNEL)",
+        )
         .flag("show", "print the image as ASCII art");
     let p = spec.parse_from(args)?;
+    force_kernel(p.get("kernel").unwrap())?;
     let paths = ArtifactPaths::discover();
     let test = SynthMnist::load(&paths.dataset())?;
     let idx = p.get_usize("index")?;
@@ -365,11 +386,17 @@ fn cmd_serve(args: Vec<String>) -> Result<()> {
              (keys: error, garbage, panic, latency-rate, latency-us, \
              fail-first, panic-on-call, seed)",
         )
+        .opt(
+            "kernel",
+            "auto",
+            "matmul kernel ISA: auto | scalar | avx2 | neon (overrides BEANNA_KERNEL)",
+        )
         .flag(
             "pool-batch",
             "clamp dynamic batches to the kernel pool's row budget",
         );
     let p = spec.parse_from(args)?;
+    force_kernel(p.get("kernel").unwrap())?;
     let paths = ArtifactPaths::discover();
     let test = SynthMnist::load(&paths.dataset())?;
     let max_batch = p.get_usize("max-batch")?;
@@ -805,8 +832,14 @@ fn cmd_worker(args: Vec<String>) -> Result<()> {
             "kernel-workers",
             "0",
             "matmul threads per batch (0 = all cores)",
+        )
+        .opt(
+            "kernel",
+            "auto",
+            "matmul kernel ISA: auto | scalar | avx2 | neon (overrides BEANNA_KERNEL)",
         );
     let p = spec.parse_from(args)?;
+    force_kernel(p.get("kernel").unwrap())?;
     let net = match p.get("random").unwrap() {
         "" => Network::load(&ArtifactPaths::discover().weights(p.get("model").unwrap()))?,
         csv => Network::random(&parse_model_spec(csv)?, p.get_u64("seed")?),

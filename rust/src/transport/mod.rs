@@ -28,7 +28,32 @@
 //!
 //! In-process and remote replicas are interchangeable: the conformance
 //! suite drives [`RemoteBackend`] over a loopback [`WorkerHost`] and
-//! requires bit-identical logits to the wrapped local backend.
+//! requires bit-identical logits to the wrapped local backend:
+//!
+//! ```
+//! use beanna::coordinator::{ExecutionBackend, ReferenceBackend};
+//! use beanna::nn::{Network, NetworkConfig, Precision};
+//! use beanna::transport::{RemoteBackend, RemoteConfig, WorkerConfig, WorkerHost};
+//!
+//! // Serve a tiny model from a loopback worker, then dial it.
+//! let net = Network::random(&NetworkConfig::uniform(&[8, 6, 3], Precision::Bf16), 4);
+//! let host = WorkerHost::start(
+//!     ReferenceBackend::boxed(net.clone()),
+//!     "127.0.0.1:0",
+//!     WorkerConfig::default(),
+//! )?;
+//! let mut remote = RemoteBackend::boxed(host.local_addr(), RemoteConfig::default())?;
+//!
+//! // The wire is transparent: logits match the wrapped backend exactly.
+//! let x = beanna::bf16::Matrix::from_vec(2, 8, vec![0.25; 16])?;
+//! let local = ReferenceBackend::new(net).run_batch(&x)?;
+//! assert_eq!(remote.run_batch(&x)?.logits, local.logits);
+//!
+//! drop(remote); // hang up first so the drain below finishes promptly
+//! host.begin_drain();
+//! host.join();
+//! # Ok::<(), anyhow::Error>(())
+//! ```
 
 pub mod faulty;
 pub mod frame;

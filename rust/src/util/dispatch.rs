@@ -1,0 +1,274 @@
+//! Runtime kernel dispatch: CPU-feature detection → best packed-GEMM kernel.
+//!
+//! The packed hot paths ([`crate::bf16::packed`] and [`crate::binary`])
+//! each have one portable scalar reference kernel plus optional
+//! SIMD variants (AVX2 on x86-64, NEON on aarch64). This module is the
+//! single seam that decides which one runs:
+//!
+//! 1. a process-wide programmatic override set by [`force`]
+//!    (the `--kernel` CLI flag and the test sweeps use this), else
+//! 2. the `BEANNA_KERNEL` environment variable
+//!    (`scalar | avx2 | neon | auto`), else
+//! 3. [`KernelIsa::detect`] — the best ISA the running CPU supports.
+//!
+//! Requesting an ISA the CPU (or build target) lacks is never an error:
+//! the request falls back to [`KernelIsa::detect`] with a one-time
+//! stderr warning, mirroring how `BEANNA_WORKERS` handles malformed
+//! values. This keeps `BEANNA_KERNEL=avx2` in a CI matrix safe on any
+//! runner.
+//!
+//! Every kernel behind this seam is **bit-identical** to the scalar
+//! reference (see `rust/README.md` §Performance for the contract), so
+//! switching kernels — even mid-process — never changes results, only
+//! throughput. That is what makes a process-global override safe.
+//!
+//! ```
+//! use beanna::util::dispatch::{self, KernelIsa};
+//!
+//! // The active ISA is always one the CPU actually supports.
+//! assert!(dispatch::active().available());
+//! // The scalar floor exists everywhere and uses the [k][4] panel layout.
+//! assert!(KernelIsa::Scalar.available());
+//! assert_eq!(KernelIsa::Scalar.bf16_lanes(), 4);
+//! ```
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Once, OnceLock};
+
+/// Instruction-set architectures the packed kernels are specialised for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelIsa {
+    /// Portable scalar reference (the bit-exactness oracle). `[k][4]`
+    /// bf16 panels, `u64::count_ones` binary reduction.
+    Scalar,
+    /// 256-bit x86-64 path: 8-lane `mul+add` bf16 panels (`[k][8]`),
+    /// nibble-LUT (Mula) popcount over 256-bit XOR lanes.
+    Avx2,
+    /// 128-bit aarch64 path: 4-lane bf16 panels (`[k][4]`), scalar
+    /// binary reduction (aarch64 `count_ones` already lowers to
+    /// `CNT`+`ADDV`).
+    Neon,
+}
+
+impl KernelIsa {
+    /// All known ISAs, in preference order (best last).
+    pub const ALL: [KernelIsa; 3] = [KernelIsa::Scalar, KernelIsa::Neon, KernelIsa::Avx2];
+
+    /// Short lowercase tag, as accepted by `BEANNA_KERNEL` and used in
+    /// bench keys (`bf16_avx2_gops`, ...).
+    pub fn tag(self) -> &'static str {
+        match self {
+            KernelIsa::Scalar => "scalar",
+            KernelIsa::Avx2 => "avx2",
+            KernelIsa::Neon => "neon",
+        }
+    }
+
+    /// Parse a `BEANNA_KERNEL` / `--kernel` value. `Ok(None)` means
+    /// `auto` (defer to [`KernelIsa::detect`]).
+    pub fn parse(s: &str) -> Result<Option<KernelIsa>, ()> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" | "" => Ok(None),
+            "scalar" => Ok(Some(KernelIsa::Scalar)),
+            "avx2" => Ok(Some(KernelIsa::Avx2)),
+            "neon" => Ok(Some(KernelIsa::Neon)),
+            _ => Err(()),
+        }
+    }
+
+    /// Whether the running CPU (and build target) can execute this
+    /// ISA's kernels.
+    pub fn available(self) -> bool {
+        match self {
+            KernelIsa::Scalar => true,
+            KernelIsa::Avx2 => avx2_available(),
+            // NEON is baseline on aarch64; we never runtime-probe it.
+            KernelIsa::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// The best available ISA on this machine (cached after first call).
+    pub fn detect() -> KernelIsa {
+        static DETECTED: OnceLock<KernelIsa> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            if KernelIsa::Avx2.available() {
+                KernelIsa::Avx2
+            } else if KernelIsa::Neon.available() {
+                KernelIsa::Neon
+            } else {
+                KernelIsa::Scalar
+            }
+        })
+    }
+
+    /// Panel width (output columns interleaved per k step) the bf16
+    /// packed kernel for this ISA expects. [`crate::bf16::PackedWeights`]
+    /// records the width it was packed with; the dispatcher only takes
+    /// a SIMD fast path when the layout matches.
+    pub fn bf16_lanes(self) -> usize {
+        match self {
+            KernelIsa::Scalar => 4,
+            KernelIsa::Avx2 => 8,
+            KernelIsa::Neon => 4,
+        }
+    }
+}
+
+fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        is_x86_feature_detected!("avx2") && is_x86_feature_detected!("popcnt")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+// Process-wide override state: 0 = no override, else 1 + discriminant.
+const OVR_NONE: u8 = 0;
+const OVR_SCALAR: u8 = 1;
+const OVR_AVX2: u8 = 2;
+const OVR_NEON: u8 = 3;
+
+static OVERRIDE: AtomicU8 = AtomicU8::new(OVR_NONE);
+
+fn encode(isa: Option<KernelIsa>) -> u8 {
+    match isa {
+        None => OVR_NONE,
+        Some(KernelIsa::Scalar) => OVR_SCALAR,
+        Some(KernelIsa::Avx2) => OVR_AVX2,
+        Some(KernelIsa::Neon) => OVR_NEON,
+    }
+}
+
+fn decode(v: u8) -> Option<KernelIsa> {
+    match v {
+        OVR_SCALAR => Some(KernelIsa::Scalar),
+        OVR_AVX2 => Some(KernelIsa::Avx2),
+        OVR_NEON => Some(KernelIsa::Neon),
+        _ => None,
+    }
+}
+
+/// Programmatically pin the kernel ISA for the whole process
+/// (overrides `BEANNA_KERNEL`); `None` restores auto-detection.
+///
+/// Because all kernels are bit-identical, flipping this concurrently
+/// with running inference is safe: in-flight matmuls finish on
+/// whichever kernel they dispatched, with the same results.
+pub fn force(isa: Option<KernelIsa>) {
+    OVERRIDE.store(encode(isa), Ordering::SeqCst);
+}
+
+/// Parse-and-[`force`] a CLI-style value (`scalar|avx2|neon|auto`).
+/// Returns the human-readable error for unknown values.
+pub fn force_named(value: &str) -> Result<(), String> {
+    match KernelIsa::parse(value) {
+        Ok(isa) => {
+            force(isa);
+            Ok(())
+        }
+        Err(()) => Err(format!(
+            "invalid kernel '{value}': expected scalar | avx2 | neon | auto"
+        )),
+    }
+}
+
+/// The `BEANNA_KERNEL` request, parsed once per process. Malformed
+/// values warn once and behave as `auto`.
+fn env_request() -> Option<KernelIsa> {
+    static ENV: OnceLock<Option<KernelIsa>> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("BEANNA_KERNEL") {
+        Ok(raw) => match KernelIsa::parse(&raw) {
+            Ok(isa) => isa,
+            Err(()) => {
+                eprintln!(
+                    "beanna: ignoring invalid BEANNA_KERNEL='{raw}' \
+                     (expected scalar | avx2 | neon | auto); using auto"
+                );
+                None
+            }
+        },
+        Err(_) => None,
+    })
+}
+
+/// Resolve the ISA the next dispatched matmul will use:
+/// [`force`] override > `BEANNA_KERNEL` > [`KernelIsa::detect`].
+///
+/// An unavailable request falls back to [`KernelIsa::detect`] after a
+/// one-time stderr warning — never a panic, never a hard error.
+pub fn active() -> KernelIsa {
+    let requested = match decode(OVERRIDE.load(Ordering::SeqCst)) {
+        Some(isa) => Some(isa),
+        None => env_request(),
+    };
+    match requested {
+        Some(isa) if isa.available() => isa,
+        Some(isa) => {
+            static WARN: Once = Once::new();
+            WARN.call_once(|| {
+                eprintln!(
+                    "beanna: requested kernel '{}' is not available on this CPU; \
+                     falling back to '{}'",
+                    isa.tag(),
+                    KernelIsa::detect().tag()
+                );
+            });
+            KernelIsa::detect()
+        }
+        None => KernelIsa::detect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_all_tags_and_auto() {
+        assert_eq!(KernelIsa::parse("auto"), Ok(None));
+        assert_eq!(KernelIsa::parse(""), Ok(None));
+        assert_eq!(KernelIsa::parse("scalar"), Ok(Some(KernelIsa::Scalar)));
+        assert_eq!(KernelIsa::parse("AVX2"), Ok(Some(KernelIsa::Avx2)));
+        assert_eq!(KernelIsa::parse(" neon "), Ok(Some(KernelIsa::Neon)));
+        assert_eq!(KernelIsa::parse("sse9"), Err(()));
+    }
+
+    #[test]
+    fn tags_roundtrip_through_parse() {
+        for isa in KernelIsa::ALL {
+            assert_eq!(KernelIsa::parse(isa.tag()), Ok(Some(isa)));
+        }
+    }
+
+    #[test]
+    fn override_encoding_roundtrips() {
+        assert_eq!(decode(encode(None)), None);
+        for isa in KernelIsa::ALL {
+            assert_eq!(decode(encode(Some(isa))), Some(isa));
+        }
+    }
+
+    #[test]
+    fn detect_is_available_and_scalar_always_is() {
+        assert!(KernelIsa::detect().available());
+        assert!(KernelIsa::Scalar.available());
+    }
+
+    #[test]
+    fn lane_widths_match_kernel_contracts() {
+        assert_eq!(KernelIsa::Scalar.bf16_lanes(), 4);
+        assert_eq!(KernelIsa::Avx2.bf16_lanes(), 8);
+        assert_eq!(KernelIsa::Neon.bf16_lanes(), 4);
+    }
+
+    #[test]
+    fn force_named_rejects_unknown_with_usage() {
+        let err = force_named("sse42").unwrap_err();
+        assert!(err.contains("sse42") && err.contains("auto"));
+        // State is untouched by a failed parse.
+        assert!(active().available());
+    }
+}

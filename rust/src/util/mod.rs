@@ -11,6 +11,9 @@
 //! * [`prop`] — a miniature property-based testing framework with
 //!   shrinking-free counterexample reporting.
 //! * [`stats`] — summary statistics shared by `bench` and the reports.
+//! * [`dispatch`] — runtime CPU-feature detection routing the packed
+//!   GEMMs to the best kernel (scalar / AVX2 / NEON), with the
+//!   `BEANNA_KERNEL` override surface.
 //! * [`par`] — output tiling for the matmul hot paths (no `rayon`),
 //!   with a work-size-aware worker heuristic.
 //! * [`pool`] — the persistent worker pool the tiles dispatch to
@@ -19,6 +22,7 @@
 
 pub mod args;
 pub mod bench;
+pub mod dispatch;
 pub mod par;
 pub mod pool;
 pub mod prop;

@@ -25,6 +25,32 @@
 //! accumulation order. Every parallel kernel in this crate is asserted
 //! bit-identical to its serial counterpart by
 //! `tests/integration_par_kernels.rs`.
+//!
+//! Column bands can additionally be aligned to the dispatched kernel's
+//! panel width ([`par_tiles_aligned`]) so a split never cuts a SIMD
+//! lane group mid-panel — alignment affects throughput only, never
+//! results (the kernels handle unaligned edges exactly).
+//!
+//! ```
+//! use beanna::util::par::{par_tiles, Parallelism};
+//!
+//! // Fill a 4×6 output from a per-element rule; any split must agree.
+//! let (rows, cols) = (4, 6);
+//! let mut out = vec![0.0f32; rows * cols];
+//! par_tiles(3, rows, cols, &mut out, |rr, cc, tile| {
+//!     let w = cc.len();
+//!     for (ti, r) in rr.clone().enumerate() {
+//!         for (tj, c) in cc.clone().enumerate() {
+//!             tile[ti * w + tj] = (r * 10 + c) as f32;
+//!         }
+//!     }
+//! });
+//! assert_eq!(out[2 * cols + 1], 21.0); // row 2, col 1
+//!
+//! // Work-size-aware budget: tiny problems never pay dispatch cost.
+//! let p = Parallelism::fixed(8);
+//! assert_eq!(p.workers_for(100), 1);
+//! ```
 
 use std::ops::Range;
 
@@ -189,7 +215,28 @@ pub fn par_tiles_with<K>(
 ) where
     K: Fn(Range<usize>, Range<usize>, &mut [f32]) + Sync,
 {
+    par_tiles_aligned(dispatch, workers, rows, cols, 1, out, kernel)
+}
+
+/// [`par_tiles_with`] with column bands rounded up to a multiple of
+/// `col_align` — the dispatched kernel's panel width — so a band
+/// boundary never cuts a SIMD lane group in half (edge columns would
+/// silently take the scalar path on *both* sides of the cut).
+/// Alignment never changes results, only which columns land in which
+/// band; `col_align = 1` is exactly [`par_tiles_with`].
+pub fn par_tiles_aligned<K>(
+    dispatch: Dispatch,
+    workers: usize,
+    rows: usize,
+    cols: usize,
+    col_align: usize,
+    out: &mut [f32],
+    kernel: K,
+) where
+    K: Fn(Range<usize>, Range<usize>, &mut [f32]) + Sync,
+{
     assert_eq!(out.len(), rows * cols, "output buffer size mismatch");
+    let col_align = col_align.max(1);
     let workers = workers.max(1).min(rows.max(1) * cols.max(1));
     if workers == 1 || rows == 0 || cols == 0 {
         kernel(0..rows, 0..cols, out);
@@ -205,8 +252,9 @@ pub fn par_tiles_with<K>(
             kernel(r0..r0 + band.len() / cols, 0..cols, band)
         });
     } else if cols >= workers {
-        // Column bands through private scratch tiles.
-        let band_cols = cols.div_ceil(workers);
+        // Column bands through private scratch tiles, band width
+        // rounded up to the kernel's panel alignment.
+        let band_cols = cols.div_ceil(workers).div_ceil(col_align) * col_align;
         let mut bands: Vec<(Range<usize>, Vec<f32>)> = (0..cols.div_ceil(band_cols))
             .map(|i| {
                 let c0 = i * band_cols;
@@ -292,6 +340,40 @@ mod tests {
                 assert_eq!(out, reference(rows, cols), "cols={cols} {dispatch:?}");
             }
         }
+    }
+
+    #[test]
+    fn aligned_col_split_matches_serial_for_any_alignment() {
+        for align in [1usize, 4, 8, 16] {
+            for cols in [8usize, 9, 17, 64] {
+                let rows = 2;
+                let mut out = vec![0.0; rows * cols];
+                par_tiles_aligned(Dispatch::Pool, 8, rows, cols, align, &mut out, fill);
+                assert_eq!(out, reference(rows, cols), "cols={cols} align={align}");
+            }
+        }
+        // Alignment wider than the whole output collapses to one band.
+        let mut out = vec![0.0; 2 * 6];
+        par_tiles_aligned(Dispatch::Spawn, 4, 2, 6, 64, &mut out, fill);
+        assert_eq!(out, reference(2, 6));
+    }
+
+    #[test]
+    fn column_bands_start_on_alignment_boundaries() {
+        use std::sync::Mutex;
+        let starts = Mutex::new(Vec::new());
+        let (rows, cols, align) = (2usize, 61usize, 8usize);
+        let mut out = vec![0.0; rows * cols];
+        par_tiles_aligned(Dispatch::Pool, 6, rows, cols, align, &mut out, |rr, cc, tile| {
+            starts.lock().unwrap().push(cc.start);
+            fill(rr, cc, tile);
+        });
+        let starts = starts.into_inner().unwrap();
+        assert!(starts.len() > 1, "expected a column split, got {starts:?}");
+        for s in starts {
+            assert_eq!(s % align, 0, "band start {s} not {align}-aligned");
+        }
+        assert_eq!(out, reference(rows, cols));
     }
 
     #[test]

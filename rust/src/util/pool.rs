@@ -32,6 +32,22 @@
 //! The serial path of [`crate::util::par::par_tiles_with`] never touches
 //! the pool, so bit-exactness of the scalar reference is preserved by
 //! construction; the pool only changes *which thread* runs a tile.
+//!
+//! ```
+//! use beanna::util::par::Dispatch;
+//! use beanna::util::pool::{par_row_bands, WorkerPool};
+//!
+//! // Jobs may borrow from the caller's stack (scoped semantics).
+//! let inputs = [10u64, 20, 30, 40];
+//! let squares = par_row_bands(Dispatch::Pool, 2, inputs.len(), |band| {
+//!     band.map(|i| inputs[i] * inputs[i]).collect::<Vec<_>>()
+//! });
+//! let flat: Vec<u64> = squares.into_iter().flatten().collect();
+//! assert_eq!(flat, vec![100, 400, 900, 1600]);
+//!
+//! // The process-wide pool is created lazily and then reused.
+//! assert!(WorkerPool::global().threads() >= 1);
+//! ```
 
 use std::cell::Cell;
 use std::collections::VecDeque;

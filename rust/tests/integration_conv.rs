@@ -190,6 +190,42 @@ fn small_cnn() -> Network {
     )
 }
 
+/// Dispatch determinism through the conv subsystem: the hybrid CNN
+/// forward (bf16 conv, binary conv, pool, dense stages) is
+/// bit-identical under every forced kernel ISA, and the two binary
+/// lowerings keep agreeing on each of them. Layers are rebuilt per ISA
+/// because weight panels pack at construction. Kernels are bit-exact by
+/// contract, so forcing here is safe even while sibling tests run.
+#[test]
+fn cnn_forward_bit_identical_under_forced_kernel_sweep() {
+    use beanna::util::dispatch::{self, KernelIsa};
+
+    let x = rand_matrix(4, small_cnn().config.input_width(), 1100);
+    dispatch::force(Some(KernelIsa::Scalar));
+    let want = small_cnn().forward_with(&x, Parallelism::serial()).unwrap();
+    let spec = spec_of((6, 6, 2, 4, 3, 1, 1));
+    let w = rand_matrix(spec.out_channels, spec.patch_len(), 1200);
+    let xm = rand_matrix(3, spec.input.features(), 1300);
+    for isa in KernelIsa::ALL {
+        if !isa.available() {
+            continue;
+        }
+        dispatch::force(Some(isa));
+        let got = small_cnn().forward_with(&x, Parallelism::fixed(3)).unwrap();
+        assert_eq!(want.data, got.data, "kernel {}: CNN forward diverged", isa.tag());
+        let mk = |algo| {
+            ConvLayer::binary(spec, &w, None, false)
+                .unwrap()
+                .with_algo(algo)
+        };
+        let par = Parallelism::fixed(2);
+        let a = mk(ConvAlgo::Im2col).psums_with(&xm, par).unwrap();
+        let b = mk(ConvAlgo::Direct).psums_with(&xm, par).unwrap();
+        assert_eq!(a.data, b.data, "kernel {}: direct != im2col", isa.tag());
+    }
+    dispatch::force(None);
+}
+
 /// Whole-network worker-count invariance with a conv front — the
 /// packed streaming run across conv and dense binary stages included.
 #[test]

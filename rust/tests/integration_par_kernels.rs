@@ -7,11 +7,25 @@
 //! changes *which thread* computes an output element, never the
 //! element's accumulation order.
 
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
 use beanna::bf16::{Matrix, PackedWeights};
 use beanna::binary::BitMatrix;
 use beanna::nn::{Network, NetworkConfig};
+use beanna::util::dispatch::{self, KernelIsa};
 use beanna::util::par::{Dispatch, Parallelism};
 use beanna::util::prop::{check, Gen};
+
+/// Serializes the tests that flip the process-global kernel override.
+/// (Forcing a kernel under a concurrently-running test is *correct* —
+/// kernels are bit-identical — but the fallback test asserts on
+/// `dispatch::active()` itself, which another forcing test could move.)
+fn kernel_guard() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let lock = LOCK.get_or_init(|| Mutex::new(()));
+    // A test that panicked while holding the guard doesn't invalidate it.
+    lock.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// Worker configurations under test: serial, forced small counts on
 /// both dispatch strategies (persistent pool and spawn-per-call), and
@@ -225,6 +239,97 @@ fn binary_stack_streaming_matches_layerwise_float_path() {
             }
         }
     }
+}
+
+/// Dispatch determinism: forcing each available kernel ISA in turn —
+/// scalar, NEON, AVX2 — must produce bit-identical network logits.
+/// Networks are rebuilt per ISA because `DenseLayer` packs its weight
+/// panels at construction under the then-active layout.
+#[test]
+fn forced_kernel_sweep_produces_bit_identical_logits() {
+    let _guard = kernel_guard();
+    let mut g = Gen::new(0xD15);
+    let x = rand_matrix(&mut g, 3, 784, -1.0, 1.0);
+    dispatch::force(Some(KernelIsa::Scalar));
+    let want = Network::random(&NetworkConfig::beanna_hybrid(), 21)
+        .forward_with(&x, Parallelism::serial())
+        .unwrap();
+    for isa in KernelIsa::ALL {
+        if !isa.available() {
+            continue;
+        }
+        dispatch::force(Some(isa));
+        let net = Network::random(&NetworkConfig::beanna_hybrid(), 21);
+        for par in [Parallelism::serial(), Parallelism::fixed(3), Parallelism::auto()] {
+            let got = net.forward_with(&x, par).unwrap();
+            assert_eq!(want, got, "kernel {} par {par:?} diverged", isa.tag());
+        }
+    }
+    dispatch::force(None);
+}
+
+/// Cross-layout determinism: weights packed under one ISA's panel
+/// layout and executed under another must still be exact — mismatched
+/// combinations take the generic scalar path, never a wrong-layout
+/// SIMD read.
+#[test]
+fn mismatched_panel_layout_still_bit_exact() {
+    let _guard = kernel_guard();
+    let mut g = Gen::new(0xD16);
+    let a = rand_matrix(&mut g, 4, 257, -2.0, 2.0);
+    let w_nk = rand_matrix(&mut g, 37, 257, -2.0, 2.0);
+    let want = a.matmul_bf16_blocked_t(&w_nk, 16).unwrap();
+    for pack_isa in KernelIsa::ALL {
+        let pw = PackedWeights::pack_for(&w_nk, pack_isa);
+        for run_isa in KernelIsa::ALL {
+            if !run_isa.available() {
+                continue;
+            }
+            dispatch::force(Some(run_isa));
+            let got = a
+                .matmul_bf16_blocked_t_packed_par(&pw, 16, Parallelism::fixed(2))
+                .unwrap();
+            assert_eq!(
+                want,
+                got,
+                "packed for {} run under {} diverged",
+                pack_isa.tag(),
+                run_isa.tag()
+            );
+        }
+    }
+    dispatch::force(None);
+}
+
+/// Graceful fallback: requesting the SIMD ISA this machine does *not*
+/// have (NEON on x86-64, AVX2 elsewhere) must never panic — dispatch
+/// falls back to the detected best kernel (with a one-time stderr
+/// warning) and inference stays bit-exact.
+#[test]
+fn unavailable_kernel_request_falls_back_without_panicking() {
+    let _guard = kernel_guard();
+    let foreign = if KernelIsa::Avx2.available() {
+        KernelIsa::Neon
+    } else {
+        KernelIsa::Avx2
+    };
+    assert!(!foreign.available(), "test needs a genuinely missing ISA");
+    dispatch::force(Some(foreign));
+    assert_eq!(
+        dispatch::active(),
+        KernelIsa::detect(),
+        "fallback must land on the detected best kernel"
+    );
+    let mut g = Gen::new(0xD17);
+    let x = rand_matrix(&mut g, 2, 784, -1.0, 1.0);
+    let got = Network::random(&NetworkConfig::beanna_hybrid(), 5)
+        .forward_with(&x, Parallelism::auto())
+        .unwrap();
+    dispatch::force(None);
+    let want = Network::random(&NetworkConfig::beanna_hybrid(), 5)
+        .forward_with(&x, Parallelism::serial())
+        .unwrap();
+    assert_eq!(want, got, "fallback kernel diverged");
 }
 
 /// Current thread count of this process (Linux); `None` elsewhere.

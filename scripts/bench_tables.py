@@ -1,0 +1,122 @@
+#!/usr/bin/env python3
+"""Regenerate the committed-baseline performance tables in
+rust/README.md from rust/BENCH_baseline.json.
+
+The README carries marked regions:
+
+    <!-- bench-tables:begin NAME -->
+    ...generated table...
+    <!-- bench-tables:end NAME -->
+
+This script rewrites each region from the baseline JSON so the prose
+tables can never drift from the committed numbers. Keys missing from
+the baseline are skipped (e.g. per-ISA keys a runner didn't produce),
+so the script is safe against partial baselines.
+
+Usage:
+    python3 scripts/bench_tables.py            # rewrite in place
+    python3 scripts/bench_tables.py --check    # exit 1 if out of date
+                                               # (CI runs this)
+
+Paths are resolved relative to this file, so it works from any CWD.
+"""
+
+import json
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+BASELINE = ROOT / "rust" / "BENCH_baseline.json"
+README = ROOT / "rust" / "README.md"
+
+MARKER = re.compile(
+    r"(<!-- bench-tables:begin (?P<name>[\w-]+) -->\n)"
+    r".*?"
+    r"(<!-- bench-tables:end (?P=name) -->)",
+    re.DOTALL,
+)
+
+# name -> (caption, header row, [(label, key, format)])
+TABLES = {
+    "hot-paths": (
+        "Hot-path throughput on the paper layer "
+        "(256×1024 · (1024×1024)ᵀ), scalar-pinned historical keys:",
+        ("path", "GOps/s"),
+        [
+            ("bf16 scalar blocked-ᵀ", "bf16_scalar_gops", "{:.1f}"),
+            ("bf16 parallel", "bf16_parallel_gops", "{:.1f}"),
+            ("bf16 packed-parallel", "bf16_packed_gops", "{:.1f}"),
+            ("binary naive dot", "binary_naive_gops", "{:.0f}"),
+            ("binary tiled", "binary_tiled_gops", "{:.0f}"),
+            ("binary parallel", "binary_parallel_gops", "{:.0f}"),
+        ],
+    ),
+    "dispatch": (
+        "Dispatched SIMD kernels (same shape; best kernel: "
+        "`{kernel_best}`):",
+        ("kernel", "GOps/s"),
+        [
+            ("bf16 avx2", "bf16_avx2_gops", "{:.1f}"),
+            ("bf16 neon", "bf16_neon_gops", "{:.1f}"),
+            ("bf16 best", "bf16_best_gops", "{:.1f}"),
+            ("binary avx2", "binary_avx2_gops", "{:.0f}"),
+            ("binary neon", "binary_neon_gops", "{:.0f}"),
+            ("binary best", "binary_best_gops", "{:.0f}"),
+        ],
+    ),
+}
+
+
+def render(name, baseline):
+    caption, header, rows = TABLES[name]
+    caption = caption.format(kernel_best=baseline.get("kernel_best", "?"))
+    lines = [caption, ""]
+    lines.append("| " + " | ".join(header) + " |")
+    lines.append("|" + "---|" * len(header))
+    for label, key, fmt in rows:
+        value = baseline.get(key)
+        if not isinstance(value, (int, float)) or isinstance(value, bool):
+            continue  # key absent from this baseline — skip the row
+        lines.append(f"| {label} | {fmt.format(value)} |")
+    return "\n".join(lines)
+
+
+def main():
+    check = "--check" in sys.argv[1:]
+    baseline = json.loads(BASELINE.read_text())
+    text = README.read_text()
+
+    seen = set()
+
+    def replace(m):
+        name = m.group("name")
+        seen.add(name)
+        if name not in TABLES:
+            print(f"bench-tables: no generator for region '{name}'")
+            sys.exit(1)
+        return m.group(1) + render(name, baseline) + "\n" + m.group(3)
+
+    updated = MARKER.sub(replace, text)
+    missing = set(TABLES) - seen
+    if missing:
+        print(f"bench-tables: README regions missing: {sorted(missing)}")
+        sys.exit(1)
+
+    if check:
+        if updated != text:
+            print(
+                "bench-tables: rust/README.md tables are out of date with "
+                "rust/BENCH_baseline.json — run scripts/bench_tables.py"
+            )
+            sys.exit(1)
+        print("bench-tables: README tables in sync with the baseline")
+    elif updated != text:
+        README.write_text(updated)
+        print("bench-tables: rewrote README tables from the baseline")
+    else:
+        print("bench-tables: README tables already in sync")
+
+
+if __name__ == "__main__":
+    main()
