@@ -45,10 +45,15 @@ pub(crate) fn packed_t_tile(
 ) {
     match isa {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: the arm guard just verified AVX2 is available on this
+        // CPU and the panels carry the 8-lane layout the kernel needs —
+        // exactly the kernel's documented safety contract.
         KernelIsa::Avx2 if w.lanes() == 8 && KernelIsa::Avx2.available() => unsafe {
             packed_t_tile_avx2(a_q, w, k_block, rows, cols, tile)
         },
         #[cfg(target_arch = "aarch64")]
+        // SAFETY: the arm guard just verified NEON is available and the
+        // panels carry the 4-lane layout — the kernel's safety contract.
         KernelIsa::Neon if w.lanes() == 4 && KernelIsa::Neon.available() => unsafe {
             packed_t_tile_neon(a_q, w, k_block, rows, cols, tile)
         },
@@ -209,7 +214,12 @@ unsafe fn packed_t_tile_avx2(
                     let k1 = (k0 + k_block).min(k);
                     let mut blk = [_mm256_setzero_ps(); 4];
                     for kk in k0..k1 {
-                        let wv = _mm256_loadu_ps(panel.as_ptr().add(kk * 8));
+                        // SAFETY: `panel` is the contiguous `[k][8]`
+                        // slab for columns `c..c+8` (`panel.len() ==
+                        // k * 8`) and `kk < k`, so the 8-float
+                        // unaligned load ends at `kk * 8 + 8 ≤
+                        // panel.len()` — in bounds.
+                        let wv = unsafe { _mm256_loadu_ps(panel.as_ptr().add(kk * 8)) };
                         for (i, b) in blk.iter_mut().enumerate().take(r_tile) {
                             let a = _mm256_set1_ps(a_q[(r + i) * k + kk]);
                             *b = _mm256_add_ps(*b, _mm256_mul_ps(a, wv));
@@ -221,10 +231,16 @@ unsafe fn packed_t_tile_avx2(
                     k0 = k1;
                 }
                 for (i, t) in acc.iter().enumerate().take(r_tile) {
-                    let dst = tile
-                        .as_mut_ptr()
-                        .add((r + i - rows.start) * tw + (c - cols.start));
-                    _mm256_storeu_ps(dst, *t);
+                    // SAFETY: `r + i < rows.end` (`i < r_tile`) and the
+                    // branch guard gives `c + 8 <= cols.end`, so the
+                    // 8-float unaligned store stays inside the
+                    // `rows.len() * tw` tile buffer.
+                    unsafe {
+                        let dst = tile
+                            .as_mut_ptr()
+                            .add((r + i - rows.start) * tw + (c - cols.start));
+                        _mm256_storeu_ps(dst, *t);
+                    }
                 }
                 c += 8;
             } else {
@@ -274,7 +290,11 @@ unsafe fn packed_t_tile_neon(
                     let k1 = (k0 + k_block).min(k);
                     let mut blk = [vdupq_n_f32(0.0); 4];
                     for kk in k0..k1 {
-                        let wv = vld1q_f32(panel.as_ptr().add(kk * 4));
+                        // SAFETY: `panel` is the contiguous `[k][4]`
+                        // slab for columns `c..c+4` (`panel.len() ==
+                        // k * 4`) and `kk < k`, so the 4-float load
+                        // ends at `kk * 4 + 4 ≤ panel.len()`.
+                        let wv = unsafe { vld1q_f32(panel.as_ptr().add(kk * 4)) };
                         for (i, b) in blk.iter_mut().enumerate().take(r_tile) {
                             let a = vdupq_n_f32(a_q[(r + i) * k + kk]);
                             *b = vaddq_f32(*b, vmulq_f32(a, wv));
@@ -286,10 +306,15 @@ unsafe fn packed_t_tile_neon(
                     k0 = k1;
                 }
                 for (i, t) in acc.iter().enumerate().take(r_tile) {
-                    let dst = tile
-                        .as_mut_ptr()
-                        .add((r + i - rows.start) * tw + (c - cols.start));
-                    vst1q_f32(dst, *t);
+                    // SAFETY: `r + i < rows.end` (`i < r_tile`) and the
+                    // branch guard gives `c + 4 <= cols.end`, so the
+                    // 4-float store stays inside the tile buffer.
+                    unsafe {
+                        let dst = tile
+                            .as_mut_ptr()
+                            .add((r + i - rows.start) * tw + (c - cols.start));
+                        vst1q_f32(dst, *t);
+                    }
                 }
                 c += 4;
             } else {

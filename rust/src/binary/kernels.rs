@@ -35,6 +35,8 @@ pub(crate) fn bin_tile(
 ) {
     match isa {
         #[cfg(target_arch = "x86_64")]
+        // SAFETY: the arm guard just verified AVX2 (and popcnt, checked
+        // together by `available`) on this CPU — the kernel's contract.
         KernelIsa::Avx2 if KernelIsa::Avx2.available() => unsafe {
             bin_tile_avx2(acts, weights, len, rows, cols, tile)
         },
@@ -51,6 +53,9 @@ pub(crate) fn xor_popcount(isa: KernelIsa, a: &[u64], b: &[u64]) -> u32 {
     match isa {
         #[cfg(target_arch = "x86_64")]
         // Below 4 words there is no 256-bit work; skip straight to scalar.
+        // SAFETY: the arm guard just verified AVX2+popcnt availability,
+        // and the debug assertion above pins `a.len() == b.len()` — the
+        // reduction's documented contract.
         KernelIsa::Avx2 if a.len() >= 4 && KernelIsa::Avx2.available() => unsafe {
             xor_popcount_avx2(a, b)
         },
@@ -115,10 +120,15 @@ pub(crate) fn bin_tile_scalar(
 /// 256-bit popcount of each 64-bit lane (Mula's nibble-LUT algorithm):
 /// per-byte counts via two `shuffle_epi8` table lookups, summed into
 /// the four u64 lanes by `sad_epu8`. Exact for any input.
+///
+/// A *safe* `#[target_feature]` fn: it touches no raw pointers, so the
+/// only obligation is the CPU feature, which the AVX2-annotated callers
+/// satisfy statically (calling it from elsewhere would itself require
+/// `unsafe`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
-unsafe fn popcount256(v: std::arch::x86_64::__m256i) -> std::arch::x86_64::__m256i {
+fn popcount256(v: std::arch::x86_64::__m256i) -> std::arch::x86_64::__m256i {
     use std::arch::x86_64::*;
     #[rustfmt::skip]
     let lookup = _mm256_setr_epi8(
@@ -135,14 +145,16 @@ unsafe fn popcount256(v: std::arch::x86_64::__m256i) -> std::arch::x86_64::__m25
     _mm256_sad_epu8(cnt, _mm256_setzero_si256())
 }
 
-/// Sum the four u64 lanes of a 256-bit accumulator.
+/// Sum the four u64 lanes of a 256-bit accumulator. Safe
+/// `#[target_feature]` fn, same calling contract as [`popcount256`].
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 #[inline]
-unsafe fn hsum_epi64(v: std::arch::x86_64::__m256i) -> u64 {
+fn hsum_epi64(v: std::arch::x86_64::__m256i) -> u64 {
     use std::arch::x86_64::*;
     let mut lanes = [0u64; 4];
-    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    // SAFETY: `lanes` is a 32-byte local, exactly one 256-bit store.
+    unsafe { _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v) };
     lanes[0] + lanes[1] + lanes[2] + lanes[3]
 }
 
@@ -159,10 +171,14 @@ unsafe fn xor_popcount_avx2(a: &[u64], b: &[u64]) -> u32 {
     let mut vd = _mm256_setzero_si256();
     let mut i = 0;
     while i < vlen {
-        let x = _mm256_xor_si256(
-            _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i),
-            _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i),
-        );
+        // SAFETY: `i + 4 <= vlen <= a.len() == b.len()`, so both
+        // 4-word (256-bit) unaligned loads are in bounds.
+        let x = unsafe {
+            _mm256_xor_si256(
+                _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i),
+                _mm256_loadu_si256(b.as_ptr().add(i) as *const __m256i),
+            )
+        };
         vd = _mm256_add_epi64(vd, popcount256(x));
         i += 4;
     }
@@ -208,12 +224,15 @@ unsafe fn bin_tile_avx2(
             let mut vd = [_mm256_setzero_si256(); 4];
             let mut i = 0;
             while i < vlen {
-                let av = _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i);
+                // SAFETY: `i + 4 <= vlen <= a.len()`, and each `ws`
+                // slice was cut to exactly `a.len()` words above, so
+                // every 256-bit unaligned load is in bounds.
+                let av = unsafe { _mm256_loadu_si256(a.as_ptr().add(i) as *const __m256i) };
                 for (acc, w) in vd.iter_mut().zip(ws) {
-                    let x = _mm256_xor_si256(
-                        av,
-                        _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i),
-                    );
+                    // SAFETY: same bound — `w.len() == a.len()` and
+                    // `i + 4 <= vlen`.
+                    let wv = unsafe { _mm256_loadu_si256(w.as_ptr().add(i) as *const __m256i) };
+                    let x = _mm256_xor_si256(av, wv);
                     *acc = _mm256_add_epi64(*acc, popcount256(x));
                 }
                 i += 4;
@@ -231,7 +250,9 @@ unsafe fn bin_tile_avx2(
         // Ragged tail weight rows.
         while c < cols.end {
             let w = &weights[c].words[..a.len()];
-            let d = xor_popcount_avx2(a, w);
+            // SAFETY: the enclosing kernel's contract already supplies
+            // AVX2+popcnt, and `w` was just cut to `a.len()` words.
+            let d = unsafe { xor_popcount_avx2(a, w) };
             t_row[c - cols.start] = (k - 2 * d as i32) as f32;
             c += 1;
         }

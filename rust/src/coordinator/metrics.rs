@@ -8,11 +8,11 @@
 //! (its deadline passed while queued; dropped at batch formation), and
 //! `cancelled` (withdrawn through its ticket before dispatch).
 
-use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
 use super::backend::TransportStats;
+use crate::util::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use crate::util::sync::{lock, Mutex};
 
 /// Circuit-breaker state of one replica, as tracked by the router's
 /// health layer and surfaced in [`MetricsSnapshot::health`].
@@ -65,7 +65,7 @@ struct State {
 }
 
 /// Thread-safe metrics registry owned by the server.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     state: Mutex<State>,
     /// Lock-free mirror of the settled-request count (successes,
@@ -154,6 +154,19 @@ pub struct MetricsSnapshot {
     pub throughput_rps: f64,
 }
 
+// Spelled out rather than derived: the sync shim's loom twins don't
+// implement `Default`, and this is the only constructor either way.
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            state: Mutex::new(State::default()),
+            requests_fast: AtomicU64::new(0),
+            shard_backlog_fast: AtomicU64::new(0),
+            health: AtomicU8::new(0),
+        }
+    }
+}
+
 impl Metrics {
     /// New empty registry.
     pub fn new() -> Self {
@@ -168,7 +181,7 @@ impl Metrics {
         compute_us: u64,
         sim_cycles: Option<u64>,
     ) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock(&self.state);
         let now = std::time::Instant::now();
         s.started.get_or_insert(now);
         s.finished = Some(now);
@@ -186,7 +199,7 @@ impl Metrics {
     pub fn record_shard_depths(&self, depths: Vec<u64>) {
         self.shard_backlog_fast
             .store(depths.iter().sum(), Ordering::Relaxed);
-        self.state.lock().unwrap().shard_depths = Some(depths);
+        lock(&self.state).shard_depths = Some(depths);
     }
 
     /// Record the cumulative wire-health counters a remote backend
@@ -194,7 +207,7 @@ impl Metrics {
     /// monotonic totals, not deltas). Pure gauge: never settles the
     /// fast answered counter.
     pub fn record_transport_stats(&self, stats: TransportStats) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock(&self.state);
         s.reconnects = stats.reconnects;
         s.transport_errors = stats.transport_errors;
     }
@@ -204,7 +217,7 @@ impl Metrics {
     /// rejections). Counts toward the fast answered counter (the
     /// requests are no longer outstanding) but not toward `requests`.
     pub fn record_failures(&self, rows: usize) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock(&self.state);
         s.failures += rows as u64;
         drop(s);
         self.requests_fast.fetch_add(rows as u64, Ordering::Relaxed);
@@ -214,13 +227,13 @@ impl Metrics {
     /// never admitted, so they do **not** settle the fast answered
     /// counter (the router never counted them as outstanding).
     pub fn record_rejected(&self, n: usize) {
-        self.state.lock().unwrap().rejected += n as u64;
+        lock(&self.state).rejected += n as u64;
     }
 
     /// Record `n` admitted requests dropped at batch formation because
     /// their deadline had passed. Settles the fast answered counter.
     pub fn record_expired(&self, n: usize) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock(&self.state);
         s.expired += n as u64;
         drop(s);
         self.requests_fast.fetch_add(n as u64, Ordering::Relaxed);
@@ -229,7 +242,7 @@ impl Metrics {
     /// Record `n` admitted requests withdrawn through their ticket
     /// before dispatch. Settles the fast answered counter.
     pub fn record_cancelled(&self, n: usize) {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock(&self.state);
         s.cancelled += n as u64;
         drop(s);
         self.requests_fast.fetch_add(n as u64, Ordering::Relaxed);
@@ -240,17 +253,17 @@ impl Metrics {
     /// through [`record_failures`](Self::record_failures), so this is
     /// a pure router-level counter.
     pub fn record_retry(&self) {
-        self.state.lock().unwrap().retries += 1;
+        lock(&self.state).retries += 1;
     }
 
     /// Record one circuit-breaker ejection (Closed → Open).
     pub fn record_ejection(&self) {
-        self.state.lock().unwrap().ejections += 1;
+        lock(&self.state).ejections += 1;
     }
 
     /// Record one readmission (a probe succeeded, HalfOpen → Closed).
     pub fn record_readmission(&self) {
-        self.state.lock().unwrap().readmissions += 1;
+        lock(&self.state).readmissions += 1;
     }
 
     /// Publish the replica's current circuit-breaker state (written by
@@ -283,7 +296,7 @@ impl Metrics {
 
     /// Snapshot the current totals.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let s = self.state.lock().unwrap();
+        let s = lock(&self.state);
         let wall = match (s.started, s.finished) {
             (Some(a), Some(b)) => b.duration_since(a),
             _ => Duration::ZERO,
@@ -451,5 +464,56 @@ mod tests {
         m.record_shard_depths(vec![4, 7]);
         assert_eq!(m.snapshot().shard_depths, Some(vec![4, 7]));
         assert_eq!(m.shard_backlog_fast(), 11);
+    }
+}
+
+// Loom models of the lock-free mirrors (CI `loom` job). These assert
+// the orderings in use today are sound: `Relaxed` is enough because
+// both mirrors are single-cell values with no cross-variable invariant
+// — the gauge is last-writer-wins and the counter is a pure sum.
+#[cfg(all(test, beanna_loom))]
+mod loom_tests {
+    use super::*;
+    use crate::util::sync::{thread, Arc};
+
+    /// Two concurrent gauge writers: whichever interleaving runs, the
+    /// lock-free mirror holds one of the two written sums (never a torn
+    /// or stale-initial value) and the locked state holds a matching
+    /// full vector.
+    #[test]
+    fn loom_shard_backlog_gauge_is_last_writer_wins() {
+        loom::model(|| {
+            let m = Arc::new(Metrics::new());
+            let writer = {
+                let m = Arc::clone(&m);
+                thread::spawn(move || m.record_shard_depths(vec![3, 4]))
+            };
+            m.record_shard_depths(vec![10]);
+            writer.join().expect("gauge writer");
+            let fast = m.shard_backlog_fast();
+            assert!(fast == 7 || fast == 10, "gauge must be one writer's sum, got {fast}");
+            let depths = m.snapshot().shard_depths.expect("depths recorded");
+            assert!(depths == vec![3, 4] || depths == vec![10]);
+        });
+    }
+
+    /// Concurrent settlement on both mirror paths (a served batch and a
+    /// failed batch): the fast answered counter ends at the exact total
+    /// and the locked counters reconcile with it under every schedule.
+    #[test]
+    fn loom_requests_fast_counts_every_settlement() {
+        loom::model(|| {
+            let m = Arc::new(Metrics::new());
+            let failer = {
+                let m = Arc::clone(&m);
+                thread::spawn(move || m.record_failures(2))
+            };
+            m.record_batch(3, &[1, 2, 3], 10, None);
+            failer.join().expect("failure recorder");
+            assert_eq!(m.requests_fast(), 5);
+            let s = m.snapshot();
+            assert_eq!(s.requests, 3);
+            assert_eq!(s.failures, 2);
+        });
     }
 }

@@ -26,12 +26,12 @@
 //! slot is released exactly once, whichever path the request takes, so
 //! a cancelled ticket's capacity is immediately reusable.
 
-use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::error::{ServeError, ServeResult};
+use crate::util::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use crate::util::sync::Arc;
 
 /// Scheduling class of a request. The batcher drains all queued
 /// [`Interactive`](Priority::Interactive) requests before any
@@ -640,5 +640,73 @@ mod tests {
         let b = SubmitOptions::bulk().with_deadline(Duration::from_millis(5));
         assert_eq!(b.priority, Priority::Bulk);
         assert!(b.deadline.is_some());
+    }
+}
+
+// Loom models of the `Lifecycle` state machine (CI `loom` job). These
+// drive `Lifecycle` directly — the mpsc channel and `Instant` deadlines
+// stay out of the model; the races worth exhausting are the state CAS
+// and the exactly-once slot release.
+#[cfg(all(test, beanna_loom))]
+mod loom_tests {
+    use super::*;
+    use crate::util::sync::thread;
+
+    /// Dispatch+resolve vs cancel vs the request's own drop: whichever
+    /// interleaving wins the state race, the admission slot is released
+    /// exactly once — `depth` ends at 0, never underflows (an
+    /// underflowed `usize` gauge would wrap huge), and never leaks.
+    #[test]
+    fn loom_slot_released_exactly_once() {
+        loom::model(|| {
+            let depth = Arc::new(AtomicUsize::new(1));
+            let lc = Arc::new(Lifecycle::new(Arc::clone(&depth)));
+            let worker = {
+                let lc = Arc::clone(&lc);
+                // Worker path: claim for execution, then resolve.
+                thread::spawn(move || {
+                    if lc.try_dispatch() {
+                        lc.release_slot();
+                    }
+                })
+            };
+            let canceller = {
+                let lc = Arc::clone(&lc);
+                // Ticket path: cancel (releases on CAS win).
+                thread::spawn(move || {
+                    lc.cancel();
+                })
+            };
+            worker.join().expect("worker thread");
+            canceller.join().expect("canceller thread");
+            // Request-drop path: always runs, must never double-release.
+            lc.release_slot();
+            assert_eq!(depth.load(Ordering::SeqCst), 0);
+        });
+    }
+
+    /// Cancel vs expire racing for a queued request: exactly one CAS
+    /// wins (the states are mutually exclusive), the slot frees once,
+    /// and a later dispatch attempt must fail whichever won.
+    #[test]
+    fn loom_cancel_expire_race_is_exclusive() {
+        loom::model(|| {
+            let depth = Arc::new(AtomicUsize::new(1));
+            let lc = Arc::new(Lifecycle::new(Arc::clone(&depth)));
+            let expirer = {
+                let lc = Arc::clone(&lc);
+                thread::spawn(move || lc.expire())
+            };
+            let cancelled = lc.cancel();
+            let expired = expirer.join().expect("expirer thread");
+            assert!(
+                cancelled ^ expired,
+                "exactly one of cancel/expire must win the CAS"
+            );
+            assert_eq!(lc.is_cancelled(), cancelled);
+            assert_eq!(lc.is_expired(), expired);
+            assert!(!lc.try_dispatch(), "terminal states must not dispatch");
+            assert_eq!(depth.load(Ordering::SeqCst), 0);
+        });
     }
 }

@@ -46,9 +46,10 @@
 //!   while queued work flushes; [`shutdown`](Router::shutdown) drains,
 //!   joins every worker, and returns the final metrics.
 
-use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::util::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
+use crate::util::sync::Arc;
 
 use super::backend::ExecutionBackend;
 use super::error::{ServeError, ServeResult};
@@ -193,6 +194,17 @@ impl Health {
     /// failed probe re-ejects. Every transition *into* Open counts as
     /// an ejection.
     fn strike(&self, threshold: u32, now_us: u64, metrics: &Metrics) {
+        // Anchor the cooldown clock *before* any transition into Open:
+        // the store must be sequenced before the Release CAS that
+        // publishes OPEN, or a concurrent `try_probe` could
+        // Acquire-load OPEN yet still read a stale (initially 0)
+        // anchor, compute a huge elapsed time, and admit a probe the
+        // instant the breaker opens — skipping the cooldown entirely.
+        // (Found by `loom_probe_never_admitted_before_cooldown`; the
+        // side effect — re-anchoring on every strike — just makes the
+        // cooldown run from the last observed failure, which is the
+        // conservative reading.)
+        self.opened_at_us.store(now_us, Ordering::Release);
         let c = self.consecutive.fetch_add(1, Ordering::AcqRel) + 1;
         let opened = if c >= threshold {
             self.state
@@ -207,7 +219,6 @@ impl Health {
             .compare_exchange(HALF_OPEN, OPEN, Ordering::AcqRel, Ordering::Acquire)
             .is_ok();
         if opened || reopened {
-            self.opened_at_us.store(now_us, Ordering::Release);
             metrics.record_ejection();
             metrics.set_health(HealthState::Open);
         }
@@ -348,19 +359,13 @@ impl Router {
             RoutePolicy::RoundRobin => {
                 eligible[(self.next.fetch_add(1, Ordering::Relaxed) as usize) % eligible.len()]
             }
-            RoutePolicy::LeastOutstanding => eligible
-                .iter()
-                .copied()
-                .min_by_key(|&i| self.workers[i].outstanding())
-                .unwrap(),
-            RoutePolicy::ModeledBacklog => eligible
-                .iter()
-                .copied()
-                .min_by_key(|&i| {
-                    let w = &self.workers[i];
-                    (w.metrics.shard_backlog_fast(), w.outstanding())
-                })
-                .unwrap(),
+            RoutePolicy::LeastOutstanding => {
+                pick_min(eligible, |i| self.workers[i].outstanding())
+            }
+            RoutePolicy::ModeledBacklog => pick_min(eligible, |i| {
+                let w = &self.workers[i];
+                (w.metrics.shard_backlog_fast(), w.outstanding())
+            }),
         }
     }
 
@@ -556,6 +561,24 @@ impl Router {
     }
 }
 
+/// First index of `eligible` minimizing `key` — `min_by_key` keeping
+/// the earliest minimum, without the `Option` (the routing paths
+/// guarantee a non-empty slice, and the coordinator bans `unwrap`; an
+/// empty slice degrades to worker 0 rather than panicking).
+fn pick_min<K: Ord>(eligible: &[usize], key: impl Fn(usize) -> K) -> usize {
+    let mut it = eligible.iter().copied();
+    let Some(mut best) = it.next() else { return 0 };
+    let mut best_key = key(best);
+    for i in it {
+        let k = key(i);
+        if k < best_key {
+            best = i;
+            best_key = k;
+        }
+    }
+    best
+}
+
 /// Cap `wait` to what the deadline and retry budget leave; `None`
 /// means no time remains and the retry must not happen.
 fn bounded_backoff(
@@ -718,7 +741,13 @@ impl RoutedTicket<'_> {
     /// when the retry budget ran out.
     pub fn wait(mut self) -> ServeResult {
         loop {
-            let ticket = self.inner.take().expect("routed ticket has an attempt");
+            // `settle` re-arms `inner` on every retry, so a missing
+            // attempt can only mean the handle was already consumed —
+            // report the channel closed rather than panicking inside
+            // the serving path.
+            let Some(ticket) = self.inner.take() else {
+                return Err(ServeError::ChannelClosed);
+            };
             match self.settle(ticket.wait(), None) {
                 Verdict::Done(r) => return r,
                 Verdict::Retried => {}
@@ -762,6 +791,108 @@ impl RoutedTicket<'_> {
                 None
             }
         }
+    }
+}
+
+// Loom models of the breaker state machine (CI `loom` job). `Health`
+// takes the clock as a plain `now_us` argument, so the models pin time
+// explicitly and explore only the atomics.
+#[cfg(all(test, beanna_loom))]
+mod loom_tests {
+    use super::*;
+    use crate::util::sync::thread;
+
+    /// Regression for the cooldown-anchor ordering: a probe racing the
+    /// very strike that opens the breaker must never be admitted while
+    /// the cooldown still has time left. With the anchor stored *after*
+    /// the state CAS (the pre-fix code), one interleaving Acquire-loads
+    /// OPEN but a stale anchor of 0, sees ~1400µs "elapsed", and admits
+    /// the probe 100µs into a 500µs cooldown.
+    #[test]
+    fn loom_probe_never_admitted_before_cooldown() {
+        loom::model(|| {
+            let h = Arc::new(Health::new());
+            let m = Arc::new(Metrics::new());
+            let striker = {
+                let (h, m) = (Arc::clone(&h), Arc::clone(&m));
+                // Threshold 1: this single failure opens the breaker
+                // at t = 1000µs.
+                thread::spawn(move || h.strike(1, 1_000, &m))
+            };
+            // Concurrent pick at t = 1400µs: at most 400µs of the
+            // 500µs cooldown can have elapsed, whatever the schedule.
+            let admitted = h.try_probe(Duration::from_micros(500), 1_400, &m);
+            assert!(!admitted, "probe admitted before the cooldown elapsed");
+            striker.join().expect("striker thread");
+        });
+    }
+
+    /// Single-probe admission: once the breaker is Open and cooled
+    /// down, exactly one of two concurrent picks wins the
+    /// Open→HalfOpen CAS — at most one probe is ever in flight.
+    #[test]
+    fn loom_single_probe_admission() {
+        loom::model(|| {
+            let h = Arc::new(Health::new());
+            let m = Arc::new(Metrics::new());
+            h.strike(1, 0, &m); // open at t = 0
+            let prober = {
+                let (h, m) = (Arc::clone(&h), Arc::clone(&m));
+                thread::spawn(move || h.try_probe(Duration::from_micros(10), 50, &m))
+            };
+            let a = h.try_probe(Duration::from_micros(10), 50, &m);
+            let b = prober.join().expect("prober thread");
+            assert!(a ^ b, "exactly one prober must win the CAS");
+            assert_eq!(h.state(), HealthState::HalfOpen);
+        });
+    }
+
+    /// Concurrent strikes crossing the threshold together: the
+    /// Closed→Open transition (and its ejection record) happens exactly
+    /// once — the consecutive counter is an atomic RMW, so exactly one
+    /// striker observes the crossing.
+    #[test]
+    fn loom_concurrent_strikes_eject_once() {
+        loom::model(|| {
+            let h = Arc::new(Health::new());
+            let m = Arc::new(Metrics::new());
+            let striker = {
+                let (h, m) = (Arc::clone(&h), Arc::clone(&m));
+                thread::spawn(move || h.strike(2, 5, &m))
+            };
+            h.strike(2, 5, &m);
+            striker.join().expect("striker thread");
+            assert_eq!(h.state(), HealthState::Open);
+            assert_eq!(m.snapshot().ejections, 1);
+        });
+    }
+
+    /// A probe success racing a failure strike: whichever wins the
+    /// HalfOpen exit, the breaker ends in a legal terminal state
+    /// (Closed with a readmission, or Open with a re-ejection) — never
+    /// stuck HalfOpen with both recorded.
+    #[test]
+    fn loom_halfopen_exit_is_exclusive() {
+        loom::model(|| {
+            let h = Arc::new(Health::new());
+            let m = Arc::new(Metrics::new());
+            h.strike(1, 0, &m);
+            assert!(h.try_probe(Duration::ZERO, 1, &m));
+            let failer = {
+                let (h, m) = (Arc::clone(&h), Arc::clone(&m));
+                thread::spawn(move || h.strike(1, 2, &m))
+            };
+            h.ok(&m);
+            failer.join().expect("failing striker");
+            let s = m.snapshot();
+            match h.state() {
+                // ok() won the CAS; the strike's re-ejection CAS lost.
+                HealthState::Closed => assert_eq!(s.readmissions, 1),
+                // The strike re-ejected first; ok() lost the CAS.
+                HealthState::Open => assert_eq!(s.ejections, 2),
+                HealthState::HalfOpen => panic!("breaker stuck in HalfOpen"),
+            }
+        });
     }
 }
 

@@ -15,10 +15,7 @@
 //! and backend failures arrive on the ticket as the `Err` arm of a
 //! [`ServeResult`](super::error::ServeResult).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Arc;
-use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::ensure;
@@ -31,6 +28,8 @@ use super::request::{InferenceRequest, InferenceResponse, Priority, SubmitOption
 use crate::bf16::Matrix;
 use crate::nn::metrics::argmax;
 use crate::util::par::Parallelism;
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use crate::util::sync::{thread, Arc};
 
 /// Rows of one dynamic batch each kernel worker can chew before extra
 /// rows stop buying parallelism and only add queue latency — the
@@ -96,7 +95,7 @@ impl Default for ServerConfig {
 /// A running inference server over one backend.
 pub struct Server {
     tx: Option<Sender<InferenceRequest>>,
-    handle: Option<JoinHandle<()>>,
+    handle: Option<thread::JoinHandle<()>>,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
     /// In-flight gauge: incremented at admission, decremented exactly
@@ -173,7 +172,7 @@ impl Server {
         let metrics = Arc::new(Metrics::new());
         let metrics_worker = Arc::clone(&metrics);
         let parallelism = config.parallelism;
-        let handle = std::thread::spawn(move || {
+        let handle = thread::spawn(move || {
             let mut queue = BatchQueue::new(rx);
             // Once any batch of the pinned width has succeeded, the pin
             // is confirmed and never reset: a later transient backend

@@ -48,6 +48,11 @@
 //! The crate is self-contained after `make artifacts`: Python never runs
 //! on the request path.
 
+// Every unsafe operation must sit in an explicit `unsafe {}` block with
+// its own `// SAFETY:` justification, even inside `unsafe fn` bodies —
+// enforced here and by the repo linter (`cargo run -p xtask -- lint`).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bf16;
 pub mod binary;
 pub mod conv;

@@ -632,6 +632,10 @@ mod sigterm {
 
     /// Install the handler for SIGTERM (15).
     pub fn install() {
+        // SAFETY: `signal(2)` is called with a valid signal number and a
+        // handler that is async-signal-safe (a single atomic store, no
+        // allocation, no locks). The extern declaration matches libc's
+        // ABI; the returned previous handler is deliberately ignored.
         unsafe {
             signal(15, on_sigterm as usize);
         }

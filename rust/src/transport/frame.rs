@@ -385,20 +385,28 @@ impl<'a> Dec<'a> {
         Ok(head)
     }
 
+    /// `take` into a fixed-size array — the infallible length proof
+    /// lives here once instead of as an `unwrap` at every integer site.
+    fn take_arr<const N: usize>(&mut self) -> Result<[u8; N], FrameError> {
+        let mut arr = [0u8; N];
+        arr.copy_from_slice(self.take(N)?);
+        Ok(arr)
+    }
+
     fn u8(&mut self) -> Result<u8, FrameError> {
         Ok(self.take(1)?[0])
     }
 
     fn u16(&mut self) -> Result<u16, FrameError> {
-        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_le_bytes(self.take_arr()?))
     }
 
     fn u32(&mut self) -> Result<u32, FrameError> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.take_arr()?))
     }
 
     fn u64(&mut self) -> Result<u64, FrameError> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.take_arr()?))
     }
 
     fn opt_u32(&mut self) -> Result<Option<u32>, FrameError> {
@@ -418,7 +426,11 @@ impl<'a> Dec<'a> {
         let bytes = self.take(n * 4)?;
         Ok(bytes
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| {
+                let mut quad = [0u8; 4];
+                quad.copy_from_slice(c);
+                f32::from_le_bytes(quad)
+            })
             .collect())
     }
 }
@@ -444,7 +456,7 @@ pub(crate) fn decode_body(body: &[u8]) -> Result<Frame, FrameError> {
     let ty = d.u8()?;
     let frame = match ty {
         T_HELLO => {
-            let magic: [u8; 4] = d.take(4)?.try_into().unwrap();
+            let magic: [u8; 4] = d.take_arr()?;
             if magic != MAGIC {
                 return Err(FrameError::BadMagic(magic));
             }

@@ -178,7 +178,7 @@ impl RemoteBackend {
         let supervisor = std::thread::Builder::new()
             .name("beanna-remote-supervisor".into())
             .spawn(move || supervise(&shared_t, &addr_t, &config, &expected))
-            .expect("spawning the remote supervisor thread");
+            .context("spawning the remote supervisor thread")?;
         Ok(Self {
             tag: format!("remote:{}", hello.tag),
             addr: wire_addr,

@@ -80,8 +80,7 @@ impl WorkerHost {
         let drain_t = Arc::clone(&drain);
         let handle = std::thread::Builder::new()
             .name("beanna-worker-host".into())
-            .spawn(move || accept_loop(listener, backend, &drain_t, config))
-            .expect("spawning the worker host thread");
+            .spawn(move || accept_loop(listener, backend, &drain_t, config))?;
         Ok(Self {
             addr,
             drain,
@@ -312,7 +311,9 @@ fn recv_polling(
     let mut rest = vec![0u8; len + 4];
     fill(stream, &mut rest, 0)?;
     let (body, crc_bytes) = rest.split_at(len);
-    let expected = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let mut crc_arr = [0u8; 4];
+    crc_arr.copy_from_slice(crc_bytes);
+    let expected = u32::from_le_bytes(crc_arr);
     let got = crc32(body);
     if expected != got {
         return Err(FrameError::BadChecksum { expected, got });

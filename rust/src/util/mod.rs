@@ -19,6 +19,9 @@
 //! * [`pool`] — the persistent worker pool the tiles dispatch to
 //!   (parked threads, panic-safe join; spawn-per-call kept as a
 //!   benchmark baseline).
+//! * [`sync`] — the sync-primitive shim (`std::sync` normally, `loom`
+//!   under `--cfg beanna_loom`) that makes the pool, request lifecycle,
+//!   breaker, and metrics model-checkable.
 
 pub mod args;
 pub mod bench;
@@ -28,3 +31,4 @@ pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -52,11 +52,11 @@
 use std::cell::Cell;
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
-use std::thread::JoinHandle;
+use std::sync::OnceLock;
 
 use super::par::{Dispatch, Parallelism};
+use super::sync::atomic::{AtomicUsize, Ordering};
+use super::sync::{thread, Arc, Condvar, Mutex};
 
 /// A lifetime-erased job plus the completion group it belongs to.
 type Task = Box<dyn FnOnce() + Send + 'static>;
@@ -86,9 +86,19 @@ struct GroupState {
     panic: Option<Box<dyn std::any::Any + Send>>,
 }
 
+#[cfg(not(beanna_loom))]
 thread_local! {
     /// True on pool worker threads — used to run nested dispatch inline.
     static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+// Loom twin: loom's `thread_local!` macro has no const-init form, and
+// its instrumented `LocalKey` is what lets the model reset the flag
+// between explored executions.
+#[cfg(beanna_loom)]
+loom::thread_local! {
+    /// True on pool worker threads — used to run nested dispatch inline.
+    static IN_POOL_WORKER: Cell<bool> = Cell::new(false);
 }
 
 /// Hard ceiling on pool growth — a guard against pathological budgets,
@@ -98,7 +108,7 @@ const MAX_POOL_THREADS: usize = 256;
 /// A persistent pool of parked worker threads (see module docs).
 pub struct WorkerPool {
     queue: Arc<Queue>,
-    handles: Mutex<Vec<JoinHandle<()>>>,
+    handles: Mutex<Vec<thread::JoinHandle<()>>>,
     threads: AtomicUsize,
 }
 
@@ -142,7 +152,7 @@ impl WorkerPool {
         for i in cur..n {
             let q = Arc::clone(&self.queue);
             handles.push(
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("beanna-pool-{i}"))
                     .spawn(move || worker_loop(&q))
                     .expect("spawn pool worker"),
@@ -241,7 +251,11 @@ impl Drop for WorkerPool {
             q.shutdown = true;
             self.queue.available.notify_all();
         }
-        for h in self.handles.get_mut().unwrap().drain(..) {
+        // Drain the handle list under the lock but join outside it
+        // (loom's `Mutex` has no `get_mut`, and joining while holding a
+        // lock the workers might need would be a self-inflicted hazard).
+        let handles: Vec<_> = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -536,5 +550,100 @@ mod tests {
         let b = WorkerPool::global() as *const WorkerPool;
         assert_eq!(a, b);
         assert!(WorkerPool::global().threads() >= 1);
+    }
+}
+
+// Loom models (CI `loom` job: RUSTFLAGS="--cfg beanna_loom"
+// cargo test --release --lib loom_). These use *local* pools, never
+// `WorkerPool::global()` — loom objects must not leak across explored
+// executions, so a process-wide `OnceLock` pool is off-limits here.
+#[cfg(all(test, beanna_loom))]
+mod loom_tests {
+    use super::*;
+
+    /// The queue/caller-assist drain: under every interleaving of the
+    /// worker thread and the helping dispatcher, each job of a dispatch
+    /// runs exactly once and `run_jobs` does not return until all of
+    /// them have (the scoped-borrow contract the lifetime-erasing
+    /// transmute depends on).
+    #[test]
+    fn loom_drain_runs_each_job_exactly_once() {
+        loom::model(|| {
+            let pool = WorkerPool::new(1);
+            let ran = Arc::new(AtomicUsize::new(0));
+            {
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                    .map(|_| {
+                        let ran = Arc::clone(&ran);
+                        Box::new(move || {
+                            ran.fetch_add(1, Ordering::Relaxed);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_jobs(jobs);
+            }
+            // run_jobs has returned: every job must already be done —
+            // a late completion after return would be a dangling borrow.
+            assert_eq!(ran.load(Ordering::Relaxed), 2);
+        });
+    }
+
+    /// Nested dispatch: a job that itself calls `run_jobs` must
+    /// complete under every schedule — inline on a pool worker (the
+    /// `IN_POOL_WORKER` fast path), or through the queue when the
+    /// helping dispatcher picked the outer job up — and every inner
+    /// job still runs exactly once.
+    #[test]
+    fn loom_nested_dispatch_completes_inline_or_queued() {
+        loom::model(|| {
+            let pool = WorkerPool::new(1);
+            let ran = Arc::new(AtomicUsize::new(0));
+            {
+                let pool_ref = &pool;
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                    .map(|_| {
+                        let ran = Arc::clone(&ran);
+                        Box::new(move || {
+                            let inner: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                                .map(|_| {
+                                    let ran = Arc::clone(&ran);
+                                    Box::new(move || {
+                                        ran.fetch_add(1, Ordering::Relaxed);
+                                    })
+                                        as Box<dyn FnOnce() + Send + '_>
+                                })
+                                .collect();
+                            pool_ref.run_jobs(inner);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_jobs(jobs);
+            }
+            assert_eq!(ran.load(Ordering::Relaxed), 4);
+        });
+    }
+
+    /// Shutdown drains accepted work: jobs queued before the pool is
+    /// dropped still run (the worker honours `shutdown` only after the
+    /// queue is empty), under every wakeup ordering.
+    #[test]
+    fn loom_drop_completes_accepted_work() {
+        loom::model(|| {
+            let ran = Arc::new(AtomicUsize::new(0));
+            {
+                let pool = WorkerPool::new(1);
+                let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = (0..2)
+                    .map(|_| {
+                        let ran = Arc::clone(&ran);
+                        Box::new(move || {
+                            ran.fetch_add(1, Ordering::Relaxed);
+                        }) as Box<dyn FnOnce() + Send + '_>
+                    })
+                    .collect();
+                pool.run_jobs(jobs);
+                // Pool dropped here: shutdown + join must not lose work.
+            }
+            assert_eq!(ran.load(Ordering::Relaxed), 2);
+        });
     }
 }

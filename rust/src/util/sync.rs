@@ -1,0 +1,91 @@
+//! Sync-primitive shim: the single import point for every
+//! concurrency-critical module, so the same code can be *model-checked*.
+//!
+//! In normal builds this re-exports `std::sync` / `std::thread`
+//! verbatim — zero cost, zero behaviour change. Under
+//! `RUSTFLAGS="--cfg beanna_loom"` (the CI `loom` job) the re-exports
+//! switch to [loom](https://docs.rs/loom)'s instrumented twins, and the
+//! `loom_*` unit tests in [`util::pool`](crate::util::pool),
+//! [`coordinator::request`](crate::coordinator),
+//! [`coordinator::metrics`](crate::coordinator::Metrics), and the
+//! router's breaker exhaustively explore every interleaving of the
+//! state machines built on these primitives.
+//!
+//! The committed manifest stays std-only: `loom` is `cargo add`ed by
+//! the CI job (same pattern as `pjrt-typecheck`), and the cfg is
+//! declared in `[lints.rust] unexpected_cfgs`, so offline builds never
+//! see it.
+//!
+//! What deliberately stays `std` even under loom: `mpsc` channels,
+//! `Instant` deadlines, and `OnceLock` globals — the loom tests model
+//! the slot/breaker/queue state machines, which take clocks as plain
+//! `now_us` arguments and never touch channels.
+//!
+//! ```
+//! use beanna::util::sync::{lock, Mutex};
+//!
+//! let m = Mutex::new(1);
+//! *lock(&m) += 1;
+//! assert_eq!(*lock(&m), 2);
+//! ```
+
+#[cfg(not(beanna_loom))]
+pub use std::sync::atomic;
+#[cfg(not(beanna_loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(beanna_loom))]
+pub use std::thread;
+
+#[cfg(beanna_loom)]
+pub use loom::sync::atomic;
+#[cfg(beanna_loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+#[cfg(beanna_loom)]
+pub use loom::thread;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// The serving stack protects plain accumulating state (metrics
+/// counters, queue vectors) with its mutexes; a panicked holder can at
+/// worst have torn a statistics update, which must not take the whole
+/// coordinator down with a poison panic. This is also the
+/// `coordinator`/`transport` idiom the repo linter (`cargo run -p
+/// xtask -- lint`) enforces in place of `.lock().unwrap()`.
+#[cfg(not(beanna_loom))]
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Loom twin of [`lock`]: loom mutexes never observe a poisoning
+/// panic mid-model, so a failure here is a test-harness bug.
+#[cfg(beanna_loom)]
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().expect("loom mutex poisoned")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lock_gives_exclusive_access() {
+        let m = Mutex::new(vec![1, 2]);
+        lock(&m).push(3);
+        assert_eq!(*lock(&m), vec![1, 2, 3]);
+    }
+
+    #[cfg(not(beanna_loom))]
+    #[test]
+    fn lock_recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(0u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().expect("first lock");
+            panic!("poison the mutex");
+        })
+        .join();
+        // A plain `.lock().unwrap()` would now panic; `lock` recovers.
+        *lock(&m) += 1;
+        assert_eq!(*lock(&m), 1);
+    }
+}

@@ -1,0 +1,622 @@
+//! Repo-invariant linter: `cargo run -p xtask -- lint`.
+//!
+//! A line-wise static checker for the handful of repo-wide contracts
+//! that rustc and clippy cannot see. It is deliberately *not* a Rust
+//! parser — every rule is a textual invariant chosen so that a
+//! line-oriented scan is sound for this codebase's style (rustfmt'd,
+//! one statement per line). The rules:
+//!
+//! * **A — `unsafe` needs `// SAFETY:`.** Every line containing the
+//!   `unsafe` keyword must be preceded (walking up through comments
+//!   and attributes) by a `// SAFETY:` comment or a `/// # Safety`
+//!   doc section.
+//! * **B — no FMA in the numeric kernels.** `bf16`, `binary`, and
+//!   `conv` code must never use fused multiply-add (`fmadd`/`vfma`
+//!   intrinsics or `.mul_add(`): the repo's bit-exactness contract is
+//!   defined by two-rounding mul+add chains.
+//! * **C — no ad-hoc threads.** `std::thread::spawn` /
+//!   `std::thread::Builder` appear only in `util/pool.rs`,
+//!   `util/sync.rs`, `transport/`, and tests; everything else must go
+//!   through the worker pool so loom models cover it.
+//! * **D — no `.unwrap()` / `.expect(` on the serving path.**
+//!   Non-test `coordinator/` and `transport/` code returns typed
+//!   errors; panics there would take down the server.
+//! * **E — bench keys exist in the baseline.** Every key a bench
+//!   emits into a `BENCH_*.json` report must be present in
+//!   `rust/BENCH_baseline.json`, so `perf_delta.py` can always
+//!   compare it (`{hole}` placeholders match any `[a-z0-9_]+` run).
+//!
+//! Findings print as `file:line [rule] excerpt` and the process exits
+//! non-zero, so the CI `lint-invariants` job gates on it.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {}
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint");
+            return ExitCode::from(2);
+        }
+    }
+    // xtask/ sits directly under the repo root.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask has a parent directory")
+        .to_path_buf();
+    match run_lint(&root) {
+        Ok(findings) if findings.is_empty() => {
+            println!("lint: ok");
+            ExitCode::SUCCESS
+        }
+        Ok(findings) => {
+            for f in &findings {
+                println!("{f}");
+            }
+            println!("lint: {} finding(s)", findings.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("lint: error: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// One rule violation, displayed as `file:line [rule] excerpt`.
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    excerpt: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{} [{}] {}", self.file, self.line, self.rule, self.excerpt)
+    }
+}
+
+fn finding(file: &str, line_idx: usize, rule: &'static str, line: &str) -> Finding {
+    Finding {
+        file: file.to_string(),
+        line: line_idx + 1,
+        rule,
+        excerpt: line.trim().chars().take(80).collect(),
+    }
+}
+
+/// Run every rule over the repo rooted at `root`.
+fn run_lint(root: &Path) -> Result<Vec<Finding>, String> {
+    let mut findings = Vec::new();
+    let src = root.join("rust").join("src");
+    for path in rust_files(&src)? {
+        let rel = rel_path(root, &path);
+        let content =
+            fs::read_to_string(&path).map_err(|e| format!("reading {}: {e}", path.display()))?;
+        findings.extend(lint_unsafe(&rel, &content));
+        findings.extend(lint_fma(&rel, &content));
+        findings.extend(lint_spawn(&rel, &content));
+        findings.extend(lint_unwrap(&rel, &content));
+    }
+    findings.extend(lint_bench_keys(root)?);
+    Ok(findings)
+}
+
+/// All `.rs` files under `base`, depth-first, sorted within each dir.
+fn rust_files(base: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut out = Vec::new();
+    let mut stack = vec![base.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = fs::read_dir(&dir)
+            .map_err(|e| format!("reading {}: {e}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .collect();
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace(std::path::MAIN_SEPARATOR, "/")
+}
+
+/// Whether `line` is purely a comment (or blank) — such lines never
+/// trigger a rule.
+fn is_comment_line(line: &str) -> bool {
+    let t = line.trim();
+    t.is_empty() || t.starts_with("//")
+}
+
+/// Heuristic: is byte offset `pos` inside a string literal on this
+/// line? Counts unescaped `"` before `pos` — good enough for
+/// rustfmt'd single-line literals, which is all this repo has.
+fn in_string(line: &str, pos: usize) -> bool {
+    let b = line.as_bytes();
+    let mut quotes = 0usize;
+    let mut i = 0;
+    while i < pos.min(b.len()) {
+        if b[i] == b'"' {
+            let mut backslashes = 0;
+            let mut j = i;
+            while j > 0 && b[j - 1] == b'\\' {
+                backslashes += 1;
+                j -= 1;
+            }
+            if backslashes % 2 == 0 {
+                quotes += 1;
+            }
+        }
+        i += 1;
+    }
+    quotes % 2 == 1
+}
+
+/// Find `pat` in `line` at a position outside any string literal.
+fn find_code(line: &str, pat: &str) -> Option<usize> {
+    let mut from = 0;
+    while let Some(off) = line[from..].find(pat) {
+        let pos = from + off;
+        if !in_string(line, pos) {
+            return Some(pos);
+        }
+        from = pos + pat.len();
+    }
+    None
+}
+
+/// Byte position of the word `unsafe` (with word boundaries, not in a
+/// string, not preceded by `"`), if any.
+fn find_unsafe_word(line: &str) -> Option<usize> {
+    let b = line.as_bytes();
+    let mut from = 0;
+    while let Some(off) = line[from..].find("unsafe") {
+        let pos = from + off;
+        let before_ok = pos == 0 || {
+            let c = b[pos - 1];
+            !(c.is_ascii_alphanumeric() || c == b'_' || c == b'"')
+        };
+        let after = pos + "unsafe".len();
+        let after_ok = after >= b.len() || {
+            let c = b[after];
+            !(c.is_ascii_alphanumeric() || c == b'_')
+        };
+        if before_ok && after_ok && !in_string(line, pos) {
+            return Some(pos);
+        }
+        from = after;
+    }
+    None
+}
+
+/// Index of the first `#[cfg(test)]` / `#[cfg(all(test, …))]` line:
+/// rules C and D only apply to lines before it. (This repo keeps all
+/// test modules at the bottom of each file.)
+fn test_cutoff(lines: &[&str]) -> usize {
+    lines
+        .iter()
+        .position(|l| {
+            let t = l.trim();
+            t.starts_with("#[cfg(test)]") || t.starts_with("#[cfg(all(test")
+        })
+        .unwrap_or(lines.len())
+}
+
+/// Rule A: every `unsafe` is justified by a `// SAFETY:` comment (or a
+/// `/// # Safety` doc section) directly above it, skipping attributes.
+fn lint_unsafe(rel: &str, content: &str) -> Vec<Finding> {
+    let lines: Vec<&str> = content.lines().collect();
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if is_comment_line(line) || find_unsafe_word(line).is_none() {
+            continue;
+        }
+        let mut justified = false;
+        let mut j = i;
+        while j > 0 {
+            let above = lines[j - 1].trim();
+            if above.starts_with("//") {
+                if above.contains("SAFETY:") || above.contains("# Safety") {
+                    justified = true;
+                }
+                j -= 1;
+            } else if above.starts_with("#[") || above.starts_with("#![") {
+                j -= 1;
+            } else {
+                break;
+            }
+        }
+        if !justified {
+            out.push(finding(rel, i, "A-unsafe-no-safety", line));
+        }
+    }
+    out
+}
+
+/// Rule B: no fused multiply-add in the numeric kernels.
+fn lint_fma(rel: &str, content: &str) -> Vec<Finding> {
+    let numeric = rel.contains("/bf16/") || rel.contains("/binary/") || rel.contains("/conv/");
+    if !numeric {
+        return Vec::new();
+    }
+    const PATTERNS: [&str; 5] = ["fmadd", "fmsub", "vfma", "vfms", ".mul_add("];
+    let mut out = Vec::new();
+    for (i, line) in content.lines().enumerate() {
+        if is_comment_line(line) {
+            continue;
+        }
+        if PATTERNS.iter().any(|p| find_code(line, p).is_some()) {
+            out.push(finding(rel, i, "B-fma", line));
+        }
+    }
+    out
+}
+
+/// Rule C: thread spawns live only in the pool, the sync shim, and the
+/// transport layer (plus tests).
+fn lint_spawn(rel: &str, content: &str) -> Vec<Finding> {
+    let allowed = rel.ends_with("util/pool.rs")
+        || rel.ends_with("util/sync.rs")
+        || rel.contains("/transport/");
+    if allowed {
+        return Vec::new();
+    }
+    let lines: Vec<&str> = content.lines().collect();
+    let cutoff = test_cutoff(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines[..cutoff].iter().enumerate() {
+        if is_comment_line(line) {
+            continue;
+        }
+        if find_code(line, "std::thread::spawn").is_some()
+            || find_code(line, "std::thread::Builder").is_some()
+        {
+            out.push(finding(rel, i, "C-spawn", line));
+        }
+    }
+    out
+}
+
+/// Rule D: no `.unwrap()` / `.expect(` in non-test serving code.
+fn lint_unwrap(rel: &str, content: &str) -> Vec<Finding> {
+    if !(rel.contains("/coordinator/") || rel.contains("/transport/")) {
+        return Vec::new();
+    }
+    let lines: Vec<&str> = content.lines().collect();
+    let cutoff = test_cutoff(&lines);
+    let mut out = Vec::new();
+    for (i, line) in lines[..cutoff].iter().enumerate() {
+        if is_comment_line(line) {
+            continue;
+        }
+        if find_code(line, ".unwrap()").is_some() || find_code(line, ".expect(").is_some() {
+            out.push(finding(rel, i, "D-unwrap", line));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- rule E
+
+/// Rule E: every key a bench emits (string literals near a `JsonValue`
+/// construction) exists in `rust/BENCH_baseline.json`.
+fn lint_bench_keys(root: &Path) -> Result<Vec<Finding>, String> {
+    let baseline_path = root.join("rust").join("BENCH_baseline.json");
+    let baseline = fs::read_to_string(&baseline_path)
+        .map_err(|e| format!("reading {}: {e}", baseline_path.display()))?;
+    let keys = flat_json_keys(&baseline);
+    let mut out = Vec::new();
+    for dir in [root.join("rust").join("benches"), root.join("examples")] {
+        for path in rust_files(&dir)? {
+            let content = fs::read_to_string(&path)
+                .map_err(|e| format!("reading {}: {e}", path.display()))?;
+            if !content.contains("BENCH_") {
+                continue;
+            }
+            out.extend(check_bench_file(&rel_path(root, &path), &content, &keys));
+        }
+    }
+    Ok(out)
+}
+
+fn check_bench_file(rel: &str, content: &str, baseline_keys: &[String]) -> Vec<Finding> {
+    let lines: Vec<&str> = content.lines().collect();
+    let mut out = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if is_comment_line(line) {
+            continue;
+        }
+        // Only lines in a 3-line window that mentions `JsonValue` are
+        // report-key constructions; everything else (log text, ids) is
+        // not a bench key.
+        let window_hit = lines[i..lines.len().min(i + 3)]
+            .iter()
+            .any(|l| l.contains("JsonValue"));
+        if !window_hit {
+            continue;
+        }
+        for lit in string_literals(line) {
+            if !looks_like_bench_key(&lit) {
+                continue;
+            }
+            let known = if lit.contains('{') {
+                baseline_keys.iter().any(|k| matches_with_holes(&lit, k))
+            } else {
+                baseline_keys.iter().any(|k| k == &lit)
+            };
+            if !known {
+                out.push(Finding {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "E-benchkey",
+                    excerpt: lit,
+                });
+            }
+        }
+    }
+    out
+}
+
+/// The string literals on one line (contents only, escapes untouched).
+fn string_literals(line: &str) -> Vec<String> {
+    let b = line.as_bytes();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] == b'"' {
+            let start = i + 1;
+            let mut j = start;
+            while j < b.len() && b[j] != b'"' {
+                if b[j] == b'\\' {
+                    j += 1;
+                }
+                j += 1;
+            }
+            if j <= b.len() {
+                out.push(line[start..j.min(b.len())].to_string());
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Snake-case bench-key shape: starts `[a-z]`, all chars in
+/// `[a-z0-9_{}]`, and has an interior `_` — so `"bf16_scalar_gops"`
+/// and `"qos_{label}_p50_ms"` qualify but `"avx2"` or log text don't.
+fn looks_like_bench_key(s: &str) -> bool {
+    fn key_char(c: u8) -> bool {
+        c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_' || c == b'{' || c == b'}'
+    }
+    let b = s.as_bytes();
+    if b.is_empty() || !b[0].is_ascii_lowercase() || !b.iter().all(|&c| key_char(c)) {
+        return false;
+    }
+    s.find('_').is_some_and(|p| p + 1 < s.len())
+}
+
+/// Match a key template with `{hole}` placeholders against a concrete
+/// baseline key; each hole stands for one-or-more `[a-z0-9_]` chars.
+fn matches_with_holes(template: &str, key: &str) -> bool {
+    enum Seg {
+        Lit(String),
+        Hole,
+    }
+    let mut segs = Vec::new();
+    let mut rest = template;
+    while let Some(open) = rest.find('{') {
+        if open > 0 {
+            segs.push(Seg::Lit(rest[..open].to_string()));
+        }
+        match rest[open..].find('}') {
+            Some(close) => {
+                segs.push(Seg::Hole);
+                rest = &rest[open + close + 1..];
+            }
+            None => return false, // unbalanced template: never matches
+        }
+    }
+    if !rest.is_empty() {
+        segs.push(Seg::Lit(rest.to_string()));
+    }
+    fn go(segs: &[Seg], k: &str) -> bool {
+        match segs.split_first() {
+            None => k.is_empty(),
+            Some((Seg::Lit(l), rest)) => match k.strip_prefix(l.as_str()) {
+                Some(r) => go(rest, r),
+                None => false,
+            },
+            Some((Seg::Hole, rest)) => {
+                let run = k
+                    .bytes()
+                    .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == b'_')
+                    .count();
+                (1..=run).any(|take| go(rest, &k[take..]))
+            }
+        }
+    }
+    go(&segs, key)
+}
+
+/// Top-level keys of a flat JSON object — a hand-rolled scan (no JSON
+/// dependency): a string at nesting depth 1 followed by `:` is a key.
+fn flat_json_keys(json: &str) -> Vec<String> {
+    let b = json.as_bytes();
+    let mut keys = Vec::new();
+    let mut depth = 0i32;
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'{' | b'[' => {
+                depth += 1;
+                i += 1;
+            }
+            b'}' | b']' => {
+                depth -= 1;
+                i += 1;
+            }
+            b'"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < b.len() && b[j] != b'"' {
+                    if b[j] == b'\\' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                let lit = &json[start..j.min(b.len())];
+                let mut k = j + 1;
+                while k < b.len() && b[k].is_ascii_whitespace() {
+                    k += 1;
+                }
+                if depth == 1 && k < b.len() && b[k] == b':' {
+                    keys.push(lit.to_string());
+                }
+                i = j + 1;
+            }
+            _ => i += 1,
+        }
+    }
+    keys
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsafe_without_safety_is_flagged() {
+        let bad = "fn f() {\n    unsafe { g() };\n}\n";
+        let hits = lint_unsafe("rust/src/x.rs", bad);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].line, 2);
+        assert_eq!(hits[0].rule, "A-unsafe-no-safety");
+        let shown = "rust/src/x.rs:2 [A-unsafe-no-safety] unsafe { g() };";
+        assert_eq!(hits[0].to_string(), shown);
+    }
+
+    #[test]
+    fn unsafe_with_safety_comment_passes() {
+        let good = concat!(
+            "fn f() {\n",
+            "    // SAFETY: g has no preconditions here.\n",
+            "    unsafe { g() };\n",
+            "}\n"
+        );
+        assert!(lint_unsafe("rust/src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_is_found_through_attributes() {
+        let good = concat!(
+            "/// Docs.\n///\n/// # Safety\n///\n/// Caller checks AVX2.\n",
+            "#[target_feature(enable = \"avx2\")]\n",
+            "unsafe fn f() {}\n"
+        );
+        assert!(lint_unsafe("rust/src/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn unsafe_inside_a_string_or_word_is_ignored() {
+        let fine = "let s = \"unsafe\";\nlet unsafety = 1;\n";
+        assert!(lint_unsafe("rust/src/x.rs", fine).is_empty());
+    }
+
+    #[test]
+    fn fma_in_kernels_is_flagged_and_elsewhere_ignored() {
+        let line = "let y = x.mul_add(a, b);\n";
+        assert_eq!(lint_fma("rust/src/bf16/kernels.rs", line).len(), 1);
+        assert_eq!(lint_fma("rust/src/binary/kernels.rs", line).len(), 1);
+        assert!(lint_fma("rust/src/model/power.rs", line).is_empty());
+        // Mentioning FMA in a comment is fine.
+        let comment = "// never vfmaq_f32: two-rounding contract\n";
+        assert!(lint_fma("rust/src/bf16/kernels.rs", comment).is_empty());
+    }
+
+    #[test]
+    fn spawn_outside_the_pool_is_flagged() {
+        let bad = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        assert_eq!(lint_spawn("rust/src/coordinator/server.rs", bad).len(), 1);
+        assert!(lint_spawn("rust/src/util/pool.rs", bad).is_empty());
+        assert!(lint_spawn("rust/src/transport/worker.rs", bad).is_empty());
+        // In tests it is fine anywhere.
+        let test_only = concat!(
+            "#[cfg(test)]\nmod tests {\n",
+            "    fn f() { std::thread::spawn(|| {}); }\n}\n"
+        );
+        assert!(lint_spawn("rust/src/coordinator/server.rs", test_only).is_empty());
+    }
+
+    #[test]
+    fn unwrap_on_the_serving_path_is_flagged() {
+        let bad = "fn f() {\n    x.lock().unwrap();\n}\n";
+        assert_eq!(lint_unwrap("rust/src/coordinator/metrics.rs", bad).len(), 1);
+        assert_eq!(lint_unwrap("rust/src/transport/frame.rs", bad).len(), 1);
+        assert!(lint_unwrap("rust/src/bf16/kernels.rs", bad).is_empty());
+        // Below the test marker it is fine — loom cfg included.
+        let loom = concat!(
+            "#[cfg(all(test, beanna_loom))]\nmod loom_tests {\n",
+            "    fn f() { x.join().expect(\"t\"); }\n}\n"
+        );
+        assert!(lint_unwrap("rust/src/coordinator/router.rs", loom).is_empty());
+    }
+
+    #[test]
+    fn bench_keys_match_the_baseline() {
+        let keys = vec!["bf16_scalar_gops".to_string(), "qos_1x_reject_rate".to_string()];
+        let known = "report.push((\"bf16_scalar_gops\".into(), JsonValue::n(g)));\n";
+        assert!(check_bench_file("rust/benches/b.rs", known, &keys).is_empty());
+        let unknown = "report.push((\"bf16_turbo_gops\".into(), JsonValue::n(g)));\n";
+        let hits = check_bench_file("rust/benches/b.rs", unknown, &keys);
+        assert_eq!(hits.len(), 1);
+        assert_eq!(hits[0].excerpt, "bf16_turbo_gops");
+        // A key template with a hole matches any concrete instance.
+        let hole = "report.push((format!(\"qos_{label}_reject_rate\"), JsonValue::n(r)));\n";
+        assert!(check_bench_file("rust/benches/b.rs", hole, &keys).is_empty());
+        // Literals far from any JsonValue construction are not keys.
+        let log = "println!(\"bf16_turbo_gops\");\n";
+        assert!(check_bench_file("rust/benches/b.rs", log, &keys).is_empty());
+    }
+
+    #[test]
+    fn flat_json_keys_reads_top_level_only() {
+        let json = "{\n  \"a_b\": 1.5,\n  \"c_d\": {\"nested_k\": 2},\n  \"e_f\": \"a: b\"\n}\n";
+        assert_eq!(flat_json_keys(json), vec!["a_b", "c_d", "e_f"]);
+    }
+
+    #[test]
+    fn key_shape_filter_rejects_prose() {
+        assert!(looks_like_bench_key("bf16_scalar_gops"));
+        assert!(looks_like_bench_key("qos_{label}_p50_ms"));
+        assert!(!looks_like_bench_key("avx2"));
+        assert!(!looks_like_bench_key("Tag_name"));
+        assert!(!looks_like_bench_key("has spaces_here"));
+        assert!(!looks_like_bench_key("trailing_"));
+    }
+
+    #[test]
+    fn hole_matching_requires_full_anchored_match() {
+        assert!(matches_with_holes("qos_{l}_p50_ms", "qos_1x_p50_ms"));
+        assert!(matches_with_holes("chaos_{m}_fail_rate", "chaos_noretry_fail_rate"));
+        assert!(!matches_with_holes("qos_{l}_p50_ms", "qos_1x_p99_ms"));
+        assert!(!matches_with_holes("qos_{l}_p50_ms", "xqos_1x_p50_ms"));
+        assert!(!matches_with_holes("a_{h}", "a_"));
+    }
+}
